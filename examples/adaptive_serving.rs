@@ -1,0 +1,160 @@
+//! End-to-end validation driver: serve the trained multi-variant backbone
+//! through the full stack — PJRT execution, dynamic batching, and the
+//! adaptation loop switching variants live as the simulated context
+//! degrades (contention → DVFS → memory squeeze → low battery).
+//!
+//! This is the run recorded in EXPERIMENTS.md §End-to-end: per-phase
+//! variant choice, measured accuracy on held-out data, real p50/p99
+//! latency and throughput.
+//!
+//! Run: `make artifacts && cargo run --release --example adaptive_serving`
+
+use std::time::{Duration, Instant};
+
+use crowdhmtware::coordinator::{run_cascade, select_variant, spawn, BatcherConfig, Executor, Stage};
+use crowdhmtware::device::{device, ContextState, ResourceMonitor};
+use crowdhmtware::runtime::{Manifest, ModelRuntime};
+use crowdhmtware::util::Table;
+
+/// The context phases of the scenario (per ~80 requests): idle → heavy
+/// contention (cache/DVFS) → memory squeeze → low battery.
+fn phases() -> Vec<(&'static str, ContextState, f64)> {
+    let idle = ContextState::idle();
+    let contended = ContextState {
+        freq_frac: 0.6,
+        competing_procs: 4,
+        cache_share: 0.25,
+        mem_avail_frac: 0.6,
+        ..ContextState::idle()
+    };
+    let squeezed = ContextState { mem_avail_frac: 0.12, ..contended.clone() };
+    let low_battery = ContextState { battery: 0.12, mem_avail_frac: 0.5, ..ContextState::idle() };
+    vec![
+        ("idle", idle, f64::INFINITY),
+        ("contended", contended, f64::INFINITY),
+        // Memory squeeze: cap the model footprint hard (16 KB — the
+        // synthetic backbone's full variant needs ~33 KB).
+        ("mem-squeeze", squeezed, 16.0 * 1024.0),
+        ("low-battery", low_battery, f64::INFINITY),
+    ]
+}
+
+fn main() -> anyhow::Result<()> {
+    let Some(dir) = Manifest::default_dir() else {
+        eprintln!("no artifacts — run `make artifacts` first");
+        std::process::exit(1);
+    };
+    let manifest = Manifest::load(&dir)?;
+    let per = manifest.input_hw * manifest.input_hw * manifest.in_channels;
+    let (inputs, labels) = manifest.load_eval()?;
+    let variants = manifest.variants.clone();
+
+    // The simulated host device (the "phone" the coordinator runs on).
+    let mon = ResourceMonitor::new(device("xiaomi-mi6").unwrap());
+
+    let dir2 = dir.clone();
+    let mut server = spawn(
+        move || Box::new(ModelRuntime::load(dir2).expect("load")) as Box<dyn Executor>,
+        "full".to_string(),
+        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(2) },
+    );
+
+    let mut table = Table::new(
+        "Adaptive serving (real PJRT execution on the synthetic task)",
+        &["phase", "variant", "req", "accuracy", "p50 ms", "p99 ms", "req/s"],
+    );
+    let per_phase = 80;
+    let mut req_i = 0usize;
+    for (name, ctx, mem_budget) in phases() {
+        // Adaptation tick: profile variants under the live snapshot and
+        // switch the server (Sec. III-D's loop, 1 Hz in the paper).
+        let snap = mon.sample(&ctx);
+        let budget = mem_budget.min(snap.mem_budget_bytes);
+        let chosen = select_variant(&variants, &snap, budget).expect("a variant fits");
+        server.switch_variant(&chosen);
+        std::thread::sleep(Duration::from_millis(10));
+
+        // Warmup: the first batch per (variant, batch-size) pays PJRT
+        // compilation; measure steady-state serving like the paper does.
+        let mut warm = Vec::new();
+        for i in 0..9 {
+            warm.push(server.submit(inputs[i * per..(i + 1) * per].to_vec()));
+        }
+        for w in warm {
+            let _ = w.recv_timeout(Duration::from_secs(120))?;
+        }
+
+        let t0 = Instant::now();
+        let mut rxs = Vec::new();
+        for _ in 0..per_phase {
+            let idx = req_i % labels.len();
+            req_i += 1;
+            rxs.push((labels[idx], server.submit(inputs[idx * per..(idx + 1) * per].to_vec())));
+        }
+        let mut correct = 0usize;
+        let mut lats = Vec::new();
+        for (label, rx) in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(120))?;
+            if resp.pred as u32 == label {
+                correct += 1;
+            }
+            lats.push(resp.latency.as_secs_f64());
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        table.row(&[
+            name.to_string(),
+            chosen.clone(),
+            per_phase.to_string(),
+            format!("{:.1}%", 100.0 * correct as f64 / per_phase as f64),
+            format!("{:.1}", lats[lats.len() / 2] * 1e3),
+            format!("{:.1}", lats[lats.len() * 99 / 100] * 1e3),
+            format!("{:.0}", per_phase as f64 / wall),
+        ]);
+    }
+    let stats = server.shutdown();
+    table.print();
+    println!(
+        "\ntotal served={} batches={} switches={} (expect ≥2: squeeze + battery phases force lighter variants)",
+        stats.served, stats.batches, stats.switches
+    );
+
+    // ── Adaptive early-exit cascade (Sec. III-A1) on real artifacts ────
+    // exit0 → exit1 → full: confident inputs answer at shallow branches;
+    // the threshold trades average compute against accuracy.
+    let mut rt = crowdhmtware::runtime::ModelRuntime::load(dir)?;
+    let macs: Vec<f64> = ["exit0", "exit1", "full"]
+        .iter()
+        .map(|v| rt.manifest.variant(v).unwrap().macs as f64)
+        .collect();
+    // Incremental stage costs: in the multi-branch network the exits
+    // share one backbone pass, so escalating from exit_i to exit_{i+1}
+    // only pays the prefix *delta* (our standalone artifacts re-run the
+    // prefix — a single-pass multi-head artifact would not; the cost
+    // model reports the paper's multi-branch semantics).
+    let cost: Vec<f64> =
+        vec![macs[0] / macs[2], (macs[1] - macs[0]) / macs[2], (macs[2] - macs[1]) / macs[2]];
+    let n = 256usize;
+    let mut cascade_table = Table::new(
+        "Early-exit cascade: accuracy vs average compute (real PJRT)",
+        &["threshold", "accuracy", "avg compute vs full", "answered @exit0/1/full"],
+    );
+    for th in [0.5f32, 0.8, 0.95] {
+        let stages = vec![
+            Stage { variant: "exit0".into(), threshold: th },
+            Stage { variant: "exit1".into(), threshold: th },
+            Stage { variant: "full".into(), threshold: 0.0 },
+        ];
+        let (res, cs) = run_cascade(&mut rt, &stages, &cost, &inputs[..n * per], n)?;
+        let correct = res.iter().zip(labels.iter()).filter(|(r, &l)| r.0 as u32 == l).count();
+        let full_cost: f64 = cost.iter().sum();
+        cascade_table.row(&[
+            format!("{th:.2}"),
+            format!("{:.1}%", 100.0 * correct as f64 / n as f64),
+            format!("{:.0}%", 100.0 * cs.avg_cost / full_cost),
+            format!("{}/{}/{}", cs.answered[0], cs.answered[1], cs.answered[2]),
+        ]);
+    }
+    cascade_table.print();
+    Ok(())
+}

@@ -1,0 +1,22 @@
+//! Regenerates EVERY table and figure of the paper's evaluation in one
+//! run (the per-experiment benches do the same individually). Used to
+//! produce EXPERIMENTS.md.
+//!
+//! Run: `cargo run --release --example paper_tables`
+
+use crowdhmtware::experiments as ex;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    ex::fig8::table(&ex::fig8::run("raspberrypi-4b")).print();
+    ex::fig9::table(&ex::fig9::run()).print();
+    ex::table1::table(&ex::table1::run()).print();
+    ex::table2::table(&ex::table2::run()).print();
+    ex::fig10::table(&ex::fig10::run()).print();
+    ex::table3::table(&ex::table3::run()).print();
+    ex::fig11::table(&ex::fig11::run()).print();
+    ex::table4::table(&ex::table4::run()).print();
+    ex::table5::table(&ex::table5::run()).print();
+    ex::fig13::table(&ex::fig13::run(6)).print();
+    println!("\nall tables generated in {:.1}s", t0.elapsed().as_secs_f64());
+}

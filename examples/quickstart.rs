@@ -1,0 +1,66 @@
+//! Quickstart: load the AOT artifacts, serve a handful of inference
+//! requests through the coordinator (router → dynamic batcher → PJRT
+//! executor), and print predictions with per-request latency.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use std::time::Duration;
+
+use crowdhmtware::coordinator::{spawn, BatcherConfig, Executor};
+use crowdhmtware::runtime::{Manifest, ModelRuntime};
+
+fn main() -> anyhow::Result<()> {
+    let Some(dir) = Manifest::default_dir() else {
+        eprintln!("no artifacts — run `make artifacts` first");
+        std::process::exit(1);
+    };
+    // Peek at the manifest on the main thread for the workload shape.
+    let manifest = Manifest::load(&dir)?;
+    println!(
+        "task={} classes={} variants={}",
+        manifest.task,
+        manifest.num_classes,
+        manifest.variants.len()
+    );
+    let per = manifest.input_hw * manifest.input_hw * manifest.in_channels;
+    let eval = manifest.load_eval()?;
+    let (inputs, labels) = eval;
+
+    // The PJRT runtime is constructed *inside* the worker thread.
+    let mut server = spawn(
+        move || Box::new(ModelRuntime::load(dir).expect("load artifacts")) as Box<dyn Executor>,
+        "full".to_string(),
+        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(5) },
+    );
+
+    // Submit 32 requests from the held-out eval set.
+    let n = 32;
+    let mut rxs = Vec::new();
+    for i in 0..n {
+        let row = inputs[i * per..(i + 1) * per].to_vec();
+        rxs.push((labels[i], server.submit(row)));
+    }
+    let mut correct = 0;
+    for (label, rx) in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(60))?;
+        if resp.pred as u32 == label {
+            correct += 1;
+        }
+        println!(
+            "req {:>3}: pred={:<2} label={:<2} conf={:.2} latency={:?} [{}]",
+            resp.id, resp.pred, label, resp.confidence, resp.latency, resp.variant
+        );
+    }
+    let stats = server.shutdown();
+    println!(
+        "\naccuracy {}/{} = {:.1}%  |  batches={} mean_batch={:.1}  p50={:.1}ms p99={:.1}ms",
+        correct,
+        n,
+        100.0 * correct as f64 / n as f64,
+        stats.batches,
+        stats.mean_batch_size(),
+        stats.percentile(0.5) * 1e3,
+        stats.percentile(0.99) * 1e3,
+    );
+    Ok(())
+}

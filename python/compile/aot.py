@@ -1,0 +1,204 @@
+"""AOT pipeline: train the multi-variant backbone once, lower every
+variant × batch size to HLO **text**, and write the artifact manifest the
+Rust runtime consumes. Python never runs again after this.
+
+HLO text (NOT ``lowered.compiler_ir(...).serialize()``) is the interchange
+format: jax ≥ 0.5 emits HloModuleProtos with 64-bit instruction ids that
+the image's xla_extension 0.5.1 rejects; the text parser reassigns ids
+(see /opt/xla-example/README.md).
+
+Usage: ``cd python && python -m compile.aot --out ../artifacts``
+"""
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import (
+    VariantConfig,
+    accuracy,
+    forward,
+    make_dataset,
+    svd_factorize,
+    train,
+)
+
+BATCH_SIZES = (1, 8)
+EVAL_N = 512
+SEED = 0
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is ESSENTIAL: the default elides weight
+    # tensors as `constant({...})`, which the HLO text parser silently
+    # reads back as zeros — the model would "run" and predict uniformly.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def conv_names(cfg: VariantConfig):
+    return ["stem"] + [f"s{si}_b{bi}" for si, dp in enumerate(cfg.depths) for bi in range(dp)]
+
+
+def param_count(cfg: VariantConfig, width_mult: float, exit_idx, rank_frac: float) -> int:
+    """Exact parameter count of a variant (weights actually shipped)."""
+    import math
+
+    widths = [max(1, math.ceil(w * width_mult)) for w in cfg.widths]
+    nstages = len(cfg.widths)
+    e = exit_idx if exit_idx is not None else nstages - 1
+    total = 0
+    prev = cfg.in_channels
+    names = [("stem", cfg.in_channels, widths[0])]
+    p = widths[0]
+    for si in range(e + 1):
+        for bi in range(cfg.depths[si]):
+            names.append((f"s{si}_b{bi}", p, widths[si]))
+            p = widths[si]
+    for _, in_c, out_c in names:
+        k = 9 * in_c
+        if rank_frac < 1.0:
+            r = max(1, math.ceil(rank_frac * min(k, out_c)))
+            total += k * r + r * out_c + out_c
+        else:
+            total += k * out_c + out_c
+        prev = out_c
+    total += p * cfg.num_classes + cfg.num_classes  # exit head
+    return total
+
+
+def mac_count(cfg: VariantConfig, width_mult: float, exit_idx, rank_frac: float) -> int:
+    """Exact MAC count of a variant at batch 1."""
+    import math
+
+    widths = [max(1, math.ceil(w * width_mult)) for w in cfg.widths]
+    nstages = len(cfg.widths)
+    e = exit_idx if exit_idx is not None else nstages - 1
+    hw = cfg.input_hw // 2  # after stem stride 2
+    total = 0
+
+    def conv_macs(in_c, out_c, hw):
+        k = 9 * in_c
+        if rank_frac < 1.0:
+            r = max(1, math.ceil(rank_frac * min(k, out_c)))
+            return hw * hw * (k * r + r * out_c)
+        return hw * hw * k * out_c
+
+    total += conv_macs(cfg.in_channels, widths[0], hw)
+    prev = widths[0]
+    for si in range(e + 1):
+        for bi in range(cfg.depths[si]):
+            total += conv_macs(prev, widths[si], hw)
+            prev = widths[si]
+        if si < e:
+            hw //= 2
+    total += prev * cfg.num_classes
+    return total
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--quick", action="store_true", help="tiny run for CI smoke")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    cfg = VariantConfig()
+    steps = 60 if args.quick else args.steps
+    t0 = time.time()
+    print(f"[aot] training multi-variant backbone ({steps} steps)...")
+    params, losses = train(jax.random.PRNGKey(SEED), cfg, steps=steps)
+    print(f"[aot] trained in {time.time() - t0:.1f}s; loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+
+    # Held-out eval set (also shipped to Rust for live accuracy checks).
+    xt, yt = make_dataset(jax.random.PRNGKey(99), cfg, EVAL_N)
+    np.asarray(xt, np.float32).tofile(os.path.join(args.out, "eval_inputs.bin"))
+    np.asarray(yt, np.uint32).tofile(os.path.join(args.out, "eval_labels.bin"))
+
+    svd50 = svd_factorize(params, cfg, 0.5)
+    svd75 = svd_factorize(params, cfg, 0.75)
+
+    # The shipped variant menu: η5 (early exits), η6 (half width), η1 (SVD).
+    # (id, label, width_mult, exit_idx, svd, rank_frac)
+    menu = [
+        ("full", "original", 1.0, None, None, 1.0),
+        ("exit1", "η5(exit1)", 1.0, 1, None, 1.0),
+        ("exit0", "η5(exit0)", 1.0, 0, None, 1.0),
+        ("half", "η6(0.5)", 0.5, None, None, 1.0),
+        ("half_exit1", "η5+η6", 0.5, 1, None, 1.0),
+        ("svd75", "η1(0.75)", 1.0, None, svd75, 0.75),
+        ("svd50", "η1(0.5)", 1.0, None, svd50, 0.5),
+    ]
+
+    variants = []
+    for vid, label, mult, exit_idx, svd, rank in menu:
+        acc = accuracy(params, xt, yt, cfg, width_mult=mult, exit_idx=exit_idx, svd=svd)
+        files = {}
+        for batch in BATCH_SIZES:
+            fn = functools.partial(
+                forward, params, cfg=cfg, width_mult=mult, exit_idx=exit_idx,
+                use_pallas=True, svd=svd,
+            )
+            spec = jax.ShapeDtypeStruct(
+                (batch, cfg.input_hw, cfg.input_hw, cfg.in_channels), jnp.float32
+            )
+            lowered = jax.jit(fn).lower(spec)
+            text = to_hlo_text(lowered)
+            fname = f"variant_{vid}_b{batch}.hlo.txt"
+            with open(os.path.join(args.out, fname), "w") as f:
+                f.write(text)
+            files[str(batch)] = fname
+        import math
+
+        widths = [max(1, math.ceil(w * mult)) for w in cfg.widths]
+        nexits = len(cfg.widths)
+        variants.append({
+            "id": vid,
+            "label": label,
+            "files": files,
+            "test_acc": acc,
+            "params": param_count(cfg, mult, exit_idx, rank),
+            "macs": mac_count(cfg, mult, exit_idx, rank),
+            "exit": exit_idx if exit_idx is not None else nexits - 1,
+            "config": {
+                "input_hw": cfg.input_hw,
+                "in_channels": cfg.in_channels,
+                "num_classes": cfg.num_classes,
+                "widths": widths,
+                "depths": list(cfg.depths),
+                "rank_frac": rank,
+                "fire": False,
+            },
+        })
+        print(f"[aot] {vid:<11} acc={acc:.3f} files={list(files.values())}")
+
+    manifest = {
+        "format": "crowdhmt-artifacts-v1",
+        "task": "synthetic16",
+        "num_classes": cfg.num_classes,
+        "input_hw": cfg.input_hw,
+        "in_channels": cfg.in_channels,
+        "batch_sizes": list(BATCH_SIZES),
+        "variants": variants,
+        "eval": {"inputs": "eval_inputs.bin", "labels": "eval_labels.bin", "count": EVAL_N},
+        "loss_curve": losses[:: max(1, len(losses) // 100)],
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote manifest with {len(variants)} variants to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""Layer-1 Pallas kernels: tiled matmul with fused bias + activation.
+
+This is the compute hot-spot of the multi-branch backbone — every conv
+(via im2col) and every FC head lowers to this kernel, so the whole
+inference graph's MAC traffic flows through it.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid tiles the
+output into (bm × bn) MXU-shaped blocks; the K reduction is the innermost
+grid axis, accumulating into the output block resident in VMEM; bias-add
+and the activation epilogue are fused into the final K step, so the
+intermediate pre-activation tensor never round-trips through HBM —
+the same insight the paper's operator-fusion engine exploits, expressed
+in BlockSpec instead of threadblocks.
+
+Kernels MUST run with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls (see /opt/xla-example/README.md). Structure
+(tiling, fusion, VMEM budget) is still TPU-shaped; EXPERIMENTS.md §Perf
+estimates the VMEM footprint and MXU utilization from the BlockSpecs.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-aligned tile sizes (128 lanes); shrunk automatically for
+# small operands.
+BM, BN, BK = 128, 128, 128
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, *, nsteps: int, act: str):
+    """One (i, j, k) grid step: o[i,j] += x[i,k] @ w[k,j], epilogue at k end."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+    @pl.when(pl.program_id(2) == nsteps - 1)
+    def _epilogue():
+        out = o_ref[...] + b_ref[...]
+        if act == "relu":
+            out = jnp.maximum(out, 0.0)
+        elif act == "tanh":
+            out = jnp.tanh(out)
+        o_ref[...] = out
+
+
+def _pad_to(x, m, axis):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("act", "bm", "bn", "bk"))
+def matmul_fused(x, w, b=None, act: str = "none", bm: int = BM, bn: int = BN, bk: int = BK):
+    """``act(x @ w + b)`` through the Pallas kernel.
+
+    x: [M, K], w: [K, N], b: [N] or None. Operands are zero-padded up to
+    tile multiples and the result sliced back — zero rows/cols contribute
+    nothing to the reduction.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims {k} vs {k2}"
+    if b is None:
+        b = jnp.zeros((n,), x.dtype)
+    bm = min(bm, max(8, m))
+    bn = min(bn, max(8, n))
+    bk = min(bk, max(8, k))
+    xp = _pad_to(_pad_to(x, bm, 0), bk, 1)
+    wp = _pad_to(_pad_to(w, bk, 0), bn, 1)
+    bp = _pad_to(b.reshape(1, -1), bn, 1)
+    mp, kp = xp.shape
+    np_ = wp.shape[1]
+    nsteps = kp // bk
+    grid = (mp // bm, np_ // bn, nsteps)
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nsteps=nsteps, act=act),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+def factorized_matmul(x, u, v, b=None, act: str = "none"):
+    """η1 (SVD) path: ``act(x @ u @ v + b)`` as two fused-kernel calls.
+
+    ``u: [K, r]``, ``v: [r, N]`` come from a truncated SVD of the trained
+    dense weight; rank r < min(K, N) cuts MACs from K·N to r·(K+N).
+    """
+    h = matmul_fused(x, u, None, "none")
+    return matmul_fused(h, v, b, act)
+
+
+def vmem_bytes(bm: int = BM, bn: int = BN, bk: int = BK, dtype_bytes: int = 4) -> int:
+    """VMEM resident per grid step: x, w, bias, and the output accumulator.
+
+    Used by the §Perf analysis — must stay well under the ~16 MiB/core
+    VMEM budget of a TPU.
+    """
+    return dtype_bytes * (bm * bk + bk * bn + bn + bm * bn)

@@ -1,0 +1,286 @@
+"""Layer-2: the multi-branch early-exit backbone (Sec. III-A1) in JAX.
+
+Mirrors ``rust/src/models/backbone.rs`` layer-for-layer: a stride-2 conv
+stem, N stages of 3×3 conv blocks, max-pool between stages, and an exit
+head (GAP → FC → softmax) after every stage. Every conv is im2col +
+the Layer-1 Pallas fused matmul kernel, so the whole inference graph's
+MAC traffic flows through the kernel.
+
+Retraining-free multi-variant support (the paper's elastic inference):
+
+* **η6 / channel scaling** — slimmable training: the loss sums over full-
+  and half-width forward passes sharing weight prefixes, so width-scaled
+  variants keep accuracy without retraining.
+* **η5 / depth scaling** — early exits are trained jointly (ensemble
+  training); exiting at branch *i* is a shallower variant.
+* **η1 / low-rank** — dense trained weights are truncated-SVD-factorized
+  post-training into the kernel's factorized path.
+
+Training runs in the pure-jnp reference path (fast, differentiable);
+inference artifacts lower the Pallas path. pytest asserts both paths
+agree to float tolerance.
+"""
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.matmul import factorized_matmul, matmul_fused
+from .kernels.ref import factorized_matmul_ref, matmul_fused_ref
+
+
+@dataclasses.dataclass(frozen=True)
+class VariantConfig:
+    """Structural hyperparameters; must mirror the Rust BackboneConfig."""
+
+    input_hw: int = 16
+    in_channels: int = 3
+    num_classes: int = 16
+    widths: tuple = (8, 16, 32)
+    depths: tuple = (1, 1, 1)
+    rank_frac: float = 1.0
+    fire: bool = False
+
+    def variant_id(self) -> str:
+        w = "-".join(str(x) for x in self.widths)
+        d = "-".join(str(x) for x in self.depths)
+        return f"w{w}_d{d}_r{round(self.rank_frac * 100)}_f{int(self.fire)}"
+
+    def scaled(self, mult: float) -> "VariantConfig":
+        return dataclasses.replace(
+            self, widths=tuple(max(1, math.ceil(w * mult)) for w in self.widths)
+        )
+
+
+def im2col(x, stride: int = 1):
+    """3×3 SAME patches of NHWC ``x`` → [N, H', W', 9*C].
+
+    Patch axis layout is 9 kernel positions × C channels (position-major),
+    so slicing the trailing C block of each position slices input channels
+    — what slimmable width scaling needs.
+    """
+    n, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    oh = (h - 1) // stride + 1
+    ow = (w - 1) // stride + 1
+    cols = []
+    for di in range(3):
+        for dj in range(3):
+            sl = xp[:, di : di + h : stride, dj : dj + w : stride, :]
+            cols.append(sl[:, :oh, :ow, :])
+    return jnp.concatenate(cols, axis=-1)
+
+
+def maxpool2(x):
+    """2×2/2 max pool, NHWC."""
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def init_params(key, cfg: VariantConfig):
+    """He-init full-width parameters. Layout: conv weights are
+    [9*in_c, out_c] (position-major patches), biases [out_c]."""
+    params = {}
+
+    def conv(key, name, in_c, out_c):
+        k1, key = jax.random.split(key)
+        fan_in = 9 * in_c
+        params[name + "_w"] = jax.random.normal(k1, (fan_in, out_c)) * jnp.sqrt(2.0 / fan_in)
+        params[name + "_b"] = jnp.zeros((out_c,))
+        return key
+
+    def fc(key, name, in_c, out_c):
+        k1, key = jax.random.split(key)
+        params[name + "_w"] = jax.random.normal(k1, (in_c, out_c)) * jnp.sqrt(1.0 / in_c)
+        params[name + "_b"] = jnp.zeros((out_c,))
+        return key
+
+    key = conv(key, "stem", cfg.in_channels, cfg.widths[0])
+    prev = cfg.widths[0]
+    for si, (wd, dp) in enumerate(zip(cfg.widths, cfg.depths)):
+        for bi in range(dp):
+            key = conv(key, f"s{si}_b{bi}", prev, wd)
+            prev = wd
+        key = fc(key, f"exit{si}", wd, cfg.num_classes)
+    return params
+
+
+def _slice_conv(wmat, in_keep, out_keep):
+    """Slice a [9*in_c, out_c] conv weight to [9*in_keep, out_keep]."""
+    fan, out = wmat.shape
+    in_c = fan // 9
+    w = wmat.reshape(9, in_c, out)
+    return w[:, :in_keep, :out_keep].reshape(9 * in_keep, out_keep)
+
+
+def forward(params, x, cfg: VariantConfig, width_mult: float = 1.0,
+            exit_idx: Optional[int] = None, use_pallas: bool = False,
+            svd: Optional[dict] = None):
+    """Forward pass to one exit (default: final head). Returns softmax
+    probabilities [N, classes].
+
+    * ``width_mult`` < 1 runs the slimmable sub-network (η6);
+    * ``exit_idx`` = i exits at branch i (η5);
+    * ``svd`` maps conv names → (u, v) factor pairs (η1).
+    """
+    mm = matmul_fused if use_pallas else matmul_fused_ref
+    fmm = factorized_matmul if use_pallas else factorized_matmul_ref
+    nstages = len(cfg.widths)
+    if exit_idx is None:
+        exit_idx = nstages - 1
+    widths = [max(1, math.ceil(w * width_mult)) for w in cfg.widths]
+
+    def conv_block(x, name, in_keep, out_keep, stride=1):
+        patches = im2col(x, stride)
+        n, h, w, f = patches.shape
+        flat = patches.reshape(n * h * w, f)
+        b = params[name + "_b"][:out_keep]
+        if svd is not None and name in svd:
+            u, v = svd[name]
+            out = fmm(flat, u, v, b, "relu")
+            out_keep = v.shape[1]
+        else:
+            wm = _slice_conv(params[name + "_w"], in_keep, out_keep)
+            out = mm(flat, wm, b, "relu")
+        return out.reshape(n, h, w, out_keep)
+
+    h = conv_block(x, "stem", cfg.in_channels, widths[0], stride=2)
+    prev = widths[0]
+    for si in range(exit_idx + 1):
+        for bi in range(cfg.depths[si]):
+            h = conv_block(h, f"s{si}_b{bi}", prev, widths[si])
+            prev = widths[si]
+        if si < exit_idx:
+            h = maxpool2(h)
+    feat = jnp.mean(h, axis=(1, 2))  # adaptive avg pool → [N, w]
+    wfc = params[f"exit{exit_idx}_w"][:prev, :]
+    bfc = params[f"exit{exit_idx}_b"]
+    logits = mm(feat, wfc, bfc, "none")
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def svd_factorize(params, cfg: VariantConfig, rank_frac: float):
+    """η1: truncated SVD of every trained conv weight (retraining-free)."""
+    svd = {}
+    names = ["stem"] + [
+        f"s{si}_b{bi}" for si, dp in enumerate(cfg.depths) for bi in range(dp)
+    ]
+    for name in names:
+        wm = params[name + "_w"]
+        k, n = wm.shape
+        r = max(1, math.ceil(rank_frac * min(k, n)))
+        u, s, vt = jnp.linalg.svd(wm, full_matrices=False)
+        svd[name] = (u[:, :r] * s[:r], vt[:r, :])
+    return svd
+
+
+# ───────────────────────── synthetic corpus ─────────────────────────────
+
+
+def class_templates(cfg: VariantConfig, seed: int = 7):
+    """The task definition: one random 8×8 texture template per class,
+    upsampled to the input size. Fixed seed — train and eval share it.
+    Fine (8×8) templates + heavy noise make the task hard enough that the
+    variant ensemble shows a real accuracy gradient (full > half-width >
+    early-exit > aggressive SVD), mirroring the paper's Table III."""
+    coarse = jax.random.normal(
+        jax.random.PRNGKey(seed), (cfg.num_classes, 8, 8, cfg.in_channels)
+    )
+    rep = cfg.input_hw // 8
+    return jnp.repeat(jnp.repeat(coarse, rep, axis=1), rep, axis=2)
+
+
+def make_dataset(key, cfg: VariantConfig, n: int, noise: float = 1.6, seed: int = 7):
+    """Synthetic image classification: samples are class templates plus
+    Gaussian noise and random brightness. Substitutes the paper's
+    Cifar/UbiSound/HAR corpora with the same train→drift→eval structure
+    at laptop scale."""
+    kc, kn, kb = jax.random.split(key, 3)
+    templates = class_templates(cfg, seed)
+    labels = jax.random.randint(kc, (n,), 0, cfg.num_classes)
+    base = templates[labels]
+    noise_v = noise * jax.random.normal(kn, base.shape)
+    brightness = 0.1 * jax.random.normal(kb, (n, 1, 1, 1))
+    return (base + noise_v + brightness).astype(jnp.float32), labels
+
+
+def drifted(x, key, magnitude: float = 0.5):
+    """Apply a deployment-time distribution shift (Fig. 13's evening
+    lighting): contrast scaling + channel tint + extra noise."""
+    k1, k2 = jax.random.split(key)
+    tint = magnitude * 0.4 * jax.random.normal(k1, (1, 1, 1, x.shape[-1]))
+    return (1.0 - 0.3 * magnitude) * x + tint + magnitude * 0.2 * jax.random.normal(k2, x.shape)
+
+
+# ─────────────────────── ensemble (slimmable) training ───────────────────
+
+
+def _ce(probs, labels):
+    return -jnp.mean(jnp.log(probs[jnp.arange(labels.shape[0]), labels] + 1e-9))
+
+
+def ensemble_loss(params, x, y, cfg: VariantConfig):
+    """Sum of cross-entropies over the variant ensemble (Sec. III-A1's
+    'moving retraining ahead into the ensemble training phase'): full
+    width at every exit + half width at the last two exits."""
+    loss = 0.0
+    nstages = len(cfg.widths)
+    for e in range(nstages):
+        loss = loss + _ce(forward(params, x, cfg, 1.0, e), y)
+    for e in (nstages - 2, nstages - 1):
+        loss = loss + _ce(forward(params, x, cfg, 0.5, e), y)
+    return loss
+
+
+def train(key, cfg: VariantConfig, steps: int = 300, batch: int = 64, lr: float = 3e-3):
+    """Adam on the ensemble loss over the synthetic corpus. Returns the
+    trained params and the loss curve."""
+    kp, kd = jax.random.split(key)
+    params = init_params(kp, cfg)
+    x_all, y_all = make_dataset(kd, cfg, 4096)
+
+    # Hand-rolled Adam (no optax in this environment).
+    m = jax.tree_util.tree_map(jnp.zeros_like, params)
+    v = jax.tree_util.tree_map(jnp.zeros_like, params)
+    loss_grad = jax.value_and_grad(lambda p, x, y: ensemble_loss(p, x, y, cfg))
+
+    @jax.jit
+    def step(params, m, v, x, y, t):
+        loss, g = loss_grad(params, x, y)
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        m = jax.tree_util.tree_map(lambda a, b: b1 * a + (1 - b1) * b, m, g)
+        v = jax.tree_util.tree_map(lambda a, b: b2 * a + (1 - b2) * b * b, v, g)
+        mhat = jax.tree_util.tree_map(lambda a: a / (1 - b1**t), m)
+        vhat = jax.tree_util.tree_map(lambda a: a / (1 - b2**t), v)
+        params = jax.tree_util.tree_map(
+            lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mhat, vhat
+        )
+        return params, m, v, loss
+
+    n = x_all.shape[0]
+    losses = []
+    for t in range(1, steps + 1):
+        lo = ((t - 1) * batch) % (n - batch)
+        xb, yb = x_all[lo : lo + batch], y_all[lo : lo + batch]
+        params, m, v, loss = step(params, m, v, xb, yb, jnp.asarray(float(t)))
+        losses.append(float(loss))
+    return params, losses
+
+
+def accuracy(params, x, y, cfg: VariantConfig, width_mult=1.0, exit_idx=None, svd=None,
+             use_pallas: bool = False, batch: int = 256):
+    """Top-1 accuracy over a dataset (batched)."""
+    n = x.shape[0]
+    total = n - n % batch
+    if total == 0:
+        total, batch = n, n
+    correct = 0
+    for lo in range(0, total, batch):
+        probs = forward(params, x[lo : lo + batch], cfg, width_mult, exit_idx,
+                        use_pallas=use_pallas, svd=svd)
+        correct += int(jnp.sum(jnp.argmax(probs, axis=-1) == y[lo : lo + batch]))
+    return correct / total

@@ -1,0 +1,68 @@
+"""AOT pipeline contract tests (no training — random weights): HLO text
+properties the Rust loader depends on, manifest-relevant cost formulas,
+and the kernel's VMEM/structure invariants."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.aot import mac_count, param_count, to_hlo_text
+from compile.model import VariantConfig, forward, init_params, svd_factorize
+
+CFG = VariantConfig()
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(jax.random.PRNGKey(0), CFG)
+
+
+def lower_variant(params, batch, **kwargs):
+    fn = functools.partial(forward, params, cfg=CFG, use_pallas=True, **kwargs)
+    spec = jax.ShapeDtypeStruct((batch, CFG.input_hw, CFG.input_hw, CFG.in_channels), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def test_hlo_has_entry_and_single_param(params):
+    text = lower_variant(params, 1)
+    assert "ENTRY" in text
+    # Exactly one runtime parameter (the input); weights are constants.
+    assert text.count("parameter(0)") >= 1
+    assert "parameter(1)" not in text.split("ENTRY")[-1]
+
+
+def test_hlo_constants_not_elided(params):
+    # The regression that silently zeroed all weights: `constant({...})`.
+    text = lower_variant(params, 1)
+    assert "constant({...})" not in text, "large constants were elided"
+
+
+def test_hlo_no_mosaic_custom_calls(params):
+    # interpret=True must lower to plain HLO the CPU PJRT client can run.
+    text = lower_variant(params, 8)
+    assert "mosaic" not in text.lower()
+
+
+def test_hlo_batch_in_entry_layout(params):
+    t1 = lower_variant(params, 1)
+    t8 = lower_variant(params, 8)
+    assert "f32[1,16,16,3]" in t1
+    assert "f32[8,16,16,3]" in t8
+
+
+def test_all_variant_kinds_lower(params):
+    svd = svd_factorize(params, CFG, 0.5)
+    for kwargs in [{}, {"width_mult": 0.5}, {"exit_idx": 0}, {"svd": svd}]:
+        text = lower_variant(params, 1, **kwargs)
+        assert "ENTRY" in text
+
+
+def test_cost_formulas_monotone():
+    full_p = param_count(CFG, 1.0, None, 1.0)
+    assert param_count(CFG, 1.0, 1, 1.0) < full_p  # earlier exit
+    assert param_count(CFG, 0.5, None, 1.0) < full_p  # narrower
+    assert param_count(CFG, 1.0, None, 0.5) < full_p  # low-rank
+    full_m = mac_count(CFG, 1.0, None, 1.0)
+    assert mac_count(CFG, 0.5, None, 1.0) < full_m // 2

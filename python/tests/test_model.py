@@ -1,0 +1,171 @@
+"""L2 correctness: backbone shapes, variant semantics, pallas≡jnp path
+agreement, ensemble-training behaviour, and the AOT lowering contract."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    VariantConfig,
+    accuracy,
+    class_templates,
+    drifted,
+    ensemble_loss,
+    forward,
+    im2col,
+    init_params,
+    make_dataset,
+    maxpool2,
+    svd_factorize,
+    train,
+)
+
+CFG = VariantConfig()
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(jax.random.PRNGKey(0), CFG)
+
+
+@pytest.fixture(scope="module")
+def trained():
+    # Short but meaningful training for behavioural tests.
+    p, losses = train(jax.random.PRNGKey(0), CFG, steps=250)
+    return p, losses
+
+
+def test_im2col_shape_and_content():
+    x = jnp.arange(2 * 4 * 4 * 3, dtype=jnp.float32).reshape(2, 4, 4, 3)
+    p = im2col(x, 1)
+    assert p.shape == (2, 4, 4, 27)
+    # Center position (di=dj=1) of patch at (1,1) equals x[:,1,1,:].
+    center = p[:, 1, 1, 4 * 3 : 5 * 3]
+    np.testing.assert_allclose(np.asarray(center), np.asarray(x[:, 1, 1, :]))
+
+
+def test_im2col_stride2_downsamples():
+    x = jnp.ones((1, 8, 8, 2))
+    p = im2col(x, 2)
+    assert p.shape == (1, 4, 4, 18)
+
+
+def test_maxpool_halves():
+    x = jnp.arange(16, dtype=jnp.float32).reshape(1, 4, 4, 1)
+    y = maxpool2(x)
+    assert y.shape == (1, 2, 2, 1)
+    assert float(y[0, 0, 0, 0]) == 5.0  # max of [[0,1],[4,5]]
+
+
+def test_forward_shapes_all_exits(params):
+    x = jnp.zeros((4, CFG.input_hw, CFG.input_hw, CFG.in_channels))
+    for e in range(len(CFG.widths)):
+        probs = forward(params, x, CFG, exit_idx=e)
+        assert probs.shape == (4, CFG.num_classes)
+        np.testing.assert_allclose(np.asarray(jnp.sum(probs, -1)), 1.0, rtol=1e-5)
+
+
+def test_pallas_path_matches_jnp_path(params):
+    x = jax.random.normal(jax.random.PRNGKey(3), (8, CFG.input_hw, CFG.input_hw, CFG.in_channels))
+    for kwargs in [
+        {},
+        {"width_mult": 0.5},
+        {"exit_idx": 0},
+        {"svd": svd_factorize(params, CFG, 0.5)},
+    ]:
+        a = forward(params, x, CFG, use_pallas=False, **kwargs)
+        b = forward(params, x, CFG, use_pallas=True, **kwargs)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+def test_width_mult_uses_weight_prefix(params):
+    # Half-width output must depend only on the first half channels:
+    # zeroing the second half of every conv weight must not change it.
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 16, 16, 3))
+    half = forward(params, x, CFG, width_mult=0.5)
+    mutated = dict(params)
+    for k, v in params.items():
+        if k.endswith("_w") and k.startswith(("stem", "s")):
+            arr = np.asarray(v).copy()
+            arr[:, arr.shape[1] // 2 :] = 99.0
+            mutated[k] = jnp.asarray(arr)
+    half2 = forward(mutated, x, CFG, width_mult=0.5)
+    np.testing.assert_allclose(np.asarray(half), np.asarray(half2), rtol=1e-5)
+
+
+def test_svd_full_rank_is_exact(params):
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 16, 16, 3))
+    svd = svd_factorize(params, CFG, 1.0)
+    a = forward(params, x, CFG)
+    b = forward(params, x, CFG, svd=svd)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-4)
+
+
+def test_dataset_deterministic_and_shaped():
+    x1, y1 = make_dataset(jax.random.PRNGKey(1), CFG, 32)
+    x2, y2 = make_dataset(jax.random.PRNGKey(1), CFG, 32)
+    np.testing.assert_array_equal(np.asarray(x1), np.asarray(x2))
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    assert x1.shape == (32, 16, 16, 3)
+    assert int(jnp.max(y1)) < CFG.num_classes
+
+
+def test_templates_fixed_across_keys():
+    t1 = class_templates(CFG)
+    t2 = class_templates(CFG)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+
+
+def test_training_reduces_loss(trained):
+    _, losses = trained
+    first = sum(losses[:10]) / 10
+    last = sum(losses[-10:]) / 10
+    assert last < first * 0.7, f"loss {first} -> {last}"
+
+
+def test_trained_beats_chance_and_orders_variants(trained):
+    p, _ = trained
+    xt, yt = make_dataset(jax.random.PRNGKey(99), CFG, 256)
+    full = accuracy(p, xt, yt, CFG)
+    exit0 = accuracy(p, xt, yt, CFG, exit_idx=0)
+    chance = 1.0 / CFG.num_classes
+    assert full > 4 * chance
+    assert full >= exit0, "final exit must not be worse than the earliest"
+
+
+def test_drift_hurts_accuracy(trained):
+    p, _ = trained
+    xt, yt = make_dataset(jax.random.PRNGKey(99), CFG, 256)
+    clean = accuracy(p, xt, yt, CFG)
+    xd = drifted(xt, jax.random.PRNGKey(1), magnitude=1.5)
+    shifted = accuracy(p, jnp.asarray(xd), yt, CFG)
+    assert shifted <= clean
+
+
+def test_ensemble_loss_covers_variants(params):
+    x, y = make_dataset(jax.random.PRNGKey(2), CFG, 16)
+    loss = ensemble_loss(params, x, y, CFG)
+    # 3 full-width exits + 2 half-width: ≥ 5 CE terms, each ≥ ~ln(16)·0.5.
+    assert float(loss) > 5.0
+
+
+def test_variant_id_matches_rust_format():
+    assert CFG.variant_id() == "w8-16-32_d1-1-1_r100_f0"
+    assert CFG.scaled(0.5).variant_id() == "w4-8-16_d1-1-1_r100_f0"
+
+
+def test_aot_cost_model_consistent():
+    from compile.aot import mac_count, param_count
+
+    # Full variant params must equal the actual shipped tensors.
+    p = init_params(jax.random.PRNGKey(0), CFG)
+    expect = sum(int(np.prod(v.shape)) for k, v in p.items() if not k.startswith(("exit0", "exit1")))
+    got = param_count(CFG, 1.0, None, 1.0)
+    assert got == expect, f"{got} vs {expect}"
+    # Compression monotonicity.
+    assert param_count(CFG, 0.5, None, 1.0) < param_count(CFG, 1.0, None, 1.0)
+    assert mac_count(CFG, 1.0, 0, 1.0) < mac_count(CFG, 1.0, None, 1.0)
+    assert mac_count(CFG, 1.0, None, 0.5) < mac_count(CFG, 1.0, None, 1.0)

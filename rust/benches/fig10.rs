@@ -1,0 +1,5 @@
+//! Regenerates Fig. 10 (elastic inference vs compression baselines).
+fn main() {
+    let rows = crowdhmtware::experiments::fig10::run();
+    crowdhmtware::experiments::fig10::table(&rows).print();
+}

@@ -1,0 +1,5 @@
+//! Regenerates Fig. 11 (offloading vs CAS/DADS).
+fn main() {
+    let rows = crowdhmtware::experiments::fig11::run();
+    crowdhmtware::experiments::fig11::table(&rows).print();
+}

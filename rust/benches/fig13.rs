@@ -1,0 +1,5 @@
+//! Regenerates Fig. 13 (campus case study trace).
+fn main() {
+    let log = crowdhmtware::experiments::fig13::run(6);
+    crowdhmtware::experiments::fig13::table(&log).print();
+}

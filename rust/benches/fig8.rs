@@ -1,0 +1,18 @@
+//! Regenerates Fig. 8 (CrowdHMTware vs AdaDeep over three models).
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let rows = crowdhmtware::experiments::fig8::run("raspberrypi-4b");
+    crowdhmtware::experiments::fig8::table(&rows).print();
+    for r in &rows {
+        println!(
+            "  {}: latency gain {:.1}x, memory gain {:.1}x, Δacc {:+.2}pp  (paper: 4.2x/3x/10.3x lat, 3.1-4.2x mem)",
+            r.model,
+            r.latency_gain(),
+            r.memory_gain(),
+            r.our_acc - r.ada_acc
+        );
+    }
+    println!("fig8 generated in {:.2}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,5 @@
+//! Regenerates Fig. 9 (cross-device comparison vs AdaDeep).
+fn main() {
+    let rows = crowdhmtware::experiments::fig9::run();
+    crowdhmtware::experiments::fig9::table(&rows).print();
+}

@@ -1,0 +1,104 @@
+//! §Perf micro-bench harness for the L3 hot paths (no criterion in this
+//! offline environment — plain wall-clock loops with warmup, median of
+//! repeated runs).
+//!
+//! Hot paths measured:
+//!   profiler  — one Eq. 1/2 evaluation (runs every adaptation tick)
+//!   fusion    — full fusion pass over ResNet18
+//!   memalloc  — lifetime analysis + arena packing
+//!   offload   — pre-partition + DP offload planning
+//!   tick      — one full adaptation-loop tick (4-candidate front)
+//!   batcher   — push+pop of an 8-request batch
+
+use std::time::Instant;
+
+use crowdhmtware::compress::{OperatorKind, VariantSpec};
+use crowdhmtware::coordinator::{Batcher, BatcherConfig, Request};
+use crowdhmtware::device::{device, ResourceMonitor};
+use crowdhmtware::engine::{allocate, fuse, EngineConfig, FusionConfig};
+use crowdhmtware::graph::CostProfile;
+use crowdhmtware::models::{resnet18, ResNetStyle};
+use crowdhmtware::optimizer::{AdaptLoop, Budgets, Candidate};
+use crowdhmtware::partition::{plan_offload, prepartition, DeviceState, Topology};
+use crowdhmtware::profiler::{estimate_energy, estimate_latency};
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    // Warmup.
+    for _ in 0..3 {
+        f();
+    }
+    let mut samples = Vec::with_capacity(5);
+    for _ in 0..5 {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        samples.push(t0.elapsed().as_secs_f64() / iters as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = samples[2];
+    println!("{name:<22} {:>12.1} µs/iter  ({iters} iters, median of 5)", med * 1e6);
+}
+
+fn main() {
+    let g = resnet18(ResNetStyle::Cifar, 100, 1);
+    let snap = ResourceMonitor::new(device("raspberrypi-4b").unwrap()).idle_snapshot();
+    let cost = CostProfile::of(&g);
+
+    println!("== hotpath micro-benchmarks (L3) ==");
+    bench("profiler eval", 200, || {
+        let l = estimate_latency(&cost, &snap);
+        let e = estimate_energy(&cost, &snap);
+        std::hint::black_box((l.total_s, e.total_j));
+    });
+    bench("cost profile", 200, || {
+        std::hint::black_box(CostProfile::of(&g).total_macs());
+    });
+    bench("fusion pass", 100, || {
+        std::hint::black_box(fuse(&g, FusionConfig::all()).0.len());
+    });
+    bench("memalloc", 100, || {
+        std::hint::black_box(allocate(&g).arena_bytes);
+    });
+    let pp = prepartition(&g);
+    let topo = Topology::wifi_pair("raspberrypi-4b", "jetson-nx");
+    let devs = vec![
+        DeviceState { snap: snap.clone(), mem_budget: 4e9 },
+        DeviceState {
+            snap: ResourceMonitor::new(device("jetson-nx").unwrap()).idle_snapshot(),
+            mem_budget: 8e9,
+        },
+    ];
+    bench("prepartition", 100, || {
+        std::hint::black_box(prepartition(&g).cuts.len());
+    });
+    bench("offload DP", 100, || {
+        std::hint::black_box(plan_offload(&g, &pp, &devs, &topo).latency_s);
+    });
+    let front = vec![
+        Candidate::baseline(),
+        Candidate { engine: EngineConfig::all(), ..Candidate::baseline() },
+        Candidate {
+            spec: VariantSpec::single(OperatorKind::ChannelScale, 0.5),
+            engine: EngineConfig::all(),
+            offload: false,
+        },
+        Candidate {
+            spec: VariantSpec::pair((OperatorKind::LowRank, 0.25), (OperatorKind::ChannelScale, 0.5)),
+            engine: EngineConfig::all(),
+            offload: false,
+        },
+    ];
+    let mut l = AdaptLoop::new(g.clone(), 76.23, front, Budgets::unconstrained());
+    bench("adapt tick", 20, || {
+        std::hint::black_box(matches!(l.tick(&snap), crowdhmtware::optimizer::Decision::Hold));
+    });
+    bench("batcher 8", 1000, || {
+        let mut b = Batcher::new(BatcherConfig::default());
+        let now = Instant::now();
+        for i in 0..8 {
+            b.push(Request { id: i, input: vec![0.0; 16], enqueued: now });
+        }
+        std::hint::black_box(b.pop_batch(&[1, 8], now).map(|x| x.compiled_batch));
+    });
+}

@@ -1,0 +1,5 @@
+//! Regenerates Table I (12-device normalized gains).
+fn main() {
+    let rows = crowdhmtware::experiments::table1::run();
+    crowdhmtware::experiments::table1::table(&rows).print();
+}

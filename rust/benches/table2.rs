@@ -1,0 +1,5 @@
+//! Regenerates Table II (dynamic memory budgets).
+fn main() {
+    let rows = crowdhmtware::experiments::table2::run();
+    crowdhmtware::experiments::table2::table(&rows).print();
+}

@@ -1,0 +1,5 @@
+//! Regenerates Table III (operator combinations across tasks).
+fn main() {
+    let rows = crowdhmtware::experiments::table3::run();
+    crowdhmtware::experiments::table3::table(&rows).print();
+}

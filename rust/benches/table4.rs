@@ -1,0 +1,5 @@
+//! Regenerates Table IV (cross-level engine ablation @ Snapdragon 855).
+fn main() {
+    let rows = crowdhmtware::experiments::table4::run();
+    crowdhmtware::experiments::table4::table(&rows).print();
+}

@@ -1,0 +1,5 @@
+//! Regenerates Table V (component ablation).
+fn main() {
+    let rows = crowdhmtware::experiments::table5::run();
+    crowdhmtware::experiments::table5::table(&rows).print();
+}

@@ -1,0 +1,114 @@
+//! Once-for-all baseline (Cai et al., ICLR'20): train one supernet, then
+//! select a subnetwork per deployment target without retraining.
+//!
+//! Reproduced at the granularity the paper uses it: the subnet space is a
+//! width × depth grid over the backbone (OFA's elastic width/depth/kernel
+//! axes — kernel elasticity folds into our composite operator), and
+//! selection picks the highest-predicted-accuracy subnet satisfying the
+//! latency constraint on the target device. Like AdaDeep, OFA is
+//! algorithm-level only: no engine co-optimization, no runtime loop.
+
+use crate::compress::{OperatorKind, VariantSpec};
+use crate::device::ResourceSnapshot;
+use crate::engine::EngineConfig;
+use crate::graph::Graph;
+use crate::optimizer::{evaluate, Candidate, Evaluated};
+
+/// The OFA subnet grid: (width multiplier, depth multiplier) pairs.
+pub fn subnet_grid() -> Vec<VariantSpec> {
+    let mut v = vec![VariantSpec::identity()];
+    for w in [1.0, 0.75, 0.5, 0.35] {
+        for d in [1.0, 0.75, 0.5] {
+            if w == 1.0 && d == 1.0 {
+                continue;
+            }
+            let mut ops = Vec::new();
+            if w < 1.0 {
+                ops.push((OperatorKind::ChannelScale, w));
+            }
+            if d < 1.0 {
+                ops.push((OperatorKind::DepthScale, d));
+            }
+            v.push(VariantSpec { ops });
+        }
+    }
+    v
+}
+
+/// Select the best OFA subnet under a latency budget on the target device.
+pub fn ofa_select(base: &Graph, base_acc: f64, snap: &ResourceSnapshot, lat_budget_s: f64) -> Evaluated {
+    let mut best: Option<Evaluated> = None;
+    for spec in subnet_grid() {
+        let cand = Candidate { spec, offload: false, engine: EngineConfig::none() };
+        let e = evaluate(base, &cand, base_acc, snap, 0.0, false);
+        let feasible = e.metrics.latency_s <= lat_budget_s;
+        let better = match &best {
+            None => true,
+            Some(b) => {
+                let b_feasible = b.metrics.latency_s <= lat_budget_s;
+                match (feasible, b_feasible) {
+                    (true, false) => true,
+                    (false, true) => false,
+                    (true, true) => e.metrics.accuracy > b.metrics.accuracy,
+                    (false, false) => e.metrics.latency_s < b.metrics.latency_s,
+                }
+            }
+        };
+        if better {
+            best = Some(e);
+        }
+    }
+    best.unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{device, ResourceMonitor};
+    use crate::models::{resnet18, ResNetStyle};
+
+    fn setup() -> (Graph, ResourceSnapshot) {
+        let g = resnet18(ResNetStyle::Cifar, 100, 1);
+        let snap = ResourceMonitor::new(device("raspberrypi-4b").unwrap()).idle_snapshot();
+        (g, snap)
+    }
+
+    #[test]
+    fn grid_has_expected_size() {
+        // identity + 11 (4×3 − identity) = 12
+        assert_eq!(subnet_grid().len(), 12);
+    }
+
+    #[test]
+    fn loose_budget_picks_full_model() {
+        let (g, snap) = setup();
+        let e = ofa_select(&g, 76.23, &snap, f64::INFINITY);
+        assert!(e.candidate.spec.ops.is_empty(), "picked {:?}", e.candidate.spec);
+    }
+
+    #[test]
+    fn tight_budget_picks_subnet() {
+        let (g, snap) = setup();
+        let full = ofa_select(&g, 76.23, &snap, f64::INFINITY);
+        let tight = ofa_select(&g, 76.23, &snap, full.metrics.latency_s * 0.4);
+        assert!(!tight.candidate.spec.ops.is_empty());
+        assert!(tight.metrics.latency_s < full.metrics.latency_s);
+        assert!(tight.metrics.accuracy <= full.metrics.accuracy);
+    }
+
+    #[test]
+    fn infeasible_budget_returns_fastest() {
+        let (g, snap) = setup();
+        let e = ofa_select(&g, 76.23, &snap, 1e-9);
+        // Must return the minimum-latency subnet rather than panic.
+        let all: Vec<f64> = subnet_grid()
+            .into_iter()
+            .map(|s| {
+                let c = Candidate { spec: s, offload: false, engine: EngineConfig::none() };
+                evaluate(&g, &c, 76.23, &snap, 0.0, false).metrics.latency_s
+            })
+            .collect();
+        let min = all.iter().cloned().fold(f64::MAX, f64::min);
+        assert!((e.metrics.latency_s - min).abs() < 1e-9);
+    }
+}

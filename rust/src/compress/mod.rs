@@ -1,0 +1,134 @@
+//! Front-end elastic inference (Sec. III-A): the retraining-free
+//! multi-variant compression space. Operators η1–η6 transform the graph
+//! IR; [`VariantSpec`] names a point in the space; [`variant_space`]
+//! enumerates the candidate grid the optimizer searches.
+
+pub mod operators;
+pub mod rewrite;
+
+pub use operators::{apply, OperatorKind};
+
+
+use crate::graph::Graph;
+
+/// A point in the compression space: an ordered list of (operator, level)
+/// applications. θp in the paper's Eq. 3.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VariantSpec {
+    pub ops: Vec<(OperatorKind, f64)>,
+}
+
+impl VariantSpec {
+    pub fn identity() -> Self {
+        VariantSpec { ops: vec![] }
+    }
+
+    pub fn single(op: OperatorKind, level: f64) -> Self {
+        VariantSpec { ops: vec![(op, level)] }
+    }
+
+    pub fn pair(a: (OperatorKind, f64), b: (OperatorKind, f64)) -> Self {
+        VariantSpec { ops: vec![a, b] }
+    }
+
+    /// Apply all operators in order.
+    pub fn apply(&self, g: &Graph) -> Graph {
+        let mut out = g.clone();
+        for &(op, level) in &self.ops {
+            out = apply(&out, op, level);
+        }
+        out
+    }
+
+    /// Operator kinds used (for the accuracy model's per-family deltas).
+    pub fn kinds(&self) -> Vec<OperatorKind> {
+        self.ops.iter().map(|&(k, _)| k).collect()
+    }
+
+    /// Human-readable label like "η1+η6".
+    pub fn label(&self) -> String {
+        if self.ops.is_empty() {
+            return "original".into();
+        }
+        self.ops.iter().map(|(k, _)| k.symbol()).collect::<Vec<_>>().join("+")
+    }
+
+    /// Label with levels, e.g. "η1(0.25)+η6(0.35)" — distinguishes
+    /// same-family variants in adaptation traces.
+    pub fn detailed_label(&self) -> String {
+        if self.ops.is_empty() {
+            return "original".into();
+        }
+        self.ops
+            .iter()
+            .map(|(k, l)| format!("{}({l})", k.symbol()))
+            .collect::<Vec<_>>()
+            .join("+")
+    }
+}
+
+/// The candidate grid the optimizer searches: identity, each operator at
+/// three levels, and the paper's featured pair combinations (Table III,
+/// Fig. 13 use η1+η5, η1+η6, η2+η5, η2+η6).
+pub fn variant_space() -> Vec<VariantSpec> {
+    let mut v = vec![VariantSpec::identity()];
+    for k in OperatorKind::all() {
+        for level in [0.75, 0.5, 0.25] {
+            v.push(VariantSpec::single(k, level));
+        }
+    }
+    for (a, b) in [
+        (OperatorKind::LowRank, OperatorKind::DepthScale),
+        (OperatorKind::LowRank, OperatorKind::ChannelScale),
+        (OperatorKind::Fire, OperatorKind::DepthScale),
+        (OperatorKind::Fire, OperatorKind::ChannelScale),
+        (OperatorKind::Ghost, OperatorKind::ChannelScale),
+        (OperatorKind::Composite, OperatorKind::DepthScale),
+    ] {
+        for (la, lb) in [(0.5, 0.5), (0.25, 0.5), (0.5, 0.75)] {
+            v.push(VariantSpec::pair((a, la), (b, lb)));
+        }
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{resnet18, ResNetStyle};
+
+    #[test]
+    fn space_has_identity_and_pairs() {
+        let space = variant_space();
+        assert!(space.len() > 30);
+        assert_eq!(space[0], VariantSpec::identity());
+        assert!(space.iter().any(|v| v.label() == "η1+η6"));
+    }
+
+    #[test]
+    fn every_variant_applies_cleanly_to_resnet18() {
+        let g = resnet18(ResNetStyle::Cifar, 100, 1);
+        for spec in variant_space() {
+            let c = spec.apply(&g);
+            assert!(c.total_macs() > 0, "{}", spec.label());
+            assert_eq!(c.node(c.outputs[0]).shape.features(), 100, "{}", spec.label());
+        }
+    }
+
+    #[test]
+    fn pair_compresses_more_than_either_single() {
+        let g = resnet18(ResNetStyle::Cifar, 100, 1);
+        let a = VariantSpec::single(OperatorKind::LowRank, 0.5).apply(&g);
+        let pair = VariantSpec::pair((OperatorKind::LowRank, 0.5), (OperatorKind::ChannelScale, 0.5)).apply(&g);
+        assert!(pair.total_macs() < a.total_macs());
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(VariantSpec::identity().label(), "original");
+        assert_eq!(
+            VariantSpec::pair((OperatorKind::Fire, 0.5), (OperatorKind::ChannelScale, 0.5)).label(),
+            "η2+η6"
+        );
+    }
+}

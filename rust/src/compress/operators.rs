@@ -1,0 +1,478 @@
+//! The six compression-operator families η1–η6 (Sec. III-A1), each a
+//! retraining-free graph→graph transformation. Weight consistency across
+//! variants is handled by the ensemble pre-training of the backbone
+//! (python side); here we transform structure and account costs.
+
+use std::collections::HashSet;
+
+
+use crate::graph::{Conv2dAttrs, Graph, Op};
+
+use super::rewrite::{residual_blocks, rewrite, Emit};
+
+/// The operator families. Levels in (0,1]: smaller = more aggressive.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OperatorKind {
+    /// η1: low-rank (SVD-style) convolution factorization.
+    LowRank,
+    /// η2: Fire squeeze-expand channel merging.
+    Fire,
+    /// η3: composite (EfficientNet-style) kernel/channel/resolution scaling.
+    Composite,
+    /// η4: Ghost modules — half real convs, half cheap linear expansions.
+    Ghost,
+    /// η5: depth-wise scaling — bypass residual blocks / early exits.
+    DepthScale,
+    /// η6: channel-wise scaling — width multiplier pruning.
+    ChannelScale,
+}
+
+impl OperatorKind {
+    pub fn all() -> [OperatorKind; 6] {
+        [
+            OperatorKind::LowRank,
+            OperatorKind::Fire,
+            OperatorKind::Composite,
+            OperatorKind::Ghost,
+            OperatorKind::DepthScale,
+            OperatorKind::ChannelScale,
+        ]
+    }
+
+    pub fn symbol(self) -> &'static str {
+        match self {
+            OperatorKind::LowRank => "η1",
+            OperatorKind::Fire => "η2",
+            OperatorKind::Composite => "η3",
+            OperatorKind::Ghost => "η4",
+            OperatorKind::DepthScale => "η5",
+            OperatorKind::ChannelScale => "η6",
+        }
+    }
+}
+
+/// Apply one operator at `level` ∈ (0,1] to a graph.
+pub fn apply(g: &Graph, op: OperatorKind, level: f64) -> Graph {
+    let level = level.clamp(0.05, 1.0);
+    match op {
+        OperatorKind::LowRank => low_rank(g, level),
+        OperatorKind::Fire => fire(g),
+        OperatorKind::Composite => composite(g, level),
+        OperatorKind::Ghost => ghost(g),
+        OperatorKind::DepthScale => depth_scale(g, level),
+        OperatorKind::ChannelScale => channel_scale(g, level),
+    }
+}
+
+/// η1 — replace every dense k×k conv (k>1) with a (k×1, rank r) → (1×k,
+/// out_c) factorized pair, r = level·min(in_c, out_c).
+pub fn low_rank(g: &Graph, level: f64) -> Graph {
+    let mut out = rewrite(g, |g, n, new, map| {
+        if let Op::Conv2d(a) = &n.op {
+            if a.groups == 1 && a.kernel.0 > 1 && a.kernel.1 > 1 {
+                let in_c = g.node(n.inputs[0]).shape.channels();
+                let rank = (((in_c.min(a.out_c)) as f64) * level).ceil().max(1.0) as usize;
+                let first = Conv2dAttrs {
+                    out_c: rank,
+                    kernel: (a.kernel.0, 1),
+                    stride: (a.stride.0, 1),
+                    pad: (a.pad.0, 0),
+                    groups: 1,
+                    bias: false,
+                };
+                let second = Conv2dAttrs {
+                    out_c: a.out_c,
+                    kernel: (1, a.kernel.1),
+                    stride: (1, a.stride.1),
+                    pad: (0, a.pad.1),
+                    groups: 1,
+                    bias: a.bias,
+                };
+                let inputs: Vec<_> = n.inputs.iter().map(|i| map[i]).collect();
+                let c1 = new.add(format!("{}.lr_a", n.name), Op::Conv2d(first), &inputs);
+                let c2 = new.add(format!("{}.lr_b", n.name), Op::Conv2d(second), &[c1]);
+                return Emit::Mapped(c2);
+            }
+        }
+        Emit::Keep
+    });
+    out.name = format!("{}+η1", g.name);
+    out
+}
+
+/// η2 — replace every dense 3×3 stride-1 conv with a Fire module:
+/// squeeze 1×1 (c/4) → expand 1×1 (c/2) ∥ expand 3×3 (c/2) → concat.
+pub fn fire(g: &Graph) -> Graph {
+    let mut out = rewrite(g, |_, n, new, map| {
+        if let Op::Conv2d(a) = &n.op {
+            if a.groups == 1 && a.kernel == (3, 3) && a.stride == (1, 1) && a.out_c >= 8 {
+                let s = (a.out_c / 4).max(1);
+                let e = a.out_c / 2;
+                let inputs: Vec<_> = n.inputs.iter().map(|i| map[i]).collect();
+                let sq = new.add(format!("{}.squeeze", n.name), Op::Conv2d(Conv2dAttrs::pointwise(s)), &inputs);
+                let e1 = new.add(format!("{}.expand1", n.name), Op::Conv2d(Conv2dAttrs::pointwise(e)), &[sq]);
+                let e3 = new.add(format!("{}.expand3", n.name), Op::Conv2d(Conv2dAttrs::simple(e, 3, 1, 1)), &[sq]);
+                let cat = new.add(format!("{}.concat", n.name), Op::Concat, &[e1, e3]);
+                return Emit::Mapped(cat);
+            }
+        }
+        Emit::Keep
+    });
+    out.name = format!("{}+η2", g.name);
+    out
+}
+
+/// η3 — composite scaling: channel width × level, plus kernel-size
+/// reduction (5×5/7×7 → 3×3) when level < 0.7.
+pub fn composite(g: &Graph, level: f64) -> Graph {
+    let mut out = channel_scale_inner(g, level);
+    if level < 0.7 {
+        out = rewrite(&out, |_, n, _, _| {
+            let _ = n;
+            Emit::Keep
+        });
+        for n in &mut out.nodes {
+            if let Op::Conv2d(a) = &mut n.op {
+                if a.kernel.0 > 3 && a.kernel.1 > 3 {
+                    a.kernel = (3, 3);
+                    a.pad = (1, 1);
+                }
+            }
+        }
+        out.recompute_shapes();
+    }
+    out.name = format!("{}+η3", g.name);
+    out
+}
+
+/// η4 — Ghost modules: each dense 3×3 conv produces only half its output
+/// channels with real convs; the other half comes from a cheap depthwise
+/// 3×3 on the primary maps, concatenated.
+pub fn ghost(g: &Graph) -> Graph {
+    let mut out = rewrite(g, |_, n, new, map| {
+        if let Op::Conv2d(a) = &n.op {
+            if a.groups == 1 && a.kernel == (3, 3) && a.out_c >= 8 && a.out_c % 2 == 0 {
+                let half = a.out_c / 2;
+                let mut primary = a.clone();
+                primary.out_c = half;
+                let inputs: Vec<_> = n.inputs.iter().map(|i| map[i]).collect();
+                let p = new.add(format!("{}.ghost_primary", n.name), Op::Conv2d(primary), &inputs);
+                let cheap = Conv2dAttrs::depthwise(half, 3, 1, 1);
+                let c = new.add(format!("{}.ghost_cheap", n.name), Op::Conv2d(cheap), &[p]);
+                let cat = new.add(format!("{}.ghost_cat", n.name), Op::Concat, &[p, c]);
+                return Emit::Mapped(cat);
+            }
+        }
+        Emit::Keep
+    });
+    out.name = format!("{}+η4", g.name);
+    out
+}
+
+/// η5 — depth scaling: bypass `1 − level` of the identity-shortcut
+/// residual blocks (evenly spaced, keeping the first), deriving a
+/// shallower variant via skip connections.
+pub fn depth_scale(g: &Graph, level: f64) -> Graph {
+    let blocks = residual_blocks(g);
+    let n_remove = ((blocks.len() as f64) * (1.0 - level)).round() as usize;
+    let n_remove = n_remove.min(blocks.len());
+    // Evenly-spaced selection from the back (later blocks are most
+    // redundant per the depth-elastic pruning literature).
+    let mut remove: HashSet<usize> = HashSet::new();
+    let mut skip_nodes: HashSet<usize> = HashSet::new();
+    let mut chosen = 0usize;
+    for (add, _s, chain) in blocks.iter().rev() {
+        if chosen >= n_remove {
+            break;
+        }
+        remove.insert(*add);
+        for c in chain {
+            skip_nodes.insert(*c);
+        }
+        chosen += 1;
+    }
+    let mut out = rewrite(g, |g, n, _new, map| {
+        if remove.contains(&n.id) {
+            // Alias the Add to its shortcut input.
+            let (_, short, _) = residual_blocks(g).into_iter().find(|(a, _, _)| *a == n.id).unwrap();
+            return Emit::Alias(map[&short]);
+        }
+        if skip_nodes.contains(&n.id) {
+            // Dead branch — alias to its input; prune_dead removes it.
+            return Emit::Alias(map[&n.inputs[0]]);
+        }
+        Emit::Keep
+    });
+    out.prune_dead();
+    out.name = format!("{}+η5", g.name);
+    out
+}
+
+/// η6 — channel scaling: multiply every conv's output channels (and FC
+/// hidden widths) by `level`, keeping classifier outputs intact.
+pub fn channel_scale(g: &Graph, level: f64) -> Graph {
+    let mut out = channel_scale_inner(g, level);
+    out.name = format!("{}+η6", g.name);
+    out
+}
+
+fn channel_scale_inner(g: &Graph, level: f64) -> Graph {
+    let consumers = g.consumers();
+
+    // Width-coupling analysis: Add requires both inputs to share channel
+    // width, so their width *sources* (the convs/FCs that defined the
+    // width) must scale together — and if any source is unscalable (the
+    // graph input, a Concat), the whole group must keep its width.
+    // Union-find over width sources, computed in storage (topo) order.
+    let n = g.len();
+    let mut parent: Vec<usize> = (0..n).collect();
+    fn find(parent: &mut Vec<usize>, mut x: usize) -> usize {
+        while parent[x] != x {
+            parent[x] = parent[parent[x]];
+            x = parent[x];
+        }
+        x
+    }
+    let mut unscalable = vec![false; n];
+    let mut is_concat = vec![false; n];
+    let mut add_coupled: Vec<usize> = Vec::new();
+    // src[i] = node id that determines node i's channel width.
+    let mut src = vec![0usize; n];
+    for node in &g.nodes {
+        let id = node.id;
+        src[id] = match &node.op {
+            Op::Input => {
+                unscalable[id] = true;
+                id
+            }
+            Op::Conv2d(a) | Op::FusedConvBn { conv: a, .. } | Op::FusedPointwise { conv: a, .. } => {
+                if a.groups == 1 {
+                    id // scalable width source
+                } else {
+                    src[node.inputs[0]] // depthwise passes width through
+                }
+            }
+            Op::FC { .. } | Op::FusedFcAct { .. } => id,
+            Op::Flatten => {
+                unscalable[id] = true;
+                id
+            }
+            Op::Concat => {
+                // A concat's width is the *sum* of its members': members
+                // scale together (union them), but the summed width can
+                // never match another rounded width inside an Add — so a
+                // concat group that also contains an Add must freeze.
+                is_concat[id] = true;
+                for &i in &node.inputs {
+                    let a = find(&mut parent, src[i]);
+                    let b = find(&mut parent, id);
+                    parent[a] = b;
+                }
+                id
+            }
+            Op::Add => {
+                let a = find(&mut parent, src[node.inputs[0]]);
+                let b = find(&mut parent, src[node.inputs[1]]);
+                parent[a] = b;
+                add_coupled.push(src[node.inputs[0]]);
+                src[node.inputs[0]]
+            }
+            _ => src[node.inputs[0]],
+        };
+    }
+    // Per-root flags → frozen roots: any unscalable member, or a concat
+    // participating in an Add-coupled group.
+    let mut has_unscalable = std::collections::HashSet::new();
+    let mut has_concat = std::collections::HashSet::new();
+    let mut has_add = std::collections::HashSet::new();
+    for i in 0..n {
+        let r = find(&mut parent, i);
+        if unscalable[i] {
+            has_unscalable.insert(r);
+        }
+        if is_concat[i] {
+            has_concat.insert(r);
+        }
+    }
+    for &a in &add_coupled {
+        let r = find(&mut parent, a);
+        has_add.insert(r);
+    }
+    let mut frozen_root = std::collections::HashSet::new();
+    for i in 0..n {
+        let r = find(&mut parent, i);
+        if has_unscalable.contains(&r) || (has_concat.contains(&r) && has_add.contains(&r)) {
+            frozen_root.insert(r);
+        }
+    }
+    let scalable = |parent: &mut Vec<usize>, id: usize| -> bool {
+        let r = find(parent, id);
+        !frozen_root.contains(&r)
+    };
+
+    let mut out = g.clone();
+    for node in &mut out.nodes {
+        let id = node.id;
+        match &mut node.op {
+            Op::Conv2d(a) => {
+                if a.groups == 1 && scalable(&mut parent, id) {
+                    a.out_c = ((a.out_c as f64 * level).round() as usize).max(1);
+                }
+                // Depthwise convs follow their input width (fixed below).
+            }
+            Op::FC { out: o, .. } => {
+                // Hidden FC layers scale; the final classifier (feeding
+                // softmax or a graph output) keeps its width.
+                let is_classifier = consumers[id]
+                    .iter()
+                    .all(|&c| g.node(c).op.kind() == "Softmax")
+                    || g.outputs.contains(&id);
+                if !is_classifier && scalable(&mut parent, id) {
+                    *o = ((*o as f64 * level).round() as usize).max(1);
+                }
+            }
+            _ => {}
+        }
+    }
+    // Fix depthwise convs in topo order: groups/out_c must track the (now
+    // narrower) input.
+    fix_depthwise(&mut out);
+    out.recompute_shapes();
+    // Residual adds stay consistent: coupled sources scaled identically
+    // (same rounding) or not at all (frozen groups).
+    out
+}
+
+fn fix_depthwise(g: &mut Graph) {
+    // Single forward pass in storage (topological) order: fix each
+    // depthwise conv's groups/out_c to its (already updated) input width,
+    // recomputing shapes inline so downstream fixups see fresh widths.
+    for i in 0..g.nodes.len() {
+        let input_shapes: Vec<crate::graph::Shape> =
+            g.nodes[i].inputs.iter().map(|&j| g.nodes[j].shape.clone()).collect();
+        if let Op::Conv2d(a) = &mut g.nodes[i].op {
+            if a.groups > 1 {
+                let in_c = input_shapes[0].channels();
+                a.groups = in_c;
+                a.out_c = in_c;
+            }
+        }
+        if !matches!(g.nodes[i].op, Op::Input) {
+            let refs: Vec<&crate::graph::Shape> = input_shapes.iter().collect();
+            g.nodes[i].shape = g.nodes[i].op.infer_shape(&refs);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{mobilenet_v2, resnet18, vgg16, ResNetStyle};
+
+    fn r18() -> Graph {
+        resnet18(ResNetStyle::Cifar, 100, 1)
+    }
+
+    #[test]
+    fn low_rank_cuts_params_preserves_shapes() {
+        let g = r18();
+        let c = low_rank(&g, 0.25);
+        assert!(c.total_params() < g.total_params() / 2);
+        assert_eq!(c.node(c.outputs[0]).shape, g.node(g.outputs[0]).shape);
+    }
+
+    #[test]
+    fn low_rank_level_monotone() {
+        let g = r18();
+        let a = low_rank(&g, 0.5);
+        let b = low_rank(&g, 0.25);
+        assert!(b.total_params() < a.total_params());
+        assert!(a.total_params() < g.total_params());
+    }
+
+    #[test]
+    fn fire_cuts_params_preserves_output() {
+        let g = vgg16(false, 100, 1);
+        let c = fire(&g);
+        assert!(c.total_params() < g.total_params());
+        assert_eq!(c.node(c.outputs[0]).shape, g.node(g.outputs[0]).shape);
+    }
+
+    #[test]
+    fn ghost_roughly_halves_conv_cost() {
+        let g = vgg16(false, 100, 1);
+        let c = ghost(&g);
+        let ratio = c.total_macs() as f64 / g.total_macs() as f64;
+        assert!((0.3..0.85).contains(&ratio), "ratio={ratio}");
+        assert_eq!(c.node(c.outputs[0]).shape, g.node(g.outputs[0]).shape);
+    }
+
+    #[test]
+    fn depth_scale_removes_blocks() {
+        let g = r18();
+        let c = depth_scale(&g, 0.4);
+        assert!(c.len() < g.len());
+        assert!(c.total_macs() < g.total_macs());
+        assert_eq!(c.node(c.outputs[0]).shape, g.node(g.outputs[0]).shape);
+    }
+
+    #[test]
+    fn depth_scale_level_one_is_identity_cost() {
+        let g = r18();
+        let c = depth_scale(&g, 1.0);
+        assert_eq!(c.total_macs(), g.total_macs());
+    }
+
+    #[test]
+    fn channel_scale_quadratic_param_reduction() {
+        let g = vgg16(false, 100, 1);
+        let c = channel_scale(&g, 0.5);
+        let ratio = c.total_params() as f64 / g.total_params() as f64;
+        // Conv params scale ~level² (both in and out channels shrink).
+        assert!((0.15..0.45).contains(&ratio), "ratio={ratio}");
+        assert_eq!(c.node(c.outputs[0]).shape.features(), 100);
+    }
+
+    #[test]
+    fn channel_scale_handles_depthwise_mobilenet() {
+        let g = mobilenet_v2(false, 10, 1);
+        let c = channel_scale(&g, 0.5);
+        assert!(c.total_macs() < g.total_macs());
+        assert_eq!(c.node(c.outputs[0]).shape.features(), 10);
+        assert_eq!(c.topo_order().len(), c.len());
+    }
+
+    #[test]
+    fn composite_scales_channels() {
+        let g = r18();
+        let c = composite(&g, 0.6);
+        assert!(c.total_macs() < g.total_macs());
+    }
+
+    #[test]
+    fn apply_dispatches_all_kinds() {
+        let g = r18();
+        for k in OperatorKind::all() {
+            let c = apply(&g, k, 0.5);
+            assert!(c.total_macs() <= g.total_macs(), "{k:?} should not grow the model");
+            assert_eq!(
+                c.node(c.outputs[0]).shape.features(),
+                100,
+                "{k:?} must keep the classifier width"
+            );
+        }
+    }
+
+    #[test]
+    fn residual_add_shapes_stay_consistent_after_scaling() {
+        let g = r18();
+        let c = channel_scale(&g, 0.3);
+        // recompute_shapes would have panicked on mismatched Adds; verify
+        // explicitly for good measure.
+        for n in &c.nodes {
+            if n.op.kind() == "Add" {
+                assert_eq!(c.node(n.inputs[0]).shape, c.node(n.inputs[1]).shape);
+            }
+        }
+    }
+}

@@ -1,0 +1,138 @@
+//! Graph-rewrite machinery shared by the compression operators: walk the
+//! source graph in stored (topological) order, let a callback emit zero or
+//! more replacement nodes into a fresh graph, and remap edges/outputs.
+
+use std::collections::HashMap;
+
+use crate::graph::{Graph, Node, NodeId};
+
+/// Outcome of rewriting one node.
+pub enum Emit {
+    /// Keep the node as-is (op cloned, inputs remapped).
+    Keep,
+    /// The node was replaced by `new_id` already emitted into the new
+    /// graph (use for multi-node expansions — emit them yourself via the
+    /// builder, then return the final id).
+    Mapped(NodeId),
+    /// Skip this node entirely, aliasing its output to an already-mapped
+    /// node (used by depth-scaling to bypass residual blocks).
+    Alias(NodeId),
+}
+
+/// Rewrite `g` node-by-node. `f` receives the old graph, the old node, the
+/// new graph under construction, and the old→new id map; it returns how to
+/// emit the node. Graph outputs are remapped automatically.
+pub fn rewrite<F>(g: &Graph, mut f: F) -> Graph
+where
+    F: FnMut(&Graph, &Node, &mut Graph, &HashMap<NodeId, NodeId>) -> Emit,
+{
+    let mut out = Graph::new(g.name.clone(), g.nodes[g.input].shape.clone());
+    let mut map: HashMap<NodeId, NodeId> = HashMap::new();
+    map.insert(g.input, out.input);
+    for n in &g.nodes {
+        if n.id == g.input {
+            continue;
+        }
+        let new_id = match f(g, n, &mut out, &map) {
+            Emit::Keep => {
+                let inputs: Vec<NodeId> = n.inputs.iter().map(|i| map[i]).collect();
+                out.add(n.name.clone(), n.op.clone(), &inputs)
+            }
+            Emit::Mapped(id) | Emit::Alias(id) => id,
+        };
+        map.insert(n.id, new_id);
+    }
+    for o in &g.outputs {
+        let id = map[o];
+        out.mark_output(id);
+    }
+    out
+}
+
+/// Collect, for each Add node with an identity shortcut, the set of node
+/// ids forming the bypassable main branch (shortcut input excluded).
+/// Returns `(add_id, shortcut_id, branch_nodes)` triples.
+pub fn residual_blocks(g: &Graph) -> Vec<(NodeId, NodeId, Vec<NodeId>)> {
+    let mut found = Vec::new();
+    for n in &g.nodes {
+        if n.op.kind() != "Add" || n.inputs.len() != 2 {
+            continue;
+        }
+        for (mi, si) in [(0usize, 1usize), (1, 0)] {
+            let main = n.inputs[mi];
+            let short = n.inputs[si];
+            // Walk the single-input chain backwards from `main`; if it hits
+            // `short`, the branch is bypassable (identity shortcut).
+            let mut chain = Vec::new();
+            let mut cur = main;
+            let mut ok = false;
+            for _ in 0..64 {
+                if cur == short {
+                    ok = true;
+                    break;
+                }
+                let node = g.node(cur);
+                if node.inputs.len() != 1 {
+                    break;
+                }
+                chain.push(cur);
+                cur = node.inputs[0];
+            }
+            if ok && !chain.is_empty() && g.node(short).shape == n.shape {
+                found.push((n.id, short, chain));
+                break;
+            }
+        }
+    }
+    found
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Activation, Conv2dAttrs, Op, Shape};
+    use crate::models::{resnet18, ResNetStyle};
+
+    #[test]
+    fn identity_rewrite_preserves_costs() {
+        let g = resnet18(ResNetStyle::Cifar, 100, 1);
+        let g2 = rewrite(&g, |_, _, _, _| Emit::Keep);
+        assert_eq!(g2.total_macs(), g.total_macs());
+        assert_eq!(g2.total_params(), g.total_params());
+        assert_eq!(g2.outputs.len(), g.outputs.len());
+    }
+
+    #[test]
+    fn finds_identity_residual_blocks_in_resnet() {
+        let g = resnet18(ResNetStyle::Cifar, 100, 1);
+        let blocks = residual_blocks(&g);
+        // ResNet-18 CIFAR: 8 basic blocks, 5 with identity shortcuts
+        // (stage-leading blocks use projection shortcuts).
+        assert_eq!(blocks.len(), 5, "got {}", blocks.len());
+        for (add, short, chain) in &blocks {
+            assert_eq!(g.node(*add).op.kind(), "Add");
+            assert!(!chain.is_empty());
+            assert_eq!(g.node(*short).shape, g.node(*add).shape);
+        }
+    }
+
+    #[test]
+    fn multi_node_expansion_via_mapped() {
+        let mut g = Graph::new("t", Shape::nchw(1, 3, 8, 8));
+        let c = g.add("c", Op::Conv2d(Conv2dAttrs::simple(4, 3, 1, 1)), &[g.input]);
+        g.mark_output(c);
+        // Replace the conv with conv→relu.
+        let g2 = rewrite(&g, |_, n, out, map| {
+            if n.op.kind() == "Conv2d" {
+                let inputs: Vec<_> = n.inputs.iter().map(|i| map[i]).collect();
+                let c = out.add("c2", n.op.clone(), &inputs);
+                let r = out.add("r", Op::Act(Activation::ReLU), &[c]);
+                Emit::Mapped(r)
+            } else {
+                Emit::Keep
+            }
+        });
+        assert_eq!(g2.len(), 3);
+        assert_eq!(g2.node(g2.outputs[0]).op.kind(), "Act");
+    }
+}

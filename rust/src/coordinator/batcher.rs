@@ -1,0 +1,170 @@
+//! Dynamic request batcher: collects inference requests and forms batches
+//! matched to the AOT-compiled batch sizes (artifacts are compiled for a
+//! fixed set of batches; the batcher picks the best fit and pads).
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// One queued inference request.
+#[derive(Debug)]
+pub struct Request {
+    pub id: u64,
+    /// Row-major `[H, W, C]` f32 input.
+    pub input: Vec<f32>,
+    pub enqueued: Instant,
+}
+
+/// Batching policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    /// Form a batch as soon as this many requests are queued.
+    pub max_batch: usize,
+    /// ... or when the oldest request has waited this long.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(10) }
+    }
+}
+
+/// A formed batch: requests + the compiled batch size to run (≥ len,
+/// padding rows with zeros).
+#[derive(Debug)]
+pub struct Batch {
+    pub requests: Vec<Request>,
+    pub compiled_batch: usize,
+}
+
+impl Batch {
+    /// Build the padded input buffer for execution.
+    pub fn padded_input(&self, elems_per_row: usize) -> Vec<f32> {
+        let mut buf = vec![0.0f32; self.compiled_batch * elems_per_row];
+        for (i, r) in self.requests.iter().enumerate() {
+            buf[i * elems_per_row..(i + 1) * elems_per_row].copy_from_slice(&r.input);
+        }
+        buf
+    }
+}
+
+/// The batcher itself (single-consumer; the server thread owns it).
+#[derive(Debug)]
+pub struct Batcher {
+    pub cfg: BatcherConfig,
+    queue: VecDeque<Request>,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        Batcher { cfg, queue: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, req: Request) {
+        self.queue.push_back(req);
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Pick the compiled batch size for `k` ready requests: the smallest
+    /// compiled size ≥ k (minimal padding), else the largest compiled size
+    /// (and the batch is truncated to it).
+    pub fn fit_compiled(k: usize, compiled: &[usize]) -> usize {
+        let mut sizes = compiled.to_vec();
+        sizes.sort_unstable();
+        for &b in &sizes {
+            if b >= k {
+                return b;
+            }
+        }
+        *sizes.last().expect("no compiled batch sizes")
+    }
+
+    /// Form a batch if the policy triggers; `now` injected for testability.
+    pub fn pop_batch(&mut self, compiled: &[usize], now: Instant) -> Option<Batch> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let oldest_wait = now.duration_since(self.queue.front().unwrap().enqueued);
+        if self.queue.len() < self.cfg.max_batch && oldest_wait < self.cfg.max_wait {
+            return None;
+        }
+        let k = self.queue.len().min(self.cfg.max_batch);
+        let b = Self::fit_compiled(k, compiled);
+        let take = k.min(b);
+        let requests: Vec<Request> = (0..take).map(|_| self.queue.pop_front().unwrap()).collect();
+        Some(Batch { requests, compiled_batch: b })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, t: Instant) -> Request {
+        Request { id, input: vec![id as f32; 4], enqueued: t }
+    }
+
+    #[test]
+    fn batches_when_full() {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 4, max_wait: Duration::from_secs(10) });
+        let t = Instant::now();
+        for i in 0..3 {
+            b.push(req(i, t));
+        }
+        assert!(b.pop_batch(&[1, 4, 8], t).is_none(), "not full, not old");
+        b.push(req(3, t));
+        let batch = b.pop_batch(&[1, 4, 8], t).unwrap();
+        assert_eq!(batch.requests.len(), 4);
+        assert_eq!(batch.compiled_batch, 4);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn batches_on_timeout() {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(5) });
+        let t0 = Instant::now();
+        b.push(req(0, t0));
+        let later = t0 + Duration::from_millis(6);
+        let batch = b.pop_batch(&[1, 8], later).unwrap();
+        assert_eq!(batch.requests.len(), 1);
+        assert_eq!(batch.compiled_batch, 1);
+    }
+
+    #[test]
+    fn fit_picks_smallest_covering() {
+        assert_eq!(Batcher::fit_compiled(3, &[1, 4, 8]), 4);
+        assert_eq!(Batcher::fit_compiled(1, &[1, 4, 8]), 1);
+        assert_eq!(Batcher::fit_compiled(9, &[1, 4, 8]), 8);
+    }
+
+    #[test]
+    fn padded_input_zero_fills() {
+        let t = Instant::now();
+        let batch = Batch { requests: vec![req(1, t), req(2, t)], compiled_batch: 4 };
+        let buf = batch.padded_input(4);
+        assert_eq!(buf.len(), 16);
+        assert_eq!(&buf[0..4], &[1.0; 4]);
+        assert_eq!(&buf[4..8], &[2.0; 4]);
+        assert_eq!(&buf[8..], &[0.0; 8]);
+    }
+
+    #[test]
+    fn truncates_to_largest_compiled() {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 16, max_wait: Duration::from_millis(0) });
+        let t = Instant::now();
+        for i in 0..12 {
+            b.push(req(i, t));
+        }
+        let batch = b.pop_batch(&[1, 8], t).unwrap();
+        assert_eq!(batch.compiled_batch, 8);
+        assert_eq!(batch.requests.len(), 8);
+        assert_eq!(b.len(), 4);
+    }
+}

@@ -1,0 +1,188 @@
+//! Adaptive early-exit cascade (Sec. III-A1): "each branch is equipped
+//! with an adaptive early-exit mechanism, where the decision to exit is
+//! based on confidence thresholds derived from intermediate feature
+//! representations."
+//!
+//! At serving time the cascade runs the cheapest exit first; rows whose
+//! softmax confidence clears the threshold are answered immediately, the
+//! rest escalate to the next (deeper) variant. Thresholds trade average
+//! compute against accuracy — the η5 depth-scaling mechanism applied per
+//! *input* instead of per *context*.
+
+use anyhow::Result;
+
+use super::server::Executor;
+
+/// One stage of the cascade: a variant id plus the confidence needed to
+/// exit at it (the last stage always answers).
+#[derive(Debug, Clone)]
+pub struct Stage {
+    pub variant: String,
+    pub threshold: f32,
+}
+
+/// Outcome statistics of a cascade run.
+#[derive(Debug, Clone, Default)]
+pub struct CascadeStats {
+    /// Rows answered per stage.
+    pub answered: Vec<usize>,
+    /// Total stage executions (batches run).
+    pub executions: usize,
+    /// Average per-row cost actually paid, in the caller's `stage_cost`
+    /// units (for incremental costs, divide by Σ stage_cost to get the
+    /// fraction of a full single-pass run).
+    pub avg_cost: f64,
+}
+
+/// Run a batch through the cascade. `inputs` is row-major `[n, elems]`;
+/// `stage_cost` gives each stage's relative MAC cost (last = 1.0).
+/// Returns per-row (prediction, confidence, stage index).
+pub fn run_cascade(
+    exec: &mut dyn Executor,
+    stages: &[Stage],
+    stage_cost: &[f64],
+    inputs: &[f32],
+    n: usize,
+) -> Result<(Vec<(usize, f32, usize)>, CascadeStats)> {
+    assert!(!stages.is_empty());
+    assert_eq!(stages.len(), stage_cost.len());
+    let elems = exec.input_elems();
+    let classes = exec.num_classes();
+    let mut out: Vec<Option<(usize, f32, usize)>> = vec![None; n];
+    let mut pending: Vec<usize> = (0..n).collect();
+    let mut stats = CascadeStats { answered: vec![0; stages.len()], ..Default::default() };
+    let mut paid = 0.0f64;
+
+    for (si, stage) in stages.iter().enumerate() {
+        if pending.is_empty() {
+            break;
+        }
+        let sizes = exec.batch_sizes(&stage.variant);
+        anyhow::ensure!(!sizes.is_empty(), "variant '{}' has no artifacts", stage.variant);
+        let last = si + 1 == stages.len();
+        let mut still = Vec::new();
+        // Run pending rows in compiled-size chunks.
+        let mut idx = 0;
+        while idx < pending.len() {
+            let chunk: Vec<usize> = pending[idx..].iter().copied().take(*sizes.iter().max().unwrap()).collect();
+            let b = super::batcher::Batcher::fit_compiled(chunk.len(), &sizes);
+            let take = chunk.len().min(b);
+            let rows = &chunk[..take];
+            let mut buf = vec![0.0f32; b * elems];
+            for (k, &r) in rows.iter().enumerate() {
+                buf[k * elems..(k + 1) * elems].copy_from_slice(&inputs[r * elems..(r + 1) * elems]);
+            }
+            let probs = exec.run(&stage.variant, b, &buf)?;
+            stats.executions += 1;
+            paid += stage_cost[si] * rows.len() as f64;
+            for (k, &r) in rows.iter().enumerate() {
+                let row = &probs[k * classes..(k + 1) * classes];
+                let (pred, conf) = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, &v)| (i, v))
+                    .unwrap_or((0, 0.0));
+                if last || conf >= stage.threshold {
+                    out[r] = Some((pred, conf, si));
+                    stats.answered[si] += 1;
+                } else {
+                    still.push(r);
+                }
+            }
+            idx += take;
+        }
+        pending = still;
+    }
+    stats.avg_cost = paid / n as f64;
+    Ok((out.into_iter().map(|o| o.expect("all rows answered")).collect(), stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Mock: variant "weak" answers class 0 with confidence = first input
+    /// value; "strong" answers class 1 with confidence 0.99.
+    struct Mock;
+
+    impl Executor for Mock {
+        fn batch_sizes(&self, _v: &str) -> Vec<usize> {
+            vec![1, 4]
+        }
+
+        fn num_classes(&self) -> usize {
+            2
+        }
+
+        fn input_elems(&self) -> usize {
+            2
+        }
+
+        fn run(&mut self, v: &str, batch: usize, input: &[f32]) -> Result<Vec<f32>> {
+            let mut out = vec![0.0f32; batch * 2];
+            for b in 0..batch {
+                if v == "weak" {
+                    let c = input[b * 2].clamp(0.0, 1.0);
+                    out[b * 2] = c;
+                    out[b * 2 + 1] = 1.0 - c;
+                } else {
+                    out[b * 2] = 0.01;
+                    out[b * 2 + 1] = 0.99;
+                }
+            }
+            Ok(out)
+        }
+    }
+
+    fn stages(th: f32) -> Vec<Stage> {
+        vec![
+            Stage { variant: "weak".into(), threshold: th },
+            Stage { variant: "strong".into(), threshold: 0.0 },
+        ]
+    }
+
+    #[test]
+    fn confident_rows_exit_early() {
+        let mut m = Mock;
+        // Rows 0,1 confident (0.9); rows 2,3 not (0.3).
+        let inputs = [0.9, 0.0, 0.9, 0.0, 0.3, 0.0, 0.3, 0.0];
+        let (res, stats) = run_cascade(&mut m, &stages(0.8), &[0.3, 1.0], &inputs, 4).unwrap();
+        assert_eq!(stats.answered, vec![2, 2]);
+        assert_eq!(res[0].2, 0); // exited at stage 0
+        assert_eq!(res[2].2, 1); // escalated
+        assert_eq!(res[2].0, 1); // strong's answer
+        // Cost: 4 rows × 0.3 + 2 rows × 1.0 = 3.2 over 4 rows.
+        assert!((stats.avg_cost - 3.2 / 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_threshold_answers_everything_at_stage0() {
+        let mut m = Mock;
+        let inputs = [0.6, 0.0, 0.7, 0.0];
+        let (res, stats) = run_cascade(&mut m, &stages(0.0), &[0.3, 1.0], &inputs, 2).unwrap();
+        assert_eq!(stats.answered, vec![2, 0]);
+        assert!(stats.avg_cost < 0.31);
+        assert!(res.iter().all(|r| r.2 == 0));
+    }
+
+    #[test]
+    fn impossible_threshold_escalates_everything() {
+        let mut m = Mock;
+        let inputs = [0.9, 0.0, 0.9, 0.0];
+        let (_, stats) = run_cascade(&mut m, &stages(1.1), &[0.3, 1.0], &inputs, 2).unwrap();
+        assert_eq!(stats.answered, vec![0, 2]);
+        // Paid both stages: 0.3 + 1.0 per row.
+        assert!((stats.avg_cost - 1.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_stage_cascade_is_plain_execution() {
+        let mut m = Mock;
+        let inputs = [0.1, 0.0];
+        let st = vec![Stage { variant: "strong".into(), threshold: 0.5 }];
+        let (res, stats) = run_cascade(&mut m, &st, &[1.0], &inputs, 1).unwrap();
+        assert_eq!(res[0].0, 1);
+        assert_eq!(stats.answered, vec![1]);
+    }
+}

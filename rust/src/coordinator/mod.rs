@@ -1,0 +1,13 @@
+//! The L3 serving coordinator: request router + dynamic batcher + worker
+//! server executing AOT artifacts via PJRT, with live variant switching
+//! actuated by the adaptation loop (Sec. III-D3's middleware role).
+
+pub mod batcher;
+pub mod cascade;
+pub mod policy;
+pub mod server;
+
+pub use batcher::{Batch, Batcher, BatcherConfig, Request};
+pub use cascade::{run_cascade, CascadeStats, Stage};
+pub use policy::{rank_variants, select_variant, ScoredVariant};
+pub use server::{spawn, Executor, Response, ServerHandle, ServingStats};

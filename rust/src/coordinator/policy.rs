@@ -1,0 +1,141 @@
+//! Serving-side variant policy: maps the adaptation loop's logic onto the
+//! concrete AOT artifact variants. Each artifact variant carries a
+//! *measured* test accuracy (from build-time eval) and a Rust IR config
+//! for Eq. 1/2 costing; the policy re-scores them per snapshot exactly
+//! like the optimizer scores Pareto candidates.
+
+use crate::device::ResourceSnapshot;
+use crate::engine::{allocate, fuse, FusionConfig};
+use crate::graph::CostProfile;
+use crate::models::{backbone, backbone_until_exit};
+use crate::optimizer::mu_from_context;
+use crate::profiler::{estimate_energy, estimate_latency};
+use crate::runtime::VariantEntry;
+
+/// A scored serving variant.
+#[derive(Debug, Clone)]
+pub struct ScoredVariant {
+    pub id: String,
+    pub accuracy: f64,
+    pub latency_s: f64,
+    pub energy_j: f64,
+    pub memory_bytes: f64,
+    pub score: f64,
+}
+
+/// Score every variant under the live snapshot; returns them sorted by
+/// descending Eq. 3 score with infeasible (memory-violating) ones last.
+pub fn rank_variants(variants: &[VariantEntry], snap: &ResourceSnapshot, mem_budget_bytes: f64) -> Vec<ScoredVariant> {
+    let mut scored: Vec<ScoredVariant> = variants
+        .iter()
+        .map(|v| {
+            let mut cfg = v.config.clone();
+            cfg.batch = 1;
+            let g = match v.exit {
+                Some(e) => backbone_until_exit(&cfg, e),
+                None => backbone(&cfg),
+            };
+            // Serve through the engine: fused graph + arena allocation.
+            let (fused, _) = fuse(&g, FusionConfig::all());
+            let cost = CostProfile::of(&fused);
+            let lat = estimate_latency(&cost, snap);
+            let en = estimate_energy(&cost, snap);
+            let mem = fused.param_bytes() as f64 + allocate(&fused).arena_bytes as f64;
+            ScoredVariant {
+                id: v.id.clone(),
+                accuracy: v.test_acc * 100.0,
+                latency_s: lat.total_s,
+                energy_j: en.total_j,
+                memory_bytes: mem,
+                score: 0.0,
+            }
+        })
+        .collect();
+
+    let mu = mu_from_context(snap.battery, 1.0 - snap.context.mem_avail_frac, 0.3);
+    let amin = scored.iter().map(|s| s.accuracy).fold(f64::MAX, f64::min);
+    let amax = scored.iter().map(|s| s.accuracy).fold(f64::MIN, f64::max);
+    let emin = scored.iter().map(|s| s.energy_j).fold(f64::MAX, f64::min);
+    let emax = scored.iter().map(|s| s.energy_j).fold(f64::MIN, f64::max);
+    for s in scored.iter_mut() {
+        let na = if amax > amin { (s.accuracy - amin) / (amax - amin) } else { 0.5 };
+        let ne = if emax > emin { (s.energy_j - emin) / (emax - emin) } else { 0.5 };
+        s.score = mu * na - (1.0 - mu) * ne;
+        if s.memory_bytes > mem_budget_bytes {
+            s.score -= 1e6; // infeasible sink
+        }
+    }
+    scored.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap_or(std::cmp::Ordering::Equal));
+    scored
+}
+
+/// Pick the best variant id for the snapshot.
+pub fn select_variant(variants: &[VariantEntry], snap: &ResourceSnapshot, mem_budget_bytes: f64) -> Option<String> {
+    rank_variants(variants, snap, mem_budget_bytes).first().map(|s| s.id.clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{device, ContextState, ResourceMonitor};
+    use crate::models::BackboneConfig;
+    use std::collections::BTreeMap;
+
+    fn entry(id: &str, widths: Vec<usize>, acc: f64, exit: Option<usize>) -> VariantEntry {
+        let cfg = BackboneConfig { stage_widths: widths.clone(), stage_depths: vec![1; widths.len()], exits: vec![true; widths.len()], ..Default::default() };
+        VariantEntry {
+            id: id.into(),
+            label: id.into(),
+            files: BTreeMap::new(),
+            test_acc: acc,
+            params: 0,
+            macs: 0,
+            config: cfg,
+            exit,
+        }
+    }
+
+    fn variants() -> Vec<VariantEntry> {
+        vec![
+            entry("big", vec![32, 64, 128], 0.92, None),
+            entry("mid", vec![16, 32, 64], 0.88, None),
+            entry("small", vec![8, 16, 32], 0.80, None),
+        ]
+    }
+
+    #[test]
+    fn full_battery_prefers_accuracy() {
+        let snap = ResourceMonitor::new(device("xiaomi-mi6").unwrap()).idle_snapshot();
+        let pick = select_variant(&variants(), &snap, f64::INFINITY).unwrap();
+        assert_eq!(pick, "big");
+    }
+
+    #[test]
+    fn low_battery_prefers_energy() {
+        let mon = ResourceMonitor::new(device("xiaomi-mi6").unwrap());
+        let mut ctx = ContextState::idle();
+        ctx.battery = 0.04;
+        let pick = select_variant(&variants(), &mon.sample(&ctx), f64::INFINITY).unwrap();
+        assert_ne!(pick, "big", "low battery must not pick the heaviest variant");
+    }
+
+    #[test]
+    fn memory_budget_excludes_heavy() {
+        let snap = ResourceMonitor::new(device("xiaomi-mi6").unwrap()).idle_snapshot();
+        let ranked = rank_variants(&variants(), &snap, f64::INFINITY);
+        let big = ranked.iter().find(|s| s.id == "big").unwrap();
+        // Budget below the big variant's memory excludes it.
+        let pick = select_variant(&variants(), &snap, big.memory_bytes * 0.9).unwrap();
+        assert_ne!(pick, "big");
+    }
+
+    #[test]
+    fn ranking_is_total() {
+        let snap = ResourceMonitor::new(device("raspberrypi-4b").unwrap()).idle_snapshot();
+        let ranked = rank_variants(&variants(), &snap, f64::INFINITY);
+        assert_eq!(ranked.len(), 3);
+        for w in ranked.windows(2) {
+            assert!(w[0].score >= w[1].score);
+        }
+    }
+}

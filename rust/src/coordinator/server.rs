@@ -1,0 +1,314 @@
+//! The serving server: a worker thread owns the executor (PJRT runtime),
+//! pulls requests from a channel through the dynamic batcher, runs the
+//! currently-selected variant, and answers each request with its
+//! prediction + confidence. A control channel switches variants live —
+//! the actuation point of the adaptation loop.
+
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::batcher::{Batcher, BatcherConfig, Request};
+
+/// Abstraction over the PJRT runtime so the server is testable without
+/// built artifacts. Not `Send`: PJRT handles are thread-affine, so the
+/// executor is *constructed inside* the worker thread (see [`spawn`]).
+pub trait Executor {
+    /// Compiled batch sizes available for the current variant.
+    fn batch_sizes(&self, variant: &str) -> Vec<usize>;
+    fn num_classes(&self) -> usize;
+    fn input_elems(&self) -> usize;
+    fn run(&mut self, variant: &str, batch: usize, input: &[f32]) -> Result<Vec<f32>>;
+}
+
+impl Executor for crate::runtime::ModelRuntime {
+    fn batch_sizes(&self, variant: &str) -> Vec<usize> {
+        self.manifest
+            .variant(variant)
+            .map(|v| v.files.keys().copied().collect())
+            .unwrap_or_default()
+    }
+
+    fn num_classes(&self) -> usize {
+        self.manifest.num_classes
+    }
+
+    fn input_elems(&self) -> usize {
+        self.manifest.input_hw * self.manifest.input_hw * self.manifest.in_channels
+    }
+
+    fn run(&mut self, variant: &str, batch: usize, input: &[f32]) -> Result<Vec<f32>> {
+        self.execute(variant, batch, input)
+    }
+}
+
+/// Answer to one request.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub pred: usize,
+    pub confidence: f32,
+    pub variant: String,
+    /// Queue + execution time for this request.
+    pub latency: Duration,
+}
+
+enum Msg {
+    Infer(Request, Sender<Response>),
+    SwitchVariant(String),
+    Shutdown,
+}
+
+/// Handle used by clients + the adaptation loop.
+pub struct ServerHandle {
+    tx: Sender<Msg>,
+    worker: Option<JoinHandle<ServingStats>>,
+    next_id: u64,
+}
+
+/// Aggregate serving statistics from the worker.
+#[derive(Debug, Clone, Default)]
+pub struct ServingStats {
+    pub served: usize,
+    pub batches: usize,
+    pub latencies_s: Vec<f64>,
+    pub switches: usize,
+}
+
+impl ServingStats {
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.latencies_s.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.latencies_s.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((v.len() as f64 - 1.0) * p).round() as usize;
+        v[idx]
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.served as f64 / self.batches as f64
+        }
+    }
+}
+
+/// Spawn the serving worker. `make_exec` runs *on the worker thread*
+/// (PJRT clients are thread-affine and not `Send`).
+pub fn spawn<F>(make_exec: F, initial_variant: String, cfg: BatcherConfig) -> ServerHandle
+where
+    F: FnOnce() -> Box<dyn Executor> + Send + 'static,
+{
+    let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
+    let worker = std::thread::spawn(move || {
+        let mut exec = make_exec();
+        let mut batcher = Batcher::new(cfg);
+        let mut variant = initial_variant;
+        let mut stats = ServingStats::default();
+        let mut waiting: Vec<(u64, Sender<Response>)> = Vec::new();
+        let elems = exec.input_elems();
+        let classes = exec.num_classes();
+        'outer: loop {
+            // Drain the channel without blocking longer than the batch wait.
+            let msg = if batcher.is_empty() {
+                match rx.recv() {
+                    Ok(m) => Some(m),
+                    Err(_) => break 'outer,
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(m) => Some(m),
+                    Err(TryRecvError::Empty) => None,
+                    Err(TryRecvError::Disconnected) => break 'outer,
+                }
+            };
+            match msg {
+                Some(Msg::Infer(req, resp_tx)) => {
+                    waiting.push((req.id, resp_tx));
+                    batcher.push(req);
+                }
+                Some(Msg::SwitchVariant(v)) => {
+                    if v != variant {
+                        variant = v;
+                        stats.switches += 1;
+                    }
+                }
+                Some(Msg::Shutdown) => break 'outer,
+                None => {}
+            }
+            let sizes = exec.batch_sizes(&variant);
+            if sizes.is_empty() {
+                continue;
+            }
+            if let Some(batch) = batcher.pop_batch(&sizes, Instant::now()) {
+                let input = batch.padded_input(elems);
+                match exec.run(&variant, batch.compiled_batch, &input) {
+                    Ok(probs) => {
+                        let now = Instant::now();
+                        stats.batches += 1;
+                        for (i, req) in batch.requests.iter().enumerate() {
+                            let row = &probs[i * classes..(i + 1) * classes];
+                            let (pred, conf) = row
+                                .iter()
+                                .enumerate()
+                                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                                .map(|(k, &v)| (k, v))
+                                .unwrap_or((0, 0.0));
+                            let latency = now.duration_since(req.enqueued);
+                            stats.served += 1;
+                            stats.latencies_s.push(latency.as_secs_f64());
+                            if let Some(pos) = waiting.iter().position(|(id, _)| *id == req.id) {
+                                let (_, tx) = waiting.swap_remove(pos);
+                                let _ = tx.send(Response {
+                                    id: req.id,
+                                    pred,
+                                    confidence: conf,
+                                    variant: variant.clone(),
+                                    latency,
+                                });
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        eprintln!("batch execution failed: {e:#}");
+                        for req in &batch.requests {
+                            if let Some(pos) = waiting.iter().position(|(id, _)| *id == req.id) {
+                                waiting.swap_remove(pos);
+                            }
+                        }
+                    }
+                }
+            } else if !batcher.is_empty() {
+                // Waiting for the batch window to fill.
+                std::thread::sleep(Duration::from_micros(200));
+            }
+        }
+        stats
+    });
+    ServerHandle { tx, worker: Some(worker), next_id: 0 }
+}
+
+impl ServerHandle {
+    /// Submit a request; returns a receiver for the response.
+    pub fn submit(&mut self, input: Vec<f32>) -> Receiver<Response> {
+        let (tx, rx) = channel();
+        self.next_id += 1;
+        let req = Request { id: self.next_id, input, enqueued: Instant::now() };
+        let _ = self.tx.send(Msg::Infer(req, tx));
+        rx
+    }
+
+    /// Actuate a variant switch (the adaptation loop calls this).
+    pub fn switch_variant(&self, variant: &str) {
+        let _ = self.tx.send(Msg::SwitchVariant(variant.to_string()));
+    }
+
+    /// Stop the worker and collect statistics.
+    pub fn shutdown(mut self) -> ServingStats {
+        let _ = self.tx.send(Msg::Shutdown);
+        self.worker.take().map(|w| w.join().unwrap_or_default()).unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic fake model: class = argmax over first `classes`
+    /// input values.
+    struct MockExec {
+        classes: usize,
+        elems: usize,
+        delay: Duration,
+    }
+
+    impl Executor for MockExec {
+        fn batch_sizes(&self, _v: &str) -> Vec<usize> {
+            vec![1, 4, 8]
+        }
+
+        fn num_classes(&self) -> usize {
+            self.classes
+        }
+
+        fn input_elems(&self) -> usize {
+            self.elems
+        }
+
+        fn run(&mut self, _v: &str, batch: usize, input: &[f32]) -> Result<Vec<f32>> {
+            std::thread::sleep(self.delay);
+            let mut out = vec![0.0f32; batch * self.classes];
+            for b in 0..batch {
+                let row = &input[b * self.elems..b * self.elems + self.classes];
+                let total: f32 = row.iter().map(|x| x.exp()).sum();
+                for (k, &x) in row.iter().enumerate() {
+                    out[b * self.classes + k] = x.exp() / total;
+                }
+            }
+            Ok(out)
+        }
+    }
+
+    fn mock() -> impl FnOnce() -> Box<dyn Executor> + Send + 'static {
+        || Box::new(MockExec { classes: 4, elems: 16, delay: Duration::from_micros(300) }) as Box<dyn Executor>
+    }
+
+    #[test]
+    fn serves_single_request() {
+        let mut h = spawn(mock(), "v".into(), BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) });
+        let mut input = vec![0.0f32; 16];
+        input[2] = 5.0;
+        let rx = h.submit(input);
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.pred, 2);
+        assert!(resp.confidence > 0.5);
+        let stats = h.shutdown();
+        assert_eq!(stats.served, 1);
+    }
+
+    #[test]
+    fn batches_concurrent_requests() {
+        let mut h = spawn(mock(), "v".into(), BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(20) });
+        let mut rxs = Vec::new();
+        for i in 0..8 {
+            let mut input = vec![0.0f32; 16];
+            input[i % 4] = 3.0;
+            rxs.push((i % 4, h.submit(input)));
+        }
+        for (want, rx) in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(resp.pred, want);
+        }
+        let stats = h.shutdown();
+        assert_eq!(stats.served, 8);
+        assert!(stats.batches <= 4, "expected batching, got {} batches", stats.batches);
+        assert!(stats.mean_batch_size() >= 2.0);
+    }
+
+    #[test]
+    fn variant_switch_takes_effect() {
+        let mut h = spawn(mock(), "a".into(), BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) });
+        let rx = h.submit(vec![1.0; 16]);
+        let r1 = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(r1.variant, "a");
+        h.switch_variant("b");
+        // Give the worker a moment to process the control message.
+        std::thread::sleep(Duration::from_millis(5));
+        let rx = h.submit(vec![1.0; 16]);
+        let r2 = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(r2.variant, "b");
+        let stats = h.shutdown();
+        assert_eq!(stats.switches, 1);
+    }
+
+    #[test]
+    fn stats_percentiles() {
+        let stats = ServingStats { served: 4, batches: 2, latencies_s: vec![0.1, 0.2, 0.3, 0.4], switches: 0 };
+        assert!((stats.percentile(0.5) - 0.3).abs() < 1e-9 || (stats.percentile(0.5) - 0.2).abs() < 1e-9);
+        assert!((stats.percentile(1.0) - 0.4).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,251 @@
+//! Runtime context dynamics (Sec. II-A "dynamics"): DVFS, battery drain,
+//! competing processes, and the resulting cache/memory availability.
+//!
+//! Substitution note: the paper observes these on real Android/AIoT
+//! devices; we generate them with a seeded stochastic process exposing the
+//! same observables the adaptation loop consumes (frequency level, free
+//! memory fraction, cache share, battery %). All randomness is
+//! deterministic given the seed so experiments are reproducible.
+
+use crate::util::Rng;
+
+use super::profile::DeviceProfile;
+
+/// Instantaneous runtime context observed by the resource monitor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ContextState {
+    /// Current DVFS frequency as a fraction of max.
+    pub freq_frac: f64,
+    /// Number of competing foreground processes.
+    pub competing_procs: usize,
+    /// Fraction of RAM available to the DL task.
+    pub mem_avail_frac: f64,
+    /// Fraction of last-level cache effectively ours (round-robin share).
+    pub cache_share: f64,
+    /// Battery level in [0, 1]; 1.0 for wall-powered devices.
+    pub battery: f64,
+    /// Processor temperature (°C) — drives DVFS throttling.
+    pub temp_c: f64,
+    /// Current network bandwidth to peers (Mbit/s).
+    pub net_mbps: f64,
+}
+
+impl ContextState {
+    /// A benign initial context: max frequency, idle device.
+    pub fn idle() -> Self {
+        ContextState {
+            freq_frac: 1.0,
+            competing_procs: 0,
+            mem_avail_frac: 0.9,
+            cache_share: 1.0,
+            battery: 1.0,
+            temp_c: 40.0,
+            net_mbps: 100.0,
+        }
+    }
+}
+
+/// Seeded stochastic context generator for one device.
+///
+/// Per tick (the paper's loop runs ~1 Hz):
+/// - competing processes arrive/leave (birth–death chain);
+/// - cache share = 1/(1+procs) (round-robin scheduling, Sec. III-D1);
+/// - temperature integrates load; crossing 70 °C triggers DVFS down,
+///   cooling below 55 °C steps back up;
+/// - battery drains proportionally to load (plus the DL task's own energy,
+///   reported via [`DynamicsSim::consume_energy`]);
+/// - network bandwidth does a bounded random walk.
+pub struct DynamicsSim {
+    pub device: DeviceProfile,
+    pub state: ContextState,
+    rng: Rng,
+    /// Exogenous load in [0,1] added by competing processes.
+    pub load: f64,
+    /// mWh drained so far.
+    drained_mwh: f64,
+}
+
+impl DynamicsSim {
+    pub fn new(device: DeviceProfile, seed: u64) -> Self {
+        let battery = if device.battery_mah.is_some() { 1.0 } else { 1.0 };
+        DynamicsSim {
+            device,
+            state: ContextState { battery, ..ContextState::idle() },
+            rng: Rng::seed_from_u64(seed),
+            load: 0.0,
+            drained_mwh: 0.0,
+        }
+    }
+
+    /// Report DL-task energy spent this tick (joules) so it shows up in the
+    /// battery trace.
+    pub fn consume_energy(&mut self, joules: f64) {
+        // mAh→mWh at 3.7 V nominal.
+        self.drained_mwh += joules / 3.6;
+        self.update_battery();
+    }
+
+    fn update_battery(&mut self) {
+        if let Some(mah) = self.device.battery_mah {
+            let capacity_mwh = mah * 3.7;
+            self.state.battery = (1.0 - self.drained_mwh / capacity_mwh).clamp(0.0, 1.0);
+        }
+    }
+
+    /// Advance one tick (~1 s of simulated time).
+    pub fn tick(&mut self) -> &ContextState {
+        // Birth–death chain for competing processes.
+        let p: f64 = self.rng.gen();
+        if p < 0.15 && self.state.competing_procs < 6 {
+            self.state.competing_procs += 1;
+        } else if p > 0.80 && self.state.competing_procs > 0 {
+            self.state.competing_procs -= 1;
+        }
+        self.load = (self.state.competing_procs as f64 / 6.0).clamp(0.0, 1.0);
+
+        // Round-robin cache sharing among us + competitors.
+        self.state.cache_share = 1.0 / (1.0 + self.state.competing_procs as f64);
+
+        // Free memory shrinks with competitors (each takes ~8%).
+        let noise: f64 = self.rng.gen_range(-0.02, 0.02);
+        self.state.mem_avail_frac =
+            (0.9 - 0.08 * self.state.competing_procs as f64 + noise).clamp(0.1, 0.95);
+
+        // Thermal integration + DVFS ladder.
+        let heat = 8.0 * (self.load + 0.3 * self.state.freq_frac);
+        let cool = 0.12 * (self.state.temp_c - 35.0);
+        self.state.temp_c = (self.state.temp_c + heat - cool).clamp(30.0, 95.0);
+        let levels = &self.device.dvfs_levels;
+        let idx = levels.iter().position(|&l| (l - self.state.freq_frac).abs() < 1e-9).unwrap_or(0);
+        if self.state.temp_c > 70.0 && idx + 1 < levels.len() {
+            self.state.freq_frac = levels[idx + 1];
+        } else if self.state.temp_c < 55.0 && idx > 0 {
+            self.state.freq_frac = levels[idx - 1];
+        }
+
+        // Background battery drain (screen, sensors): ~0.2 mWh/tick·load.
+        self.drained_mwh += 0.05 + 0.2 * self.load;
+        self.update_battery();
+
+        // Bandwidth random walk in [5, 200] Mbit/s.
+        let step: f64 = self.rng.gen_range(-10.0, 10.0);
+        self.state.net_mbps = (self.state.net_mbps + step).clamp(5.0, 200.0);
+
+        &self.state
+    }
+
+    /// Run `n` ticks, returning the trace (used by Fig. 13 regeneration).
+    pub fn trace(&mut self, n: usize) -> Vec<ContextState> {
+        (0..n).map(|_| self.tick().clone()).collect()
+    }
+}
+
+/// A scripted context schedule for reproducible scenario experiments
+/// (Table II's fixed memory budgets, Fig. 13's e1→e3 events).
+#[derive(Debug, Clone)]
+pub struct ScriptedContext {
+    pub states: Vec<ContextState>,
+    pub pos: usize,
+}
+
+impl ScriptedContext {
+    pub fn new(states: Vec<ContextState>) -> Self {
+        assert!(!states.is_empty());
+        ScriptedContext { states, pos: 0 }
+    }
+
+    /// Fixed memory-budget scenario (Table II): everything idle except the
+    /// memory fraction.
+    pub fn memory_budget(frac: f64) -> Self {
+        ScriptedContext::new(vec![ContextState { mem_avail_frac: frac, ..ContextState::idle() }])
+    }
+
+    pub fn tick(&mut self) -> &ContextState {
+        let s = &self.states[self.pos.min(self.states.len() - 1)];
+        self.pos += 1;
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profile::device;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let d = device("raspberrypi-4b").unwrap();
+        let t1 = DynamicsSim::new(d.clone(), 42).trace(50);
+        let t2 = DynamicsSim::new(d, 42).trace(50);
+        assert_eq!(t1, t2);
+    }
+
+    #[test]
+    fn different_seed_differs() {
+        let d = device("raspberrypi-4b").unwrap();
+        let t1 = DynamicsSim::new(d.clone(), 1).trace(50);
+        let t2 = DynamicsSim::new(d, 2).trace(50);
+        assert_ne!(t1, t2);
+    }
+
+    #[test]
+    fn battery_monotonically_drains() {
+        let d = device("xiaomi-mi6").unwrap();
+        let mut sim = DynamicsSim::new(d, 7);
+        let trace = sim.trace(200);
+        for w in trace.windows(2) {
+            assert!(w[1].battery <= w[0].battery + 1e-12);
+        }
+        assert!(trace.last().unwrap().battery < 1.0);
+    }
+
+    #[test]
+    fn energy_consumption_drains_battery_faster() {
+        let d = device("xiaomi-mi6").unwrap();
+        let mut idle = DynamicsSim::new(d.clone(), 3);
+        let mut busy = DynamicsSim::new(d, 3);
+        for _ in 0..100 {
+            idle.tick();
+            busy.tick();
+            busy.consume_energy(5.0);
+        }
+        assert!(busy.state.battery < idle.state.battery);
+    }
+
+    #[test]
+    fn dvfs_throttles_under_sustained_load() {
+        let d = device("raspberrypi-4b").unwrap();
+        let mut sim = DynamicsSim::new(d, 11);
+        // Force heavy load by pinning competitors high.
+        sim.state.competing_procs = 6;
+        let mut throttled = false;
+        for _ in 0..100 {
+            sim.state.competing_procs = 6;
+            sim.tick();
+            if sim.state.freq_frac < 1.0 {
+                throttled = true;
+            }
+        }
+        assert!(throttled, "sustained load should trigger DVFS");
+    }
+
+    #[test]
+    fn cache_share_reflects_round_robin() {
+        let d = device("raspberrypi-4b").unwrap();
+        let mut sim = DynamicsSim::new(d, 5);
+        sim.state.competing_procs = 3;
+        sim.tick();
+        // After the tick procs may have changed by ±1; share must equal
+        // 1/(1+procs) for the post-tick count.
+        let expect = 1.0 / (1.0 + sim.state.competing_procs as f64);
+        assert!((sim.state.cache_share - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scripted_context_repeats_last() {
+        let mut s = ScriptedContext::memory_budget(0.5);
+        for _ in 0..5 {
+            assert!((s.tick().mem_avail_frac - 0.5).abs() < 1e-9);
+        }
+    }
+}

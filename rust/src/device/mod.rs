@@ -1,0 +1,12 @@
+//! Device simulator substrate: hardware profiles for the paper's 15+
+//! evaluation devices, runtime context dynamics (DVFS, battery,
+//! contention), and the resource availability monitor of the automated
+//! adaptation loop.
+
+pub mod dynamics;
+pub mod monitor;
+pub mod profile;
+
+pub use dynamics::{ContextState, DynamicsSim, ScriptedContext};
+pub use monitor::{ResourceMonitor, ResourceSnapshot};
+pub use profile::{all_devices, device, table1_devices, DeviceProfile, ProcKind};

@@ -1,0 +1,86 @@
+//! Resource availability monitor (Sec. III-D, Fig. 6): samples the device
+//! dynamics into the snapshot the profiler and optimizer consume.
+
+
+use super::dynamics::ContextState;
+use super::profile::DeviceProfile;
+
+/// What the automated loop sees each tick: absolute budgets derived from
+/// the device profile × current context.
+#[derive(Debug, Clone)]
+pub struct ResourceSnapshot {
+    pub device: String,
+    /// Effective MAC throughput right now (GMAC/s, after DVFS).
+    pub gmacs: f64,
+    /// Cache bytes effectively available (after contention).
+    pub cache_bytes: f64,
+    /// RAM bytes available to the DL task.
+    pub mem_budget_bytes: f64,
+    /// Battery in [0,1] (1.0 when wall-powered).
+    pub battery: f64,
+    /// Network bandwidth to peers (bytes/s).
+    pub net_bytes_per_s: f64,
+    /// Raw context (kept for logging / traces).
+    pub context: ContextState,
+}
+
+/// Stateless sampler: profile × context → snapshot.
+pub struct ResourceMonitor {
+    pub profile: DeviceProfile,
+}
+
+impl ResourceMonitor {
+    pub fn new(profile: DeviceProfile) -> Self {
+        ResourceMonitor { profile }
+    }
+
+    pub fn sample(&self, ctx: &ContextState) -> ResourceSnapshot {
+        ResourceSnapshot {
+            device: self.profile.name.clone(),
+            gmacs: self.profile.gmacs_at(ctx.freq_frac),
+            cache_bytes: self.profile.cache_kb * 1024.0 * ctx.cache_share,
+            mem_budget_bytes: self.profile.memory_mb * 1024.0 * 1024.0 * ctx.mem_avail_frac,
+            battery: ctx.battery,
+            net_bytes_per_s: ctx.net_mbps * 1e6 / 8.0,
+            context: ctx.clone(),
+        }
+    }
+
+    /// Snapshot of an idle device (unit tests, offline calibration).
+    pub fn idle_snapshot(&self) -> ResourceSnapshot {
+        self.sample(&ContextState::idle())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profile::device;
+
+    #[test]
+    fn snapshot_scales_with_dvfs() {
+        let m = ResourceMonitor::new(device("raspberrypi-4b").unwrap());
+        let mut ctx = ContextState::idle();
+        let full = m.sample(&ctx);
+        ctx.freq_frac = 0.5;
+        let half = m.sample(&ctx);
+        assert!((half.gmacs - full.gmacs * 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn contention_shrinks_cache() {
+        let m = ResourceMonitor::new(device("raspberrypi-4b").unwrap());
+        let mut ctx = ContextState::idle();
+        ctx.cache_share = 0.25;
+        let snap = m.sample(&ctx);
+        assert!((snap.cache_bytes - 1024.0 * 1024.0 * 0.25).abs() < 1.0);
+    }
+
+    #[test]
+    fn memory_budget_in_bytes() {
+        let m = ResourceMonitor::new(device("raspberrypi-4b").unwrap());
+        let snap = m.idle_snapshot();
+        // 4 GiB * 0.9 available
+        assert!((snap.mem_budget_bytes - 4096.0 * 1024.0 * 1024.0 * 0.9).abs() < 1.0);
+    }
+}

@@ -1,0 +1,212 @@
+//! Hardware profiles for the 15+ mobile/embedded devices the paper
+//! evaluates on (Sec. IV-A, Table I).
+//!
+//! Substitution note (see DESIGN.md): we do not have the physical boards,
+//! so each device is a parameterized analytic model — peak MAC throughput,
+//! cache size, DRAM/cache bandwidth, shared-memory presence, battery and
+//! per-MAC energy. The paper's own profiler (Sec. III-D1) reduces hardware
+//! to exactly these parameters (Eq. 1/2 with σ1:σ2:σ3:σSM = 1:6:200:2), so
+//! relative rankings across devices are preserved.
+
+
+/// Processor class; GPUs have shared memory (σSM term), CPUs do not.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ProcKind {
+    Cpu,
+    Gpu,
+    Npu,
+}
+
+/// Static hardware description of one device.
+#[derive(Debug, Clone)]
+pub struct DeviceProfile {
+    pub name: String,
+    pub proc: ProcKind,
+    /// Peak multiply-accumulate throughput at max frequency (GMAC/s).
+    pub peak_gmacs: f64,
+    /// Number of cores usable for cross-core operator parallelism.
+    pub cores: usize,
+    /// Whether a co-processor (GPU/DSP) is present for CPU+GPU parallelism.
+    pub coprocessor: Option<ProcKind>,
+    /// Relative speed of the coprocessor vs the main processor.
+    pub coproc_speed_ratio: f64,
+    /// Last-level cache size (KiB).
+    pub cache_kb: f64,
+    /// DRAM bandwidth (GB/s).
+    pub dram_gbps: f64,
+    /// Cache bandwidth (GB/s); typically ~10× DRAM.
+    pub cache_gbps: f64,
+    /// GPU-style shared memory present (adds the σSM energy term).
+    pub has_shared_mem: bool,
+    /// RAM capacity (MiB) — the memory budget ceiling.
+    pub memory_mb: f64,
+    /// Battery capacity (mAh); None for wall-powered boxes/boards.
+    pub battery_mah: Option<f64>,
+    /// Absolute energy of one MAC at this device (nanojoules) = σ1 scale.
+    pub nj_per_mac: f64,
+    /// DVFS frequency levels as fractions of max, descending.
+    pub dvfs_levels: Vec<f64>,
+}
+
+impl DeviceProfile {
+    fn new(name: &str, proc: ProcKind, peak_gmacs: f64, cores: usize, cache_kb: f64, dram_gbps: f64, memory_mb: f64, battery_mah: Option<f64>, nj_per_mac: f64) -> Self {
+        DeviceProfile {
+            name: name.into(),
+            proc,
+            peak_gmacs,
+            cores,
+            coprocessor: None,
+            coproc_speed_ratio: 0.0,
+            cache_kb,
+            dram_gbps,
+            cache_gbps: dram_gbps * 8.0,
+            has_shared_mem: proc == ProcKind::Gpu,
+            memory_mb,
+            battery_mah,
+            nj_per_mac,
+            dvfs_levels: vec![1.0, 0.8, 0.6, 0.4],
+        }
+    }
+
+    fn with_coproc(mut self, k: ProcKind, ratio: f64) -> Self {
+        self.coprocessor = Some(k);
+        self.coproc_speed_ratio = ratio;
+        self
+    }
+
+    /// Energy-coefficient ratios from the paper: σ1:σ2:σ3(:σSM) =
+    /// 1:6:200(:2) — MAC : cache access : DRAM access : shared memory.
+    pub fn sigma_ratios(&self) -> (f64, f64, f64, f64) {
+        if self.has_shared_mem {
+            (1.0, 6.0, 200.0, 2.0)
+        } else {
+            (1.0, 6.0, 200.0, 0.0)
+        }
+    }
+
+    /// MAC throughput at a DVFS level (GMAC/s).
+    pub fn gmacs_at(&self, freq_frac: f64) -> f64 {
+        self.peak_gmacs * freq_frac
+    }
+
+    /// Arithmetic-intensity knee of the roofline: MACs/byte at which the
+    /// device transitions from memory- to compute-bound.
+    pub fn roofline_knee(&self) -> f64 {
+        self.peak_gmacs / self.dram_gbps
+    }
+}
+
+/// The full device zoo: 12 mobile devices (Table I) + 3 embedded boards
+/// (Fig. 9) + the Snapdragon 855 phone (Table IV) + case-study platforms.
+pub fn all_devices() -> Vec<DeviceProfile> {
+    vec![
+        // --- Embedded boards (Fig. 8/9 hosts) ---
+        DeviceProfile::new("raspberrypi-4b", ProcKind::Cpu, 8.0, 4, 1024.0, 4.0, 4096.0, None, 1.1),
+        DeviceProfile::new("jetson-nano", ProcKind::Gpu, 24.0, 4, 2048.0, 25.6, 4096.0, None, 0.55)
+            .with_coproc(ProcKind::Cpu, 0.3),
+        DeviceProfile::new("jetson-nx", ProcKind::Gpu, 105.0, 6, 4096.0, 51.2, 8192.0, None, 0.35)
+            .with_coproc(ProcKind::Cpu, 0.2),
+        // --- Phones (Table I) ---
+        DeviceProfile::new("samsung-note5", ProcKind::Cpu, 12.0, 8, 2048.0, 12.0, 4096.0, Some(3000.0), 0.9)
+            .with_coproc(ProcKind::Gpu, 0.8),
+        DeviceProfile::new("huawei-p9", ProcKind::Cpu, 10.0, 8, 2048.0, 10.0, 3072.0, Some(3000.0), 0.95)
+            .with_coproc(ProcKind::Gpu, 0.6),
+        DeviceProfile::new("huawei-pra-a100", ProcKind::Cpu, 9.0, 8, 1024.0, 9.6, 3072.0, Some(3000.0), 1.0)
+            .with_coproc(ProcKind::Gpu, 0.5),
+        DeviceProfile::new("xiaomi-mi6", ProcKind::Cpu, 18.0, 8, 2048.0, 14.9, 6144.0, Some(3350.0), 0.7)
+            .with_coproc(ProcKind::Gpu, 0.9),
+        DeviceProfile::new("xiaomi-mi5s", ProcKind::Cpu, 14.0, 4, 1536.0, 14.9, 4096.0, Some(3200.0), 0.8)
+            .with_coproc(ProcKind::Gpu, 0.7),
+        DeviceProfile::new("xiaomi-redmi3s", ProcKind::Cpu, 6.0, 8, 1024.0, 7.4, 3072.0, Some(4100.0), 1.2),
+        DeviceProfile::new("snapdragon-855", ProcKind::Cpu, 28.0, 8, 2048.0, 34.1, 8192.0, Some(3700.0), 0.5)
+            .with_coproc(ProcKind::Gpu, 1.1),
+        // --- Wearables (Table I) ---
+        DeviceProfile::new("huawei-watch-h2p", ProcKind::Cpu, 1.2, 4, 256.0, 3.2, 768.0, Some(420.0), 2.5),
+        DeviceProfile::new("sony-watch-sw3", ProcKind::Cpu, 0.9, 4, 256.0, 2.1, 512.0, Some(420.0), 2.8),
+        // --- Dev boards / smart-home boxes (Table I) ---
+        DeviceProfile::new("firefly-rk3399", ProcKind::Cpu, 9.5, 6, 1024.0, 9.6, 4096.0, None, 1.0)
+            .with_coproc(ProcKind::Gpu, 0.6),
+        DeviceProfile::new("firefly-rk3288", ProcKind::Cpu, 5.0, 4, 1024.0, 6.4, 2048.0, None, 1.3),
+        DeviceProfile::new("huawei-box", ProcKind::Cpu, 4.0, 4, 512.0, 6.4, 2048.0, None, 1.4),
+        DeviceProfile::new("xiaomi-box3s", ProcKind::Cpu, 4.5, 4, 512.0, 6.4, 2048.0, None, 1.35),
+        // --- Case-study platforms (Sec. IV-G): vehicle + drone ---
+        DeviceProfile::new("jetson-xavier-nx-vehicle", ProcKind::Gpu, 105.0, 6, 4096.0, 51.2, 8192.0, Some(10000.0), 0.35)
+            .with_coproc(ProcKind::Cpu, 0.2),
+        DeviceProfile::new("jetson-xavier-nx-drone", ProcKind::Gpu, 105.0, 6, 4096.0, 51.2, 8192.0, Some(5200.0), 0.35)
+            .with_coproc(ProcKind::Cpu, 0.2),
+    ]
+}
+
+/// Look up a device profile by name.
+pub fn device(name: &str) -> Option<DeviceProfile> {
+    all_devices().into_iter().find(|d| d.name == name)
+}
+
+/// The 12 Table-I devices, in the paper's row order.
+pub fn table1_devices() -> Vec<DeviceProfile> {
+    [
+        "samsung-note5",
+        "huawei-p9",
+        "huawei-pra-a100",
+        "xiaomi-mi6",
+        "xiaomi-mi5s",
+        "xiaomi-redmi3s",
+        "huawei-watch-h2p",
+        "sony-watch-sw3",
+        "firefly-rk3399",
+        "firefly-rk3288",
+        "huawei-box",
+        "xiaomi-box3s",
+    ]
+    .iter()
+    .map(|n| device(n).unwrap())
+    .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_has_at_least_15_devices() {
+        assert!(all_devices().len() >= 15);
+    }
+
+    #[test]
+    fn names_unique() {
+        let devs = all_devices();
+        let mut names: Vec<_> = devs.iter().map(|d| d.name.clone()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), devs.len());
+    }
+
+    #[test]
+    fn rpi_slower_than_jetson_nano() {
+        // Paper Sec. II-A: MobileNet inference 615 ms on RPi4 vs 202 ms on
+        // Nano, i.e. ~3×. Peak throughput ratio should reflect that.
+        let rpi = device("raspberrypi-4b").unwrap();
+        let nano = device("jetson-nano").unwrap();
+        assert!(nano.peak_gmacs / rpi.peak_gmacs >= 2.5);
+    }
+
+    #[test]
+    fn gpu_devices_have_shared_mem_sigma() {
+        let nano = device("jetson-nano").unwrap();
+        assert_eq!(nano.sigma_ratios().3, 2.0);
+        let rpi = device("raspberrypi-4b").unwrap();
+        assert_eq!(rpi.sigma_ratios().3, 0.0);
+    }
+
+    #[test]
+    fn table1_has_12_rows() {
+        assert_eq!(table1_devices().len(), 12);
+    }
+
+    #[test]
+    fn wearables_are_weakest() {
+        let devs = all_devices();
+        let sw3 = device("sony-watch-sw3").unwrap();
+        assert!(devs.iter().all(|d| d.peak_gmacs >= sw3.peak_gmacs));
+    }
+}

@@ -1,0 +1,337 @@
+//! Runtime operator fusion (Sec. III-C1 ❶): the five fusion strategies —
+//! linear (FC+activation), convolution–BatchNorm, element-wise chains,
+//! channel-wise (pointwise conv + epilogue), and reduction fusion —
+//! applied as graph rewrites that merge adjacent ops into `Fused*` nodes.
+//!
+//! Fusion wins because the intermediate feature map is neither written to
+//! nor re-read from memory: the fused node's `node_mem_bytes` counts one
+//! input read and one output write instead of two of each, and the
+//! elementwise epilogue's per-element pass disappears — exactly the
+//! savings the paper's engine exploits.
+
+use std::collections::HashMap;
+
+use crate::graph::{Graph, NodeId, Op};
+
+/// Which of the five strategies to enable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FusionConfig {
+    pub linear: bool,
+    pub conv_bn: bool,
+    pub elementwise: bool,
+    pub channelwise: bool,
+    pub reduction: bool,
+}
+
+impl FusionConfig {
+    pub fn all() -> Self {
+        FusionConfig { linear: true, conv_bn: true, elementwise: true, channelwise: true, reduction: true }
+    }
+
+    pub fn none() -> Self {
+        FusionConfig { linear: false, conv_bn: false, elementwise: false, channelwise: false, reduction: false }
+    }
+}
+
+/// Statistics from a fusion pass.
+#[derive(Debug, Clone, Default)]
+pub struct FusionStats {
+    pub conv_bn: usize,
+    pub linear: usize,
+    pub elementwise: usize,
+    pub channelwise: usize,
+    pub reduction: usize,
+}
+
+impl FusionStats {
+    pub fn total(&self) -> usize {
+        self.conv_bn + self.linear + self.elementwise + self.channelwise + self.reduction
+    }
+}
+
+/// Apply fusion; returns the fused graph and statistics.
+///
+/// Only single-consumer intermediates are fused (a tensor feeding two ops
+/// must materialize), mirroring real engines. The pass runs
+/// progressively — conv-anchored fusions first, then elementwise chains,
+/// then reductions — "progressively attempts operator fusion across
+/// different types" per the paper.
+pub fn fuse(g: &Graph, cfg: FusionConfig) -> (Graph, FusionStats) {
+    let mut stats = FusionStats::default();
+    let consumers = g.consumers();
+    let single = |id: NodeId| consumers[id].len() == 1;
+
+    // Plan: mark nodes consumed into a fusion so they are skipped, and
+    // record the fused op to emit at the anchor position.
+    #[derive(Clone)]
+    enum Plan {
+        Skip,
+        Emit(Op, String),
+    }
+    let mut plan: HashMap<NodeId, Plan> = HashMap::new();
+
+    for n in &g.nodes {
+        if plan.contains_key(&n.id) {
+            continue;
+        }
+        match &n.op {
+            // ── conv-anchored: Conv2d [+BN] [+Act] ─────────────────────
+            Op::Conv2d(attrs) => {
+                let mut chain: Vec<NodeId> = vec![];
+                let mut cur = n.id;
+                let mut bn = false;
+                let mut act = None;
+                // BN directly after?
+                if cfg.conv_bn && single(cur) {
+                    let next = consumers[cur][0];
+                    if matches!(g.node(next).op, Op::BatchNorm) && !plan.contains_key(&next) {
+                        bn = true;
+                        chain.push(next);
+                        cur = next;
+                    }
+                }
+                // Activation after?
+                if (cfg.conv_bn || cfg.channelwise || cfg.elementwise) && single(cur) {
+                    let next = consumers[cur][0];
+                    if let Op::Act(a) = g.node(next).op {
+                        if !plan.contains_key(&next) {
+                            act = Some(a);
+                            chain.push(next);
+                        }
+                    }
+                }
+                let is_pointwise = attrs.kernel == (1, 1);
+                // conv+BN → conv-BN strategy; conv+act (no BN) → the
+                // element-wise strategy (epilogue fusion) for dense convs
+                // or the channel-wise strategy for pointwise convs.
+                let eligible = if bn {
+                    cfg.conv_bn
+                } else if act.is_some() {
+                    if is_pointwise { cfg.channelwise } else { cfg.elementwise }
+                } else {
+                    false
+                };
+                if eligible {
+                    let fused = if !bn {
+                        if is_pointwise {
+                            stats.channelwise += 1;
+                        } else {
+                            stats.elementwise += 1;
+                        }
+                        Op::FusedPointwise { conv: attrs.clone(), act }
+                    } else {
+                        stats.conv_bn += 1;
+                        if is_pointwise {
+                            stats.channelwise += 1;
+                        }
+                        Op::FusedConvBn { conv: attrs.clone(), act }
+                    };
+                    let last = *chain.last().unwrap();
+                    for &c in &chain {
+                        plan.insert(c, Plan::Skip);
+                    }
+                    // The anchor conv emits the fused op; consumers of the
+                    // chain tail must redirect to it.
+                    plan.insert(n.id, Plan::Emit(fused, format!("{}.fused", n.name)));
+                    // Record alias: tail → anchor.
+                    plan.insert(last, Plan::Skip);
+                    alias_pairs_push(n.id, last);
+                }
+            }
+            // ── linear fusion: FC + Act ────────────────────────────────
+            Op::FC { out, bias: _ } if cfg.linear && single(n.id) => {
+                let next = consumers[n.id][0];
+                if let Op::Act(a) = g.node(next).op {
+                    if !plan.contains_key(&next) {
+                        stats.linear += 1;
+                        plan.insert(n.id, Plan::Emit(Op::FusedFcAct { out: *out, act: a }, format!("{}.fused", n.name)));
+                        plan.insert(next, Plan::Skip);
+                        alias_pairs_push(n.id, next);
+                    }
+                }
+            }
+            // ── elementwise chains: Act/Dropout/BN runs ≥ 2 ────────────
+            op if cfg.elementwise && op.is_elementwise() && n.inputs.len() == 1 => {
+                let mut chain = vec![n.id];
+                let mut cur = n.id;
+                while single(cur) {
+                    let next = consumers[cur][0];
+                    let nn = g.node(next);
+                    if nn.op.is_elementwise() && nn.inputs.len() == 1 && !plan.contains_key(&next) {
+                        chain.push(next);
+                        cur = next;
+                    } else {
+                        break;
+                    }
+                }
+                if chain.len() >= 2 {
+                    stats.elementwise += 1;
+                    let last = *chain.last().unwrap();
+                    plan.insert(n.id, Plan::Emit(Op::FusedElementwise { count: chain.len() }, format!("{}.fused", n.name)));
+                    for &c in &chain[1..] {
+                        plan.insert(c, Plan::Skip);
+                    }
+                    alias_pairs_push(n.id, last);
+                }
+            }
+            // ── reduction fusion: Pool + following elementwise ─────────
+            Op::Pool { kind, kernel, stride } if cfg.reduction && single(n.id) => {
+                let next = consumers[n.id][0];
+                let nn = g.node(next);
+                if nn.op.is_elementwise() && nn.inputs.len() == 1 && !plan.contains_key(&next) {
+                    stats.reduction += 1;
+                    plan.insert(
+                        n.id,
+                        Plan::Emit(Op::FusedReduce { kind: *kind, kernel: *kernel, stride: *stride }, format!("{}.fused", n.name)),
+                    );
+                    plan.insert(next, Plan::Skip);
+                    alias_pairs_push(n.id, next);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    // Rebuild the graph applying the plan. `tail_alias` maps the tail node
+    // of each fusion to its anchor so downstream edges reconnect.
+    let aliases = alias_pairs_take();
+    let mut out = Graph::new(g.name.clone(), g.nodes[g.input].shape.clone());
+    let mut map: HashMap<NodeId, NodeId> = HashMap::new();
+    map.insert(g.input, out.input);
+    for n in &g.nodes {
+        if n.id == g.input {
+            continue;
+        }
+        match plan.get(&n.id) {
+            Some(Plan::Emit(op, name)) => {
+                let inputs: Vec<NodeId> = n.inputs.iter().map(|i| map[i]).collect();
+                let id = out.add(name.clone(), op.clone(), &inputs);
+                map.insert(n.id, id);
+            }
+            Some(Plan::Skip) => {
+                // Tail of a fusion: alias to the anchor's new id; interior
+                // nodes alias to their input's mapping (harmless).
+                let anchor = aliases.get(&n.id).copied();
+                let target = match anchor {
+                    Some(a) => map[&a],
+                    None => map[&n.inputs[0]],
+                };
+                map.insert(n.id, target);
+            }
+            None => {
+                let inputs: Vec<NodeId> = n.inputs.iter().map(|i| map[i]).collect();
+                let id = out.add(n.name.clone(), n.op.clone(), &inputs);
+                map.insert(n.id, id);
+            }
+        }
+    }
+    for o in &g.outputs {
+        let id = map[o];
+        out.mark_output(id);
+    }
+    out.name = format!("{}+fused", g.name);
+    (out, stats)
+}
+
+// Thread-local scratch for (tail → anchor) alias pairs accumulated during
+// planning. Kept out of the closure to avoid borrow gymnastics.
+use std::cell::RefCell;
+thread_local! {
+    static ALIASES: RefCell<HashMap<NodeId, NodeId>> = RefCell::new(HashMap::new());
+}
+
+fn alias_pairs_push(anchor: NodeId, tail: NodeId) {
+    ALIASES.with(|a| a.borrow_mut().insert(tail, anchor));
+}
+
+fn alias_pairs_take() -> HashMap<NodeId, NodeId> {
+    ALIASES.with(|a| std::mem::take(&mut *a.borrow_mut()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::CostProfile;
+    use crate::models::{mobilenet_v2, resnet18, vgg16, ResNetStyle};
+
+    #[test]
+    fn resnet_conv_bn_fusion_fires() {
+        let g = resnet18(ResNetStyle::Cifar, 100, 1);
+        let (f, stats) = fuse(&g, FusionConfig::all());
+        assert!(stats.conv_bn >= 15, "conv_bn={}", stats.conv_bn);
+        assert!(f.len() < g.len());
+        // Output shape unchanged.
+        assert_eq!(f.node(f.outputs[0]).shape, g.node(g.outputs[0]).shape);
+    }
+
+    #[test]
+    fn fusion_reduces_memory_traffic() {
+        let g = resnet18(ResNetStyle::Cifar, 100, 1);
+        let (f, _) = fuse(&g, FusionConfig::all());
+        let before = CostProfile::of(&g).total_mem_bytes();
+        let after = CostProfile::of(&f).total_mem_bytes();
+        assert!(after < before, "after={after} before={before}");
+        // Weights dominate ResNet traffic; the activation round-trips that
+        // fusion removes still cut total traffic >10%.
+        assert!((after as f64) < before as f64 * 0.9, "expected >10% traffic cut");
+    }
+
+    #[test]
+    fn fusion_preserves_conv_macs() {
+        let g = resnet18(ResNetStyle::Cifar, 100, 1);
+        let (f, _) = fuse(&g, FusionConfig::all());
+        // Conv MACs unchanged; only elementwise MAC-equivalents disappear.
+        let conv_macs = |g: &Graph| -> usize {
+            g.nodes
+                .iter()
+                .filter(|n| matches!(n.op, Op::Conv2d(_) | Op::FusedConvBn { .. } | Op::FusedPointwise { .. }))
+                .map(|n| g.node_macs(n.id))
+                .sum()
+        };
+        assert_eq!(conv_macs(&f), conv_macs(&g));
+        assert!(f.total_macs() < g.total_macs());
+    }
+
+    #[test]
+    fn none_config_is_identity() {
+        let g = resnet18(ResNetStyle::Cifar, 100, 1);
+        let (f, stats) = fuse(&g, FusionConfig::none());
+        assert_eq!(stats.total(), 0);
+        assert_eq!(f.len(), g.len());
+        assert_eq!(f.total_macs(), g.total_macs());
+    }
+
+    #[test]
+    fn vgg_linear_and_reduction_fusion() {
+        let g = vgg16(false, 100, 1);
+        let (_, stats) = fuse(&g, FusionConfig::all());
+        assert!(stats.linear >= 2, "linear={}", stats.linear);
+        // VGG has no BN: its 13 conv+ReLU pairs fuse under the
+        // element-wise (epilogue) strategy.
+        assert!(stats.elementwise >= 10, "elementwise={}", stats.elementwise);
+    }
+
+    #[test]
+    fn mobilenet_channelwise_fusion() {
+        let g = mobilenet_v2(false, 10, 1);
+        let (_, stats) = fuse(&g, FusionConfig::all());
+        // Pointwise expand/project convs + BN/ReLU6 → channel-wise fusions.
+        assert!(stats.channelwise >= 10, "channelwise={}", stats.channelwise);
+    }
+
+    #[test]
+    fn selective_strategies() {
+        let g = resnet18(ResNetStyle::Cifar, 100, 1);
+        let only_convbn = FusionConfig { conv_bn: true, ..FusionConfig::none() };
+        let (_, s1) = fuse(&g, only_convbn);
+        assert!(s1.conv_bn > 0);
+        assert_eq!(s1.linear + s1.elementwise + s1.reduction, 0);
+    }
+
+    #[test]
+    fn fused_graph_topologically_valid() {
+        let g = mobilenet_v2(false, 10, 1);
+        let (f, _) = fuse(&g, FusionConfig::all());
+        assert_eq!(f.topo_order().len(), f.len());
+    }
+}

@@ -1,0 +1,85 @@
+//! Model-adaptive memory swapping for *inference* (Sec. III-C2 ❽ applied
+//! to the forward path): when the memory budget is below the smallest
+//! accuracy-compliant variant's footprint, weights beyond the budget
+//! stream from swap space (zram/flash) every inference. DL inference's
+//! sequential layer order makes the swap schedule deterministic — the
+//! engine prefetches the next layer's weights while the current one
+//! computes, so only the non-overlapped half of the transfer is exposed.
+
+use crate::device::ResourceSnapshot;
+
+/// Result of planning a swapped execution.
+#[derive(Debug, Clone, Copy)]
+pub struct SwapPlan {
+    /// Bytes resident in fast memory (≤ budget).
+    pub resident_bytes: f64,
+    /// Bytes streamed from swap per inference.
+    pub swapped_bytes: f64,
+    /// Added latency per inference (s).
+    pub extra_latency_s: f64,
+}
+
+/// Effective swap-in bandwidth as a fraction of DRAM bandwidth
+/// (zram-style compressed swap on mobile).
+const SWAP_BW_FRAC: f64 = 0.25;
+/// Fraction of transfer hidden behind compute by sequential prefetch.
+const OVERLAP: f64 = 0.5;
+
+/// Plan swapping `footprint_bytes` of model state into `budget_bytes` of
+/// fast memory on the device behind `snap`.
+pub fn plan_swap(footprint_bytes: f64, budget_bytes: f64, snap: &ResourceSnapshot) -> SwapPlan {
+    let deficit = (footprint_bytes - budget_bytes).max(0.0);
+    if deficit == 0.0 {
+        return SwapPlan { resident_bytes: footprint_bytes, swapped_bytes: 0.0, extra_latency_s: 0.0 };
+    }
+    let dram_bw = crate::device::device(&snap.device)
+        .map(|d| d.dram_gbps * 1e9)
+        .unwrap_or(4e9);
+    let swap_bw = dram_bw * SWAP_BW_FRAC;
+    // Each inference streams the deficit in and evicts it back out; the
+    // prefetcher hides `OVERLAP` of it behind compute.
+    let extra = 2.0 * deficit / swap_bw * (1.0 - OVERLAP) * 2.0;
+    SwapPlan {
+        resident_bytes: budget_bytes.min(footprint_bytes),
+        swapped_bytes: deficit,
+        extra_latency_s: extra,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{device, ResourceMonitor};
+
+    fn snap() -> ResourceSnapshot {
+        ResourceMonitor::new(device("raspberrypi-4b").unwrap()).idle_snapshot()
+    }
+
+    #[test]
+    fn fits_means_free() {
+        let p = plan_swap(10e6, 20e6, &snap());
+        assert_eq!(p.swapped_bytes, 0.0);
+        assert_eq!(p.extra_latency_s, 0.0);
+        assert_eq!(p.resident_bytes, 10e6);
+    }
+
+    #[test]
+    fn deficit_costs_latency_linearly() {
+        let s = snap();
+        let a = plan_swap(30e6, 20e6, &s);
+        let b = plan_swap(40e6, 20e6, &s);
+        assert!(a.extra_latency_s > 0.0);
+        assert!((b.extra_latency_s / a.extra_latency_s - 2.0).abs() < 1e-9);
+        assert_eq!(a.resident_bytes, 20e6);
+        assert_eq!(a.swapped_bytes, 10e6);
+    }
+
+    #[test]
+    fn tighter_budget_more_swap() {
+        let s = snap();
+        let loose = plan_swap(40e6, 30e6, &s);
+        let tight = plan_swap(40e6, 10e6, &s);
+        assert!(tight.swapped_bytes > loose.swapped_bytes);
+        assert!(tight.extra_latency_s > loose.extra_latency_s);
+    }
+}

@@ -1,0 +1,201 @@
+//! Compilation engine for test-time weight adaptation (Sec. III-C2):
+//! operator reordering during backprop ❹, backprop operator fusion ❺,
+//! progressive recomputation ❻, intermediate activation compression ❼,
+//! and model-adaptive memory swapping ❽.
+//!
+//! TTA is inference + a backward pass over a mini-batch; the dominant
+//! cost is stashing intermediate activations until their gradients are
+//! computed. Each strategy trades peak memory against extra latency; the
+//! planner evaluates a strategy set against a memory budget.
+
+use crate::device::ResourceSnapshot;
+use crate::graph::{CostProfile, DType, Graph};
+use crate::profiler::estimate_latency;
+
+/// Which TTA memory strategies to enable (θs components in Eq. 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TrainingConfig {
+    /// ❹ free each gradient right after its layer's update.
+    pub reorder: bool,
+    /// ❺ fuse adjacent backward ops (intermediate reused in-register).
+    pub fuse_backward: bool,
+    /// ❻ checkpoint every `recompute_every` layers, recompute the rest.
+    pub recompute_every: usize,
+    /// ❼ stash activations in 8-bit (4-bit for pool→ReLU spans).
+    pub compress_activations: bool,
+    /// ❽ swap stashed activations to slow memory.
+    pub swap: bool,
+}
+
+impl TrainingConfig {
+    pub fn baseline() -> Self {
+        TrainingConfig { reorder: false, fuse_backward: false, recompute_every: 1, compress_activations: false, swap: false }
+    }
+
+    pub fn all() -> Self {
+        TrainingConfig { reorder: true, fuse_backward: true, recompute_every: 2, compress_activations: true, swap: false }
+    }
+}
+
+/// Predicted cost of one TTA step (forward + backward + update).
+#[derive(Debug, Clone)]
+pub struct TrainingReport {
+    /// Peak fast-memory bytes (weights + stashes + gradients).
+    pub peak_bytes: f64,
+    /// Step latency (seconds).
+    pub latency_s: f64,
+    /// Bytes of activations stashed for the backward pass.
+    pub stash_bytes: f64,
+    /// Bytes swapped to slow memory (0 unless `swap`).
+    pub swapped_bytes: f64,
+}
+
+/// Plan one TTA step for `g` under `cfg` on the device behind `snap`.
+pub fn plan_training(g: &Graph, cfg: &TrainingConfig, snap: &ResourceSnapshot) -> TrainingReport {
+    let cost = CostProfile::of(g);
+    let fwd = estimate_latency(&cost, snap);
+    // Backward ≈ 2× forward compute (grad wrt inputs + wrt weights).
+    let mut latency = fwd.total_s * 3.0;
+
+    let param_bytes = g.param_bytes() as f64;
+
+    // Activations that must be stashed: every op output consumed by the
+    // backward pass (we stash all non-trivial outputs).
+    let mut stash: f64 = 0.0;
+    for n in &g.nodes {
+        if matches!(n.op.kind(), "Input" | "Flatten" | "Softmax") {
+            continue;
+        }
+        let mut bytes = n.shape.bytes() as f64;
+        if cfg.fuse_backward && n.op.is_elementwise() {
+            // Fused into the producer's backward kernel: not materialized.
+            continue;
+        }
+        if cfg.compress_activations {
+            // Pool→ReLU spans can go 4-bit; everything else 8-bit.
+            let dtype = if n.op.is_reduction() { DType::I4 } else { DType::I8 };
+            bytes = n.shape.with_dtype(dtype).bytes() as f64;
+            // Encode/decode pass over the tensor.
+            latency += 2.0 * n.shape.bytes() as f64 / (snap.gmacs.max(0.1) * 1e9);
+        }
+        stash += bytes;
+    }
+    if cfg.recompute_every > 1 {
+        // Keep one checkpoint per window; recompute the rest on demand.
+        let keep_frac = 1.0 / cfg.recompute_every as f64;
+        stash *= keep_frac;
+        // Recomputation ≈ one extra forward over the dropped fraction.
+        latency += fwd.total_s * (1.0 - keep_frac);
+    }
+
+    // Gradient buffers: all retained (baseline) vs one layer at a time
+    // (reorder) — gradients are parameter-shaped.
+    let max_layer_grad = cost.layers.iter().map(|l| l.param_bytes).max().unwrap_or(0) as f64;
+    let grad_bytes = if cfg.reorder { max_layer_grad } else { param_bytes };
+
+    let mut swapped = 0.0;
+    let mut peak = param_bytes + stash + grad_bytes;
+    if cfg.swap {
+        // Swap stashes out after forward, back in for backward. Fast-memory
+        // peak keeps only the currently-needed stash (≈ largest single).
+        let max_stash = cost.layers.iter().map(|l| l.act_bytes).max().unwrap_or(0) as f64;
+        swapped = (stash - max_stash).max(0.0);
+        peak -= swapped;
+        // Transfers at DRAM↔host bandwidth, half overlapped with compute.
+        let dev = crate::device::device(&snap.device);
+        let bw = dev.map(|d| d.dram_gbps * 1e9 / 4.0).unwrap_or(1e9);
+        latency += 2.0 * swapped / bw * 0.5;
+    }
+
+    TrainingReport { peak_bytes: peak, latency_s: latency, stash_bytes: stash, swapped_bytes: swapped }
+}
+
+/// Pick the cheapest (latency-wise) strategy set that fits `budget_bytes`,
+/// escalating through the paper's strategies in order of increasing
+/// latency overhead. Returns `None` if even the most aggressive set
+/// doesn't fit.
+pub fn fit_budget(g: &Graph, snap: &ResourceSnapshot, budget_bytes: f64) -> Option<(TrainingConfig, TrainingReport)> {
+    let ladder = [
+        TrainingConfig::baseline(),
+        TrainingConfig { reorder: true, ..TrainingConfig::baseline() },
+        TrainingConfig { reorder: true, fuse_backward: true, ..TrainingConfig::baseline() },
+        TrainingConfig { reorder: true, fuse_backward: true, compress_activations: true, ..TrainingConfig::baseline() },
+        TrainingConfig { reorder: true, fuse_backward: true, compress_activations: true, recompute_every: 2, ..TrainingConfig::baseline() },
+        TrainingConfig { reorder: true, fuse_backward: true, compress_activations: true, recompute_every: 4, ..TrainingConfig::baseline() },
+        TrainingConfig { reorder: true, fuse_backward: true, compress_activations: true, recompute_every: 4, swap: true },
+    ];
+    for cfg in ladder {
+        let rep = plan_training(g, &cfg, snap);
+        if rep.peak_bytes <= budget_bytes {
+            return Some((cfg, rep));
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{device, ResourceMonitor};
+    use crate::models::{resnet18, ResNetStyle};
+
+    fn snap() -> ResourceSnapshot {
+        ResourceMonitor::new(device("raspberrypi-4b").unwrap()).idle_snapshot()
+    }
+
+    #[test]
+    fn each_strategy_cuts_memory() {
+        let g = resnet18(ResNetStyle::Cifar, 100, 32);
+        let s = snap();
+        let base = plan_training(&g, &TrainingConfig::baseline(), &s);
+        let reorder = plan_training(&g, &TrainingConfig { reorder: true, ..TrainingConfig::baseline() }, &s);
+        let fused = plan_training(&g, &TrainingConfig { fuse_backward: true, ..TrainingConfig::baseline() }, &s);
+        let comp = plan_training(&g, &TrainingConfig { compress_activations: true, ..TrainingConfig::baseline() }, &s);
+        let rec = plan_training(&g, &TrainingConfig { recompute_every: 4, ..TrainingConfig::baseline() }, &s);
+        let swap = plan_training(&g, &TrainingConfig { swap: true, ..TrainingConfig::baseline() }, &s);
+        assert!(reorder.peak_bytes < base.peak_bytes);
+        assert!(fused.peak_bytes < base.peak_bytes);
+        assert!(comp.peak_bytes < base.peak_bytes * 0.75);
+        assert!(comp.stash_bytes < base.stash_bytes * 0.35);
+        assert!(rec.peak_bytes < base.peak_bytes);
+        assert!(swap.peak_bytes < base.peak_bytes);
+    }
+
+    #[test]
+    fn memory_saving_strategies_cost_latency() {
+        let g = resnet18(ResNetStyle::Cifar, 100, 32);
+        let s = snap();
+        let base = plan_training(&g, &TrainingConfig::baseline(), &s);
+        let rec = plan_training(&g, &TrainingConfig { recompute_every: 4, ..TrainingConfig::baseline() }, &s);
+        let comp = plan_training(&g, &TrainingConfig { compress_activations: true, ..TrainingConfig::baseline() }, &s);
+        assert!(rec.latency_s > base.latency_s);
+        assert!(comp.latency_s > base.latency_s);
+        // Reordering is latency-free.
+        let reorder = plan_training(&g, &TrainingConfig { reorder: true, ..TrainingConfig::baseline() }, &s);
+        assert!((reorder.latency_s - base.latency_s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fit_budget_escalates() {
+        let g = resnet18(ResNetStyle::Cifar, 100, 32);
+        let s = snap();
+        let base = plan_training(&g, &TrainingConfig::baseline(), &s);
+        // A budget just below baseline forces at least one strategy.
+        let (cfg, rep) = fit_budget(&g, &s, base.peak_bytes * 0.9).unwrap();
+        assert!(rep.peak_bytes <= base.peak_bytes * 0.9);
+        assert!(cfg.reorder);
+        // A budget below the weights themselves is infeasible.
+        assert!(fit_budget(&g, &s, 1024.0).is_none());
+    }
+
+    #[test]
+    fn tighter_budget_higher_latency() {
+        let g = resnet18(ResNetStyle::Cifar, 100, 32);
+        let s = snap();
+        let base = plan_training(&g, &TrainingConfig::baseline(), &s);
+        let (_, loose) = fit_budget(&g, &s, base.peak_bytes * 0.9).unwrap();
+        let (_, tight) = fit_budget(&g, &s, base.peak_bytes * 0.45).unwrap();
+        assert!(tight.peak_bytes < loose.peak_bytes);
+        assert!(tight.latency_s >= loose.latency_s);
+    }
+}

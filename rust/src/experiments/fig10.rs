@@ -1,0 +1,86 @@
+//! Fig. 10: the elastic-inference component alone vs model-compression
+//! baselines — Fire, SVD, Once-for-all, AdaDeep — on Cifar-100-shaped
+//! ResNet18 @ Raspberry Pi 4B, across accuracy / latency / params / MACs
+//! / energy. Engine and offloading are disabled for everyone: this
+//! isolates the front-end component, like the paper's Sec. IV-C.
+
+use crate::baselines::{adadeep_select, handcrafted, ofa_select, original};
+use crate::compress::{variant_space, VariantSpec};
+use crate::engine::EngineConfig;
+use crate::models::{resnet18, ResNetStyle};
+use crate::optimizer::{evaluate, Candidate, Evaluated};
+use crate::profiler::base_accuracy;
+use crate::util::table::fmt_secs;
+use crate::util::Table;
+
+use super::idle_snap;
+
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub method: String,
+    pub accuracy: f64,
+    pub latency_s: f64,
+    pub params_m: f64,
+    pub macs_m: f64,
+    pub energy_j: f64,
+}
+
+fn row(name: &str, e: &Evaluated) -> Row {
+    Row {
+        method: name.to_string(),
+        accuracy: e.metrics.accuracy,
+        latency_s: e.metrics.latency_s,
+        params_m: e.metrics.params / 1e6,
+        macs_m: e.metrics.macs / 1e6,
+        energy_j: e.metrics.energy_j,
+    }
+}
+
+/// CrowdHMTware's elastic-inference selection: best Eq. 3 score over the
+/// full variant grid, engine off (component isolation), TTA on.
+fn elastic_select(g: &crate::graph::Graph, acc: f64, snap: &crate::device::ResourceSnapshot) -> Evaluated {
+    let orig_energy = evaluate(g, &Candidate::baseline(), acc, snap, 0.0, false).metrics.energy_j;
+    let mut best: Option<(f64, Evaluated)> = None;
+    for spec in variant_space() {
+        let cand = Candidate { spec, offload: false, engine: EngineConfig::none() };
+        let e = evaluate(g, &cand, acc, snap, 0.0, true);
+        // Eq. 3 at full battery with energy normalized to the original.
+        let score = 0.7 * e.metrics.accuracy / 100.0 - 0.3 * e.metrics.energy_j / orig_energy;
+        if best.as_ref().map(|(s, _)| score > *s).unwrap_or(true) {
+            best = Some((score, e));
+        }
+    }
+    best.unwrap().1
+}
+
+pub fn run() -> Vec<Row> {
+    let g = resnet18(ResNetStyle::Cifar, 100, 1);
+    let acc = base_accuracy("resnet18", "Cifar-100");
+    let snap = idle_snap("raspberrypi-4b");
+    let mut rows = vec![row("Original", &original(&g, acc, &snap))];
+    rows.push(row("Fire", &handcrafted(&g, "fire", acc, &snap).unwrap()));
+    rows.push(row("SVD", &handcrafted(&g, "svd", acc, &snap).unwrap()));
+    rows.push(row("OFA", &ofa_select(&g, acc, &snap, 0.15)));
+    rows.push(row("AdaDeep", &adadeep_select(&g, acc, &snap, 0.15)));
+    rows.push(row("CrowdHMTware", &elastic_select(&g, acc, &snap)));
+    let _ = VariantSpec::identity();
+    rows
+}
+
+pub fn table(rows: &[Row]) -> Table {
+    let mut t = Table::new(
+        "Fig. 10 — Elastic inference vs compression baselines (ResNet18 @ RPi 4B)",
+        &["method", "accuracy", "latency", "params M", "MACs M", "energy J"],
+    );
+    for r in rows {
+        t.row(&[
+            r.method.clone(),
+            format!("{:.2}%", r.accuracy),
+            fmt_secs(r.latency_s),
+            format!("{:.2}", r.params_m),
+            format!("{:.0}", r.macs_m),
+            format!("{:.2}", r.energy_j),
+        ]);
+    }
+    t
+}

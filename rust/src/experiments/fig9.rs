@@ -1,0 +1,66 @@
+//! Fig. 9: CrowdHMTware vs AdaDeep with ResNet18 across heterogeneous
+//! devices — Jetson NX, Jetson Nano, Raspberry Pi 4B. The paper reports
+//! consistent latency/memory wins on every device class.
+
+use crate::baselines::adadeep_select;
+use crate::models::{resnet18, ResNetStyle};
+use crate::profiler::base_accuracy;
+use crate::util::table::{fmt_bytes, fmt_secs};
+use crate::util::Table;
+
+use super::{crowdhmt_select, idle_snap};
+
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub device: String,
+    pub ada_acc: f64,
+    pub ada_latency_s: f64,
+    pub ada_memory: f64,
+    pub our_acc: f64,
+    pub our_latency_s: f64,
+    pub our_memory: f64,
+}
+
+pub fn run() -> Vec<Row> {
+    let g = resnet18(ResNetStyle::ImageNet, 100, 1);
+    let acc = base_accuracy("resnet18", "Cifar-100");
+    ["jetson-nx", "jetson-nano", "raspberrypi-4b"]
+        .iter()
+        .map(|d| {
+            let snap = idle_snap(d);
+            let ada = adadeep_select(&g, acc, &snap, 0.5);
+            // Peer for offloading: the NX (or the Nano when NX is local).
+            let peer = if *d == "jetson-nx" { "jetson-nano" } else { "jetson-nx" };
+            let ours = crowdhmt_select(&g, acc, &snap, Some(peer), 42);
+            Row {
+                device: d.to_string(),
+                ada_acc: ada.metrics.accuracy,
+                ada_latency_s: ada.metrics.latency_s,
+                ada_memory: ada.metrics.memory_bytes,
+                our_acc: ours.accuracy(),
+                our_latency_s: ours.latency_s(),
+                our_memory: ours.eval.metrics.memory_bytes,
+            }
+        })
+        .collect()
+}
+
+pub fn table(rows: &[Row]) -> Table {
+    let mut t = Table::new(
+        "Fig. 9 — ResNet18 across devices: CrowdHMTware vs AdaDeep",
+        &["device", "AdaD acc", "ours acc", "AdaD lat", "ours lat", "gain", "AdaD mem", "ours mem"],
+    );
+    for r in rows {
+        t.row(&[
+            r.device.clone(),
+            format!("{:.2}%", r.ada_acc),
+            format!("{:.2}%", r.our_acc),
+            fmt_secs(r.ada_latency_s),
+            fmt_secs(r.our_latency_s),
+            format!("{:.1}x", r.ada_latency_s / r.our_latency_s),
+            fmt_bytes(r.ada_memory),
+            fmt_bytes(r.our_memory),
+        ]);
+    }
+    t
+}

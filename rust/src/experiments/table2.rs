@@ -1,0 +1,102 @@
+//! Table II: CrowdHMTware under dynamic memory budgets — 100% (none),
+//! 75%, 50%, 25% of the unrestricted footprint, ResNet18 on Raspberry Pi
+//! 4B. The paper shows memory tracking the budget, accuracy held, and
+//! latency dipping at 50% (smaller variants are faster) then *rising* in
+//! the extreme 25% state: the app's accuracy demand blocks further
+//! compression, so the engine falls back to model-adaptive memory
+//! swapping (Sec. III-C2 ❽), trading latency for footprint.
+
+use crate::models::{resnet18, ResNetStyle};
+use crate::optimizer::{search, AdaptLoop, Budgets, SearchConfig};
+use crate::profiler::base_accuracy;
+use crate::util::table::fmt_secs;
+use crate::util::Table;
+
+use super::idle_snap;
+
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub budget_label: String,
+    pub accuracy: f64,
+    pub latency_s: f64,
+    pub memory_mb: f64,
+}
+
+pub fn run() -> Vec<Row> {
+    let g = resnet18(ResNetStyle::Cifar, 100, 1);
+    let acc = base_accuracy("resnet18", "Cifar-100");
+    let snap = idle_snap("raspberrypi-4b");
+    let front: Vec<_> = search(&g, acc, &snap, &SearchConfig { population: 28, generations: 6, seed: 13 })
+        .into_iter()
+        .map(|e| e.candidate)
+        .collect();
+
+    // Unrestricted run defines the 100% reference memory.
+    let mut reference = AdaptLoop::new(g.clone(), acc, front.clone(), Budgets::unconstrained());
+    reference.tick(&snap);
+    let full_mem = reference.current().unwrap().metrics.memory_bytes;
+
+    // The application demands accuracy within 1 pp of unrestricted
+    // (the paper holds 75–76% across every budget).
+    let acc_floor = reference.current().unwrap().metrics.accuracy - 1.0;
+
+    let mut rows = Vec::new();
+    for (label, frac) in [("Non-Restriction", 1.0), ("75% Memory Budget", 0.75), ("50% Memory Budget", 0.5), ("25% Memory Budget", 0.25)] {
+        let budget = full_mem * frac;
+        let budgets = Budgets { latency_s: f64::INFINITY, memory_bytes: budget };
+        let mut l = AdaptLoop::new(g.clone(), acc, front.clone(), budgets);
+        l.tick(&snap);
+        let m = l.current().unwrap().metrics.clone();
+        let (accuracy, mut latency, mut memory) = (m.accuracy, m.latency_s, m.memory_bytes);
+        if accuracy < acc_floor {
+            // The budget forced an over-compressed variant: fall back to
+            // the smallest accuracy-compliant variant + memory swapping
+            // (❽): weights beyond the budget stream from swap space every
+            // inference, costing DRAM-bandwidth time.
+            let ok: Vec<_> = front
+                .iter()
+                .map(|c| crate::optimizer::evaluate(&g, c, acc, &snap, 0.0, true))
+                .filter(|e| e.metrics.accuracy >= acc_floor)
+                .collect();
+            if let Some(best) = ok.iter().min_by(|a, b| {
+                a.metrics.memory_bytes.partial_cmp(&b.metrics.memory_bytes).unwrap()
+            }) {
+                let plan = crate::engine::plan_swap(best.metrics.memory_bytes, budget, &snap);
+                latency = best.metrics.latency_s + plan.extra_latency_s;
+                memory = plan.resident_bytes;
+                rows.push(Row {
+                    budget_label: label.to_string(),
+                    accuracy: best.metrics.accuracy,
+                    latency_s: latency,
+                    memory_mb: memory / (1024.0 * 1024.0),
+                });
+                continue;
+            }
+        }
+        rows.push(Row {
+            budget_label: label.to_string(),
+            accuracy,
+            latency_s: latency,
+            memory_mb: memory / (1024.0 * 1024.0),
+        });
+        let _ = &mut latency;
+        let _ = &mut memory;
+    }
+    rows
+}
+
+pub fn table(rows: &[Row]) -> Table {
+    let mut t = Table::new(
+        "Table II — CrowdHMTware under memory budgets (ResNet18 @ RPi 4B)",
+        &["budget", "accuracy", "latency", "memory MB"],
+    );
+    for r in rows {
+        t.row(&[
+            r.budget_label.clone(),
+            format!("{:.2}%", r.accuracy),
+            fmt_secs(r.latency_s),
+            format!("{:.2}", r.memory_mb),
+        ]);
+    }
+    t
+}

@@ -1,0 +1,84 @@
+//! Table III: compression-operator combinations across the paper's five
+//! tasks/datasets (UbiSound, Cifar-100, ImageNet, HAR, StateFarm) vs the
+//! MobileNetV2 baseline — accuracy delta, latency ×, MAC ×, energy ×.
+//! The paper's pattern: MAC reductions of 4–9×, energy 2–15×, accuracy
+//! within ±2 pp.
+
+use crate::compress::{OperatorKind, VariantSpec};
+use crate::engine::EngineConfig;
+use crate::models::{backbone, mobilenet::mobilenet_v2_for, Task};
+use crate::optimizer::{evaluate, Candidate};
+use crate::profiler::base_accuracy;
+use crate::util::Table;
+
+use super::idle_snap;
+
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub combo: String,
+    pub dataset: String,
+    pub acc_delta: f64,
+    pub latency_gain: f64,
+    pub macs_gain: f64,
+    pub energy_gain: f64,
+}
+
+/// The paper's Table III rows: (operator pair, task).
+pub fn combos() -> Vec<(VariantSpec, Task)> {
+    use OperatorKind::*;
+    vec![
+        (VariantSpec::pair((LowRank, 0.6), (ChannelScale, 0.8)), Task::UbiSound),
+        (VariantSpec::pair((Fire, 0.6), (ChannelScale, 0.8)), Task::Cifar100),
+        (VariantSpec::pair((LowRank, 0.6), (DepthScale, 0.6)), Task::ImageNet),
+        (VariantSpec::pair((Fire, 0.6), (DepthScale, 0.6)), Task::Har),
+        (VariantSpec::pair((LowRank, 0.6), (ChannelScale, 0.8)), Task::StateFarm),
+    ]
+}
+
+pub fn run() -> Vec<Row> {
+    let snap = idle_snap("raspberrypi-4b");
+    combos()
+        .into_iter()
+        .map(|(spec, task)| {
+            // Baseline: MobileNetV2 sized for the task; ours: the
+            // multi-branch backbone compressed with the combo.
+            let (hw, c, classes) = task.shape();
+            let base_model = mobilenet_v2_for(hw, c, classes, 1);
+            let base_acc = base_accuracy("mobilenet_v2", task.name());
+            let baseline = evaluate(&base_model, &Candidate::baseline(), base_acc, &snap, 0.0, false);
+
+            let cfg = task.backbone_config(1);
+            let g = backbone(&cfg);
+            let our_base_acc = base_accuracy("backbone", task.name());
+            let cand = Candidate { spec: spec.clone(), offload: false, engine: EngineConfig::all() };
+            let ours = evaluate(&g, &cand, our_base_acc, &snap, 0.0, true);
+
+            Row {
+                combo: spec.label(),
+                dataset: task.name().to_string(),
+                acc_delta: ours.metrics.accuracy - baseline.metrics.accuracy,
+                latency_gain: baseline.metrics.latency_s / ours.metrics.latency_s,
+                macs_gain: baseline.metrics.macs / ours.metrics.macs.max(1.0),
+                energy_gain: baseline.metrics.energy_j / ours.metrics.energy_j,
+            }
+        })
+        .collect()
+}
+
+pub fn table(rows: &[Row]) -> Table {
+    let mut t = Table::new(
+        "Table III — operator combinations vs MobileNetV2 across tasks",
+        &["combo", "dataset", "Δaccuracy", "latency", "MACs", "energy"],
+    );
+    for r in rows {
+        t.row(&[
+            r.combo.clone(),
+            r.dataset.clone(),
+            format!("{:+.2}%", r.acc_delta),
+            format!("{:.1}x", r.latency_gain),
+            format!("{:.1}x", r.macs_gain),
+            format!("{:.1}x", r.energy_gain),
+        ]);
+    }
+    t
+}

@@ -1,0 +1,89 @@
+//! Table IV: cross-level optimization ablation on a Snapdragon 855 phone,
+//! ResNet-18 — the paper's rows: original; low-rank decomposition and
+//! pruning (resource-friendly front-end compilation); operator
+//! parallelism and operator fusion (model-adaptive back-end); and their
+//! cross-level combinations, ending at −48.4% latency for
+//! parallelism+pruning+fusion+memory-allocation.
+
+use crate::compress::{OperatorKind, VariantSpec};
+use crate::engine::{EngineConfig, FusionConfig};
+use crate::models::{resnet18, ResNetStyle};
+use crate::optimizer::{evaluate, Candidate};
+use crate::profiler::base_accuracy;
+use crate::util::Table;
+
+use super::idle_snap;
+
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub level: String,
+    pub method: String,
+    pub accuracy: f64,
+    pub memory_mb: f64,
+    pub latency_ms: f64,
+    /// Latency reduction vs the original model (%).
+    pub speedup_pct: f64,
+}
+
+fn cand(spec: VariantSpec, fusion: bool, par: bool, mem: bool) -> Candidate {
+    Candidate {
+        spec,
+        offload: false,
+        engine: EngineConfig {
+            fusion: if fusion { FusionConfig::all() } else { FusionConfig::none() },
+            parallelism: par,
+            mem_alloc: mem,
+        },
+    }
+}
+
+pub fn run() -> Vec<Row> {
+    let g = resnet18(ResNetStyle::Cifar, 100, 1);
+    let acc = base_accuracy("resnet18", "Cifar-100");
+    let snap = idle_snap("snapdragon-855");
+    let lowrank = VariantSpec::single(OperatorKind::LowRank, 0.5);
+    let prune = VariantSpec::single(OperatorKind::ChannelScale, 0.6);
+    let cases: Vec<(&str, &str, Candidate)> = vec![
+        ("Original model", "ResNet-18", cand(VariantSpec::identity(), false, false, false)),
+        ("Resource-friendly frontend", "Low-rank decomposition", cand(lowrank.clone(), false, false, false)),
+        ("Resource-friendly frontend", "Pruning", cand(prune.clone(), false, false, false)),
+        ("Model-adaptive backend", "Operator parallelism", cand(VariantSpec::identity(), false, true, false)),
+        ("Model-adaptive backend", "Operator fusion", cand(VariantSpec::identity(), true, false, false)),
+        ("Cross-level", "Parallelism+Low-rank", cand(lowrank, false, true, false)),
+        ("Cross-level", "Parallelism+Pruning", cand(prune.clone(), false, true, false)),
+        ("Cross-level", "Parallelism+Pruning+Fusion+MemAlloc", cand(prune, true, true, true)),
+    ];
+    let orig_lat = evaluate(&g, &cases[0].2, acc, &snap, 0.0, false).metrics.latency_s;
+    cases
+        .into_iter()
+        .map(|(level, method, c)| {
+            let e = evaluate(&g, &c, acc, &snap, 0.0, false);
+            Row {
+                level: level.into(),
+                method: method.into(),
+                accuracy: e.metrics.accuracy,
+                memory_mb: e.metrics.memory_bytes / (1024.0 * 1024.0),
+                latency_ms: e.metrics.latency_s * 1e3,
+                speedup_pct: 100.0 * (1.0 - e.metrics.latency_s / orig_lat),
+            }
+        })
+        .collect()
+}
+
+pub fn table(rows: &[Row]) -> Table {
+    let mut t = Table::new(
+        "Table IV — cross-level ablation (ResNet-18 @ Snapdragon 855)",
+        &["level", "method", "top acc %", "memory MB", "latency ms", "speedup %"],
+    );
+    for r in rows {
+        t.row(&[
+            r.level.clone(),
+            r.method.clone(),
+            format!("{:.2}", r.accuracy),
+            format!("{:.2}", r.memory_mb),
+            format!("{:.2}", r.latency_ms),
+            format!("{:.1}", r.speedup_pct),
+        ]);
+    }
+    t
+}

@@ -1,0 +1,111 @@
+//! Table V: component ablation — compression+partition,
+//! compression+engine, partition+engine, and the full system
+//! (compression+partition+engine), ResNet18 on Raspberry Pi 4B with a
+//! Jetson NX peer. The paper's ordering: the full system dominates every
+//! pairwise combination on latency while holding accuracy.
+
+use crate::compress::{OperatorKind, VariantSpec};
+use crate::engine::EngineConfig;
+use crate::models::{resnet18, ResNetStyle};
+use crate::optimizer::{evaluate, Candidate};
+use crate::partition::{plan_offload, prepartition, DeviceState, Topology};
+use crate::profiler::base_accuracy;
+use crate::util::table::{fmt_bytes, fmt_secs};
+use crate::util::Table;
+
+use super::idle_snap;
+
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub method: String,
+    pub accuracy: f64,
+    pub latency_s: f64,
+    pub memory: f64,
+    pub params_m: f64,
+}
+
+fn measure(compress: bool, partition: bool, engine: bool) -> Row {
+    let g = resnet18(ResNetStyle::ImageNet, 100, 1);
+    let acc = base_accuracy("resnet18", "Cifar-100");
+    let snap = idle_snap("raspberrypi-4b");
+    let spec = if compress {
+        VariantSpec::pair((OperatorKind::LowRank, 0.5), (OperatorKind::ChannelScale, 0.6))
+    } else {
+        VariantSpec::identity()
+    };
+    let eng = if engine { EngineConfig::all() } else { EngineConfig::none() };
+    let cand = Candidate { spec: spec.clone(), offload: partition, engine: eng };
+    let e = evaluate(&g, &cand, acc, &snap, 0.0, true);
+
+    let mut latency = e.metrics.latency_s;
+    let mut memory = e.metrics.memory_bytes;
+    if partition {
+        let variant = spec.apply(&g);
+        let pp = prepartition(&variant);
+        let mut topo = Topology::new();
+        topo.connect("raspberrypi-4b", "jetson-nano", 20.0, 20.0);
+        let devices = vec![
+            DeviceState { snap: snap.clone(), mem_budget: 4e9 },
+            DeviceState { snap: idle_snap("jetson-nano"), mem_budget: 4e9 },
+        ];
+        let plan = plan_offload(&variant, &pp, &devices, &topo);
+        // The engine accelerates the compute share of the plan (fused
+        // kernels run on every participating device); transfer time is
+        // untouched.
+        let no_engine = evaluate(
+            &g,
+            &Candidate { spec: spec.clone(), offload: true, engine: EngineConfig::none() },
+            acc,
+            &snap,
+            0.0,
+            true,
+        );
+        let engine_factor = if engine { e.metrics.latency_s / no_engine.metrics.latency_s } else { 1.0 };
+        let xfer_s = plan.transfer_bytes as f64 / (20e6 / 8.0);
+        let plan_latency = (plan.latency_s - xfer_s).max(0.0) * engine_factor + xfer_s;
+        if plan_latency < latency {
+            latency = plan_latency;
+            memory = plan.local_memory_bytes.min(memory);
+        }
+    }
+    let name = match (compress, partition, engine) {
+        (true, true, false) => "Compression + Partitioning",
+        (true, false, true) => "Compression + Engine",
+        (false, true, true) => "Partitioning + Engine",
+        (true, true, true) => "CrowdHMTware (all three)",
+        _ => "Original",
+    };
+    Row {
+        method: name.into(),
+        accuracy: e.metrics.accuracy,
+        latency_s: latency,
+        memory,
+        params_m: e.metrics.params / 1e6,
+    }
+}
+
+pub fn run() -> Vec<Row> {
+    vec![
+        measure(true, true, false),
+        measure(true, false, true),
+        measure(false, true, true),
+        measure(true, true, true),
+    ]
+}
+
+pub fn table(rows: &[Row]) -> Table {
+    let mut t = Table::new(
+        "Table V — component ablation (ResNet18@224, RPi 4B + Nano peer)",
+        &["method", "accuracy", "latency", "memory", "params M"],
+    );
+    for r in rows {
+        t.row(&[
+            r.method.clone(),
+            format!("{:.2}%", r.accuracy),
+            fmt_secs(r.latency_s),
+            fmt_bytes(r.memory),
+            format!("{:.2}", r.params_m),
+        ]);
+    }
+    t
+}

@@ -1,0 +1,138 @@
+//! Per-layer cost records consumed by the runtime profiler (Sec. III-D1).
+//!
+//! The paper's latency/energy models are sums over layers of computation
+//! `C_l` (MACs) and memory traffic `M_l` (bytes), modulated by the dynamic
+//! arithmetic intensity δ and cache-hit-rate ε. This module extracts those
+//! per-layer quantities from a [`Graph`].
+
+
+use super::graph::{Graph, NodeId};
+
+/// Static per-layer cost record.
+#[derive(Debug, Clone)]
+pub struct LayerCost {
+    pub id: NodeId,
+    pub name: String,
+    pub kind: String,
+    /// MAC count `C_l`.
+    pub macs: usize,
+    /// Bytes moved `M_l` (inputs + params + output).
+    pub mem_bytes: usize,
+    /// Parameter bytes of this layer alone.
+    pub param_bytes: usize,
+    /// Output activation bytes.
+    pub act_bytes: usize,
+}
+
+impl LayerCost {
+    /// Arithmetic intensity δ_l = C_l / M_l (MACs per byte moved).
+    pub fn arithmetic_intensity(&self) -> f64 {
+        if self.mem_bytes == 0 {
+            0.0
+        } else {
+            self.macs as f64 / self.mem_bytes as f64
+        }
+    }
+}
+
+/// Whole-model static cost profile.
+#[derive(Debug, Clone)]
+pub struct CostProfile {
+    pub model: String,
+    pub layers: Vec<LayerCost>,
+}
+
+impl CostProfile {
+    pub fn of(g: &Graph) -> Self {
+        let layers = g
+            .topo_order()
+            .into_iter()
+            .filter(|&id| g.node(id).op.kind() != "Input")
+            .map(|id| {
+                let n = g.node(id);
+                LayerCost {
+                    id,
+                    name: n.name.clone(),
+                    kind: n.op.kind().to_string(),
+                    macs: g.node_macs(id),
+                    mem_bytes: g.node_mem_bytes(id),
+                    param_bytes: g.node_params(id) * 4,
+                    act_bytes: n.shape.bytes(),
+                }
+            })
+            .collect();
+        CostProfile { model: g.name.clone(), layers }
+    }
+
+    pub fn total_macs(&self) -> usize {
+        self.layers.iter().map(|l| l.macs).sum()
+    }
+
+    pub fn total_mem_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.mem_bytes).sum()
+    }
+
+    pub fn total_param_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.param_bytes).sum()
+    }
+
+    /// Model-level arithmetic intensity δ = ΣC / ΣM.
+    pub fn arithmetic_intensity(&self) -> f64 {
+        let m = self.total_mem_bytes();
+        if m == 0 {
+            0.0
+        } else {
+            self.total_macs() as f64 / m as f64
+        }
+    }
+
+    /// Working set that competes for cache: parameters plus the largest
+    /// single activation (DL inference streams activations layer-by-layer,
+    /// so only neighbouring activations are simultaneously hot).
+    pub fn working_set_bytes(&self) -> usize {
+        let max_act = self.layers.iter().map(|l| l.act_bytes).max().unwrap_or(0);
+        self.total_param_bytes() + 2 * max_act
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::op::{Conv2dAttrs, Op};
+    use crate::graph::tensor::Shape;
+    use crate::graph::Graph;
+
+    fn g() -> Graph {
+        let mut g = Graph::new("t", Shape::nchw(1, 3, 16, 16));
+        let c = g.add("c", Op::Conv2d(Conv2dAttrs::simple(8, 3, 1, 1)), &[g.input]);
+        let f = g.add("f", Op::Flatten, &[c]);
+        let fc = g.add("fc", Op::FC { out: 10, bias: false }, &[f]);
+        g.mark_output(fc);
+        g
+    }
+
+    #[test]
+    fn profile_matches_graph_totals() {
+        let g = g();
+        let p = CostProfile::of(&g);
+        assert_eq!(p.total_macs(), g.total_macs());
+        assert_eq!(p.total_param_bytes(), g.param_bytes());
+        assert_eq!(p.layers.len(), g.len() - 1);
+    }
+
+    #[test]
+    fn conv_has_higher_intensity_than_fc() {
+        let p = CostProfile::of(&g());
+        let conv = p.layers.iter().find(|l| l.kind == "Conv2d").unwrap();
+        let fc = p.layers.iter().find(|l| l.kind == "FC").unwrap();
+        // Convs reuse weights spatially; batch-1 FC reads each weight once.
+        assert!(conv.arithmetic_intensity() > fc.arithmetic_intensity());
+    }
+
+    #[test]
+    fn working_set_includes_params() {
+        let g = g();
+        let p = CostProfile::of(&g);
+        assert!(p.working_set_bytes() >= g.param_bytes());
+    }
+}

@@ -1,0 +1,310 @@
+//! The computation graph: a DAG of [`Op`] nodes with cached shapes.
+//!
+//! Every front-end transformation (compression operators η1–η6, Sec. III-A),
+//! partitioner (Sec. III-B), and engine pass (fusion, scheduling,
+//! Sec. III-C) operates on this IR. Shapes are propagated eagerly so
+//! analyses (MACs, params, activation bytes) are O(1) per node.
+
+use std::collections::HashMap;
+
+
+use super::op::Op;
+use super::tensor::Shape;
+
+/// Stable node identifier (index into `Graph::nodes`).
+pub type NodeId = usize;
+
+/// One operator instance in the graph.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    pub name: String,
+    pub op: Op,
+    /// Producer nodes, in positional order.
+    pub inputs: Vec<NodeId>,
+    /// Cached output shape.
+    pub shape: Shape,
+}
+
+/// A DAG of operators with one input node and one or more outputs
+/// (multi-output graphs model the backbone's early-exit branches).
+#[derive(Debug, Clone)]
+pub struct Graph {
+    pub name: String,
+    pub nodes: Vec<Node>,
+    pub input: NodeId,
+    pub outputs: Vec<NodeId>,
+}
+
+impl Graph {
+    /// Start a new graph with a single input of the given shape.
+    pub fn new(name: impl Into<String>, input_shape: Shape) -> Self {
+        let input = Node { id: 0, name: "input".into(), op: Op::Input, inputs: vec![], shape: input_shape };
+        Graph { name: name.into(), nodes: vec![input], input: 0, outputs: vec![] }
+    }
+
+    /// Append an op consuming `inputs`; returns the new node's id.
+    pub fn add(&mut self, name: impl Into<String>, op: Op, inputs: &[NodeId]) -> NodeId {
+        let shapes: Vec<&Shape> = inputs.iter().map(|&i| &self.nodes[i].shape).collect();
+        let shape = op.infer_shape(&shapes);
+        let id = self.nodes.len();
+        self.nodes.push(Node { id, name: name.into(), op, inputs: inputs.to_vec(), shape });
+        id
+    }
+
+    /// Mark a node as a graph output (e.g. an early-exit head).
+    pub fn mark_output(&mut self, id: NodeId) {
+        if !self.outputs.contains(&id) {
+            self.outputs.push(id);
+        }
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Consumers of each node (adjacency in the forward direction).
+    pub fn consumers(&self) -> Vec<Vec<NodeId>> {
+        let mut out = vec![Vec::new(); self.nodes.len()];
+        for n in &self.nodes {
+            for &i in &n.inputs {
+                out[i].push(n.id);
+            }
+        }
+        out
+    }
+
+    /// Topological order (Kahn). Nodes are stored append-only so stored
+    /// order is already topological, but transformations may reorder —
+    /// this recomputes from edges and panics on cycles.
+    pub fn topo_order(&self) -> Vec<NodeId> {
+        let mut indeg = vec![0usize; self.nodes.len()];
+        for n in &self.nodes {
+            indeg[n.id] = n.inputs.len();
+        }
+        let consumers = self.consumers();
+        let mut queue: Vec<NodeId> =
+            self.nodes.iter().filter(|n| n.inputs.is_empty()).map(|n| n.id).collect();
+        let mut order = Vec::with_capacity(self.nodes.len());
+        while let Some(id) = queue.pop() {
+            order.push(id);
+            for &c in &consumers[id] {
+                indeg[c] -= 1;
+                if indeg[c] == 0 {
+                    queue.push(c);
+                }
+            }
+        }
+        assert_eq!(order.len(), self.nodes.len(), "graph has a cycle");
+        order
+    }
+
+    /// Total trainable parameters (elements).
+    pub fn total_params(&self) -> usize {
+        self.nodes.iter().map(|n| self.node_params(n.id)).sum()
+    }
+
+    /// Total MACs for one forward pass at the graph's batch size.
+    pub fn total_macs(&self) -> usize {
+        self.nodes.iter().map(|n| self.node_macs(n.id)).sum()
+    }
+
+    /// Parameter count of one node.
+    pub fn node_params(&self, id: NodeId) -> usize {
+        let n = &self.nodes[id];
+        let shapes: Vec<&Shape> = n.inputs.iter().map(|&i| &self.nodes[i].shape).collect();
+        n.op.params(&shapes)
+    }
+
+    /// MAC count of one node.
+    pub fn node_macs(&self, id: NodeId) -> usize {
+        let n = &self.nodes[id];
+        if matches!(n.op, Op::Input) {
+            return 0;
+        }
+        let shapes: Vec<&Shape> = n.inputs.iter().map(|&i| &self.nodes[i].shape).collect();
+        n.op.macs(&shapes)
+    }
+
+    /// Bytes moved by one node: inputs read + params read + output written.
+    /// This is the paper's per-layer memory term `M_l` (Eq. 1/2).
+    pub fn node_mem_bytes(&self, id: NodeId) -> usize {
+        let n = &self.nodes[id];
+        if matches!(n.op, Op::Input) {
+            return 0;
+        }
+        let read: usize = n.inputs.iter().map(|&i| self.nodes[i].shape.bytes()).sum();
+        read + self.node_params(id) * 4 + n.shape.bytes()
+    }
+
+    /// Peak activation footprint in bytes assuming naive (no-reuse)
+    /// allocation: the sum of all live activations at the worst point of a
+    /// topological execution. The engine's lifetime-aware allocator
+    /// (Sec. III-C1 ❸) improves on this.
+    pub fn naive_activation_peak(&self) -> usize {
+        self.nodes.iter().map(|n| n.shape.bytes()).sum()
+    }
+
+    /// Model weight footprint in bytes (f32).
+    pub fn param_bytes(&self) -> usize {
+        self.total_params() * 4
+    }
+
+    /// Rebuild shapes after a structural edit. Nodes must still be in a
+    /// valid topological storage order.
+    pub fn recompute_shapes(&mut self) {
+        for i in 0..self.nodes.len() {
+            if matches!(self.nodes[i].op, Op::Input) {
+                continue;
+            }
+            let shapes: Vec<Shape> =
+                self.nodes[i].inputs.iter().map(|&j| self.nodes[j].shape.clone()).collect();
+            let refs: Vec<&Shape> = shapes.iter().collect();
+            self.nodes[i].shape = self.nodes[i].op.infer_shape(&refs);
+        }
+    }
+
+    /// Remove nodes not reachable (backwards) from any output, compacting
+    /// ids. Used after fusion/pruning passes.
+    pub fn prune_dead(&mut self) -> usize {
+        let mut live = vec![false; self.nodes.len()];
+        let mut stack: Vec<NodeId> = self.outputs.clone();
+        while let Some(id) = stack.pop() {
+            if live[id] {
+                continue;
+            }
+            live[id] = true;
+            for &i in &self.nodes[id].inputs {
+                stack.push(i);
+            }
+        }
+        live[self.input] = true;
+        let removed = live.iter().filter(|&&l| !l).count();
+        if removed == 0 {
+            return 0;
+        }
+        let mut remap: HashMap<NodeId, NodeId> = HashMap::new();
+        let mut new_nodes = Vec::with_capacity(self.nodes.len() - removed);
+        for n in &self.nodes {
+            if live[n.id] {
+                let new_id = new_nodes.len();
+                remap.insert(n.id, new_id);
+                let mut n2 = n.clone();
+                n2.id = new_id;
+                n2.inputs = n.inputs.iter().map(|i| remap[i]).collect();
+                new_nodes.push(n2);
+            }
+        }
+        self.input = remap[&self.input];
+        self.outputs = self.outputs.iter().map(|o| remap[o]).collect();
+        self.nodes = new_nodes;
+        removed
+    }
+
+    /// Change the batch size of the whole graph (input + all cached shapes).
+    pub fn with_batch(&self, n: usize) -> Graph {
+        let mut g = self.clone();
+        g.nodes[g.input].shape = g.nodes[g.input].shape.with_batch(n);
+        g.recompute_shapes();
+        g
+    }
+
+    /// Short per-layer summary table (for `--verbose` CLI output).
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "{}: {} nodes, {:.2}M params, {:.1}M MACs\n",
+            self.name,
+            self.nodes.len(),
+            self.total_params() as f64 / 1e6,
+            self.total_macs() as f64 / 1e6
+        );
+        for n in &self.nodes {
+            s.push_str(&format!(
+                "  [{:>3}] {:<18} {:<12} out={} macs={}\n",
+                n.id,
+                n.name,
+                n.op.kind(),
+                n.shape,
+                self.node_macs(n.id)
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::op::{Activation, Conv2dAttrs};
+    use crate::graph::tensor::DType;
+
+    fn tiny() -> Graph {
+        let mut g = Graph::new("tiny", Shape::nchw(1, 3, 8, 8));
+        let c = g.add("conv", Op::Conv2d(Conv2dAttrs::simple(4, 3, 1, 1)), &[g.input]);
+        let b = g.add("bn", Op::BatchNorm, &[c]);
+        let r = g.add("relu", Op::Act(Activation::ReLU), &[b]);
+        let p = g.add("gap", Op::GlobalAvgPool, &[r]);
+        let f = g.add("flat", Op::Flatten, &[p]);
+        let fc = g.add("fc", Op::FC { out: 10, bias: true }, &[f]);
+        g.mark_output(fc);
+        g
+    }
+
+    #[test]
+    fn builds_and_counts() {
+        let g = tiny();
+        assert_eq!(g.len(), 7);
+        assert_eq!(g.total_params(), 3 * 4 * 9 + 2 * 4 + 4 * 10 + 10);
+        assert!(g.total_macs() > 0);
+    }
+
+    #[test]
+    fn topo_covers_all_nodes() {
+        let g = tiny();
+        let order = g.topo_order();
+        assert_eq!(order.len(), g.len());
+        // every node appears after its inputs
+        let pos: HashMap<NodeId, usize> = order.iter().enumerate().map(|(i, &n)| (n, i)).collect();
+        for n in &g.nodes {
+            for &i in &n.inputs {
+                assert!(pos[&i] < pos[&n.id]);
+            }
+        }
+    }
+
+    #[test]
+    fn with_batch_rescales_macs_linearly() {
+        let g = tiny();
+        let g8 = g.with_batch(8);
+        assert_eq!(g8.total_macs(), 8 * g.total_macs());
+        assert_eq!(g8.total_params(), g.total_params());
+    }
+
+    #[test]
+    fn prune_dead_removes_unreferenced() {
+        let mut g = tiny();
+        // dangling branch
+        let dead = g.add("dead", Op::Act(Activation::Sigmoid), &[g.input]);
+        let _ = dead;
+        assert_eq!(g.prune_dead(), 1);
+        assert_eq!(g.len(), 7);
+        g.recompute_shapes(); // still valid
+    }
+
+    #[test]
+    fn clone_preserves_structure() {
+        let g = tiny();
+        let g2 = g.clone();
+        assert_eq!(g2.len(), g.len());
+        assert_eq!(g2.total_params(), g.total_params());
+        assert_eq!(g2.nodes[g2.input].shape.dtype, DType::F32);
+    }
+}

@@ -1,0 +1,16 @@
+//! Model-graph IR: tensors, operators, DAGs, and static cost analysis.
+//!
+//! This is the substrate every CrowdHMTware level operates on — the
+//! elastic-inference compression operators rewrite it, the partitioner
+//! cuts it, the engine fuses/schedules it, and the profiler costs it.
+
+pub mod analysis;
+#[allow(clippy::module_inception)]
+pub mod graph;
+pub mod op;
+pub mod tensor;
+
+pub use analysis::{CostProfile, LayerCost};
+pub use graph::{Graph, Node, NodeId};
+pub use op::{Activation, Conv2dAttrs, Op, PoolKind};
+pub use tensor::{DType, Shape};

@@ -1,0 +1,334 @@
+//! Operator definitions for the model-graph IR.
+//!
+//! Each op knows how to infer its output shape and report its parameter
+//! count and MAC count given concrete input shapes — the quantities the
+//! paper's profiler (Sec. III-D1) consumes as `C_l` (MACs) and `M_l`
+//! (parameter + activation bytes).
+
+
+use super::tensor::Shape;
+
+/// Elementwise activation kind (element-wise fusion targets, Sec. III-C1 ❶).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Activation {
+    ReLU,
+    ReLU6,
+    Sigmoid,
+    Tanh,
+}
+
+/// Pooling reduction kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PoolKind {
+    Max,
+    Avg,
+}
+
+/// 2-D convolution attributes. `groups == in_c` gives a depthwise conv
+/// (MobileNetV2, η1 group-wise factorization).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Conv2dAttrs {
+    pub out_c: usize,
+    pub kernel: (usize, usize),
+    pub stride: (usize, usize),
+    pub pad: (usize, usize),
+    pub groups: usize,
+    pub bias: bool,
+}
+
+impl Conv2dAttrs {
+    pub fn simple(out_c: usize, k: usize, stride: usize, pad: usize) -> Self {
+        Conv2dAttrs { out_c, kernel: (k, k), stride: (stride, stride), pad: (pad, pad), groups: 1, bias: false }
+    }
+
+    pub fn depthwise(c: usize, k: usize, stride: usize, pad: usize) -> Self {
+        Conv2dAttrs { out_c: c, kernel: (k, k), stride: (stride, stride), pad: (pad, pad), groups: c, bias: false }
+    }
+
+    pub fn pointwise(out_c: usize) -> Self {
+        Conv2dAttrs::simple(out_c, 1, 1, 0)
+    }
+}
+
+/// An operator in the computation graph.
+///
+/// `Fused*` variants are produced by the back-end engine's runtime operator
+/// fusion (Sec. III-C1 ❶); they carry the shapes/costs of their
+/// constituents merged into one kernel launch.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// Graph input placeholder.
+    Input,
+    Conv2d(Conv2dAttrs),
+    BatchNorm,
+    Act(Activation),
+    Pool { kind: PoolKind, kernel: usize, stride: usize },
+    /// Adaptive/global average pool to `(1, 1)` spatial.
+    GlobalAvgPool,
+    /// Adaptive average pool to a fixed `(h, w)` output (backbone branches).
+    AdaptiveAvgPool { out_hw: (usize, usize) },
+    Flatten,
+    FC { out: usize, bias: bool },
+    /// Elementwise residual add of two equal-shape inputs.
+    Add,
+    /// Channel concat of NCHW inputs.
+    Concat,
+    Dropout { p: f32 },
+    Softmax,
+    /// Fused Conv2d + BatchNorm (+ optional activation).
+    FusedConvBn { conv: Conv2dAttrs, act: Option<Activation> },
+    /// Fused FC + activation (linear fusion).
+    FusedFcAct { out: usize, act: Activation },
+    /// Fused chain of elementwise ops collapsed into one pass.
+    FusedElementwise { count: usize },
+    /// Fused pointwise-conv + elementwise (channel-wise fusion).
+    FusedPointwise { conv: Conv2dAttrs, act: Option<Activation> },
+    /// Fused reduction + elementwise epilogue (reduction fusion).
+    FusedReduce { kind: PoolKind, kernel: usize, stride: usize },
+    /// Layer normalization over the last axis (transformer unit).
+    LayerNorm,
+    /// Multi-head self-attention over `[N, S, D]`: QKV projections,
+    /// scaled dot-product, and the output projection (transformer unit).
+    SelfAttention { heads: usize },
+    /// Mean over the sequence axis: `[N, S, D]` → `[N, D]`.
+    SeqMean,
+}
+
+impl Op {
+    /// Human-readable op kind for logs and tables.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Op::Input => "Input",
+            Op::Conv2d(_) => "Conv2d",
+            Op::BatchNorm => "BatchNorm",
+            Op::Act(_) => "Act",
+            Op::Pool { .. } => "Pool",
+            Op::GlobalAvgPool => "GlobalAvgPool",
+            Op::AdaptiveAvgPool { .. } => "AdaptiveAvgPool",
+            Op::Flatten => "Flatten",
+            Op::FC { .. } => "FC",
+            Op::Add => "Add",
+            Op::Concat => "Concat",
+            Op::Dropout { .. } => "Dropout",
+            Op::Softmax => "Softmax",
+            Op::FusedConvBn { .. } => "FusedConvBn",
+            Op::FusedFcAct { .. } => "FusedFcAct",
+            Op::FusedElementwise { .. } => "FusedElementwise",
+            Op::FusedPointwise { .. } => "FusedPointwise",
+            Op::FusedReduce { .. } => "FusedReduce",
+            Op::LayerNorm => "LayerNorm",
+            Op::SelfAttention { .. } => "SelfAttention",
+            Op::SeqMean => "SeqMean",
+        }
+    }
+
+    /// True for ops whose output is a pure elementwise map of their input
+    /// (candidates for element-wise fusion).
+    pub fn is_elementwise(&self) -> bool {
+        matches!(self, Op::Act(_) | Op::Dropout { .. } | Op::BatchNorm | Op::Add | Op::LayerNorm)
+    }
+
+    /// True for reduction-style ops (reduction fusion candidates).
+    pub fn is_reduction(&self) -> bool {
+        matches!(self, Op::Pool { .. } | Op::GlobalAvgPool | Op::AdaptiveAvgPool { .. } | Op::Softmax)
+    }
+
+    /// Infer the output shape from the input shapes. Panics on rank/shape
+    /// mismatch — graph construction bugs should fail loudly.
+    pub fn infer_shape(&self, inputs: &[&Shape]) -> Shape {
+        match self {
+            Op::Input => panic!("Input shape is fixed at graph construction"),
+            Op::Conv2d(a) | Op::FusedConvBn { conv: a, .. } | Op::FusedPointwise { conv: a, .. } => {
+                let x = inputs[0];
+                let (h, w) = x.hw();
+                let oh = (h + 2 * a.pad.0 - a.kernel.0) / a.stride.0 + 1;
+                let ow = (w + 2 * a.pad.1 - a.kernel.1) / a.stride.1 + 1;
+                assert!(x.channels() % a.groups == 0, "conv groups must divide in_c");
+                Shape::nchw(x.batch(), a.out_c, oh, ow)
+            }
+            Op::BatchNorm | Op::Act(_) | Op::Dropout { .. } | Op::Softmax | Op::FusedElementwise { .. } => {
+                inputs[0].clone()
+            }
+            Op::Pool { kernel, stride, .. } | Op::FusedReduce { kernel, stride, .. } => {
+                let x = inputs[0];
+                let (h, w) = x.hw();
+                Shape::nchw(x.batch(), x.channels(), (h - kernel) / stride + 1, (w - kernel) / stride + 1)
+            }
+            Op::GlobalAvgPool => {
+                let x = inputs[0];
+                Shape::nchw(x.batch(), x.channels(), 1, 1)
+            }
+            Op::AdaptiveAvgPool { out_hw } => {
+                let x = inputs[0];
+                Shape::nchw(x.batch(), x.channels(), out_hw.0, out_hw.1)
+            }
+            Op::Flatten => {
+                let x = inputs[0];
+                Shape::nf(x.batch(), x.numel() / x.batch())
+            }
+            Op::FC { out, .. } | Op::FusedFcAct { out, .. } => {
+                // Applies over the last axis; leading axes (batch, and the
+                // sequence axis for transformers) are preserved.
+                let x = inputs[0];
+                let mut dims = x.dims.clone();
+                *dims.last_mut().unwrap() = *out;
+                Shape::new(&dims, x.dtype)
+            }
+            Op::Add => {
+                assert_eq!(inputs[0], inputs[1], "Add requires equal shapes");
+                inputs[0].clone()
+            }
+            Op::LayerNorm => inputs[0].clone(),
+            Op::SelfAttention { heads } => {
+                let x = inputs[0];
+                assert_eq!(x.dims.len(), 3, "SelfAttention expects [N,S,D]");
+                assert!(x.dims[2] % heads == 0, "heads must divide D");
+                x.clone()
+            }
+            Op::SeqMean => {
+                let x = inputs[0];
+                assert_eq!(x.dims.len(), 3, "SeqMean expects [N,S,D]");
+                Shape::nf(x.dims[0], x.dims[2])
+            }
+            Op::Concat => {
+                let n = inputs[0].batch();
+                let (h, w) = inputs[0].hw();
+                let mut c = 0;
+                for s in inputs {
+                    assert_eq!(s.batch(), n);
+                    assert_eq!(s.hw(), (h, w), "Concat requires equal spatial dims");
+                    c += s.channels();
+                }
+                Shape::nchw(n, c, h, w)
+            }
+        }
+    }
+
+    /// Trainable parameter count of this op.
+    pub fn params(&self, inputs: &[&Shape]) -> usize {
+        match self {
+            Op::Conv2d(a) => conv_params(inputs[0].channels(), a),
+            Op::FusedConvBn { conv, .. } => conv_params(inputs[0].channels(), conv) + 2 * conv.out_c,
+            Op::FusedPointwise { conv, .. } => conv_params(inputs[0].channels(), conv),
+            Op::BatchNorm => 2 * inputs[0].channels(),
+            Op::FC { out, bias } => {
+                let in_f = *inputs[0].dims.last().unwrap();
+                in_f * out + if *bias { *out } else { 0 }
+            }
+            Op::LayerNorm => 2 * inputs[0].dims.last().unwrap(),
+            Op::SelfAttention { .. } => {
+                // Q, K, V, and output projections: 4·D² + 4·D biases.
+                let d = inputs[0].dims[2];
+                4 * d * d + 4 * d
+            }
+            Op::FusedFcAct { out, .. } => inputs[0].features() * out + out,
+            _ => 0,
+        }
+    }
+
+    /// Multiply-accumulate count of this op (the paper's `C_l`).
+    /// Non-MAC elementwise work is charged at 1 "MAC-equivalent" per
+    /// element so fusion savings remain visible to the latency model.
+    pub fn macs(&self, inputs: &[&Shape]) -> usize {
+        match self {
+            Op::Input | Op::Flatten | Op::Dropout { .. } => 0,
+            Op::Conv2d(a) => conv_macs(inputs[0], a),
+            Op::FusedConvBn { conv, .. } | Op::FusedPointwise { conv, .. } => {
+                // BN/activation epilogue folds into the conv's output pass.
+                conv_macs(inputs[0], conv)
+            }
+            Op::BatchNorm | Op::Act(_) | Op::Softmax => inputs[0].numel(),
+            Op::LayerNorm => 5 * inputs[0].numel(),
+            Op::SelfAttention { .. } => {
+                // [N,S,D]: QKV+output projections (4·S·D²) + attention
+                // scores and weighted sum (2·S²·D), per batch row.
+                let (n, sq, d) = (inputs[0].dims[0], inputs[0].dims[1], inputs[0].dims[2]);
+                n * (4 * sq * d * d + 2 * sq * sq * d)
+            }
+            Op::SeqMean => inputs[0].numel(),
+            Op::FusedElementwise { .. } => inputs[0].numel(),
+            Op::Pool { kernel, .. } | Op::FusedReduce { kernel, .. } => {
+                let out = self.infer_shape(inputs);
+                out.numel() * kernel * kernel
+            }
+            Op::GlobalAvgPool => inputs[0].numel(),
+            Op::AdaptiveAvgPool { .. } => inputs[0].numel(),
+            Op::FC { out, .. } | Op::FusedFcAct { out, .. } => {
+                let x = inputs[0];
+                let in_f = *x.dims.last().unwrap();
+                (x.numel() / in_f) * in_f * out
+            }
+            Op::Add => inputs[0].numel(),
+            Op::Concat => 0,
+        }
+    }
+}
+
+fn conv_params(in_c: usize, a: &Conv2dAttrs) -> usize {
+    let w = (in_c / a.groups) * a.out_c * a.kernel.0 * a.kernel.1;
+    w + if a.bias { a.out_c } else { 0 }
+}
+
+fn conv_macs(x: &Shape, a: &Conv2dAttrs) -> usize {
+    let out = Op::Conv2d(a.clone()).infer_shape(&[x]);
+    let per_out = (x.channels() / a.groups) * a.kernel.0 * a.kernel.1;
+    out.numel() * per_out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_shape_and_costs() {
+        let x = Shape::nchw(1, 3, 32, 32);
+        let a = Conv2dAttrs::simple(16, 3, 1, 1);
+        let op = Op::Conv2d(a);
+        let out = op.infer_shape(&[&x]);
+        assert_eq!(out.dims, vec![1, 16, 32, 32]);
+        assert_eq!(op.params(&[&x]), 3 * 16 * 9);
+        assert_eq!(op.macs(&[&x]), 16 * 32 * 32 * 3 * 9);
+    }
+
+    #[test]
+    fn depthwise_conv_costs() {
+        let x = Shape::nchw(1, 32, 16, 16);
+        let op = Op::Conv2d(Conv2dAttrs::depthwise(32, 3, 1, 1));
+        assert_eq!(op.infer_shape(&[&x]).dims, vec![1, 32, 16, 16]);
+        assert_eq!(op.params(&[&x]), 32 * 9);
+        assert_eq!(op.macs(&[&x]), 32 * 16 * 16 * 9);
+    }
+
+    #[test]
+    fn fc_shape_params() {
+        let x = Shape::nf(4, 512);
+        let op = Op::FC { out: 100, bias: true };
+        assert_eq!(op.infer_shape(&[&x]).dims, vec![4, 100]);
+        assert_eq!(op.params(&[&x]), 512 * 100 + 100);
+        assert_eq!(op.macs(&[&x]), 512 * 100 * 4);
+    }
+
+    #[test]
+    fn concat_sums_channels() {
+        let a = Shape::nchw(1, 8, 4, 4);
+        let b = Shape::nchw(1, 24, 4, 4);
+        assert_eq!(Op::Concat.infer_shape(&[&a, &b]).channels(), 32);
+    }
+
+    #[test]
+    fn fused_conv_bn_matches_conv_macs_plus_bn_params() {
+        let x = Shape::nchw(1, 16, 8, 8);
+        let conv = Conv2dAttrs::simple(32, 3, 1, 1);
+        let plain = Op::Conv2d(conv.clone());
+        let fused = Op::FusedConvBn { conv, act: Some(Activation::ReLU) };
+        assert_eq!(fused.macs(&[&x]), plain.macs(&[&x]));
+        assert_eq!(fused.params(&[&x]), plain.params(&[&x]) + 2 * 32);
+    }
+
+    #[test]
+    fn pool_shape() {
+        let x = Shape::nchw(1, 8, 8, 8);
+        let op = Op::Pool { kind: PoolKind::Max, kernel: 2, stride: 2 };
+        assert_eq!(op.infer_shape(&[&x]).hw(), (4, 4));
+    }
+}

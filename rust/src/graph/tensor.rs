@@ -1,0 +1,137 @@
+//! Tensor shapes and dtypes for the model-graph IR.
+//!
+//! Activations are `[N, C, H, W]` (4-D) or `[N, F]` (2-D, after flatten/FC).
+//! The IR tracks shapes exactly so MACs / parameter counts / activation
+//! footprints match the published architectures layer-for-layer.
+
+
+/// Element type of a tensor. The engine's activation-compression pass
+/// rewrites stash dtypes from `F32` to `I8`/`I4` (Sec. III-C2 ❼).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    Bf16,
+    I8,
+    /// 4-bit packed; `bytes()` accounts for the half-byte packing.
+    I4,
+}
+
+impl DType {
+    /// Size of one element in bits.
+    pub fn bits(self) -> usize {
+        match self {
+            DType::F32 => 32,
+            DType::Bf16 => 16,
+            DType::I8 => 8,
+            DType::I4 => 4,
+        }
+    }
+}
+
+/// A concrete tensor shape. `dims` is never empty.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Shape {
+    pub dims: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl Shape {
+    pub fn new(dims: &[usize], dtype: DType) -> Self {
+        assert!(!dims.is_empty(), "shape must have at least one dim");
+        Shape { dims: dims.to_vec(), dtype }
+    }
+
+    /// `[N, C, H, W]` f32 activation shape.
+    pub fn nchw(n: usize, c: usize, h: usize, w: usize) -> Self {
+        Shape::new(&[n, c, h, w], DType::F32)
+    }
+
+    /// `[N, F]` f32 feature shape.
+    pub fn nf(n: usize, f: usize) -> Self {
+        Shape::new(&[n, f], DType::F32)
+    }
+
+    /// Total number of elements.
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Size in bytes (rounds 4-bit packing up).
+    pub fn bytes(&self) -> usize {
+        (self.numel() * self.dtype.bits() + 7) / 8
+    }
+
+    /// Batch dim (first axis).
+    pub fn batch(&self) -> usize {
+        self.dims[0]
+    }
+
+    /// Channel dim of an NCHW tensor.
+    pub fn channels(&self) -> usize {
+        assert!(self.dims.len() == 4, "channels() expects NCHW, got {:?}", self.dims);
+        self.dims[1]
+    }
+
+    /// Spatial `(H, W)` of an NCHW tensor.
+    pub fn hw(&self) -> (usize, usize) {
+        assert!(self.dims.len() == 4, "hw() expects NCHW, got {:?}", self.dims);
+        (self.dims[2], self.dims[3])
+    }
+
+    /// Same shape with a different dtype (used by activation compression).
+    pub fn with_dtype(&self, dtype: DType) -> Self {
+        Shape { dims: self.dims.clone(), dtype }
+    }
+
+    /// Same shape with a different batch size (used by the batcher).
+    pub fn with_batch(&self, n: usize) -> Self {
+        let mut dims = self.dims.clone();
+        dims[0] = n;
+        Shape { dims, dtype: self.dtype }
+    }
+
+    /// Feature count of a 2-D `[N, F]` tensor.
+    pub fn features(&self) -> usize {
+        assert!(self.dims.len() == 2, "features() expects [N,F], got {:?}", self.dims);
+        self.dims[1]
+    }
+}
+
+impl std::fmt::Display for Shape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let d: Vec<String> = self.dims.iter().map(|x| x.to_string()).collect();
+        write!(f, "{:?}[{}]", self.dtype, d.join(","))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn numel_and_bytes() {
+        let s = Shape::nchw(2, 3, 32, 32);
+        assert_eq!(s.numel(), 2 * 3 * 32 * 32);
+        assert_eq!(s.bytes(), s.numel() * 4);
+    }
+
+    #[test]
+    fn i4_packs_half_bytes() {
+        let s = Shape::new(&[3], DType::I4);
+        assert_eq!(s.bytes(), 2); // ceil(3*4/8)
+    }
+
+    #[test]
+    fn with_batch_changes_first_dim_only() {
+        let s = Shape::nchw(8, 64, 7, 7).with_batch(1);
+        assert_eq!(s.dims, vec![1, 64, 7, 7]);
+    }
+
+    #[test]
+    fn accessors() {
+        let s = Shape::nchw(1, 16, 8, 4);
+        assert_eq!(s.channels(), 16);
+        assert_eq!(s.hw(), (8, 4));
+        assert_eq!(Shape::nf(2, 10).features(), 10);
+    }
+}

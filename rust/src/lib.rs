@@ -1,0 +1,36 @@
+//! # CrowdHMTware (reproduction)
+//!
+//! A cross-level co-adaptation middleware for context-aware mobile DL
+//! deployment, reproduced as a three-layer Rust + JAX + Pallas stack:
+//!
+//! - **Front-end elastic inference** ([`compress`]): retraining-free
+//!   compression operators η1–η6 over a multi-branch backbone.
+//! - **Front-end scalable offloading** ([`partition`]): operator-level
+//!   pre-partitioning + graph-search cross-device combination.
+//! - **Back-end model-adaptive engine** ([`engine`]): operator fusion,
+//!   cross-core parallelism, tensor-lifetime memory allocation, backprop
+//!   reordering, recomputation, activation compression, memory swapping.
+//! - **Automated adaptation loop** ([`optimizer`]): resource monitor →
+//!   runtime profiler (Eq. 1/2) → heuristic optimizer (offline Pareto +
+//!   online AHP, Eq. 3).
+//!
+//! Substrates: a model-graph IR ([`graph`]), model zoo ([`models`]), device
+//! simulator ([`device`]), profiler ([`profiler`]), baselines
+//! ([`baselines`]), cross-framework transform ([`transform`]), and the
+//! PJRT-backed execution runtime ([`runtime`]) serving AOT-compiled JAX
+//! artifacts from the [`coordinator`].
+
+pub mod baselines;
+pub mod compress;
+pub mod coordinator;
+pub mod device;
+pub mod engine;
+pub mod experiments;
+pub mod graph;
+pub mod models;
+pub mod optimizer;
+pub mod partition;
+pub mod profiler;
+pub mod runtime;
+pub mod transform;
+pub mod util;

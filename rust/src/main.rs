@@ -1,0 +1,185 @@
+//! CrowdHMTware leader binary: CLI for inspecting the middleware,
+//! running the adaptation loop against simulated contexts, and serving
+//! AOT artifacts via PJRT.
+//!
+//! Usage:
+//!   crowdhmtware devices                      # list the device zoo
+//!   crowdhmtware summary <model>              # IR summary + static costs
+//!   crowdhmtware profile <model> <device>     # Eq. 1/2 estimates
+//!   crowdhmtware pareto <model> <device>      # offline evolutionary front
+//!   crowdhmtware adapt <model> <device> [n]   # run the adaptation loop
+//!   crowdhmtware serve [artifacts_dir]        # serve artifacts (PJRT)
+
+use crowdhmtware::device::{all_devices, device, DynamicsSim, ResourceMonitor};
+use crowdhmtware::graph::CostProfile;
+use crowdhmtware::models;
+use crowdhmtware::optimizer::{search, AdaptLoop, Budgets, SearchConfig};
+use crowdhmtware::profiler::{base_accuracy, estimate_energy, estimate_latency};
+use crowdhmtware::runtime::{Manifest, ModelRuntime};
+use crowdhmtware::util::table::{fmt_bytes, fmt_secs};
+use crowdhmtware::util::Table;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: crowdhmtware <devices|summary|profile|pareto|adapt|serve> [args]\n\
+         see rust/src/main.rs header for details"
+    );
+    std::process::exit(2)
+}
+
+fn model_or_die(name: &str) -> crowdhmtware::graph::Graph {
+    models::by_name(name, 100, 1).unwrap_or_else(|| {
+        eprintln!("unknown model '{name}' (resnet18|resnet34|vgg16|mobilenet_v2|backbone)");
+        std::process::exit(2)
+    })
+}
+
+fn device_or_die(name: &str) -> crowdhmtware::device::DeviceProfile {
+    device(name).unwrap_or_else(|| {
+        eprintln!("unknown device '{name}' — run `crowdhmtware devices`");
+        std::process::exit(2)
+    })
+}
+
+fn cmd_devices() {
+    let mut t = Table::new("Device zoo", &["name", "proc", "GMAC/s", "cache", "DRAM GB/s", "RAM", "battery"]);
+    for d in all_devices() {
+        t.row(&[
+            d.name.clone(),
+            format!("{:?}", d.proc),
+            format!("{:.1}", d.peak_gmacs),
+            fmt_bytes(d.cache_kb * 1024.0),
+            format!("{:.1}", d.dram_gbps),
+            fmt_bytes(d.memory_mb * 1024.0 * 1024.0),
+            d.battery_mah.map(|b| format!("{b:.0}mAh")).unwrap_or_else(|| "wall".into()),
+        ]);
+    }
+    t.print();
+}
+
+fn cmd_summary(model: &str) {
+    let g = model_or_die(model);
+    print!("{}", g.summary());
+}
+
+fn cmd_profile(model: &str, dev: &str) {
+    let g = model_or_die(model);
+    let d = device_or_die(dev);
+    let snap = ResourceMonitor::new(d).idle_snapshot();
+    let cost = CostProfile::of(&g);
+    let lat = estimate_latency(&cost, &snap);
+    let en = estimate_energy(&cost, &snap);
+    let mut t = Table::new(format!("{model} on {dev} (idle context)"), &["metric", "value"]);
+    t.row(&["MACs".into(), format!("{:.1}M", cost.total_macs() as f64 / 1e6)]);
+    t.row(&["params".into(), format!("{:.2}M", g.total_params() as f64 / 1e6)]);
+    t.row(&["latency".into(), fmt_secs(lat.total_s)]);
+    t.row(&["energy".into(), format!("{:.3}J", en.total_j)]);
+    t.row(&["cache-hit ε".into(), format!("{:.2}", lat.eps_avg)]);
+    t.row(&["memory".into(), fmt_bytes((g.param_bytes() + g.naive_activation_peak()) as f64)]);
+    t.print();
+}
+
+fn cmd_pareto(model: &str, dev: &str) {
+    let g = model_or_die(model);
+    let d = device_or_die(dev);
+    let snap = ResourceMonitor::new(d).idle_snapshot();
+    let acc = base_accuracy(model, "Cifar-100");
+    let front = search(&g, acc, &snap, &SearchConfig::default());
+    let mut t = Table::new(
+        format!("Pareto front: {model} on {dev}"),
+        &["config", "acc %", "latency", "energy", "memory"],
+    );
+    for e in &front {
+        t.row(&[
+            e.candidate.label(),
+            format!("{:.2}", e.metrics.accuracy),
+            fmt_secs(e.metrics.latency_s),
+            format!("{:.3}J", e.metrics.energy_j),
+            fmt_bytes(e.metrics.memory_bytes),
+        ]);
+    }
+    t.print();
+}
+
+fn cmd_adapt(model: &str, dev: &str, ticks: usize) {
+    let g = model_or_die(model);
+    let d = device_or_die(dev);
+    let mon = ResourceMonitor::new(d.clone());
+    let snap = mon.idle_snapshot();
+    let acc = base_accuracy(model, "Cifar-100");
+    let front = search(&g, acc, &snap, &SearchConfig::default());
+    let cands = front.into_iter().map(|e| e.candidate).collect();
+    let mut l = AdaptLoop::new(g, acc, cands, Budgets::unconstrained());
+    let mut sim = DynamicsSim::new(d, 42);
+    l.run(&mut sim, &mon, ticks);
+    let mut t = Table::new(
+        format!("Adaptation trace: {model} on {dev}, {ticks} ticks"),
+        &["tick", "battery", "mem MB", "config", "acc %", "latency", "energy"],
+    );
+    for e in &l.log {
+        t.row(&[
+            e.tick.to_string(),
+            format!("{:.0}%", e.battery * 100.0),
+            format!("{:.0}", e.mem_budget_mb),
+            e.chosen.clone(),
+            format!("{:.2}", e.accuracy),
+            fmt_secs(e.latency_s),
+            format!("{:.3}J", e.energy_j),
+        ]);
+    }
+    t.print();
+}
+
+fn cmd_serve(dir: Option<&str>) {
+    let dir = match dir {
+        Some(d) => std::path::PathBuf::from(d),
+        None => match Manifest::default_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("no artifacts found — run `make artifacts` first");
+                std::process::exit(1);
+            }
+        },
+    };
+    let mut rt = match ModelRuntime::load(dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("failed to load artifacts: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    println!("loaded {} variants, task={}", rt.manifest.variants.len(), rt.manifest.task);
+    let mut t = Table::new("Variant eval (real PJRT execution)", &["variant", "label", "build acc", "live acc"]);
+    let ids: Vec<(String, String, f64, usize)> = rt
+        .manifest
+        .variants
+        .iter()
+        .map(|v| (v.id.clone(), v.label.clone(), v.test_acc, *v.files.keys().next().unwrap_or(&1)))
+        .collect();
+    for (id, label, build_acc, batch) in ids {
+        let live = rt
+            .eval_accuracy(&id, batch)
+            .map(|a| format!("{:.1}%", a * 100.0))
+            .unwrap_or_else(|e| format!("err: {e}"));
+        t.row(&[id, label, format!("{:.1}%", build_acc * 100.0), live]);
+    }
+    t.print();
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let arg = |i: usize| args.get(i).map(|s| s.as_str());
+    match arg(0) {
+        Some("devices") => cmd_devices(),
+        Some("summary") => cmd_summary(arg(1).unwrap_or_else(|| usage())),
+        Some("profile") => cmd_profile(arg(1).unwrap_or_else(|| usage()), arg(2).unwrap_or("raspberrypi-4b")),
+        Some("pareto") => cmd_pareto(arg(1).unwrap_or("resnet18"), arg(2).unwrap_or("raspberrypi-4b")),
+        Some("adapt") => cmd_adapt(
+            arg(1).unwrap_or("resnet18"),
+            arg(2).unwrap_or("raspberrypi-4b"),
+            arg(3).and_then(|s| s.parse().ok()).unwrap_or(20),
+        ),
+        Some("serve") => cmd_serve(arg(1)),
+        _ => usage(),
+    }
+}

@@ -1,0 +1,205 @@
+//! The multi-branch early-exit backbone (Sec. III-A1): the pre-trained
+//! multi-variant network CrowdHMTware scales at runtime.
+//!
+//! Mirrors `python/compile/model.py` layer-for-layer: a downsampling conv
+//! stem, N stages, an early-exit head after each stage (adaptive avg-pool →
+//! dropout → FC), and a final head. The Rust IR copy is what the profiler,
+//! compression operators, and partitioner reason over; the JAX copy is
+//! what actually executes (AOT-lowered per variant).
+
+
+use crate::graph::{Activation, Conv2dAttrs, Graph, NodeId, Op, PoolKind, Shape};
+
+/// Structural hyperparameters of one backbone variant. The elastic
+/// inference component tunes these at runtime (θp in Eq. 3).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BackboneConfig {
+    /// Input spatial side (paper tasks range 32 (CIFAR) to 96 (StateFarm)).
+    pub input_hw: usize,
+    pub in_channels: usize,
+    pub num_classes: usize,
+    /// Channel width of each stage (η6 channel scaling multiplies these).
+    pub stage_widths: Vec<usize>,
+    /// Conv blocks per stage (η5 depth scaling shrinks these).
+    pub stage_depths: Vec<usize>,
+    /// Exit after stage i is present iff `exits[i]` (the last is always the
+    /// final head).
+    pub exits: Vec<bool>,
+    /// η1: SVD rank fraction in (0,1]; 1.0 = unfactorized convs.
+    pub svd_rank_frac: f64,
+    /// η2: replace 3×3 convs with Fire (squeeze-expand) modules.
+    pub fire: bool,
+    pub batch: usize,
+}
+
+impl Default for BackboneConfig {
+    fn default() -> Self {
+        BackboneConfig {
+            input_hw: 32,
+            in_channels: 3,
+            num_classes: 10,
+            stage_widths: vec![32, 64, 128],
+            stage_depths: vec![2, 2, 2],
+            exits: vec![true, true, true],
+            svd_rank_frac: 1.0,
+            fire: false,
+            batch: 1,
+        }
+    }
+}
+
+impl BackboneConfig {
+    /// Variant id string used to key AOT artifacts (must match
+    /// `python/compile/model.py::variant_id`).
+    pub fn variant_id(&self) -> String {
+        let w: Vec<String> = self.stage_widths.iter().map(|x| x.to_string()).collect();
+        let d: Vec<String> = self.stage_depths.iter().map(|x| x.to_string()).collect();
+        format!(
+            "w{}_d{}_r{}_f{}",
+            w.join("-"),
+            d.join("-"),
+            (self.svd_rank_frac * 100.0).round() as usize,
+            if self.fire { 1 } else { 0 }
+        )
+    }
+}
+
+fn conv_block(g: &mut Graph, name: &str, x: NodeId, out_c: usize, stride: usize, cfg: &BackboneConfig) -> NodeId {
+    if cfg.fire && stride == 1 {
+        // η2 Fire: squeeze 1×1 to out_c/4, expand 1×1 and 3×3 to out_c/2 each.
+        let s = out_c / 4;
+        let e = out_c / 2;
+        let sq = g.add(format!("{name}.squeeze"), Op::Conv2d(Conv2dAttrs::pointwise(s)), &[x]);
+        let sa = g.add(format!("{name}.squeeze.relu"), Op::Act(Activation::ReLU), &[sq]);
+        let e1 = g.add(format!("{name}.expand1"), Op::Conv2d(Conv2dAttrs::pointwise(e)), &[sa]);
+        let e3 = g.add(format!("{name}.expand3"), Op::Conv2d(Conv2dAttrs::simple(e, 3, 1, 1)), &[sa]);
+        let cat = g.add(format!("{name}.concat"), Op::Concat, &[e1, e3]);
+        g.add(format!("{name}.relu"), Op::Act(Activation::ReLU), &[cat])
+    } else if cfg.svd_rank_frac < 1.0 {
+        // η1 SVD factorization: k×k conv → (k×1, rank r) then (1×k, out_c).
+        let in_c = g.node(x).shape.channels();
+        let rank = (((in_c.min(out_c)) as f64) * cfg.svd_rank_frac).ceil().max(1.0) as usize;
+        let a = Conv2dAttrs { out_c: rank, kernel: (3, 1), stride: (stride, 1), pad: (1, 0), groups: 1, bias: false };
+        let b = Conv2dAttrs { out_c, kernel: (1, 3), stride: (1, stride), pad: (0, 1), groups: 1, bias: false };
+        let c1 = g.add(format!("{name}.svd_a"), Op::Conv2d(a), &[x]);
+        let c2 = g.add(format!("{name}.svd_b"), Op::Conv2d(b), &[c1]);
+        let bn = g.add(format!("{name}.bn"), Op::BatchNorm, &[c2]);
+        g.add(format!("{name}.relu"), Op::Act(Activation::ReLU), &[bn])
+    } else {
+        let c = g.add(format!("{name}.conv"), Op::Conv2d(Conv2dAttrs::simple(out_c, 3, stride, 1)), &[x]);
+        let bn = g.add(format!("{name}.bn"), Op::BatchNorm, &[c]);
+        g.add(format!("{name}.relu"), Op::Act(Activation::ReLU), &[bn])
+    }
+}
+
+fn exit_head(g: &mut Graph, name: &str, x: NodeId, cfg: &BackboneConfig) -> NodeId {
+    let pool = g.add(format!("{name}.aap"), Op::AdaptiveAvgPool { out_hw: (1, 1) }, &[x]);
+    let flat = g.add(format!("{name}.flatten"), Op::Flatten, &[pool]);
+    let drop = g.add(format!("{name}.drop"), Op::Dropout { p: 0.2 }, &[flat]);
+    let fc = g.add(format!("{name}.fc"), Op::FC { out: cfg.num_classes, bias: true }, &[drop]);
+    g.add(format!("{name}.softmax"), Op::Softmax, &[fc])
+}
+
+/// Build the multi-branch backbone IR for a given variant config.
+pub fn backbone(cfg: &BackboneConfig) -> Graph {
+    assert_eq!(cfg.stage_widths.len(), cfg.stage_depths.len());
+    assert_eq!(cfg.exits.len(), cfg.stage_widths.len());
+    let mut g = Graph::new(
+        format!("backbone_{}", cfg.variant_id()),
+        Shape::nchw(cfg.batch, cfg.in_channels, cfg.input_hw, cfg.input_hw),
+    );
+    // Downsampling stem: halve spatial dims, keep data volume manageable.
+    let input = g.input;
+    let mut x = conv_block(&mut g, "stem", input, cfg.stage_widths[0], 2, &BackboneConfig {
+        fire: false,
+        svd_rank_frac: 1.0,
+        ..cfg.clone()
+    });
+    for (si, (&w, &d)) in cfg.stage_widths.iter().zip(cfg.stage_depths.iter()).enumerate() {
+        for b in 0..d {
+            let stride = 1;
+            x = conv_block(&mut g, &format!("s{si}.b{b}"), x, w, stride, cfg);
+        }
+        let last_stage = si + 1 == cfg.stage_widths.len();
+        if !last_stage {
+            x = g.add(format!("s{si}.pool"), Op::Pool { kind: PoolKind::Max, kernel: 2, stride: 2 }, &[x]);
+        }
+        if cfg.exits[si] || last_stage {
+            let head = exit_head(&mut g, &format!("exit{si}"), x, cfg);
+            g.mark_output(head);
+        }
+    }
+    g
+}
+
+/// The sub-graph executed when inference exits at branch `exit_idx`
+/// (0-based over the *present* exits): everything up to and including that
+/// exit head. Early exits are the η5 depth-scaling mechanism at runtime.
+pub fn backbone_until_exit(cfg: &BackboneConfig, exit_idx: usize) -> Graph {
+    let mut g = backbone(cfg);
+    assert!(exit_idx < g.outputs.len(), "exit {exit_idx} of {}", g.outputs.len());
+    g.outputs = vec![g.outputs[exit_idx]];
+    g.prune_dead();
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_backbone_has_three_exits() {
+        let g = backbone(&BackboneConfig::default());
+        assert_eq!(g.outputs.len(), 3);
+    }
+
+    #[test]
+    fn earlier_exits_cost_less() {
+        let cfg = BackboneConfig::default();
+        let g0 = backbone_until_exit(&cfg, 0);
+        let g1 = backbone_until_exit(&cfg, 1);
+        let g2 = backbone_until_exit(&cfg, 2);
+        assert!(g0.total_macs() < g1.total_macs());
+        assert!(g1.total_macs() < g2.total_macs());
+    }
+
+    #[test]
+    fn svd_variant_reduces_params() {
+        let full = backbone(&BackboneConfig::default());
+        let svd = backbone(&BackboneConfig { svd_rank_frac: 0.25, ..Default::default() });
+        assert!(svd.total_params() < full.total_params());
+        assert!(svd.total_macs() < full.total_macs());
+    }
+
+    #[test]
+    fn fire_variant_reduces_params() {
+        let full = backbone(&BackboneConfig::default());
+        let fire = backbone(&BackboneConfig { fire: true, ..Default::default() });
+        assert!(fire.total_params() < full.total_params());
+    }
+
+    #[test]
+    fn width_scaling_reduces_cost() {
+        let full = backbone(&BackboneConfig::default());
+        let half = backbone(&BackboneConfig {
+            stage_widths: vec![16, 32, 64],
+            ..Default::default()
+        });
+        assert!(half.total_macs() < full.total_macs() / 2);
+    }
+
+    #[test]
+    fn variant_id_is_stable() {
+        let cfg = BackboneConfig::default();
+        assert_eq!(cfg.variant_id(), "w32-64-128_d2-2-2_r100_f0");
+    }
+
+    #[test]
+    fn until_exit_prunes_other_heads() {
+        let cfg = BackboneConfig::default();
+        let g = backbone_until_exit(&cfg, 0);
+        assert_eq!(g.outputs.len(), 1);
+        let softmaxes = g.nodes.iter().filter(|n| n.op.kind() == "Softmax").count();
+        assert_eq!(softmaxes, 1);
+    }
+}

@@ -1,0 +1,118 @@
+//! MobileNetV2 IR builder (Sandler et al., CVPR'18) — inverted residual
+//! bottlenecks. Used as the handcrafted-compression baseline in Fig. 10 /
+//! Table III.
+
+use crate::graph::{Activation, Conv2dAttrs, Graph, NodeId, Op, Shape};
+
+fn conv_bn_relu6(g: &mut Graph, name: &str, x: NodeId, attrs: Conv2dAttrs) -> NodeId {
+    let c = g.add(format!("{name}.conv"), Op::Conv2d(attrs), &[x]);
+    let b = g.add(format!("{name}.bn"), Op::BatchNorm, &[c]);
+    g.add(format!("{name}.relu6"), Op::Act(Activation::ReLU6), &[b])
+}
+
+/// One inverted residual block: 1×1 expand → 3×3 depthwise → 1×1 project,
+/// with a residual add when stride == 1 and in_c == out_c.
+fn inverted_residual(g: &mut Graph, name: &str, x: NodeId, out_c: usize, stride: usize, expand: usize) -> NodeId {
+    let in_c = g.node(x).shape.channels();
+    let hidden = in_c * expand;
+    let mut h = x;
+    if expand != 1 {
+        h = conv_bn_relu6(g, &format!("{name}.expand"), h, Conv2dAttrs::pointwise(hidden));
+    }
+    h = conv_bn_relu6(g, &format!("{name}.dw"), h, Conv2dAttrs::depthwise(hidden, 3, stride, 1));
+    let c = g.add(format!("{name}.project.conv"), Op::Conv2d(Conv2dAttrs::pointwise(out_c)), &[h]);
+    let p = g.add(format!("{name}.project.bn"), Op::BatchNorm, &[c]);
+    if stride == 1 && in_c == out_c {
+        g.add(format!("{name}.add"), Op::Add, &[p, x])
+    } else {
+        p
+    }
+}
+
+/// MobileNetV2 with width multiplier 1.0.
+///
+/// `imagenet=false` gives the 32×32 variant (first stride-2 stages become
+/// stride-1, standard CIFAR adaptation).
+pub fn mobilenet_v2(imagenet: bool, num_classes: usize, batch: usize) -> Graph {
+    if imagenet {
+        mobilenet_v2_for(224, 3, num_classes, batch)
+    } else {
+        mobilenet_v2_for(32, 3, num_classes, batch)
+    }
+}
+
+/// MobileNetV2 at an arbitrary input size/channel count (used to build a
+/// fair task-shaped baseline for Table III). Small inputs keep the early
+/// stages at stride 1, like the standard CIFAR adaptation.
+pub fn mobilenet_v2_for(hw: usize, in_channels: usize, num_classes: usize, batch: usize) -> Graph {
+    let imagenet = hw > 96;
+    let input = Shape::nchw(batch, in_channels, hw, hw);
+    let mut g = Graph::new("mobilenet_v2", input);
+    // (expand, out_c, repeats, stride)
+    let cfg: &[(usize, usize, usize, usize)] = &[
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    let stem_stride = if imagenet { 2 } else { 1 };
+    let input = g.input;
+    let mut x = conv_bn_relu6(&mut g, "stem", input, Conv2dAttrs::simple(32, 3, stem_stride, 1));
+    for (bi, &(t, c, n, s)) in cfg.iter().enumerate() {
+        for r in 0..n {
+            let mut stride = if r == 0 { s } else { 1 };
+            // CIFAR adaptation: keep early spatial dims.
+            if !imagenet && bi < 2 {
+                stride = 1;
+            }
+            x = inverted_residual(&mut g, &format!("b{bi}.r{r}"), x, c, stride, t);
+        }
+    }
+    x = conv_bn_relu6(&mut g, "head", x, Conv2dAttrs::pointwise(1280));
+    let gap = g.add("gap", Op::GlobalAvgPool, &[x]);
+    let flat = g.add("flatten", Op::Flatten, &[gap]);
+    let fc = g.add("fc", Op::FC { out: num_classes, bias: true }, &[flat]);
+    let sm = g.add("softmax", Op::Softmax, &[fc]);
+    g.mark_output(sm);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn imagenet_params_match_published() {
+        // Published MobileNetV2 @1000 classes: ~3.50M params.
+        let g = mobilenet_v2(true, 1000, 1);
+        let p = g.total_params() as f64 / 1e6;
+        assert!((3.2..3.8).contains(&p), "Mparams={p}");
+    }
+
+    #[test]
+    fn imagenet_macs_match_published() {
+        // Published: ~300M MACs @224².
+        let g = mobilenet_v2(true, 1000, 1);
+        let m = g.total_macs() as f64 / 1e6;
+        assert!((280.0..360.0).contains(&m), "MMACs={m}");
+    }
+
+    #[test]
+    fn lighter_than_resnet18() {
+        use crate::models::resnet::{resnet18, ResNetStyle};
+        let m = mobilenet_v2(false, 100, 1);
+        let r = resnet18(ResNetStyle::Cifar, 100, 1);
+        assert!(m.total_macs() < r.total_macs());
+        assert!(m.total_params() < r.total_params());
+    }
+
+    #[test]
+    fn residual_adds_present() {
+        let g = mobilenet_v2(false, 10, 1);
+        let adds = g.nodes.iter().filter(|n| n.op.kind() == "Add").count();
+        assert!(adds >= 8, "expected inverted-residual adds, got {adds}");
+    }
+}

@@ -1,0 +1,107 @@
+//! IR builders for every model the paper evaluates: ResNet-18/34, VGG-16,
+//! MobileNetV2, and the multi-branch early-exit backbone of Sec. III-A.
+
+pub mod backbone;
+pub mod mobilenet;
+pub mod resnet;
+pub mod transformer;
+pub mod vgg;
+
+pub use backbone::{backbone, backbone_until_exit, BackboneConfig};
+pub use mobilenet::{mobilenet_v2, mobilenet_v2_for};
+pub use resnet::{resnet18, resnet34, ResNetStyle};
+pub use transformer::{transformer, TransformerConfig};
+pub use vgg::vgg16;
+
+use crate::graph::Graph;
+
+/// The four task/dataset shapes used across the paper's evaluation
+/// (Table III): acoustic events (UbiSound), CIFAR-100, ImageNet, HAR,
+/// StateFarm driver behaviour.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Task {
+    UbiSound,
+    Cifar100,
+    ImageNet,
+    Har,
+    StateFarm,
+}
+
+impl Task {
+    pub fn name(self) -> &'static str {
+        match self {
+            Task::UbiSound => "UbiSound",
+            Task::Cifar100 => "Cifar-100",
+            Task::ImageNet => "ImageNet",
+            Task::Har => "Har",
+            Task::StateFarm => "StateFarm",
+        }
+    }
+
+    /// (input side, channels, classes) for the task's canonical tensor
+    /// shape. UbiSound uses spectrogram patches, HAR uses stacked IMU
+    /// windows — both are 2-D single/3-channel grids at these sizes.
+    pub fn shape(self) -> (usize, usize, usize) {
+        match self {
+            Task::UbiSound => (32, 1, 9),
+            Task::Cifar100 => (32, 3, 100),
+            Task::ImageNet => (224, 3, 1000),
+            Task::Har => (24, 1, 6),
+            Task::StateFarm => (96, 3, 10),
+        }
+    }
+
+    /// A backbone config sized for this task.
+    pub fn backbone_config(self, batch: usize) -> BackboneConfig {
+        let (hw, c, classes) = self.shape();
+        BackboneConfig {
+            input_hw: hw,
+            in_channels: c,
+            num_classes: classes,
+            batch,
+            ..Default::default()
+        }
+    }
+}
+
+/// Build a named evaluation model ("resnet18", "resnet34", "vgg16",
+/// "mobilenet_v2", "backbone") at CIFAR scale.
+pub fn by_name(name: &str, num_classes: usize, batch: usize) -> Option<Graph> {
+    match name {
+        "resnet18" => Some(resnet18(ResNetStyle::Cifar, num_classes, batch)),
+        "resnet34" => Some(resnet34(ResNetStyle::Cifar, num_classes, batch)),
+        "vgg16" => Some(vgg16(false, num_classes, batch)),
+        "mobilenet_v2" => Some(mobilenet_v2(false, num_classes, batch)),
+        "backbone" => {
+            let mut cfg = BackboneConfig::default();
+            cfg.num_classes = num_classes;
+            cfg.batch = batch;
+            Some(backbone(&cfg))
+        }
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_name_builds_all() {
+        for n in ["resnet18", "resnet34", "vgg16", "mobilenet_v2", "backbone"] {
+            let g = by_name(n, 100, 1).unwrap();
+            assert!(g.total_macs() > 0, "{n}");
+        }
+        assert!(by_name("nope", 10, 1).is_none());
+    }
+
+    #[test]
+    fn task_configs_build() {
+        for t in [Task::UbiSound, Task::Cifar100, Task::ImageNet, Task::Har, Task::StateFarm] {
+            let cfg = t.backbone_config(1);
+            let g = backbone(&cfg);
+            let (_, _, classes) = t.shape();
+            assert_eq!(g.node(g.outputs[0]).shape.features(), classes);
+        }
+    }
+}

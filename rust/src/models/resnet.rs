@@ -1,0 +1,121 @@
+//! ResNet-18/34 IR builders (He et al., CVPR'16), CIFAR- and
+//! ImageNet-style stems. Layer shapes match torchvision so MACs/params
+//! agree with the numbers the paper's tables are computed from.
+
+use crate::graph::{Activation, Conv2dAttrs, Graph, NodeId, Op, Shape};
+
+/// Which stem/downsampling schedule to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ResNetStyle {
+    /// 3×3 stem, 32×32 inputs (CIFAR-100 in the paper's experiments).
+    Cifar,
+    /// 7×7/2 stem + maxpool, 224×224 inputs (ImageNet).
+    ImageNet,
+}
+
+fn conv_bn_relu(g: &mut Graph, name: &str, x: NodeId, attrs: Conv2dAttrs) -> NodeId {
+    let c = g.add(format!("{name}.conv"), Op::Conv2d(attrs), &[x]);
+    let b = g.add(format!("{name}.bn"), Op::BatchNorm, &[c]);
+    g.add(format!("{name}.relu"), Op::Act(Activation::ReLU), &[b])
+}
+
+fn conv_bn(g: &mut Graph, name: &str, x: NodeId, attrs: Conv2dAttrs) -> NodeId {
+    let c = g.add(format!("{name}.conv"), Op::Conv2d(attrs), &[x]);
+    g.add(format!("{name}.bn"), Op::BatchNorm, &[c])
+}
+
+/// One BasicBlock: 3×3 conv-bn-relu, 3×3 conv-bn, residual add, relu.
+fn basic_block(g: &mut Graph, name: &str, x: NodeId, out_c: usize, stride: usize) -> NodeId {
+    let in_c = g.node(x).shape.channels();
+    let a = conv_bn_relu(g, &format!("{name}.a"), x, Conv2dAttrs::simple(out_c, 3, stride, 1));
+    let b = conv_bn(g, &format!("{name}.b"), a, Conv2dAttrs::simple(out_c, 3, 1, 1));
+    let short = if stride != 1 || in_c != out_c {
+        conv_bn(g, &format!("{name}.down"), x, Conv2dAttrs::simple(out_c, 1, stride, 0))
+    } else {
+        x
+    };
+    let add = g.add(format!("{name}.add"), Op::Add, &[b, short]);
+    g.add(format!("{name}.relu"), Op::Act(Activation::ReLU), &[add])
+}
+
+fn build(name: &str, blocks: [usize; 4], style: ResNetStyle, num_classes: usize, batch: usize) -> Graph {
+    let input_shape = match style {
+        ResNetStyle::Cifar => Shape::nchw(batch, 3, 32, 32),
+        ResNetStyle::ImageNet => Shape::nchw(batch, 3, 224, 224),
+    };
+    let mut g = Graph::new(name, input_shape);
+    let input = g.input;
+    let mut x = match style {
+        ResNetStyle::Cifar => conv_bn_relu(&mut g, "stem", input, Conv2dAttrs::simple(64, 3, 1, 1)),
+        ResNetStyle::ImageNet => {
+            let s = conv_bn_relu(&mut g, "stem", input, Conv2dAttrs::simple(64, 7, 2, 3));
+            g.add("stem.pool", Op::Pool { kind: crate::graph::PoolKind::Max, kernel: 2, stride: 2 }, &[s])
+        }
+    };
+    let widths = [64usize, 128, 256, 512];
+    for (stage, (&n_blocks, &w)) in blocks.iter().zip(widths.iter()).enumerate() {
+        for b in 0..n_blocks {
+            let stride = if stage > 0 && b == 0 { 2 } else { 1 };
+            x = basic_block(&mut g, &format!("s{stage}.b{b}"), x, w, stride);
+        }
+    }
+    let gap = g.add("gap", Op::GlobalAvgPool, &[x]);
+    let flat = g.add("flatten", Op::Flatten, &[gap]);
+    let fc = g.add("fc", Op::FC { out: num_classes, bias: true }, &[flat]);
+    let sm = g.add("softmax", Op::Softmax, &[fc]);
+    g.mark_output(sm);
+    g
+}
+
+/// ResNet-18: [2, 2, 2, 2] BasicBlocks.
+pub fn resnet18(style: ResNetStyle, num_classes: usize, batch: usize) -> Graph {
+    build("resnet18", [2, 2, 2, 2], style, num_classes, batch)
+}
+
+/// ResNet-34: [3, 4, 6, 3] BasicBlocks.
+pub fn resnet34(style: ResNetStyle, num_classes: usize, batch: usize) -> Graph {
+    build("resnet34", [3, 4, 6, 3], style, num_classes, batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet18_imagenet_param_count_matches_torchvision() {
+        // torchvision resnet18 (1000 classes): 11,689,512 params.
+        let g = resnet18(ResNetStyle::ImageNet, 1000, 1);
+        let p = g.total_params();
+        assert!((11_500_000..11_900_000).contains(&p), "params={p}");
+    }
+
+    #[test]
+    fn resnet18_imagenet_macs_close_to_1_8g() {
+        // Published: ~1.82 GMACs @224².
+        let g = resnet18(ResNetStyle::ImageNet, 1000, 1);
+        let m = g.total_macs() as f64 / 1e9;
+        assert!((1.6..2.1).contains(&m), "GMACs={m}");
+    }
+
+    #[test]
+    fn resnet34_deeper_than_18() {
+        let g18 = resnet18(ResNetStyle::Cifar, 100, 1);
+        let g34 = resnet34(ResNetStyle::Cifar, 100, 1);
+        assert!(g34.total_params() > g18.total_params());
+        assert!(g34.total_macs() > g18.total_macs());
+        assert!(g34.len() > g18.len());
+    }
+
+    #[test]
+    fn cifar_output_is_batch_by_classes() {
+        let g = resnet18(ResNetStyle::Cifar, 100, 4);
+        let out = &g.node(g.outputs[0]).shape;
+        assert_eq!(out.dims, vec![4, 100]);
+    }
+
+    #[test]
+    fn topo_is_valid() {
+        let g = resnet34(ResNetStyle::ImageNet, 1000, 1);
+        assert_eq!(g.topo_order().len(), g.len());
+    }
+}

@@ -1,0 +1,135 @@
+//! Tiny transformer-encoder IR builder. The paper's profiler claims to
+//! cover transformer model units — "projectors Q, K, V, LayerNorm, and
+//! the feed-forward network (FFN)" (Sec. III-D1) — this model exercises
+//! that claim: Eq. 1/2 cost the encoder exactly like a CNN, and the
+//! depth-scaling operator (η5) drops encoder blocks through the same
+//! identity-shortcut mechanism it uses for residual CNN blocks.
+
+use crate::graph::{Activation, Graph, NodeId, Op, Shape};
+
+/// Encoder hyperparameters.
+#[derive(Debug, Clone)]
+pub struct TransformerConfig {
+    /// Sequence length (tokens/patches).
+    pub seq: usize,
+    /// Model width D.
+    pub dim: usize,
+    pub heads: usize,
+    /// FFN expansion factor (FFN hidden = dim × expand).
+    pub expand: usize,
+    pub layers: usize,
+    pub num_classes: usize,
+    pub batch: usize,
+}
+
+impl Default for TransformerConfig {
+    fn default() -> Self {
+        TransformerConfig { seq: 64, dim: 128, heads: 4, expand: 4, layers: 4, num_classes: 10, batch: 1 }
+    }
+}
+
+fn encoder_block(g: &mut Graph, name: &str, x: NodeId, cfg: &TransformerConfig) -> NodeId {
+    // Pre-norm attention sub-block with residual.
+    let ln1 = g.add(format!("{name}.ln1"), Op::LayerNorm, &[x]);
+    let attn = g.add(format!("{name}.attn"), Op::SelfAttention { heads: cfg.heads }, &[ln1]);
+    let add1 = g.add(format!("{name}.add1"), Op::Add, &[attn, x]);
+    // Pre-norm FFN sub-block with residual.
+    let ln2 = g.add(format!("{name}.ln2"), Op::LayerNorm, &[add1]);
+    let f1 = g.add(format!("{name}.ffn1"), Op::FC { out: cfg.dim * cfg.expand, bias: true }, &[ln2]);
+    let gelu = g.add(format!("{name}.gelu"), Op::Act(Activation::Tanh), &[f1]);
+    let f2 = g.add(format!("{name}.ffn2"), Op::FC { out: cfg.dim, bias: true }, &[gelu]);
+    g.add(format!("{name}.add2"), Op::Add, &[f2, add1])
+}
+
+/// Build the encoder: `[N, S, D]` input (pre-embedded tokens/patches) →
+/// L encoder blocks → sequence mean → classifier head.
+pub fn transformer(cfg: &TransformerConfig) -> Graph {
+    let mut g = Graph::new(
+        format!("transformer_s{}d{}l{}", cfg.seq, cfg.dim, cfg.layers),
+        Shape::new(&[cfg.batch, cfg.seq, cfg.dim], crate::graph::DType::F32),
+    );
+    let mut x = g.input;
+    for l in 0..cfg.layers {
+        x = encoder_block(&mut g, &format!("blk{l}"), x, cfg);
+    }
+    let ln = g.add("final.ln", Op::LayerNorm, &[x]);
+    let pool = g.add("final.pool", Op::SeqMean, &[ln]);
+    let fc = g.add("final.fc", Op::FC { out: cfg.num_classes, bias: true }, &[pool]);
+    let sm = g.add("final.softmax", Op::Softmax, &[fc]);
+    g.mark_output(sm);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::operators::depth_scale;
+    use crate::device::{device, ResourceMonitor};
+    use crate::graph::CostProfile;
+    use crate::profiler::{estimate_energy, estimate_latency};
+
+    #[test]
+    fn params_match_formula() {
+        let cfg = TransformerConfig::default();
+        let g = transformer(&cfg);
+        let d = cfg.dim;
+        let per_block = (4 * d * d + 4 * d)                 // attention
+            + 2 * (2 * d)                                   // two layer norms
+            + (d * 4 * d + 4 * d) + (4 * d * d + d);        // FFN in+out
+        let expect = cfg.layers * per_block + 2 * d + d * cfg.num_classes + cfg.num_classes;
+        assert_eq!(g.total_params(), expect);
+    }
+
+    #[test]
+    fn macs_scale_quadratically_in_seq() {
+        let a = transformer(&TransformerConfig { seq: 32, ..Default::default() });
+        let b = transformer(&TransformerConfig { seq: 64, ..Default::default() });
+        let ratio = b.total_macs() as f64 / a.total_macs() as f64;
+        // Projections scale linearly, attention quadratically: 2 < r < 4.
+        assert!((2.0..4.0).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn profiler_costs_transformer() {
+        // The paper's claim: the unit-based Eq. 1/2 apply to transformers.
+        let g = transformer(&TransformerConfig::default());
+        let snap = ResourceMonitor::new(device("xiaomi-mi6").unwrap()).idle_snapshot();
+        let cost = CostProfile::of(&g);
+        let lat = estimate_latency(&cost, &snap);
+        let en = estimate_energy(&cost, &snap);
+        assert!(lat.total_s > 0.0 && lat.total_s.is_finite());
+        assert!(en.total_j > 0.0 && en.total_j.is_finite());
+    }
+
+    #[test]
+    fn depth_scaling_drops_encoder_blocks() {
+        // η5 works on transformer residuals exactly like CNN residuals.
+        let g = transformer(&TransformerConfig::default());
+        let half = depth_scale(&g, 0.5);
+        assert!(half.total_macs() < g.total_macs());
+        assert!(half.len() < g.len());
+        assert_eq!(half.node(half.outputs[0]).shape.features(), 10);
+    }
+
+    #[test]
+    fn exchange_roundtrip() {
+        let g = transformer(&TransformerConfig::default());
+        let g2 = crate::transform::from_json(&crate::transform::to_json(&g)).unwrap();
+        assert_eq!(g2.total_macs(), g.total_macs());
+        assert_eq!(g2.total_params(), g.total_params());
+    }
+
+    #[test]
+    fn output_shape_is_classes() {
+        let g = transformer(&TransformerConfig { batch: 4, num_classes: 7, ..Default::default() });
+        assert_eq!(g.node(g.outputs[0]).shape.dims, vec![4, 7]);
+    }
+
+    #[test]
+    fn memalloc_handles_3d_tensors() {
+        let g = transformer(&TransformerConfig::default());
+        let plan = crate::engine::allocate(&g);
+        assert!(plan.arena_bytes >= plan.peak_live_bytes);
+        assert!(plan.arena_bytes < plan.naive_bytes);
+    }
+}

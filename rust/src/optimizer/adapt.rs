@@ -1,0 +1,377 @@
+//! The automated cross-level adaptation loop (Sec. III-D, Fig. 6):
+//! monitor → profiler → optimizer → actuate, at a fixed tick rate
+//! (~1 Hz in the paper).
+//!
+//! Each tick: sample the resource monitor; re-cost the current Pareto
+//! front under the live snapshot (Eq. 1/2 respond to DVFS/contention);
+//! derive μ from battery via AHP; filter by the time/memory budgets of
+//! Eq. 3; pick the arg-max of `μ·Norm(A) − (1−μ)·Norm(E)`; if even the
+//! best on-device point violates budgets and a peer exists, fall back to
+//! offloading (Sec. III-B); apply hysteresis so the system doesn't
+//! thrash between near-equal configurations.
+
+use crate::device::{ResourceMonitor, ResourceSnapshot};
+use crate::graph::Graph;
+use crate::partition::{plan_offload, prepartition, DeviceState, OffloadPlan, Topology};
+
+use super::ahp::mu_from_context;
+use super::candidate::{evaluate, Candidate, Evaluated, Prepared};
+
+/// Application budgets (Eq. 3 constraints).
+#[derive(Debug, Clone, Copy)]
+pub struct Budgets {
+    pub latency_s: f64,
+    pub memory_bytes: f64,
+}
+
+impl Budgets {
+    pub fn unconstrained() -> Self {
+        Budgets { latency_s: f64::INFINITY, memory_bytes: f64::INFINITY }
+    }
+}
+
+/// What the loop decided this tick.
+#[derive(Debug, Clone)]
+pub enum Decision {
+    /// Keep the current configuration.
+    Hold,
+    /// Switch to a new on-device configuration.
+    Switch(Evaluated),
+    /// Offload: best on-device choice + the cross-device plan.
+    Offload(Evaluated, OffloadPlan),
+    /// Nothing satisfies the budgets even with offloading; run the least-
+    /// violating configuration (the paper's "extreme state", Table II 25%).
+    BestEffort(Evaluated),
+}
+
+/// One adaptation-loop event for traces (Fig. 13 regeneration).
+#[derive(Debug, Clone)]
+pub struct TickLog {
+    pub tick: usize,
+    pub battery: f64,
+    pub mem_budget_mb: f64,
+    pub chosen: String,
+    pub offloaded: bool,
+    pub accuracy: f64,
+    pub latency_s: f64,
+    pub energy_j: f64,
+    pub memory_mb: f64,
+}
+
+fn detailed(c: &super::Candidate) -> String {
+    let mut s = c.spec.detailed_label();
+    if c.offload {
+        s.push_str("+offl");
+    }
+    s
+}
+
+/// The adaptation controller.
+pub struct AdaptLoop {
+    pub base: Graph,
+    pub base_acc: f64,
+    pub front: Vec<Candidate>,
+    pub budgets: Budgets,
+    /// Switch only if the new score beats the old by this margin.
+    pub hysteresis: f64,
+    /// Live-data drift level fed by the deployment (Fig. 13 evening = 0.5).
+    pub drift: f64,
+    pub tta: bool,
+    current: Option<Evaluated>,
+    pub peers: Vec<DeviceState>,
+    pub topology: Topology,
+    pub log: Vec<TickLog>,
+    tick_no: usize,
+    /// Per-candidate prepared state (variant+fusion+arena), built lazily
+    /// on the first tick — the per-tick cost is then profiling only.
+    prepared: Vec<Prepared>,
+}
+
+impl AdaptLoop {
+    pub fn new(base: Graph, base_acc: f64, front: Vec<Candidate>, budgets: Budgets) -> Self {
+        AdaptLoop {
+            base,
+            base_acc,
+            front,
+            budgets,
+            hysteresis: 0.02,
+            drift: 0.0,
+            tta: true,
+            current: None,
+            peers: Vec::new(),
+            topology: Topology::new(),
+            log: Vec::new(),
+            tick_no: 0,
+            prepared: Vec::new(),
+        }
+    }
+
+    pub fn with_peers(mut self, peers: Vec<DeviceState>, topology: Topology) -> Self {
+        self.peers = peers;
+        self.topology = topology;
+        self
+    }
+
+    pub fn current(&self) -> Option<&Evaluated> {
+        self.current.as_ref()
+    }
+
+    /// Score per Eq. 3 with min-max normalization over the candidate set.
+    fn scores(evals: &[Evaluated], mu: f64) -> Vec<f64> {
+        let amin = evals.iter().map(|e| e.metrics.accuracy).fold(f64::MAX, f64::min);
+        let amax = evals.iter().map(|e| e.metrics.accuracy).fold(f64::MIN, f64::max);
+        let emin = evals.iter().map(|e| e.metrics.energy_j).fold(f64::MAX, f64::min);
+        let emax = evals.iter().map(|e| e.metrics.energy_j).fold(f64::MIN, f64::max);
+        let na = |a: f64| if amax > amin { (a - amin) / (amax - amin) } else { 0.5 };
+        let ne = |e: f64| if emax > emin { (e - emin) / (emax - emin) } else { 0.5 };
+        evals
+            .iter()
+            .map(|e| mu * na(e.metrics.accuracy) - (1.0 - mu) * ne(e.metrics.energy_j))
+            .collect()
+    }
+
+    /// Run one adaptation tick against a monitor snapshot.
+    pub fn tick(&mut self, snap: &ResourceSnapshot) -> Decision {
+        self.tick_no += 1;
+        let mem_budget = self.budgets.memory_bytes.min(snap.mem_budget_bytes);
+        if self.prepared.len() != self.front.len() {
+            self.prepared = self.front.iter().map(|c| Prepared::new(&self.base, c)).collect();
+        }
+        let evals: Vec<Evaluated> = self
+            .prepared
+            .iter()
+            .map(|p| p.evaluate(self.base_acc, snap, self.drift, self.tta, self.tta))
+            .collect();
+
+        let mem_pressure = 1.0 - (snap.context.mem_avail_frac).clamp(0.0, 1.0);
+        let latency_pressure = if self.budgets.latency_s.is_finite() { 0.6 } else { 0.2 };
+        let mu = mu_from_context(snap.battery, mem_pressure, latency_pressure);
+        let scores = Self::scores(&evals, mu);
+
+        // Feasible on-device candidates.
+        let feasible: Vec<usize> = (0..evals.len())
+            .filter(|&i| {
+                evals[i].metrics.latency_s <= self.budgets.latency_s
+                    && evals[i].metrics.memory_bytes <= mem_budget
+            })
+            .collect();
+
+        let decision = if let Some(&best) = feasible
+            .iter()
+            .max_by(|&&a, &&b| scores[a].partial_cmp(&scores[b]).unwrap_or(std::cmp::Ordering::Equal))
+        {
+            let chosen = evals[best].clone();
+            match &self.current {
+                Some(cur) if cur.candidate == chosen.candidate => Decision::Hold,
+                Some(cur) => {
+                    // Hysteresis: only switch for a clear improvement or if
+                    // the current config became infeasible.
+                    let cur_eval = evaluate(&self.base, &cur.candidate, self.base_acc, snap, self.drift, self.tta);
+                    let cur_feasible = cur_eval.metrics.latency_s <= self.budgets.latency_s
+                        && cur_eval.metrics.memory_bytes <= mem_budget;
+                    let mut pool = evals.clone();
+                    pool.push(cur_eval.clone());
+                    let s = Self::scores(&pool, mu);
+                    let cur_score = s[pool.len() - 1];
+                    if !cur_feasible || s[best] > cur_score + self.hysteresis {
+                        Decision::Switch(chosen)
+                    } else {
+                        Decision::Hold
+                    }
+                }
+                None => Decision::Switch(chosen),
+            }
+        } else if !self.peers.is_empty() {
+            // No on-device candidate fits: offload the best-scoring one.
+            let best = (0..evals.len())
+                .max_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap_or(std::cmp::Ordering::Equal))
+                .unwrap();
+            let variant = evals[best].candidate.spec.apply(&self.base);
+            let pp = prepartition(&variant);
+            let mut devices = vec![DeviceState { snap: snap.clone(), mem_budget }];
+            devices.extend(self.peers.iter().cloned());
+            let plan = plan_offload(&variant, &pp, &devices, &self.topology);
+            Decision::Offload(evals[best].clone(), plan)
+        } else {
+            // Least-violating best effort: minimize memory overshoot.
+            let best = (0..evals.len())
+                .min_by(|&a, &b| {
+                    evals[a]
+                        .metrics
+                        .memory_bytes
+                        .partial_cmp(&evals[b].metrics.memory_bytes)
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                })
+                .unwrap();
+            Decision::BestEffort(evals[best].clone())
+        };
+
+        // Actuate + log.
+        let (chosen, offloaded, plan_lat, plan_mem) = match &decision {
+            Decision::Hold => (self.current.clone().unwrap(), false, None, None),
+            Decision::Switch(e) | Decision::BestEffort(e) => (e.clone(), false, None, None),
+            Decision::Offload(e, p) => (e.clone(), true, Some(p.latency_s), Some(p.local_memory_bytes)),
+        };
+        self.current = Some(chosen.clone());
+        self.log.push(TickLog {
+            tick: self.tick_no,
+            battery: snap.battery,
+            mem_budget_mb: mem_budget / 1e6,
+            chosen: detailed(&chosen.candidate),
+            offloaded,
+            accuracy: chosen.metrics.accuracy,
+            latency_s: plan_lat.unwrap_or(chosen.metrics.latency_s),
+            energy_j: chosen.metrics.energy_j,
+            memory_mb: plan_mem.unwrap_or(chosen.metrics.memory_bytes) / (1024.0 * 1024.0),
+        });
+        decision
+    }
+
+    /// Convenience: run `n` ticks against a dynamics simulator.
+    pub fn run(&mut self, sim: &mut crate::device::DynamicsSim, monitor: &ResourceMonitor, n: usize) {
+        for _ in 0..n {
+            let ctx = sim.tick().clone();
+            let snap = monitor.sample(&ctx);
+            self.tick(&snap);
+            // Feed the chosen configuration's energy back into the battery.
+            if let Some(cur) = &self.current {
+                sim.consume_energy(cur.metrics.energy_j);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{OperatorKind, VariantSpec};
+    use crate::device::{device, ContextState, DynamicsSim};
+    use crate::engine::EngineConfig;
+    use crate::models::{resnet18, ResNetStyle};
+    use crate::optimizer::evolution::{search, SearchConfig};
+
+    fn small_front() -> Vec<Candidate> {
+        vec![
+            Candidate::baseline(),
+            Candidate { engine: EngineConfig::all(), ..Candidate::baseline() },
+            Candidate {
+                spec: VariantSpec::single(OperatorKind::ChannelScale, 0.5),
+                engine: EngineConfig::all(),
+                offload: false,
+            },
+            Candidate {
+                spec: VariantSpec::pair((OperatorKind::LowRank, 0.25), (OperatorKind::ChannelScale, 0.5)),
+                engine: EngineConfig::all(),
+                offload: false,
+            },
+        ]
+    }
+
+    fn mk_loop(budgets: Budgets) -> AdaptLoop {
+        let g = resnet18(ResNetStyle::Cifar, 100, 1);
+        AdaptLoop::new(g, 76.23, small_front(), budgets)
+    }
+
+    #[test]
+    fn first_tick_switches() {
+        let mut l = mk_loop(Budgets::unconstrained());
+        let snap = ResourceMonitor::new(device("raspberrypi-4b").unwrap()).idle_snapshot();
+        match l.tick(&snap) {
+            Decision::Switch(_) => {}
+            d => panic!("expected Switch, got {d:?}"),
+        }
+        assert!(l.current().is_some());
+    }
+
+    #[test]
+    fn stable_context_holds() {
+        let mut l = mk_loop(Budgets::unconstrained());
+        let snap = ResourceMonitor::new(device("raspberrypi-4b").unwrap()).idle_snapshot();
+        l.tick(&snap);
+        for _ in 0..5 {
+            match l.tick(&snap) {
+                Decision::Hold => {}
+                d => panic!("expected Hold, got {d:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn memory_squeeze_forces_smaller_variant() {
+        let mon = ResourceMonitor::new(device("raspberrypi-4b").unwrap());
+        let mut l = mk_loop(Budgets::unconstrained());
+        let idle = mon.idle_snapshot();
+        l.tick(&idle);
+        let relaxed = l.current().unwrap().metrics.memory_bytes;
+        // Squeeze memory to half of what the relaxed choice needs.
+        let mut l2 = mk_loop(Budgets { latency_s: f64::INFINITY, memory_bytes: relaxed * 0.5 });
+        l2.tick(&idle);
+        let squeezed = l2.current().unwrap().metrics.memory_bytes;
+        assert!(squeezed <= relaxed * 0.5, "squeezed={squeezed} relaxed={relaxed}");
+    }
+
+    #[test]
+    fn infeasible_with_peer_offloads() {
+        let g = resnet18(ResNetStyle::Cifar, 100, 1);
+        let mut l = AdaptLoop::new(g, 76.23, vec![Candidate::baseline()], Budgets { latency_s: f64::INFINITY, memory_bytes: 1024.0 * 1024.0 });
+        let peer = DeviceState {
+            snap: ResourceMonitor::new(device("jetson-nx").unwrap()).idle_snapshot(),
+            mem_budget: 8e9,
+        };
+        l = l.with_peers(vec![peer], Topology::wifi_pair("raspberrypi-4b", "jetson-nx"));
+        let snap = ResourceMonitor::new(device("raspberrypi-4b").unwrap()).idle_snapshot();
+        match l.tick(&snap) {
+            Decision::Offload(_, plan) => assert!(!plan.placements.is_empty()),
+            d => panic!("expected Offload, got {d:?}"),
+        }
+    }
+
+    #[test]
+    fn infeasible_without_peer_best_effort() {
+        let mut l = mk_loop(Budgets { latency_s: f64::INFINITY, memory_bytes: 1024.0 });
+        let snap = ResourceMonitor::new(device("raspberrypi-4b").unwrap()).idle_snapshot();
+        match l.tick(&snap) {
+            Decision::BestEffort(_) => {}
+            d => panic!("expected BestEffort, got {d:?}"),
+        }
+    }
+
+    #[test]
+    fn low_battery_shifts_to_energy_saving() {
+        let mon = ResourceMonitor::new(device("xiaomi-mi6").unwrap());
+        let mut ctx_full = ContextState::idle();
+        ctx_full.battery = 1.0;
+        let mut ctx_low = ContextState::idle();
+        ctx_low.battery = 0.05;
+        let mut l1 = mk_loop(Budgets::unconstrained());
+        l1.tick(&mon.sample(&ctx_full));
+        let e_full = l1.current().unwrap().metrics.energy_j;
+        let mut l2 = mk_loop(Budgets::unconstrained());
+        l2.tick(&mon.sample(&ctx_low));
+        let e_low = l2.current().unwrap().metrics.energy_j;
+        assert!(e_low <= e_full, "low battery must not pick higher energy: {e_low} vs {e_full}");
+    }
+
+    #[test]
+    fn full_loop_with_dynamics_runs_and_logs() {
+        let d = device("xiaomi-mi6").unwrap();
+        let mon = ResourceMonitor::new(d.clone());
+        let mut sim = DynamicsSim::new(d, 99);
+        let mut l = mk_loop(Budgets::unconstrained());
+        l.run(&mut sim, &mon, 30);
+        assert_eq!(l.log.len(), 30);
+        // Battery drained by consumed energy.
+        assert!(l.log.last().unwrap().battery < 1.0);
+    }
+
+    #[test]
+    fn loop_with_evolved_front() {
+        let g = resnet18(ResNetStyle::Cifar, 100, 1);
+        let snap = ResourceMonitor::new(device("raspberrypi-4b").unwrap()).idle_snapshot();
+        let front = search(&g, 76.23, &snap, &SearchConfig { population: 12, generations: 2, seed: 3 });
+        let cands: Vec<Candidate> = front.into_iter().map(|e| e.candidate).collect();
+        let mut l = AdaptLoop::new(g, 76.23, cands, Budgets::unconstrained());
+        l.tick(&snap);
+        assert!(l.current().is_some());
+    }
+}

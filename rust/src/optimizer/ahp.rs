@@ -1,0 +1,137 @@
+//! Analytic Hierarchy Process (Sec. III-D2, online stage): derives
+//! importance coefficients for the optimization criteria from a pairwise
+//! comparison matrix via the principal eigenvector (power iteration), with
+//! Saaty's consistency check.
+
+/// Compute AHP weights from a (reciprocal) pairwise comparison matrix.
+/// Returns the normalized principal eigenvector.
+pub fn weights(matrix: &[Vec<f64>]) -> Vec<f64> {
+    let n = matrix.len();
+    assert!(n > 0);
+    for row in matrix {
+        assert_eq!(row.len(), n, "matrix must be square");
+    }
+    let mut v = vec![1.0 / n as f64; n];
+    for _ in 0..100 {
+        let mut nv = vec![0.0; n];
+        for i in 0..n {
+            for j in 0..n {
+                nv[i] += matrix[i][j] * v[j];
+            }
+        }
+        let sum: f64 = nv.iter().sum();
+        for x in nv.iter_mut() {
+            *x /= sum;
+        }
+        let diff: f64 = nv.iter().zip(v.iter()).map(|(a, b)| (a - b).abs()).sum();
+        v = nv;
+        if diff < 1e-12 {
+            break;
+        }
+    }
+    v
+}
+
+/// Saaty consistency ratio; < 0.1 is conventionally acceptable.
+pub fn consistency_ratio(matrix: &[Vec<f64>]) -> f64 {
+    let n = matrix.len();
+    if n <= 2 {
+        return 0.0;
+    }
+    let w = weights(matrix);
+    // λ_max estimate.
+    let mut lambda = 0.0;
+    for i in 0..n {
+        let mut s = 0.0;
+        for j in 0..n {
+            s += matrix[i][j] * w[j];
+        }
+        lambda += s / w[i];
+    }
+    lambda /= n as f64;
+    let ci = (lambda - n as f64) / (n as f64 - 1.0);
+    // Saaty random indices.
+    const RI: [f64; 11] = [0.0, 0.0, 0.0, 0.58, 0.90, 1.12, 1.24, 1.32, 1.41, 1.45, 1.49];
+    let ri = RI[n.min(10)];
+    if ri == 0.0 {
+        0.0
+    } else {
+        ci / ri
+    }
+}
+
+/// Build the criteria comparison matrix for (accuracy, energy, latency,
+/// memory) from the runtime context: low battery inflates energy's
+/// importance; low free memory inflates memory's; tight deadlines inflate
+/// latency's. Intensities are mapped onto Saaty's 1–9 scale.
+pub fn context_matrix(battery: f64, mem_pressure: f64, latency_pressure: f64) -> Vec<Vec<f64>> {
+    // Importance intensity of each criterion vs accuracy.
+    let e = 1.0 + 8.0 * (1.0 - battery.clamp(0.0, 1.0)); // 1..9
+    let m = 1.0 + 8.0 * mem_pressure.clamp(0.0, 1.0);
+    let t = 1.0 + 8.0 * latency_pressure.clamp(0.0, 1.0);
+    // Pairwise: a[i][j] = intensity_i / intensity_j (perfectly consistent
+    // by construction, which keeps CR ≈ 0).
+    let ints = [1.0, e, t, m]; // A, E, T, M
+    (0..4).map(|i| (0..4).map(|j| ints[i] / ints[j]).collect()).collect()
+}
+
+/// μ for Eq. 3's score `μ·Norm(A) − (1−μ)·Norm(E)`: the paper sets
+/// μ = Norm(B_r) (battery level), refined here by the AHP weights so the
+/// full criteria context shifts it consistently.
+pub fn mu_from_context(battery: f64, mem_pressure: f64, latency_pressure: f64) -> f64 {
+    let w = weights(&context_matrix(battery, mem_pressure, latency_pressure));
+    // The paper sets μ = Norm(B_r); the AHP accuracy-vs-energy weight
+    // modulates it (2× so that a balanced matrix at full battery keeps
+    // μ ≈ 1, i.e. pure accuracy preference).
+    (battery.clamp(0.0, 1.0) * 2.0 * w[0] / (w[0] + w[1])).clamp(0.05, 0.95)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_matrix_uniform_weights() {
+        let m = vec![vec![1.0; 3]; 3];
+        let w = weights(&m);
+        for x in &w {
+            assert!((x - 1.0 / 3.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn known_example() {
+        // A 2× more important than B, 4× more than C; B 2× more than C.
+        let m = vec![
+            vec![1.0, 2.0, 4.0],
+            vec![0.5, 1.0, 2.0],
+            vec![0.25, 0.5, 1.0],
+        ];
+        let w = weights(&m);
+        assert!((w[0] - 4.0 / 7.0).abs() < 1e-6);
+        assert!((w[1] - 2.0 / 7.0).abs() < 1e-6);
+        assert!(consistency_ratio(&m) < 0.01);
+    }
+
+    #[test]
+    fn low_battery_raises_energy_weight() {
+        let full = weights(&context_matrix(1.0, 0.1, 0.1));
+        let empty = weights(&context_matrix(0.1, 0.1, 0.1));
+        assert!(empty[1] > full[1] * 2.0, "energy weight {} vs {}", empty[1], full[1]);
+    }
+
+    #[test]
+    fn mu_tracks_battery() {
+        let hi = mu_from_context(1.0, 0.1, 0.1);
+        let lo = mu_from_context(0.05, 0.1, 0.1);
+        assert!(hi > 0.4);
+        assert!(lo < hi);
+        assert!(lo >= 0.05);
+    }
+
+    #[test]
+    fn context_matrix_is_consistent() {
+        let m = context_matrix(0.4, 0.6, 0.3);
+        assert!(consistency_ratio(&m) < 0.02);
+    }
+}

@@ -1,0 +1,247 @@
+//! Offline evolutionary search for the Pareto front (Sec. III-D2).
+//!
+//! NSGA-II-style: non-dominated sorting + crowding distance over the
+//! objectives (maximize accuracy A, minimize energy E, minimize latency T,
+//! minimize memory M). The paper builds this front offline ("ranking
+//! diverse model and system configurations based on pre-tested accuracy
+//! and energy"), injecting channel-wise variance for diversity; the online
+//! stage then just selects from it.
+
+use crate::device::ResourceSnapshot;
+use crate::graph::Graph;
+use crate::util::Rng;
+
+use super::candidate::{evaluate, Candidate, Evaluated};
+
+/// `a` dominates `b` if it is no worse on all four objectives and strictly
+/// better on at least one.
+pub fn dominates(a: &Evaluated, b: &Evaluated) -> bool {
+    let ge = a.metrics.accuracy >= b.metrics.accuracy
+        && a.metrics.energy_j <= b.metrics.energy_j
+        && a.metrics.latency_s <= b.metrics.latency_s
+        && a.metrics.memory_bytes <= b.metrics.memory_bytes;
+    let gt = a.metrics.accuracy > b.metrics.accuracy
+        || a.metrics.energy_j < b.metrics.energy_j
+        || a.metrics.latency_s < b.metrics.latency_s
+        || a.metrics.memory_bytes < b.metrics.memory_bytes;
+    ge && gt
+}
+
+/// Extract the non-dominated subset.
+pub fn pareto_front(pop: &[Evaluated]) -> Vec<Evaluated> {
+    pop.iter()
+        .filter(|a| !pop.iter().any(|b| dominates(b, a)))
+        .cloned()
+        .collect()
+}
+
+/// Fast non-dominated sort: returns front index per individual (0 = best).
+fn front_ranks(pop: &[Evaluated]) -> Vec<usize> {
+    let n = pop.len();
+    let mut dominated_by = vec![0usize; n];
+    let mut dominates_list: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for i in 0..n {
+        for j in 0..n {
+            if i != j && dominates(&pop[i], &pop[j]) {
+                dominates_list[i].push(j);
+                dominated_by[j] += 1;
+            }
+        }
+    }
+    let mut rank = vec![usize::MAX; n];
+    let mut current: Vec<usize> = (0..n).filter(|&i| dominated_by[i] == 0).collect();
+    let mut r = 0;
+    while !current.is_empty() {
+        let mut next = Vec::new();
+        for &i in &current {
+            rank[i] = r;
+            for &j in &dominates_list[i] {
+                dominated_by[j] -= 1;
+                if dominated_by[j] == 0 {
+                    next.push(j);
+                }
+            }
+        }
+        current = next;
+        r += 1;
+    }
+    rank
+}
+
+/// Crowding distance within one front (bigger = more isolated = keep).
+fn crowding(pop: &[Evaluated], idxs: &[usize]) -> Vec<f64> {
+    let m = idxs.len();
+    let mut dist = vec![0.0f64; m];
+    if m <= 2 {
+        return vec![f64::INFINITY; m];
+    }
+    let objs: [fn(&Evaluated) -> f64; 4] = [
+        |e| -e.metrics.accuracy,
+        |e| e.metrics.energy_j,
+        |e| e.metrics.latency_s,
+        |e| e.metrics.memory_bytes,
+    ];
+    for f in objs {
+        let mut order: Vec<usize> = (0..m).collect();
+        order.sort_by(|&a, &b| f(&pop[idxs[a]]).partial_cmp(&f(&pop[idxs[b]])).unwrap());
+        let lo = f(&pop[idxs[order[0]]]);
+        let hi = f(&pop[idxs[order[m - 1]]]);
+        let span = (hi - lo).abs().max(1e-12);
+        dist[order[0]] = f64::INFINITY;
+        dist[order[m - 1]] = f64::INFINITY;
+        for k in 1..m - 1 {
+            dist[order[k]] += (f(&pop[idxs[order[k + 1]]]) - f(&pop[idxs[order[k - 1]]])) / span;
+        }
+    }
+    dist
+}
+
+/// Search configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SearchConfig {
+    pub population: usize,
+    pub generations: usize,
+    pub seed: u64,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        SearchConfig { population: 32, generations: 8, seed: 42 }
+    }
+}
+
+/// Run the offline evolutionary search on one (model, device) context and
+/// return the final Pareto front.
+pub fn search(base: &Graph, base_acc: f64, snap: &ResourceSnapshot, cfg: &SearchConfig) -> Vec<Evaluated> {
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+    // Seed population: grid variants + random, always including baseline
+    // and full-engine (the paper seeds with known-good configurations).
+    let mut pop: Vec<Evaluated> = Vec::new();
+    let mut seen = std::collections::HashSet::new();
+    let mut push = |c: Candidate, pop: &mut Vec<Evaluated>, seen: &mut std::collections::HashSet<String>| {
+        let key = c.label();
+        if seen.insert(key) {
+            pop.push(evaluate(base, &c, base_acc, snap, 0.0, true));
+        }
+    };
+    push(Candidate::baseline(), &mut pop, &mut seen);
+    push(
+        Candidate { engine: crate::engine::EngineConfig::all(), ..Candidate::baseline() },
+        &mut pop,
+        &mut seen,
+    );
+    while pop.len() < cfg.population {
+        push(Candidate::random(&mut rng), &mut pop, &mut seen);
+    }
+
+    for _gen in 0..cfg.generations {
+        // Offspring: tournament pick, crossover, mutate (channel-wise
+        // variance injection is the ChannelScale mutation arm).
+        let mut offspring = Vec::with_capacity(cfg.population / 2);
+        for _ in 0..cfg.population / 2 {
+            let a = &pop[rng.gen_index(pop.len())];
+            let b = &pop[rng.gen_index(pop.len())];
+            let parent = if dominates(a, b) { a } else { b };
+            let other = &pop[rng.gen_index(pop.len())];
+            let mut child = parent.candidate.crossover(&other.candidate, &mut rng);
+            child.mutate(&mut rng);
+            offspring.push(child);
+        }
+        for c in offspring {
+            let key = c.label();
+            if seen.insert(key) {
+                pop.push(evaluate(base, &c, base_acc, snap, 0.0, true));
+            }
+        }
+        // Environmental selection: rank + crowding truncation.
+        let ranks = front_ranks(&pop);
+        let mut idx: Vec<usize> = (0..pop.len()).collect();
+        // Group by rank, compute crowding per front.
+        let mut crowd = vec![0.0f64; pop.len()];
+        let max_rank = ranks.iter().copied().max().unwrap_or(0);
+        for r in 0..=max_rank {
+            let front: Vec<usize> = (0..pop.len()).filter(|&i| ranks[i] == r).collect();
+            let d = crowding(&pop, &front);
+            for (k, &i) in front.iter().enumerate() {
+                crowd[i] = d[k];
+            }
+        }
+        idx.sort_by(|&a, &b| {
+            ranks[a]
+                .cmp(&ranks[b])
+                .then(crowd[b].partial_cmp(&crowd[a]).unwrap_or(std::cmp::Ordering::Equal))
+        });
+        idx.truncate(cfg.population);
+        let mut new_pop = Vec::with_capacity(cfg.population);
+        let mut keep: Vec<bool> = vec![false; pop.len()];
+        for &i in &idx {
+            keep[i] = true;
+        }
+        for (i, e) in pop.into_iter().enumerate() {
+            if keep[i] {
+                new_pop.push(e);
+            }
+        }
+        pop = new_pop;
+    }
+    pareto_front(&pop)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{device, ResourceMonitor};
+    use crate::models::{resnet18, ResNetStyle};
+
+    fn setup() -> (Graph, ResourceSnapshot) {
+        let g = resnet18(ResNetStyle::Cifar, 100, 1);
+        let snap = ResourceMonitor::new(device("raspberrypi-4b").unwrap()).idle_snapshot();
+        (g, snap)
+    }
+
+    #[test]
+    fn front_is_mutually_nondominated() {
+        let (g, snap) = setup();
+        let front = search(&g, 76.23, &snap, &SearchConfig { population: 16, generations: 3, seed: 7 });
+        assert!(front.len() >= 2, "front={}", front.len());
+        for a in &front {
+            for b in &front {
+                assert!(!dominates(a, b) || a.candidate == b.candidate);
+            }
+        }
+    }
+
+    #[test]
+    fn front_spans_tradeoff() {
+        let (g, snap) = setup();
+        let front = search(&g, 76.23, &snap, &SearchConfig { population: 24, generations: 5, seed: 11 });
+        let accs: Vec<f64> = front.iter().map(|e| e.metrics.accuracy).collect();
+        let lats: Vec<f64> = front.iter().map(|e| e.metrics.latency_s).collect();
+        let amax = accs.iter().cloned().fold(f64::MIN, f64::max);
+        let amin = accs.iter().cloned().fold(f64::MAX, f64::min);
+        let lmax = lats.iter().cloned().fold(f64::MIN, f64::max);
+        let lmin = lats.iter().cloned().fold(f64::MAX, f64::min);
+        // A real tradeoff surface: spread in both objectives.
+        assert!(amax - amin > 0.5, "accuracy span {amin}..{amax}");
+        assert!(lmax / lmin > 1.3, "latency span {lmin}..{lmax}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (g, snap) = setup();
+        let cfg = SearchConfig { population: 12, generations: 2, seed: 5 };
+        let f1 = search(&g, 76.23, &snap, &cfg);
+        let f2 = search(&g, 76.23, &snap, &cfg);
+        assert_eq!(f1.len(), f2.len());
+        for (a, b) in f1.iter().zip(f2.iter()) {
+            assert_eq!(a.candidate.label(), b.candidate.label());
+        }
+    }
+
+    #[test]
+    fn dominates_is_strict_partial_order() {
+        let (g, snap) = setup();
+        let e = evaluate(&g, &Candidate::baseline(), 76.0, &snap, 0.0, true);
+        assert!(!dominates(&e, &e));
+    }
+}

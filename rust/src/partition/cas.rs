@@ -1,0 +1,143 @@
+//! CAS baseline (Wang et al., IMWUT'21): context-aware adaptive surgery —
+//! a heuristic single-split partitioner. It scores each candidate cut
+//! point by a weighted heuristic (transfer size vs compute balance) and
+//! picks greedily, rather than searching the full assignment space like
+//! CrowdHMTware's planner — fast but suboptimal, which is exactly the gap
+//! Fig. 11 measures.
+
+use crate::graph::{CostProfile, Graph};
+use crate::profiler::estimate_latency;
+
+use super::network::Topology;
+use super::offload::{DeviceState, OffloadPlan, Placement};
+use super::prepartition::PrePartition;
+
+/// CAS heuristic: pick the single cut that minimizes
+/// `α·transfer_bytes_norm + (1−α)·|compute_balance − speed_balance|`.
+pub fn cas_plan(graph: &Graph, pp: &PrePartition, local: &DeviceState, remote: &DeviceState, topo: &Topology, alpha: f64) -> OffloadPlan {
+    let cost = CostProfile::of(graph);
+    let lat_local = estimate_latency(&cost, &local.snap).total_s;
+    let lat_remote = estimate_latency(&cost, &remote.snap).total_s;
+    let total_macs: f64 = graph.total_macs() as f64;
+    let speed_local = local.snap.gmacs;
+    let speed_remote = remote.snap.gmacs;
+    let ideal_local_frac = speed_local / (speed_local + speed_remote);
+
+    let max_bytes = pp.cuts.iter().map(|c| c.tensor_bytes).max().unwrap_or(1) as f64;
+
+    let mut best: Option<(f64, usize)> = None;
+    let mut macs_before = 0.0;
+    let mut cut_macs: Vec<f64> = Vec::new();
+    {
+        // Prefix MACs per cut.
+        let mut seg_iter = pp.segments.iter();
+        for _cut in &pp.cuts {
+            if let Some(seg) = seg_iter.next() {
+                macs_before += seg.macs as f64;
+            }
+            cut_macs.push(macs_before);
+        }
+    }
+    for (ci, cut) in pp.cuts.iter().enumerate() {
+        let frac_local = cut_macs[ci] / total_macs.max(1.0);
+        let score = alpha * (cut.tensor_bytes as f64 / max_bytes)
+            + (1.0 - alpha) * (frac_local - ideal_local_frac).abs();
+        if best.map(|(s, _)| score < s).unwrap_or(true) {
+            best = Some((score, ci));
+        }
+    }
+
+    let Some((_, ci)) = best else {
+        // No cut points: run locally.
+        return OffloadPlan::local_only(
+            &local.snap.device,
+            pp.segments.len(),
+            lat_local,
+            crate::profiler::estimate_energy(&cost, &local.snap).total_j,
+            graph.param_bytes() as f64 + graph.naive_activation_peak() as f64,
+        );
+    };
+    let cut = &pp.cuts[ci];
+    let frac_local = cut_macs[ci] / total_macs.max(1.0);
+    let tx = topo
+        .delay_s(&local.snap.device, &remote.snap.device, cut.tensor_bytes)
+        .unwrap_or(f64::INFINITY);
+    let out_bytes: usize = graph.outputs.iter().map(|&o| graph.node(o).shape.bytes()).sum();
+    let home = topo.delay_s(&remote.snap.device, &local.snap.device, out_bytes).unwrap_or(f64::INFINITY);
+    let latency = lat_local * frac_local + tx + lat_remote * (1.0 - frac_local) + home;
+
+    // If splitting is worse than local-only (e.g. dead link), stay local.
+    if latency >= lat_local {
+        return OffloadPlan::local_only(
+            &local.snap.device,
+            pp.segments.len(),
+            lat_local,
+            crate::profiler::estimate_energy(&cost, &local.snap).total_j,
+            graph.param_bytes() as f64 + graph.naive_activation_peak() as f64,
+        );
+    }
+
+    let local_segs: Vec<usize> = (0..=ci).collect();
+    let remote_segs: Vec<usize> = (ci + 1..pp.segments.len()).collect();
+    let local_mem: f64 = local_segs
+        .iter()
+        .map(|&s| pp.segments[s].param_bytes as f64 + pp.segments[s].out_bytes as f64 * 2.0)
+        .sum();
+    let e_local = crate::profiler::estimate_energy(&cost, &local.snap).total_j * frac_local;
+    OffloadPlan {
+        placements: vec![
+            Placement { device: local.snap.device.clone(), segments: local_segs },
+            Placement { device: remote.snap.device.clone(), segments: remote_segs },
+        ],
+        latency_s: latency,
+        energy_j: e_local + crate::profiler::transmission_energy_j(cut.tensor_bytes),
+        local_memory_bytes: local_mem,
+        transfer_bytes: cut.tensor_bytes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{device, ResourceMonitor};
+    use crate::models::{resnet18, ResNetStyle};
+    use crate::partition::offload::plan_offload;
+    use crate::partition::prepartition::prepartition;
+
+    fn state(name: &str) -> DeviceState {
+        DeviceState { snap: ResourceMonitor::new(device(name).unwrap()).idle_snapshot(), mem_budget: 8e9 }
+    }
+
+    #[test]
+    fn cas_produces_single_split() {
+        let g = resnet18(ResNetStyle::Cifar, 100, 1);
+        let pp = prepartition(&g);
+        let topo = Topology::wifi_pair("raspberrypi-4b", "jetson-nx");
+        let plan = cas_plan(&g, &pp, &state("raspberrypi-4b"), &state("jetson-nx"), &topo, 0.5);
+        assert!(plan.placements.len() <= 2);
+        assert!(plan.latency_s.is_finite());
+    }
+
+    #[test]
+    fn cas_stays_local_on_dead_link() {
+        let g = resnet18(ResNetStyle::Cifar, 100, 1);
+        let pp = prepartition(&g);
+        let mut topo = Topology::new();
+        topo.connect("raspberrypi-4b", "jetson-nx", 0.01, 1000.0);
+        let plan = cas_plan(&g, &pp, &state("raspberrypi-4b"), &state("jetson-nx"), &topo, 0.5);
+        assert!(plan.is_local_only());
+    }
+
+    #[test]
+    fn crowdhmt_planner_not_worse_than_cas() {
+        // The DP planner searches a superset of CAS's single-cut space, so
+        // it can never be worse — the Fig. 11 latency gap.
+        let g = resnet18(ResNetStyle::Cifar, 100, 1);
+        let pp = prepartition(&g);
+        let topo = Topology::wifi_pair("raspberrypi-4b", "jetson-nx");
+        let devs = vec![state("raspberrypi-4b"), state("jetson-nx")];
+        let ours = plan_offload(&g, &pp, &devs, &topo);
+        let cas = cas_plan(&g, &pp, &devs[0], &devs[1], &topo, 0.5);
+        assert!(ours.latency_s <= cas.latency_s + 1e-9, "ours={} cas={}", ours.latency_s, cas.latency_s);
+    }
+}

@@ -1,0 +1,259 @@
+//! DADS baseline (Hu et al., INFOCOM'19): DNN surgery as a minimum s–t cut
+//! over the model DAG, plus the max-flow substrate it needs
+//! (Edmonds–Karp, built from scratch — no external graph crate).
+//!
+//! Construction: source `s` = "execute locally", sink `t` = "execute
+//! remotely". Each op node gets an edge s→v with capacity = remote compute
+//! time (cost of NOT running locally... cut means assigning to remote) and
+//! v→t with capacity = local compute time; every data edge u→v carries the
+//! transfer time of u's output tensor. A minimum cut then minimizes
+//! total latency of the split execution.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::graph::{CostProfile, Graph};
+use crate::profiler::estimate_latency;
+
+use super::network::Topology;
+use super::offload::{DeviceState, OffloadPlan, Placement};
+
+/// Dense max-flow network (Edmonds–Karp).
+pub struct FlowNet {
+    n: usize,
+    cap: Vec<HashMap<usize, f64>>,
+}
+
+impl FlowNet {
+    pub fn new(n: usize) -> Self {
+        FlowNet { n, cap: vec![HashMap::new(); n] }
+    }
+
+    pub fn add_edge(&mut self, u: usize, v: usize, c: f64) {
+        if c <= 0.0 {
+            return;
+        }
+        *self.cap[u].entry(v).or_insert(0.0) += c;
+        self.cap[v].entry(u).or_insert(0.0);
+    }
+
+    /// Max flow from s to t; afterwards `min_cut_side` gives the s-side.
+    pub fn max_flow(&mut self, s: usize, t: usize) -> f64 {
+        let mut flow = 0.0;
+        loop {
+            // BFS for an augmenting path.
+            let mut parent: Vec<Option<usize>> = vec![None; self.n];
+            parent[s] = Some(s);
+            let mut q = VecDeque::new();
+            q.push_back(s);
+            while let Some(u) = q.pop_front() {
+                if u == t {
+                    break;
+                }
+                for (&v, &c) in &self.cap[u] {
+                    if c > 1e-12 && parent[v].is_none() {
+                        parent[v] = Some(u);
+                        q.push_back(v);
+                    }
+                }
+            }
+            if parent[t].is_none() {
+                return flow;
+            }
+            // Find bottleneck.
+            let mut bott = f64::INFINITY;
+            let mut v = t;
+            while v != s {
+                let u = parent[v].unwrap();
+                bott = bott.min(self.cap[u][&v]);
+                v = u;
+            }
+            // Augment.
+            let mut v = t;
+            while v != s {
+                let u = parent[v].unwrap();
+                *self.cap[u].get_mut(&v).unwrap() -= bott;
+                *self.cap[v].get_mut(&u).unwrap() += bott;
+                v = u;
+            }
+            flow += bott;
+        }
+    }
+
+    /// Nodes reachable from s in the residual graph (the s-side of the
+    /// minimum cut). Call after `max_flow`.
+    pub fn min_cut_side(&self, s: usize) -> Vec<bool> {
+        let mut side = vec![false; self.n];
+        side[s] = true;
+        let mut q = VecDeque::new();
+        q.push_back(s);
+        while let Some(u) = q.pop_front() {
+            for (&v, &c) in &self.cap[u] {
+                if c > 1e-12 && !side[v] {
+                    side[v] = true;
+                    q.push_back(v);
+                }
+            }
+        }
+        side
+    }
+}
+
+/// DADS-style partition: min-cut split of `graph` between a local device
+/// and one remote peer. Returns a plan in the same format as the
+/// CrowdHMTware planner for apples-to-apples comparison (Fig. 11).
+pub fn dads_plan(graph: &Graph, local: &DeviceState, remote: &DeviceState, topo: &Topology) -> OffloadPlan {
+    let cost = CostProfile::of(graph);
+    let lat_local = estimate_latency(&cost, &local.snap);
+    let lat_remote = estimate_latency(&cost, &remote.snap);
+    let n = graph.len();
+    let s = n;
+    let t = n + 1;
+    let mut net = FlowNet::new(n + 2);
+
+    // Map per-layer latencies back to node ids.
+    let mut local_t = vec![0.0f64; n];
+    let mut remote_t = vec![0.0f64; n];
+    for (i, l) in cost.layers.iter().enumerate() {
+        local_t[l.id] = lat_local.layers[i].total();
+        remote_t[l.id] = lat_remote.layers[i].total();
+    }
+
+    // Input must be local; outputs' consumers nothing special (result
+    // returns home; charge return hop after the cut).
+    let big = 1e9;
+    net.add_edge(s, graph.input, big);
+    for node in &graph.nodes {
+        if node.id != graph.input {
+            // Cutting s→v (v remote) costs remote time; v→t (v local)
+            // costs local time.
+            net.add_edge(s, node.id, remote_t[node.id]);
+            net.add_edge(node.id, t, local_t[node.id]);
+        }
+        for &inp in &node.inputs {
+            let bytes = graph.node(inp).shape.bytes();
+            let tx = topo
+                .delay_s(&local.snap.device, &remote.snap.device, bytes)
+                .unwrap_or(big);
+            // Data crossing local→remote (inp local, node remote).
+            net.add_edge(inp, node.id, tx);
+            // And remote→local (results needed back) — symmetric cost.
+            net.add_edge(node.id, inp, tx);
+        }
+    }
+    net.max_flow(s, t);
+    let side = net.min_cut_side(s);
+
+    // side[v] == true → v stays local.
+    let mut local_nodes = Vec::new();
+    let mut remote_nodes = Vec::new();
+    for node in &graph.nodes {
+        if side[node.id] {
+            local_nodes.push(node.id);
+        } else {
+            remote_nodes.push(node.id);
+        }
+    }
+
+    // Cost the plan: serial execution (layer-level serial partitioning).
+    let mut latency = 0.0;
+    let mut transfer = 0usize;
+    for node in &graph.nodes {
+        latency += if side[node.id] { local_t[node.id] } else { remote_t[node.id] };
+        for &inp in &node.inputs {
+            if side[inp] != side[node.id] {
+                let bytes = graph.node(inp).shape.bytes();
+                transfer += bytes;
+                latency += topo.delay_s(&local.snap.device, &remote.snap.device, bytes).unwrap_or(big);
+            }
+        }
+    }
+    // Return the final outputs home if they were computed remotely.
+    for &o in &graph.outputs {
+        if !side[o] {
+            let bytes = graph.node(o).shape.bytes();
+            latency += topo.delay_s(&remote.snap.device, &local.snap.device, bytes).unwrap_or(big);
+        }
+    }
+    let local_mem: f64 = local_nodes
+        .iter()
+        .map(|&id| graph.node_params(id) as f64 * 4.0 + graph.node(id).shape.bytes() as f64)
+        .sum();
+    let mut placements = vec![Placement { device: local.snap.device.clone(), segments: local_nodes.clone() }];
+    if !remote_nodes.is_empty() {
+        placements.push(Placement { device: remote.snap.device.clone(), segments: remote_nodes });
+    }
+    OffloadPlan {
+        placements,
+        latency_s: latency,
+        energy_j: crate::profiler::estimate_energy(&cost, &local.snap).total_j
+            * (local_nodes.len() as f64 / n as f64)
+            + crate::profiler::transmission_energy_j(transfer),
+        local_memory_bytes: local_mem,
+        transfer_bytes: transfer,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{device, ResourceMonitor};
+    use crate::models::{resnet18, ResNetStyle};
+
+    #[test]
+    fn maxflow_simple_diamond() {
+        // s→a(3), s→b(2), a→t(2), b→t(3), a→b(1): max flow = 5? s->a 3, a->t 2,
+        // a->b 1, b gets 2+1 but b->t 3 → total 2+3 = 5 but s-edges cap 3+2=5.
+        let mut f = FlowNet::new(4);
+        let (s, a, b, t) = (0, 1, 2, 3);
+        f.add_edge(s, a, 3.0);
+        f.add_edge(s, b, 2.0);
+        f.add_edge(a, t, 2.0);
+        f.add_edge(b, t, 3.0);
+        f.add_edge(a, b, 1.0);
+        let flow = f.max_flow(s, t);
+        assert!((flow - 5.0).abs() < 1e-9, "flow={flow}");
+    }
+
+    #[test]
+    fn mincut_separates_source_sink() {
+        let mut f = FlowNet::new(3);
+        f.add_edge(0, 1, 1.0);
+        f.add_edge(1, 2, 2.0);
+        f.max_flow(0, 2);
+        let side = f.min_cut_side(0);
+        assert!(side[0]);
+        assert!(!side[2]);
+    }
+
+    fn state(name: &str) -> DeviceState {
+        DeviceState { snap: ResourceMonitor::new(device(name).unwrap()).idle_snapshot(), mem_budget: 8e9 }
+    }
+
+    #[test]
+    fn dads_offloads_to_fast_peer() {
+        let g = resnet18(ResNetStyle::Cifar, 100, 1);
+        let topo = Topology::wifi_pair("raspberrypi-4b", "jetson-nx");
+        let plan = dads_plan(&g, &state("raspberrypi-4b"), &state("jetson-nx"), &topo);
+        assert!(plan.placements.len() == 2, "expected a split");
+        assert!(plan.latency_s.is_finite() && plan.latency_s > 0.0);
+    }
+
+    #[test]
+    fn dads_stays_local_on_dead_link() {
+        let g = resnet18(ResNetStyle::Cifar, 100, 1);
+        let mut topo = Topology::new();
+        topo.connect("raspberrypi-4b", "jetson-nx", 0.01, 1000.0);
+        let plan = dads_plan(&g, &state("raspberrypi-4b"), &state("jetson-nx"), &topo);
+        // With a dead link the cut should keep (almost) everything local.
+        let remote_nodes = plan.placements.get(1).map(|p| p.segments.len()).unwrap_or(0);
+        assert_eq!(remote_nodes, 0, "dead link must not offload");
+    }
+
+    #[test]
+    fn dads_input_always_local() {
+        let g = resnet18(ResNetStyle::Cifar, 100, 1);
+        let topo = Topology::wifi_pair("raspberrypi-4b", "jetson-nx");
+        let plan = dads_plan(&g, &state("raspberrypi-4b"), &state("jetson-nx"), &topo);
+        assert!(plan.placements[0].segments.contains(&g.input));
+    }
+}

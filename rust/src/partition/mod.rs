@@ -1,0 +1,16 @@
+//! Front-end scalable offloading (Sec. III-B): operator-based
+//! pre-partitioning with hierarchical granularity, the graph-search
+//! cross-device offloading planner, the network link model, and the
+//! CAS / DADS partitioning baselines it is evaluated against (Fig. 11).
+
+pub mod cas;
+pub mod mincut;
+pub mod network;
+pub mod offload;
+pub mod prepartition;
+
+pub use cas::cas_plan;
+pub use mincut::{dads_plan, FlowNet};
+pub use network::{Link, Topology};
+pub use offload::{plan_offload, DeviceState, OffloadPlan, Placement};
+pub use prepartition::{prepartition, CutPoint, PrePartition, Segment};

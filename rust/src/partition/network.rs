@@ -1,0 +1,121 @@
+//! Inter-device network link model for offloading (Sec. III-B).
+//!
+//! Substitution note: the paper offloads over real WiFi between
+//! phones/boards (device IP + PORT). We model links as
+//! bandwidth+RTT pairs with optional time-varying traces, which is exactly
+//! the quantity the paper's transmission-delay term consumes
+//! (feature bytes / bandwidth).
+
+use std::collections::HashMap;
+
+/// A directed link between two devices.
+#[derive(Debug, Clone)]
+pub struct Link {
+    pub from: String,
+    pub to: String,
+    /// Bandwidth in bytes/second.
+    pub bytes_per_s: f64,
+    /// Round-trip latency in seconds.
+    pub rtt_s: f64,
+}
+
+impl Link {
+    /// Time to move `bytes` across this link.
+    pub fn delay_s(&self, bytes: usize) -> f64 {
+        self.rtt_s / 2.0 + bytes as f64 / self.bytes_per_s.max(1.0)
+    }
+}
+
+/// The cluster topology: devices + pairwise links. Missing links mean the
+/// pair cannot offload to each other.
+#[derive(Debug, Clone, Default)]
+pub struct Topology {
+    links: HashMap<(String, String), Link>,
+}
+
+impl Topology {
+    pub fn new() -> Self {
+        Topology::default()
+    }
+
+    /// Add a symmetric link between two devices.
+    pub fn connect(&mut self, a: &str, b: &str, mbps: f64, rtt_ms: f64) {
+        let bps = mbps * 1e6 / 8.0;
+        self.links.insert(
+            (a.to_string(), b.to_string()),
+            Link { from: a.into(), to: b.into(), bytes_per_s: bps, rtt_s: rtt_ms / 1e3 },
+        );
+        self.links.insert(
+            (b.to_string(), a.to_string()),
+            Link { from: b.into(), to: a.into(), bytes_per_s: bps, rtt_s: rtt_ms / 1e3 },
+        );
+    }
+
+    pub fn link(&self, from: &str, to: &str) -> Option<&Link> {
+        self.links.get(&(from.to_string(), to.to_string()))
+    }
+
+    /// Transfer delay, or None if disconnected. Zero-cost for same device.
+    pub fn delay_s(&self, from: &str, to: &str, bytes: usize) -> Option<f64> {
+        if from == to {
+            return Some(0.0);
+        }
+        self.link(from, to).map(|l| l.delay_s(bytes))
+    }
+
+    /// Scale all bandwidths by a factor (models the time-varying traces of
+    /// the campus case study).
+    pub fn scale_bandwidth(&mut self, factor: f64) {
+        for l in self.links.values_mut() {
+            l.bytes_per_s *= factor;
+        }
+    }
+
+    /// A standard two-device WiFi testbed (the paper's common scenario:
+    /// local device + one edge peer over ~80 Mbit/s WiFi, 4 ms RTT).
+    pub fn wifi_pair(a: &str, b: &str) -> Topology {
+        let mut t = Topology::new();
+        t.connect(a, b, 80.0, 4.0);
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delay_includes_rtt_and_bytes() {
+        let t = Topology::wifi_pair("a", "b");
+        let d = t.delay_s("a", "b", 10_000_000).unwrap();
+        // 10 MB over 10 MB/s plus 2 ms half-RTT.
+        assert!((d - (1.0 + 0.002)).abs() < 1e-6, "d={d}");
+    }
+
+    #[test]
+    fn same_device_free() {
+        let t = Topology::wifi_pair("a", "b");
+        assert_eq!(t.delay_s("a", "a", 123456), Some(0.0));
+    }
+
+    #[test]
+    fn disconnected_is_none() {
+        let t = Topology::wifi_pair("a", "b");
+        assert_eq!(t.delay_s("a", "c", 1), None);
+    }
+
+    #[test]
+    fn symmetric() {
+        let t = Topology::wifi_pair("a", "b");
+        assert_eq!(t.delay_s("a", "b", 1000), t.delay_s("b", "a", 1000));
+    }
+
+    #[test]
+    fn bandwidth_scaling() {
+        let mut t = Topology::wifi_pair("a", "b");
+        let before = t.delay_s("a", "b", 1_000_000).unwrap();
+        t.scale_bandwidth(0.5);
+        let after = t.delay_s("a", "b", 1_000_000).unwrap();
+        assert!(after > before * 1.5);
+    }
+}

@@ -1,0 +1,61 @@
+//! Cache-hit-rate model ε (Sec. III-D1).
+//!
+//! The paper measures ε at runtime; offline we model it from the working
+//! set vs the cache share the monitor reports. DL inference streams layer
+//! by layer, so the hot working set is the layer's parameters plus its in/
+//! out activations; the hit rate falls smoothly as the working set
+//! overflows the (contended) cache.
+
+/// Estimate ε ∈ [0.02, 0.98] for a working set of `ws_bytes` against
+/// `cache_bytes` of effectively-available cache.
+///
+/// - ws ≤ cache  → near-perfect hits (0.98 ceiling: cold misses remain);
+/// - ws > cache  → hits decay like (cache/ws)^γ, the classic power-law
+///   cache miss curve (γ≈0.7 fits mobile LLC sweeps).
+pub fn hit_rate(ws_bytes: f64, cache_bytes: f64) -> f64 {
+    if ws_bytes <= 0.0 {
+        return 0.98;
+    }
+    let ratio = (cache_bytes / ws_bytes).max(0.0);
+    if ratio >= 1.0 {
+        0.98
+    } else {
+        (0.98 * ratio.powf(0.7)).clamp(0.02, 0.98)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fits_in_cache_is_high() {
+        assert!((hit_rate(100.0, 1000.0) - 0.98).abs() < 1e-9);
+    }
+
+    #[test]
+    fn monotone_in_cache_size() {
+        let mut prev = 0.0;
+        for c in [1e3, 1e4, 1e5, 1e6, 1e7] {
+            let h = hit_rate(1e6, c);
+            assert!(h >= prev);
+            prev = h;
+        }
+    }
+
+    #[test]
+    fn monotone_decreasing_in_working_set() {
+        let mut prev = 1.0;
+        for ws in [1e4, 1e5, 1e6, 1e7, 1e8] {
+            let h = hit_rate(ws, 1e5);
+            assert!(h <= prev + 1e-12);
+            prev = h;
+        }
+    }
+
+    #[test]
+    fn bounded() {
+        assert!(hit_rate(1e12, 1.0) >= 0.02);
+        assert!(hit_rate(1.0, 1e12) <= 0.98);
+    }
+}

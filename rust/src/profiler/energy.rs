@@ -1,0 +1,118 @@
+//! Runtime energy estimation — the paper's Eq. 1 (Sec. III-D1).
+//!
+//! `E = Σ_l σ1·C_l + ε·σ2·M_l + (1−ε)·σ3·M_l + σSM·M_l`
+//!
+//! with σ1:σ2:σ3:σSM = 1:6:200:2 on mobile GPUs and 1:6:200 on CPUs (no
+//! shared memory). σ1 is anchored to the device's measured nJ/MAC (the
+//! offline Monsoon calibration in the paper → `DeviceProfile::nj_per_mac`
+//! here); memory terms are charged per 4-byte access.
+
+use crate::device::ResourceSnapshot;
+use crate::graph::CostProfile;
+
+use super::cache::hit_rate;
+
+/// Energy estimate (joules) with its term breakdown.
+#[derive(Debug, Clone)]
+pub struct EnergyEstimate {
+    pub total_j: f64,
+    pub compute_j: f64,
+    pub cache_j: f64,
+    pub dram_j: f64,
+    pub shared_mem_j: f64,
+    pub eps: f64,
+}
+
+/// Estimate inference energy for `cost` on the device behind `snap`.
+pub fn estimate_energy(cost: &CostProfile, snap: &ResourceSnapshot) -> EnergyEstimate {
+    let dev = crate::device::device(&snap.device);
+    let (nj_mac, (s1, s2, s3, ssm)) = match &dev {
+        Some(d) => (d.nj_per_mac, d.sigma_ratios()),
+        None => (1.0, (1.0, 6.0, 200.0, 0.0)),
+    };
+    let eps = hit_rate(cost.working_set_bytes() as f64, snap.cache_bytes);
+
+    let mut compute = 0.0;
+    let mut cache = 0.0;
+    let mut dram = 0.0;
+    let mut shared = 0.0;
+    for l in &cost.layers {
+        let accesses = l.mem_bytes as f64 / 4.0; // 4-byte words
+        compute += s1 * l.macs as f64;
+        cache += eps * s2 * accesses;
+        dram += (1.0 - eps) * s3 * accesses;
+        shared += ssm * accesses;
+    }
+    let to_j = nj_mac * 1e-9;
+    EnergyEstimate {
+        total_j: (compute + cache + dram + shared) * to_j,
+        compute_j: compute * to_j,
+        cache_j: cache * to_j,
+        dram_j: dram * to_j,
+        shared_mem_j: shared * to_j,
+        eps,
+    }
+}
+
+/// Energy for transmitting `bytes` over the radio (offloading cost):
+/// ~100 nJ/byte for WiFi-class links, a standard mobile figure.
+pub fn transmission_energy_j(bytes: usize) -> f64 {
+    bytes as f64 * 100e-9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{device, ContextState, ResourceMonitor};
+    use crate::models::{mobilenet_v2, resnet18, vgg16, ResNetStyle};
+
+    fn snap(name: &str) -> crate::device::ResourceSnapshot {
+        ResourceMonitor::new(device(name).unwrap()).idle_snapshot()
+    }
+
+    #[test]
+    fn bigger_model_costs_more() {
+        let s = snap("raspberrypi-4b");
+        let r = estimate_energy(&CostProfile::of(&resnet18(ResNetStyle::ImageNet, 1000, 1)), &s);
+        let v = estimate_energy(&CostProfile::of(&vgg16(true, 1000, 1)), &s);
+        assert!(v.total_j > r.total_j);
+    }
+
+    #[test]
+    fn dram_dominates_when_cache_starved() {
+        // With a big model on a small contended cache, the 200× DRAM term
+        // must dominate — the premise behind Eq. 1.
+        let mon = ResourceMonitor::new(device("huawei-watch-h2p").unwrap());
+        let mut ctx = ContextState::idle();
+        ctx.cache_share = 0.2;
+        let s = mon.sample(&ctx);
+        let e = estimate_energy(&CostProfile::of(&resnet18(ResNetStyle::Cifar, 100, 1)), &s);
+        assert!(e.dram_j > e.cache_j);
+        assert!(e.dram_j > e.compute_j * 0.1);
+    }
+
+    #[test]
+    fn gpu_has_shared_mem_term_cpu_does_not() {
+        let cost = CostProfile::of(&mobilenet_v2(false, 10, 1));
+        let gpu = estimate_energy(&cost, &snap("jetson-nano"));
+        let cpu = estimate_energy(&cost, &snap("raspberrypi-4b"));
+        assert!(gpu.shared_mem_j > 0.0);
+        assert_eq!(cpu.shared_mem_j, 0.0);
+    }
+
+    #[test]
+    fn better_cache_hit_lowers_energy() {
+        let cost = CostProfile::of(&resnet18(ResNetStyle::Cifar, 100, 1));
+        let mon = ResourceMonitor::new(device("raspberrypi-4b").unwrap());
+        let idle = estimate_energy(&cost, &mon.sample(&ContextState::idle()));
+        let mut ctx = ContextState::idle();
+        ctx.cache_share = 0.1;
+        let cont = estimate_energy(&cost, &mon.sample(&ctx));
+        assert!(cont.total_j > idle.total_j);
+    }
+
+    #[test]
+    fn transmission_energy_scales() {
+        assert!(transmission_energy_j(2_000_000) > transmission_energy_j(1_000_000));
+    }
+}

@@ -1,0 +1,195 @@
+//! Runtime latency estimation — the paper's Eq. 2 (Sec. III-D1).
+//!
+//! The paper writes `T = Σ_l λ1·δ_l·C_l + ε·λ2·M_l + (1−ε)·λ3·M_l` with δ
+//! "integrated into the λ1 coefficient to represent the λ1/λ2 ratio". We
+//! realize that as an additive roofline with three calibrated device
+//! constants (the paper's "offline stage" per-platform measurement):
+//!
+//! * compute: `C_l / (peak·SUSTAINED·util(δ_l))` — the λ1·δ fold; layers
+//!   whose arithmetic intensity δ_l sits below the device's roofline knee
+//!   cannot keep the MAC units fed;
+//! * memory: `M_l · (ε/λ2 + (1−ε)/λ3)` with λ2/λ3 the *effective* cache/
+//!   DRAM bandwidths (theoretical × BW_EFF);
+//! * dispatch: a per-operator runtime overhead (interpreter dispatch +
+//!   kernel launch), the term operator *fusion* eliminates — mobile
+//!   engines pay 0.1–1 ms per op, which is why fused graphs win big.
+
+use crate::device::ResourceSnapshot;
+use crate::graph::{CostProfile, LayerCost};
+
+use super::cache::hit_rate;
+
+/// Fraction of theoretical peak MACs sustained by real DL kernels on
+/// mobile frameworks (offline-calibrated; NCNN/PyTorch-Mobile class).
+pub const SUSTAINED: f64 = 0.30;
+/// Fraction of theoretical bandwidth achieved by streaming DL kernels.
+pub const BW_EFF: f64 = 0.35;
+/// Per-operator dispatch overhead at the 8 GMAC/s reference device (s);
+/// scales with single-core speed (∝ 1/√peak).
+pub const DISPATCH_REF_S: f64 = 0.0015;
+
+/// Per-layer latency breakdown (seconds).
+#[derive(Debug, Clone)]
+pub struct LayerLatency {
+    pub name: String,
+    pub compute_s: f64,
+    pub mem_s: f64,
+    pub dispatch_s: f64,
+    pub eps: f64,
+}
+
+impl LayerLatency {
+    pub fn total(&self) -> f64 {
+        self.compute_s + self.mem_s + self.dispatch_s
+    }
+}
+
+/// Latency estimate for a whole model on one device snapshot.
+#[derive(Debug, Clone)]
+pub struct LatencyEstimate {
+    pub total_s: f64,
+    pub layers: Vec<LayerLatency>,
+    /// Model-level average cache-hit-rate (traffic-weighted).
+    pub eps_avg: f64,
+}
+
+/// MAC-unit utilization as a function of layer arithmetic intensity δ
+/// relative to the device's roofline knee: memory-starved layers cannot
+/// saturate the MAC array.
+fn mac_utilization(delta: f64, knee: f64) -> f64 {
+    if knee <= 0.0 {
+        return 1.0;
+    }
+    (delta / knee).clamp(0.05, 1.0)
+}
+
+/// Per-op dispatch overhead for a device with `peak_gmacs`.
+pub fn dispatch_overhead_s(peak_gmacs: f64) -> f64 {
+    DISPATCH_REF_S * (8.0 / peak_gmacs.max(0.1)).sqrt()
+}
+
+/// Estimate single-device inference latency for `cost` under `snap`.
+pub fn estimate_latency(cost: &CostProfile, snap: &ResourceSnapshot) -> LatencyEstimate {
+    let dev = crate::device::device(&snap.device);
+    let (cache_gbps, dram_gbps, knee, peak) = match &dev {
+        Some(d) => (d.cache_gbps, d.dram_gbps, d.roofline_knee(), d.peak_gmacs),
+        None => (32.0, 4.0, 2.0, 8.0),
+    };
+    let macs_per_s = snap.gmacs * 1e9 * SUSTAINED;
+    let dispatch = dispatch_overhead_s(peak);
+    let ws = cost.working_set_bytes() as f64;
+    let eps_model = hit_rate(ws, snap.cache_bytes);
+
+    let mut layers = Vec::with_capacity(cost.layers.len());
+    let mut total = 0.0;
+    let mut eps_w = 0.0;
+    let mut w = 0.0;
+    for l in &cost.layers {
+        let ll = layer_latency(l, macs_per_s, knee, cache_gbps * BW_EFF, dram_gbps * BW_EFF, eps_model, dispatch);
+        total += ll.total();
+        eps_w += ll.eps * l.mem_bytes as f64;
+        w += l.mem_bytes as f64;
+        layers.push(ll);
+    }
+    LatencyEstimate { total_s: total, layers, eps_avg: if w > 0.0 { eps_w / w } else { eps_model } }
+}
+
+fn layer_latency(l: &LayerCost, macs_per_s: f64, knee: f64, cache_gbps: f64, dram_gbps: f64, eps: f64, dispatch: f64) -> LayerLatency {
+    let delta = l.arithmetic_intensity();
+    let util = mac_utilization(delta, knee);
+    let compute_s = if macs_per_s > 0.0 { l.macs as f64 / (macs_per_s * util) } else { f64::INFINITY };
+    let m = l.mem_bytes as f64;
+    let mem_s = eps * m / (cache_gbps * 1e9) + (1.0 - eps) * m / (dram_gbps * 1e9);
+    LayerLatency { name: l.name.clone(), compute_s, mem_s, dispatch_s: dispatch, eps }
+}
+
+/// Transmission delay for offloading `bytes` over the snapshot's link
+/// (Sec. III-D1: "feature size divided by the network bandwidth"), plus a
+/// fixed per-hop RTT.
+pub fn transmission_delay_s(bytes: usize, net_bytes_per_s: f64) -> f64 {
+    const RTT_S: f64 = 0.005;
+    bytes as f64 / net_bytes_per_s.max(1.0) + RTT_S
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{device, ContextState, ResourceMonitor, ResourceSnapshot};
+    use crate::models::{resnet18, vgg16, ResNetStyle};
+
+    fn snap(name: &str) -> ResourceSnapshot {
+        ResourceMonitor::new(device(name).unwrap()).idle_snapshot()
+    }
+
+    #[test]
+    fn vgg_slower_than_resnet18() {
+        let s = snap("raspberrypi-4b");
+        let r = estimate_latency(&CostProfile::of(&resnet18(ResNetStyle::ImageNet, 1000, 1)), &s);
+        let v = estimate_latency(&CostProfile::of(&vgg16(true, 1000, 1)), &s);
+        assert!(v.total_s > r.total_s * 2.0, "vgg={} resnet={}", v.total_s, r.total_s);
+    }
+
+    #[test]
+    fn faster_device_is_faster() {
+        let cost = CostProfile::of(&resnet18(ResNetStyle::Cifar, 100, 1));
+        let rpi = estimate_latency(&cost, &snap("raspberrypi-4b"));
+        let nx = estimate_latency(&cost, &snap("jetson-nx"));
+        assert!(nx.total_s < rpi.total_s / 2.0);
+    }
+
+    #[test]
+    fn dvfs_throttling_increases_latency() {
+        let cost = CostProfile::of(&resnet18(ResNetStyle::Cifar, 100, 1));
+        let mon = ResourceMonitor::new(device("raspberrypi-4b").unwrap());
+        let full = estimate_latency(&cost, &mon.sample(&ContextState::idle()));
+        let mut ctx = ContextState::idle();
+        ctx.freq_frac = 0.4;
+        let slow = estimate_latency(&cost, &mon.sample(&ctx));
+        assert!(slow.total_s > full.total_s * 1.3);
+    }
+
+    #[test]
+    fn cache_contention_increases_latency() {
+        let cost = CostProfile::of(&resnet18(ResNetStyle::Cifar, 100, 1));
+        let mon = ResourceMonitor::new(device("raspberrypi-4b").unwrap());
+        let idle = estimate_latency(&cost, &mon.sample(&ContextState::idle()));
+        let mut ctx = ContextState::idle();
+        ctx.cache_share = 0.15;
+        let contended = estimate_latency(&cost, &mon.sample(&ctx));
+        assert!(contended.total_s > idle.total_s);
+        assert!(contended.eps_avg < idle.eps_avg);
+    }
+
+    #[test]
+    fn rpi_vs_nano_ratio_matches_paper_anecdote() {
+        // Paper: MobileNet 615 ms on RPi4 vs 202 ms on Nano (~3×).
+        let cost = CostProfile::of(&crate::models::mobilenet_v2(true, 1000, 1));
+        let rpi = estimate_latency(&cost, &snap("raspberrypi-4b"));
+        let nano = estimate_latency(&cost, &snap("jetson-nano"));
+        let ratio = rpi.total_s / nano.total_s;
+        assert!((1.8..5.0).contains(&ratio), "ratio={ratio}");
+        // Absolute scale: hundreds of ms on the RPi, like the paper.
+        assert!((0.1..3.0).contains(&rpi.total_s), "rpi={}s", rpi.total_s);
+    }
+
+    #[test]
+    fn dispatch_overhead_counts_per_op() {
+        // Factorized model (more, smaller ops) pays more dispatch.
+        let g = resnet18(ResNetStyle::Cifar, 100, 1);
+        let s = snap("raspberrypi-4b");
+        let base = estimate_latency(&CostProfile::of(&g), &s);
+        let factored = crate::compress::operators::low_rank(&g, 1.0);
+        let lat2 = estimate_latency(&CostProfile::of(&factored), &s);
+        let d = dispatch_overhead_s(8.0);
+        assert!(lat2.layers.len() > base.layers.len());
+        assert!((base.layers[0].dispatch_s - d).abs() < 1e-12);
+    }
+
+    #[test]
+    fn transmission_delay_linear_in_bytes() {
+        let d1 = transmission_delay_s(1_000_000, 10e6);
+        let d2 = transmission_delay_s(2_000_000, 10e6);
+        assert!(d2 > d1);
+        assert!((d2 - d1 - 0.1).abs() < 1e-9);
+    }
+}

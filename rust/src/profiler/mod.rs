@@ -1,0 +1,122 @@
+//! Runtime performance profiler (Sec. III-D1): cache-hit-rate model,
+//! latency (Eq. 2), energy (Eq. 1), calibrated accuracy retention, and a
+//! combined per-configuration metrics evaluation used by the optimizer.
+
+pub mod accuracy;
+pub mod cache;
+pub mod energy;
+pub mod latency;
+
+pub use accuracy::{base_accuracy, AccuracyModel};
+pub use cache::hit_rate;
+pub use energy::{estimate_energy, transmission_energy_j, EnergyEstimate};
+pub use latency::{estimate_latency, transmission_delay_s, LatencyEstimate};
+
+
+use crate::compress::VariantSpec;
+use crate::device::ResourceSnapshot;
+use crate::graph::{CostProfile, Graph};
+
+/// The four paper metrics for one (model-variant, device) configuration.
+#[derive(Debug, Clone)]
+pub struct Metrics {
+    /// Top-1 accuracy (%).
+    pub accuracy: f64,
+    /// End-to-end inference latency (s).
+    pub latency_s: f64,
+    /// Inference energy (J).
+    pub energy_j: f64,
+    /// Peak memory demand (bytes): weights + naive activation peak (the
+    /// engine's allocator then shrinks the activation part).
+    pub memory_bytes: f64,
+    /// MAC count.
+    pub macs: f64,
+    /// Parameter count.
+    pub params: f64,
+}
+
+impl Metrics {
+    pub fn memory_mb(&self) -> f64 {
+        self.memory_bytes / (1024.0 * 1024.0)
+    }
+}
+
+/// Full profiler: static cost extraction + dynamic Eq. 1/2 estimation +
+/// accuracy retention.
+#[derive(Debug, Clone)]
+pub struct Profiler {
+    pub acc_model: AccuracyModel,
+    /// Test-time adaptation enabled (Sec. III-A2).
+    pub tta: bool,
+    /// Live-data drift magnitude in [0,1] fed by the deployment context.
+    pub drift: f64,
+    /// Variants come from ensemble pre-training (Sec. III-A1).
+    pub ensemble: bool,
+}
+
+impl Default for Profiler {
+    fn default() -> Self {
+        Profiler { acc_model: AccuracyModel::default(), tta: true, drift: 0.0, ensemble: true }
+    }
+}
+
+impl Profiler {
+    /// Evaluate a variant of `base` described by `spec`, already applied to
+    /// give `variant`, on the device snapshot.
+    pub fn evaluate(&self, base: &Graph, variant: &Graph, spec: &VariantSpec, base_acc: f64, snap: &ResourceSnapshot) -> Metrics {
+        let cost = CostProfile::of(variant);
+        let lat = estimate_latency(&cost, snap);
+        let en = estimate_energy(&cost, snap);
+        let cap = cost.total_macs() as f64 / (base.total_macs() as f64).max(1.0);
+        let accuracy = self.acc_model.estimate(base_acc, cap.min(1.0), &spec.kinds(), self.tta, self.drift, self.ensemble);
+        Metrics {
+            accuracy,
+            latency_s: lat.total_s,
+            energy_j: en.total_j,
+            memory_bytes: (variant.param_bytes() + variant.naive_activation_peak()) as f64,
+            macs: cost.total_macs() as f64,
+            params: variant.total_params() as f64,
+        }
+    }
+
+    /// Evaluate an unmodified model.
+    pub fn evaluate_original(&self, g: &Graph, base_acc: f64, snap: &ResourceSnapshot) -> Metrics {
+        self.evaluate(g, g, &VariantSpec::identity(), base_acc, snap)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::OperatorKind;
+    use crate::device::{device, ResourceMonitor};
+    use crate::models::{resnet18, ResNetStyle};
+
+    #[test]
+    fn compressed_variant_dominates_on_cost_loses_some_accuracy() {
+        let g = resnet18(ResNetStyle::Cifar, 100, 1);
+        let snap = ResourceMonitor::new(device("raspberrypi-4b").unwrap()).idle_snapshot();
+        let p = Profiler { tta: false, ensemble: false, ..Default::default() };
+        let orig = p.evaluate_original(&g, 76.23, &snap);
+        let spec = VariantSpec::pair((OperatorKind::LowRank, 0.25), (OperatorKind::ChannelScale, 0.5));
+        let v = spec.apply(&g);
+        let m = p.evaluate(&g, &v, &spec, 76.23, &snap);
+        assert!(m.latency_s < orig.latency_s);
+        assert!(m.energy_j < orig.energy_j);
+        assert!(m.memory_bytes < orig.memory_bytes);
+        assert!(m.accuracy <= orig.accuracy);
+        assert!(m.accuracy > orig.accuracy - 10.0);
+    }
+
+    #[test]
+    fn metrics_units_sane() {
+        let g = resnet18(ResNetStyle::Cifar, 100, 1);
+        let snap = ResourceMonitor::new(device("raspberrypi-4b").unwrap()).idle_snapshot();
+        let m = Profiler::default().evaluate_original(&g, 76.23, &snap);
+        // ResNet18-CIFAR on an RPi-class CPU: tens of ms to seconds.
+        assert!(m.latency_s > 0.001 && m.latency_s < 30.0, "lat={}", m.latency_s);
+        // Tens of mJ to tens of J.
+        assert!(m.energy_j > 1e-3 && m.energy_j < 100.0, "E={}", m.energy_j);
+        assert!(m.memory_mb() > 10.0 && m.memory_mb() < 500.0, "mem={}", m.memory_mb());
+    }
+}

@@ -1,0 +1,211 @@
+//! PJRT execution runtime: loads AOT-lowered HLO text artifacts and runs
+//! them on the CPU PJRT client from the Rust request path. Python never
+//! runs at serving time.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute` → `to_tuple1` (artifacts are lowered with
+//! `return_tuple=True` and exactly one output).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::Manifest;
+
+/// A compiled executable for one (variant, batch) pair.
+pub struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    pub batch: usize,
+    pub in_elems: usize,
+    pub out_elems: usize,
+}
+
+/// The executable pool: one PJRT client, executables compiled on first use
+/// and cached (AOT artifacts make compilation cheap and deterministic).
+pub struct ModelRuntime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: HashMap<(String, usize), Compiled>,
+    /// Wall-clock of each execute call (for the serving report).
+    pub exec_log: Vec<f64>,
+}
+
+impl ModelRuntime {
+    /// Create a runtime over an artifacts directory.
+    pub fn load(dir: PathBuf) -> Result<ModelRuntime> {
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt: {e:?}"))?;
+        Ok(ModelRuntime { client, manifest, cache: HashMap::new(), exec_log: Vec::new() })
+    }
+
+    /// Compile (or fetch cached) the executable for a variant at a batch.
+    pub fn prepare(&mut self, variant: &str, batch: usize) -> Result<()> {
+        let key = (variant.to_string(), batch);
+        if self.cache.contains_key(&key) {
+            return Ok(());
+        }
+        let v = self
+            .manifest
+            .variant(variant)
+            .with_context(|| format!("unknown variant '{variant}'"))?;
+        let file = v
+            .files
+            .get(&batch)
+            .with_context(|| format!("variant '{variant}' has no batch-{batch} artifact"))?;
+        let path = self.manifest.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow::anyhow!("load {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {}: {e:?}", path.display()))?;
+        let m = &self.manifest;
+        let in_elems = batch * m.input_hw * m.input_hw * m.in_channels;
+        let out_elems = batch * m.num_classes;
+        self.cache.insert(key, Compiled { exe, batch, in_elems, out_elems });
+        Ok(())
+    }
+
+    /// Run one batch: `input` is `[batch, H, W, C]` row-major f32; returns
+    /// `[batch, num_classes]` probabilities.
+    pub fn execute(&mut self, variant: &str, batch: usize, input: &[f32]) -> Result<Vec<f32>> {
+        self.prepare(variant, batch)?;
+        let m = &self.manifest;
+        let dims = [batch as i64, m.input_hw as i64, m.input_hw as i64, m.in_channels as i64];
+        let key = (variant.to_string(), batch);
+        let c = self.cache.get(&key).unwrap();
+        if input.len() != c.in_elems {
+            bail!("input length {} != expected {}", input.len(), c.in_elems);
+        }
+        let t0 = std::time::Instant::now();
+        let lit = xla::Literal::vec1(input)
+            .reshape(&dims)
+            .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))?;
+        let result = c
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        let tuple = out.to_tuple1().map_err(|e| anyhow::anyhow!("tuple: {e:?}"))?;
+        let values: Vec<f32> = tuple.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
+        self.exec_log.push(t0.elapsed().as_secs_f64());
+        if values.len() != c.out_elems {
+            bail!("output length {} != expected {}", values.len(), c.out_elems);
+        }
+        Ok(values)
+    }
+
+    /// Argmax class per row of a `[batch, classes]` buffer.
+    pub fn argmax(probs: &[f32], classes: usize) -> Vec<usize> {
+        probs
+            .chunks_exact(classes)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+
+    /// Top softmax confidence per row (the accuracy proxy A of
+    /// Sec. III-D1's online stage).
+    pub fn confidence(probs: &[f32], classes: usize) -> Vec<f32> {
+        probs
+            .chunks_exact(classes)
+            .map(|row| row.iter().cloned().fold(f32::MIN, f32::max))
+            .collect()
+    }
+
+    /// Measure real accuracy of a variant on the shipped eval set.
+    pub fn eval_accuracy(&mut self, variant: &str, batch: usize) -> Result<f64> {
+        let (inputs, labels) = self.manifest.load_eval()?;
+        let per = self.manifest.input_hw * self.manifest.input_hw * self.manifest.in_channels;
+        let classes = self.manifest.num_classes;
+        let n = labels.len();
+        let mut correct = 0usize;
+        let mut done = 0usize;
+        while done + batch <= n {
+            let chunk = &inputs[done * per..(done + batch) * per];
+            let probs = self.execute(variant, batch, chunk)?;
+            let preds = Self::argmax(&probs, classes);
+            for (i, &p) in preds.iter().enumerate() {
+                if p as u32 == labels[done + i] {
+                    correct += 1;
+                }
+            }
+            done += batch;
+        }
+        if done == 0 {
+            bail!("eval set smaller than batch");
+        }
+        Ok(correct as f64 / done as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Integration tests run only when artifacts have been built
+    /// (`make artifacts`); unit CI without artifacts skips them.
+    fn runtime() -> Option<ModelRuntime> {
+        let dir = Manifest::default_dir()?;
+        ModelRuntime::load(dir).ok()
+    }
+
+    #[test]
+    fn argmax_and_confidence_helpers() {
+        let probs = [0.1, 0.7, 0.2, 0.5, 0.3, 0.2];
+        assert_eq!(ModelRuntime::argmax(&probs, 3), vec![1, 0]);
+        let c = ModelRuntime::confidence(&probs, 3);
+        assert!((c[0] - 0.7).abs() < 1e-6);
+        assert!((c[1] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn artifacts_execute_and_classify() {
+        let Some(mut rt) = runtime() else {
+            eprintln!("skipping: no artifacts built");
+            return;
+        };
+        let ids: Vec<String> = rt.manifest.variants.iter().map(|v| v.id.clone()).collect();
+        assert!(!ids.is_empty());
+        let batch = rt.manifest.batch_sizes[0];
+        let per = rt.manifest.input_hw * rt.manifest.input_hw * rt.manifest.in_channels;
+        let input = vec![0.1f32; batch * per];
+        for id in ids.iter().take(2) {
+            let out = rt.execute(id, batch, &input).unwrap();
+            assert_eq!(out.len(), batch * rt.manifest.num_classes);
+            // Softmax outputs sum to ~1 per row.
+            for row in out.chunks_exact(rt.manifest.num_classes) {
+                let s: f32 = row.iter().sum();
+                assert!((s - 1.0).abs() < 1e-3, "row sums to {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn trained_model_beats_chance_on_eval() {
+        let Some(mut rt) = runtime() else {
+            eprintln!("skipping: no artifacts built");
+            return;
+        };
+        if rt.manifest.eval.is_none() {
+            return;
+        }
+        let id = rt.manifest.variants[0].id.clone();
+        let batch = *rt.manifest.variants[0].files.keys().next().unwrap();
+        let acc = rt.eval_accuracy(&id, batch).unwrap();
+        let chance = 1.0 / rt.manifest.num_classes as f64;
+        assert!(acc > chance * 2.0, "acc={acc} vs chance={chance}");
+    }
+}

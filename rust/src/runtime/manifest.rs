@@ -1,0 +1,229 @@
+//! Artifact manifest: the contract between `python/compile/aot.py`
+//! (producer) and the Rust runtime (consumer). Python trains the
+//! multi-variant backbone once, lowers every variant × batch size to HLO
+//! text, measures real train/test accuracy, and writes
+//! `artifacts/manifest.json`; Rust loads it here and never runs Python
+//! again.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::models::BackboneConfig;
+use crate::util::Json;
+
+/// One compiled variant of the backbone.
+#[derive(Debug, Clone)]
+pub struct VariantEntry {
+    /// Stable id (must equal `BackboneConfig::variant_id()`).
+    pub id: String,
+    /// Human label ("original", "η1", "η1+η6", "exit0", …).
+    pub label: String,
+    /// batch size → HLO text file (relative to the artifacts dir).
+    pub files: BTreeMap<usize, String>,
+    /// Real measured test accuracy in [0,1] from the build-time eval.
+    pub test_acc: f64,
+    pub params: usize,
+    pub macs: usize,
+    /// Structural config mirrored into the Rust IR for profiling.
+    pub config: BackboneConfig,
+    /// Which early exit this variant runs to (None = final head).
+    pub exit: Option<usize>,
+}
+
+/// Held-out evaluation set shipped with the artifacts.
+#[derive(Debug, Clone)]
+pub struct EvalSet {
+    pub inputs: PathBuf,
+    pub labels: PathBuf,
+    pub count: usize,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub task: String,
+    pub num_classes: usize,
+    /// Input spatial side (inputs are `[N, H, W, C]` f32).
+    pub input_hw: usize,
+    pub in_channels: usize,
+    pub batch_sizes: Vec<usize>,
+    pub variants: Vec<VariantEntry>,
+    pub eval: Option<EvalSet>,
+}
+
+fn parse_config(j: &Json) -> Result<BackboneConfig> {
+    let usv = |key: &str| -> Result<Vec<usize>> {
+        j.get(key)
+            .as_arr()
+            .with_context(|| format!("config missing {key}"))?
+            .iter()
+            .map(|x| x.as_usize().context("bad int"))
+            .collect()
+    };
+    let widths = usv("widths")?;
+    let depths = usv("depths")?;
+    let exits = vec![true; widths.len()];
+    Ok(BackboneConfig {
+        input_hw: j.get("input_hw").as_usize().context("input_hw")?,
+        in_channels: j.get("in_channels").as_usize().context("in_channels")?,
+        num_classes: j.get("num_classes").as_usize().context("num_classes")?,
+        stage_widths: widths,
+        stage_depths: depths,
+        exits,
+        svd_rank_frac: j.get("rank_frac").as_f64().unwrap_or(1.0),
+        fire: j.get("fire").as_bool().unwrap_or(false),
+        batch: 1,
+    })
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("parse manifest: {e}"))?;
+        if j.get("format").as_str() != Some("crowdhmt-artifacts-v1") {
+            bail!("unknown manifest format");
+        }
+        let mut variants = Vec::new();
+        for v in j.get("variants").as_arr().context("variants")? {
+            let mut files = BTreeMap::new();
+            if let Some(obj) = v.get("files").as_obj() {
+                for (k, f) in obj {
+                    files.insert(k.parse::<usize>().context("batch key")?, f.as_str().context("file")?.to_string());
+                }
+            }
+            variants.push(VariantEntry {
+                id: v.get("id").as_str().context("id")?.to_string(),
+                label: v.get("label").as_str().unwrap_or("?").to_string(),
+                files,
+                test_acc: v.get("test_acc").as_f64().unwrap_or(0.0),
+                params: v.get("params").as_usize().unwrap_or(0),
+                macs: v.get("macs").as_usize().unwrap_or(0),
+                config: parse_config(v.get("config"))?,
+                exit: v.get("exit").as_f64().map(|x| x as usize),
+            });
+        }
+        let eval = {
+            let e = j.get("eval");
+            match (e.get("inputs").as_str(), e.get("labels").as_str(), e.get("count").as_usize()) {
+                (Some(i), Some(l), Some(c)) => {
+                    Some(EvalSet { inputs: dir.join(i), labels: dir.join(l), count: c })
+                }
+                _ => None,
+            }
+        };
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            task: j.get("task").as_str().unwrap_or("synthetic").to_string(),
+            num_classes: j.get("num_classes").as_usize().context("num_classes")?,
+            input_hw: j.get("input_hw").as_usize().context("input_hw")?,
+            in_channels: j.get("in_channels").as_usize().context("in_channels")?,
+            batch_sizes: j
+                .get("batch_sizes")
+                .as_arr()
+                .context("batch_sizes")?
+                .iter()
+                .map(|b| b.as_usize().unwrap_or(1))
+                .collect(),
+            variants,
+            eval,
+        })
+    }
+
+    /// The artifacts directory used by examples/tests: `$CROWDHMT_ARTIFACTS`
+    /// or `./artifacts`, if a manifest exists there.
+    pub fn default_dir() -> Option<PathBuf> {
+        let dir = std::env::var("CROWDHMT_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"));
+        if dir.join("manifest.json").exists() {
+            Some(dir)
+        } else {
+            None
+        }
+    }
+
+    pub fn variant(&self, id: &str) -> Option<&VariantEntry> {
+        self.variants.iter().find(|v| v.id == id || v.label == id)
+    }
+
+    /// Load the eval set as (inputs, labels); inputs are row-major
+    /// `[count, H, W, C]` f32 little-endian, labels `count` u32.
+    pub fn load_eval(&self) -> Result<(Vec<f32>, Vec<u32>)> {
+        let e = self.eval.as_ref().context("manifest has no eval set")?;
+        let raw = std::fs::read(&e.inputs)?;
+        let floats: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        let raw_l = std::fs::read(&e.labels)?;
+        let labels: Vec<u32> = raw_l
+            .chunks_exact(4)
+            .map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        let per = self.input_hw * self.input_hw * self.in_channels;
+        if floats.len() != e.count * per {
+            bail!("eval inputs size mismatch: {} vs {}", floats.len(), e.count * per);
+        }
+        if labels.len() != e.count {
+            bail!("eval labels size mismatch");
+        }
+        Ok((floats, labels))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join(format!("chmt-man-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let manifest = r#"{
+            "format": "crowdhmt-artifacts-v1",
+            "task": "synthetic10",
+            "num_classes": 10,
+            "input_hw": 16,
+            "in_channels": 3,
+            "batch_sizes": [1, 8],
+            "variants": [{
+                "id": "w16-32_d1-1_r100_f0",
+                "label": "original",
+                "files": {"1": "v_b1.hlo.txt", "8": "v_b8.hlo.txt"},
+                "test_acc": 0.9,
+                "params": 1000,
+                "macs": 200000,
+                "exit": 1,
+                "config": {"input_hw": 16, "in_channels": 3, "num_classes": 10,
+                           "widths": [16, 32], "depths": [1, 1],
+                           "rank_frac": 1.0, "fire": false}
+            }],
+            "eval": {"inputs": "ein.bin", "labels": "el.bin", "count": 4}
+        }"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.num_classes, 10);
+        assert_eq!(m.variants.len(), 1);
+        let v = &m.variants[0];
+        assert_eq!(v.files[&8], "v_b8.hlo.txt");
+        assert_eq!(v.exit, Some(1));
+        assert_eq!(v.config.variant_id(), "w16-32_d1-1_r100_f0");
+        assert!(m.variant("original").is_some());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let dir = std::env::temp_dir().join(format!("chmt-man2-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"format":"nope"}"#).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,8 @@
+//! Execution runtime: the AOT artifact manifest and the PJRT-backed
+//! executable pool that serves compiled JAX/Pallas models from Rust.
+
+pub mod exec;
+pub mod manifest;
+
+pub use exec::ModelRuntime;
+pub use manifest::{EvalSet, Manifest, VariantEntry};

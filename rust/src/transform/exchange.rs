@@ -1,0 +1,302 @@
+//! The framework-neutral graph exchange format (JSON), used for
+//! cross-framework model transfer during offloading and for persisting
+//! compressed variants. Plays the role ONNX plays in the paper.
+
+use std::collections::BTreeMap;
+
+use crate::graph::{Activation, Conv2dAttrs, DType, Graph, Op, PoolKind, Shape};
+use crate::util::Json;
+
+fn act_name(a: Activation) -> &'static str {
+    match a {
+        Activation::ReLU => "relu",
+        Activation::ReLU6 => "relu6",
+        Activation::Sigmoid => "sigmoid",
+        Activation::Tanh => "tanh",
+    }
+}
+
+fn act_from(s: &str) -> Result<Activation, String> {
+    Ok(match s {
+        "relu" => Activation::ReLU,
+        "relu6" => Activation::ReLU6,
+        "sigmoid" => Activation::Sigmoid,
+        "tanh" => Activation::Tanh,
+        other => return Err(format!("unknown activation '{other}'")),
+    })
+}
+
+fn pool_name(k: PoolKind) -> &'static str {
+    match k {
+        PoolKind::Max => "max",
+        PoolKind::Avg => "avg",
+    }
+}
+
+fn dtype_name(d: DType) -> &'static str {
+    match d {
+        DType::F32 => "f32",
+        DType::Bf16 => "bf16",
+        DType::I8 => "i8",
+        DType::I4 => "i4",
+    }
+}
+
+fn conv_json(a: &Conv2dAttrs) -> Json {
+    Json::obj(vec![
+        ("out_c", Json::num(a.out_c as f64)),
+        ("kernel", Json::Arr(vec![Json::num(a.kernel.0 as f64), Json::num(a.kernel.1 as f64)])),
+        ("stride", Json::Arr(vec![Json::num(a.stride.0 as f64), Json::num(a.stride.1 as f64)])),
+        ("pad", Json::Arr(vec![Json::num(a.pad.0 as f64), Json::num(a.pad.1 as f64)])),
+        ("groups", Json::num(a.groups as f64)),
+        ("bias", Json::Bool(a.bias)),
+    ])
+}
+
+fn conv_from(j: &Json) -> Result<Conv2dAttrs, String> {
+    let pair = |key: &str| -> Result<(usize, usize), String> {
+        let a = j.get(key).as_arr().ok_or_else(|| format!("missing {key}"))?;
+        Ok((a[0].as_usize().unwrap_or(0), a[1].as_usize().unwrap_or(0)))
+    };
+    Ok(Conv2dAttrs {
+        out_c: j.get("out_c").as_usize().ok_or("missing out_c")?,
+        kernel: pair("kernel")?,
+        stride: pair("stride")?,
+        pad: pair("pad")?,
+        groups: j.get("groups").as_usize().unwrap_or(1),
+        bias: j.get("bias").as_bool().unwrap_or(false),
+    })
+}
+
+fn op_json(op: &Op) -> Json {
+    let mut m: Vec<(&str, Json)> = vec![("kind", Json::str(op.kind()))];
+    match op {
+        Op::Conv2d(a) => m.push(("conv", conv_json(a))),
+        Op::Act(a) => m.push(("act", Json::str(act_name(*a)))),
+        Op::Pool { kind, kernel, stride } => {
+            m.push(("pool", Json::str(pool_name(*kind))));
+            m.push(("kernel", Json::num(*kernel as f64)));
+            m.push(("stride", Json::num(*stride as f64)));
+        }
+        Op::AdaptiveAvgPool { out_hw } => {
+            m.push(("out_hw", Json::Arr(vec![Json::num(out_hw.0 as f64), Json::num(out_hw.1 as f64)])));
+        }
+        Op::FC { out, bias } => {
+            m.push(("out", Json::num(*out as f64)));
+            m.push(("bias", Json::Bool(*bias)));
+        }
+        Op::Dropout { p } => m.push(("p", Json::num(*p as f64))),
+        Op::FusedConvBn { conv, act } => {
+            m.push(("conv", conv_json(conv)));
+            if let Some(a) = act {
+                m.push(("act", Json::str(act_name(*a))));
+            }
+        }
+        Op::FusedPointwise { conv, act } => {
+            m.push(("conv", conv_json(conv)));
+            if let Some(a) = act {
+                m.push(("act", Json::str(act_name(*a))));
+            }
+        }
+        Op::FusedFcAct { out, act } => {
+            m.push(("out", Json::num(*out as f64)));
+            m.push(("act", Json::str(act_name(*act))));
+        }
+        Op::FusedElementwise { count } => m.push(("count", Json::num(*count as f64))),
+        Op::FusedReduce { kind, kernel, stride } => {
+            m.push(("pool", Json::str(pool_name(*kind))));
+            m.push(("kernel", Json::num(*kernel as f64)));
+            m.push(("stride", Json::num(*stride as f64)));
+        }
+        Op::SelfAttention { heads } => m.push(("heads", Json::num(*heads as f64))),
+        _ => {}
+    }
+    Json::obj(m)
+}
+
+fn op_from(j: &Json) -> Result<Op, String> {
+    let kind = j.get("kind").as_str().ok_or("node missing kind")?;
+    let pool = || -> Result<(PoolKind, usize, usize), String> {
+        let k = match j.get("pool").as_str() {
+            Some("max") => PoolKind::Max,
+            Some("avg") => PoolKind::Avg,
+            other => return Err(format!("bad pool {other:?}")),
+        };
+        Ok((k, j.get("kernel").as_usize().unwrap_or(2), j.get("stride").as_usize().unwrap_or(2)))
+    };
+    let opt_act = || -> Result<Option<Activation>, String> {
+        match j.get("act").as_str() {
+            Some(s) => Ok(Some(act_from(s)?)),
+            None => Ok(None),
+        }
+    };
+    Ok(match kind {
+        "Input" => Op::Input,
+        "Conv2d" => Op::Conv2d(conv_from(j.get("conv"))?),
+        "BatchNorm" => Op::BatchNorm,
+        "Act" => Op::Act(act_from(j.get("act").as_str().ok_or("missing act")?)?),
+        "Pool" => {
+            let (k, kernel, stride) = pool()?;
+            Op::Pool { kind: k, kernel, stride }
+        }
+        "GlobalAvgPool" => Op::GlobalAvgPool,
+        "AdaptiveAvgPool" => {
+            let hw = j.get("out_hw").as_arr().ok_or("missing out_hw")?;
+            Op::AdaptiveAvgPool { out_hw: (hw[0].as_usize().unwrap_or(1), hw[1].as_usize().unwrap_or(1)) }
+        }
+        "Flatten" => Op::Flatten,
+        "FC" => Op::FC {
+            out: j.get("out").as_usize().ok_or("missing out")?,
+            bias: j.get("bias").as_bool().unwrap_or(false),
+        },
+        "Add" => Op::Add,
+        "Concat" => Op::Concat,
+        "Dropout" => Op::Dropout { p: j.get("p").as_f64().unwrap_or(0.5) as f32 },
+        "Softmax" => Op::Softmax,
+        "FusedConvBn" => Op::FusedConvBn { conv: conv_from(j.get("conv"))?, act: opt_act()? },
+        "FusedPointwise" => Op::FusedPointwise { conv: conv_from(j.get("conv"))?, act: opt_act()? },
+        "FusedFcAct" => Op::FusedFcAct {
+            out: j.get("out").as_usize().ok_or("missing out")?,
+            act: act_from(j.get("act").as_str().ok_or("missing act")?)?,
+        },
+        "FusedElementwise" => Op::FusedElementwise { count: j.get("count").as_usize().unwrap_or(2) },
+        "FusedReduce" => {
+            let (k, kernel, stride) = pool()?;
+            Op::FusedReduce { kind: k, kernel, stride }
+        }
+        "LayerNorm" => Op::LayerNorm,
+        "SelfAttention" => Op::SelfAttention { heads: j.get("heads").as_usize().unwrap_or(1) },
+        "SeqMean" => Op::SeqMean,
+        other => return Err(format!("unknown op kind '{other}'")),
+    })
+}
+
+/// Serialize a graph to the exchange JSON.
+pub fn to_json(g: &Graph) -> Json {
+    let input_shape = &g.nodes[g.input].shape;
+    let nodes: Vec<Json> = g
+        .nodes
+        .iter()
+        .map(|n| {
+            let mut m: BTreeMap<String, Json> = BTreeMap::new();
+            m.insert("id".into(), Json::num(n.id as f64));
+            m.insert("name".into(), Json::str(n.name.clone()));
+            m.insert("op".into(), op_json(&n.op));
+            m.insert("inputs".into(), Json::Arr(n.inputs.iter().map(|&i| Json::num(i as f64)).collect()));
+            Json::Obj(m)
+        })
+        .collect();
+    Json::obj(vec![
+        ("format", Json::str("crowdhmt-exchange-v1")),
+        ("name", Json::str(g.name.clone())),
+        (
+            "input_shape",
+            Json::obj(vec![
+                ("dims", Json::Arr(input_shape.dims.iter().map(|&d| Json::num(d as f64)).collect())),
+                ("dtype", Json::str(dtype_name(input_shape.dtype))),
+            ]),
+        ),
+        ("nodes", Json::Arr(nodes)),
+        ("outputs", Json::Arr(g.outputs.iter().map(|&o| Json::num(o as f64)).collect())),
+    ])
+}
+
+/// Deserialize a graph from the exchange JSON (validates topology and
+/// recomputes all shapes — shapes are never trusted from the wire).
+pub fn from_json(j: &Json) -> Result<Graph, String> {
+    if j.get("format").as_str() != Some("crowdhmt-exchange-v1") {
+        return Err("bad format tag".into());
+    }
+    let dims: Vec<usize> = j
+        .get("input_shape")
+        .get("dims")
+        .as_arr()
+        .ok_or("missing input dims")?
+        .iter()
+        .map(|d| d.as_usize().unwrap_or(0))
+        .collect();
+    let mut g = Graph::new(
+        j.get("name").as_str().unwrap_or("imported").to_string(),
+        Shape::new(&dims, DType::F32),
+    );
+    let nodes = j.get("nodes").as_arr().ok_or("missing nodes")?;
+    for n in nodes {
+        let op = op_from(n.get("op"))?;
+        if matches!(op, Op::Input) {
+            continue;
+        }
+        let inputs: Vec<usize> = n
+            .get("inputs")
+            .as_arr()
+            .ok_or("missing inputs")?
+            .iter()
+            .map(|i| i.as_usize().unwrap_or(usize::MAX))
+            .collect();
+        for &i in &inputs {
+            if i >= g.len() {
+                return Err(format!("node references undefined input {i}"));
+            }
+        }
+        g.add(n.get("name").as_str().unwrap_or("node").to_string(), op, &inputs);
+    }
+    for o in j.get("outputs").as_arr().ok_or("missing outputs")? {
+        let id = o.as_usize().ok_or("bad output id")?;
+        if id >= g.len() {
+            return Err(format!("output references undefined node {id}"));
+        }
+        g.mark_output(id);
+    }
+    if g.outputs.is_empty() {
+        return Err("graph has no outputs".into());
+    }
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{fuse, FusionConfig};
+    use crate::models::{backbone, mobilenet_v2, resnet18, BackboneConfig, ResNetStyle};
+
+    #[test]
+    fn roundtrip_preserves_costs() {
+        for g in [
+            resnet18(ResNetStyle::Cifar, 100, 1),
+            mobilenet_v2(false, 10, 1),
+            backbone(&BackboneConfig::default()),
+        ] {
+            let j = to_json(&g);
+            let g2 = from_json(&j).unwrap();
+            assert_eq!(g2.len(), g.len(), "{}", g.name);
+            assert_eq!(g2.total_params(), g.total_params(), "{}", g.name);
+            assert_eq!(g2.total_macs(), g.total_macs(), "{}", g.name);
+            assert_eq!(g2.outputs.len(), g.outputs.len(), "{}", g.name);
+        }
+    }
+
+    #[test]
+    fn roundtrip_through_text() {
+        let g = resnet18(ResNetStyle::Cifar, 100, 1);
+        let text = to_json(&g).to_string();
+        let g2 = from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(g2.total_macs(), g.total_macs());
+    }
+
+    #[test]
+    fn fused_graphs_roundtrip() {
+        let (f, _) = fuse(&resnet18(ResNetStyle::Cifar, 100, 1), FusionConfig::all());
+        let g2 = from_json(&to_json(&f)).unwrap();
+        assert_eq!(g2.total_macs(), f.total_macs());
+    }
+
+    #[test]
+    fn rejects_bad_payloads() {
+        assert!(from_json(&Json::parse("{}").unwrap()).is_err());
+        let g = resnet18(ResNetStyle::Cifar, 100, 1);
+        let mut j = to_json(&g);
+        if let Json::Obj(m) = &mut j {
+            m.insert("outputs".into(), Json::Arr(vec![Json::num(99999.0)]));
+        }
+        assert!(from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! Redundancy-aware cross-platform model transformation (Sec. III-B2,
+//! Fig. 4): a framework-neutral exchange format (the role ONNX plays in
+//! the paper, hand-rolled JSON here) plus the two-stage optimization the
+//! paper adds on top of plain conversion:
+//!
+//! 1. **Graph-level**: analyze operator dependencies, fuse what the
+//!    conversion duplicated, and remove duplicate operators (common
+//!    subexpression elimination) without changing the computation.
+//! 2. **Node-level**: classify operators as *dynamic* (depend on runtime
+//!    inputs) or *constant* (static regardless of inputs); redundant
+//!    constants are removed / replaced by their precomputed values.
+
+pub mod exchange;
+pub mod optimize;
+
+pub use exchange::{from_json, to_json};
+pub use optimize::{optimize, OptimizeStats};

@@ -1,0 +1,173 @@
+//! The two-stage redundancy-aware optimization of the conversion pipeline
+//! (Sec. III-B2, Fig. 4). Cross-framework conversion (e.g. PyTorch →
+//! ONNX → Paddle) routinely duplicates operators and leaves dead constant
+//! subgraphs; this pass cleans the exchange-format graph:
+//!
+//! * **Stage 1 — graph level**: common-subexpression elimination (merge
+//!   nodes with identical op + identical inputs) and identity collapsing
+//!   (Dropout at inference, 1-op FusedElementwise).
+//! * **Stage 2 — node level**: classify nodes as dynamic (reachable from
+//!   the runtime input) or constant; constant nodes' outputs do not
+//!   depend on inputs, so non-output constants are folded away.
+
+use std::collections::HashMap;
+
+use crate::graph::{Graph, NodeId, Op};
+
+/// What the pass removed.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct OptimizeStats {
+    pub cse_merged: usize,
+    pub identities_collapsed: usize,
+    pub constants_folded: usize,
+}
+
+/// Structural key for CSE: op debug + sorted-respecting inputs.
+fn cse_key(op: &Op, inputs: &[NodeId]) -> String {
+    // Add is commutative; normalize its input order.
+    let mut ins = inputs.to_vec();
+    if matches!(op, Op::Add) {
+        ins.sort();
+    }
+    format!("{:?}|{:?}", op, ins)
+}
+
+/// Run both stages; returns the cleaned graph and statistics.
+pub fn optimize(g: &Graph) -> (Graph, OptimizeStats) {
+    let mut stats = OptimizeStats::default();
+
+    // ── Stage 1: CSE + identity collapsing ─────────────────────────────
+    let mut out = Graph::new(g.name.clone(), g.nodes[g.input].shape.clone());
+    let mut map: HashMap<NodeId, NodeId> = HashMap::new();
+    map.insert(g.input, out.input);
+    let mut seen: HashMap<String, NodeId> = HashMap::new();
+    for n in &g.nodes {
+        if n.id == g.input {
+            continue;
+        }
+        let inputs: Vec<NodeId> = n.inputs.iter().map(|i| map[i]).collect();
+        // Identity collapsing: inference-time Dropout is a no-op; a fused
+        // elementwise chain of 1 is the op itself but conversion tools
+        // sometimes emit them — collapse to the input.
+        let is_identity = matches!(n.op, Op::Dropout { .. })
+            || matches!(n.op, Op::FusedElementwise { count: 0 | 1 });
+        if is_identity && inputs.len() == 1 && !g.outputs.contains(&n.id) {
+            stats.identities_collapsed += 1;
+            map.insert(n.id, inputs[0]);
+            continue;
+        }
+        let key = cse_key(&n.op, &inputs);
+        if let Some(&existing) = seen.get(&key) {
+            stats.cse_merged += 1;
+            map.insert(n.id, existing);
+            continue;
+        }
+        let id = out.add(n.name.clone(), n.op.clone(), &inputs);
+        seen.insert(key, id);
+        map.insert(n.id, id);
+    }
+    for o in &g.outputs {
+        out.mark_output(map[o]);
+    }
+
+    // ── Stage 2: dynamic/constant classification + folding ─────────────
+    // Dynamic = reachable from the input; everything else is constant.
+    let mut dynamic = vec![false; out.len()];
+    dynamic[out.input] = true;
+    for n in &out.nodes {
+        if n.id == out.input {
+            continue;
+        }
+        if !n.inputs.is_empty() && n.inputs.iter().any(|&i| dynamic[i]) {
+            dynamic[n.id] = true;
+        }
+    }
+    // Constant, non-output nodes are folded: they contribute nothing the
+    // runtime needs (their values would be baked as weights). prune_dead
+    // removes them once outputs don't reference them.
+    let before = out.len();
+    let removed = out.prune_dead();
+    let _ = before;
+    stats.constants_folded += removed
+        + out
+            .nodes
+            .iter()
+            .filter(|n| !dynamic.get(n.id).copied().unwrap_or(true))
+            .count()
+            .saturating_sub(removed);
+
+    (out, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Activation, Conv2dAttrs, Shape};
+    use crate::models::{resnet18, ResNetStyle};
+
+    #[test]
+    fn dedups_identical_convs() {
+        // Simulate a conversion that duplicated a conv (both consumed).
+        let mut g = Graph::new("dup", Shape::nchw(1, 3, 8, 8));
+        let a = Conv2dAttrs::simple(4, 3, 1, 1);
+        let c1 = g.add("c1", Op::Conv2d(a.clone()), &[g.input]);
+        let c2 = g.add("c2", Op::Conv2d(a), &[g.input]); // duplicate
+        let add = g.add("add", Op::Add, &[c1, c2]);
+        g.mark_output(add);
+        let (o, stats) = optimize(&g);
+        assert_eq!(stats.cse_merged, 1);
+        // The add now sums the same node twice — still 3 nodes incl input.
+        assert!(o.len() < g.len());
+        assert_eq!(o.node(o.outputs[0]).shape, g.node(g.outputs[0]).shape);
+    }
+
+    #[test]
+    fn collapses_inference_dropout() {
+        let mut g = Graph::new("drop", Shape::nchw(1, 3, 8, 8));
+        let c = g.add("c", Op::Conv2d(Conv2dAttrs::simple(4, 3, 1, 1)), &[g.input]);
+        let d = g.add("d", Op::Dropout { p: 0.5 }, &[c]);
+        let r = g.add("r", Op::Act(Activation::ReLU), &[d]);
+        g.mark_output(r);
+        let (o, stats) = optimize(&g);
+        assert_eq!(stats.identities_collapsed, 1);
+        assert_eq!(o.len(), 3); // input, conv, relu
+    }
+
+    #[test]
+    fn folds_dead_constant_branch() {
+        let mut g = Graph::new("const", Shape::nchw(1, 3, 8, 8));
+        let c = g.add("c", Op::Conv2d(Conv2dAttrs::simple(4, 3, 1, 1)), &[g.input]);
+        // A dangling "constant table" branch conversion left behind.
+        let dead = g.add("dead", Op::Act(Activation::Sigmoid), &[c]);
+        let _ = dead;
+        g.mark_output(c);
+        let (o, stats) = optimize(&g);
+        assert!(stats.constants_folded >= 1);
+        assert_eq!(o.len(), 2);
+    }
+
+    #[test]
+    fn computation_preserved_on_clean_models() {
+        let g = resnet18(ResNetStyle::Cifar, 100, 1);
+        let (o, stats) = optimize(&g);
+        // ResNet has inference Dropout nowhere; duplicates nowhere.
+        assert_eq!(stats.cse_merged, 0);
+        assert_eq!(o.total_macs(), g.total_macs());
+        assert_eq!(o.total_params(), g.total_params());
+    }
+
+    #[test]
+    fn roundtrip_convert_optimize_convert() {
+        // PyTorch→exchange→optimize→exchange mimics Fig. 4's pipeline.
+        let g = crate::models::vgg16(false, 100, 1);
+        let j = crate::transform::to_json(&g);
+        let imported = crate::transform::from_json(&j).unwrap();
+        let (optimized, stats) = optimize(&imported);
+        // VGG's dropouts collapse at inference.
+        assert_eq!(stats.identities_collapsed, 2);
+        assert_eq!(optimized.total_params(), g.total_params());
+        let j2 = crate::transform::to_json(&optimized);
+        let back = crate::transform::from_json(&j2).unwrap();
+        assert_eq!(back.total_macs(), optimized.total_macs());
+    }
+}

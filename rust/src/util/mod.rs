@@ -1,0 +1,10 @@
+//! Offline-build utilities: deterministic RNG, minimal JSON, and a tiny
+//! table printer shared by the bench harnesses.
+
+pub mod json;
+pub mod rng;
+pub mod table;
+
+pub use json::Json;
+pub use rng::Rng;
+pub use table::Table;

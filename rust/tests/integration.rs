@@ -1,0 +1,226 @@
+//! Cross-module integration and property-based tests (hand-rolled
+//! generators over the seeded RNG — no proptest crate in this offline
+//! build). Each property runs across many random graphs/configurations.
+
+use crowdhmtware::compress::{self, OperatorKind, VariantSpec};
+use crowdhmtware::device::{all_devices, ContextState, DynamicsSim, ResourceMonitor};
+use crowdhmtware::engine::{allocate, fuse, lifetimes, FusionConfig};
+use crowdhmtware::graph::{Activation, Conv2dAttrs, CostProfile, Graph, Op, PoolKind, Shape};
+use crowdhmtware::models::{backbone, BackboneConfig};
+use crowdhmtware::partition::{plan_offload, prepartition, DeviceState, Topology};
+use crowdhmtware::profiler::{estimate_energy, estimate_latency};
+use crowdhmtware::transform::{from_json, optimize, to_json};
+use crowdhmtware::util::Rng;
+
+/// Random CNN-ish chain graph with occasional residual blocks.
+fn random_graph(rng: &mut Rng) -> Graph {
+    let c0 = [1usize, 3][rng.gen_index(2)];
+    let hw = [16usize, 32, 24][rng.gen_index(3)];
+    let mut g = Graph::new("rand", Shape::nchw(1, c0, hw, hw));
+    let mut x = g.input;
+    let mut width = [8usize, 16][rng.gen_index(2)];
+    let depth = 3 + rng.gen_index(6);
+    for i in 0..depth {
+        match rng.gen_index(5) {
+            0 | 1 => {
+                // conv-bn-relu
+                let c = g.add(format!("c{i}"), Op::Conv2d(Conv2dAttrs::simple(width, 3, 1, 1)), &[x]);
+                let b = g.add(format!("b{i}"), Op::BatchNorm, &[c]);
+                x = g.add(format!("r{i}"), Op::Act(Activation::ReLU), &[b]);
+            }
+            2 => {
+                // residual block (identity shortcut)
+                let in_c = g.node(x).shape.channels();
+                let c1 = g.add(format!("rb{i}.a"), Op::Conv2d(Conv2dAttrs::simple(in_c, 3, 1, 1)), &[x]);
+                let r1 = g.add(format!("rb{i}.ar"), Op::Act(Activation::ReLU), &[c1]);
+                let c2 = g.add(format!("rb{i}.b"), Op::Conv2d(Conv2dAttrs::simple(in_c, 3, 1, 1)), &[r1]);
+                let add = g.add(format!("rb{i}.add"), Op::Add, &[c2, x]);
+                x = g.add(format!("rb{i}.relu"), Op::Act(Activation::ReLU), &[add]);
+            }
+            3 => {
+                let (h, _) = g.node(x).shape.hw();
+                if h >= 4 {
+                    x = g.add(format!("p{i}"), Op::Pool { kind: PoolKind::Max, kernel: 2, stride: 2 }, &[x]);
+                }
+            }
+            _ => {
+                width = (width * 2).min(64);
+                let c = g.add(format!("w{i}"), Op::Conv2d(Conv2dAttrs::simple(width, 3, 1, 1)), &[x]);
+                x = g.add(format!("wr{i}"), Op::Act(Activation::ReLU), &[c]);
+            }
+        }
+    }
+    let gap = g.add("gap", Op::GlobalAvgPool, &[x]);
+    let fl = g.add("flat", Op::Flatten, &[gap]);
+    let fc = g.add("fc", Op::FC { out: 10, bias: true }, &[fl]);
+    let sm = g.add("sm", Op::Softmax, &[fc]);
+    g.mark_output(sm);
+    g
+}
+
+#[test]
+fn prop_fusion_never_changes_output_shape_or_grows_cost() {
+    let mut rng = Rng::seed_from_u64(11);
+    for _ in 0..40 {
+        let g = random_graph(&mut rng);
+        let (f, _) = fuse(&g, FusionConfig::all());
+        assert_eq!(f.node(f.outputs[0]).shape, g.node(g.outputs[0]).shape);
+        assert!(f.len() <= g.len());
+        assert!(f.total_macs() <= g.total_macs());
+        assert!(CostProfile::of(&f).total_mem_bytes() <= CostProfile::of(&g).total_mem_bytes());
+        assert_eq!(f.topo_order().len(), f.len());
+    }
+}
+
+#[test]
+fn prop_compression_operators_shrink_and_preserve_classifier() {
+    let mut rng = Rng::seed_from_u64(13);
+    for _ in 0..25 {
+        let g = random_graph(&mut rng);
+        for k in OperatorKind::all() {
+            let level = [0.25, 0.5, 0.75][rng.gen_index(3)];
+            let v = compress::apply(&g, k, level);
+            assert!(v.total_macs() <= g.total_macs(), "{k:?}@{level} grew");
+            assert_eq!(v.node(v.outputs[0]).shape.features(), 10, "{k:?} classifier");
+            assert_eq!(v.topo_order().len(), v.len(), "{k:?} cycle");
+        }
+    }
+}
+
+#[test]
+fn prop_exchange_roundtrip_exact() {
+    let mut rng = Rng::seed_from_u64(17);
+    for _ in 0..25 {
+        let g = random_graph(&mut rng);
+        let g2 = from_json(&to_json(&g)).expect("roundtrip");
+        assert_eq!(g2.len(), g.len());
+        assert_eq!(g2.total_macs(), g.total_macs());
+        assert_eq!(g2.total_params(), g.total_params());
+        // And through the redundancy optimizer: cost never grows.
+        let (o, _) = optimize(&g2);
+        assert!(o.total_macs() <= g2.total_macs());
+    }
+}
+
+#[test]
+fn prop_memalloc_correct_on_random_graphs() {
+    let mut rng = Rng::seed_from_u64(19);
+    for _ in 0..30 {
+        let g = random_graph(&mut rng);
+        let plan = allocate(&g);
+        assert!(plan.arena_bytes >= plan.peak_live_bytes);
+        assert!(plan.arena_bytes <= plan.naive_bytes);
+        // No live-overlapping slots may share arena bytes.
+        for (i, a) in plan.slots.iter().enumerate() {
+            for b in plan.slots.iter().skip(i + 1) {
+                let live_overlap = a.def <= b.last_use && b.def <= a.last_use;
+                if live_overlap && a.bytes > 0 && b.bytes > 0 {
+                    let disjoint = a.offset + a.bytes <= b.offset || b.offset + b.bytes <= a.offset;
+                    assert!(disjoint);
+                }
+            }
+        }
+        // Lifetime sanity: def ≤ last_use, within range.
+        for s in lifetimes(&g) {
+            assert!(s.def <= s.last_use);
+            assert!(s.last_use < g.len());
+        }
+    }
+}
+
+#[test]
+fn prop_prepartition_segments_cover_exactly() {
+    let mut rng = Rng::seed_from_u64(23);
+    for _ in 0..30 {
+        let g = random_graph(&mut rng);
+        let pp = prepartition(&g);
+        let covered: usize = pp.segments.iter().map(|s| s.nodes.len()).sum();
+        assert_eq!(covered, g.len());
+        let macs: usize = pp.segments.iter().map(|s| s.macs).sum();
+        assert_eq!(macs, g.total_macs());
+        // Cut tensor sizes match the node shapes.
+        for c in &pp.cuts {
+            assert_eq!(c.tensor_bytes, g.node(c.node).shape.bytes());
+        }
+    }
+}
+
+#[test]
+fn prop_offload_plan_never_worse_than_local() {
+    let mut rng = Rng::seed_from_u64(29);
+    let topo = Topology::wifi_pair("raspberrypi-4b", "jetson-nx");
+    let local = DeviceState {
+        snap: ResourceMonitor::new(crowdhmtware::device::device("raspberrypi-4b").unwrap()).idle_snapshot(),
+        mem_budget: 4e9,
+    };
+    let remote = DeviceState {
+        snap: ResourceMonitor::new(crowdhmtware::device::device("jetson-nx").unwrap()).idle_snapshot(),
+        mem_budget: 8e9,
+    };
+    for _ in 0..15 {
+        let g = random_graph(&mut rng);
+        let pp = prepartition(&g);
+        let both = plan_offload(&g, &pp, &[local.clone(), remote.clone()], &topo);
+        let alone = plan_offload(&g, &pp, std::slice::from_ref(&local), &topo);
+        assert!(both.latency_s <= alone.latency_s + 1e-9);
+        let covered: usize = both.placements.iter().map(|p| p.segments.len()).sum();
+        assert_eq!(covered, pp.segments.len());
+    }
+}
+
+#[test]
+fn prop_profiler_monotone_in_throughput() {
+    // Latency/energy finite and positive across the whole device zoo;
+    // the strongest device is strictly faster than the weakest.
+    let g = backbone(&BackboneConfig::default());
+    let cost = CostProfile::of(&g);
+    let mut results: Vec<(f64, f64)> = Vec::new();
+    for d in all_devices() {
+        let snap = ResourceMonitor::new(d.clone()).idle_snapshot();
+        let lat = estimate_latency(&cost, &snap);
+        let en = estimate_energy(&cost, &snap);
+        assert!(lat.total_s > 0.0 && lat.total_s.is_finite(), "{}", d.name);
+        assert!(en.total_j > 0.0 && en.total_j.is_finite(), "{}", d.name);
+        results.push((d.peak_gmacs, lat.total_s));
+    }
+    results.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    assert!(results.first().unwrap().1 > results.last().unwrap().1);
+}
+
+#[test]
+fn prop_variant_spec_apply_is_deterministic() {
+    let mut rng = Rng::seed_from_u64(31);
+    for _ in 0..10 {
+        let g = random_graph(&mut rng);
+        let spec = VariantSpec::pair(
+            (OperatorKind::LowRank, 0.5),
+            (OperatorKind::ChannelScale, [0.25, 0.5, 0.75][rng.gen_index(3)]),
+        );
+        let a = spec.apply(&g);
+        let b = spec.apply(&g);
+        assert_eq!(a.total_macs(), b.total_macs());
+        assert_eq!(a.len(), b.len());
+    }
+}
+
+#[test]
+fn dynamics_to_profiler_to_loop_pipeline() {
+    // Full-stack smoke: dynamics → monitor → profiler → latency/energy
+    // stay finite and sane over a long simulated run on battery devices.
+    let g = backbone(&BackboneConfig::default());
+    let cost = CostProfile::of(&g);
+    for d in all_devices().into_iter().filter(|d| d.battery_mah.is_some()).take(4) {
+        let mon = ResourceMonitor::new(d.clone());
+        let mut sim = DynamicsSim::new(d, 123);
+        for _ in 0..100 {
+            let ctx: ContextState = sim.tick().clone();
+            let snap = mon.sample(&ctx);
+            let lat = estimate_latency(&cost, &snap);
+            let en = estimate_energy(&cost, &snap);
+            assert!(lat.total_s.is_finite() && lat.total_s > 0.0);
+            assert!(en.total_j.is_finite() && en.total_j > 0.0);
+            sim.consume_energy(en.total_j);
+        }
+        assert!(sim.state.battery < 1.0);
+    }
+}

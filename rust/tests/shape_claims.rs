@@ -1,0 +1,179 @@
+//! Integration tests asserting the *shape* of every reproduced result:
+//! who wins, in which direction, and (loosely) by what factor — the
+//! contract DESIGN.md sets for the paper's tables and figures.
+
+use crowdhmtware::experiments as ex;
+
+#[test]
+fn fig8_crowdhmt_beats_adadeep_on_every_model() {
+    let rows = ex::fig8::run("raspberrypi-4b");
+    assert_eq!(rows.len(), 3);
+    for r in &rows {
+        assert!(r.our_acc >= r.ada_acc, "{}: accuracy must not regress", r.model);
+        assert!(r.latency_gain() > 1.5, "{}: latency gain {:.2}", r.model, r.latency_gain());
+        assert!(r.memory_gain() > 1.5, "{}: memory gain {:.2}", r.model, r.memory_gain());
+    }
+    // Paper ordering: the heavyweight VGG16 gains the most latency.
+    let vgg = rows.iter().find(|r| r.model == "vgg16").unwrap();
+    let r18 = rows.iter().find(|r| r.model == "resnet18").unwrap();
+    assert!(
+        vgg.latency_gain() > r18.latency_gain(),
+        "vgg {:.1}x vs resnet18 {:.1}x",
+        vgg.latency_gain(),
+        r18.latency_gain()
+    );
+}
+
+#[test]
+fn fig9_wins_on_every_device() {
+    for r in ex::fig9::run() {
+        assert!(r.our_acc >= r.ada_acc, "{}", r.device);
+        assert!(r.our_latency_s < r.ada_latency_s, "{}", r.device);
+    }
+}
+
+#[test]
+fn table1_improves_all_12_devices() {
+    let rows = ex::table1::run();
+    assert_eq!(rows.len(), 12);
+    for r in &rows {
+        assert!(r.latency_gain > 1.0, "{}: latency {:.2}", r.device, r.latency_gain);
+        assert!(r.macs_gain > 1.0, "{}: macs {:.2}", r.device, r.macs_gain);
+        assert!(r.energy_gain > 1.0, "{}: energy {:.2}", r.device, r.energy_gain);
+        assert!(r.acc_delta > -3.0, "{}: Δacc {:.2}", r.device, r.acc_delta);
+    }
+}
+
+#[test]
+fn table2_memory_tracks_budget_and_accuracy_holds() {
+    let rows = ex::table2::run();
+    assert_eq!(rows.len(), 4);
+    // Memory decreases monotonically with the budget.
+    for w in rows.windows(2) {
+        assert!(
+            w[1].memory_mb <= w[0].memory_mb + 1e-6,
+            "{} -> {}",
+            w[0].memory_mb,
+            w[1].memory_mb
+        );
+    }
+    // 25% budget honoured.
+    assert!(rows[3].memory_mb <= rows[0].memory_mb * 0.25 + 1e-6);
+    // Accuracy stays within 3 pp of unrestricted (paper: held at 76%).
+    for r in &rows {
+        assert!(r.accuracy > rows[0].accuracy - 3.0, "{}: {:.2}", r.budget_label, r.accuracy);
+    }
+    // The extreme 25% budget costs latency vs the 50% state (the paper's
+    // swap-induced spike): it must not be the fastest row.
+    let min_lat = rows.iter().map(|r| r.latency_s).fold(f64::MAX, f64::min);
+    assert!(rows[3].latency_s > min_lat, "25% row should pay a swap penalty");
+}
+
+#[test]
+fn fig10_crowdhmt_best_tradeoff() {
+    let rows = ex::fig10::run();
+    let ours = rows.iter().find(|r| r.method == "CrowdHMTware").unwrap();
+    let ada = rows.iter().find(|r| r.method == "AdaDeep").unwrap();
+    let orig = rows.iter().find(|r| r.method == "Original").unwrap();
+    assert!(ours.accuracy >= ada.accuracy, "ours {:.2} vs ada {:.2}", ours.accuracy, ada.accuracy);
+    assert!(ours.latency_s <= ada.latency_s * 1.05);
+    assert!(ours.energy_j < orig.energy_j * 0.5);
+    // All baselines compress vs original.
+    for r in &rows {
+        if r.method != "Original" {
+            assert!(r.params_m < orig.params_m, "{}", r.method);
+        }
+    }
+}
+
+#[test]
+fn table3_operator_combos_win_efficiency_within_accuracy_band() {
+    let rows = ex::table3::run();
+    assert_eq!(rows.len(), 5);
+    for r in &rows {
+        // The ImageNet-sized backbone is architecture-limited (its stem
+        // keeps 112² activations, unlike MobileNet's stride pyramid), so
+        // its MAC gain is modest; every other task clears 1.5×.
+        let floor = if r.dataset == "ImageNet" { 1.2 } else { 1.5 };
+        assert!(r.macs_gain > floor, "{} on {}: MACs {:.1}", r.combo, r.dataset, r.macs_gain);
+        assert!(r.energy_gain > 1.0, "{} on {}: energy {:.1}", r.combo, r.dataset, r.energy_gain);
+        assert!(r.acc_delta.abs() < 6.0, "{} on {}: Δacc {:.1}", r.combo, r.dataset, r.acc_delta);
+    }
+}
+
+#[test]
+fn fig11_crowdhmt_beats_cas_and_dads() {
+    let rows = ex::fig11::run();
+    let ours = rows.iter().find(|r| r.method == "CrowdHMTware").unwrap();
+    for base in ["CAS", "DADS"] {
+        let b = rows.iter().find(|r| r.method == base).unwrap();
+        assert!(
+            ours.latency_s <= b.latency_s + 1e-9,
+            "{}: ours {:.3} vs {:.3}",
+            base,
+            ours.latency_s,
+            b.latency_s
+        );
+    }
+}
+
+#[test]
+fn table4_cross_level_dominates_single_level() {
+    let rows = ex::table4::run();
+    let by = |m: &str| rows.iter().find(|r| r.method == m).unwrap();
+    let orig = by("ResNet-18");
+    let fusion = by("Operator fusion");
+    let par = by("Operator parallelism");
+    let full = by("Parallelism+Pruning+Fusion+MemAlloc");
+    // Paper's directions: every mechanism cuts latency; the full
+    // cross-level combination cuts the most (−48.4% in the paper).
+    assert!(fusion.latency_ms < orig.latency_ms);
+    assert!(par.latency_ms < orig.latency_ms);
+    assert!(full.speedup_pct > 40.0, "full speedup {:.1}%", full.speedup_pct);
+    for r in &rows {
+        assert!(full.latency_ms <= r.latency_ms + 1e-9, "full must be fastest vs {}", r.method);
+    }
+    // Backend-only paths keep accuracy exactly.
+    assert_eq!(fusion.accuracy, orig.accuracy);
+    assert_eq!(par.accuracy, orig.accuracy);
+}
+
+#[test]
+fn table5_full_system_fastest() {
+    let rows = ex::table5::run();
+    assert_eq!(rows.len(), 4);
+    let full = rows.last().unwrap();
+    assert!(full.method.contains("all three"));
+    for r in &rows[..3] {
+        assert!(
+            full.latency_s <= r.latency_s + 1e-9,
+            "full {:.3}s vs {} {:.3}s",
+            full.latency_s,
+            r.method,
+            r.latency_s
+        );
+    }
+    // Compression pairs cut params; engine cuts memory.
+    let comp_eng = &rows[1];
+    assert!(comp_eng.params_m < 5.0);
+}
+
+#[test]
+fn fig13_strategy_switches_follow_the_day() {
+    let log = ex::fig13::run(6);
+    assert_eq!(log.len(), 30);
+    // At least two distinct strategies across the day.
+    let mut strategies: Vec<&str> = log.iter().map(|e| e.chosen.as_str()).collect();
+    strategies.dedup();
+    assert!(strategies.len() >= 2, "no adaptation happened: {strategies:?}");
+    // The battery trace is the paper's 90% → 21%.
+    assert!((log.first().unwrap().battery - 0.9).abs() < 1e-9);
+    assert!((log.last().unwrap().battery - 0.21).abs() < 1e-9);
+    // Memory crunch phase (ticks 13..18) must not exceed its budget by
+    // running the biggest on-device config: the loop offloads or shrinks.
+    let crunch: Vec<_> = log.iter().filter(|e| e.tick > 12 && e.tick <= 18).collect();
+    assert!(
+        crunch.iter().any(|e| e.offloaded) || crunch.iter().all(|e| e.memory_mb <= e.mem_budget_mb),
+        "memory crunch unhandled"
+    );
+}

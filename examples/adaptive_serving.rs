@@ -1,20 +1,26 @@
 //! End-to-end validation driver: serve the trained multi-variant backbone
-//! through the full stack — PJRT execution, dynamic batching, and the
-//! adaptation loop switching variants live as the simulated context
-//! degrades (contention → DVFS → memory squeeze → low battery).
+//! through the full stack — a replicated PJRT serving pool, per-worker
+//! dynamic batching, and the adaptation loop broadcasting variant
+//! switches live as the simulated context degrades (contention → DVFS →
+//! memory squeeze → low battery).
 //!
 //! This is the run recorded in EXPERIMENTS.md §End-to-end: per-phase
 //! variant choice, measured accuracy on held-out data, real p50/p99
 //! latency and throughput.
 //!
-//! Run: `make artifacts && cargo run --release --example adaptive_serving`
+//! Run: `make artifacts && cargo run --release --features pjrt --example adaptive_serving`
 
 use std::time::{Duration, Instant};
 
-use crowdhmtware::coordinator::{run_cascade, select_variant, spawn, BatcherConfig, Executor, Stage};
+use crowdhmtware::coordinator::{
+    run_cascade, select_variant, BatcherConfig, DispatchPolicy, Executor, PoolConfig, ServingPool, Stage,
+};
 use crowdhmtware::device::{device, ContextState, ResourceMonitor};
 use crowdhmtware::runtime::{Manifest, ModelRuntime};
 use crowdhmtware::util::Table;
+
+/// Pool width for the serving phases (each worker owns a PJRT client).
+const WORKERS: usize = 4;
 
 /// The context phases of the scenario (per ~80 requests): idle → heavy
 /// contention (cache/DVFS) → memory squeeze → low battery.
@@ -53,10 +59,16 @@ fn main() -> anyhow::Result<()> {
     let mon = ResourceMonitor::new(device("xiaomi-mi6").unwrap());
 
     let dir2 = dir.clone();
-    let mut server = spawn(
-        move || Box::new(ModelRuntime::load(dir2).expect("load")) as Box<dyn Executor>,
-        "full".to_string(),
-        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(2) },
+    let server = ServingPool::spawn(
+        move |_worker| Box::new(ModelRuntime::load(dir2.clone()).expect("load")) as Box<dyn Executor>,
+        "full",
+        PoolConfig {
+            workers: WORKERS,
+            queue_capacity: 256,
+            batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(2) },
+            dispatch: DispatchPolicy::LeastQueueDepth,
+            ..PoolConfig::default()
+        },
     );
 
     let mut table = Table::new(
@@ -71,14 +83,17 @@ fn main() -> anyhow::Result<()> {
         let snap = mon.sample(&ctx);
         let budget = mem_budget.min(snap.mem_budget_bytes);
         let chosen = select_variant(&variants, &snap, budget).expect("a variant fits");
+        // Broadcast the switch; returns once every worker has acked, so
+        // every request below is served by the chosen variant.
         server.switch_variant(&chosen);
-        std::thread::sleep(Duration::from_millis(10));
 
-        // Warmup: the first batch per (variant, batch-size) pays PJRT
-        // compilation; measure steady-state serving like the paper does.
+        // Warmup: the first batch per (worker, variant, batch-size) pays
+        // PJRT compilation; measure steady-state serving like the paper
+        // does. Enough requests to touch every worker.
         let mut warm = Vec::new();
-        for i in 0..9 {
-            warm.push(server.submit(inputs[i * per..(i + 1) * per].to_vec()));
+        for i in 0..9 * WORKERS {
+            let idx = i % labels.len();
+            warm.push(server.submit(inputs[idx * per..(idx + 1) * per].to_vec()).expect("warmup admitted"));
         }
         for w in warm {
             let _ = w.recv_timeout(Duration::from_secs(120))?;
@@ -89,7 +104,7 @@ fn main() -> anyhow::Result<()> {
         for _ in 0..per_phase {
             let idx = req_i % labels.len();
             req_i += 1;
-            rxs.push((labels[idx], server.submit(inputs[idx * per..(idx + 1) * per].to_vec())));
+            rxs.push((labels[idx], server.submit(inputs[idx * per..(idx + 1) * per].to_vec()).expect("admitted")));
         }
         let mut correct = 0usize;
         let mut lats = Vec::new();
@@ -115,9 +130,21 @@ fn main() -> anyhow::Result<()> {
     let stats = server.shutdown();
     table.print();
     println!(
-        "\ntotal served={} batches={} switches={} (expect ≥2: squeeze + battery phases force lighter variants)",
-        stats.served, stats.batches, stats.switches
+        "\npool: workers={} served={} batches={} rejected={} switches={} (expect ≥2: squeeze + battery phases force lighter variants)",
+        stats.per_worker.len(),
+        stats.served(),
+        stats.batches(),
+        stats.rejected(),
+        stats.switches(),
     );
+    let occ = stats
+        .occupancy()
+        .iter()
+        .map(|o| format!("{o:.1}"))
+        .collect::<Vec<_>>()
+        .join("/");
+    let merged = stats.merged();
+    println!("per-worker mean batch occupancy: {occ}  |  pool p50={:.1}ms p99={:.1}ms", merged.percentile(0.5) * 1e3, merged.percentile(0.99) * 1e3);
 
     // ── Adaptive early-exit cascade (Sec. III-A1) on real artifacts ────
     // exit0 → exit1 → full: confident inputs answer at shallow branches;

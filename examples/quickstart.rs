@@ -1,12 +1,12 @@
 //! Quickstart: load the AOT artifacts, serve a handful of inference
-//! requests through the coordinator (router → dynamic batcher → PJRT
-//! executor), and print predictions with per-request latency.
+//! requests through the coordinator (router → per-worker dynamic batcher
+//! → PJRT executor), and print predictions with per-request latency.
 //!
-//! Run: `make artifacts && cargo run --release --example quickstart`
+//! Run: `make artifacts && cargo run --release --features pjrt --example quickstart`
 
 use std::time::Duration;
 
-use crowdhmtware::coordinator::{spawn, BatcherConfig, Executor};
+use crowdhmtware::coordinator::{BatcherConfig, Executor, PoolConfig, ServingPool};
 use crowdhmtware::runtime::{Manifest, ModelRuntime};
 
 fn main() -> anyhow::Result<()> {
@@ -26,11 +26,17 @@ fn main() -> anyhow::Result<()> {
     let eval = manifest.load_eval()?;
     let (inputs, labels) = eval;
 
-    // The PJRT runtime is constructed *inside* the worker thread.
-    let mut server = spawn(
-        move || Box::new(ModelRuntime::load(dir).expect("load artifacts")) as Box<dyn Executor>,
-        "full".to_string(),
-        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(5) },
+    // A two-worker pool; each PJRT runtime is constructed *inside* its
+    // worker thread (clients are thread-affine).
+    let server = ServingPool::spawn(
+        move |_worker| Box::new(ModelRuntime::load(dir.clone()).expect("load artifacts")) as Box<dyn Executor>,
+        "full",
+        PoolConfig {
+            workers: 2,
+            queue_capacity: 64,
+            batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(5) },
+            ..PoolConfig::default()
+        },
     );
 
     // Submit 32 requests from the held-out eval set.
@@ -38,7 +44,7 @@ fn main() -> anyhow::Result<()> {
     let mut rxs = Vec::new();
     for i in 0..n {
         let row = inputs[i * per..(i + 1) * per].to_vec();
-        rxs.push((labels[i], server.submit(row)));
+        rxs.push((labels[i], server.submit(row).expect("admitted")));
     }
     let mut correct = 0;
     for (label, rx) in rxs {
@@ -52,15 +58,17 @@ fn main() -> anyhow::Result<()> {
         );
     }
     let stats = server.shutdown();
+    let merged = stats.merged();
     println!(
-        "\naccuracy {}/{} = {:.1}%  |  batches={} mean_batch={:.1}  p50={:.1}ms p99={:.1}ms",
+        "\naccuracy {}/{} = {:.1}%  |  workers={} batches={} mean_batch={:.1}  p50={:.1}ms p99={:.1}ms",
         correct,
         n,
         100.0 * correct as f64 / n as f64,
-        stats.batches,
-        stats.mean_batch_size(),
-        stats.percentile(0.5) * 1e3,
-        stats.percentile(0.99) * 1e3,
+        stats.per_worker.len(),
+        stats.batches(),
+        merged.mean_batch_size(),
+        merged.percentile(0.5) * 1e3,
+        merged.percentile(0.99) * 1e3,
     );
     Ok(())
 }

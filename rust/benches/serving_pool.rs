@@ -1,0 +1,105 @@
+//! Pool-vs-single-worker serving throughput on the mock executor (no
+//! criterion in this offline environment — plain wall-clock runs).
+//!
+//! Each batch costs a fixed wall-clock delay, modeling a PJRT dispatch:
+//! a single worker is bounded by `batches × delay`, while the pool
+//! overlaps batches across workers. Reported per pool width: sustained
+//! req/s, pool p50/p99 latency, mean batch occupancy, rejections.
+//!
+//! Run: `cargo bench --bench serving_pool`
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use crowdhmtware::coordinator::{BatcherConfig, Executor, PoolConfig, ServingPool};
+use crowdhmtware::util::Table;
+
+const CLASSES: usize = 4;
+const ELEMS: usize = 16;
+const REQUESTS: usize = 512;
+const BATCH_DELAY: Duration = Duration::from_millis(1);
+
+struct MockExec;
+
+impl Executor for MockExec {
+    fn batch_sizes(&self, _v: &str) -> Vec<usize> {
+        vec![1, 4, 8]
+    }
+
+    fn num_classes(&self) -> usize {
+        CLASSES
+    }
+
+    fn input_elems(&self) -> usize {
+        ELEMS
+    }
+
+    fn run(&mut self, _v: &str, batch: usize, _input: &[f32]) -> Result<Vec<f32>> {
+        std::thread::sleep(BATCH_DELAY);
+        Ok(vec![1.0 / CLASSES as f32; batch * CLASSES])
+    }
+}
+
+fn run_width(workers: usize) -> (f64, f64, f64, f64, usize) {
+    let pool = ServingPool::spawn(
+        |_| Box::new(MockExec) as Box<dyn Executor>,
+        "v",
+        PoolConfig {
+            workers,
+            queue_capacity: REQUESTS,
+            batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_micros(500) },
+            ..PoolConfig::default()
+        },
+    );
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..REQUESTS)
+        .map(|_| pool.submit(vec![0.0; ELEMS]).expect("capacity sized to the run"))
+        .collect();
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(60)).expect("response");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = pool.shutdown();
+    assert_eq!(stats.served(), REQUESTS);
+    let merged = stats.merged();
+    (
+        REQUESTS as f64 / wall,
+        merged.percentile(0.5) * 1e3,
+        merged.percentile(0.99) * 1e3,
+        merged.mean_batch_size(),
+        stats.rejected(),
+    )
+}
+
+fn main() {
+    let mut table = Table::new(
+        "Serving throughput vs pool width (mock executor, 1 ms/batch)",
+        &["workers", "req/s", "p50 ms", "p99 ms", "mean batch", "rejected"],
+    );
+    let mut single = 0.0f64;
+    let mut best = (1usize, 0.0f64);
+    for &w in &[1usize, 2, 4, 8] {
+        let (rps, p50, p99, occ, rej) = run_width(w);
+        if w == 1 {
+            single = rps;
+        }
+        if rps > best.1 {
+            best = (w, rps);
+        }
+        table.row(&[
+            w.to_string(),
+            format!("{rps:.0}"),
+            format!("{p50:.2}"),
+            format!("{p99:.2}"),
+            format!("{occ:.1}"),
+            rej.to_string(),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nbest: {} workers at {:.0} req/s — {:.1}× the single-worker baseline",
+        best.0,
+        best.1,
+        if single > 0.0 { best.1 / single } else { 0.0 }
+    );
+}

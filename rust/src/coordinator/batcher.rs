@@ -72,6 +72,13 @@ impl Batcher {
         self.queue.is_empty()
     }
 
+    /// Instant at which the oldest queued request's batch window expires —
+    /// the worker blocks in `recv_timeout` until exactly this deadline
+    /// instead of spin-sleeping. `None` when the queue is empty.
+    pub fn deadline(&self) -> Option<Instant> {
+        self.queue.front().map(|r| r.enqueued + self.cfg.max_wait)
+    }
+
     /// Pick the compiled batch size for `k` ready requests: the smallest
     /// compiled size ≥ k (minimal padding), else the largest compiled size
     /// (and the batch is truncated to it).
@@ -95,11 +102,30 @@ impl Batcher {
         if self.queue.len() < self.cfg.max_batch && oldest_wait < self.cfg.max_wait {
             return None;
         }
+        Some(self.form(compiled))
+    }
+
+    /// Force-form a batch regardless of the fullness/age policy — used by
+    /// graceful shutdown to drain every in-flight request.
+    pub fn pop_batch_now(&mut self, compiled: &[usize]) -> Option<Batch> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        Some(self.form(compiled))
+    }
+
+    fn form(&mut self, compiled: &[usize]) -> Batch {
         let k = self.queue.len().min(self.cfg.max_batch);
         let b = Self::fit_compiled(k, compiled);
         let take = k.min(b);
         let requests: Vec<Request> = (0..take).map(|_| self.queue.pop_front().unwrap()).collect();
-        Some(Batch { requests, compiled_batch: b })
+        Batch { requests, compiled_batch: b }
+    }
+
+    /// Remove and return the oldest queued request (drop path when no
+    /// compiled artifact can ever run it).
+    pub fn pop_request(&mut self) -> Option<Request> {
+        self.queue.pop_front()
     }
 }
 
@@ -166,5 +192,125 @@ mod tests {
         assert_eq!(batch.compiled_batch, 8);
         assert_eq!(batch.requests.len(), 8);
         assert_eq!(b.len(), 4);
+    }
+
+    // ── compiled-size selection across batch-size sets ────────────────
+
+    /// `[1]`: every queue length maps to singleton batches.
+    #[test]
+    fn singleton_compiled_set() {
+        assert_eq!(Batcher::fit_compiled(1, &[1]), 1);
+        assert_eq!(Batcher::fit_compiled(5, &[1]), 1);
+        let mut b = Batcher::new(BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(0) });
+        let t = Instant::now();
+        for i in 0..5 {
+            b.push(req(i, t));
+        }
+        let mut popped = 0;
+        while let Some(batch) = b.pop_batch(&[1], t) {
+            assert_eq!(batch.compiled_batch, 1);
+            assert_eq!(batch.requests.len(), 1);
+            popped += 1;
+        }
+        assert_eq!(popped, 5);
+        assert!(b.is_empty());
+    }
+
+    /// `[1,4,8]`: every k in 1..=10 picks the smallest covering size
+    /// (or the largest available).
+    #[test]
+    fn standard_compiled_set_covers_all_k() {
+        let compiled = [1usize, 4, 8];
+        let expect = [1usize, 4, 4, 4, 8, 8, 8, 8, 8, 8];
+        for (k, &want) in (1..=10).zip(expect.iter()) {
+            assert_eq!(Batcher::fit_compiled(k, &compiled), want, "k={k}");
+        }
+    }
+
+    /// Non-contiguous `[2,6,32]` given unsorted: selection still works on
+    /// the sorted view, and a single request pads up to the smallest size.
+    #[test]
+    fn non_contiguous_compiled_set() {
+        let compiled = [32usize, 2, 6]; // deliberately unsorted
+        assert_eq!(Batcher::fit_compiled(1, &compiled), 2);
+        assert_eq!(Batcher::fit_compiled(2, &compiled), 2);
+        assert_eq!(Batcher::fit_compiled(3, &compiled), 6);
+        assert_eq!(Batcher::fit_compiled(6, &compiled), 6);
+        assert_eq!(Batcher::fit_compiled(7, &compiled), 32);
+        assert_eq!(Batcher::fit_compiled(33, &compiled), 32);
+
+        let mut b = Batcher::new(BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(0) });
+        let t = Instant::now();
+        for i in 0..3 {
+            b.push(req(i, t));
+        }
+        let batch = b.pop_batch(&compiled, t).unwrap();
+        assert_eq!(batch.compiled_batch, 6);
+        assert_eq!(batch.requests.len(), 3);
+        // Padded buffer is sized by the compiled batch, zero-filled rows.
+        let buf = batch.padded_input(4);
+        assert_eq!(buf.len(), 6 * 4);
+        assert_eq!(&buf[0..4], &[0.0; 4]);
+        assert_eq!(&buf[4..8], &[1.0; 4]);
+        assert_eq!(&buf[3 * 4..], &[0.0; 12]);
+    }
+
+    /// padded_input for an exactly-full batch has no padding rows.
+    #[test]
+    fn padded_input_exact_fit() {
+        let t = Instant::now();
+        let batch = Batch { requests: vec![req(1, t), req(2, t)], compiled_batch: 2 };
+        let buf = batch.padded_input(4);
+        assert_eq!(buf.len(), 8);
+        assert_eq!(&buf[0..4], &[1.0; 4]);
+        assert_eq!(&buf[4..8], &[2.0; 4]);
+    }
+
+    // ── max-wait deadline behavior ─────────────────────────────────────
+
+    /// The deadline is the oldest request's enqueue time + max_wait, and
+    /// pop_batch triggers exactly at (not before) it.
+    #[test]
+    fn deadline_tracks_oldest_request() {
+        let cfg = BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(5) };
+        let mut b = Batcher::new(cfg);
+        assert!(b.deadline().is_none(), "empty queue has no deadline");
+        let t0 = Instant::now();
+        b.push(req(0, t0));
+        b.push(req(1, t0 + Duration::from_millis(3)));
+        assert_eq!(b.deadline().unwrap(), t0 + Duration::from_millis(5));
+        // Just before the window: no batch.
+        assert!(b.pop_batch(&[1, 8], t0 + Duration::from_millis(4)).is_none());
+        // At the window: flush both queued requests.
+        let batch = b.pop_batch(&[1, 8], t0 + Duration::from_millis(5)).unwrap();
+        assert_eq!(batch.requests.len(), 2);
+        assert_eq!(batch.compiled_batch, 8);
+        assert!(b.deadline().is_none());
+    }
+
+    /// Filling to max_batch overrides the wait: the batch forms immediately.
+    #[test]
+    fn full_batch_preempts_deadline() {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 2, max_wait: Duration::from_secs(3600) });
+        let t = Instant::now();
+        b.push(req(0, t));
+        assert!(b.pop_batch(&[2], t).is_none());
+        b.push(req(1, t));
+        assert!(b.pop_batch(&[2], t).is_some());
+    }
+
+    /// pop_batch_now ignores both triggers (the shutdown drain path).
+    #[test]
+    fn force_pop_ignores_policy() {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 8, max_wait: Duration::from_secs(3600) });
+        let t = Instant::now();
+        for i in 0..3 {
+            b.push(req(i, t));
+        }
+        assert!(b.pop_batch(&[1, 4], t).is_none(), "window open, policy holds");
+        let batch = b.pop_batch_now(&[1, 4]).unwrap();
+        assert_eq!(batch.requests.len(), 3);
+        assert_eq!(batch.compiled_batch, 4);
+        assert!(b.pop_batch_now(&[1, 4]).is_none());
     }
 }

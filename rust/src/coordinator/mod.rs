@@ -1,13 +1,18 @@
-//! The L3 serving coordinator: request router + dynamic batcher + worker
-//! server executing AOT artifacts via PJRT, with live variant switching
+//! The L3 serving coordinator: a replicated [`pool::ServingPool`] of
+//! worker threads (each with its own PJRT executor + dynamic
+//! [`batcher::Batcher`]), a request router with pluggable
+//! [`policy::DispatchPolicy`], bounded per-worker queues with typed
+//! admission-control rejections, and atomic broadcast variant switching
 //! actuated by the adaptation loop (Sec. III-D3's middleware role).
 
 pub mod batcher;
 pub mod cascade;
 pub mod policy;
+pub mod pool;
 pub mod server;
 
 pub use batcher::{Batch, Batcher, BatcherConfig, Request};
 pub use cascade::{run_cascade, CascadeStats, Stage};
-pub use policy::{rank_variants, select_variant, ScoredVariant};
-pub use server::{spawn, Executor, Response, ServerHandle, ServingStats};
+pub use policy::{rank_variants, select_variant, DispatchPolicy, ScoredVariant};
+pub use pool::{PoolConfig, PoolStats, ServingPool};
+pub use server::{Executor, Rejected, Response, ServingStats};

@@ -1,8 +1,9 @@
-//! Serving-side variant policy: maps the adaptation loop's logic onto the
-//! concrete AOT artifact variants. Each artifact variant carries a
-//! *measured* test accuracy (from build-time eval) and a Rust IR config
+//! Serving-side policies: (1) the *variant* policy mapping the adaptation
+//! loop's logic onto concrete AOT artifact variants — each variant carries
+//! a *measured* test accuracy (from build-time eval) and a Rust IR config
 //! for Eq. 1/2 costing; the policy re-scores them per snapshot exactly
-//! like the optimizer scores Pareto candidates.
+//! like the optimizer scores Pareto candidates — and (2) the *dispatch*
+//! policy routing admitted requests across the serving pool's workers.
 
 use crate::device::ResourceSnapshot;
 use crate::engine::{allocate, fuse, FusionConfig};
@@ -11,6 +12,41 @@ use crate::models::{backbone, backbone_until_exit};
 use crate::optimizer::mu_from_context;
 use crate::profiler::{estimate_energy, estimate_latency};
 use crate::runtime::VariantEntry;
+
+/// How the serving pool routes an admitted request to a worker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DispatchPolicy {
+    /// Rotate through workers; skip full queues (one full scan before
+    /// rejecting).
+    RoundRobin,
+    /// Send to the worker with the shallowest queue — adapts to skewed
+    /// per-batch latencies (e.g. one worker stuck compiling a variant).
+    #[default]
+    LeastQueueDepth,
+}
+
+impl DispatchPolicy {
+    /// Pick a worker with spare capacity. `depths[i]` is worker `i`'s
+    /// current queue depth, `capacity` the per-worker bound, and `cursor`
+    /// an ever-increasing round-robin counter supplied by the pool.
+    /// Returns `None` when every queue is at capacity (the caller turns
+    /// this into a typed `Rejected`).
+    pub fn pick(self, depths: &[usize], capacity: usize, cursor: usize) -> Option<usize> {
+        let n = depths.len();
+        if n == 0 {
+            return None;
+        }
+        match self {
+            DispatchPolicy::RoundRobin => (0..n).map(|k| (cursor + k) % n).find(|&i| depths[i] < capacity),
+            DispatchPolicy::LeastQueueDepth => {
+                // `min_by_key` keeps the first minimum: ties break to the
+                // lowest worker index, deterministically.
+                let (i, &d) = depths.iter().enumerate().min_by_key(|&(_, &d)| d)?;
+                (d < capacity).then_some(i)
+            }
+        }
+    }
+}
 
 /// A scored serving variant.
 #[derive(Debug, Clone)]
@@ -127,6 +163,28 @@ mod tests {
         // Budget below the big variant's memory excludes it.
         let pick = select_variant(&variants(), &snap, big.memory_bytes * 0.9).unwrap();
         assert_ne!(pick, "big");
+    }
+
+    #[test]
+    fn round_robin_rotates_and_skips_full() {
+        let p = DispatchPolicy::RoundRobin;
+        assert_eq!(p.pick(&[0, 0, 0], 4, 0), Some(0));
+        assert_eq!(p.pick(&[0, 0, 0], 4, 1), Some(1));
+        assert_eq!(p.pick(&[0, 0, 0], 4, 5), Some(2));
+        // Full queues are skipped in rotation order.
+        assert_eq!(p.pick(&[4, 1, 4], 4, 0), Some(1));
+        assert_eq!(p.pick(&[4, 4, 4], 4, 7), None);
+        assert_eq!(p.pick(&[], 4, 0), None);
+    }
+
+    #[test]
+    fn least_depth_picks_shallowest() {
+        let p = DispatchPolicy::LeastQueueDepth;
+        assert_eq!(p.pick(&[3, 1, 2], 4, 9), Some(1));
+        // Ties break to the lowest index regardless of the cursor.
+        assert_eq!(p.pick(&[2, 2, 2], 4, 1), Some(0));
+        // Even the shallowest queue full ⇒ reject.
+        assert_eq!(p.pick(&[4, 4, 4], 4, 0), None);
     }
 
     #[test]

@@ -1,0 +1,451 @@
+//! The replicated serving pool: `N` worker threads, each owning its own
+//! executor and dynamic batcher, behind a router with pluggable dispatch
+//! (round-robin / least-queue-depth), bounded per-worker queues with
+//! typed admission-control rejections, and atomic broadcast variant
+//! switching.
+//!
+//! Architecture (the L3 actuation layer at pool scale):
+//!
+//! ```text
+//!                 ┌────────────── ServingPool ──────────────┐
+//!   submit() ──▶  │ router (DispatchPolicy) + admission     │
+//!                 │   │ bounded queue per worker            │
+//!                 │   ▼                                     │
+//!                 │ worker 0   worker 1  …  worker N-1      │
+//!                 │ [batcher]  [batcher]    [batcher]       │
+//!                 │ [executor] [executor]   [executor]      │
+//!                 └────┬────────────────────────────────────┘
+//!   AdaptLoop ─ switch_variant ─ broadcast + generation + ack
+//! ```
+//!
+//! Variant switching is *atomic at the admission boundary*: the pool
+//! bumps a generation counter, broadcasts the switch to every worker, and
+//! blocks until each worker acknowledges. Channels are FIFO per worker,
+//! so every request admitted after [`ServingPool::switch_variant`]
+//! returns is served by the new variant — no worker serves a stale
+//! variant past the acknowledged switch.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::batcher::{BatcherConfig, Request};
+use super::policy::DispatchPolicy;
+use super::server::{spawn_worker, Executor, Msg, Rejected, Response, ServingStats, Worker};
+
+/// Pool sizing + routing knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct PoolConfig {
+    /// Number of replicated workers (each constructs its own executor).
+    pub workers: usize,
+    /// Bounded queue depth per worker: admitted-but-unanswered requests.
+    /// Submissions beyond this are rejected, not buffered.
+    pub queue_capacity: usize,
+    /// Batch formation policy, applied per worker.
+    pub batcher: BatcherConfig,
+    /// Request routing policy.
+    pub dispatch: DispatchPolicy,
+    /// How long `switch_variant` waits for each worker's acknowledgement
+    /// before giving up on it (a wedged worker must not hang actuation).
+    pub switch_ack_timeout: Duration,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig {
+            workers: 4,
+            queue_capacity: 256,
+            batcher: BatcherConfig::default(),
+            dispatch: DispatchPolicy::LeastQueueDepth,
+            switch_ack_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+/// Aggregated pool statistics: per-worker [`ServingStats`] plus merged
+/// views (pool percentiles, totals, per-worker batch occupancy).
+#[derive(Debug, Clone, Default)]
+pub struct PoolStats {
+    pub per_worker: Vec<ServingStats>,
+}
+
+impl PoolStats {
+    pub fn served(&self) -> usize {
+        self.per_worker.iter().map(|s| s.served).sum()
+    }
+
+    pub fn batches(&self) -> usize {
+        self.per_worker.iter().map(|s| s.batches).sum()
+    }
+
+    pub fn rejected(&self) -> usize {
+        self.per_worker.iter().map(|s| s.rejected).sum()
+    }
+
+    pub fn failed(&self) -> usize {
+        self.per_worker.iter().map(|s| s.failed).sum()
+    }
+
+    /// Variant switches applied. Broadcasts reach every worker, so this
+    /// is the max (not the sum) across workers.
+    pub fn switches(&self) -> usize {
+        self.per_worker.iter().map(|s| s.switches).max().unwrap_or(0)
+    }
+
+    /// All per-worker stats folded into one (latencies concatenated) —
+    /// the input for pool-level percentiles.
+    pub fn merged(&self) -> ServingStats {
+        let mut out = ServingStats::default();
+        for s in &self.per_worker {
+            out.merge(s);
+        }
+        out
+    }
+
+    /// Pool-wide latency percentile over every served request.
+    pub fn percentile(&self, p: f64) -> f64 {
+        self.merged().percentile(p)
+    }
+
+    /// Pool-wide mean batch occupancy.
+    pub fn mean_batch_size(&self) -> f64 {
+        self.merged().mean_batch_size()
+    }
+
+    /// Per-worker mean batch occupancy — reveals routing skew.
+    pub fn occupancy(&self) -> Vec<f64> {
+        self.per_worker.iter().map(|s| s.mean_batch_size()).collect()
+    }
+}
+
+/// The replicated serving pool. `submit` and `switch_variant` take
+/// `&self`, so the pool can be shared across client threads in an `Arc`.
+pub struct ServingPool {
+    workers: Vec<Worker>,
+    capacity: usize,
+    dispatch: DispatchPolicy,
+    switch_ack_timeout: Duration,
+    /// Round-robin cursor (also seeds full-scan fallback ordering).
+    rr: AtomicUsize,
+    next_id: AtomicU64,
+    /// Pool-wide variant generation; bumped per switch broadcast.
+    generation: AtomicU64,
+}
+
+impl ServingPool {
+    /// Spawn `cfg.workers` serving workers. `make_exec(i)` runs *on worker
+    /// `i`'s thread* (PJRT clients are thread-affine and not `Send`); the
+    /// index lets factories shard models or devices across workers.
+    pub fn spawn<F>(make_exec: F, initial_variant: &str, cfg: PoolConfig) -> ServingPool
+    where
+        F: Fn(usize) -> Box<dyn Executor> + Send + Sync + 'static,
+    {
+        assert!(cfg.workers >= 1, "pool needs at least one worker");
+        assert!(cfg.queue_capacity >= 1, "queue capacity must be positive");
+        let make = Arc::new(make_exec);
+        let workers = (0..cfg.workers)
+            .map(|i| {
+                let make = Arc::clone(&make);
+                spawn_worker(i, move || make(i), initial_variant.to_string(), cfg.batcher)
+            })
+            .collect();
+        ServingPool {
+            workers,
+            capacity: cfg.queue_capacity,
+            dispatch: cfg.dispatch,
+            switch_ack_timeout: cfg.switch_ack_timeout,
+            rr: AtomicUsize::new(0),
+            next_id: AtomicU64::new(0),
+            generation: AtomicU64::new(0),
+        }
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Current admitted-but-unanswered depth of each worker queue.
+    pub fn queue_depths(&self) -> Vec<usize> {
+        self.workers.iter().map(|w| w.depth.load(Ordering::Acquire)).collect()
+    }
+
+    /// Current pool-wide variant generation.
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::SeqCst)
+    }
+
+    /// Submit a request. Routes by the dispatch policy; rejects with a
+    /// typed [`Rejected`] only when *no* worker has spare capacity — a
+    /// submitter that races another onto the same snapshot re-dispatches
+    /// (the just-filled queue shows as full on the fresh read), and a
+    /// dead worker (closed channel) is excluded from further picks
+    /// instead of blackholing the pool.
+    pub fn submit(&self, input: Vec<f32>) -> Result<Receiver<Response>, Rejected> {
+        let cursor = self.rr.fetch_add(1, Ordering::Relaxed);
+        let mut excluded = vec![false; self.workers.len()];
+        let mut last_full = (0usize, 0usize); // (worker, observed depth)
+        // Bounded retries: each failed attempt either excludes a dead
+        // worker for the rest of this call or means the picked queue
+        // filled under us; at most every worker can do that once before
+        // a fresh pick returns None.
+        for attempt in 0..=self.workers.len() {
+            let mut depths = self.queue_depths();
+            for (d, &x) in depths.iter_mut().zip(excluded.iter()) {
+                if x {
+                    *d = self.capacity; // present as full so pick skips it
+                }
+            }
+            let Some(wi) = self.dispatch.pick(&depths, self.capacity, cursor + attempt) else {
+                let wi = cursor % self.workers.len();
+                self.workers[wi].rejected.fetch_add(1, Ordering::Relaxed);
+                let depth = depths.iter().copied().min().unwrap_or(0);
+                return Err(Rejected { worker: None, queue_depth: depth, capacity: self.capacity });
+            };
+            let worker = &self.workers[wi];
+            // The depth gauge is the admission token: increment first, and
+            // if a concurrent submitter already filled the queue, roll
+            // back and re-dispatch — admitted requests never exceed the
+            // capacity bound.
+            let prev = worker.depth.fetch_add(1, Ordering::AcqRel);
+            if prev >= self.capacity {
+                worker.depth.fetch_sub(1, Ordering::AcqRel);
+                last_full = (wi, prev);
+                continue;
+            }
+            let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+            let (tx, rx) = channel();
+            let req = Request { id, input, enqueued: Instant::now() };
+            if worker.tx.send(Msg::Infer(req, tx)).is_err() {
+                // Worker thread is gone (panicked executor factory, say):
+                // exclude it and try the remaining workers.
+                worker.depth.fetch_sub(1, Ordering::AcqRel);
+                excluded[wi] = true;
+                continue;
+            }
+            return Ok(rx);
+        }
+        let (wi, depth) = last_full;
+        self.workers[wi].rejected.fetch_add(1, Ordering::Relaxed);
+        Err(Rejected { worker: Some(wi), queue_depth: depth, capacity: self.capacity })
+    }
+
+    /// Atomically actuate a variant switch across the pool: bump the
+    /// generation, broadcast to every worker, and block until each one
+    /// acknowledges. Returns the new generation; every request admitted
+    /// after this returns is served by `variant` — unless a worker
+    /// failed to ack within the timeout, which [`switch_variant_acked`]
+    /// exposes and this convenience wrapper reports on stderr.
+    ///
+    /// [`switch_variant_acked`]: ServingPool::switch_variant_acked
+    pub fn switch_variant(&self, variant: &str) -> u64 {
+        let (generation, acked) = self.switch_variant_acked(variant);
+        if acked < self.workers.len() {
+            eprintln!(
+                "switch to '{variant}' (generation {generation}): only {acked}/{} workers acked within {:?} — unacked workers may still serve the previous variant",
+                self.workers.len(),
+                self.switch_ack_timeout,
+            );
+        }
+        generation
+    }
+
+    /// Like [`ServingPool::switch_variant`], but returns how many workers
+    /// acknowledged alongside the new generation. `acked == num_workers()`
+    /// is the atomicity guarantee; anything less means a worker was
+    /// wedged past the ack timeout (it will still apply the switch when
+    /// it next drains its channel, but requests admitted meanwhile may
+    /// be served by the stale variant).
+    pub fn switch_variant_acked(&self, variant: &str) -> (u64, usize) {
+        let generation = self.generation.fetch_add(1, Ordering::SeqCst) + 1;
+        let (ack_tx, ack_rx) = channel();
+        let mut pending = 0usize;
+        for w in &self.workers {
+            let msg = Msg::Switch { variant: variant.to_string(), generation, ack: ack_tx.clone() };
+            if w.tx.send(msg).is_ok() {
+                pending += 1;
+            }
+        }
+        drop(ack_tx);
+        let deadline = Instant::now() + self.switch_ack_timeout;
+        let mut acked = 0usize;
+        for _ in 0..pending {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if ack_rx.recv_timeout(left).is_err() {
+                break;
+            }
+            acked += 1;
+        }
+        (generation, acked)
+    }
+
+    /// Stop every worker, draining in-flight requests, and aggregate
+    /// their statistics (admission rejections folded in per worker).
+    pub fn shutdown(self) -> PoolStats {
+        for w in &self.workers {
+            let _ = w.tx.send(Msg::Shutdown);
+        }
+        let per_worker = self
+            .workers
+            .into_iter()
+            .map(|w| {
+                let rejected = w.rejected.load(Ordering::Relaxed);
+                let mut stats = w.join.join().unwrap_or_default();
+                stats.rejected = rejected;
+                stats
+            })
+            .collect();
+        PoolStats { per_worker }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::server::testing::MockExec;
+
+    fn quad(delay_us: u64, capacity: usize) -> ServingPool {
+        ServingPool::spawn(
+            move |_| {
+                Box::new(MockExec {
+                    delay: Duration::from_micros(delay_us),
+                    ..MockExec::quick()
+                }) as Box<dyn Executor>
+            },
+            "v",
+            PoolConfig {
+                workers: 4,
+                queue_capacity: capacity,
+                batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+                ..PoolConfig::default()
+            },
+        )
+    }
+
+    #[test]
+    fn spreads_load_across_workers() {
+        let pool = quad(500, 1024);
+        let mut rxs = Vec::new();
+        for i in 0..64 {
+            let mut input = vec![0.0f32; 16];
+            input[i % 4] = 3.0;
+            rxs.push((i % 4, pool.submit(input).unwrap()));
+        }
+        let mut seen_workers = std::collections::HashSet::new();
+        for (want, rx) in rxs {
+            let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(r.pred, want);
+            seen_workers.insert(r.worker);
+        }
+        assert!(seen_workers.len() >= 2, "expected work on ≥2 workers, got {seen_workers:?}");
+        let stats = pool.shutdown();
+        assert_eq!(stats.served(), 64);
+        assert_eq!(stats.rejected(), 0);
+        assert_eq!(stats.per_worker.len(), 4);
+    }
+
+    #[test]
+    fn broadcast_switch_reaches_every_worker() {
+        let pool = quad(200, 1024);
+        let gen = pool.switch_variant("w");
+        assert_eq!(gen, 1);
+        assert_eq!(pool.generation(), 1);
+        // Every worker acked, so every subsequent response is post-switch.
+        let mut rxs = Vec::new();
+        for _ in 0..32 {
+            rxs.push(pool.submit(vec![1.0; 16]).unwrap());
+        }
+        for rx in rxs {
+            let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(r.variant, "w");
+            assert_eq!(r.generation, 1);
+        }
+        let stats = pool.shutdown();
+        assert_eq!(stats.switches(), 1);
+    }
+
+    #[test]
+    fn rejects_when_every_queue_is_full() {
+        // Slow workers + tiny queues: a flood must produce typed rejects
+        // and exact accounting.
+        let pool = quad(5_000, 2);
+        let mut oks = Vec::new();
+        let mut rejected = 0usize;
+        for _ in 0..64 {
+            match pool.submit(vec![1.0; 16]) {
+                Ok(rx) => oks.push(rx),
+                Err(r) => {
+                    assert_eq!(r.capacity, 2);
+                    rejected += 1;
+                }
+            }
+        }
+        assert!(rejected > 0, "flood must trip admission control");
+        for rx in &oks {
+            rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        }
+        let stats = pool.shutdown();
+        assert_eq!(stats.served(), oks.len());
+        assert_eq!(stats.rejected(), rejected);
+        assert_eq!(stats.served() + stats.rejected(), 64);
+    }
+
+    #[test]
+    fn shutdown_drains_in_flight() {
+        // Long batch window: requests sit in batchers until the drain
+        // force-flushes them.
+        let pool = ServingPool::spawn(
+            |_| Box::new(MockExec::quick()) as Box<dyn Executor>,
+            "v",
+            PoolConfig {
+                workers: 2,
+                queue_capacity: 64,
+                batcher: BatcherConfig { max_batch: 32, max_wait: Duration::from_secs(60) },
+                ..PoolConfig::default()
+            },
+        );
+        let rxs: Vec<_> = (0..16).map(|_| pool.submit(vec![1.0; 16]).unwrap()).collect();
+        let stats = pool.shutdown();
+        assert_eq!(stats.served(), 16);
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        }
+    }
+
+    #[test]
+    fn one_worker_pool_degenerates_to_old_architecture() {
+        let pool = ServingPool::spawn(
+            |_| Box::new(MockExec::quick()) as Box<dyn Executor>,
+            "v",
+            PoolConfig {
+                workers: 1,
+                queue_capacity: 64,
+                batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) },
+                ..PoolConfig::default()
+            },
+        );
+        assert_eq!(pool.num_workers(), 1);
+        let rx = pool.submit(vec![1.0; 16]).unwrap();
+        rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(pool.shutdown().served(), 1);
+    }
+
+    #[test]
+    fn pool_stats_aggregate() {
+        let stats = PoolStats {
+            per_worker: vec![
+                ServingStats { served: 6, batches: 3, latencies_s: vec![0.1, 0.2], switches: 2, rejected: 1, failed: 0 },
+                ServingStats { served: 4, batches: 1, latencies_s: vec![0.4], switches: 2, rejected: 3, failed: 1 },
+            ],
+        };
+        assert_eq!(stats.served(), 10);
+        assert_eq!(stats.batches(), 4);
+        assert_eq!(stats.rejected(), 4);
+        assert_eq!(stats.failed(), 1);
+        assert_eq!(stats.switches(), 2);
+        assert!((stats.percentile(1.0) - 0.4).abs() < 1e-9);
+        let occ = stats.occupancy();
+        assert!((occ[0] - 2.0).abs() < 1e-9);
+        assert!((occ[1] - 4.0).abs() < 1e-9);
+    }
+}

@@ -1,20 +1,34 @@
-//! The serving server: a worker thread owns the executor (PJRT runtime),
-//! pulls requests from a channel through the dynamic batcher, runs the
-//! currently-selected variant, and answers each request with its
-//! prediction + confidence. A control channel switches variants live —
-//! the actuation point of the adaptation loop.
+//! The serving worker: each worker thread owns its *own* executor (PJRT
+//! clients are thread-affine) and its own dynamic batcher, pulls requests
+//! from a bounded per-worker channel, runs the currently-selected variant,
+//! and answers each request with its prediction + confidence.
+//!
+//! Workers are the replication unit of the [`super::pool::ServingPool`]:
+//! the pool routes requests across workers, enforces admission control
+//! against each worker's queue depth, and broadcasts generation-tagged
+//! variant switches that every worker acknowledges — the actuation point
+//! of the adaptation loop.
+//!
+//! Response delivery is O(1) per request (a `HashMap` from request id to
+//! the caller's channel), and the loop never spin-sleeps: when a partial
+//! batch is waiting for its window to fill, the worker blocks in
+//! `recv_timeout` until exactly the batch-window deadline.
 
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use super::batcher::{Batcher, BatcherConfig, Request};
+use super::batcher::{Batch, Batcher, BatcherConfig, Request};
 
-/// Abstraction over the PJRT runtime so the server is testable without
-/// built artifacts. Not `Send`: PJRT handles are thread-affine, so the
-/// executor is *constructed inside* the worker thread (see [`spawn`]).
+/// Abstraction over the PJRT runtime so the serving layer is testable
+/// without built artifacts. Not `Send`: PJRT handles are thread-affine,
+/// so each executor is *constructed inside* its worker thread (see
+/// [`spawn_worker`]).
 pub trait Executor {
     /// Compiled batch sizes available for the current variant.
     fn batch_sizes(&self, variant: &str) -> Vec<usize>;
@@ -51,30 +65,65 @@ pub struct Response {
     pub pred: usize,
     pub confidence: f32,
     pub variant: String,
+    /// Pool-wide variant generation the response was served under. After
+    /// a fully-acknowledged [`super::pool::ServingPool::switch_variant`]
+    /// returning generation `g`, every subsequently admitted request is
+    /// answered with `generation >= g` and the new variant (see
+    /// `switch_variant_acked` for the partial-ack escape hatch).
+    pub generation: u64,
+    /// Index of the worker that served the request.
+    pub worker: usize,
     /// Queue + execution time for this request.
     pub latency: Duration,
 }
 
-enum Msg {
+/// Typed admission-control verdict: the request was *not* enqueued
+/// because the target queue (or every queue, for pool-wide dispatch) is
+/// at capacity. Callers may retry, shed load, or escalate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Rejected {
+    /// The worker that was full, or `None` when every worker was full.
+    pub worker: Option<usize>,
+    /// Observed queue depth at rejection time.
+    pub queue_depth: usize,
+    /// The per-worker queue capacity that was exceeded.
+    pub capacity: usize,
+}
+
+impl std::fmt::Display for Rejected {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.worker {
+            Some(w) => write!(f, "worker {} queue full ({}/{})", w, self.queue_depth, self.capacity),
+            None => write!(f, "all worker queues full (capacity {})", self.capacity),
+        }
+    }
+}
+
+impl std::error::Error for Rejected {}
+
+/// Messages into a worker. Infer requests are admission-controlled by the
+/// pool before being sent; control messages always pass.
+pub(crate) enum Msg {
     Infer(Request, Sender<Response>),
-    SwitchVariant(String),
+    /// Generation-tagged variant switch; the worker applies it (ignoring
+    /// out-of-order stale generations) and acks with its current
+    /// generation so the pool can block until the broadcast is complete.
+    Switch { variant: String, generation: u64, ack: Sender<u64> },
     Shutdown,
 }
 
-/// Handle used by clients + the adaptation loop.
-pub struct ServerHandle {
-    tx: Sender<Msg>,
-    worker: Option<JoinHandle<ServingStats>>,
-    next_id: u64,
-}
-
-/// Aggregate serving statistics from the worker.
+/// Per-worker serving statistics (the pool aggregates these).
 #[derive(Debug, Clone, Default)]
 pub struct ServingStats {
     pub served: usize,
     pub batches: usize,
     pub latencies_s: Vec<f64>,
+    /// Variant switches applied by this worker.
     pub switches: usize,
+    /// Requests rejected at admission for this worker's queue.
+    pub rejected: usize,
+    /// Requests dropped because batch execution failed.
+    pub failed: usize,
 }
 
 impl ServingStats {
@@ -95,140 +144,244 @@ impl ServingStats {
             self.served as f64 / self.batches as f64
         }
     }
+
+    /// Fold another worker's stats into this one (pool aggregation).
+    pub fn merge(&mut self, other: &ServingStats) {
+        self.served += other.served;
+        self.batches += other.batches;
+        self.latencies_s.extend_from_slice(&other.latencies_s);
+        self.switches = self.switches.max(other.switches);
+        self.rejected += other.rejected;
+        self.failed += other.failed;
+    }
 }
 
-/// Spawn the serving worker. `make_exec` runs *on the worker thread*
+/// Pool-side handle to one worker thread.
+pub(crate) struct Worker {
+    pub tx: Sender<Msg>,
+    /// Requests admitted but not yet answered (the bounded-queue gauge);
+    /// shared with the worker thread, which decrements as it answers.
+    pub depth: Arc<AtomicUsize>,
+    /// Requests rejected at admission for this worker — only the pool
+    /// side touches it, so no Arc.
+    pub rejected: AtomicUsize,
+    pub join: JoinHandle<ServingStats>,
+}
+
+/// Spawn one serving worker. `make_exec` runs *on the worker thread*
 /// (PJRT clients are thread-affine and not `Send`).
-pub fn spawn<F>(make_exec: F, initial_variant: String, cfg: BatcherConfig) -> ServerHandle
+pub(crate) fn spawn_worker<F>(
+    index: usize,
+    make_exec: F,
+    initial_variant: String,
+    cfg: BatcherConfig,
+) -> Worker
 where
     F: FnOnce() -> Box<dyn Executor> + Send + 'static,
 {
     let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
-    let worker = std::thread::spawn(move || {
-        let mut exec = make_exec();
-        let mut batcher = Batcher::new(cfg);
-        let mut variant = initial_variant;
-        let mut stats = ServingStats::default();
-        let mut waiting: Vec<(u64, Sender<Response>)> = Vec::new();
-        let elems = exec.input_elems();
-        let classes = exec.num_classes();
-        'outer: loop {
-            // Drain the channel without blocking longer than the batch wait.
-            let msg = if batcher.is_empty() {
-                match rx.recv() {
-                    Ok(m) => Some(m),
-                    Err(_) => break 'outer,
-                }
-            } else {
-                match rx.try_recv() {
-                    Ok(m) => Some(m),
-                    Err(TryRecvError::Empty) => None,
-                    Err(TryRecvError::Disconnected) => break 'outer,
-                }
-            };
-            match msg {
-                Some(Msg::Infer(req, resp_tx)) => {
-                    waiting.push((req.id, resp_tx));
-                    batcher.push(req);
-                }
-                Some(Msg::SwitchVariant(v)) => {
-                    if v != variant {
-                        variant = v;
-                        stats.switches += 1;
-                    }
-                }
-                Some(Msg::Shutdown) => break 'outer,
-                None => {}
-            }
-            let sizes = exec.batch_sizes(&variant);
-            if sizes.is_empty() {
-                continue;
-            }
-            if let Some(batch) = batcher.pop_batch(&sizes, Instant::now()) {
-                let input = batch.padded_input(elems);
-                match exec.run(&variant, batch.compiled_batch, &input) {
-                    Ok(probs) => {
-                        let now = Instant::now();
-                        stats.batches += 1;
-                        for (i, req) in batch.requests.iter().enumerate() {
-                            let row = &probs[i * classes..(i + 1) * classes];
-                            let (pred, conf) = row
-                                .iter()
-                                .enumerate()
-                                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                                .map(|(k, &v)| (k, v))
-                                .unwrap_or((0, 0.0));
-                            let latency = now.duration_since(req.enqueued);
-                            stats.served += 1;
-                            stats.latencies_s.push(latency.as_secs_f64());
-                            if let Some(pos) = waiting.iter().position(|(id, _)| *id == req.id) {
-                                let (_, tx) = waiting.swap_remove(pos);
-                                let _ = tx.send(Response {
-                                    id: req.id,
-                                    pred,
-                                    confidence: conf,
-                                    variant: variant.clone(),
-                                    latency,
-                                });
-                            }
-                        }
-                    }
-                    Err(e) => {
-                        eprintln!("batch execution failed: {e:#}");
-                        for req in &batch.requests {
-                            if let Some(pos) = waiting.iter().position(|(id, _)| *id == req.id) {
-                                waiting.swap_remove(pos);
-                            }
-                        }
-                    }
-                }
-            } else if !batcher.is_empty() {
-                // Waiting for the batch window to fill.
-                std::thread::sleep(Duration::from_micros(200));
-            }
-        }
-        stats
-    });
-    ServerHandle { tx, worker: Some(worker), next_id: 0 }
+    let depth = Arc::new(AtomicUsize::new(0));
+    let depth_w = Arc::clone(&depth);
+    let join = std::thread::spawn(move || worker_main(index, make_exec(), rx, initial_variant, cfg, depth_w));
+    Worker { tx, depth, rejected: AtomicUsize::new(0), join }
 }
 
-impl ServerHandle {
-    /// Submit a request; returns a receiver for the response.
-    pub fn submit(&mut self, input: Vec<f32>) -> Receiver<Response> {
-        let (tx, rx) = channel();
-        self.next_id += 1;
-        let req = Request { id: self.next_id, input, enqueued: Instant::now() };
-        let _ = self.tx.send(Msg::Infer(req, tx));
-        rx
+/// Mutable worker-loop state threaded through message absorption.
+struct WorkerState {
+    batcher: Batcher,
+    waiting: HashMap<u64, Sender<Response>>,
+    variant: String,
+    generation: u64,
+    stats: ServingStats,
+    draining: bool,
+}
+
+impl WorkerState {
+    fn absorb(&mut self, msg: Msg) {
+        match msg {
+            Msg::Infer(req, resp_tx) => {
+                self.waiting.insert(req.id, resp_tx);
+                self.batcher.push(req);
+            }
+            Msg::Switch { variant, generation, ack } => {
+                if generation > self.generation {
+                    self.generation = generation;
+                    if variant != self.variant {
+                        self.variant = variant;
+                        self.stats.switches += 1;
+                    }
+                }
+                let _ = ack.send(self.generation);
+            }
+            Msg::Shutdown => self.draining = true,
+        }
+    }
+}
+
+fn worker_main(
+    index: usize,
+    mut exec: Box<dyn Executor>,
+    rx: Receiver<Msg>,
+    initial_variant: String,
+    cfg: BatcherConfig,
+    depth: Arc<AtomicUsize>,
+) -> ServingStats {
+    let elems = exec.input_elems();
+    let classes = exec.num_classes();
+    let mut st = WorkerState {
+        batcher: Batcher::new(cfg),
+        waiting: HashMap::new(),
+        variant: initial_variant,
+        generation: 0,
+        stats: ServingStats::default(),
+        draining: false,
+    };
+
+    while !st.draining {
+        // Block for the next message — when a partial batch is pending,
+        // only until its window deadline (no busy-wait).
+        let msg = if st.batcher.is_empty() {
+            match rx.recv() {
+                Ok(m) => Some(m),
+                Err(_) => break, // all senders gone: drain and exit
+            }
+        } else {
+            let now = Instant::now();
+            match st.batcher.deadline() {
+                Some(d) if d > now => match rx.recv_timeout(d - now) {
+                    Ok(m) => Some(m),
+                    Err(RecvTimeoutError::Timeout) => None,
+                    Err(RecvTimeoutError::Disconnected) => break,
+                },
+                // Deadline already passed: flush without blocking.
+                _ => None,
+            }
+        };
+        if let Some(m) = msg {
+            st.absorb(m);
+        }
+        // Opportunistically drain the channel so a burst forms one batch
+        // instead of max_batch singleton iterations.
+        while !st.draining && st.batcher.len() < st.batcher.cfg.max_batch {
+            match rx.try_recv() {
+                Ok(m) => st.absorb(m),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => break,
+            }
+        }
+        let sizes = exec.batch_sizes(&st.variant);
+        if sizes.is_empty() {
+            if !st.batcher.is_empty() {
+                // No compiled artifact can run the queued requests until a
+                // variant switch arrives — block for the next control
+                // message rather than spinning on an expired batch window.
+                match rx.recv() {
+                    Ok(m) => st.absorb(m),
+                    Err(_) => break,
+                }
+            }
+            continue;
+        }
+        if let Some(batch) = st.batcher.pop_batch(&sizes, Instant::now()) {
+            run_batch(&mut *exec, batch, index, elems, classes, &depth, &mut st);
+        }
     }
 
-    /// Actuate a variant switch (the adaptation loop calls this).
-    pub fn switch_variant(&self, variant: &str) {
-        let _ = self.tx.send(Msg::SwitchVariant(variant.to_string()));
+    // Graceful drain: absorb whatever is already queued in the channel,
+    // then flush every remaining request regardless of the batch window.
+    while let Ok(m) = rx.try_recv() {
+        st.absorb(m);
     }
+    let sizes = exec.batch_sizes(&st.variant);
+    if sizes.is_empty() {
+        // No compiled artifacts for the current variant: the queued
+        // requests can never run; drop them (callers see a closed channel).
+        while let Some(req) = st.batcher.pop_request() {
+            st.waiting.remove(&req.id);
+            depth.fetch_sub(1, Ordering::AcqRel);
+            st.stats.failed += 1;
+        }
+    } else {
+        while let Some(batch) = st.batcher.pop_batch_now(&sizes) {
+            run_batch(&mut *exec, batch, index, elems, classes, &depth, &mut st);
+        }
+    }
+    st.stats
+}
 
-    /// Stop the worker and collect statistics.
-    pub fn shutdown(mut self) -> ServingStats {
-        let _ = self.tx.send(Msg::Shutdown);
-        self.worker.take().map(|w| w.join().unwrap_or_default()).unwrap_or_default()
+/// Execute one batch and deliver every response (O(1) per request).
+fn run_batch(
+    exec: &mut dyn Executor,
+    batch: Batch,
+    worker: usize,
+    elems: usize,
+    classes: usize,
+    depth: &AtomicUsize,
+    st: &mut WorkerState,
+) {
+    let input = batch.padded_input(elems);
+    match exec.run(&st.variant, batch.compiled_batch, &input) {
+        Ok(probs) => {
+            let now = Instant::now();
+            st.stats.batches += 1;
+            for (i, req) in batch.requests.iter().enumerate() {
+                let row = &probs[i * classes..(i + 1) * classes];
+                let (pred, conf) = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+                    .map(|(k, &v)| (k, v))
+                    .unwrap_or((0, 0.0));
+                let latency = now.duration_since(req.enqueued);
+                st.stats.served += 1;
+                st.stats.latencies_s.push(latency.as_secs_f64());
+                depth.fetch_sub(1, Ordering::AcqRel);
+                if let Some(tx) = st.waiting.remove(&req.id) {
+                    let _ = tx.send(Response {
+                        id: req.id,
+                        pred,
+                        confidence: conf,
+                        variant: st.variant.clone(),
+                        generation: st.generation,
+                        worker,
+                        latency,
+                    });
+                }
+            }
+        }
+        Err(e) => {
+            eprintln!("worker {worker}: batch execution failed: {e:#}");
+            for req in &batch.requests {
+                st.waiting.remove(&req.id);
+                depth.fetch_sub(1, Ordering::AcqRel);
+                st.stats.failed += 1;
+            }
+        }
     }
 }
 
 #[cfg(test)]
-mod tests {
+pub(crate) mod testing {
     use super::*;
 
-    /// Deterministic fake model: class = argmax over first `classes`
-    /// input values.
-    struct MockExec {
-        classes: usize,
-        elems: usize,
-        delay: Duration,
+    /// Deterministic fake model: class = argmax over the first `classes`
+    /// input values, with a configurable per-batch execution delay.
+    pub struct MockExec {
+        pub classes: usize,
+        pub elems: usize,
+        pub delay: Duration,
+        pub sizes: Vec<usize>,
+    }
+
+    impl MockExec {
+        pub fn quick() -> MockExec {
+            MockExec { classes: 4, elems: 16, delay: Duration::from_micros(300), sizes: vec![1, 4, 8] }
+        }
     }
 
     impl Executor for MockExec {
         fn batch_sizes(&self, _v: &str) -> Vec<usize> {
-            vec![1, 4, 8]
+            self.sizes.clone()
         }
 
         fn num_classes(&self) -> usize {
@@ -252,63 +405,121 @@ mod tests {
             Ok(out)
         }
     }
+}
 
-    fn mock() -> impl FnOnce() -> Box<dyn Executor> + Send + 'static {
-        || Box::new(MockExec { classes: 4, elems: 16, delay: Duration::from_micros(300) }) as Box<dyn Executor>
+#[cfg(test)]
+mod tests {
+    use super::testing::MockExec;
+    use super::*;
+    use crate::coordinator::pool::{PoolConfig, ServingPool};
+
+    fn single() -> ServingPool {
+        ServingPool::spawn(
+            |_| Box::new(MockExec::quick()) as Box<dyn Executor>,
+            "v",
+            PoolConfig {
+                workers: 1,
+                queue_capacity: 64,
+                batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) },
+                ..PoolConfig::default()
+            },
+        )
     }
 
     #[test]
     fn serves_single_request() {
-        let mut h = spawn(mock(), "v".into(), BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) });
+        let h = single();
         let mut input = vec![0.0f32; 16];
         input[2] = 5.0;
-        let rx = h.submit(input);
+        let rx = h.submit(input).unwrap();
         let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(resp.pred, 2);
         assert!(resp.confidence > 0.5);
+        assert_eq!(resp.worker, 0);
         let stats = h.shutdown();
-        assert_eq!(stats.served, 1);
+        assert_eq!(stats.served(), 1);
     }
 
     #[test]
     fn batches_concurrent_requests() {
-        let mut h = spawn(mock(), "v".into(), BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(20) });
+        let h = ServingPool::spawn(
+            |_| Box::new(MockExec::quick()) as Box<dyn Executor>,
+            "v",
+            PoolConfig {
+                workers: 1,
+                queue_capacity: 64,
+                batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(20) },
+                ..PoolConfig::default()
+            },
+        );
         let mut rxs = Vec::new();
         for i in 0..8 {
             let mut input = vec![0.0f32; 16];
             input[i % 4] = 3.0;
-            rxs.push((i % 4, h.submit(input)));
+            rxs.push((i % 4, h.submit(input).unwrap()));
         }
         for (want, rx) in rxs {
             let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
             assert_eq!(resp.pred, want);
         }
         let stats = h.shutdown();
-        assert_eq!(stats.served, 8);
-        assert!(stats.batches <= 4, "expected batching, got {} batches", stats.batches);
+        assert_eq!(stats.served(), 8);
+        assert!(stats.batches() <= 4, "expected batching, got {} batches", stats.batches());
         assert!(stats.mean_batch_size() >= 2.0);
     }
 
     #[test]
     fn variant_switch_takes_effect() {
-        let mut h = spawn(mock(), "a".into(), BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) });
-        let rx = h.submit(vec![1.0; 16]);
+        let h = ServingPool::spawn(
+            |_| Box::new(MockExec::quick()) as Box<dyn Executor>,
+            "a",
+            PoolConfig {
+                workers: 1,
+                queue_capacity: 64,
+                batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) },
+                ..PoolConfig::default()
+            },
+        );
+        let rx = h.submit(vec![1.0; 16]).unwrap();
         let r1 = rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(r1.variant, "a");
-        h.switch_variant("b");
-        // Give the worker a moment to process the control message.
-        std::thread::sleep(Duration::from_millis(5));
-        let rx = h.submit(vec![1.0; 16]);
+        assert_eq!(r1.generation, 0);
+        // switch_variant blocks until the worker acks: no sleep needed.
+        let gen = h.switch_variant("b");
+        assert_eq!(gen, 1);
+        let rx = h.submit(vec![1.0; 16]).unwrap();
         let r2 = rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(r2.variant, "b");
+        assert_eq!(r2.generation, gen);
         let stats = h.shutdown();
-        assert_eq!(stats.switches, 1);
+        assert_eq!(stats.switches(), 1);
     }
 
     #[test]
     fn stats_percentiles() {
-        let stats = ServingStats { served: 4, batches: 2, latencies_s: vec![0.1, 0.2, 0.3, 0.4], switches: 0 };
+        let stats = ServingStats { served: 4, batches: 2, latencies_s: vec![0.1, 0.2, 0.3, 0.4], ..Default::default() };
         assert!((stats.percentile(0.5) - 0.3).abs() < 1e-9 || (stats.percentile(0.5) - 0.2).abs() < 1e-9);
         assert!((stats.percentile(1.0) - 0.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stats_merge_accumulates() {
+        let mut a = ServingStats { served: 3, batches: 2, latencies_s: vec![0.1, 0.2, 0.3], switches: 1, rejected: 2, failed: 0 };
+        let b = ServingStats { served: 5, batches: 1, latencies_s: vec![0.4], switches: 1, rejected: 0, failed: 1 };
+        a.merge(&b);
+        assert_eq!(a.served, 8);
+        assert_eq!(a.batches, 3);
+        assert_eq!(a.latencies_s.len(), 4);
+        assert_eq!(a.switches, 1, "switches are a broadcast count, not additive");
+        assert_eq!(a.rejected, 2);
+        assert_eq!(a.failed, 1);
+    }
+
+    #[test]
+    fn rejected_displays_both_shapes() {
+        let r = Rejected { worker: Some(2), queue_depth: 8, capacity: 8 };
+        assert!(r.to_string().contains("worker 2"));
+        let r = Rejected { worker: None, queue_depth: 8, capacity: 8 };
+        assert!(r.to_string().contains("all worker queues"));
     }
 }

@@ -19,6 +19,35 @@
 //! ([`baselines`]), cross-framework transform ([`transform`]), and the
 //! PJRT-backed execution runtime ([`runtime`]) serving AOT-compiled JAX
 //! artifacts from the [`coordinator`].
+//!
+//! ## Serving pool architecture
+//!
+//! The [`coordinator`] serves through a replicated pool
+//! ([`coordinator::ServingPool`]) rather than a single worker thread:
+//!
+//! - **N workers**, each owning its *own* executor (PJRT clients are
+//!   thread-affine) and its own dynamic batcher, so batch formation and
+//!   execution scale across cores.
+//! - **Router** with pluggable dispatch ([`coordinator::DispatchPolicy`]):
+//!   round-robin, or least-queue-depth to absorb skewed per-batch
+//!   latencies.
+//! - **Admission control**: bounded per-worker queues; a submission past
+//!   capacity gets a typed [`coordinator::Rejected`] immediately instead
+//!   of growing an unbounded backlog.
+//! - **Atomic variant switching**: the adaptation loop actuates
+//!   [`coordinator::ServingPool::switch_variant`], which bumps a pool-wide
+//!   generation counter, broadcasts to every worker, and blocks for
+//!   acknowledgements — every request admitted after the call returns is
+//!   served by the new variant.
+//! - **Aggregated statistics** ([`coordinator::PoolStats`]): merged
+//!   latency percentiles, per-worker batch occupancy, rejection and
+//!   failure counts, with `served + rejected + failed == submitted`.
+//!
+//! The worker loop delivers responses in O(1) per request and blocks on
+//! `recv_timeout` until the exact batch-window deadline (no spin-waits).
+//! Graceful shutdown drains every in-flight request before workers exit
+//! (requests stranded on a variant with no compiled artifacts cannot be
+//! run and are accounted as `failed`, closing their response channels).
 
 pub mod baselines;
 pub mod compress;

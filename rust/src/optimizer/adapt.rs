@@ -30,6 +30,23 @@ impl Budgets {
     }
 }
 
+/// Serving-side actuation point for the loop's decisions: anything that
+/// can atomically switch the live serving configuration. The serving
+/// pool implements this by broadcasting a generation-tagged switch to
+/// every worker and blocking for acknowledgements, so by the time
+/// `actuate` returns no worker serves a stale variant.
+pub trait Actuator {
+    /// Switch serving to `variant`; returns an implementation-defined
+    /// generation/sequence number for the switch.
+    fn actuate(&self, variant: &str) -> u64;
+}
+
+impl Actuator for crate::coordinator::ServingPool {
+    fn actuate(&self, variant: &str) -> u64 {
+        self.switch_variant(variant)
+    }
+}
+
 /// What the loop decided this tick.
 #[derive(Debug, Clone)]
 pub enum Decision {
@@ -227,6 +244,23 @@ impl AdaptLoop {
         decision
     }
 
+    /// Tick and actuate: like [`AdaptLoop::tick`], but any decision that
+    /// changes the serving configuration (`Switch`, `Offload`,
+    /// `BestEffort`) is pushed to the serving layer before returning —
+    /// the pool acknowledges the broadcast, so requests admitted after
+    /// this call are served by the newly chosen variant. `Hold` does not
+    /// re-actuate.
+    pub fn tick_with(&mut self, snap: &ResourceSnapshot, actuator: &dyn Actuator) -> Decision {
+        let decision = self.tick(snap);
+        match &decision {
+            Decision::Hold => {}
+            Decision::Switch(e) | Decision::Offload(e, _) | Decision::BestEffort(e) => {
+                actuator.actuate(&e.candidate.spec.detailed_label());
+            }
+        }
+        decision
+    }
+
     /// Convenience: run `n` ticks against a dynamics simulator.
     pub fn run(&mut self, sim: &mut crate::device::DynamicsSim, monitor: &ResourceMonitor, n: usize) {
         for _ in 0..n {
@@ -362,6 +396,86 @@ mod tests {
         assert_eq!(l.log.len(), 30);
         // Battery drained by consumed energy.
         assert!(l.log.last().unwrap().battery < 1.0);
+    }
+
+    /// Records every actuation, like the serving pool but inspectable.
+    struct RecordingActuator {
+        switched: std::sync::Mutex<Vec<String>>,
+    }
+
+    impl Actuator for RecordingActuator {
+        fn actuate(&self, variant: &str) -> u64 {
+            let mut v = self.switched.lock().unwrap();
+            v.push(variant.to_string());
+            v.len() as u64
+        }
+    }
+
+    #[test]
+    fn tick_with_actuates_switch_but_not_hold() {
+        let mut l = mk_loop(Budgets::unconstrained());
+        let act = RecordingActuator { switched: std::sync::Mutex::new(Vec::new()) };
+        let snap = ResourceMonitor::new(device("raspberrypi-4b").unwrap()).idle_snapshot();
+        // First tick switches → one actuation carrying the chosen label.
+        match l.tick_with(&snap, &act) {
+            Decision::Switch(e) => {
+                let v = act.switched.lock().unwrap();
+                assert_eq!(v.as_slice(), &[e.candidate.spec.detailed_label()]);
+            }
+            d => panic!("expected Switch, got {d:?}"),
+        }
+        // Stable context holds → no further actuations.
+        for _ in 0..3 {
+            l.tick_with(&snap, &act);
+        }
+        assert_eq!(act.switched.lock().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn tick_with_actuates_pool_of_mock_workers() {
+        use crate::coordinator::{Executor, PoolConfig, ServingPool};
+        use anyhow::Result as ARes;
+
+        /// Executor that accepts any variant id (the pool just needs a
+        /// compiled size to exist for the actuated label).
+        struct AnyVariant;
+        impl Executor for AnyVariant {
+            fn batch_sizes(&self, _v: &str) -> Vec<usize> {
+                vec![1]
+            }
+            fn num_classes(&self) -> usize {
+                2
+            }
+            fn input_elems(&self) -> usize {
+                4
+            }
+            fn run(&mut self, _v: &str, batch: usize, _input: &[f32]) -> ARes<Vec<f32>> {
+                Ok(vec![0.5; batch * 2])
+            }
+        }
+
+        // Initial variant deliberately matches no candidate label, so the
+        // first actuation is always a real switch.
+        let pool = ServingPool::spawn(
+            |_| Box::new(AnyVariant) as Box<dyn Executor>,
+            "cold-start",
+            PoolConfig { workers: 2, ..PoolConfig::default() },
+        );
+        let mut l = mk_loop(Budgets::unconstrained());
+        let snap = ResourceMonitor::new(device("raspberrypi-4b").unwrap()).idle_snapshot();
+        let d = l.tick_with(&snap, &pool);
+        let expect = match &d {
+            Decision::Switch(e) => e.candidate.spec.detailed_label(),
+            d => panic!("expected Switch, got {d:?}"),
+        };
+        // The broadcast was acknowledged: a request admitted now is
+        // served under the actuated variant.
+        let rx = pool.submit(vec![0.0; 4]).unwrap();
+        let resp = rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.variant, expect);
+        assert_eq!(resp.generation, 1);
+        let stats = pool.shutdown();
+        assert_eq!(stats.switches(), 1);
     }
 
     #[test]

@@ -8,7 +8,7 @@ pub mod ahp;
 pub mod candidate;
 pub mod evolution;
 
-pub use adapt::{AdaptLoop, Budgets, Decision, TickLog};
+pub use adapt::{Actuator, AdaptLoop, Budgets, Decision, TickLog};
 pub use ahp::{consistency_ratio, context_matrix, mu_from_context, weights as ahp_weights};
 pub use candidate::{evaluate, evaluate_as, Candidate, Evaluated, Prepared};
 pub use evolution::{dominates, pareto_front, search, SearchConfig};

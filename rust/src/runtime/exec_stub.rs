@@ -1,0 +1,97 @@
+//! Stub runtime for builds without the `pjrt` feature: mirrors the API
+//! of the real PJRT-backed [`ModelRuntime`] so the rest of the stack
+//! (coordinator, examples, experiments) compiles and the manifest layer
+//! stays fully usable; only `prepare`/`execute` refuse, with an error
+//! pointing at the `--features pjrt` build.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use super::manifest::Manifest;
+
+/// The executable pool, sans executables. Same public surface as the
+/// PJRT implementation in `exec.rs`.
+pub struct ModelRuntime {
+    pub manifest: Manifest,
+    /// Wall-clock of each execute call (always empty in the stub).
+    pub exec_log: Vec<f64>,
+}
+
+impl ModelRuntime {
+    /// Create a runtime over an artifacts directory. Loads the manifest
+    /// (metadata, variant table, eval set) — execution is what needs PJRT,
+    /// not the artifact index.
+    pub fn load(dir: PathBuf) -> Result<ModelRuntime> {
+        let manifest = Manifest::load(&dir)?;
+        Ok(ModelRuntime { manifest, exec_log: Vec::new() })
+    }
+
+    /// Compile the executable for a variant at a batch — unavailable here.
+    pub fn prepare(&mut self, variant: &str, batch: usize) -> Result<()> {
+        let _ = (variant, batch);
+        bail!("built without the `pjrt` feature — rebuild with `--features pjrt` to execute artifacts")
+    }
+
+    /// Run one batch — unavailable here.
+    pub fn execute(&mut self, variant: &str, batch: usize, input: &[f32]) -> Result<Vec<f32>> {
+        let _ = input;
+        self.prepare(variant, batch)?;
+        unreachable!("prepare always errors in the stub")
+    }
+
+    /// Argmax class per row of a `[batch, classes]` buffer.
+    pub fn argmax(probs: &[f32], classes: usize) -> Vec<usize> {
+        probs
+            .chunks_exact(classes)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+
+    /// Top softmax confidence per row.
+    pub fn confidence(probs: &[f32], classes: usize) -> Vec<f32> {
+        probs
+            .chunks_exact(classes)
+            .map(|row| row.iter().cloned().fold(f32::MIN, f32::max))
+            .collect()
+    }
+
+    /// Measure real accuracy of a variant on the shipped eval set —
+    /// unavailable here (requires execution).
+    pub fn eval_accuracy(&mut self, variant: &str, batch: usize) -> Result<f64> {
+        self.prepare(variant, batch)?;
+        unreachable!("prepare always errors in the stub")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_and_confidence_helpers() {
+        let probs = [0.1, 0.7, 0.2, 0.5, 0.3, 0.2];
+        assert_eq!(ModelRuntime::argmax(&probs, 3), vec![1, 0]);
+        let c = ModelRuntime::confidence(&probs, 3);
+        assert!((c[0] - 0.7).abs() < 1e-6);
+        assert!((c[1] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn execute_refuses_with_clear_error() {
+        let Some(dir) = Manifest::default_dir() else {
+            return; // no artifacts in this checkout — nothing to load
+        };
+        let Ok(mut rt) = ModelRuntime::load(dir) else {
+            return;
+        };
+        let err = rt.execute("full", 1, &[]).unwrap_err();
+        assert!(err.to_string().contains("pjrt"));
+    }
+}

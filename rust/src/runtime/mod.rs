@@ -1,6 +1,18 @@
 //! Execution runtime: the AOT artifact manifest and the PJRT-backed
 //! executable pool that serves compiled JAX/Pallas models from Rust.
+//!
+//! The PJRT path needs the `xla` bindings crate and the XLA C library;
+//! build with `--features pjrt` to enable it. Without the feature a stub
+//! [`ModelRuntime`] with the identical API takes its place: the manifest
+//! still loads (variant metadata, policy ranking, eval-set IO all work),
+//! but `execute` returns an error directing the user to the `pjrt`
+//! build. The serving layer is exercised through its
+//! [`crate::coordinator::Executor`] abstraction either way.
 
+#[cfg(feature = "pjrt")]
+pub mod exec;
+#[cfg(not(feature = "pjrt"))]
+#[path = "exec_stub.rs"]
 pub mod exec;
 pub mod manifest;
 

@@ -1,0 +1,286 @@
+//! Serving-pool integration suite: concurrent load across workers,
+//! mid-stream variant switching, admission-control backpressure, and
+//! graceful shutdown — all through the public API with a deterministic
+//! mock executor (no built artifacts needed).
+
+use std::collections::HashSet;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use crowdhmtware::coordinator::{
+    BatcherConfig, DispatchPolicy, Executor, PoolConfig, Rejected, ServingPool,
+};
+
+const CLASSES: usize = 4;
+const ELEMS: usize = 16;
+
+/// Deterministic fake model: class = argmax over the first CLASSES input
+/// values; each batch costs a fixed wall-clock delay.
+struct MockExec {
+    delay: Duration,
+}
+
+impl Executor for MockExec {
+    fn batch_sizes(&self, _variant: &str) -> Vec<usize> {
+        vec![1, 4, 8]
+    }
+
+    fn num_classes(&self) -> usize {
+        CLASSES
+    }
+
+    fn input_elems(&self) -> usize {
+        ELEMS
+    }
+
+    fn run(&mut self, _variant: &str, batch: usize, input: &[f32]) -> Result<Vec<f32>> {
+        std::thread::sleep(self.delay);
+        let mut out = vec![0.0f32; batch * CLASSES];
+        for b in 0..batch {
+            let row = &input[b * ELEMS..b * ELEMS + CLASSES];
+            let total: f32 = row.iter().map(|x| x.exp()).sum();
+            for (k, &x) in row.iter().enumerate() {
+                out[b * CLASSES + k] = x.exp() / total;
+            }
+        }
+        Ok(out)
+    }
+}
+
+fn pool(workers: usize, capacity: usize, delay: Duration, batcher: BatcherConfig) -> ServingPool {
+    ServingPool::spawn(
+        move |_worker| Box::new(MockExec { delay }) as Box<dyn Executor>,
+        "base",
+        PoolConfig {
+            workers,
+            queue_capacity: capacity,
+            batcher,
+            dispatch: DispatchPolicy::LeastQueueDepth,
+            ..PoolConfig::default()
+        },
+    )
+}
+
+/// Input whose argmax (and therefore the mock's prediction) is `class`.
+fn input_for(class: usize) -> Vec<f32> {
+    let mut v = vec![0.0f32; ELEMS];
+    v[class % CLASSES] = 4.0;
+    v
+}
+
+/// ≥256 concurrent requests across ≥4 workers: every response arrives,
+/// every prediction is correct, ids are unique, and the pool accounting
+/// satisfies served + rejected == submitted (with zero rejections at
+/// this capacity).
+#[test]
+fn concurrent_load_across_workers() {
+    const THREADS: usize = 8;
+    const PER_THREAD: usize = 32;
+    const TOTAL: usize = THREADS * PER_THREAD; // 256
+
+    let p = Arc::new(pool(
+        4,
+        1024,
+        Duration::from_micros(400),
+        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(2) },
+    ));
+    let mut joins = Vec::new();
+    for t in 0..THREADS {
+        let p = Arc::clone(&p);
+        joins.push(std::thread::spawn(move || {
+            let mut got = Vec::new();
+            let mut rxs = Vec::new();
+            for i in 0..PER_THREAD {
+                let class = (t * PER_THREAD + i) % CLASSES;
+                let rx = p.submit(input_for(class)).expect("capacity is ample");
+                rxs.push((class, rx));
+            }
+            for (want, rx) in rxs {
+                let resp = rx.recv_timeout(Duration::from_secs(10)).expect("no lost responses");
+                assert_eq!(resp.pred, want, "wrong prediction");
+                got.push((resp.id, resp.worker));
+            }
+            got
+        }));
+    }
+    let mut ids = HashSet::new();
+    let mut workers_used = HashSet::new();
+    let mut total = 0usize;
+    for j in joins {
+        for (id, worker) in j.join().expect("client thread") {
+            assert!(ids.insert(id), "duplicate response id {id}");
+            workers_used.insert(worker);
+            total += 1;
+        }
+    }
+    assert_eq!(total, TOTAL);
+    assert!(workers_used.len() >= 2, "load stayed on {workers_used:?}");
+
+    let stats = p_unwrap(p).shutdown();
+    assert_eq!(stats.served(), TOTAL);
+    assert_eq!(stats.rejected(), 0);
+    assert_eq!(stats.failed(), 0);
+    assert_eq!(stats.served() + stats.rejected(), TOTAL);
+    assert_eq!(stats.per_worker.len(), 4);
+}
+
+fn p_unwrap(p: Arc<ServingPool>) -> ServingPool {
+    Arc::try_unwrap(p).unwrap_or_else(|_| panic!("pool still shared"))
+}
+
+/// Variant switch mid-stream: once `switch_variant` has returned (every
+/// worker acked), no subsequently admitted request is answered with the
+/// pre-switch variant, and generations are consistent with variants on
+/// every response including the in-flight ones.
+#[test]
+fn variant_switch_mid_stream() {
+    let p = Arc::new(pool(
+        4,
+        4096,
+        Duration::from_micros(800),
+        BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+    ));
+
+    // Background load running across the switch.
+    let bg = {
+        let p = Arc::clone(&p);
+        std::thread::spawn(move || {
+            let mut rxs = Vec::new();
+            for i in 0..128 {
+                if let Ok(rx) = p.submit(input_for(i)) {
+                    rxs.push(rx);
+                }
+                std::thread::sleep(Duration::from_micros(50));
+            }
+            rxs.into_iter()
+                .map(|rx| rx.recv_timeout(Duration::from_secs(10)).expect("bg response"))
+                .collect::<Vec<_>>()
+        })
+    };
+    std::thread::sleep(Duration::from_millis(2));
+
+    let gen = p.switch_variant("upgraded");
+    assert_eq!(gen, 1);
+
+    // Everything admitted after the ack must serve the new variant.
+    let mut rxs = Vec::new();
+    for i in 0..64 {
+        rxs.push(p.submit(input_for(i)).expect("admitted"));
+    }
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(10)).expect("post-switch response");
+        assert_eq!(resp.variant, "upgraded", "stale variant after acknowledged switch");
+        assert_eq!(resp.generation, gen);
+    }
+
+    // In-flight responses are internally consistent: generation 0 ⇔ old
+    // variant, generation 1 ⇔ new variant. Nothing is lost.
+    let bg_responses = bg.join().expect("bg thread");
+    assert_eq!(bg_responses.len(), 128);
+    for resp in &bg_responses {
+        match resp.generation {
+            0 => assert_eq!(resp.variant, "base"),
+            1 => assert_eq!(resp.variant, "upgraded"),
+            g => panic!("unexpected generation {g}"),
+        }
+    }
+
+    let stats = p_unwrap(p).shutdown();
+    assert_eq!(stats.served(), 128 + 64);
+    assert_eq!(stats.switches(), 1, "every worker applied exactly one switch");
+}
+
+/// Backpressure: tiny bounded queues + slow workers reject the overflow
+/// with the typed verdict, every admitted request completes, and
+/// served + rejected == submitted exactly.
+#[test]
+fn backpressure_accounting() {
+    const SUBMITTED: usize = 512;
+    let p = pool(
+        4,
+        4,
+        Duration::from_millis(2),
+        BatcherConfig { max_batch: 4, max_wait: Duration::from_micros(200) },
+    );
+    let mut admitted = Vec::new();
+    let mut rejected = 0usize;
+    for i in 0..SUBMITTED {
+        match p.submit(input_for(i)) {
+            Ok(rx) => admitted.push(rx),
+            Err(r @ Rejected { capacity, .. }) => {
+                assert_eq!(capacity, 4);
+                assert!(r.queue_depth >= capacity || r.worker.is_none());
+                rejected += 1;
+            }
+        }
+    }
+    assert!(rejected > 0, "flood must trip admission control");
+    assert!(!admitted.is_empty(), "some requests must be admitted");
+    for rx in &admitted {
+        rx.recv_timeout(Duration::from_secs(30)).expect("admitted request must complete");
+    }
+    let stats = p.shutdown();
+    assert_eq!(stats.served(), admitted.len());
+    assert_eq!(stats.rejected(), rejected);
+    assert_eq!(stats.served() + stats.rejected(), SUBMITTED);
+}
+
+/// Graceful shutdown drains in-flight requests: a long batch window keeps
+/// requests parked in the batchers; shutdown must flush every one of
+/// them with a correct answer rather than dropping them.
+#[test]
+fn graceful_shutdown_drains_in_flight() {
+    let p = pool(
+        4,
+        256,
+        Duration::from_micros(300),
+        // Window far longer than the test: only the drain can flush.
+        BatcherConfig { max_batch: 64, max_wait: Duration::from_secs(600) },
+    );
+    let mut rxs = Vec::new();
+    for i in 0..48 {
+        rxs.push((i % CLASSES, p.submit(input_for(i)).expect("admitted")));
+    }
+    let stats = p.shutdown();
+    assert_eq!(stats.served(), 48, "drain must serve every in-flight request");
+    assert_eq!(stats.failed(), 0);
+    for (want, rx) in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(5)).expect("drained response");
+        assert_eq!(resp.pred, want);
+    }
+}
+
+/// Pool-vs-single throughput on the mock executor: with a fixed per-batch
+/// cost, four workers must sustain strictly higher throughput than one.
+/// Wall-clock sensitive, hence `#[ignore]` — run explicitly with
+/// `cargo test --test serving -- --ignored`.
+#[test]
+#[ignore]
+fn pool_outperforms_single_worker() {
+    fn throughput(workers: usize) -> f64 {
+        const N: usize = 256;
+        let p = pool(
+            workers,
+            4096,
+            Duration::from_millis(2),
+            BatcherConfig { max_batch: 8, max_wait: Duration::from_micros(500) },
+        );
+        let t0 = Instant::now();
+        let rxs: Vec<_> = (0..N).map(|i| p.submit(input_for(i)).expect("admitted")).collect();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(30)).expect("response");
+        }
+        let elapsed = t0.elapsed().as_secs_f64();
+        let stats = p.shutdown();
+        assert_eq!(stats.served(), N);
+        N as f64 / elapsed
+    }
+
+    let single = throughput(1);
+    let quad = throughput(4);
+    assert!(
+        quad > single,
+        "pool must sustain strictly higher throughput: 4 workers {quad:.0} req/s vs 1 worker {single:.0} req/s"
+    );
+}

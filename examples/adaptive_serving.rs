@@ -127,6 +127,20 @@ fn main() -> anyhow::Result<()> {
             format!("{:.0}", per_phase as f64 / wall),
         ]);
     }
+    // The control plane's measured-side view: the hub snapshot the
+    // calibrator and AIMD sizer consume each tick (Fig. 6's back-end →
+    // front-end feedback), printed before shutdown while workers are live.
+    let tel = server.telemetry_snapshot();
+    println!(
+        "telemetry hub: live_workers={} occupancy={:.2} p50={:.1}ms p95={:.1}ms lanes normal/priority={}/{} variants measured={}",
+        tel.live_workers,
+        tel.occupancy(),
+        tel.p50_s * 1e3,
+        tel.p95_s * 1e3,
+        tel.lanes[crowdhmtware::telemetry::Lane::Normal.index()].served,
+        tel.lanes[crowdhmtware::telemetry::Lane::High.index()].served,
+        tel.per_variant.len(),
+    );
     let stats = server.shutdown();
     table.print();
     println!(

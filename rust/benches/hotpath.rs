@@ -97,7 +97,7 @@ fn main() {
         let mut b = Batcher::new(BatcherConfig::default());
         let now = Instant::now();
         for i in 0..8 {
-            b.push(Request { id: i, input: vec![0.0; 16], enqueued: now });
+            b.push(Request { id: i, input: vec![0.0; 16], enqueued: now, lane: crowdhmtware::telemetry::Lane::Normal });
         }
         std::hint::black_box(b.pop_batch(&[1, 8], now).map(|x| x.compiled_batch));
     });

@@ -4,7 +4,18 @@
 //! Each batch costs a fixed wall-clock delay, modeling a PJRT dispatch:
 //! a single worker is bounded by `batches × delay`, while the pool
 //! overlaps batches across workers. Reported per pool width: sustained
-//! req/s, pool p50/p99 latency, mean batch occupancy, rejections.
+//! req/s, pool p50/p95/p99 latency, mean batch occupancy, rejections.
+//!
+//! Besides the human-readable table, the run emits `BENCH_serving.json`
+//! (schema below) so the repo's serving-performance trajectory stays
+//! machine-readable across PRs:
+//!
+//! ```json
+//! {"bench":"serving_pool","requests":512,"batch_delay_ms":1,
+//!  "widths":[{"workers":1,"req_per_s":...,"p50_ms":...,"p95_ms":...,
+//!             "p99_ms":...,"mean_batch":...,"rejected":0}, ...],
+//!  "best":{"workers":8,"req_per_s":...,"speedup_vs_single":...}}
+//! ```
 //!
 //! Run: `cargo bench --bench serving_pool`
 
@@ -12,7 +23,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 use crowdhmtware::coordinator::{BatcherConfig, Executor, PoolConfig, ServingPool};
-use crowdhmtware::util::Table;
+use crowdhmtware::util::{Json, Table};
 
 const CLASSES: usize = 4;
 const ELEMS: usize = 16;
@@ -40,7 +51,17 @@ impl Executor for MockExec {
     }
 }
 
-fn run_width(workers: usize) -> (f64, f64, f64, f64, usize) {
+struct WidthResult {
+    workers: usize,
+    req_per_s: f64,
+    p50_ms: f64,
+    p95_ms: f64,
+    p99_ms: f64,
+    mean_batch: f64,
+    rejected: usize,
+}
+
+fn run_width(workers: usize) -> WidthResult {
     let pool = ServingPool::spawn(
         |_| Box::new(MockExec) as Box<dyn Executor>,
         "v",
@@ -62,44 +83,85 @@ fn run_width(workers: usize) -> (f64, f64, f64, f64, usize) {
     let stats = pool.shutdown();
     assert_eq!(stats.served(), REQUESTS);
     let merged = stats.merged();
-    (
-        REQUESTS as f64 / wall,
-        merged.percentile(0.5) * 1e3,
-        merged.percentile(0.99) * 1e3,
-        merged.mean_batch_size(),
-        stats.rejected(),
-    )
+    WidthResult {
+        workers,
+        req_per_s: REQUESTS as f64 / wall,
+        p50_ms: merged.percentile(0.5) * 1e3,
+        p95_ms: merged.percentile(0.95) * 1e3,
+        p99_ms: merged.percentile(0.99) * 1e3,
+        mean_batch: merged.mean_batch_size(),
+        rejected: stats.rejected(),
+    }
 }
 
 fn main() {
     let mut table = Table::new(
         "Serving throughput vs pool width (mock executor, 1 ms/batch)",
-        &["workers", "req/s", "p50 ms", "p99 ms", "mean batch", "rejected"],
+        &["workers", "req/s", "p50 ms", "p95 ms", "p99 ms", "mean batch", "rejected"],
     );
-    let mut single = 0.0f64;
-    let mut best = (1usize, 0.0f64);
+    let mut results = Vec::new();
     for &w in &[1usize, 2, 4, 8] {
-        let (rps, p50, p99, occ, rej) = run_width(w);
-        if w == 1 {
-            single = rps;
-        }
-        if rps > best.1 {
-            best = (w, rps);
-        }
+        let r = run_width(w);
         table.row(&[
-            w.to_string(),
-            format!("{rps:.0}"),
-            format!("{p50:.2}"),
-            format!("{p99:.2}"),
-            format!("{occ:.1}"),
-            rej.to_string(),
+            r.workers.to_string(),
+            format!("{:.0}", r.req_per_s),
+            format!("{:.2}", r.p50_ms),
+            format!("{:.2}", r.p95_ms),
+            format!("{:.2}", r.p99_ms),
+            format!("{:.1}", r.mean_batch),
+            r.rejected.to_string(),
         ]);
+        results.push(r);
     }
     table.print();
+
+    let single = results.first().map(|r| r.req_per_s).unwrap_or(0.0);
+    let best = results
+        .iter()
+        .max_by(|a, b| a.req_per_s.partial_cmp(&b.req_per_s).unwrap())
+        .expect("at least one width");
     println!(
         "\nbest: {} workers at {:.0} req/s — {:.1}× the single-worker baseline",
-        best.0,
-        best.1,
-        if single > 0.0 { best.1 / single } else { 0.0 }
+        best.workers,
+        best.req_per_s,
+        if single > 0.0 { best.req_per_s / single } else { 0.0 }
     );
+
+    // Machine-readable trajectory for cross-PR comparison.
+    let widths: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("workers", Json::num(r.workers as f64)),
+                ("req_per_s", Json::num(r.req_per_s)),
+                ("p50_ms", Json::num(r.p50_ms)),
+                ("p95_ms", Json::num(r.p95_ms)),
+                ("p99_ms", Json::num(r.p99_ms)),
+                ("mean_batch", Json::num(r.mean_batch)),
+                ("rejected", Json::num(r.rejected as f64)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::str("serving_pool")),
+        ("requests", Json::num(REQUESTS as f64)),
+        ("batch_delay_ms", Json::num(BATCH_DELAY.as_secs_f64() * 1e3)),
+        ("widths", Json::Arr(widths)),
+        (
+            "best",
+            Json::obj(vec![
+                ("workers", Json::num(best.workers as f64)),
+                ("req_per_s", Json::num(best.req_per_s)),
+                (
+                    "speedup_vs_single",
+                    Json::num(if single > 0.0 { best.req_per_s / single } else { 0.0 }),
+                ),
+            ]),
+        ),
+    ]);
+    let path = "BENCH_serving.json";
+    match std::fs::write(path, doc.to_string() + "\n") {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }

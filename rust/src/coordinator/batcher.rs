@@ -1,9 +1,16 @@
 //! Dynamic request batcher: collects inference requests and forms batches
 //! matched to the AOT-compiled batch sizes (artifacts are compiled for a
 //! fixed set of batches; the batcher picks the best fit and pads).
+//!
+//! Two lanes per batcher: a high-priority queue drained before the normal
+//! queue, so latency-critical requests jump ahead of the backlog without
+//! a separate worker. Batch formation policy (fullness/age triggers) is
+//! lane-agnostic; only the *draining order* is prioritized.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
+
+use crate::telemetry::Lane;
 
 /// One queued inference request.
 #[derive(Debug)]
@@ -12,6 +19,8 @@ pub struct Request {
     /// Row-major `[H, W, C]` f32 input.
     pub input: Vec<f32>,
     pub enqueued: Instant,
+    /// Which batcher lane the request rides (tags its telemetry too).
+    pub lane: Lane,
 }
 
 /// Batching policy knobs.
@@ -52,31 +61,48 @@ impl Batch {
 #[derive(Debug)]
 pub struct Batcher {
     pub cfg: BatcherConfig,
+    /// High-priority lane: drained first when forming a batch.
+    high: VecDeque<Request>,
+    /// Normal lane.
     queue: VecDeque<Request>,
 }
 
 impl Batcher {
     pub fn new(cfg: BatcherConfig) -> Self {
-        Batcher { cfg, queue: VecDeque::new() }
+        Batcher { cfg, high: VecDeque::new(), queue: VecDeque::new() }
     }
 
+    /// Enqueue into the lane the request is tagged with.
     pub fn push(&mut self, req: Request) {
-        self.queue.push_back(req);
+        match req.lane {
+            Lane::High => self.high.push_back(req),
+            Lane::Normal => self.queue.push_back(req),
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.queue.len()
+        self.high.len() + self.queue.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.queue.is_empty()
+        self.high.is_empty() && self.queue.is_empty()
+    }
+
+    /// Oldest queued request across both lanes (batch-window anchor).
+    fn oldest_enqueued(&self) -> Option<Instant> {
+        match (self.high.front(), self.queue.front()) {
+            (Some(h), Some(n)) => Some(h.enqueued.min(n.enqueued)),
+            (Some(h), None) => Some(h.enqueued),
+            (None, Some(n)) => Some(n.enqueued),
+            (None, None) => None,
+        }
     }
 
     /// Instant at which the oldest queued request's batch window expires —
     /// the worker blocks in `recv_timeout` until exactly this deadline
-    /// instead of spin-sleeping. `None` when the queue is empty.
+    /// instead of spin-sleeping. `None` when both lanes are empty.
     pub fn deadline(&self) -> Option<Instant> {
-        self.queue.front().map(|r| r.enqueued + self.cfg.max_wait)
+        self.oldest_enqueued().map(|t| t + self.cfg.max_wait)
     }
 
     /// Pick the compiled batch size for `k` ready requests: the smallest
@@ -95,11 +121,9 @@ impl Batcher {
 
     /// Form a batch if the policy triggers; `now` injected for testability.
     pub fn pop_batch(&mut self, compiled: &[usize], now: Instant) -> Option<Batch> {
-        if self.queue.is_empty() {
-            return None;
-        }
-        let oldest_wait = now.duration_since(self.queue.front().unwrap().enqueued);
-        if self.queue.len() < self.cfg.max_batch && oldest_wait < self.cfg.max_wait {
+        let oldest = self.oldest_enqueued()?;
+        let oldest_wait = now.duration_since(oldest);
+        if self.len() < self.cfg.max_batch && oldest_wait < self.cfg.max_wait {
             return None;
         }
         Some(self.form(compiled))
@@ -108,24 +132,24 @@ impl Batcher {
     /// Force-form a batch regardless of the fullness/age policy — used by
     /// graceful shutdown to drain every in-flight request.
     pub fn pop_batch_now(&mut self, compiled: &[usize]) -> Option<Batch> {
-        if self.queue.is_empty() {
+        if self.is_empty() {
             return None;
         }
         Some(self.form(compiled))
     }
 
     fn form(&mut self, compiled: &[usize]) -> Batch {
-        let k = self.queue.len().min(self.cfg.max_batch);
+        let k = self.len().min(self.cfg.max_batch);
         let b = Self::fit_compiled(k, compiled);
         let take = k.min(b);
-        let requests: Vec<Request> = (0..take).map(|_| self.queue.pop_front().unwrap()).collect();
+        let requests: Vec<Request> = (0..take).map(|_| self.pop_request().unwrap()).collect();
         Batch { requests, compiled_batch: b }
     }
 
-    /// Remove and return the oldest queued request (drop path when no
-    /// compiled artifact can ever run it).
+    /// Remove and return the next queued request, priority lane first
+    /// (also the drop path when no compiled artifact can ever run it).
     pub fn pop_request(&mut self) -> Option<Request> {
-        self.queue.pop_front()
+        self.high.pop_front().or_else(|| self.queue.pop_front())
     }
 }
 
@@ -134,7 +158,11 @@ mod tests {
     use super::*;
 
     fn req(id: u64, t: Instant) -> Request {
-        Request { id, input: vec![id as f32; 4], enqueued: t }
+        Request { id, input: vec![id as f32; 4], enqueued: t, lane: Lane::Normal }
+    }
+
+    fn prio(id: u64, t: Instant) -> Request {
+        Request { id, input: vec![id as f32; 4], enqueued: t, lane: Lane::High }
     }
 
     #[test]
@@ -192,6 +220,71 @@ mod tests {
         assert_eq!(batch.compiled_batch, 8);
         assert_eq!(batch.requests.len(), 8);
         assert_eq!(b.len(), 4);
+    }
+
+    // ── priority lane ──────────────────────────────────────────────────
+
+    /// High-priority requests drain before normal ones regardless of
+    /// enqueue order.
+    #[test]
+    fn priority_lane_drains_first() {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 2, max_wait: Duration::from_millis(0) });
+        let t = Instant::now();
+        b.push(req(0, t));
+        b.push(req(1, t));
+        b.push(prio(2, t));
+        b.push(prio(3, t));
+        let first = b.pop_batch(&[2], t).unwrap();
+        let ids: Vec<u64> = first.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![2, 3], "priority lane must drain first");
+        assert!(first.requests.iter().all(|r| r.lane == Lane::High));
+        let second = b.pop_batch(&[2], t).unwrap();
+        let ids: Vec<u64> = second.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1]);
+    }
+
+    /// A batch larger than the priority backlog tops up from the normal
+    /// lane, keeping the priority requests at the front.
+    #[test]
+    fn priority_tops_up_from_normal_lane() {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(0) });
+        let t = Instant::now();
+        b.push(req(0, t));
+        b.push(req(1, t));
+        b.push(prio(9, t));
+        let batch = b.pop_batch(&[4], t).unwrap();
+        let ids: Vec<u64> = batch.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![9, 0, 1]);
+    }
+
+    /// The batch-window deadline tracks the oldest request across BOTH
+    /// lanes — a parked normal request cannot be starved of its window by
+    /// later priority arrivals.
+    #[test]
+    fn deadline_spans_lanes() {
+        let cfg = BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(5) };
+        let mut b = Batcher::new(cfg);
+        let t0 = Instant::now();
+        b.push(req(0, t0));
+        b.push(prio(1, t0 + Duration::from_millis(3)));
+        assert_eq!(b.deadline().unwrap(), t0 + Duration::from_millis(5));
+        // The window is anchored at the normal request; at expiry the
+        // formed batch still serves the priority request first.
+        let batch = b.pop_batch(&[1, 8], t0 + Duration::from_millis(5)).unwrap();
+        assert_eq!(batch.requests[0].id, 1);
+        assert_eq!(batch.requests[1].id, 0);
+    }
+
+    /// pop_request (the no-artifact drop path) also honors lane order.
+    #[test]
+    fn pop_request_priority_first() {
+        let mut b = Batcher::new(BatcherConfig::default());
+        let t = Instant::now();
+        b.push(req(0, t));
+        b.push(prio(1, t));
+        assert_eq!(b.pop_request().unwrap().id, 1);
+        assert_eq!(b.pop_request().unwrap().id, 0);
+        assert!(b.pop_request().is_none());
     }
 
     // ── compiled-size selection across batch-size sets ────────────────

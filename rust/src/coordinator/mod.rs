@@ -1,9 +1,13 @@
 //! The L3 serving coordinator: a replicated [`pool::ServingPool`] of
 //! worker threads (each with its own PJRT executor + dynamic
-//! [`batcher::Batcher`]), a request router with pluggable
-//! [`policy::DispatchPolicy`], bounded per-worker queues with typed
-//! admission-control rejections, and atomic broadcast variant switching
-//! actuated by the adaptation loop (Sec. III-D3's middleware role).
+//! [`batcher::Batcher`] with a priority lane), a request router with
+//! pluggable [`policy::DispatchPolicy`], bounded per-worker queues with
+//! typed admission-control rejections, atomic broadcast variant
+//! switching, and dynamic pool width ([`pool::ServingPool::set_workers`])
+//! — the actuation surface of the adaptation loop (Sec. III-D3's
+//! middleware role). Every worker publishes measured performance into the
+//! [`crate::telemetry::TelemetryHub`]; [`pool::PoolStats`] and
+//! [`server::ServingStats`] are thin views over those slots.
 
 pub mod batcher;
 pub mod cascade;
@@ -16,3 +20,5 @@ pub use cascade::{run_cascade, CascadeStats, Stage};
 pub use policy::{rank_variants, select_variant, DispatchPolicy, ScoredVariant};
 pub use pool::{PoolConfig, PoolStats, ServingPool};
 pub use server::{Executor, Rejected, Response, ServingStats};
+
+pub use crate::telemetry::Lane;

@@ -1,21 +1,25 @@
 //! The replicated serving pool: `N` worker threads, each owning its own
 //! executor and dynamic batcher, behind a router with pluggable dispatch
 //! (round-robin / least-queue-depth), bounded per-worker queues with
-//! typed admission-control rejections, and atomic broadcast variant
-//! switching.
+//! typed admission-control rejections, atomic broadcast variant
+//! switching, priority lanes, and *dynamic width*: the control plane's
+//! AIMD sizer grows and shrinks the worker set at runtime through
+//! [`ServingPool::set_workers`].
 //!
 //! Architecture (the L3 actuation layer at pool scale):
 //!
 //! ```text
 //!                 ┌────────────── ServingPool ──────────────┐
 //!   submit() ──▶  │ router (DispatchPolicy) + admission     │
+//!   submit_priority() ─ high lane, drained first            │
 //!                 │   │ bounded queue per worker            │
 //!                 │   ▼                                     │
-//!                 │ worker 0   worker 1  …  worker N-1      │
-//!                 │ [batcher]  [batcher]    [batcher]       │
+//!                 │ worker 0   worker 1  …  worker N-1      │──▶ TelemetryHub
+//!                 │ [batcher]  [batcher]    [batcher]       │    (per-worker slots)
 //!                 │ [executor] [executor]   [executor]      │
 //!                 └────┬────────────────────────────────────┘
-//!   AdaptLoop ─ switch_variant ─ broadcast + generation + ack
+//!   control plane ─ switch_variant (broadcast+gen+ack)
+//!                 └ set_workers (spawn / retire)
 //! ```
 //!
 //! Variant switching is *atomic at the admission boundary*: the pool
@@ -23,21 +27,26 @@
 //! blocks until each worker acknowledges. Channels are FIFO per worker,
 //! so every request admitted after [`ServingPool::switch_variant`]
 //! returns is served by the new variant — no worker serves a stale
-//! variant past the acknowledged switch.
+//! variant past the acknowledged switch. Dynamically spawned workers
+//! start on the pool's current variant and generation; retired workers
+//! drain their queues before exiting, and their telemetry slots persist
+//! so pool totals stay monotonic across resizes.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use super::batcher::{BatcherConfig, Request};
 use super::policy::DispatchPolicy;
 use super::server::{spawn_worker, Executor, Msg, Rejected, Response, ServingStats, Worker};
+use crate::telemetry::{Lane, TelemetryHub, TelemetrySnapshot};
 
 /// Pool sizing + routing knobs.
 #[derive(Debug, Clone, Copy)]
 pub struct PoolConfig {
-    /// Number of replicated workers (each constructs its own executor).
+    /// Number of replicated workers at spawn (each constructs its own
+    /// executor); [`ServingPool::set_workers`] may change it later.
     pub workers: usize,
     /// Bounded queue depth per worker: admitted-but-unanswered requests.
     /// Submissions beyond this are rejected, not buffered.
@@ -63,8 +72,10 @@ impl Default for PoolConfig {
     }
 }
 
-/// Aggregated pool statistics: per-worker [`ServingStats`] plus merged
-/// views (pool percentiles, totals, per-worker batch occupancy).
+/// Aggregated pool statistics: per-worker [`ServingStats`] views plus
+/// merged percentiles and totals. Materialized from the telemetry hub —
+/// `per_worker` lists every worker the pool ever ran, retired ones
+/// included, so totals account for the pool's whole lifetime.
 #[derive(Debug, Clone, Default)]
 pub struct PoolStats {
     pub per_worker: Vec<ServingStats>,
@@ -93,8 +104,8 @@ impl PoolStats {
         self.per_worker.iter().map(|s| s.switches).max().unwrap_or(0)
     }
 
-    /// All per-worker stats folded into one (latencies concatenated) —
-    /// the input for pool-level percentiles.
+    /// All per-worker stats folded into one (latency windows
+    /// concatenated) — the input for pool-level percentiles.
     pub fn merged(&self) -> ServingStats {
         let mut out = ServingStats::default();
         for s in &self.per_worker {
@@ -103,7 +114,11 @@ impl PoolStats {
         out
     }
 
-    /// Pool-wide latency percentile over every served request.
+    /// Pool-wide latency percentile over each worker's retained window
+    /// (the most recent `telemetry::DEFAULT_RESERVOIR_CAPACITY` samples
+    /// per worker per lane — exact for runs smaller than the window,
+    /// recent-window statistics beyond it; `served()` always counts the
+    /// full lifetime).
     pub fn percentile(&self, p: f64) -> f64 {
         self.merged().percentile(p)
     }
@@ -119,11 +134,28 @@ impl PoolStats {
     }
 }
 
-/// The replicated serving pool. `submit` and `switch_variant` take
-/// `&self`, so the pool can be shared across client threads in an `Arc`.
+/// The live worker set. Guarded by one RwLock: submissions and switches
+/// read-lock; only `set_workers`/`shutdown` write-lock.
+struct Workers {
+    list: Vec<Worker>,
+    /// Monotonic worker-id source: dynamically spawned workers get fresh
+    /// ids so telemetry slots and executor factories never alias.
+    next_id: usize,
+}
+
+/// The replicated serving pool. `submit`, `switch_variant`, and
+/// `set_workers` take `&self`, so the pool can be shared across client
+/// threads in an `Arc`.
 pub struct ServingPool {
-    workers: Vec<Worker>,
+    workers: RwLock<Workers>,
+    /// Executor factory, retained so the pool can spawn workers after
+    /// construction (dynamic grow).
+    make: Arc<dyn Fn(usize) -> Box<dyn Executor> + Send + Sync>,
+    /// Current serving variant — what dynamically spawned workers start on.
+    variant: Mutex<String>,
+    hub: Arc<TelemetryHub>,
     capacity: usize,
+    batcher: BatcherConfig,
     dispatch: DispatchPolicy,
     switch_ack_timeout: Duration,
     /// Round-robin cursor (also seeds full-scan fallback ordering).
@@ -136,23 +168,30 @@ pub struct ServingPool {
 impl ServingPool {
     /// Spawn `cfg.workers` serving workers. `make_exec(i)` runs *on worker
     /// `i`'s thread* (PJRT clients are thread-affine and not `Send`); the
-    /// index lets factories shard models or devices across workers.
+    /// index lets factories shard models or devices across workers, and
+    /// keeps increasing monotonically across dynamic respawns.
     pub fn spawn<F>(make_exec: F, initial_variant: &str, cfg: PoolConfig) -> ServingPool
     where
         F: Fn(usize) -> Box<dyn Executor> + Send + Sync + 'static,
     {
         assert!(cfg.workers >= 1, "pool needs at least one worker");
         assert!(cfg.queue_capacity >= 1, "queue capacity must be positive");
-        let make = Arc::new(make_exec);
-        let workers = (0..cfg.workers)
+        let make: Arc<dyn Fn(usize) -> Box<dyn Executor> + Send + Sync> = Arc::new(make_exec);
+        let hub = Arc::new(TelemetryHub::new(cfg.queue_capacity));
+        let list = (0..cfg.workers)
             .map(|i| {
                 let make = Arc::clone(&make);
-                spawn_worker(i, move || make(i), initial_variant.to_string(), cfg.batcher)
+                let tel = hub.register(i);
+                spawn_worker(i, move || make(i), initial_variant.to_string(), 0, cfg.batcher, tel)
             })
             .collect();
         ServingPool {
-            workers,
+            workers: RwLock::new(Workers { list, next_id: cfg.workers }),
+            make,
+            variant: Mutex::new(initial_variant.to_string()),
+            hub,
             capacity: cfg.queue_capacity,
+            batcher: cfg.batcher,
             dispatch: cfg.dispatch,
             switch_ack_timeout: cfg.switch_ack_timeout,
             rr: AtomicUsize::new(0),
@@ -161,13 +200,14 @@ impl ServingPool {
         }
     }
 
+    /// Current live worker count.
     pub fn num_workers(&self) -> usize {
-        self.workers.len()
+        self.workers.read().unwrap().list.len()
     }
 
-    /// Current admitted-but-unanswered depth of each worker queue.
+    /// Current admitted-but-unanswered depth of each live worker queue.
     pub fn queue_depths(&self) -> Vec<usize> {
-        self.workers.iter().map(|w| w.depth.load(Ordering::Acquire)).collect()
+        self.workers.read().unwrap().list.iter().map(|w| w.tel.queue_depth()).collect()
     }
 
     /// Current pool-wide variant generation.
@@ -175,58 +215,105 @@ impl ServingPool {
         self.generation.load(Ordering::SeqCst)
     }
 
-    /// Submit a request. Routes by the dispatch policy; rejects with a
-    /// typed [`Rejected`] only when *no* worker has spare capacity — a
-    /// submitter that races another onto the same snapshot re-dispatches
-    /// (the just-filled queue shows as full on the fresh read), and a
-    /// dead worker (closed channel) is excluded from further picks
-    /// instead of blackholing the pool.
+    /// The hub every worker publishes into — the control plane's
+    /// observation channel.
+    pub fn telemetry(&self) -> Arc<TelemetryHub> {
+        Arc::clone(&self.hub)
+    }
+
+    /// Snapshot the hub: the measured-side input to an adaptation tick.
+    pub fn telemetry_snapshot(&self) -> TelemetrySnapshot {
+        self.hub.snapshot()
+    }
+
+    /// Live statistics view (no shutdown needed): per-worker
+    /// [`ServingStats`] materialized from the telemetry slots, retired
+    /// workers included.
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            per_worker: self.hub.slots().iter().map(|s| ServingStats::from_telemetry(s)).collect(),
+        }
+    }
+
+    /// Submit a request on the normal lane.
     pub fn submit(&self, input: Vec<f32>) -> Result<Receiver<Response>, Rejected> {
+        self.submit_lane(input, Lane::Normal)
+    }
+
+    /// Submit a latency-critical request: rides the per-worker
+    /// high-priority queue, which the batcher drains before the normal
+    /// lane. Admission control is shared with the normal lane (the
+    /// bounded queue protects the worker, not the lane).
+    pub fn submit_priority(&self, input: Vec<f32>) -> Result<Receiver<Response>, Rejected> {
+        self.submit_lane(input, Lane::High)
+    }
+
+    /// Routes by the dispatch policy; rejects with a typed [`Rejected`]
+    /// only when *no* worker has spare capacity — a submitter that races
+    /// another onto the same snapshot re-dispatches (the just-filled
+    /// queue shows as full on the fresh read), and a dead worker (closed
+    /// channel) is excluded from further picks instead of blackholing
+    /// the pool.
+    pub fn submit_lane(&self, input: Vec<f32>, lane: Lane) -> Result<Receiver<Response>, Rejected> {
+        let guard = self.workers.read().unwrap();
+        let workers = &guard.list;
+        if workers.is_empty() {
+            return Err(Rejected { worker: None, queue_depth: 0, capacity: self.capacity });
+        }
         let cursor = self.rr.fetch_add(1, Ordering::Relaxed);
-        let mut excluded = vec![false; self.workers.len()];
+        let mut excluded = vec![false; workers.len()];
         let mut last_full = (0usize, 0usize); // (worker, observed depth)
         // Bounded retries: each failed attempt either excludes a dead
         // worker for the rest of this call or means the picked queue
         // filled under us; at most every worker can do that once before
         // a fresh pick returns None.
-        for attempt in 0..=self.workers.len() {
-            let mut depths = self.queue_depths();
+        for attempt in 0..=workers.len() {
+            let mut depths: Vec<usize> = workers.iter().map(|w| w.tel.queue_depth()).collect();
             for (d, &x) in depths.iter_mut().zip(excluded.iter()) {
                 if x {
                     *d = self.capacity; // present as full so pick skips it
                 }
             }
             let Some(wi) = self.dispatch.pick(&depths, self.capacity, cursor + attempt) else {
-                let wi = cursor % self.workers.len();
-                self.workers[wi].rejected.fetch_add(1, Ordering::Relaxed);
-                let depth = depths.iter().copied().min().unwrap_or(0);
+                // Pool-wide rejection (every queue full): attribute it to
+                // the least-loaded worker — the one dispatch would have
+                // picked had any queue had room — so per-worker rejected
+                // counts read as "rejections while this worker was the
+                // best available candidate" rather than round-robin noise.
+                let (wi, depth) = depths
+                    .iter()
+                    .copied()
+                    .enumerate()
+                    .min_by_key(|&(_, d)| d)
+                    .unwrap_or((cursor % workers.len(), 0));
+                workers[wi].tel.record_rejected();
                 return Err(Rejected { worker: None, queue_depth: depth, capacity: self.capacity });
             };
-            let worker = &self.workers[wi];
+            let worker = &workers[wi];
             // The depth gauge is the admission token: increment first, and
             // if a concurrent submitter already filled the queue, roll
             // back and re-dispatch — admitted requests never exceed the
             // capacity bound.
-            let prev = worker.depth.fetch_add(1, Ordering::AcqRel);
+            let prev = worker.tel.depth_inc();
             if prev >= self.capacity {
-                worker.depth.fetch_sub(1, Ordering::AcqRel);
+                worker.tel.depth_cancel();
                 last_full = (wi, prev);
                 continue;
             }
             let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
             let (tx, rx) = channel();
-            let req = Request { id, input, enqueued: Instant::now() };
+            let req = Request { id, input, enqueued: Instant::now(), lane };
             if worker.tx.send(Msg::Infer(req, tx)).is_err() {
                 // Worker thread is gone (panicked executor factory, say):
                 // exclude it and try the remaining workers.
-                worker.depth.fetch_sub(1, Ordering::AcqRel);
+                worker.tel.depth_cancel();
                 excluded[wi] = true;
                 continue;
             }
             return Ok(rx);
         }
         let (wi, depth) = last_full;
-        self.workers[wi].rejected.fetch_add(1, Ordering::Relaxed);
+        workers[wi].tel.record_rejected();
         Err(Rejected { worker: Some(wi), queue_depth: depth, capacity: self.capacity })
     }
 
@@ -239,11 +326,10 @@ impl ServingPool {
     ///
     /// [`switch_variant_acked`]: ServingPool::switch_variant_acked
     pub fn switch_variant(&self, variant: &str) -> u64 {
-        let (generation, acked) = self.switch_variant_acked(variant);
-        if acked < self.workers.len() {
+        let (generation, acked, expected) = self.switch_variant_acked(variant);
+        if acked < expected {
             eprintln!(
-                "switch to '{variant}' (generation {generation}): only {acked}/{} workers acked within {:?} — unacked workers may still serve the previous variant",
-                self.workers.len(),
+                "switch to '{variant}' (generation {generation}): only {acked}/{expected} workers acked within {:?} — unacked workers may still serve the previous variant",
                 self.switch_ack_timeout,
             );
         }
@@ -251,20 +337,40 @@ impl ServingPool {
     }
 
     /// Like [`ServingPool::switch_variant`], but returns how many workers
-    /// acknowledged alongside the new generation. `acked == num_workers()`
-    /// is the atomicity guarantee; anything less means a worker was
-    /// wedged past the ack timeout (it will still apply the switch when
-    /// it next drains its channel, but requests admitted meanwhile may
-    /// be served by the stale variant).
-    pub fn switch_variant_acked(&self, variant: &str) -> (u64, usize) {
-        let generation = self.generation.fetch_add(1, Ordering::SeqCst) + 1;
+    /// acknowledged alongside the new generation and the broadcast fanout.
+    /// `acked == fanout` is the atomicity guarantee; anything less means a
+    /// worker was wedged past the ack timeout (it will still apply the
+    /// switch when it next drains its channel, but requests admitted
+    /// meanwhile may be served by the stale variant).
+    pub fn switch_variant_acked(&self, variant: &str) -> (u64, usize, usize) {
+        // Bump the generation and record the variant under ONE lock, so
+        // concurrent switches can never invert (a variant string left
+        // behind with a newer generation would make later-grown workers
+        // serve a stale variant that no future broadcast corrects). A
+        // concurrent grow either sees the new string (and spawns directly
+        // onto it) or spawns in time to receive the broadcast — never
+        // neither. Recording *before* broadcasting keeps that guarantee.
+        let generation = {
+            let mut v = self.variant.lock().unwrap();
+            let generation = self.generation.fetch_add(1, Ordering::SeqCst) + 1;
+            *v = variant.to_string();
+            generation
+        };
         let (ack_tx, ack_rx) = channel();
         let mut pending = 0usize;
-        for w in &self.workers {
-            let msg = Msg::Switch { variant: variant.to_string(), generation, ack: ack_tx.clone() };
-            if w.tx.send(msg).is_ok() {
-                pending += 1;
+        {
+            let guard = self.workers.read().unwrap();
+            for w in &guard.list {
+                let msg = Msg::Switch { variant: variant.to_string(), generation, ack: ack_tx.clone() };
+                if w.tx.send(msg).is_ok() {
+                    pending += 1;
+                }
             }
+            // Release before the ack wait: a wedged worker may hold this
+            // loop for the full timeout, and keeping the read guard would
+            // queue writers (set_workers/shutdown) and, behind them, every
+            // submit — the pool must keep admitting while we wait. A
+            // worker retired mid-wait simply costs us its ack (timeout).
         }
         drop(ack_tx);
         let deadline = Instant::now() + self.switch_ack_timeout;
@@ -276,26 +382,82 @@ impl ServingPool {
             }
             acked += 1;
         }
-        (generation, acked)
+        (generation, acked, pending)
     }
 
-    /// Stop every worker, draining in-flight requests, and aggregate
-    /// their statistics (admission rejections folded in per worker).
+    /// Resize the live worker set to `target` (clamped to ≥ 1): the
+    /// actuation point of the control plane's AIMD pool sizer. Growing
+    /// spawns workers with the stored executor factory on the pool's
+    /// current variant and generation; shrinking retires workers from the
+    /// back of the set — each drains its queued requests before exiting,
+    /// and its telemetry slot persists (marked retired) so pool totals
+    /// stay monotonic. Returns the new live worker count.
+    pub fn set_workers(&self, target: usize) -> usize {
+        let target = target.max(1);
+        // Mutate the live set under the write lock (pop is O(1), spawn is
+        // cheap), but *drain retiring workers outside it*: a retiring
+        // worker flushes its whole bounded queue before exiting, and the
+        // AIMD sizer shrinks exactly when queues are full — holding the
+        // lock through that drain would stall every submit and switch for
+        // the duration instead of letting them proceed on the survivors.
+        let mut retiring = Vec::new();
+        let len = {
+            let mut guard = self.workers.write().unwrap();
+            while guard.list.len() > target {
+                retiring.push(guard.list.pop().expect("len > target >= 1"));
+            }
+            if guard.list.len() < target {
+                // Read (variant, generation) under the variant lock — the
+                // same lock switches bump the generation under — so the
+                // pair is always consistent: a worker can never spawn
+                // with the *previous* variant already stamped with the
+                // *new* generation (which would ignore the corrective
+                // broadcast). Lock order is workers.write → variant here;
+                // switches never hold variant while taking workers.read,
+                // so there is no cycle.
+                let (variant, generation) = {
+                    let v = self.variant.lock().unwrap();
+                    (v.clone(), self.generation.load(Ordering::SeqCst))
+                };
+                while guard.list.len() < target {
+                    let id = guard.next_id;
+                    guard.next_id += 1;
+                    let make = Arc::clone(&self.make);
+                    let tel = self.hub.register(id);
+                    guard.list.push(spawn_worker(
+                        id,
+                        move || make(id),
+                        variant.clone(),
+                        generation,
+                        self.batcher,
+                        tel,
+                    ));
+                }
+            }
+            guard.list.len()
+        };
+        for w in retiring {
+            let _ = w.tx.send(Msg::Shutdown);
+            let _ = w.join.join();
+            w.tel.retire();
+        }
+        len
+    }
+
+    /// Stop every worker, draining in-flight requests, and return the
+    /// lifetime statistics (retired workers included).
     pub fn shutdown(self) -> PoolStats {
-        for w in &self.workers {
+        let workers = self.workers.into_inner().unwrap();
+        for w in &workers.list {
             let _ = w.tx.send(Msg::Shutdown);
         }
-        let per_worker = self
-            .workers
-            .into_iter()
-            .map(|w| {
-                let rejected = w.rejected.load(Ordering::Relaxed);
-                let mut stats = w.join.join().unwrap_or_default();
-                stats.rejected = rejected;
-                stats
-            })
-            .collect();
-        PoolStats { per_worker }
+        for w in workers.list {
+            let _ = w.join.join();
+            w.tel.retire();
+        }
+        PoolStats {
+            per_worker: self.hub.slots().iter().map(|s| ServingStats::from_telemetry(s)).collect(),
+        }
     }
 }
 
@@ -447,5 +609,126 @@ mod tests {
         let occ = stats.occupancy();
         assert!((occ[0] - 2.0).abs() < 1e-9);
         assert!((occ[1] - 4.0).abs() < 1e-9);
+    }
+
+    // ── dynamic width ──────────────────────────────────────────────────
+
+    #[test]
+    fn grow_spawns_workers_on_current_variant_and_generation() {
+        let pool = quad(200, 256);
+        pool.switch_variant("w2");
+        assert_eq!(pool.set_workers(6), 6);
+        assert_eq!(pool.num_workers(), 6);
+        // A burst wide enough to reach the new workers: every response
+        // must carry the post-switch variant and generation, including
+        // from workers spawned after the switch.
+        let mut rxs = Vec::new();
+        for _ in 0..96 {
+            rxs.push(pool.submit(vec![1.0; 16]).unwrap());
+        }
+        let mut seen = std::collections::HashSet::new();
+        for rx in rxs {
+            let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(r.variant, "w2");
+            assert_eq!(r.generation, 1);
+            seen.insert(r.worker);
+        }
+        assert!(seen.len() >= 5, "expected the grown pool to spread load, got {seen:?}");
+        let stats = pool.shutdown();
+        assert_eq!(stats.served(), 96);
+        assert_eq!(stats.per_worker.len(), 6);
+    }
+
+    #[test]
+    fn shrink_retires_workers_and_keeps_totals() {
+        let pool = quad(200, 1024);
+        let mut rxs = Vec::new();
+        for _ in 0..32 {
+            rxs.push(pool.submit(vec![1.0; 16]).unwrap());
+        }
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        }
+        assert_eq!(pool.set_workers(1), 1);
+        assert_eq!(pool.num_workers(), 1);
+        // The shrunken pool still serves.
+        let rx = pool.submit(vec![1.0; 16]).unwrap();
+        rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        let stats = pool.shutdown();
+        assert_eq!(stats.served(), 33, "retired workers' serves must stay in the totals");
+        assert_eq!(stats.per_worker.len(), 4);
+    }
+
+    #[test]
+    fn set_workers_clamps_to_one() {
+        let pool = quad(200, 64);
+        assert_eq!(pool.set_workers(0), 1);
+        let rx = pool.submit(vec![1.0; 16]).unwrap();
+        rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(pool.shutdown().served(), 1);
+    }
+
+    #[test]
+    fn shrink_drains_queued_requests() {
+        // Long batch window parks requests in worker batchers; retiring
+        // those workers must flush every one of them.
+        let pool = ServingPool::spawn(
+            |_| Box::new(MockExec::quick()) as Box<dyn Executor>,
+            "v",
+            PoolConfig {
+                workers: 4,
+                queue_capacity: 64,
+                batcher: BatcherConfig { max_batch: 32, max_wait: Duration::from_secs(60) },
+                ..PoolConfig::default()
+            },
+        );
+        let rxs: Vec<_> = (0..24).map(|_| pool.submit(vec![1.0; 16]).unwrap()).collect();
+        pool.set_workers(1);
+        // Everything parked on the three retired workers was force-drained;
+        // whatever landed on the surviving worker is drained at shutdown.
+        let stats = pool.shutdown();
+        assert_eq!(stats.served(), 24);
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        }
+    }
+
+    // ── priority lane ──────────────────────────────────────────────────
+
+    #[test]
+    fn priority_submissions_are_lane_tagged() {
+        let pool = ServingPool::spawn(
+            |_| Box::new(MockExec::quick()) as Box<dyn Executor>,
+            "v",
+            PoolConfig {
+                workers: 1,
+                queue_capacity: 64,
+                batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+                ..PoolConfig::default()
+            },
+        );
+        let rx_n = pool.submit(vec![1.0; 16]).unwrap();
+        let rx_p = pool.submit_priority(vec![1.0; 16]).unwrap();
+        assert_eq!(rx_n.recv_timeout(Duration::from_secs(5)).unwrap().lane, Lane::Normal);
+        assert_eq!(rx_p.recv_timeout(Duration::from_secs(5)).unwrap().lane, Lane::High);
+        let tel = pool.telemetry_snapshot();
+        assert_eq!(tel.lanes[Lane::Normal.index()].served, 1);
+        assert_eq!(tel.lanes[Lane::High.index()].served, 1);
+        assert_eq!(pool.shutdown().served(), 2);
+    }
+
+    #[test]
+    fn live_stats_match_shutdown_stats() {
+        let pool = quad(200, 1024);
+        let rxs: Vec<_> = (0..16).map(|_| pool.submit(vec![1.0; 16]).unwrap()).collect();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        }
+        let live = pool.stats();
+        assert_eq!(live.served(), 16);
+        let tel = pool.telemetry_snapshot();
+        assert_eq!(tel.served, 16);
+        assert_eq!(tel.live_workers, 4);
+        assert_eq!(pool.shutdown().served(), 16);
     }
 }

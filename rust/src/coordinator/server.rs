@@ -9,13 +9,21 @@
 //! variant switches that every worker acknowledges — the actuation point
 //! of the adaptation loop.
 //!
+//! Every observable a worker produces is published into its
+//! [`WorkerTelemetry`] slot on the [`crate::telemetry::TelemetryHub`]
+//! (relaxed counters per request, one lock per batch for latency
+//! samples): the control plane snapshots the hub each tick, and the
+//! legacy [`ServingStats`] accessors are thin adapters over the same
+//! slots. Latencies are lane-tagged (normal vs priority) and keyed by the
+//! serving variant so the calibrator can compare measured against
+//! predicted per variant.
+//!
 //! Response delivery is O(1) per request (a `HashMap` from request id to
 //! the caller's channel), and the loop never spin-sleeps: when a partial
 //! batch is waiting for its window to fill, the worker blocks in
 //! `recv_timeout` until exactly the batch-window deadline.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -24,6 +32,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use super::batcher::{Batch, Batcher, BatcherConfig, Request};
+use crate::telemetry::{Lane, WorkerTelemetry};
 
 /// Abstraction over the PJRT runtime so the serving layer is testable
 /// without built artifacts. Not `Send`: PJRT handles are thread-affine,
@@ -73,6 +82,8 @@ pub struct Response {
     pub generation: u64,
     /// Index of the worker that served the request.
     pub worker: usize,
+    /// Which batcher lane the request rode (normal vs priority).
+    pub lane: Lane,
     /// Queue + execution time for this request.
     pub latency: Duration,
 }
@@ -112,7 +123,11 @@ pub(crate) enum Msg {
     Shutdown,
 }
 
-/// Per-worker serving statistics (the pool aggregates these).
+/// Per-worker serving statistics. Since the telemetry hub landed this is
+/// a *view*, not an accumulator: the pool materializes it from each
+/// worker's [`WorkerTelemetry`] slot (see [`ServingStats::from_telemetry`]).
+/// `latencies_s` holds the slot's retained reservoir window — recent
+/// samples, exact for test/bench workloads smaller than the window.
 #[derive(Debug, Clone, Default)]
 pub struct ServingStats {
     pub served: usize,
@@ -127,14 +142,21 @@ pub struct ServingStats {
 }
 
 impl ServingStats {
-    pub fn percentile(&self, p: f64) -> f64 {
-        if self.latencies_s.is_empty() {
-            return 0.0;
+    /// Materialize the stats view from a telemetry slot (the adapter the
+    /// pool uses for `stats()` and `shutdown()`).
+    pub fn from_telemetry(tel: &WorkerTelemetry) -> ServingStats {
+        ServingStats {
+            served: tel.served_total(),
+            batches: tel.batches(),
+            latencies_s: tel.latency_samples(),
+            switches: tel.switches(),
+            rejected: tel.rejected(),
+            failed: tel.failed(),
         }
-        let mut v = self.latencies_s.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let idx = ((v.len() as f64 - 1.0) * p).round() as usize;
-        v[idx]
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        crate::telemetry::percentile_of(self.latencies_s.clone(), p)
     }
 
     pub fn mean_batch_size(&self) -> f64 {
@@ -156,34 +178,38 @@ impl ServingStats {
     }
 }
 
-/// Pool-side handle to one worker thread.
+/// Pool-side handle to one worker thread. All counters and gauges live in
+/// the shared telemetry slot; the handle is just the channel + the slot +
+/// the join handle.
 pub(crate) struct Worker {
     pub tx: Sender<Msg>,
-    /// Requests admitted but not yet answered (the bounded-queue gauge);
-    /// shared with the worker thread, which decrements as it answers.
-    pub depth: Arc<AtomicUsize>,
-    /// Requests rejected at admission for this worker — only the pool
-    /// side touches it, so no Arc.
-    pub rejected: AtomicUsize,
-    pub join: JoinHandle<ServingStats>,
+    /// This worker's hub slot: queue-depth gauge (the bounded-queue
+    /// admission token), serve/reject counters, latency reservoirs.
+    pub tel: Arc<WorkerTelemetry>,
+    pub join: JoinHandle<()>,
 }
 
 /// Spawn one serving worker. `make_exec` runs *on the worker thread*
-/// (PJRT clients are thread-affine and not `Send`).
+/// (PJRT clients are thread-affine and not `Send`). `initial_generation`
+/// seeds the worker's variant generation so dynamically spawned workers
+/// join the pool at the current generation, not at zero.
 pub(crate) fn spawn_worker<F>(
     index: usize,
     make_exec: F,
     initial_variant: String,
+    initial_generation: u64,
     cfg: BatcherConfig,
+    tel: Arc<WorkerTelemetry>,
 ) -> Worker
 where
     F: FnOnce() -> Box<dyn Executor> + Send + 'static,
 {
     let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
-    let depth = Arc::new(AtomicUsize::new(0));
-    let depth_w = Arc::clone(&depth);
-    let join = std::thread::spawn(move || worker_main(index, make_exec(), rx, initial_variant, cfg, depth_w));
-    Worker { tx, depth, rejected: AtomicUsize::new(0), join }
+    let tel_w = Arc::clone(&tel);
+    let join = std::thread::spawn(move || {
+        worker_main(index, make_exec(), rx, initial_variant, initial_generation, cfg, tel_w)
+    });
+    Worker { tx, tel, join }
 }
 
 /// Mutable worker-loop state threaded through message absorption.
@@ -192,7 +218,7 @@ struct WorkerState {
     waiting: HashMap<u64, Sender<Response>>,
     variant: String,
     generation: u64,
-    stats: ServingStats,
+    tel: Arc<WorkerTelemetry>,
     draining: bool,
 }
 
@@ -204,11 +230,15 @@ impl WorkerState {
                 self.batcher.push(req);
             }
             Msg::Switch { variant, generation, ack } => {
-                if generation > self.generation {
+                // `>=` (not `>`): a worker spawned concurrently with a
+                // broadcast may start *at* the broadcast generation but
+                // with the previous variant string; the equal-generation
+                // re-application is idempotent for everyone else.
+                if generation >= self.generation {
                     self.generation = generation;
                     if variant != self.variant {
                         self.variant = variant;
-                        self.stats.switches += 1;
+                        self.tel.record_switch();
                     }
                 }
                 let _ = ack.send(self.generation);
@@ -223,17 +253,18 @@ fn worker_main(
     mut exec: Box<dyn Executor>,
     rx: Receiver<Msg>,
     initial_variant: String,
+    initial_generation: u64,
     cfg: BatcherConfig,
-    depth: Arc<AtomicUsize>,
-) -> ServingStats {
+    tel: Arc<WorkerTelemetry>,
+) {
     let elems = exec.input_elems();
     let classes = exec.num_classes();
     let mut st = WorkerState {
         batcher: Batcher::new(cfg),
         waiting: HashMap::new(),
         variant: initial_variant,
-        generation: 0,
-        stats: ServingStats::default(),
+        generation: initial_generation,
+        tel,
         draining: false,
     };
 
@@ -260,9 +291,12 @@ fn worker_main(
         if let Some(m) = msg {
             st.absorb(m);
         }
-        // Opportunistically drain the channel so a burst forms one batch
-        // instead of max_batch singleton iterations.
-        while !st.draining && st.batcher.len() < st.batcher.cfg.max_batch {
+        // Drain the channel so a burst forms full batches instead of
+        // max_batch singleton iterations — and, critically, so queued
+        // priority requests are *seen* and jump the lane before the next
+        // batch forms (the batcher caps each formed batch at max_batch
+        // regardless of how much is absorbed).
+        while !st.draining {
             match rx.try_recv() {
                 Ok(m) => st.absorb(m),
                 Err(TryRecvError::Empty) => break,
@@ -283,7 +317,7 @@ fn worker_main(
             continue;
         }
         if let Some(batch) = st.batcher.pop_batch(&sizes, Instant::now()) {
-            run_batch(&mut *exec, batch, index, elems, classes, &depth, &mut st);
+            run_batch(&mut *exec, batch, index, elems, classes, &mut st);
         }
     }
 
@@ -296,34 +330,47 @@ fn worker_main(
     if sizes.is_empty() {
         // No compiled artifacts for the current variant: the queued
         // requests can never run; drop them (callers see a closed channel).
+        let mut dropped = 0usize;
         while let Some(req) = st.batcher.pop_request() {
             st.waiting.remove(&req.id);
-            depth.fetch_sub(1, Ordering::AcqRel);
-            st.stats.failed += 1;
+            st.tel.depth_dec();
+            dropped += 1;
         }
+        st.tel.record_failed(dropped);
     } else {
         while let Some(batch) = st.batcher.pop_batch_now(&sizes) {
-            run_batch(&mut *exec, batch, index, elems, classes, &depth, &mut st);
+            run_batch(&mut *exec, batch, index, elems, classes, &mut st);
         }
     }
-    st.stats
 }
 
-/// Execute one batch and deliver every response (O(1) per request).
+/// Execute one batch and deliver every response (O(1) per request);
+/// publish lane-tagged, variant-keyed latencies to the telemetry slot in
+/// one batch-granular record.
 fn run_batch(
     exec: &mut dyn Executor,
     batch: Batch,
     worker: usize,
     elems: usize,
     classes: usize,
-    depth: &AtomicUsize,
     st: &mut WorkerState,
 ) {
     let input = batch.padded_input(elems);
+    let exec_start = Instant::now();
     match exec.run(&st.variant, batch.compiled_batch, &input) {
         Ok(probs) => {
             let now = Instant::now();
-            st.stats.batches += 1;
+            // Execution-only time for the calibrator's per-variant view:
+            // the batch's execution wall time, recorded per request. Not
+            // divided by batch size — every request in the batch *waits*
+            // the full batch execution, so this IS each request's
+            // execution latency as experienced; dividing would report an
+            // amortized compute share that understates wall latency
+            // whenever batching is active. Queue/batch-window wait is
+            // still excluded (that is the sizer's congestion signal);
+            // the lane samples below stay end-to-end.
+            let exec_s = now.duration_since(exec_start).as_secs_f64();
+            let mut samples: Vec<(Lane, f64)> = Vec::with_capacity(batch.requests.len());
             for (i, req) in batch.requests.iter().enumerate() {
                 let row = &probs[i * classes..(i + 1) * classes];
                 let (pred, conf) = row
@@ -333,9 +380,8 @@ fn run_batch(
                     .map(|(k, &v)| (k, v))
                     .unwrap_or((0, 0.0));
                 let latency = now.duration_since(req.enqueued);
-                st.stats.served += 1;
-                st.stats.latencies_s.push(latency.as_secs_f64());
-                depth.fetch_sub(1, Ordering::AcqRel);
+                samples.push((req.lane, latency.as_secs_f64()));
+                st.tel.depth_dec();
                 if let Some(tx) = st.waiting.remove(&req.id) {
                     let _ = tx.send(Response {
                         id: req.id,
@@ -344,18 +390,20 @@ fn run_batch(
                         variant: st.variant.clone(),
                         generation: st.generation,
                         worker,
+                        lane: req.lane,
                         latency,
                     });
                 }
             }
+            st.tel.record_batch(&st.variant, exec_s, &samples);
         }
         Err(e) => {
             eprintln!("worker {worker}: batch execution failed: {e:#}");
             for req in &batch.requests {
                 st.waiting.remove(&req.id);
-                depth.fetch_sub(1, Ordering::AcqRel);
-                st.stats.failed += 1;
+                st.tel.depth_dec();
             }
+            st.tel.record_failed(batch.requests.len());
         }
     }
 }
@@ -436,6 +484,7 @@ mod tests {
         assert_eq!(resp.pred, 2);
         assert!(resp.confidence > 0.5);
         assert_eq!(resp.worker, 0);
+        assert_eq!(resp.lane, Lane::Normal);
         let stats = h.shutdown();
         assert_eq!(stats.served(), 1);
     }
@@ -513,6 +562,24 @@ mod tests {
         assert_eq!(a.switches, 1, "switches are a broadcast count, not additive");
         assert_eq!(a.rejected, 2);
         assert_eq!(a.failed, 1);
+    }
+
+    #[test]
+    fn stats_view_materializes_from_telemetry() {
+        let hub = crate::telemetry::TelemetryHub::new(8);
+        let slot = hub.register(3);
+        slot.record_batch("v", 0.02, &[(Lane::Normal, 0.01), (Lane::High, 0.03)]);
+        slot.record_rejected();
+        slot.record_failed(1);
+        slot.record_switch();
+        let stats = ServingStats::from_telemetry(&slot);
+        assert_eq!(stats.served, 2);
+        assert_eq!(stats.batches, 1);
+        assert_eq!(stats.rejected, 1);
+        assert_eq!(stats.failed, 1);
+        assert_eq!(stats.switches, 1);
+        assert_eq!(stats.latencies_s.len(), 2);
+        assert!((stats.percentile(1.0) - 0.03).abs() < 1e-12);
     }
 
     #[test]

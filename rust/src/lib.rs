@@ -48,6 +48,23 @@
 //! Graceful shutdown drains every in-flight request before workers exit
 //! (requests stranded on a variant with no compiled artifacts cannot be
 //! run and are accounted as `failed`, closing their response channels).
+//!
+//! ## Cross-level telemetry bus
+//!
+//! The [`telemetry`] module closes the paper's back-end→front-end
+//! feedback loop: every serving worker publishes measured latencies
+//! (lane-tagged, per-variant), counters, and queue depths into a
+//! [`telemetry::TelemetryHub`]; the adaptation control plane
+//! ([`optimizer::AdaptLoop::tick_with_telemetry`]) snapshots the hub each
+//! tick, corrects the profiler's Eq. 2 predictions with an online
+//! per-variant observed/predicted calibrator
+//! ([`optimizer::LatencyCalibrator`]), and actuates both serving variant
+//! *and* pool width — the AIMD [`optimizer::PoolSizer`] grows workers
+//! additively while measured p95 sits inside the budget and queues are
+//! occupied, and shrinks multiplicatively on admission rejections or
+//! freed-core pressure, through [`coordinator::ServingPool::set_workers`].
+//! Requests can jump the batch queue through the priority lane
+//! ([`coordinator::ServingPool::submit_priority`]).
 
 pub mod baselines;
 pub mod compress;
@@ -61,5 +78,6 @@ pub mod optimizer;
 pub mod partition;
 pub mod profiler;
 pub mod runtime;
+pub mod telemetry;
 pub mod transform;
 pub mod util;

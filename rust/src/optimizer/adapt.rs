@@ -1,21 +1,29 @@
-//! The automated cross-level adaptation loop (Sec. III-D, Fig. 6):
-//! monitor → profiler → optimizer → actuate, at a fixed tick rate
-//! (~1 Hz in the paper).
+//! The automated cross-level adaptation control plane (Sec. III-D,
+//! Fig. 6): monitor → profiler → optimizer → actuate, at a fixed tick
+//! rate (~1 Hz in the paper) — now closed over *measured* serving
+//! performance, not just predictions.
 //!
 //! Each tick: sample the resource monitor; re-cost the current Pareto
 //! front under the live snapshot (Eq. 1/2 respond to DVFS/contention);
-//! derive μ from battery via AHP; filter by the time/memory budgets of
-//! Eq. 3; pick the arg-max of `μ·Norm(A) − (1−μ)·Norm(E)`; if even the
-//! best on-device point violates budgets and a peer exists, fall back to
-//! offloading (Sec. III-B); apply hysteresis so the system doesn't
-//! thrash between near-equal configurations.
+//! **correct every latency prediction with the calibrator's measured
+//! observed/predicted ratio** (the back-end→front-end feedback the paper
+//! names as the hard part of cross-level co-adaptation); derive μ from
+//! battery via AHP; filter by the time/memory budgets of Eq. 3; pick the
+//! arg-max of `μ·Norm(A) − (1−μ)·Norm(E)`; if even the best on-device
+//! point violates budgets and a peer exists, fall back to offloading
+//! (Sec. III-B); apply hysteresis so the system doesn't thrash between
+//! near-equal configurations. When a [`TelemetrySnapshot`] is supplied,
+//! the tick also runs the AIMD [`PoolSizer`] and actuates pool width
+//! through [`Actuator::set_workers`].
 
 use crate::device::{ResourceMonitor, ResourceSnapshot};
 use crate::graph::Graph;
 use crate::partition::{plan_offload, prepartition, DeviceState, OffloadPlan, Topology};
+use crate::telemetry::TelemetrySnapshot;
 
 use super::ahp::mu_from_context;
-use super::candidate::{evaluate, Candidate, Evaluated, Prepared};
+use super::candidate::{Candidate, Evaluated, Prepared};
+use super::control::{LatencyCalibrator, PoolSizer, PoolSizerConfig};
 
 /// Application budgets (Eq. 3 constraints).
 #[derive(Debug, Clone, Copy)]
@@ -30,20 +38,30 @@ impl Budgets {
     }
 }
 
-/// Serving-side actuation point for the loop's decisions: anything that
-/// can atomically switch the live serving configuration. The serving
-/// pool implements this by broadcasting a generation-tagged switch to
-/// every worker and blocking for acknowledgements, so by the time
-/// `actuate` returns no worker serves a stale variant.
+/// Serving-side actuation surface for the loop's decisions: anything that
+/// can atomically switch the live serving configuration and (optionally)
+/// resize its worker set. The serving pool implements both: variant
+/// switches broadcast a generation-tagged message to every worker and
+/// block for acknowledgements, so by the time `actuate` returns no worker
+/// serves a stale variant; `set_workers` spawns or drains+retires workers
+/// in place.
 pub trait Actuator {
     /// Switch serving to `variant`; returns an implementation-defined
     /// generation/sequence number for the switch.
     fn actuate(&self, variant: &str) -> u64;
+
+    /// Resize the serving pool to `n` workers; returns the applied width.
+    /// Fixed-width actuators return their current width unchanged.
+    fn set_workers(&self, n: usize) -> usize;
 }
 
 impl Actuator for crate::coordinator::ServingPool {
     fn actuate(&self, variant: &str) -> u64 {
         self.switch_variant(variant)
+    }
+
+    fn set_workers(&self, n: usize) -> usize {
+        crate::coordinator::ServingPool::set_workers(self, n)
     }
 }
 
@@ -102,6 +120,10 @@ pub struct AdaptLoop {
     /// Per-candidate prepared state (variant+fusion+arena), built lazily
     /// on the first tick — the per-tick cost is then profiling only.
     prepared: Vec<Prepared>,
+    /// Online observed/predicted latency corrector, fed from telemetry.
+    pub calibrator: LatencyCalibrator,
+    /// AIMD pool-width controller; `None` leaves width alone.
+    pub sizer: Option<PoolSizer>,
 }
 
 impl AdaptLoop {
@@ -120,12 +142,20 @@ impl AdaptLoop {
             log: Vec::new(),
             tick_no: 0,
             prepared: Vec::new(),
+            calibrator: LatencyCalibrator::default(),
+            sizer: None,
         }
     }
 
     pub fn with_peers(mut self, peers: Vec<DeviceState>, topology: Topology) -> Self {
         self.peers = peers;
         self.topology = topology;
+        self
+    }
+
+    /// Enable AIMD pool sizing on telemetry-fed ticks.
+    pub fn with_sizer(mut self, cfg: PoolSizerConfig) -> Self {
+        self.sizer = Some(PoolSizer::new(cfg));
         self
     }
 
@@ -147,25 +177,65 @@ impl AdaptLoop {
             .collect()
     }
 
-    /// Run one adaptation tick against a monitor snapshot.
+    /// Apply the calibrator's measured correction to one evaluation.
+    fn calibrate(&self, e: &mut Evaluated) {
+        let label = e.candidate.spec.detailed_label();
+        e.metrics.latency_s = self.calibrator.calibrated(&label, e.metrics.latency_s);
+    }
+
+    /// Run one adaptation tick against a monitor snapshot (prediction-only
+    /// path; calibration ratios learned earlier still apply).
     pub fn tick(&mut self, snap: &ResourceSnapshot) -> Decision {
+        self.tick_inner(snap, None)
+    }
+
+    /// Run one adaptation tick with measured serving telemetry: fresh
+    /// per-variant latency measurements feed the calibrator *before*
+    /// candidate scoring, so feasibility and choice respond to what the
+    /// pool actually delivers rather than what Eq. 2 predicts.
+    pub fn tick_telemetry(&mut self, snap: &ResourceSnapshot, tel: &TelemetrySnapshot) -> Decision {
+        self.tick_inner(snap, Some(tel))
+    }
+
+    fn tick_inner(&mut self, snap: &ResourceSnapshot, tel: Option<&TelemetrySnapshot>) -> Decision {
         self.tick_no += 1;
         let mem_budget = self.budgets.memory_bytes.min(snap.mem_budget_bytes);
         if self.prepared.len() != self.front.len() {
             self.prepared = self.front.iter().map(|c| Prepared::new(&self.base, c)).collect();
         }
-        let evals: Vec<Evaluated> = self
+        let mut evals: Vec<Evaluated> = self
             .prepared
             .iter()
             .map(|p| p.evaluate(self.base_acc, snap, self.drift, self.tta, self.tta))
             .collect();
+
+        // Back-end → front-end feedback: ingest fresh measurements for any
+        // candidate the pool served since the last tick, then correct every
+        // raw Eq. 2 prediction with its measured ratio. Candidates with no
+        // fresh samples (not currently deployed) have their learned ratio
+        // relaxed toward 1.0 instead, so a penalty from one pathological
+        // window cannot freeze a variant out of the feasible set forever.
+        if let Some(tel) = tel {
+            for e in &evals {
+                let label = e.candidate.spec.detailed_label();
+                let fresh = tel.per_variant.get(&label).is_some_and(|v| {
+                    self.calibrator.observe_if_new(&label, v.count, v.p50_s, e.metrics.latency_s)
+                });
+                if !fresh {
+                    self.calibrator.relax(&label);
+                }
+            }
+        }
+        for e in &mut evals {
+            self.calibrate(e);
+        }
 
         let mem_pressure = 1.0 - (snap.context.mem_avail_frac).clamp(0.0, 1.0);
         let latency_pressure = if self.budgets.latency_s.is_finite() { 0.6 } else { 0.2 };
         let mu = mu_from_context(snap.battery, mem_pressure, latency_pressure);
         let scores = Self::scores(&evals, mu);
 
-        // Feasible on-device candidates.
+        // Feasible on-device candidates (against *calibrated* latency).
         let feasible: Vec<usize> = (0..evals.len())
             .filter(|&i| {
                 evals[i].metrics.latency_s <= self.budgets.latency_s
@@ -182,8 +252,21 @@ impl AdaptLoop {
                 Some(cur) if cur.candidate == chosen.candidate => Decision::Hold,
                 Some(cur) => {
                     // Hysteresis: only switch for a clear improvement or if
-                    // the current config became infeasible.
-                    let cur_eval = evaluate(&self.base, &cur.candidate, self.base_acc, snap, self.drift, self.tta);
+                    // the current config became infeasible (also judged on
+                    // calibrated latency). The current candidate is almost
+                    // always a member of the front, whose calibrated eval
+                    // already exists — only rebuild prepared state when it
+                    // fell out of the front (keeps the per-tick cost to
+                    // profiling only, as the prepared cache promises).
+                    let cur_eval = match self.front.iter().position(|c| c == &cur.candidate) {
+                        Some(i) => evals[i].clone(),
+                        None => {
+                            let mut e = Prepared::new(&self.base, &cur.candidate)
+                                .evaluate(self.base_acc, snap, self.drift, self.tta, self.tta);
+                            self.calibrate(&mut e);
+                            e
+                        }
+                    };
                     let cur_feasible = cur_eval.metrics.latency_s <= self.budgets.latency_s
                         && cur_eval.metrics.memory_bytes <= mem_budget;
                     let mut pool = evals.clone();
@@ -244,6 +327,16 @@ impl AdaptLoop {
         decision
     }
 
+    /// Push a configuration-changing decision to the serving layer.
+    fn actuate_decision(&self, decision: &Decision, actuator: &dyn Actuator) {
+        match decision {
+            Decision::Hold => {}
+            Decision::Switch(e) | Decision::Offload(e, _) | Decision::BestEffort(e) => {
+                actuator.actuate(&e.candidate.spec.detailed_label());
+            }
+        }
+    }
+
     /// Tick and actuate: like [`AdaptLoop::tick`], but any decision that
     /// changes the serving configuration (`Switch`, `Offload`,
     /// `BestEffort`) is pushed to the serving layer before returning —
@@ -252,10 +345,26 @@ impl AdaptLoop {
     /// re-actuate.
     pub fn tick_with(&mut self, snap: &ResourceSnapshot, actuator: &dyn Actuator) -> Decision {
         let decision = self.tick(snap);
-        match &decision {
-            Decision::Hold => {}
-            Decision::Switch(e) | Decision::Offload(e, _) | Decision::BestEffort(e) => {
-                actuator.actuate(&e.candidate.spec.detailed_label());
+        self.actuate_decision(&decision, actuator);
+        decision
+    }
+
+    /// The fully closed cross-level loop: tick with measured telemetry,
+    /// actuate the variant decision, then run the AIMD sizer (if
+    /// configured) and actuate pool width through
+    /// [`Actuator::set_workers`]. This is the Fig. 6
+    /// Observe→Decide→Act cycle with both actuation arms live.
+    pub fn tick_with_telemetry(
+        &mut self,
+        snap: &ResourceSnapshot,
+        tel: &TelemetrySnapshot,
+        actuator: &dyn Actuator,
+    ) -> Decision {
+        let decision = self.tick_telemetry(snap, tel);
+        self.actuate_decision(&decision, actuator);
+        if let Some(sizer) = &mut self.sizer {
+            if let Some(target) = sizer.decide(tel, snap, self.budgets.latency_s).target() {
+                actuator.set_workers(target);
             }
         }
         decision
@@ -283,6 +392,7 @@ mod tests {
     use crate::engine::EngineConfig;
     use crate::models::{resnet18, ResNetStyle};
     use crate::optimizer::evolution::{search, SearchConfig};
+    use crate::telemetry::VariantView;
 
     fn small_front() -> Vec<Candidate> {
         vec![
@@ -401,6 +511,16 @@ mod tests {
     /// Records every actuation, like the serving pool but inspectable.
     struct RecordingActuator {
         switched: std::sync::Mutex<Vec<String>>,
+        resized: std::sync::Mutex<Vec<usize>>,
+    }
+
+    impl RecordingActuator {
+        fn new() -> RecordingActuator {
+            RecordingActuator {
+                switched: std::sync::Mutex::new(Vec::new()),
+                resized: std::sync::Mutex::new(Vec::new()),
+            }
+        }
     }
 
     impl Actuator for RecordingActuator {
@@ -409,12 +529,17 @@ mod tests {
             v.push(variant.to_string());
             v.len() as u64
         }
+
+        fn set_workers(&self, n: usize) -> usize {
+            self.resized.lock().unwrap().push(n);
+            n
+        }
     }
 
     #[test]
     fn tick_with_actuates_switch_but_not_hold() {
         let mut l = mk_loop(Budgets::unconstrained());
-        let act = RecordingActuator { switched: std::sync::Mutex::new(Vec::new()) };
+        let act = RecordingActuator::new();
         let snap = ResourceMonitor::new(device("raspberrypi-4b").unwrap()).idle_snapshot();
         // First tick switches → one actuation carrying the chosen label.
         match l.tick_with(&snap, &act) {
@@ -487,5 +612,78 @@ mod tests {
         let mut l = AdaptLoop::new(g, 76.23, cands, Budgets::unconstrained());
         l.tick(&snap);
         assert!(l.current().is_some());
+    }
+
+    // ── measured-feedback control plane ───────────────────────────────
+
+    /// Fabricate a telemetry snapshot reporting `measured_s` for `label`.
+    fn tel_for(label: &str, count: usize, measured_s: f64) -> TelemetrySnapshot {
+        let mut tel = TelemetrySnapshot::default();
+        tel.per_variant.insert(
+            label.to_string(),
+            VariantView { count, p50_s: measured_s, p95_s: measured_s, mean_s: measured_s },
+        );
+        tel
+    }
+
+    /// The calibrator evicts a variant whose *measured* latency violates
+    /// the budget even though its predicted latency fits: the loop must
+    /// abandon it once telemetry arrives.
+    #[test]
+    fn measured_violation_evicts_predicted_feasible_choice() {
+        let snap = ResourceMonitor::new(device("raspberrypi-4b").unwrap()).idle_snapshot();
+        // Establish the first choice and its predicted cost under a huge
+        // but *finite* budget — finiteness feeds the AHP latency pressure,
+        // so this probe scores candidates exactly like the loop below.
+        let mut probe = mk_loop(Budgets { latency_s: 1e9, memory_bytes: f64::INFINITY });
+        probe.tick(&snap);
+        let first = probe.current().unwrap().clone();
+        let first_label = first.candidate.spec.detailed_label();
+        let predicted = first.metrics.latency_s;
+
+        // Budget comfortably above the prediction: the same candidate is
+        // chosen initially under the constrained loop too.
+        let mut l = mk_loop(Budgets { latency_s: predicted * 2.0, memory_bytes: f64::INFINITY });
+        l.tick(&snap);
+        assert_eq!(l.current().unwrap().candidate, first.candidate);
+
+        // Telemetry reports the deployed variant actually runs 5× over
+        // its prediction — far past the budget.
+        let mut converged = None;
+        for tick in 1..=6 {
+            let tel = tel_for(&first_label, tick * 8, predicted * 5.0);
+            l.tick_telemetry(&snap, &tel);
+            let now = l.current().unwrap().candidate.spec.detailed_label();
+            if now != first_label {
+                converged = Some(tick);
+                break;
+            }
+        }
+        let tick = converged.expect("measured violation must evict the mispredicted choice");
+        assert!(tick <= 4, "eviction took {tick} ticks");
+        // And the replacement's calibrated latency fits the budget.
+        assert!(l.current().unwrap().metrics.latency_s <= predicted * 2.0);
+    }
+
+    /// The sizer arm of tick_with_telemetry actuates set_workers.
+    #[test]
+    fn telemetry_tick_actuates_pool_width() {
+        let snap = ResourceMonitor::new(device("raspberrypi-4b").unwrap()).idle_snapshot();
+        let mut l = mk_loop(Budgets::unconstrained()).with_sizer(PoolSizerConfig::default());
+        let act = RecordingActuator::new();
+        // High occupancy, no rejections: grow.
+        let mut tel = TelemetrySnapshot { live_workers: 1, queue_capacity: 16, queue_depth: 12, ..TelemetrySnapshot::default() };
+        l.tick_with_telemetry(&snap, &tel, &act);
+        assert_eq!(act.resized.lock().unwrap().as_slice(), &[2]);
+        // Fresh rejections: multiplicative shrink.
+        tel.live_workers = 4;
+        tel.rejected = 10;
+        l.tick_with_telemetry(&snap, &tel, &act);
+        assert_eq!(act.resized.lock().unwrap().as_slice(), &[2, 2]);
+        // Without a sizer, width is never touched.
+        let mut plain = mk_loop(Budgets::unconstrained());
+        let act2 = RecordingActuator::new();
+        plain.tick_with_telemetry(&snap, &tel, &act2);
+        assert!(act2.resized.lock().unwrap().is_empty());
     }
 }

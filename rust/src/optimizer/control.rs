@@ -1,0 +1,402 @@
+//! Measured-feedback controllers for the adaptation loop (the "Decide"
+//! half of the cross-level telemetry bus):
+//!
+//! - [`LatencyCalibrator`] — an online corrector for the profiler's
+//!   Eq. 2 latency predictions. Analytical cost models drift from the
+//!   device's real behavior (unmodeled cache effects, thermal floors,
+//!   batcher overhead); the calibrator tracks an EWMA of the
+//!   observed/predicted ratio *per variant* and scales every prediction
+//!   before candidate scoring, so budget feasibility is judged against
+//!   what the serving pool actually measures.
+//! - [`PoolSizer`] — an AIMD controller for serving-pool width:
+//!   additively grow while measured p95 is inside the latency budget and
+//!   queue occupancy is high, multiplicatively shrink on admission
+//!   rejections (the congestion signal: the cores can't absorb more
+//!   concurrency) or when the device monitor reports fewer free cores
+//!   than live workers.
+//!
+//! Both consume the [`TelemetrySnapshot`] published by the serving pool's
+//! workers — decisions come from measurements, not from predictions.
+
+use std::collections::HashMap;
+
+use crate::device::ResourceSnapshot;
+use crate::telemetry::{Ewma, TelemetrySnapshot};
+
+/// Per-idle-tick weight pulling an unmeasured variant's ratio back
+/// toward 1.0 (see [`LatencyCalibrator::relax`]).
+const RATIO_RELAX_WEIGHT: f64 = 0.05;
+
+/// Online corrector: per-variant EWMA of measured/predicted latency.
+#[derive(Debug, Clone)]
+pub struct LatencyCalibrator {
+    alpha: f64,
+    /// Ratios are clamped into this band before entering the EWMA so one
+    /// pathological batch (GC pause, cold PJRT compile) cannot poison the
+    /// correction.
+    clamp: (f64, f64),
+    ratios: HashMap<String, Ewma>,
+    /// Last seen per-variant measurement count — only *fresh* samples
+    /// feed the EWMA, so idle ticks don't re-observe a stale window.
+    seen: HashMap<String, usize>,
+}
+
+impl Default for LatencyCalibrator {
+    fn default() -> Self {
+        LatencyCalibrator::new(0.4)
+    }
+}
+
+impl LatencyCalibrator {
+    pub fn new(alpha: f64) -> LatencyCalibrator {
+        LatencyCalibrator { alpha, clamp: (0.05, 20.0), ratios: HashMap::new(), seen: HashMap::new() }
+    }
+
+    /// Feed one measured-vs-predicted observation for `variant`.
+    pub fn observe(&mut self, variant: &str, measured_s: f64, predicted_s: f64) {
+        if measured_s <= 0.0 || predicted_s <= 0.0 || !measured_s.is_finite() || !predicted_s.is_finite() {
+            return;
+        }
+        let ratio = (measured_s / predicted_s).clamp(self.clamp.0, self.clamp.1);
+        let alpha = self.alpha;
+        self.ratios.entry(variant.to_string()).or_insert_with(|| Ewma::new(alpha)).observe(ratio);
+    }
+
+    /// Observe only if `total_samples` (a monotonic per-variant count from
+    /// the telemetry snapshot) advanced since the last call — the per-tick
+    /// ingestion path. Returns whether an observation was taken.
+    pub fn observe_if_new(
+        &mut self,
+        variant: &str,
+        total_samples: usize,
+        measured_s: f64,
+        predicted_s: f64,
+    ) -> bool {
+        if total_samples == 0 {
+            return false;
+        }
+        let seen = self.seen.entry(variant.to_string()).or_insert(0);
+        if total_samples <= *seen {
+            return false;
+        }
+        *seen = total_samples;
+        self.observe(variant, measured_s, predicted_s);
+        true
+    }
+
+    /// Per-tick relaxation for a variant that produced *no* fresh
+    /// measurements this tick (it is not deployed): nudge its learned
+    /// ratio toward 1.0. Without this, one pathological window (thermal
+    /// throttle, cold compile) could evict a variant forever — it never
+    /// redeploys, so no fresh samples ever correct the stale penalty.
+    /// With the default weight, a 20× spike relaxes to ~2× in about a
+    /// minute of 1 Hz ticks, at which point the variant can re-enter the
+    /// feasible set and be re-measured for real.
+    pub fn relax(&mut self, variant: &str) {
+        if let Some(e) = self.ratios.get_mut(variant) {
+            e.decay_toward(1.0, RATIO_RELAX_WEIGHT);
+        }
+    }
+
+    /// Current correction factor for `variant` (1.0 until measured).
+    pub fn ratio(&self, variant: &str) -> f64 {
+        self.ratios.get(variant).and_then(|e| e.value()).unwrap_or(1.0)
+    }
+
+    /// Correct a raw Eq. 2 prediction with the measured ratio.
+    pub fn calibrated(&self, variant: &str, predicted_s: f64) -> f64 {
+        predicted_s * self.ratio(variant)
+    }
+
+    /// Variants with at least one measured observation.
+    pub fn calibrated_variants(&self) -> usize {
+        self.ratios.len()
+    }
+}
+
+/// AIMD sizing knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct PoolSizerConfig {
+    pub min_workers: usize,
+    pub max_workers: usize,
+    /// Additive-increase step per tick.
+    pub grow_step: usize,
+    /// Multiplicative-decrease factor on congestion (0 < f < 1).
+    pub shrink_factor: f64,
+    /// Grow only when queue occupancy (backlog / capacity) is above this.
+    pub occupancy_grow: f64,
+}
+
+impl Default for PoolSizerConfig {
+    fn default() -> Self {
+        PoolSizerConfig {
+            min_workers: 1,
+            max_workers: 16,
+            grow_step: 1,
+            shrink_factor: 0.5,
+            occupancy_grow: 0.25,
+        }
+    }
+}
+
+/// What the sizer wants the pool width to become.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SizeDecision {
+    Hold,
+    /// Grow to this worker count (additive increase).
+    Grow(usize),
+    /// Shrink to this worker count (multiplicative decrease).
+    Shrink(usize),
+}
+
+impl SizeDecision {
+    /// The target width, if the decision changes anything.
+    pub fn target(self) -> Option<usize> {
+        match self {
+            SizeDecision::Hold => None,
+            SizeDecision::Grow(n) | SizeDecision::Shrink(n) => Some(n),
+        }
+    }
+}
+
+/// The AIMD pool-width controller. Stateful: it differences rejection
+/// totals between ticks (rejections are monotonic counters in telemetry).
+#[derive(Debug, Clone)]
+pub struct PoolSizer {
+    pub cfg: PoolSizerConfig,
+    last_rejected: Option<usize>,
+}
+
+impl PoolSizer {
+    pub fn new(cfg: PoolSizerConfig) -> PoolSizer {
+        PoolSizer { cfg, last_rejected: None }
+    }
+
+    /// Free cores on the device right now: total cores minus competing
+    /// foreground processes (the monitor's freed-core signal).
+    fn free_cores(&self, snap: &ResourceSnapshot) -> usize {
+        let cores = crate::device::device(&snap.device).map(|d| d.cores).unwrap_or(self.cfg.max_workers);
+        cores.saturating_sub(snap.context.competing_procs).max(1)
+    }
+
+    /// One sizing decision from measured telemetry + the device monitor.
+    /// `latency_budget_s` is the application budget p95 is held against
+    /// (`f64::INFINITY` when unconstrained).
+    pub fn decide(
+        &mut self,
+        tel: &TelemetrySnapshot,
+        snap: &ResourceSnapshot,
+        latency_budget_s: f64,
+    ) -> SizeDecision {
+        let cur = tel.live_workers.max(1);
+        let new_rejects = match self.last_rejected {
+            Some(prev) => tel.rejected.saturating_sub(prev),
+            None => 0, // first tick only baselines the counter
+        };
+        self.last_rejected = Some(tel.rejected);
+
+        let free = self.free_cores(snap);
+        // Multiplicative decrease: congestion (rejections mean the bounded
+        // queues overflowed — more threads on the same cores won't help)
+        // or the monitor reclaimed cores out from under us.
+        if new_rejects > 0 || cur > free {
+            let target = ((cur as f64) * self.cfg.shrink_factor).floor() as usize;
+            let target = target.max(self.cfg.min_workers).min(cur);
+            return if target < cur { SizeDecision::Shrink(target) } else { SizeDecision::Hold };
+        }
+        // Additive increase: backlog is real (occupancy high), measured
+        // tail latency still inside budget, and there are cores to take.
+        // Note the deliberate AIMD conservatism: when queue wait has
+        // already pushed end-to-end p95 *over* budget, the sizer holds
+        // rather than grows — capacity added mid-violation tends to
+        // oscillate; the backlog either drains (p95 re-enters budget and
+        // growth resumes) or overflows into rejections (multiplicative
+        // decrease sheds load instead).
+        if tel.occupancy() >= self.cfg.occupancy_grow
+            && tel.p95_s <= latency_budget_s
+            && cur < self.cfg.max_workers.min(free)
+        {
+            let target = (cur + self.cfg.grow_step).min(self.cfg.max_workers).min(free);
+            return SizeDecision::Grow(target);
+        }
+        SizeDecision::Hold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{device, ResourceMonitor};
+    use crate::telemetry::TelemetrySnapshot;
+
+    // ── calibrator ─────────────────────────────────────────────────────
+
+    /// A cost model mispredicting by 2× is corrected within a handful of
+    /// observations: the calibrated prediction converges to the measured
+    /// value.
+    #[test]
+    fn calibrator_corrects_2x_misprediction_within_ticks() {
+        let mut c = LatencyCalibrator::new(0.5);
+        let predicted = 0.010; // model claims 10 ms
+        let measured = 0.020; // device delivers 20 ms
+        assert!((c.calibrated("v", predicted) - predicted).abs() < 1e-12, "uncalibrated = raw");
+        let mut ticks = 0;
+        for tick in 1..=8 {
+            c.observe_if_new("v", tick * 4, measured, predicted);
+            ticks = tick;
+            if (c.calibrated("v", predicted) - measured).abs() / measured < 0.05 {
+                break;
+            }
+        }
+        assert!(ticks <= 5, "2× misprediction must be corrected within 5 ticks, took {ticks}");
+        assert!((c.ratio("v") - 2.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn calibrator_ignores_stale_windows() {
+        let mut c = LatencyCalibrator::new(1.0);
+        assert!(c.observe_if_new("v", 10, 0.02, 0.01));
+        // Same total count again: the window has no fresh samples.
+        assert!(!c.observe_if_new("v", 10, 0.08, 0.01));
+        assert!((c.ratio("v") - 2.0).abs() < 1e-9);
+        // New samples arrive: observed.
+        assert!(c.observe_if_new("v", 11, 0.04, 0.01));
+        assert!((c.ratio("v") - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn calibrator_is_per_variant_and_clamped() {
+        let mut c = LatencyCalibrator::new(1.0);
+        c.observe("slow", 0.040, 0.010);
+        c.observe("honest", 0.010, 0.010);
+        assert!((c.ratio("slow") - 4.0).abs() < 1e-9);
+        assert!((c.ratio("honest") - 1.0).abs() < 1e-9);
+        assert!((c.ratio("unseen") - 1.0).abs() < 1e-9);
+        // Pathological observations clamp instead of poisoning.
+        c.observe("spike", 1000.0, 0.001);
+        assert!(c.ratio("spike") <= 20.0 + 1e-9);
+        c.observe("zero", 0.0, 0.01); // ignored
+        assert!((c.ratio("zero") - 1.0).abs() < 1e-9);
+    }
+
+    /// A penalty learned from one pathological window decays once the
+    /// variant stops being measured, so it can re-enter the feasible set
+    /// and be re-probed instead of being evicted forever.
+    #[test]
+    fn calibrator_relaxes_stale_penalties() {
+        let mut c = LatencyCalibrator::new(0.4);
+        c.observe("v", 0.2, 0.01); // 20× spike, clamped at the band edge
+        assert!(c.ratio("v") >= 19.9);
+        let mut ticks = 0;
+        while c.ratio("v") > 2.0 {
+            c.relax("v");
+            ticks += 1;
+            assert!(ticks < 100, "penalty must decay within ~a minute of 1 Hz ticks");
+        }
+        assert!(ticks >= 10, "decay is gradual, not a reset: took {ticks}");
+        // Unmeasured variants are untouched by relax.
+        c.relax("never-seen");
+        assert!((c.ratio("never-seen") - 1.0).abs() < 1e-12);
+    }
+
+    // ── AIMD sizer ─────────────────────────────────────────────────────
+
+    fn rpi_snap() -> ResourceSnapshot {
+        ResourceMonitor::new(device("raspberrypi-4b").unwrap()).idle_snapshot()
+    }
+
+    fn tel(live: usize, capacity: usize, depth: usize, rejected: usize, p95_s: f64) -> TelemetrySnapshot {
+        TelemetrySnapshot {
+            live_workers: live,
+            queue_capacity: capacity,
+            queue_depth: depth,
+            rejected,
+            p95_s,
+            ..TelemetrySnapshot::default()
+        }
+    }
+
+    /// Additive growth episode: sustained backlog with p95 in budget
+    /// grows one worker per tick until the device's cores are covered.
+    #[test]
+    fn aimd_grows_additively_under_sustained_load() {
+        let mut s = PoolSizer::new(PoolSizerConfig { max_workers: 8, ..PoolSizerConfig::default() });
+        let snap = rpi_snap(); // 4 cores, idle
+        let mut widths = vec![1usize];
+        let mut live = 1usize;
+        for _ in 0..6 {
+            match s.decide(&tel(live, 16, 12, 0, 0.005), &snap, 1.0) {
+                SizeDecision::Grow(n) => {
+                    assert_eq!(n, live + 1, "additive increase is one step per tick");
+                    live = n;
+                }
+                SizeDecision::Hold => {}
+                d => panic!("unexpected {d:?}"),
+            }
+            widths.push(live);
+        }
+        assert_eq!(live, 4, "growth must stop at the device's free cores");
+        assert_eq!(widths, vec![1, 2, 3, 4, 4, 4, 4]);
+    }
+
+    /// Multiplicative shrink episode: fresh rejections halve the pool,
+    /// repeated congestion walks it down to the floor.
+    #[test]
+    fn aimd_shrinks_multiplicatively_on_rejections() {
+        let mut s = PoolSizer::new(PoolSizerConfig::default());
+        let snap = rpi_snap();
+        // Baseline tick: rejected=0 so far.
+        assert_eq!(s.decide(&tel(4, 16, 0, 0, 0.005), &snap, 1.0), SizeDecision::Hold);
+        // 10 new rejections since the last tick → halve.
+        assert_eq!(s.decide(&tel(4, 16, 0, 10, 0.005), &snap, 1.0), SizeDecision::Shrink(2));
+        // More congestion → halve again.
+        assert_eq!(s.decide(&tel(2, 16, 0, 25, 0.005), &snap, 1.0), SizeDecision::Shrink(1));
+        // At the floor: congestion can no longer shrink.
+        assert_eq!(s.decide(&tel(1, 16, 0, 40, 0.005), &snap, 1.0), SizeDecision::Hold);
+        // Congestion cleared, backlog builds again → regrow.
+        assert_eq!(s.decide(&tel(1, 16, 12, 40, 0.005), &snap, 1.0), SizeDecision::Grow(2));
+    }
+
+    /// First decide() only baselines the rejection counter: a pool that
+    /// *already* rejected before the sizer attached must not shrink on
+    /// stale history.
+    #[test]
+    fn aimd_baselines_rejections_on_first_tick() {
+        let mut s = PoolSizer::new(PoolSizerConfig::default());
+        let snap = rpi_snap();
+        assert_eq!(s.decide(&tel(4, 16, 0, 500, 0.005), &snap, 1.0), SizeDecision::Hold);
+    }
+
+    /// Freed-core pressure: when competing processes eat the cores, the
+    /// sizer backs off even with zero rejections.
+    #[test]
+    fn aimd_shrinks_on_core_contention() {
+        let mut s = PoolSizer::new(PoolSizerConfig::default());
+        let mon = ResourceMonitor::new(device("raspberrypi-4b").unwrap());
+        let mut ctx = crate::device::ContextState::idle();
+        ctx.competing_procs = 3; // 4 cores − 3 = 1 free
+        let snap = mon.sample(&ctx);
+        s.decide(&tel(4, 16, 0, 0, 0.005), &snap, 1.0); // baseline
+        assert_eq!(s.decide(&tel(4, 16, 0, 0, 0.005), &snap, 1.0), SizeDecision::Shrink(2));
+    }
+
+    /// No growth past the latency budget: a backlog with p95 already over
+    /// budget holds instead of adding workers.
+    #[test]
+    fn aimd_holds_when_p95_over_budget() {
+        let mut s = PoolSizer::new(PoolSizerConfig::default());
+        let snap = rpi_snap();
+        s.decide(&tel(2, 16, 12, 0, 0.5), &snap, 0.1); // baseline
+        assert_eq!(s.decide(&tel(2, 16, 12, 0, 0.5), &snap, 0.1), SizeDecision::Hold);
+        // Same backlog inside budget grows.
+        assert_eq!(s.decide(&tel(2, 16, 12, 0, 0.05), &snap, 0.1), SizeDecision::Grow(3));
+    }
+
+    #[test]
+    fn aimd_holds_with_idle_queues() {
+        let mut s = PoolSizer::new(PoolSizerConfig::default());
+        let snap = rpi_snap();
+        s.decide(&tel(2, 16, 0, 0, 0.005), &snap, 1.0);
+        assert_eq!(s.decide(&tel(2, 16, 0, 0, 0.005), &snap, 1.0), SizeDecision::Hold);
+    }
+}

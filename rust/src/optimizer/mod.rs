@@ -1,14 +1,18 @@
 //! The automated loop for cross-level co-adaptation (Sec. III-D):
 //! candidates spanning (θp, θo, θs), the offline evolutionary Pareto
 //! search, AHP-based online importance weighting, and the tick-driven
-//! adaptation controller.
+//! adaptation control plane — which closes the loop over *measured*
+//! serving telemetry via the [`control`] module's latency calibrator and
+//! AIMD pool sizer.
 
 pub mod adapt;
 pub mod ahp;
 pub mod candidate;
+pub mod control;
 pub mod evolution;
 
 pub use adapt::{Actuator, AdaptLoop, Budgets, Decision, TickLog};
 pub use ahp::{consistency_ratio, context_matrix, mu_from_context, weights as ahp_weights};
 pub use candidate::{evaluate, evaluate_as, Candidate, Evaluated, Prepared};
+pub use control::{LatencyCalibrator, PoolSizer, PoolSizerConfig, SizeDecision};
 pub use evolution::{dominates, pareto_front, search, SearchConfig};

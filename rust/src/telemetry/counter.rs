@@ -1,0 +1,121 @@
+//! Monotonic counters and gauges: the cheapest telemetry primitives.
+//!
+//! Counters only ever grow (served, batches, rejections); gauges move in
+//! both directions (queue depth). Both are plain relaxed atomics — a
+//! worker touching one on its hot path pays a single uncontended RMW, and
+//! the control plane reads them without any coordination. Cross-counter
+//! consistency is *not* guaranteed within one snapshot; the adaptation
+//! loop differences successive snapshots instead of trusting instants.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// A monotonically increasing counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicUsize);
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter(AtomicUsize::new(0))
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: usize) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> usize {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A gauge: an instantaneous level that rises and falls (queue depth).
+/// `inc`/`dec` pair across threads; `dec` saturates at zero rather than
+/// wrapping if an accounting bug ever double-decrements.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicUsize);
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge(AtomicUsize::new(0))
+    }
+
+    pub fn inc(&self) -> usize {
+        self.0.fetch_add(1, Ordering::AcqRel)
+    }
+
+    pub fn dec(&self) {
+        let mut cur = self.0.load(Ordering::Acquire);
+        while cur > 0 {
+            match self.0.compare_exchange_weak(cur, cur - 1, Ordering::AcqRel, Ordering::Acquire) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Undo a speculative `inc` (admission rollback); identical to `dec`
+    /// but named for the call sites where no request was ever queued.
+    pub fn cancel(&self) {
+        self.dec();
+    }
+
+    pub fn get(&self) -> usize {
+        self.0.load(Ordering::Acquire)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_accumulates() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn gauge_rises_and_falls() {
+        let g = Gauge::new();
+        assert_eq!(g.inc(), 0);
+        assert_eq!(g.inc(), 1);
+        g.dec();
+        assert_eq!(g.get(), 1);
+    }
+
+    #[test]
+    fn gauge_dec_saturates_at_zero() {
+        let g = Gauge::new();
+        g.dec();
+        assert_eq!(g.get(), 0);
+        g.inc();
+        g.dec();
+        g.dec();
+        assert_eq!(g.get(), 0);
+    }
+
+    #[test]
+    fn counter_is_shareable_across_threads() {
+        use std::sync::Arc;
+        let c = Arc::new(Counter::new());
+        let joins: Vec<_> = (0..4)
+            .map(|_| {
+                let c = Arc::clone(&c);
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                })
+            })
+            .collect();
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(c.get(), 4000);
+    }
+}

@@ -1,0 +1,148 @@
+//! Exponentially-weighted moving averages: the smoothing primitive behind
+//! the control plane's rate estimates and the latency calibrator's
+//! observed/predicted ratios.
+//!
+//! An EWMA is the right filter here because the adaptation loop ticks at
+//! a fixed cadence (~1 Hz in the paper) and must both converge fast after
+//! a context shift and reject single-batch noise; `alpha` trades those
+//! directly (weight of the newest observation).
+
+/// Scalar EWMA. Uninitialized until the first observation, so the first
+/// sample sets the value exactly (no bias toward an arbitrary zero).
+#[derive(Debug, Clone)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    /// `alpha` in (0, 1]: weight of the newest observation.
+    pub fn new(alpha: f64) -> Ewma {
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha must be in (0, 1]");
+        Ewma { alpha, value: None }
+    }
+
+    pub fn observe(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(v) => self.alpha * x + (1.0 - self.alpha) * v,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn value(&self) -> Option<f64> {
+        self.value
+    }
+
+    pub fn value_or(&self, default: f64) -> f64 {
+        self.value.unwrap_or(default)
+    }
+
+    /// Relax the current value toward `target` by `weight` ∈ (0, 1]
+    /// without counting it as an observation — the decay step for
+    /// estimates whose signal source has gone quiet (e.g. a variant no
+    /// longer deployed stops producing measurements, but its learned
+    /// penalty must not be frozen forever). No-op while uninitialized.
+    pub fn decay_toward(&mut self, target: f64, weight: f64) {
+        if let Some(v) = self.value {
+            self.value = Some(v + weight.clamp(0.0, 1.0) * (target - v));
+        }
+    }
+}
+
+/// EWMA event-rate meter over a monotonic counter: feed it the counter's
+/// running total plus the elapsed interval, get a smoothed events/second
+/// — for controllers that want a *rate* signal (arrival or rejection
+/// rates between ticks) rather than the raw deltas the AIMD sizer
+/// differences itself.
+#[derive(Debug, Clone)]
+pub struct RateMeter {
+    ewma: Ewma,
+    last_total: Option<usize>,
+}
+
+impl RateMeter {
+    pub fn new(alpha: f64) -> RateMeter {
+        RateMeter { ewma: Ewma::new(alpha), last_total: None }
+    }
+
+    /// Observe the counter's current `total` after `dt_s` seconds since
+    /// the previous observation; returns the smoothed rate. The first
+    /// call only baselines the counter (rate 0 until an interval exists).
+    pub fn observe(&mut self, total: usize, dt_s: f64) -> f64 {
+        let rate = match self.last_total {
+            Some(prev) if dt_s > 0.0 => total.saturating_sub(prev) as f64 / dt_s,
+            _ => {
+                self.last_total = Some(total);
+                return self.ewma.value_or(0.0);
+            }
+        };
+        self.last_total = Some(total);
+        self.ewma.observe(rate)
+    }
+
+    pub fn rate(&self) -> f64 {
+        self.ewma.value_or(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_observation_sets_value_exactly() {
+        let mut e = Ewma::new(0.2);
+        assert_eq!(e.value(), None);
+        assert!((e.observe(10.0) - 10.0).abs() < 1e-12);
+        assert_eq!(e.value(), Some(10.0));
+    }
+
+    /// Convergence: feeding a constant drives the EWMA to that constant
+    /// geometrically — after n steps the residual is (1-alpha)^n of the
+    /// initial gap.
+    #[test]
+    fn converges_geometrically_to_a_constant() {
+        let mut e = Ewma::new(0.5);
+        e.observe(0.0);
+        let mut last = 0.0;
+        for k in 1..=10 {
+            last = e.observe(8.0);
+            let expect_gap = 8.0 * 0.5f64.powi(k);
+            assert!(((8.0 - last) - expect_gap).abs() < 1e-9, "step {k}");
+        }
+        assert!((8.0 - last) < 0.01, "after 10 steps the EWMA must be within 0.01 of 8.0");
+    }
+
+    #[test]
+    fn tracks_a_step_change() {
+        let mut e = Ewma::new(0.3);
+        for _ in 0..50 {
+            e.observe(1.0);
+        }
+        assert!((e.value_or(0.0) - 1.0).abs() < 1e-6);
+        for _ in 0..50 {
+            e.observe(3.0);
+        }
+        assert!((e.value_or(0.0) - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rate_meter_baselines_then_measures() {
+        let mut m = RateMeter::new(1.0);
+        assert_eq!(m.observe(100, 1.0), 0.0, "first call only baselines");
+        assert!((m.observe(150, 1.0) - 50.0).abs() < 1e-9);
+        assert!((m.observe(150, 1.0) - 0.0).abs() < 1e-9, "no new events → rate 0");
+        assert!((m.observe(160, 2.0) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rate_meter_smooths_with_alpha() {
+        let mut m = RateMeter::new(0.5);
+        m.observe(0, 1.0);
+        m.observe(10, 1.0); // rate 10, ewma = 10
+        let r = m.observe(30, 1.0); // rate 20, ewma = 15
+        assert!((r - 15.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,518 @@
+//! The telemetry hub: the lock-cheap rendezvous between the serving
+//! workers (publishers) and the control plane (snapshot consumer).
+//!
+//! Each worker owns an [`WorkerTelemetry`] slot registered with the hub.
+//! On the serving hot path a worker touches only its own slot: relaxed
+//! atomic counters per request and one short `Mutex` lock per *batch* to
+//! push latency samples — no cross-worker contention, no global lock.
+//! The control plane calls [`TelemetryHub::snapshot`] once per adaptation
+//! tick (~1 Hz) and gets a coherent-enough [`TelemetrySnapshot`]: totals,
+//! per-worker views, lane-tagged and per-variant latency percentiles over
+//! the recent window, and queue occupancy.
+//!
+//! Retired workers (the pool shrinks under the AIMD sizer) keep their
+//! slots with `retired = true`: totals stay monotonic across resizes, so
+//! `served + rejected + failed` keeps accounting for every submission the
+//! pool ever admitted or refused.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use super::counter::{Counter, Gauge};
+use super::reservoir::{percentiles_of, Reservoir};
+
+/// Which queue a request rode through the batcher: the normal lane or the
+/// high-priority lane that is drained first (latency-critical requests).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Lane {
+    #[default]
+    Normal = 0,
+    High = 1,
+}
+
+pub const LANES: usize = 2;
+
+impl Lane {
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Lane::Normal => "normal",
+            Lane::High => "high",
+        }
+    }
+}
+
+/// One worker's telemetry slot. Counters are relaxed atomics; latency
+/// reservoirs are per-lane mutexes locked once per batch.
+#[derive(Debug)]
+pub struct WorkerTelemetry {
+    /// Pool-assigned worker id (monotonic across dynamic respawns).
+    pub worker: usize,
+    served: [Counter; LANES],
+    batches: Counter,
+    rejected: Counter,
+    failed: Counter,
+    switches: Counter,
+    queue_depth: Gauge,
+    latency: [Mutex<Reservoir>; LANES],
+    /// Measured *execution* latency keyed by the variant that ran it
+    /// (one sample per request, valued at its batch's execution wall
+    /// time — what the request actually waited through, batching-aware)
+    /// — the observation stream the control plane's calibrator consumes.
+    /// Deliberately excludes queue/batch-window wait: congestion is the
+    /// AIMD sizer's signal (occupancy, rejections), and folding it into
+    /// the calibrator would evict variants for backlog the sizer is
+    /// about to absorb. End-to-end latency lives in the lane reservoirs.
+    per_variant: Mutex<BTreeMap<String, Reservoir>>,
+    reservoir_capacity: usize,
+    retired: AtomicBool,
+}
+
+impl WorkerTelemetry {
+    fn new(worker: usize, reservoir_capacity: usize) -> WorkerTelemetry {
+        WorkerTelemetry {
+            worker,
+            served: [Counter::new(), Counter::new()],
+            batches: Counter::new(),
+            rejected: Counter::new(),
+            failed: Counter::new(),
+            switches: Counter::new(),
+            queue_depth: Gauge::new(),
+            latency: [
+                Mutex::new(Reservoir::new(reservoir_capacity)),
+                Mutex::new(Reservoir::new(reservoir_capacity)),
+            ],
+            per_variant: Mutex::new(BTreeMap::new()),
+            reservoir_capacity,
+            retired: AtomicBool::new(false),
+        }
+    }
+
+    // ── publisher side (worker / pool admission) ──────────────────────
+
+    /// Record one executed batch: per-request *end-to-end* latencies
+    /// tagged by lane, plus `exec_s` — the batch's *execution-only* wall
+    /// time, recorded once per request under the variant that ran it
+    /// (the calibrator's congestion-free but batching-aware signal).
+    /// One lock per touched lane plus one for the variant map — per
+    /// batch, not per request.
+    pub fn record_batch(&self, variant: &str, exec_s: f64, samples: &[(Lane, f64)]) {
+        self.batches.inc();
+        let mut lane_counts = [0usize; LANES];
+        for &(lane, _) in samples {
+            lane_counts[lane.index()] += 1;
+        }
+        for (i, &n) in lane_counts.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            self.served[i].add(n);
+            let mut r = self.latency[i].lock().unwrap();
+            for &(lane, lat) in samples {
+                if lane.index() == i {
+                    r.push(lat);
+                }
+            }
+        }
+        let mut per_v = self.per_variant.lock().unwrap();
+        let r = per_v
+            .entry(variant.to_string())
+            .or_insert_with(|| Reservoir::new(self.reservoir_capacity));
+        for _ in samples {
+            r.push(exec_s);
+        }
+    }
+
+    pub fn record_rejected(&self) {
+        self.rejected.inc();
+    }
+
+    pub fn record_failed(&self, n: usize) {
+        self.failed.add(n);
+    }
+
+    pub fn record_switch(&self) {
+        self.switches.inc();
+    }
+
+    /// Admission gauge: returns the pre-increment depth (the admission
+    /// token check the pool's bounded queue relies on).
+    pub fn depth_inc(&self) -> usize {
+        self.queue_depth.inc()
+    }
+
+    pub fn depth_dec(&self) {
+        self.queue_depth.dec()
+    }
+
+    /// Roll back a speculative `depth_inc` that never enqueued.
+    pub fn depth_cancel(&self) {
+        self.queue_depth.cancel()
+    }
+
+    pub fn retire(&self) {
+        self.retired.store(true, Ordering::Release);
+    }
+
+    // ── consumer side (control plane / stats adapters) ────────────────
+
+    pub fn is_retired(&self) -> bool {
+        self.retired.load(Ordering::Acquire)
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue_depth.get()
+    }
+
+    pub fn served(&self, lane: Lane) -> usize {
+        self.served[lane.index()].get()
+    }
+
+    pub fn served_total(&self) -> usize {
+        self.served.iter().map(|c| c.get()).sum()
+    }
+
+    pub fn batches(&self) -> usize {
+        self.batches.get()
+    }
+
+    pub fn rejected(&self) -> usize {
+        self.rejected.get()
+    }
+
+    pub fn failed(&self) -> usize {
+        self.failed.get()
+    }
+
+    pub fn switches(&self) -> usize {
+        self.switches.get()
+    }
+
+    /// Clone of this worker's retained latency window for one lane.
+    pub fn lane_reservoir(&self, lane: Lane) -> Reservoir {
+        self.latency[lane.index()].lock().unwrap().clone()
+    }
+
+    /// All retained latency samples across both lanes (stats adapter).
+    pub fn latency_samples(&self) -> Vec<f64> {
+        let mut out = Vec::new();
+        for lane in &self.latency {
+            out.extend_from_slice(lane.lock().unwrap().samples());
+        }
+        out
+    }
+
+    fn per_variant_clone(&self) -> BTreeMap<String, Reservoir> {
+        self.per_variant.lock().unwrap().clone()
+    }
+}
+
+/// Merged latency view for one lane across all workers.
+#[derive(Debug, Clone, Default)]
+pub struct LaneView {
+    pub served: usize,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+}
+
+/// Measured *execution* latency for one serving variant, merged across
+/// workers (queue wait excluded — see `WorkerTelemetry::record_batch`).
+#[derive(Debug, Clone, Default)]
+pub struct VariantView {
+    /// Total requests ever measured under this variant (monotonic — the
+    /// calibrator uses it to detect fresh observations between ticks).
+    pub count: usize,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub mean_s: f64,
+}
+
+/// One worker's counters at snapshot time.
+#[derive(Debug, Clone, Default)]
+pub struct WorkerView {
+    pub worker: usize,
+    pub retired: bool,
+    pub served: usize,
+    pub batches: usize,
+    pub rejected: usize,
+    pub failed: usize,
+    pub switches: usize,
+    pub queue_depth: usize,
+    pub p50_s: f64,
+    pub p95_s: f64,
+}
+
+/// What the control plane sees each tick: the measured counterpart of the
+/// device monitor's `ResourceSnapshot`.
+#[derive(Debug, Clone)]
+pub struct TelemetrySnapshot {
+    /// Workers currently serving (retired slots excluded).
+    pub live_workers: usize,
+    /// Per-worker bounded queue capacity (for occupancy).
+    pub queue_capacity: usize,
+    /// Admitted-but-unanswered requests across live workers.
+    pub queue_depth: usize,
+    pub served: usize,
+    pub batches: usize,
+    pub rejected: usize,
+    pub failed: usize,
+    pub switches: usize,
+    pub lanes: [LaneView; LANES],
+    pub per_worker: Vec<WorkerView>,
+    pub per_variant: BTreeMap<String, VariantView>,
+    /// Merged percentiles over every worker's recent window, both lanes.
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+    pub mean_batch_size: f64,
+}
+
+impl Default for TelemetrySnapshot {
+    fn default() -> Self {
+        TelemetrySnapshot {
+            live_workers: 0,
+            queue_capacity: 1,
+            queue_depth: 0,
+            served: 0,
+            batches: 0,
+            rejected: 0,
+            failed: 0,
+            switches: 0,
+            lanes: [LaneView::default(), LaneView::default()],
+            per_worker: Vec::new(),
+            per_variant: BTreeMap::new(),
+            p50_s: 0.0,
+            p95_s: 0.0,
+            p99_s: 0.0,
+            mean_batch_size: 0.0,
+        }
+    }
+}
+
+impl TelemetrySnapshot {
+    /// Queue occupancy in [0, 1]: admitted backlog over total live
+    /// capacity. The AIMD sizer's "occupancy is high" signal.
+    pub fn occupancy(&self) -> f64 {
+        let cap = (self.live_workers * self.queue_capacity) as f64;
+        if cap <= 0.0 {
+            0.0
+        } else {
+            (self.queue_depth as f64 / cap).clamp(0.0, 1.0)
+        }
+    }
+}
+
+/// The hub itself: slot registry + snapshot assembly.
+#[derive(Debug)]
+pub struct TelemetryHub {
+    slots: RwLock<Vec<Arc<WorkerTelemetry>>>,
+    queue_capacity: AtomicUsize,
+    reservoir_capacity: usize,
+}
+
+/// Default per-lane / per-variant reservoir size: large enough that test
+/// and bench workloads keep every sample, small enough that a worker's
+/// window stays a few tens of KB.
+pub const DEFAULT_RESERVOIR_CAPACITY: usize = 8192;
+
+impl TelemetryHub {
+    pub fn new(queue_capacity: usize) -> TelemetryHub {
+        TelemetryHub::with_reservoir_capacity(queue_capacity, DEFAULT_RESERVOIR_CAPACITY)
+    }
+
+    pub fn with_reservoir_capacity(queue_capacity: usize, reservoir_capacity: usize) -> TelemetryHub {
+        TelemetryHub {
+            slots: RwLock::new(Vec::new()),
+            queue_capacity: AtomicUsize::new(queue_capacity),
+            reservoir_capacity,
+        }
+    }
+
+    /// Register a new worker slot (pool spawn / dynamic grow).
+    pub fn register(&self, worker: usize) -> Arc<WorkerTelemetry> {
+        let slot = Arc::new(WorkerTelemetry::new(worker, self.reservoir_capacity));
+        self.slots.write().unwrap().push(Arc::clone(&slot));
+        slot
+    }
+
+    /// Every slot ever registered, in registration order (retired
+    /// included — the stats adapters fold them into pool totals).
+    pub fn slots(&self) -> Vec<Arc<WorkerTelemetry>> {
+        self.slots.read().unwrap().clone()
+    }
+
+    pub fn queue_capacity(&self) -> usize {
+        self.queue_capacity.load(Ordering::Relaxed)
+    }
+
+    /// Assemble the control plane's per-tick view.
+    pub fn snapshot(&self) -> TelemetrySnapshot {
+        let slots = self.slots();
+        let queue_capacity = self.queue_capacity();
+        let mut snap = TelemetrySnapshot { queue_capacity, ..TelemetrySnapshot::default() };
+
+        let mut lane_samples: [Vec<f64>; LANES] = [Vec::new(), Vec::new()];
+        let mut variant_acc: BTreeMap<String, (usize, Vec<f64>)> = BTreeMap::new();
+
+        for s in &slots {
+            let retired = s.is_retired();
+            let depth = if retired { 0 } else { s.queue_depth() };
+            let served = s.served_total();
+            // One reservoir copy per lane per slot: the same buffers feed
+            // the per-worker percentiles AND the pool-wide lane merge.
+            let worker_lanes = [s.lane_reservoir(Lane::Normal), s.lane_reservoir(Lane::High)];
+            let mut samples =
+                Vec::with_capacity(worker_lanes.iter().map(|r| r.len()).sum::<usize>());
+            for (lane, r) in worker_lanes.iter().enumerate() {
+                samples.extend_from_slice(r.samples());
+                lane_samples[lane].extend_from_slice(r.samples());
+            }
+            let wp = percentiles_of(samples, &[0.5, 0.95]);
+            snap.per_worker.push(WorkerView {
+                worker: s.worker,
+                retired,
+                served,
+                batches: s.batches(),
+                rejected: s.rejected(),
+                failed: s.failed(),
+                switches: s.switches(),
+                queue_depth: depth,
+                p50_s: wp[0],
+                p95_s: wp[1],
+            });
+            snap.served += served;
+            snap.batches += s.batches();
+            snap.rejected += s.rejected();
+            snap.failed += s.failed();
+            snap.switches = snap.switches.max(s.switches());
+            if !retired {
+                snap.live_workers += 1;
+                snap.queue_depth += depth;
+            }
+            for (variant, r) in s.per_variant_clone() {
+                let acc = variant_acc.entry(variant).or_insert_with(|| (0, Vec::new()));
+                acc.0 += r.count();
+                acc.1.extend_from_slice(r.samples());
+            }
+        }
+
+        let mut all_samples: Vec<f64> = Vec::new();
+        for lane in [Lane::Normal, Lane::High] {
+            let samples = std::mem::take(&mut lane_samples[lane.index()]);
+            all_samples.extend_from_slice(&samples);
+            let lp = percentiles_of(samples, &[0.5, 0.95, 0.99]);
+            snap.lanes[lane.index()] = LaneView {
+                served: slots.iter().map(|s| s.served(lane)).sum(),
+                p50_s: lp[0],
+                p95_s: lp[1],
+                p99_s: lp[2],
+            };
+        }
+        for (variant, (count, samples)) in variant_acc {
+            let mean = if samples.is_empty() {
+                0.0
+            } else {
+                samples.iter().sum::<f64>() / samples.len() as f64
+            };
+            let vp = percentiles_of(samples, &[0.5, 0.95]);
+            snap.per_variant.insert(
+                variant,
+                VariantView { count, p50_s: vp[0], p95_s: vp[1], mean_s: mean },
+            );
+        }
+        let ap = percentiles_of(all_samples, &[0.5, 0.95, 0.99]);
+        snap.p50_s = ap[0];
+        snap.p95_s = ap[1];
+        snap.p99_s = ap[2];
+        snap.mean_batch_size = if snap.batches == 0 {
+            0.0
+        } else {
+            snap.served as f64 / snap.batches as f64
+        };
+        snap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workers_publish_control_plane_snapshots() {
+        let hub = TelemetryHub::new(64);
+        let w0 = hub.register(0);
+        let w1 = hub.register(1);
+        w0.record_batch("a", 0.015, &[(Lane::Normal, 0.010), (Lane::Normal, 0.020)]);
+        w1.record_batch("a", 0.001, &[(Lane::High, 0.001)]);
+        w1.record_batch("b", 0.030, &[(Lane::Normal, 0.040)]);
+        w0.record_rejected();
+        w1.record_failed(2);
+        w0.record_switch();
+        w0.depth_inc();
+
+        let snap = hub.snapshot();
+        assert_eq!(snap.live_workers, 2);
+        assert_eq!(snap.served, 4);
+        assert_eq!(snap.batches, 3);
+        assert_eq!(snap.rejected, 1);
+        assert_eq!(snap.failed, 2);
+        assert_eq!(snap.switches, 1);
+        assert_eq!(snap.queue_depth, 1);
+        assert_eq!(snap.queue_capacity, 64);
+        assert_eq!(snap.lanes[Lane::Normal.index()].served, 3);
+        assert_eq!(snap.lanes[Lane::High.index()].served, 1);
+        assert!((snap.lanes[Lane::High.index()].p50_s - 0.001).abs() < 1e-12);
+        assert_eq!(snap.per_variant.len(), 2);
+        assert_eq!(snap.per_variant["a"].count, 3);
+        assert_eq!(snap.per_variant["b"].count, 1);
+        // Per-variant views carry *execution* time (0.030), not the
+        // end-to-end latency (0.040) that queue wait inflates.
+        assert!((snap.per_variant["b"].p50_s - 0.030).abs() < 1e-12);
+        assert!((snap.per_variant["a"].p50_s - 0.015).abs() < 1e-12);
+        assert!((snap.p99_s - 0.040).abs() < 1e-12, "pool percentiles stay end-to-end");
+        assert!(snap.occupancy() > 0.0);
+    }
+
+    #[test]
+    fn retired_slots_keep_totals_but_leave_live_views() {
+        let hub = TelemetryHub::new(8);
+        let w0 = hub.register(0);
+        let w1 = hub.register(1);
+        w0.record_batch("v", 0.005, &[(Lane::Normal, 0.005)]);
+        w1.record_batch("v", 0.007, &[(Lane::Normal, 0.007)]);
+        w1.depth_inc();
+        w1.retire();
+        let snap = hub.snapshot();
+        assert_eq!(snap.live_workers, 1);
+        assert_eq!(snap.served, 2, "retired worker's served requests stay in totals");
+        assert_eq!(snap.queue_depth, 0, "retired workers contribute no live backlog");
+        assert_eq!(snap.per_worker.len(), 2);
+        assert!(snap.per_worker[1].retired);
+    }
+
+    #[test]
+    fn occupancy_is_backlog_over_live_capacity() {
+        let hub = TelemetryHub::new(4);
+        let w0 = hub.register(0);
+        let _w1 = hub.register(1);
+        w0.depth_inc();
+        w0.depth_inc();
+        let snap = hub.snapshot();
+        assert!((snap.occupancy() - 2.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_hub_snapshot_is_sane() {
+        let hub = TelemetryHub::new(16);
+        let snap = hub.snapshot();
+        assert_eq!(snap.live_workers, 0);
+        assert_eq!(snap.occupancy(), 0.0);
+        assert_eq!(snap.p95_s, 0.0);
+        assert_eq!(snap.mean_batch_size, 0.0);
+    }
+}

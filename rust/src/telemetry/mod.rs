@@ -1,0 +1,47 @@
+//! Cross-level telemetry: measured serving performance, flowing from the
+//! back-end serving layer up to the front-end optimization decision.
+//!
+//! The paper's central systems claim (Sec. III-D, Fig. 6) is that mobile
+//! DL middleware must close the loop *across levels*: "feeding back
+//! runtime performance from the back-end level to the front-end level
+//! optimization decision". This module is that feedback channel. Mapping
+//! each primitive onto the Fig. 6 loop stages:
+//!
+//! | Fig. 6 stage                  | Primitive here                                  |
+//! |-------------------------------|-------------------------------------------------|
+//! | **Observe** (resource monitor)| [`ResourceSnapshot`] — *predicted-side* context  |
+//! | **Observe** (runtime profiler)| [`Reservoir`] latency windows, [`Counter`]/[`Gauge`] totals and queue depths, published per worker into the [`TelemetryHub`] |
+//! | **Decide** (heuristic optimizer) | [`TelemetrySnapshot`] consumed by the control plane: the latency calibrator corrects Eq. 2 predictions with measured ratios, the AIMD sizer reads occupancy/rejections |
+//! | **Act** (configuration actuation) | `Actuator::actuate` (variant switch) and `Actuator::set_workers` (pool width), both in the optimizer layer |
+//!
+//! Design rules:
+//!
+//! - **Publishing is lock-cheap.** Workers touch only their own slot:
+//!   relaxed atomics per request, one mutex lock per *batch* for latency
+//!   samples. Nothing a worker does contends with another worker or with
+//!   the control plane's snapshots.
+//! - **Windows, not histories.** [`Reservoir`] rings retain the most
+//!   recent samples; the loop reacts to the current context, not to the
+//!   average over a stale one. [`Ewma`] smooths the decision-side
+//!   estimates with the same recency bias.
+//! - **Merging is exact.** Pool-wide percentiles are computed over the
+//!   concatenation of per-worker windows ([`merged_percentile`]), so the
+//!   snapshot view equals what a single global reservoir would have seen.
+//! - **Totals survive resizes.** Retired workers keep their slots, so
+//!   `served + rejected + failed` accounts for every submission across
+//!   dynamic grow/shrink episodes.
+//!
+//! [`ResourceSnapshot`]: crate::device::ResourceSnapshot
+
+pub mod counter;
+pub mod ewma;
+pub mod hub;
+pub mod reservoir;
+
+pub use counter::{Counter, Gauge};
+pub use ewma::{Ewma, RateMeter};
+pub use hub::{
+    Lane, LaneView, TelemetryHub, TelemetrySnapshot, VariantView, WorkerTelemetry, WorkerView,
+    DEFAULT_RESERVOIR_CAPACITY, LANES,
+};
+pub use reservoir::{merged_percentile, percentile_of, percentiles_of, Reservoir};

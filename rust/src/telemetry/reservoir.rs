@@ -1,0 +1,222 @@
+//! Windowed latency reservoir: a fixed-capacity ring buffer of the most
+//! recent samples, with percentiles computable over one reservoir or the
+//! merge of many (the pool-wide view is the merge of per-worker rings).
+//!
+//! Why a ring and not a streaming sketch: the adaptation loop wants
+//! *recent* behavior (the paper's loop reacts to context shifts within a
+//! few ticks), so an unbounded history is actively wrong — old samples
+//! from a previous DVFS level would dilute the signal. A ring of the last
+//! `capacity` samples is a time-local window whose cost is O(capacity)
+//! memory and O(1) per push, and merging rings is concatenation, which
+//! keeps pool-level percentiles exact over the union of windows.
+
+/// Ring-buffer sample reservoir.
+#[derive(Debug, Clone)]
+pub struct Reservoir {
+    cap: usize,
+    buf: Vec<f64>,
+    /// Next overwrite position once the ring is full.
+    head: usize,
+    /// Total samples ever pushed (≥ retained count; lets consumers detect
+    /// "new data since last look" without timestamps).
+    count: usize,
+}
+
+impl Reservoir {
+    pub fn new(capacity: usize) -> Reservoir {
+        assert!(capacity >= 1, "reservoir capacity must be positive");
+        Reservoir { cap: capacity, buf: Vec::new(), head: 0, count: 0 }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.count += 1;
+        if self.buf.len() < self.cap {
+            self.buf.push(v);
+        } else {
+            self.buf[self.head] = v;
+            self.head = (self.head + 1) % self.cap;
+        }
+    }
+
+    /// Samples currently retained, in no particular order.
+    pub fn samples(&self) -> &[f64] {
+        &self.buf
+    }
+
+    /// Total samples ever pushed (monotonic across the ring's overwrites).
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Mean of the retained window (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.buf.is_empty() {
+            0.0
+        } else {
+            self.buf.iter().sum::<f64>() / self.buf.len() as f64
+        }
+    }
+
+    /// Percentile over the retained window, nearest-rank with the same
+    /// convention as the serving stats (`idx = round((n-1)·p)`); 0.0 when
+    /// empty.
+    pub fn percentile(&self, p: f64) -> f64 {
+        percentile_of(self.buf.clone(), p)
+    }
+
+    /// Fold another reservoir's retained samples into this one — the
+    /// merge step behind pool-wide percentiles. Merging is concatenation:
+    /// the result's percentiles are exact over the union of both windows.
+    pub fn merge(&mut self, other: &Reservoir) {
+        for &v in other.samples() {
+            self.push(v);
+        }
+        // A merged ring has absorbed the other's history too.
+        self.count += other.count.saturating_sub(other.len());
+    }
+}
+
+/// Percentile of an owned sample set (nearest-rank, `round((n-1)·p)`).
+pub fn percentile_of(samples: Vec<f64>, p: f64) -> f64 {
+    percentiles_of(samples, &[p])[0]
+}
+
+/// Several percentiles of one owned sample set with a *single* sort —
+/// snapshot assembly asks for p50/p95/p99 of the same window, and
+/// re-sorting per percentile would triple the control plane's per-tick
+/// cost. Empty input yields 0.0 for every requested percentile.
+pub fn percentiles_of(mut samples: Vec<f64>, ps: &[f64]) -> Vec<f64> {
+    if samples.is_empty() {
+        return vec![0.0; ps.len()];
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let n = samples.len();
+    ps.iter()
+        .map(|&p| {
+            let idx = ((n as f64 - 1.0) * p.clamp(0.0, 1.0)).round() as usize;
+            samples[idx.min(n - 1)]
+        })
+        .collect()
+}
+
+/// Percentile over the concatenation of several reservoirs' windows —
+/// the single-percentile merge entry point. (Snapshot assembly, which
+/// needs several percentiles of the same merged window, concatenates
+/// once and calls [`percentiles_of`] instead — one sort either way.)
+pub fn merged_percentile<'a, I>(reservoirs: I, p: f64) -> f64
+where
+    I: IntoIterator<Item = &'a Reservoir>,
+{
+    let mut all = Vec::new();
+    for r in reservoirs {
+        all.extend_from_slice(r.samples());
+    }
+    percentile_of(all, p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn retains_everything_under_capacity() {
+        let mut r = Reservoir::new(8);
+        for i in 0..5 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.len(), 5);
+        assert_eq!(r.count(), 5);
+        assert!((r.percentile(1.0) - 4.0).abs() < 1e-12);
+        assert!((r.percentile(0.0) - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ring_keeps_the_most_recent_window() {
+        let mut r = Reservoir::new(4);
+        for i in 0..10 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.count(), 10);
+        let mut kept: Vec<f64> = r.samples().to_vec();
+        kept.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(kept, vec![6.0, 7.0, 8.0, 9.0], "oldest samples must be evicted");
+    }
+
+    #[test]
+    fn empty_reservoir_percentile_is_zero() {
+        let r = Reservoir::new(4);
+        assert_eq!(r.percentile(0.5), 0.0);
+        assert_eq!(r.mean(), 0.0);
+    }
+
+    /// Percentile-merge correctness against a sorted oracle: split a
+    /// random stream across several reservoirs (each large enough to hold
+    /// its share), then check the merged percentile equals the percentile
+    /// of the full sorted stream at every probed p.
+    #[test]
+    fn merge_matches_sorted_oracle() {
+        let mut rng = Rng::seed_from_u64(7);
+        let mut all = Vec::new();
+        let mut shards = vec![Reservoir::new(512), Reservoir::new(512), Reservoir::new(512)];
+        for i in 0..900 {
+            let v = rng.gen() * 100.0;
+            all.push(v);
+            shards[i % 3].push(v);
+        }
+        for &p in &[0.0, 0.1, 0.5, 0.9, 0.95, 0.99, 1.0] {
+            let oracle = percentile_of(all.clone(), p);
+            let merged = merged_percentile(shards.iter(), p);
+            assert!(
+                (merged - oracle).abs() < 1e-12,
+                "p={p}: merged {merged} vs oracle {oracle}"
+            );
+        }
+        // Reservoir::merge agrees with the free-function merge.
+        let mut folded = Reservoir::new(2048);
+        for s in &shards {
+            folded.merge(s);
+        }
+        assert_eq!(folded.count(), 900);
+        for &p in &[0.25, 0.5, 0.75] {
+            assert!((folded.percentile(p) - percentile_of(all.clone(), p)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn batched_percentiles_match_single_queries() {
+        let mut rng = Rng::seed_from_u64(11);
+        let samples: Vec<f64> = (0..257).map(|_| rng.gen() * 10.0).collect();
+        let ps = [0.0, 0.5, 0.95, 0.99, 1.0];
+        let batch = percentiles_of(samples.clone(), &ps);
+        for (i, &p) in ps.iter().enumerate() {
+            assert!((batch[i] - percentile_of(samples.clone(), p)).abs() < 1e-12, "p={p}");
+        }
+        assert_eq!(percentiles_of(Vec::new(), &ps), vec![0.0; ps.len()]);
+    }
+
+    #[test]
+    fn percentile_convention_matches_serving_stats() {
+        // Same nearest-rank convention used by ServingStats::percentile.
+        let mut r = Reservoir::new(16);
+        for v in [0.1, 0.2, 0.3, 0.4] {
+            r.push(v);
+        }
+        assert!((r.percentile(1.0) - 0.4).abs() < 1e-12);
+        let p50 = r.percentile(0.5);
+        assert!((p50 - 0.3).abs() < 1e-12 || (p50 - 0.2).abs() < 1e-12);
+    }
+}

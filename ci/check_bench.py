@@ -1,0 +1,110 @@
+#!/usr/bin/env python3
+"""Serving-bench regression gate.
+
+Compares a fresh `BENCH_serving.json` (written by
+`cargo bench --bench serving_pool`) against the committed baseline
+`ci/BENCH_baseline.json` and fails when any pool width's p95 latency
+regressed by more than the allowed fraction (default 20%).
+
+Schema (both files):
+
+    {"bench": "serving_pool", "requests": N, "batch_delay_ms": D,
+     "widths": [{"workers": W, "req_per_s": R, "p50_ms": ..., "p95_ms": ...,
+                 "p99_ms": ..., "mean_batch": ..., "rejected": ...}, ...],
+     "best": {"workers": W, "req_per_s": R, "speedup_vs_single": S}}
+
+Refreshing the baseline: download the `BENCH_serving` artifact from a
+green run on the target runner class and commit it as
+`ci/BENCH_baseline.json`. The seeded baseline is intentionally slack
+(sleep-based mock benches on shared runners are noisy); it catches
+order-of-magnitude regressions — lost batching overlap, a reintroduced
+spin-wait, a serialized pool — rather than micro-drift. Tighten it by
+refreshing from real runner numbers once a few green runs exist.
+
+Exit codes: 0 = within budget, 1 = regression or malformed input.
+"""
+
+import argparse
+import json
+import sys
+
+
+def load(path):
+    try:
+        with open(path, "r", encoding="utf-8") as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"error: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(1)
+
+
+def by_width(doc, path):
+    widths = doc.get("widths")
+    if not isinstance(widths, list) or not widths:
+        print(f"error: {path} has no 'widths' array", file=sys.stderr)
+        sys.exit(1)
+    out = {}
+    for w in widths:
+        try:
+            out[int(w["workers"])] = w
+        except (KeyError, TypeError, ValueError):
+            print(f"error: malformed width entry in {path}: {w}", file=sys.stderr)
+            sys.exit(1)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="fresh BENCH_serving.json")
+    ap.add_argument("baseline", help="committed BENCH_baseline.json")
+    ap.add_argument(
+        "--max-p95-regression",
+        type=float,
+        default=0.20,
+        help="allowed fractional p95 increase per width (default 0.20)",
+    )
+    args = ap.parse_args()
+
+    cur = by_width(load(args.current), args.current)
+    base = by_width(load(args.baseline), args.baseline)
+
+    shared = sorted(set(cur) & set(base))
+    if not shared:
+        print("error: no pool widths shared between current and baseline", file=sys.stderr)
+        sys.exit(1)
+
+    failed = False
+    print(f"{'workers':>8} {'base p95':>10} {'cur p95':>10} {'delta':>8} {'budget':>8}  verdict")
+    for w in shared:
+        b95 = float(base[w]["p95_ms"])
+        c95 = float(cur[w]["p95_ms"])
+        if b95 <= 0:
+            print(f"{w:>8} {'-':>10} {c95:>10.2f} {'-':>8} {'-':>8}  skipped (no baseline p95)")
+            continue
+        delta = (c95 - b95) / b95
+        budget = args.max_p95_regression
+        verdict = "ok" if delta <= budget else "REGRESSED"
+        if delta > budget:
+            failed = True
+        print(f"{w:>8} {b95:>10.2f} {c95:>10.2f} {delta:>+7.1%} {budget:>7.0%}  {verdict}")
+
+    # Throughput is informational (wall-clock req/s on shared runners is
+    # too noisy to gate on); surface it so trends stay visible in logs.
+    for w in shared:
+        br = float(base[w].get("req_per_s", 0.0))
+        cr = float(cur[w].get("req_per_s", 0.0))
+        if br > 0:
+            print(f"info: width {w} req/s {cr:.0f} vs baseline {br:.0f} ({(cr - br) / br:+.1%})")
+
+    if failed:
+        print(
+            f"FAIL: p95 regressed more than {args.max_p95_regression:.0%} "
+            "against ci/BENCH_baseline.json",
+            file=sys.stderr,
+        )
+        sys.exit(1)
+    print("bench gate: OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,149 @@
+//! Cross-device sharding throughput: a fixed local pool serving alone vs
+//! with one / two simulated partition peers attached over a fast link
+//! (no criterion in this offline environment — plain wall-clock runs).
+//!
+//! Each request costs a fixed per-batch delay wherever it runs; peers add
+//! the analytic link-transfer cost of the 4 KB input. The router should
+//! overlap local batches with remote round trips, so attached peers raise
+//! sustained req/s; the table also reports the measured remote share.
+//!
+//! Emits `BENCH_sharding.json`:
+//!
+//! ```json
+//! {"bench":"shard_router","requests":256,"batch_delay_ms":2,
+//!  "configs":[{"peers":0,"req_per_s":...,"remote_share":0.0,
+//!              "p95_ms":...}, ...]}
+//! ```
+//!
+//! Run: `cargo bench --bench shard_router`
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use crowdhmtware::coordinator::{
+    BatcherConfig, Executor, PoolConfig, ServingPool, ShardRouter, ShardRouterConfig,
+};
+use crowdhmtware::partition::SharedLink;
+use crowdhmtware::util::{Json, Table};
+
+const CLASSES: usize = 4;
+const ELEMS: usize = 1024;
+const REQUESTS: usize = 256;
+const BATCH_DELAY: Duration = Duration::from_millis(2);
+
+struct MockExec;
+
+impl Executor for MockExec {
+    fn batch_sizes(&self, _v: &str) -> Vec<usize> {
+        vec![1]
+    }
+
+    fn num_classes(&self) -> usize {
+        CLASSES
+    }
+
+    fn input_elems(&self) -> usize {
+        ELEMS
+    }
+
+    fn run(&mut self, _v: &str, batch: usize, _input: &[f32]) -> Result<Vec<f32>> {
+        std::thread::sleep(BATCH_DELAY);
+        Ok(vec![1.0 / CLASSES as f32; batch * CLASSES])
+    }
+}
+
+struct ConfigResult {
+    peers: usize,
+    req_per_s: f64,
+    remote_share: f64,
+    p95_ms: f64,
+}
+
+fn run_config(peers: usize) -> ConfigResult {
+    let pool = ServingPool::spawn(
+        |_| Box::new(MockExec) as Box<dyn Executor>,
+        "v",
+        PoolConfig {
+            workers: 2,
+            queue_capacity: REQUESTS,
+            batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_micros(100) },
+            ..PoolConfig::default()
+        },
+    );
+    let router = ShardRouter::new(
+        pool,
+        ShardRouterConfig {
+            peer_capacity: REQUESTS,
+            local_prior_s: BATCH_DELAY.as_secs_f64(),
+            ..ShardRouterConfig::default()
+        },
+    );
+    for p in 0..peers {
+        router.add_simulated_peer(
+            &format!("peer-{p}"),
+            || Box::new(MockExec) as Box<dyn Executor>,
+            SharedLink::new(200.0, 1.0),
+            BATCH_DELAY.as_secs_f64(),
+        );
+    }
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..REQUESTS)
+        .map(|_| router.submit(vec![0.0; ELEMS]).expect("capacity sized to the run"))
+        .collect();
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(60)).expect("response");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let shard = router.shard_stats();
+    let remote = shard.routed_remote();
+    let stats = router.shutdown();
+    assert_eq!(stats.served(), REQUESTS);
+    ConfigResult {
+        peers,
+        req_per_s: REQUESTS as f64 / wall,
+        remote_share: remote as f64 / REQUESTS as f64,
+        p95_ms: stats.percentile(0.95) * 1e3,
+    }
+}
+
+fn main() {
+    let mut table = Table::new(
+        "Serving throughput vs attached peers (mock executors, 2 ms/batch)",
+        &["peers", "req/s", "remote share", "p95 ms"],
+    );
+    let mut results = Vec::new();
+    for peers in [0usize, 1, 2] {
+        let r = run_config(peers);
+        table.row(&[
+            r.peers.to_string(),
+            format!("{:.0}", r.req_per_s),
+            format!("{:.2}", r.remote_share),
+            format!("{:.2}", r.p95_ms),
+        ]);
+        results.push(r);
+    }
+    table.print();
+
+    let configs: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("peers", Json::num(r.peers as f64)),
+                ("req_per_s", Json::num(r.req_per_s)),
+                ("remote_share", Json::num(r.remote_share)),
+                ("p95_ms", Json::num(r.p95_ms)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::str("shard_router")),
+        ("requests", Json::num(REQUESTS as f64)),
+        ("batch_delay_ms", Json::num(BATCH_DELAY.as_secs_f64() * 1e3)),
+        ("configs", Json::Arr(configs)),
+    ]);
+    let path = "BENCH_sharding.json";
+    match std::fs::write(path, doc.to_string() + "\n") {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -8,17 +8,29 @@
 //! middleware role). Every worker publishes measured performance into the
 //! [`crate::telemetry::TelemetryHub`]; [`pool::PoolStats`] and
 //! [`server::ServingStats`] are thin views over those slots.
+//!
+//! Above the pool sits the cross-*device* layer ([`shard`]): a
+//! [`shard::ShardRouter`] dispatches submissions across the partition
+//! layer's peers (Sec. III-B) as well as the local workers, with each
+//! peer link a first-class remote telemetry slot — plan-predicted
+//! latencies seed the route weights, measured hub EWMAs correct them, and
+//! drifting links degrade to local-only and re-admit on recovery.
 
 pub mod batcher;
 pub mod cascade;
 pub mod policy;
 pub mod pool;
 pub mod server;
+pub mod shard;
 
 pub use batcher::{Batch, Batcher, BatcherConfig, Request};
 pub use cascade::{run_cascade, CascadeStats, Stage};
 pub use policy::{rank_variants, select_variant, DispatchPolicy, ScoredVariant};
 pub use pool::{PoolConfig, PoolStats, ServingPool};
 pub use server::{Executor, Rejected, Response, ServingStats};
+pub use shard::{
+    PeerStat, PeerTransport, ShardRouter, ShardRouterConfig, ShardStats, SimulatedPeer,
+    REMOTE_WORKER_BASE,
+};
 
 pub use crate::telemetry::Lane;

@@ -215,6 +215,18 @@ impl ServingPool {
         self.generation.load(Ordering::SeqCst)
     }
 
+    /// The variant new submissions are currently served under — what a
+    /// dynamically spawned worker (or a shard router's freshly attached
+    /// peer) starts on.
+    pub fn current_variant(&self) -> String {
+        self.variant.lock().unwrap().clone()
+    }
+
+    /// Per-worker bounded queue capacity (the admission bound).
+    pub fn queue_capacity(&self) -> usize {
+        self.capacity
+    }
+
     /// The hub every worker publishes into — the control plane's
     /// observation channel.
     pub fn telemetry(&self) -> Arc<TelemetryHub> {

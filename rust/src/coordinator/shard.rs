@@ -1,0 +1,1051 @@
+//! Cross-device shard routing: serve requests across *partition peers*,
+//! not just local worker threads — the serving-layer realization of the
+//! paper's scalable-offloading component (Sec. III-B) closed over the
+//! Fig. 6 cross-level loop.
+//!
+//! Mapping onto the paper:
+//!
+//! | Paper (Sec. III-B / Fig. 6)             | Here                                        |
+//! |-----------------------------------------|---------------------------------------------|
+//! | Peer devices running model segments     | [`PeerTransport`] executors behind [`ShardRouter`] peer links |
+//! | Transmission delay (feature bytes / BW) | [`crate::partition::SharedLink::delay_s`], folded into every measured peer sample |
+//! | Graph-search offloading plan            | [`crate::partition::OffloadPlan`] → [`ShardRouter::apply_plan`] route priors |
+//! | Runtime profiler feedback (Fig. 6)      | one remote [`WorkerTelemetry`] slot per peer link in the pool's [`TelemetryHub`] |
+//! | Configuration actuation (Fig. 6)        | `Actuator::set_shards` (degrade / re-admit reconciliation) alongside `set_workers` |
+//!
+//! Routing policy, per submission:
+//!
+//! 1. Every target gets a latency estimate: *plan-predicted* (the
+//!    offload planner's Sec. III-B cost, via [`ShardRouter::apply_plan`])
+//!    until the telemetry hub has measured it, then the slot's observed
+//!    EWMA — measurements correct the model, exactly like the control
+//!    plane's latency calibrator corrects Eq. 2.
+//! 2. Dispatch picks the target minimizing `(queue_depth + 1) × est`,
+//!    i.e. load-weighted expected latency across the local pool and every
+//!    *admitted* peer.
+//! 3. A peer whose measured EWMA drifts past the degrade budget — or
+//!    that produced fresh request *failures* since the last
+//!    reconciliation (a dead link yields no latency samples at all) — is
+//!    evicted from the route set (traffic falls back to local workers);
+//!    while degraded or unmeasurable it still receives every Nth
+//!    normal-lane submission as a *probe*, so link recovery is observed
+//!    and the peer re-admits once a clean window puts its EWMA under the
+//!    (hysteresis) re-admit threshold. Degrade/re-admit decisions
+//!    consume only [`TelemetrySnapshot`] data — they run in
+//!    [`ShardRouter::maintain`], the control plane's `set_shards`
+//!    actuation arm.
+//!
+//! [`SimulatedPeer`] keeps all of this runnable offline: an in-process
+//! peer executing through any [`Executor`] with the transfer cost of a
+//! live, mutable [`crate::partition::SharedLink`] accounted analytically
+//! per request (tests replay degradation/recovery traces by scaling the
+//! link's bandwidth mid-run). The [`PeerTransport`] trait is the seam a
+//! real network transport implements instead.
+//!
+//! [`TelemetryHub`]: crate::telemetry::TelemetryHub
+//! [`WorkerTelemetry`]: crate::telemetry::WorkerTelemetry
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, RwLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::pool::{PoolStats, ServingPool};
+use super::server::{Executor, Rejected, Response};
+use crate::partition::{OffloadPlan, SharedLink};
+use crate::telemetry::{Lane, TelemetrySnapshot, WorkerTelemetry};
+
+/// Telemetry worker-id base for remote peer slots: keeps peer ids
+/// disjoint from local worker ids across any realistic number of dynamic
+/// respawns.
+pub const REMOTE_WORKER_BASE: usize = 1 << 16;
+
+/// Response-id base for peer-served requests (locally served requests
+/// draw ids from the pool's own counter).
+const REMOTE_ID_BASE: u64 = 1 << 48;
+
+/// Transport to one remote device: executes a single request end to end.
+/// Constructed *on the peer link's thread* (see [`ShardRouter::add_peer`])
+/// so thread-affine executors work unchanged.
+pub trait PeerTransport {
+    fn num_classes(&self) -> usize;
+
+    /// Run one request on the remote device, returning the class
+    /// probabilities plus any transfer seconds accounted *analytically*.
+    /// Simulated transports return the modeled [`crate::partition::Link::delay_s`]
+    /// cost here (their wall clock only covers execution); a real network
+    /// transport returns `0.0` because the transfer is already inside the
+    /// measured wall time. The peer loop adds this to both the recorded
+    /// telemetry sample and the response latency, so the hub always sees
+    /// the full round trip.
+    fn infer(&mut self, variant: &str, input: &[f32]) -> Result<(Vec<f32>, f64)>;
+}
+
+/// In-process simulated peer: a local [`Executor`] behind a live
+/// [`SharedLink`]. Transfer cost (input out, logits back) is computed
+/// from the link *at request time*, so mutating the link mid-run replays
+/// a degradation trace.
+pub struct SimulatedPeer {
+    exec: Box<dyn Executor>,
+    link: SharedLink,
+}
+
+impl SimulatedPeer {
+    pub fn new(exec: Box<dyn Executor>, link: SharedLink) -> SimulatedPeer {
+        SimulatedPeer { exec, link }
+    }
+}
+
+impl PeerTransport for SimulatedPeer {
+    fn num_classes(&self) -> usize {
+        self.exec.num_classes()
+    }
+
+    fn infer(&mut self, variant: &str, input: &[f32]) -> Result<(Vec<f32>, f64)> {
+        let in_bytes = std::mem::size_of_val(input);
+        let probs = self.exec.run(variant, 1, input)?;
+        let out_bytes = std::mem::size_of_val(probs.as_slice());
+        let transfer = self.link.delay_s(in_bytes) + self.link.delay_s(out_bytes);
+        Ok((probs, transfer))
+    }
+}
+
+/// One request in flight to a peer link.
+struct InferJob {
+    id: u64,
+    input: Vec<f32>,
+    enqueued: Instant,
+    lane: Lane,
+    resp: Sender<Response>,
+}
+
+/// Messages into a peer-link thread.
+enum PeerMsg {
+    Infer(InferJob),
+    Switch { variant: String, generation: u64 },
+    Shutdown,
+}
+
+/// Shard-routing knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardRouterConfig {
+    /// Bounded in-flight requests per peer link (admission control — the
+    /// peer-side analog of the pool's per-worker queue capacity).
+    pub peer_capacity: usize,
+    /// A peer whose measured round-trip EWMA exceeds this is degraded out
+    /// of the route set (traffic shifts back to local workers).
+    pub degrade_latency_s: f64,
+    /// A degraded peer re-admits once its EWMA falls back under this.
+    /// Keep it below `degrade_latency_s` — the hysteresis band prevents a
+    /// link hovering at the budget from thrashing admit/degrade.
+    pub readmit_latency_s: f64,
+    /// While any peer is degraded, every Nth normal-lane submission is
+    /// routed to a degraded peer as a probe, keeping its EWMA measured so
+    /// recovery is observable. `0` disables probing (a degraded peer then
+    /// never re-admits on its own). Priority-lane requests never probe.
+    pub probe_every: usize,
+    /// Routing prior for local serving until telemetry measures it
+    /// (typically the calibrated on-device prediction for the deployed
+    /// variant, refreshed by [`ShardRouter::apply_plan`]).
+    pub local_prior_s: f64,
+}
+
+impl Default for ShardRouterConfig {
+    fn default() -> Self {
+        ShardRouterConfig {
+            peer_capacity: 64,
+            degrade_latency_s: 0.050,
+            readmit_latency_s: 0.040,
+            probe_every: 8,
+            local_prior_s: 0.010,
+        }
+    }
+}
+
+fn f2b(x: f64) -> u64 {
+    x.to_bits()
+}
+
+fn b2f(b: u64) -> f64 {
+    f64::from_bits(b)
+}
+
+/// One peer link: the channel to its thread, its remote telemetry slot,
+/// and the routing state (plan prior, measured estimate, admission flag).
+struct PeerSlot {
+    name: String,
+    tx: Sender<PeerMsg>,
+    tel: Arc<WorkerTelemetry>,
+    join: JoinHandle<()>,
+    /// Plan-predicted per-request latency prior (f64 bits; `INFINITY`
+    /// when the current plan excludes this peer).
+    plan_s: AtomicU64,
+    /// Last snapshot-observed EWMA (f64 bits; 0.0 = unmeasured).
+    measured_s: AtomicU64,
+    /// Failure total at the last `maintain` (failed requests produce no
+    /// latency sample, so admission must difference this counter too —
+    /// a dead link would otherwise keep its healthy latency estimate).
+    last_failed: AtomicUsize,
+    admitted: AtomicBool,
+    /// Submissions routed to this peer (probes included).
+    routed: AtomicUsize,
+    /// Probe submissions among `routed`.
+    probes: AtomicUsize,
+}
+
+impl PeerSlot {
+    /// Routing estimate: measured EWMA once observed, plan prior before.
+    fn estimate_s(&self) -> f64 {
+        let m = b2f(self.measured_s.load(Ordering::Relaxed));
+        if m > 0.0 {
+            m
+        } else {
+            b2f(self.plan_s.load(Ordering::Relaxed))
+        }
+    }
+}
+
+/// Point-in-time routing state of one peer link.
+#[derive(Debug, Clone)]
+pub struct PeerStat {
+    pub name: String,
+    pub admitted: bool,
+    /// Submissions routed to this peer (probes included).
+    pub routed: usize,
+    pub probes: usize,
+    pub served: usize,
+    pub failed: usize,
+    pub queue_depth: usize,
+    /// Measured round-trip EWMA (0.0 until observed by `maintain`).
+    pub measured_s: f64,
+    /// Plan-predicted prior (`INFINITY` when plan-excluded).
+    pub plan_s: f64,
+}
+
+/// Router-level routing statistics.
+#[derive(Debug, Clone, Default)]
+pub struct ShardStats {
+    /// Submissions served by the local pool.
+    pub routed_local: usize,
+    /// Peer degrade events (admitted → degraded transitions).
+    pub degraded_events: usize,
+    /// Peer re-admit events (degraded → admitted transitions).
+    pub readmitted_events: usize,
+    pub peers: Vec<PeerStat>,
+}
+
+impl ShardStats {
+    /// Submissions routed to any peer (probes included).
+    pub fn routed_remote(&self) -> usize {
+        self.peers.iter().map(|p| p.routed).sum()
+    }
+}
+
+/// The cross-device sharding router: wraps a local [`ServingPool`] and a
+/// set of remote peer links, dispatching each submission to the target
+/// with the best load-weighted latency estimate. Peers publish into the
+/// *pool's* telemetry hub as remote slots, so one
+/// [`TelemetrySnapshot`] carries both sides of the deployment and the
+/// control plane's calibrator/sizer/shard decisions all read the same
+/// measured state.
+pub struct ShardRouter {
+    pool: ServingPool,
+    peers: RwLock<Vec<PeerSlot>>,
+    cfg: ShardRouterConfig,
+    /// Submission sequence: probe cadence + rotation.
+    seq: AtomicUsize,
+    /// Measured mean local-worker EWMA from the last `maintain` (f64
+    /// bits; 0.0 = unmeasured → `local_prior`).
+    local_measured_s: AtomicU64,
+    /// Plan/calibration-informed local prior (f64 bits).
+    local_prior_s: AtomicU64,
+    routed_local: AtomicUsize,
+    degraded_events: AtomicUsize,
+    readmitted_events: AtomicUsize,
+    next_remote_id: AtomicU64,
+}
+
+impl ShardRouter {
+    /// Wrap a serving pool; peers attach afterwards with
+    /// [`ShardRouter::add_peer`] / [`ShardRouter::add_simulated_peer`].
+    pub fn new(pool: ServingPool, cfg: ShardRouterConfig) -> ShardRouter {
+        assert!(cfg.peer_capacity >= 1, "peer capacity must be positive");
+        assert!(
+            cfg.readmit_latency_s <= cfg.degrade_latency_s,
+            "re-admit threshold above the degrade threshold would thrash"
+        );
+        ShardRouter {
+            pool,
+            peers: RwLock::new(Vec::new()),
+            cfg,
+            seq: AtomicUsize::new(0),
+            local_measured_s: AtomicU64::new(f2b(0.0)),
+            local_prior_s: AtomicU64::new(f2b(cfg.local_prior_s)),
+            routed_local: AtomicUsize::new(0),
+            degraded_events: AtomicUsize::new(0),
+            readmitted_events: AtomicUsize::new(0),
+            next_remote_id: AtomicU64::new(0),
+        }
+    }
+
+    /// The wrapped local pool.
+    pub fn pool(&self) -> &ServingPool {
+        &self.pool
+    }
+
+    /// Snapshot the shared hub: local worker slots *and* remote peer
+    /// slots in one coherent view.
+    pub fn telemetry_snapshot(&self) -> TelemetrySnapshot {
+        self.pool.telemetry_snapshot()
+    }
+
+    /// Attach a remote peer. `make_transport` runs *on the peer link's
+    /// thread* (thread-affine executors welcome); `plan_latency_s` seeds
+    /// the routing prior until the first [`ShardRouter::apply_plan`] or
+    /// measured sample. Returns the peer index.
+    pub fn add_peer<F>(&self, name: &str, make_transport: F, plan_latency_s: f64) -> usize
+    where
+        F: FnOnce() -> Box<dyn PeerTransport> + Send + 'static,
+    {
+        let mut peers = self.peers.write().unwrap();
+        let idx = peers.len();
+        let worker_id = REMOTE_WORKER_BASE + idx;
+        let tel = self.pool.telemetry().register_remote(worker_id);
+        // Read (variant, generation) from the pool so the peer starts on
+        // the live configuration; a racing switch_variant broadcast is
+        // not yet fanned out to this peer (it is not in the list), but the
+        // router's own actuate re-broadcasts to every peer present then.
+        let variant = self.pool.current_variant();
+        let generation = self.pool.generation();
+        let (tx, rx) = channel();
+        let tel_thread = Arc::clone(&tel);
+        let join = std::thread::spawn(move || {
+            peer_main(worker_id, make_transport(), rx, variant, generation, tel_thread)
+        });
+        peers.push(PeerSlot {
+            name: name.to_string(),
+            tx,
+            tel,
+            join,
+            plan_s: AtomicU64::new(f2b(plan_latency_s)),
+            measured_s: AtomicU64::new(f2b(0.0)),
+            last_failed: AtomicUsize::new(0),
+            admitted: AtomicBool::new(true),
+            routed: AtomicUsize::new(0),
+            probes: AtomicUsize::new(0),
+        });
+        idx
+    }
+
+    /// Attach an in-process [`SimulatedPeer`]: `make_exec` builds the
+    /// peer's executor on its thread; `link` is the live link whose
+    /// transfer cost every request pays (mutate it to replay a trace).
+    pub fn add_simulated_peer<F>(
+        &self,
+        name: &str,
+        make_exec: F,
+        link: SharedLink,
+        plan_latency_s: f64,
+    ) -> usize
+    where
+        F: FnOnce() -> Box<dyn Executor> + Send + 'static,
+    {
+        self.add_peer(
+            name,
+            move || Box::new(SimulatedPeer::new(make_exec(), link)) as Box<dyn PeerTransport>,
+            plan_latency_s,
+        )
+    }
+
+    pub fn num_peers(&self) -> usize {
+        self.peers.read().unwrap().len()
+    }
+
+    /// Peers currently in the route set.
+    pub fn admitted_peers(&self) -> usize {
+        self.peers.read().unwrap().iter().filter(|p| p.admitted.load(Ordering::Acquire)).count()
+    }
+
+    /// Submit on the normal lane.
+    pub fn submit(&self, input: Vec<f32>) -> Result<Receiver<Response>, Rejected> {
+        self.submit_lane(input, Lane::Normal)
+    }
+
+    /// Submit on the high-priority lane. Priority requests are routed by
+    /// the same estimates but are never used as degraded-link probes.
+    pub fn submit_priority(&self, input: Vec<f32>) -> Result<Receiver<Response>, Rejected> {
+        self.submit_lane(input, Lane::High)
+    }
+
+    /// Route one submission: probe turn → best-estimate target → local
+    /// fallback. Rejected only when the local pool *and* every routable
+    /// peer are at capacity.
+    pub fn submit_lane(&self, input: Vec<f32>, lane: Lane) -> Result<Receiver<Response>, Rejected> {
+        let n = self.seq.fetch_add(1, Ordering::Relaxed);
+        let peers = self.peers.read().unwrap();
+
+        // Probe turn: keep unroutable links measured. That covers both
+        // degraded peers (so recovery is seen) and admitted peers with no
+        // finite estimate (plan-excluded before any measurement — without
+        // probes no traffic could ever arrive to override the infinite
+        // prior, making the exclusion permanent).
+        let mut input = input;
+        if lane == Lane::Normal && self.cfg.probe_every > 0 && n % self.cfg.probe_every == 0 {
+            let unroutable: Vec<usize> = peers
+                .iter()
+                .enumerate()
+                .filter(|(_, p)| {
+                    !p.admitted.load(Ordering::Acquire) || !p.estimate_s().is_finite()
+                })
+                .map(|(i, _)| i)
+                .collect();
+            if !unroutable.is_empty() {
+                let pi = unroutable[(n / self.cfg.probe_every) % unroutable.len()];
+                match self.try_peer(&peers[pi], input, lane, true) {
+                    Ok(rx) => return Ok(rx),
+                    Err(give_back) => input = give_back,
+                }
+            }
+        }
+
+        // Best admitted peer by load-weighted estimate.
+        let mut best: Option<(usize, f64)> = None;
+        for (i, p) in peers.iter().enumerate() {
+            if !p.admitted.load(Ordering::Acquire) {
+                continue;
+            }
+            let depth = p.tel.queue_depth();
+            if depth >= self.cfg.peer_capacity {
+                continue;
+            }
+            let est = p.estimate_s();
+            if !est.is_finite() {
+                continue;
+            }
+            let score = (depth as f64 + 1.0) * est;
+            let better = match best {
+                None => true,
+                Some((_, s)) => score < s,
+            };
+            if better {
+                best = Some((i, score));
+            }
+        }
+
+        // Local score: mean live queue depth × measured-or-prior latency.
+        let depths = self.pool.queue_depths();
+        let mean_depth = if depths.is_empty() {
+            0.0
+        } else {
+            depths.iter().sum::<usize>() as f64 / depths.len() as f64
+        };
+        let measured = b2f(self.local_measured_s.load(Ordering::Relaxed));
+        let local_est =
+            if measured > 0.0 { measured } else { b2f(self.local_prior_s.load(Ordering::Relaxed)) };
+        let local_score = (mean_depth + 1.0) * local_est;
+        let cap = self.pool.queue_capacity();
+        let local_full = !depths.is_empty() && depths.iter().all(|&d| d >= cap);
+
+        if let Some((pi, score)) = best {
+            if score < local_score || local_full {
+                match self.try_peer(&peers[pi], input, lane, false) {
+                    Ok(rx) => return Ok(rx),
+                    Err(give_back) => input = give_back,
+                }
+            }
+        }
+
+        // Local serving (the default and the fallback). A full pool still
+        // goes through submit_lane so the rejection is accounted on the
+        // pool's own telemetry.
+        match self.pool.submit_lane(input, lane) {
+            Ok(rx) => {
+                self.routed_local.fetch_add(1, Ordering::Relaxed);
+                Ok(rx)
+            }
+            Err(rej) => Err(rej),
+        }
+    }
+
+    /// Try one peer: admission against the link's bounded in-flight
+    /// window, then enqueue. Gives the input back on failure so the
+    /// caller can fall through to another target.
+    fn try_peer(
+        &self,
+        slot: &PeerSlot,
+        input: Vec<f32>,
+        lane: Lane,
+        probe: bool,
+    ) -> Result<Receiver<Response>, Vec<f32>> {
+        let prev = slot.tel.depth_inc();
+        if prev >= self.cfg.peer_capacity {
+            slot.tel.depth_cancel();
+            return Err(input);
+        }
+        let id = REMOTE_ID_BASE + self.next_remote_id.fetch_add(1, Ordering::Relaxed) + 1;
+        let (tx, rx) = channel();
+        let msg = PeerMsg::Infer(InferJob { id, input, enqueued: Instant::now(), lane, resp: tx });
+        match slot.tx.send(msg) {
+            Ok(()) => {
+                slot.routed.fetch_add(1, Ordering::Relaxed);
+                if probe {
+                    slot.probes.fetch_add(1, Ordering::Relaxed);
+                }
+                Ok(rx)
+            }
+            Err(e) => {
+                slot.tel.depth_cancel();
+                match e.0 {
+                    PeerMsg::Infer(job) => Err(job.input),
+                    _ => unreachable!("send failed on the message we just built"),
+                }
+            }
+        }
+    }
+
+    /// Reconcile shard admission from measured telemetry — the control
+    /// plane's `set_shards` actuation arm, consuming only
+    /// [`TelemetrySnapshot`] data (call it once per adaptation tick with
+    /// the pool hub's snapshot). Refreshes the local and per-peer latency
+    /// estimates, degrades peers whose measured EWMA drifted past the
+    /// budget, re-admits recovered ones. Returns the admitted peer count.
+    pub fn maintain(&self, tel: &TelemetrySnapshot) -> usize {
+        // Local estimate: mean slot EWMA across live local workers.
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        for v in &tel.per_worker {
+            if !v.remote && !v.retired && v.ewma_s > 0.0 {
+                sum += v.ewma_s;
+                n += 1;
+            }
+        }
+        if n > 0 {
+            self.local_measured_s.store(f2b(sum / n as f64), Ordering::Relaxed);
+        }
+
+        let peers = self.peers.read().unwrap();
+        let mut admitted = 0usize;
+        for (i, p) in peers.iter().enumerate() {
+            let view = tel.per_worker.iter().find(|v| v.worker == REMOTE_WORKER_BASE + i);
+            if let Some(v) = view {
+                // Failed requests produce no latency sample, so a dead
+                // link would keep a frozen healthy EWMA forever —
+                // difference the failure counter and treat fresh failures
+                // as drift in their own right.
+                let prev_failed = p.last_failed.swap(v.failed, Ordering::Relaxed);
+                let new_failures = v.failed.saturating_sub(prev_failed);
+                if v.ewma_s > 0.0 {
+                    p.measured_s.store(f2b(v.ewma_s), Ordering::Relaxed);
+                }
+                let was = p.admitted.load(Ordering::Acquire);
+                let drifted = (v.ewma_s > 0.0 && v.ewma_s > self.cfg.degrade_latency_s)
+                    || new_failures > 0;
+                if was && drifted {
+                    p.admitted.store(false, Ordering::Release);
+                    self.degraded_events.fetch_add(1, Ordering::Relaxed);
+                } else if !was
+                    && !drifted
+                    && v.ewma_s > 0.0
+                    && v.ewma_s < self.cfg.readmit_latency_s
+                {
+                    // Re-admit only on a clean window: measured latency
+                    // under the bar AND no fresh failures since the last
+                    // reconciliation (failing probes keep a dead link out).
+                    p.admitted.store(true, Ordering::Release);
+                    self.readmitted_events.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            if p.admitted.load(Ordering::Acquire) {
+                admitted += 1;
+            }
+        }
+        admitted
+    }
+
+    /// Refresh route priors from a fresh offload plan (Sec. III-B's
+    /// graph-search output informing admission): peers the plan routes
+    /// through get its predicted end-to-end latency as their prior;
+    /// plan-excluded peers get an infinite prior (measured estimates, once
+    /// observed, still override either way). `local_latency_s` is the
+    /// calibrated on-device prediction for the deployed variant — the
+    /// local prior (ignored when non-finite or non-positive).
+    pub fn apply_plan(&self, plan: &OffloadPlan, local_latency_s: f64) {
+        if local_latency_s.is_finite() && local_latency_s > 0.0 {
+            self.local_prior_s.store(f2b(local_latency_s), Ordering::Relaxed);
+        }
+        let peers = self.peers.read().unwrap();
+        for p in peers.iter() {
+            let w = plan.route_weight(&p.name).unwrap_or(f64::INFINITY);
+            p.plan_s.store(f2b(w), Ordering::Relaxed);
+        }
+    }
+
+    /// Routing statistics (cheap, lock-light).
+    pub fn shard_stats(&self) -> ShardStats {
+        let peers = self.peers.read().unwrap();
+        ShardStats {
+            routed_local: self.routed_local.load(Ordering::Relaxed),
+            degraded_events: self.degraded_events.load(Ordering::Relaxed),
+            readmitted_events: self.readmitted_events.load(Ordering::Relaxed),
+            peers: peers
+                .iter()
+                .map(|p| PeerStat {
+                    name: p.name.clone(),
+                    admitted: p.admitted.load(Ordering::Acquire),
+                    routed: p.routed.load(Ordering::Relaxed),
+                    probes: p.probes.load(Ordering::Relaxed),
+                    served: p.tel.served_total(),
+                    failed: p.tel.failed(),
+                    queue_depth: p.tel.queue_depth(),
+                    measured_s: b2f(p.measured_s.load(Ordering::Relaxed)),
+                    plan_s: b2f(p.plan_s.load(Ordering::Relaxed)),
+                })
+                .collect(),
+        }
+    }
+
+    /// Switch the serving variant everywhere: the local pool first
+    /// (generation-tagged, acked), then every peer link with the same
+    /// generation. Returns the new generation.
+    pub fn switch_variant(&self, variant: &str) -> u64 {
+        let generation = self.pool.switch_variant(variant);
+        let peers = self.peers.read().unwrap();
+        for p in peers.iter() {
+            let _ = p.tx.send(PeerMsg::Switch { variant: variant.to_string(), generation });
+        }
+        generation
+    }
+
+    /// Stop peers (draining their queued requests) and the pool; returns
+    /// lifetime statistics over every slot, peer links included.
+    pub fn shutdown(self) -> PoolStats {
+        let peers = self.peers.into_inner().unwrap();
+        for p in &peers {
+            let _ = p.tx.send(PeerMsg::Shutdown);
+        }
+        for p in peers {
+            let _ = p.join.join();
+            p.tel.retire();
+        }
+        self.pool.shutdown()
+    }
+}
+
+/// Serve one request on the peer thread: remote execution + analytic
+/// transfer, published to the slot as (congestion-free per-variant cost,
+/// end-to-end lane sample) — the same split the local workers use, so the
+/// calibrator and the router read peers and workers identically.
+fn serve_one(
+    transport: &mut dyn PeerTransport,
+    worker: usize,
+    variant: &str,
+    generation: u64,
+    tel: &WorkerTelemetry,
+    job: InferJob,
+) {
+    let classes = transport.num_classes();
+    let started = Instant::now();
+    match transport.infer(variant, &job.input) {
+        Ok((probs, transfer_s)) => {
+            let transfer_s = transfer_s.max(0.0);
+            let (pred, conf) = probs[..classes]
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+                .map(|(k, &v)| (k, v))
+                .unwrap_or((0, 0.0));
+            let exec_s = started.elapsed().as_secs_f64() + transfer_s;
+            let latency = job.enqueued.elapsed() + Duration::from_secs_f64(transfer_s);
+            tel.record_batch(variant, exec_s, &[(job.lane, latency.as_secs_f64())]);
+            tel.depth_dec();
+            let _ = job.resp.send(Response {
+                id: job.id,
+                pred,
+                confidence: conf,
+                variant: variant.to_string(),
+                generation,
+                worker,
+                lane: job.lane,
+                latency,
+            });
+        }
+        Err(e) => {
+            eprintln!("peer {worker}: remote execution failed: {e:#}");
+            tel.depth_dec();
+            tel.record_failed(1);
+        }
+    }
+}
+
+fn peer_main(
+    worker: usize,
+    mut transport: Box<dyn PeerTransport>,
+    rx: Receiver<PeerMsg>,
+    mut variant: String,
+    mut generation: u64,
+    tel: Arc<WorkerTelemetry>,
+) {
+    loop {
+        let msg = match rx.recv() {
+            Ok(m) => m,
+            Err(_) => break, // router gone: drain and exit
+        };
+        match msg {
+            PeerMsg::Infer(job) => {
+                serve_one(&mut *transport, worker, &variant, generation, &tel, job);
+            }
+            PeerMsg::Switch { variant: v, generation: g } => {
+                // Same `>=` rationale as the pool workers: an equal-
+                // generation re-application is idempotent, and a peer
+                // attached concurrently with a broadcast may start at the
+                // broadcast generation with the previous variant string.
+                if g >= generation {
+                    generation = g;
+                    if v != variant {
+                        variant = v;
+                        tel.record_switch();
+                    }
+                }
+            }
+            PeerMsg::Shutdown => break,
+        }
+    }
+    // Graceful drain: serve whatever is already queued on the link.
+    while let Ok(msg) = rx.try_recv() {
+        if let PeerMsg::Infer(job) = msg {
+            serve_one(&mut *transport, worker, &variant, generation, &tel, job);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::BatcherConfig;
+    use crate::coordinator::pool::PoolConfig;
+    use crate::coordinator::server::testing::MockExec;
+    use crate::telemetry::WorkerView;
+
+    fn local_pool(workers: usize, delay_us: u64, capacity: usize) -> ServingPool {
+        ServingPool::spawn(
+            move |_| {
+                Box::new(MockExec {
+                    delay: Duration::from_micros(delay_us),
+                    ..MockExec::quick()
+                }) as Box<dyn Executor>
+            },
+            "v",
+            PoolConfig {
+                workers,
+                queue_capacity: capacity,
+                batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+                ..PoolConfig::default()
+            },
+        )
+    }
+
+    fn peer_exec(delay_us: u64) -> impl Fn() -> Box<dyn Executor> + Send + Sync + 'static {
+        move || {
+            Box::new(MockExec { delay: Duration::from_micros(delay_us), ..MockExec::quick() })
+                as Box<dyn Executor>
+        }
+    }
+
+    fn view(worker: usize, remote: bool, ewma_s: f64) -> WorkerView {
+        WorkerView { worker, remote, ewma_s, ..WorkerView::default() }
+    }
+
+    fn snap_with(views: Vec<WorkerView>) -> TelemetrySnapshot {
+        TelemetrySnapshot { per_worker: views, ..TelemetrySnapshot::default() }
+    }
+
+    #[test]
+    fn routes_to_faster_peer_and_serves_correctly() {
+        let router = ShardRouter::new(
+            local_pool(1, 500, 64),
+            ShardRouterConfig { local_prior_s: 0.010, ..ShardRouterConfig::default() },
+        );
+        // Plan prior says the peer is 10× faster than local.
+        router.add_simulated_peer("edge", peer_exec(100), SharedLink::new(800.0, 0.1), 0.001);
+        let mut rxs = Vec::new();
+        for i in 0..16 {
+            let mut input = vec![0.0f32; 16];
+            input[i % 4] = 3.0;
+            rxs.push((i % 4, router.submit(input).unwrap()));
+        }
+        let mut remote_served = 0usize;
+        for (want, rx) in rxs {
+            let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(r.pred, want, "peer must compute the same predictions");
+            if r.worker >= REMOTE_WORKER_BASE {
+                remote_served += 1;
+                assert!(r.id >= super::REMOTE_ID_BASE);
+            }
+        }
+        assert!(remote_served > 0, "the plan-preferred peer must receive traffic");
+        let stats = router.shard_stats();
+        assert_eq!(stats.routed_remote() + stats.routed_local, 16);
+        assert_eq!(stats.peers[0].routed, stats.routed_remote());
+        let totals = router.shutdown();
+        assert_eq!(totals.served(), 16, "pool totals include peer-served requests");
+    }
+
+    #[test]
+    fn peer_capacity_overflows_fall_back_to_local() {
+        let router = ShardRouter::new(
+            local_pool(1, 200, 1024),
+            ShardRouterConfig {
+                peer_capacity: 1,
+                local_prior_s: 1.0, // strongly prefer the peer...
+                ..ShardRouterConfig::default()
+            },
+        );
+        // ...but the peer is slow (50 ms/request) and admits one at a time.
+        router.add_simulated_peer("edge", peer_exec(50_000), SharedLink::new(800.0, 0.1), 0.001);
+        let rxs: Vec<_> = (0..4).map(|_| router.submit(vec![1.0; 16]).unwrap()).collect();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        }
+        let stats = router.shard_stats();
+        assert!(stats.peers[0].routed >= 1, "first submission lands on the peer");
+        assert!(
+            stats.routed_local >= 2,
+            "capacity-bounded peer must spill to local: {stats:?}"
+        );
+        router.shutdown();
+    }
+
+    #[test]
+    fn maintain_degrades_and_readmits_from_snapshot_data_only() {
+        let router = ShardRouter::new(
+            local_pool(1, 200, 64),
+            ShardRouterConfig {
+                degrade_latency_s: 0.020,
+                readmit_latency_s: 0.010,
+                ..ShardRouterConfig::default()
+            },
+        );
+        router.add_simulated_peer("edge", peer_exec(100), SharedLink::new(800.0, 0.1), 0.001);
+        assert_eq!(router.admitted_peers(), 1);
+
+        // Measured drift past the budget → degraded.
+        let drifted = snap_with(vec![view(REMOTE_WORKER_BASE, true, 0.150)]);
+        assert_eq!(router.maintain(&drifted), 0);
+        assert_eq!(router.admitted_peers(), 0);
+        assert_eq!(router.shard_stats().degraded_events, 1);
+
+        // Inside the hysteresis band: still degraded.
+        let band = snap_with(vec![view(REMOTE_WORKER_BASE, true, 0.015)]);
+        assert_eq!(router.maintain(&band), 0);
+
+        // Recovered under the re-admit threshold → back in the route set.
+        let recovered = snap_with(vec![view(REMOTE_WORKER_BASE, true, 0.004)]);
+        assert_eq!(router.maintain(&recovered), 1);
+        assert_eq!(router.admitted_peers(), 1);
+        let stats = router.shard_stats();
+        assert_eq!(stats.readmitted_events, 1);
+        assert!((stats.peers[0].measured_s - 0.004).abs() < 1e-12);
+
+        // An admitted peer inside the band stays admitted (no thrash).
+        assert_eq!(router.maintain(&band), 1);
+        router.shutdown();
+    }
+
+    #[test]
+    fn degraded_peers_receive_only_probes() {
+        let cfg = ShardRouterConfig {
+            probe_every: 4,
+            degrade_latency_s: 0.020,
+            readmit_latency_s: 0.010,
+            local_prior_s: 1.0, // peer would otherwise win every pick
+            ..ShardRouterConfig::default()
+        };
+        let router = ShardRouter::new(local_pool(1, 100, 1024), cfg);
+        router.add_simulated_peer("edge", peer_exec(100), SharedLink::new(800.0, 0.1), 0.001);
+        router.maintain(&snap_with(vec![view(REMOTE_WORKER_BASE, true, 0.500)]));
+        assert_eq!(router.admitted_peers(), 0);
+
+        let rxs: Vec<_> = (0..16).map(|_| router.submit(vec![1.0; 16]).unwrap()).collect();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        }
+        let stats = router.shard_stats();
+        assert_eq!(
+            stats.peers[0].routed, stats.peers[0].probes,
+            "a degraded peer gets probe traffic only"
+        );
+        assert_eq!(stats.peers[0].probes, 4, "every 4th normal submission probes");
+        assert_eq!(stats.routed_local, 12);
+
+        // Priority submissions never probe a degraded link.
+        let rx = router.submit_priority(vec![1.0; 16]).unwrap();
+        assert!(rx.recv_timeout(Duration::from_secs(5)).unwrap().worker < REMOTE_WORKER_BASE);
+        router.shutdown();
+    }
+
+    #[test]
+    fn plan_updates_route_priors() {
+        // probe_every: 0 — this test pins down *scored* dispatch only
+        // (probing of unmeasurable peers is covered separately below).
+        let router = ShardRouter::new(
+            local_pool(1, 200, 64),
+            ShardRouterConfig { probe_every: 0, ..ShardRouterConfig::default() },
+        );
+        router.add_simulated_peer("jetson-nx", peer_exec(100), SharedLink::new(80.0, 4.0), 0.5);
+        router.add_simulated_peer("jetson-nano", peer_exec(100), SharedLink::new(80.0, 4.0), 0.5);
+        let plan = OffloadPlan {
+            placements: vec![
+                crate::partition::Placement { device: "local".into(), segments: vec![0] },
+                crate::partition::Placement { device: "jetson-nx".into(), segments: vec![1] },
+            ],
+            latency_s: 0.003,
+            energy_j: 0.1,
+            local_memory_bytes: 1.0,
+            transfer_bytes: 1000,
+        };
+        router.apply_plan(&plan, 0.008);
+        let stats = router.shard_stats();
+        let nx = stats.peers.iter().find(|p| p.name == "jetson-nx").unwrap();
+        let nano = stats.peers.iter().find(|p| p.name == "jetson-nano").unwrap();
+        assert!((nx.plan_s - 0.003).abs() < 1e-12, "plan member gets the plan's latency");
+        assert!(nano.plan_s.is_infinite(), "plan-excluded peer is priced out until measured");
+
+        // The plan-excluded peer cannot win a pick on an infinite prior.
+        let rxs: Vec<_> = (0..8).map(|_| router.submit(vec![1.0; 16]).unwrap()).collect();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        }
+        let stats = router.shard_stats();
+        assert_eq!(stats.peers.iter().find(|p| p.name == "jetson-nano").unwrap().routed, 0);
+        router.shutdown();
+    }
+
+    /// A plan-excluded peer (infinite prior, never measured) is not
+    /// permanently unroutable: probe turns cover admitted-but-
+    /// unmeasurable peers, and once a probe produces a measurement the
+    /// measured estimate overrides the infinite prior.
+    #[test]
+    fn plan_excluded_peer_is_probed_back_into_measurement() {
+        let router = ShardRouter::new(
+            local_pool(1, 200, 1024),
+            ShardRouterConfig { probe_every: 4, ..ShardRouterConfig::default() },
+        );
+        router.add_simulated_peer("edge", peer_exec(100), SharedLink::new(800.0, 0.1), 0.001);
+        router.apply_plan(&OffloadPlan::local_only("local", 1, 0.005, 0.1, 1.0), 0.005);
+        assert!(router.shard_stats().peers[0].plan_s.is_infinite());
+
+        let rxs: Vec<_> = (0..8).map(|_| router.submit(vec![1.0; 16]).unwrap()).collect();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        }
+        let stats = router.shard_stats();
+        assert!(stats.peers[0].probes >= 1, "unmeasurable peer must receive probes");
+        assert_eq!(stats.peers[0].routed, stats.peers[0].probes, "non-probe dispatch skips it");
+
+        // The probe produced measurements: after reconciliation the peer
+        // has a finite estimate again and rejoins scored dispatch.
+        router.maintain(&router.telemetry_snapshot());
+        let stats = router.shard_stats();
+        assert!(stats.peers[0].measured_s > 0.0);
+        let before = stats.peers[0].routed;
+        let rxs: Vec<_> = (1..=8).map(|_| router.submit(vec![1.0; 16]).unwrap()).collect();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        }
+        assert!(
+            router.shard_stats().peers[0].routed > before,
+            "measured estimate must override the infinite plan prior"
+        );
+        router.shutdown();
+    }
+
+    /// A peer whose transport fails outright produces no latency samples;
+    /// admission must react to the failure counter instead of trusting
+    /// the frozen healthy EWMA, and failing probes must keep it out.
+    #[test]
+    fn failing_peer_degrades_without_latency_samples() {
+        let router = ShardRouter::new(
+            local_pool(1, 200, 64),
+            ShardRouterConfig {
+                degrade_latency_s: 0.020,
+                readmit_latency_s: 0.010,
+                ..ShardRouterConfig::default()
+            },
+        );
+        router.add_simulated_peer("edge", peer_exec(100), SharedLink::new(800.0, 0.1), 0.001);
+
+        // Healthy history: a measured EWMA well under the budget.
+        let healthy = snap_with(vec![{
+            let mut v = view(REMOTE_WORKER_BASE, true, 0.004);
+            v.failed = 0;
+            v
+        }]);
+        assert_eq!(router.maintain(&healthy), 1);
+
+        // The link dies: latency EWMA frozen at its healthy value, but
+        // the failure counter advances → degraded.
+        let dead = snap_with(vec![{
+            let mut v = view(REMOTE_WORKER_BASE, true, 0.004);
+            v.failed = 3;
+            v
+        }]);
+        assert_eq!(router.maintain(&dead), 0, "fresh failures must degrade a frozen-EWMA peer");
+
+        // Probes that keep failing keep it degraded even though the
+        // stale EWMA sits under the re-admit bar.
+        let still_dead = snap_with(vec![{
+            let mut v = view(REMOTE_WORKER_BASE, true, 0.004);
+            v.failed = 5;
+            v
+        }]);
+        assert_eq!(router.maintain(&still_dead), 0, "failing probes must not re-admit");
+
+        // A clean window (no new failures, good latency) re-admits.
+        let recovered = snap_with(vec![{
+            let mut v = view(REMOTE_WORKER_BASE, true, 0.004);
+            v.failed = 5;
+            v
+        }]);
+        assert_eq!(router.maintain(&recovered), 1, "clean window must re-admit");
+        router.shutdown();
+    }
+
+    #[test]
+    fn variant_switch_reaches_peers() {
+        let router = ShardRouter::new(local_pool(1, 200, 64), ShardRouterConfig::default());
+        router.add_simulated_peer("edge", peer_exec(100), SharedLink::new(800.0, 0.1), 0.0001);
+        let gen = router.switch_variant("w2");
+        assert_eq!(gen, 1);
+        // Channel FIFO: a submission after the switch is served post-switch.
+        let rx = router.submit(vec![1.0; 16]).unwrap();
+        let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(r.variant, "w2");
+        assert_eq!(r.generation, 1);
+        let stats = router.shutdown();
+        assert_eq!(stats.switches(), 1, "peer slots count the switch like workers do");
+    }
+
+    #[test]
+    fn simulated_peer_accounts_link_transfer_in_telemetry() {
+        // 1 Mbit/s link, 0 RTT: 16 f32 in = 64 bytes → 512 µs in, 16
+        // bytes out → 128 µs back; execution is ~0. The recorded latency
+        // must include the analytic transfer cost.
+        let router = ShardRouter::new(local_pool(1, 100, 64), ShardRouterConfig::default());
+        router.add_simulated_peer("edge", peer_exec(0), SharedLink::new(1.0, 0.0), 0.0001);
+        let rx = router.submit(vec![1.0; 16]).unwrap();
+        let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(r.worker >= REMOTE_WORKER_BASE);
+        assert!(
+            r.latency >= Duration::from_micros(600),
+            "transfer cost missing from latency: {:?}",
+            r.latency
+        );
+        let tel = router.telemetry_snapshot();
+        let pv = tel.per_worker.iter().find(|v| v.remote).unwrap();
+        assert!(pv.ewma_s >= 600e-6, "hub EWMA must include Link::delay_s: {}", pv.ewma_s);
+        router.shutdown();
+    }
+}

@@ -64,7 +64,28 @@
 //! occupied, and shrinks multiplicatively on admission rejections or
 //! freed-core pressure, through [`coordinator::ServingPool::set_workers`].
 //! Requests can jump the batch queue through the priority lane
-//! ([`coordinator::ServingPool::submit_priority`]).
+//! ([`coordinator::ServingPool::submit_priority`]). The calibrator's
+//! learned observed/predicted ratios persist across restarts
+//! ([`optimizer::LatencyCalibrator::save`]/`load`, conventionally next to
+//! the artifact manifest) so a redeployed control plane starts warm.
+//!
+//! ## Cross-device shard routing
+//!
+//! The [`coordinator::ShardRouter`] closes the gap between the
+//! `partition` planner and the serving layer (Sec. III-B realized at
+//! serving time): submissions dispatch across the local pool *and* the
+//! partition layer's peers, each peer link a first-class remote
+//! [`telemetry::WorkerTelemetry`] slot in the same hub. The
+//! [`partition::OffloadPlan`] seeds per-peer route priors
+//! ([`coordinator::ShardRouter::apply_plan`]), measured hub EWMAs correct
+//! them, and the control plane's third actuation arm
+//! (`optimizer::Actuator::set_shards`) degrades a link whose measured
+//! round trip — including [`partition::Link::delay_s`] transfer cost —
+//! drifts past budget, probes it while degraded, and re-admits it on
+//! recovery. [`coordinator::SimulatedPeer`] (an executor behind a live
+//! [`partition::SharedLink`]) keeps the whole path testable offline;
+//! [`coordinator::PeerTransport`] is the seam for a real network
+//! transport.
 
 pub mod baselines;
 pub mod compress;

@@ -53,6 +53,23 @@ pub trait Actuator {
     /// Resize the serving pool to `n` workers; returns the applied width.
     /// Fixed-width actuators return their current width unchanged.
     fn set_workers(&self, n: usize) -> usize;
+
+    /// Reconcile cross-device shard admission from measured telemetry
+    /// (degrade peer links whose measured latency drifted past budget,
+    /// re-admit recovered ones); returns the number of admitted remote
+    /// peers. Local-only actuators keep the no-op default.
+    fn set_shards(&self, tel: &TelemetrySnapshot) -> usize {
+        let _ = tel;
+        0
+    }
+
+    /// Push a fresh offload plan's predicted route weights down to the
+    /// serving layer (the Sec. III-B plan informing shard admission);
+    /// `local_latency_s` is the calibrated on-device latency of the
+    /// chosen variant — the local routing prior. No-op by default.
+    fn apply_plan(&self, plan: &OffloadPlan, local_latency_s: f64) {
+        let _ = (plan, local_latency_s);
+    }
 }
 
 impl Actuator for crate::coordinator::ServingPool {
@@ -62,6 +79,24 @@ impl Actuator for crate::coordinator::ServingPool {
 
     fn set_workers(&self, n: usize) -> usize {
         crate::coordinator::ServingPool::set_workers(self, n)
+    }
+}
+
+impl Actuator for crate::coordinator::ShardRouter {
+    fn actuate(&self, variant: &str) -> u64 {
+        self.switch_variant(variant)
+    }
+
+    fn set_workers(&self, n: usize) -> usize {
+        self.pool().set_workers(n)
+    }
+
+    fn set_shards(&self, tel: &TelemetrySnapshot) -> usize {
+        self.maintain(tel)
+    }
+
+    fn apply_plan(&self, plan: &OffloadPlan, local_latency_s: f64) {
+        crate::coordinator::ShardRouter::apply_plan(self, plan, local_latency_s)
     }
 }
 
@@ -156,6 +191,15 @@ impl AdaptLoop {
     /// Enable AIMD pool sizing on telemetry-fed ticks.
     pub fn with_sizer(mut self, cfg: PoolSizerConfig) -> Self {
         self.sizer = Some(PoolSizer::new(cfg));
+        self
+    }
+
+    /// Start from a pre-trained calibrator (e.g. one restored with
+    /// [`LatencyCalibrator::load`] from next to the artifact manifest), so
+    /// a restarted deployment scores candidates against previously
+    /// measured ratios instead of relearning them from scratch.
+    pub fn with_calibrator(mut self, calibrator: LatencyCalibrator) -> Self {
+        self.calibrator = calibrator;
         self
     }
 
@@ -327,11 +371,17 @@ impl AdaptLoop {
         decision
     }
 
-    /// Push a configuration-changing decision to the serving layer.
+    /// Push a configuration-changing decision to the serving layer. An
+    /// offload decision also ships the plan's route weights down so a
+    /// shard router prices its peers by the freshly searched plan.
     fn actuate_decision(&self, decision: &Decision, actuator: &dyn Actuator) {
         match decision {
             Decision::Hold => {}
-            Decision::Switch(e) | Decision::Offload(e, _) | Decision::BestEffort(e) => {
+            Decision::Offload(e, plan) => {
+                actuator.actuate(&e.candidate.spec.detailed_label());
+                actuator.apply_plan(plan, e.metrics.latency_s);
+            }
+            Decision::Switch(e) | Decision::BestEffort(e) => {
                 actuator.actuate(&e.candidate.spec.detailed_label());
             }
         }
@@ -352,8 +402,11 @@ impl AdaptLoop {
     /// The fully closed cross-level loop: tick with measured telemetry,
     /// actuate the variant decision, then run the AIMD sizer (if
     /// configured) and actuate pool width through
-    /// [`Actuator::set_workers`]. This is the Fig. 6
-    /// Observe→Decide→Act cycle with both actuation arms live.
+    /// [`Actuator::set_workers`], and finally reconcile cross-device
+    /// shard admission through [`Actuator::set_shards`] — peer links
+    /// whose *measured* latency drifted past budget degrade to
+    /// local-only, recovered ones re-admit. This is the Fig. 6
+    /// Observe→Decide→Act cycle with all three actuation arms live.
     pub fn tick_with_telemetry(
         &mut self,
         snap: &ResourceSnapshot,
@@ -367,6 +420,7 @@ impl AdaptLoop {
                 actuator.set_workers(target);
             }
         }
+        actuator.set_shards(tel);
         decision
     }
 
@@ -512,6 +566,10 @@ mod tests {
     struct RecordingActuator {
         switched: std::sync::Mutex<Vec<String>>,
         resized: std::sync::Mutex<Vec<usize>>,
+        /// One entry per set_shards reconciliation call.
+        sharded: std::sync::Mutex<usize>,
+        /// (plan devices, local prior) per apply_plan call.
+        plans: std::sync::Mutex<Vec<(usize, f64)>>,
     }
 
     impl RecordingActuator {
@@ -519,6 +577,8 @@ mod tests {
             RecordingActuator {
                 switched: std::sync::Mutex::new(Vec::new()),
                 resized: std::sync::Mutex::new(Vec::new()),
+                sharded: std::sync::Mutex::new(0),
+                plans: std::sync::Mutex::new(Vec::new()),
             }
         }
     }
@@ -533,6 +593,15 @@ mod tests {
         fn set_workers(&self, n: usize) -> usize {
             self.resized.lock().unwrap().push(n);
             n
+        }
+
+        fn set_shards(&self, _tel: &TelemetrySnapshot) -> usize {
+            *self.sharded.lock().unwrap() += 1;
+            0
+        }
+
+        fn apply_plan(&self, plan: &OffloadPlan, local_latency_s: f64) {
+            self.plans.lock().unwrap().push((plan.placements.len(), local_latency_s));
         }
     }
 
@@ -685,5 +754,53 @@ mod tests {
         let act2 = RecordingActuator::new();
         plain.tick_with_telemetry(&snap, &tel, &act2);
         assert!(act2.resized.lock().unwrap().is_empty());
+    }
+
+    /// Every telemetry tick reconciles shard admission (the third
+    /// actuation arm) — including Hold ticks, since link drift is
+    /// independent of the variant decision.
+    #[test]
+    fn telemetry_tick_reconciles_shards_every_tick() {
+        let snap = ResourceMonitor::new(device("raspberrypi-4b").unwrap()).idle_snapshot();
+        let mut l = mk_loop(Budgets::unconstrained());
+        let act = RecordingActuator::new();
+        let tel = TelemetrySnapshot::default();
+        for _ in 0..3 {
+            l.tick_with_telemetry(&snap, &tel, &act);
+        }
+        assert_eq!(*act.sharded.lock().unwrap(), 3);
+        // Prediction-only ticks have no telemetry to reconcile from.
+        l.tick_with(&snap, &act);
+        assert_eq!(*act.sharded.lock().unwrap(), 3);
+    }
+
+    /// An offload decision pushes the searched plan's route weights to
+    /// the serving layer alongside the variant switch.
+    #[test]
+    fn offload_decision_applies_plan_to_actuator() {
+        let g = resnet18(ResNetStyle::Cifar, 100, 1);
+        let mut l = AdaptLoop::new(
+            g,
+            76.23,
+            vec![Candidate::baseline()],
+            Budgets { latency_s: f64::INFINITY, memory_bytes: 1024.0 * 1024.0 },
+        );
+        let peer = DeviceState {
+            snap: ResourceMonitor::new(device("jetson-nx").unwrap()).idle_snapshot(),
+            mem_budget: 8e9,
+        };
+        l = l.with_peers(vec![peer], Topology::wifi_pair("raspberrypi-4b", "jetson-nx"));
+        let act = RecordingActuator::new();
+        let snap = ResourceMonitor::new(device("raspberrypi-4b").unwrap()).idle_snapshot();
+        match l.tick_with(&snap, &act) {
+            Decision::Offload(e, plan) => {
+                let plans = act.plans.lock().unwrap();
+                assert_eq!(plans.len(), 1);
+                assert_eq!(plans[0].0, plan.placements.len());
+                assert!((plans[0].1 - e.metrics.latency_s).abs() < 1e-12);
+                assert_eq!(act.switched.lock().unwrap().len(), 1, "variant actuated too");
+            }
+            d => panic!("expected Offload, got {d:?}"),
+        }
     }
 }

@@ -19,9 +19,13 @@
 //! workers — decisions come from measurements, not from predictions.
 
 use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
 
 use crate::device::ResourceSnapshot;
 use crate::telemetry::{Ewma, TelemetrySnapshot};
+use crate::util::Json;
 
 /// Per-idle-tick weight pulling an unmeasured variant's ratio back
 /// toward 1.0 (see [`LatencyCalibrator::relax`]).
@@ -111,6 +115,92 @@ impl LatencyCalibrator {
     /// Variants with at least one measured observation.
     pub fn calibrated_variants(&self) -> usize {
         self.ratios.len()
+    }
+
+    // ── persistence (warm restarts) ───────────────────────────────────
+    //
+    // Learned observed/predicted ratios are per-process state; without
+    // persistence every restart relearns them from scratch and the first
+    // ticks of a redeployment are prediction-only. `save`/`load`
+    // round-trip the ratios AND the per-variant sample counters (so
+    // `observe_if_new` stays monotonic across the restart) as a small
+    // JSON document, conventionally stored next to the artifact manifest
+    // (see [`LatencyCalibrator::path_in`]).
+
+    /// File name used next to the artifact manifest.
+    pub const FILE_NAME: &'static str = "calibrator.json";
+
+    /// Conventional persistence path inside an artifacts directory.
+    pub fn path_in(dir: &Path) -> PathBuf {
+        dir.join(Self::FILE_NAME)
+    }
+
+    /// Serialize the calibrator's learned state to `path`.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut variants: Vec<&String> = self.ratios.keys().chain(self.seen.keys()).collect();
+        variants.sort();
+        variants.dedup();
+        let entries: Vec<Json> = variants
+            .into_iter()
+            .map(|v| {
+                Json::obj(vec![
+                    ("variant", Json::str(v.clone())),
+                    (
+                        "ratio",
+                        match self.ratios.get(v).and_then(|e| e.value()) {
+                            Some(r) => Json::num(r),
+                            None => Json::Null,
+                        },
+                    ),
+                    ("seen", Json::num(self.seen.get(v).copied().unwrap_or(0) as f64)),
+                ])
+            })
+            .collect();
+        let doc = Json::obj(vec![
+            ("format", Json::str("crowdhmt-calibrator-v1")),
+            ("alpha", Json::num(self.alpha)),
+            ("clamp_lo", Json::num(self.clamp.0)),
+            ("clamp_hi", Json::num(self.clamp.1)),
+            ("variants", Json::Arr(entries)),
+        ]);
+        std::fs::write(path, doc.to_string() + "\n")
+            .with_context(|| format!("writing calibrator state to {}", path.display()))
+    }
+
+    /// Restore a calibrator saved with [`LatencyCalibrator::save`].
+    pub fn load(path: &Path) -> Result<LatencyCalibrator> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading calibrator state from {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("parse calibrator state: {e}"))?;
+        if j.get("format").as_str() != Some("crowdhmt-calibrator-v1") {
+            bail!("unknown calibrator state format");
+        }
+        let alpha = j.get("alpha").as_f64().context("alpha")?;
+        if !(alpha > 0.0 && alpha <= 1.0) {
+            bail!("calibrator alpha out of range: {alpha}");
+        }
+        let mut c = LatencyCalibrator::new(alpha);
+        if let (Some(lo), Some(hi)) = (j.get("clamp_lo").as_f64(), j.get("clamp_hi").as_f64()) {
+            // An inverted or non-finite band would panic inside
+            // f64::clamp on the first observe() — reject it here instead.
+            if !(lo.is_finite() && hi.is_finite() && lo > 0.0 && lo <= hi) {
+                bail!("calibrator clamp band invalid: [{lo}, {hi}]");
+            }
+            c.clamp = (lo, hi);
+        }
+        for entry in j.get("variants").as_arr().context("variants")? {
+            let variant = entry.get("variant").as_str().context("variant")?.to_string();
+            if let Some(ratio) = entry.get("ratio").as_f64() {
+                // First observation sets the EWMA exactly, restoring the
+                // learned value without replaying its history.
+                c.ratios.entry(variant.clone()).or_insert_with(|| Ewma::new(alpha)).observe(ratio);
+            }
+            let seen = entry.get("seen").as_usize().unwrap_or(0);
+            if seen > 0 {
+                c.seen.insert(variant, seen);
+            }
+        }
+        Ok(c)
     }
 }
 
@@ -297,6 +387,71 @@ mod tests {
         // Unmeasured variants are untouched by relax.
         c.relax("never-seen");
         assert!((c.ratio("never-seen") - 1.0).abs() < 1e-12);
+    }
+
+    // ── calibrator persistence ─────────────────────────────────────────
+
+    fn temp_path(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("chmt-cal-{}-{}", tag, std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        LatencyCalibrator::path_in(&dir)
+    }
+
+    /// Round trip: learned ratios, the clamp band, and the monotonic
+    /// per-variant sample counters all survive a restart — the restored
+    /// calibrator corrects predictions immediately and does not
+    /// re-observe the stale pre-restart window.
+    #[test]
+    fn calibrator_persistence_round_trips() {
+        let mut c = LatencyCalibrator::new(0.4);
+        assert!(c.observe_if_new("slow", 24, 0.040, 0.010));
+        assert!(c.observe_if_new("honest", 8, 0.010, 0.010));
+        c.relax("slow");
+        let path = temp_path("rt");
+        c.save(&path).unwrap();
+
+        let mut warm = LatencyCalibrator::load(&path).unwrap();
+        assert_eq!(warm.calibrated_variants(), 2);
+        assert!((warm.ratio("slow") - c.ratio("slow")).abs() < 1e-12);
+        assert!((warm.ratio("honest") - 1.0).abs() < 1e-9);
+        assert!((warm.calibrated("slow", 0.010) - c.calibrated("slow", 0.010)).abs() < 1e-12);
+        // Sample counters restored: the pre-restart telemetry window is
+        // stale, fresh samples past it are observed.
+        assert!(!warm.observe_if_new("slow", 24, 0.080, 0.010), "stale window must be ignored");
+        assert!(warm.observe_if_new("slow", 25, 0.020, 0.010));
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn calibrator_load_rejects_missing_and_garbage() {
+        let path = temp_path("bad");
+        assert!(LatencyCalibrator::load(&path).is_err(), "missing file is an error");
+        std::fs::write(&path, "{\"format\":\"nope\"}").unwrap();
+        assert!(LatencyCalibrator::load(&path).is_err(), "wrong format is an error");
+        std::fs::write(&path, "not json").unwrap();
+        assert!(LatencyCalibrator::load(&path).is_err(), "garbage is an error");
+        std::fs::write(&path, "{\"format\":\"crowdhmt-calibrator-v1\",\"alpha\":7,\"variants\":[]}")
+            .unwrap();
+        assert!(LatencyCalibrator::load(&path).is_err(), "out-of-range alpha is an error");
+        std::fs::write(
+            &path,
+            "{\"format\":\"crowdhmt-calibrator-v1\",\"alpha\":0.4,\"clamp_lo\":5.0,\"clamp_hi\":0.1,\"variants\":[]}",
+        )
+        .unwrap();
+        assert!(LatencyCalibrator::load(&path).is_err(), "inverted clamp band is an error");
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    /// An empty (never-observed) calibrator still round-trips.
+    #[test]
+    fn calibrator_persistence_empty() {
+        let c = LatencyCalibrator::default();
+        let path = temp_path("empty");
+        c.save(&path).unwrap();
+        let warm = LatencyCalibrator::load(&path).unwrap();
+        assert_eq!(warm.calibrated_variants(), 0);
+        assert!((warm.ratio("anything") - 1.0).abs() < 1e-12);
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
     }
 
     // ── AIMD sizer ─────────────────────────────────────────────────────

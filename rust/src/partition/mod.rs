@@ -11,6 +11,6 @@ pub mod prepartition;
 
 pub use cas::cas_plan;
 pub use mincut::{dads_plan, FlowNet};
-pub use network::{Link, Topology};
+pub use network::{Link, SharedLink, Topology};
 pub use offload::{plan_offload, DeviceState, OffloadPlan, Placement};
 pub use prepartition::{prepartition, CutPoint, PrePartition, Segment};

@@ -7,6 +7,7 @@
 //! (feature bytes / bandwidth).
 
 use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
 
 /// A directed link between two devices.
 #[derive(Debug, Clone)]
@@ -23,6 +24,56 @@ impl Link {
     /// Time to move `bytes` across this link.
     pub fn delay_s(&self, bytes: usize) -> f64 {
         self.rtt_s / 2.0 + bytes as f64 / self.bytes_per_s.max(1.0)
+    }
+}
+
+/// A mutable, shareable view of one live link's quality. The serving
+/// layer's simulated remote peers read it per request while tests and
+/// context traces mutate it mid-run — the time-varying bandwidth of the
+/// paper's campus case study, applied to a single peer link instead of a
+/// whole [`Topology`]. Cloning shares the underlying link.
+#[derive(Debug, Clone)]
+pub struct SharedLink(Arc<RwLock<Link>>);
+
+impl SharedLink {
+    /// A fresh link with the given bandwidth (Mbit/s) and RTT (ms).
+    pub fn new(mbps: f64, rtt_ms: f64) -> SharedLink {
+        SharedLink::of(Link {
+            from: "local".into(),
+            to: "peer".into(),
+            bytes_per_s: mbps * 1e6 / 8.0,
+            rtt_s: rtt_ms / 1e3,
+        })
+    }
+
+    /// Wrap an existing link description.
+    pub fn of(link: Link) -> SharedLink {
+        SharedLink(Arc::new(RwLock::new(link)))
+    }
+
+    /// Current time to move `bytes` across the link.
+    pub fn delay_s(&self, bytes: usize) -> f64 {
+        self.0.read().unwrap().delay_s(bytes)
+    }
+
+    /// Replace the link quality outright.
+    pub fn set(&self, mbps: f64, rtt_ms: f64) {
+        let mut l = self.0.write().unwrap();
+        l.bytes_per_s = mbps * 1e6 / 8.0;
+        l.rtt_s = rtt_ms / 1e3;
+    }
+
+    /// Scale the current bandwidth (a degradation/recovery trace step).
+    pub fn scale_bandwidth(&self, factor: f64) {
+        self.0.write().unwrap().bytes_per_s *= factor;
+    }
+
+    pub fn bytes_per_s(&self) -> f64 {
+        self.0.read().unwrap().bytes_per_s
+    }
+
+    pub fn rtt_s(&self) -> f64 {
+        self.0.read().unwrap().rtt_s
     }
 }
 
@@ -117,5 +168,31 @@ mod tests {
         t.scale_bandwidth(0.5);
         let after = t.delay_s("a", "b", 1_000_000).unwrap();
         assert!(after > before * 1.5);
+    }
+
+    // ── live shared links ──────────────────────────────────────────────
+
+    #[test]
+    fn shared_link_mutations_are_visible_through_clones() {
+        let link = SharedLink::new(80.0, 4.0);
+        let view = link.clone();
+        let healthy = view.delay_s(1_000_000);
+        // 1 MB over 10 MB/s plus 2 ms half-RTT.
+        assert!((healthy - 0.102).abs() < 1e-6, "healthy={healthy}");
+        link.scale_bandwidth(0.1);
+        let degraded = view.delay_s(1_000_000);
+        assert!((degraded - 1.002).abs() < 1e-6, "degraded={degraded}");
+        link.set(80.0, 4.0);
+        assert!((view.delay_s(1_000_000) - healthy).abs() < 1e-9, "recovery restores the trace");
+    }
+
+    #[test]
+    fn shared_link_zero_bandwidth_is_finite() {
+        let link = SharedLink::new(0.0, 4.0);
+        // Link::delay_s floors bandwidth at 1 byte/s: enormous but finite,
+        // so planners and routers degrade instead of dividing by zero.
+        let d = link.delay_s(1000);
+        assert!(d.is_finite());
+        assert!(d > 100.0);
     }
 }

@@ -48,6 +48,20 @@ impl OffloadPlan {
     pub fn is_local_only(&self) -> bool {
         self.placements.len() <= 1
     }
+
+    /// Does any placement run segments on `device`?
+    pub fn involves(&self, device: &str) -> bool {
+        self.placements.iter().any(|p| p.device == device)
+    }
+
+    /// Plan → route weight for the serving layer's shard router: the
+    /// plan-predicted end-to-end latency of serving one request through
+    /// this assignment, for a `device` that participates in it; `None`
+    /// when the plan does not route through the device (the router then
+    /// treats the peer as plan-excluded until measurements say otherwise).
+    pub fn route_weight(&self, device: &str) -> Option<f64> {
+        self.involves(device).then_some(self.latency_s)
+    }
 }
 
 /// Per-device execution rates used by the planner (derived from live
@@ -151,6 +165,18 @@ pub fn plan_offload(graph: &Graph, pp: &PrePartition, devices: &[DeviceState], t
             best = dist[nseg][d] + home;
             best_d = d;
         }
+    }
+
+    // No device chain reached the end (disconnected topology, or memory
+    // budgets — possibly the local device's own — exclude some segment on
+    // every path): degrade to the predicted local-only plan rather than
+    // panic in reconstruction. Feasibility against the local budget is the
+    // caller's call (Eq. 3 / best-effort), not the planner's.
+    if nseg == 0 || !best.is_finite() || prev[nseg][best_d].is_none() {
+        let lat: f64 = seg_lat.iter().map(|r| r[0]).sum();
+        let en: f64 = seg_en.iter().map(|r| r[0]).sum();
+        let mem: f64 = seg_mem.iter().sum();
+        return OffloadPlan::local_only(&devices[0].snap.device, nseg, lat, en, mem);
     }
 
     // Reconstruct the assignment.
@@ -265,6 +291,88 @@ mod tests {
         let covered: usize = plan.placements.iter().map(|p| p.segments.len()).sum();
         assert_eq!(covered, pp.segments.len());
         assert!(plan.latency_s.is_finite());
+    }
+
+    // ── degradation edge cases: every one must yield a valid local-only
+    //    plan, never a panic ───────────────────────────────────────────
+
+    /// A peer with no link to the local device can never receive a
+    /// segment: the plan is local-only.
+    #[test]
+    fn missing_link_degrades_to_local_only() {
+        let g = resnet18(ResNetStyle::Cifar, 100, 1);
+        let pp = prepartition(&g);
+        let topo = Topology::new(); // no links at all
+        let devs = vec![state("raspberrypi-4b", 4.0), state("jetson-nx", 8.0)];
+        let plan = plan_offload(&g, &pp, &devs, &topo);
+        assert!(plan.is_local_only(), "disconnected peer must not receive work");
+        assert_eq!(plan.transfer_bytes, 0);
+        assert!(plan.latency_s.is_finite());
+        let covered: usize = plan.placements.iter().map(|p| p.segments.len()).sum();
+        assert_eq!(covered, pp.segments.len());
+    }
+
+    /// A nominally connected link with (near-)zero bandwidth makes every
+    /// transfer astronomically expensive: the planner stays local instead
+    /// of dividing by zero or offloading into a stall.
+    #[test]
+    fn zero_bandwidth_link_stays_local() {
+        let g = resnet18(ResNetStyle::Cifar, 100, 1);
+        let pp = prepartition(&g);
+        for mbps in [0.0, 1e-9] {
+            let mut topo = Topology::new();
+            topo.connect("raspberrypi-4b", "jetson-nx", mbps, 4.0);
+            let devs = vec![state("raspberrypi-4b", 4.0), state("jetson-nx", 8.0)];
+            let plan = plan_offload(&g, &pp, &devs, &topo);
+            assert!(plan.is_local_only(), "{mbps} Mbit/s link must not offload");
+            assert!(plan.latency_s.is_finite());
+        }
+    }
+
+    /// A peer whose memory budget excludes every segment contributes
+    /// nothing: the plan is local-only even over a fast link.
+    #[test]
+    fn peer_memory_exclusion_degrades_to_local_only() {
+        let g = resnet18(ResNetStyle::Cifar, 100, 1);
+        let pp = prepartition(&g);
+        let topo = Topology::wifi_pair("raspberrypi-4b", "jetson-nx");
+        let mut peer = state("jetson-nx", 8.0);
+        peer.mem_budget = 0.0;
+        let devs = vec![state("raspberrypi-4b", 4.0), peer];
+        let plan = plan_offload(&g, &pp, &devs, &topo);
+        assert!(plan.is_local_only(), "memory-excluded peer must not receive segments");
+        assert_eq!(plan.placements[0].device, "raspberrypi-4b");
+    }
+
+    /// Even when NO device (local included) fits some segment, the
+    /// planner falls back to the predicted local-only plan — the Eq. 3
+    /// feasibility check downstream decides what to do with it.
+    #[test]
+    fn nothing_fits_anywhere_falls_back_to_local_only() {
+        let g = resnet18(ResNetStyle::Cifar, 100, 1);
+        let pp = prepartition(&g);
+        let topo = Topology::wifi_pair("raspberrypi-4b", "jetson-nx");
+        let devs = vec![state("raspberrypi-4b", 0.0), state("jetson-nx", 0.0)];
+        let plan = plan_offload(&g, &pp, &devs, &topo);
+        assert!(plan.is_local_only());
+        assert!(plan.latency_s.is_finite(), "fallback carries the predicted local latency");
+        assert!(plan.local_memory_bytes > 0.0);
+    }
+
+    // ── plan → route weights (shard router priors) ─────────────────────
+
+    #[test]
+    fn route_weights_cover_participating_devices_only() {
+        let g = resnet18(ResNetStyle::Cifar, 100, 1);
+        let pp = prepartition(&g);
+        let topo = Topology::wifi_pair("raspberrypi-4b", "jetson-nx");
+        let devs = vec![state("raspberrypi-4b", 4.0), state("jetson-nx", 8.0)];
+        let plan = plan_offload(&g, &pp, &devs, &topo);
+        assert!(!plan.is_local_only(), "fast peer should participate");
+        assert!(plan.involves("jetson-nx"));
+        let w = plan.route_weight("jetson-nx").expect("participating peer has a weight");
+        assert!((w - plan.latency_s).abs() < 1e-12);
+        assert_eq!(plan.route_weight("jetson-nano"), None, "absent devices have no weight");
     }
 
     #[test]

@@ -14,13 +14,32 @@
 //! slots with `retired = true`: totals stay monotonic across resizes, so
 //! `served + rejected + failed` keeps accounting for every submission the
 //! pool ever admitted or refused.
+//!
+//! Since the cross-device sharding layer landed, slots come in two kinds:
+//! *local* worker slots ([`TelemetryHub::register`]) and *remote* peer
+//! slots ([`TelemetryHub::register_remote`]) — one per partition-layer
+//! peer link, published by the shard router's peer threads. Remote slots
+//! use the identical publishing surface (the paper's Sec. III-B peers are
+//! first-class members of the Fig. 6 feedback loop), but the snapshot
+//! keeps them out of `live_workers`/`queue_depth` so the AIMD sizer's
+//! occupancy and free-core signals stay about local cores; peers are
+//! counted in `remote_peers`/`peer_queue_depth` instead. Per-variant
+//! latency views merge local and remote samples — the calibrator sees
+//! measured cross-device latency exactly the way it sees local latency.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
 use super::counter::{Counter, Gauge};
+use super::ewma::Ewma;
 use super::reservoir::{percentiles_of, Reservoir};
+
+/// Smoothing weight of each slot's end-to-end latency EWMA (the shard
+/// router's per-link drift signal): heavy enough that a handful of
+/// degraded-link samples push the estimate past a budget, light enough
+/// that one pathological request does not.
+const SLOT_LATENCY_EWMA_ALPHA: f64 = 0.3;
 
 /// Which queue a request rode through the batcher: the normal lane or the
 /// high-priority lane that is drained first (latency-critical requests).
@@ -68,12 +87,17 @@ pub struct WorkerTelemetry {
     /// the calibrator would evict variants for backlog the sizer is
     /// about to absorb. End-to-end latency lives in the lane reservoirs.
     per_variant: Mutex<BTreeMap<String, Reservoir>>,
+    /// EWMA of per-request end-to-end latency (both lanes): the recency-
+    /// biased drift signal the shard router holds against its budget.
+    ewma: Mutex<Ewma>,
     reservoir_capacity: usize,
+    /// Remote peer-link slot (shard router) rather than a local worker.
+    remote: bool,
     retired: AtomicBool,
 }
 
 impl WorkerTelemetry {
-    fn new(worker: usize, reservoir_capacity: usize) -> WorkerTelemetry {
+    fn new(worker: usize, reservoir_capacity: usize, remote: bool) -> WorkerTelemetry {
         WorkerTelemetry {
             worker,
             served: [Counter::new(), Counter::new()],
@@ -87,7 +111,9 @@ impl WorkerTelemetry {
                 Mutex::new(Reservoir::new(reservoir_capacity)),
             ],
             per_variant: Mutex::new(BTreeMap::new()),
+            ewma: Mutex::new(Ewma::new(SLOT_LATENCY_EWMA_ALPHA)),
             reservoir_capacity,
+            remote,
             retired: AtomicBool::new(false),
         }
     }
@@ -116,6 +142,12 @@ impl WorkerTelemetry {
                 if lane.index() == i {
                     r.push(lat);
                 }
+            }
+        }
+        {
+            let mut e = self.ewma.lock().unwrap();
+            for &(_, lat) in samples {
+                e.observe(lat);
             }
         }
         let mut per_v = self.per_variant.lock().unwrap();
@@ -162,6 +194,18 @@ impl WorkerTelemetry {
 
     pub fn is_retired(&self) -> bool {
         self.retired.load(Ordering::Acquire)
+    }
+
+    /// Whether this slot is a remote peer link (shard router) rather than
+    /// a local serving worker.
+    pub fn is_remote(&self) -> bool {
+        self.remote
+    }
+
+    /// Smoothed per-request end-to-end latency for this slot (seconds);
+    /// 0.0 until the first sample.
+    pub fn latency_ewma_s(&self) -> f64 {
+        self.ewma.lock().unwrap().value_or(0.0)
     }
 
     pub fn queue_depth(&self) -> usize {
@@ -232,11 +276,13 @@ pub struct VariantView {
     pub mean_s: f64,
 }
 
-/// One worker's counters at snapshot time.
+/// One worker's (or remote peer link's) counters at snapshot time.
 #[derive(Debug, Clone, Default)]
 pub struct WorkerView {
     pub worker: usize,
     pub retired: bool,
+    /// Remote peer-link slot rather than a local worker.
+    pub remote: bool,
     pub served: usize,
     pub batches: usize,
     pub rejected: usize,
@@ -245,18 +291,27 @@ pub struct WorkerView {
     pub queue_depth: usize,
     pub p50_s: f64,
     pub p95_s: f64,
+    /// Smoothed end-to-end latency (seconds, 0.0 until measured) — the
+    /// shard router's per-link degrade/re-admit signal.
+    pub ewma_s: f64,
 }
 
 /// What the control plane sees each tick: the measured counterpart of the
 /// device monitor's `ResourceSnapshot`.
 #[derive(Debug, Clone)]
 pub struct TelemetrySnapshot {
-    /// Workers currently serving (retired slots excluded).
+    /// Local workers currently serving (retired and remote slots
+    /// excluded — the AIMD sizer's width/occupancy signals stay about
+    /// local cores).
     pub live_workers: usize,
+    /// Remote peer links currently routable (retired excluded).
+    pub remote_peers: usize,
     /// Per-worker bounded queue capacity (for occupancy).
     pub queue_capacity: usize,
-    /// Admitted-but-unanswered requests across live workers.
+    /// Admitted-but-unanswered requests across live *local* workers.
     pub queue_depth: usize,
+    /// Admitted-but-unanswered requests in flight on remote peer links.
+    pub peer_queue_depth: usize,
     pub served: usize,
     pub batches: usize,
     pub rejected: usize,
@@ -276,8 +331,10 @@ impl Default for TelemetrySnapshot {
     fn default() -> Self {
         TelemetrySnapshot {
             live_workers: 0,
+            remote_peers: 0,
             queue_capacity: 1,
             queue_depth: 0,
+            peer_queue_depth: 0,
             served: 0,
             batches: 0,
             rejected: 0,
@@ -333,9 +390,19 @@ impl TelemetryHub {
         }
     }
 
-    /// Register a new worker slot (pool spawn / dynamic grow).
+    /// Register a new local worker slot (pool spawn / dynamic grow).
     pub fn register(&self, worker: usize) -> Arc<WorkerTelemetry> {
-        let slot = Arc::new(WorkerTelemetry::new(worker, self.reservoir_capacity));
+        let slot = Arc::new(WorkerTelemetry::new(worker, self.reservoir_capacity, false));
+        self.slots.write().unwrap().push(Arc::clone(&slot));
+        slot
+    }
+
+    /// Register a remote peer-link slot (shard router attach): the same
+    /// publishing surface as a local worker — measured cross-device
+    /// latency flows to the calibrator like local latency does — but
+    /// excluded from the snapshot's local width/occupancy signals.
+    pub fn register_remote(&self, worker: usize) -> Arc<WorkerTelemetry> {
+        let slot = Arc::new(WorkerTelemetry::new(worker, self.reservoir_capacity, true));
         self.slots.write().unwrap().push(Arc::clone(&slot));
         slot
     }
@@ -376,6 +443,7 @@ impl TelemetryHub {
             snap.per_worker.push(WorkerView {
                 worker: s.worker,
                 retired,
+                remote: s.is_remote(),
                 served,
                 batches: s.batches(),
                 rejected: s.rejected(),
@@ -384,6 +452,7 @@ impl TelemetryHub {
                 queue_depth: depth,
                 p50_s: wp[0],
                 p95_s: wp[1],
+                ewma_s: s.latency_ewma_s(),
             });
             snap.served += served;
             snap.batches += s.batches();
@@ -391,8 +460,13 @@ impl TelemetryHub {
             snap.failed += s.failed();
             snap.switches = snap.switches.max(s.switches());
             if !retired {
-                snap.live_workers += 1;
-                snap.queue_depth += depth;
+                if s.is_remote() {
+                    snap.remote_peers += 1;
+                    snap.peer_queue_depth += depth;
+                } else {
+                    snap.live_workers += 1;
+                    snap.queue_depth += depth;
+                }
             }
             for (variant, r) in s.per_variant_clone() {
                 let acc = variant_acc.entry(variant).or_insert_with(|| (0, Vec::new()));
@@ -504,6 +578,56 @@ mod tests {
         w0.depth_inc();
         let snap = hub.snapshot();
         assert!((snap.occupancy() - 2.0 / 8.0).abs() < 1e-12);
+    }
+
+    /// Remote peer slots publish like workers but stay out of the local
+    /// width/occupancy signals: the sizer's view is unchanged while the
+    /// calibrator's per-variant view merges both sides.
+    #[test]
+    fn remote_slots_are_peers_not_workers() {
+        let hub = TelemetryHub::new(8);
+        let w = hub.register(0);
+        let p = hub.register_remote(1 << 16);
+        assert!(!w.is_remote());
+        assert!(p.is_remote());
+        w.record_batch("v", 0.004, &[(Lane::Normal, 0.004)]);
+        p.record_batch("v", 0.020, &[(Lane::Normal, 0.022)]);
+        p.depth_inc();
+        let snap = hub.snapshot();
+        assert_eq!(snap.live_workers, 1);
+        assert_eq!(snap.remote_peers, 1);
+        assert_eq!(snap.queue_depth, 0, "peer backlog must not feed local occupancy");
+        assert_eq!(snap.peer_queue_depth, 1);
+        assert_eq!(snap.occupancy(), 0.0);
+        assert_eq!(snap.served, 2, "totals include remote serves");
+        // Per-variant views merge local + remote execution latency: the
+        // calibrator sees the cross-device cost like any local sample.
+        assert_eq!(snap.per_variant["v"].count, 2);
+        assert!((snap.per_variant["v"].p95_s - 0.020).abs() < 1e-12);
+        let pv = snap.per_worker.iter().find(|v| v.remote).unwrap();
+        assert_eq!(pv.worker, 1 << 16);
+        assert!((pv.ewma_s - 0.022).abs() < 1e-12, "first sample sets the slot EWMA exactly");
+    }
+
+    /// The slot latency EWMA is recency-biased: a burst of degraded-link
+    /// samples drags it past a budget within a few observations, and good
+    /// samples pull it back — the shard router's drift signal.
+    #[test]
+    fn slot_ewma_tracks_drift() {
+        let hub = TelemetryHub::new(8);
+        let p = hub.register_remote(1 << 16);
+        for _ in 0..8 {
+            p.record_batch("v", 0.004, &[(Lane::Normal, 0.004)]);
+        }
+        assert!(p.latency_ewma_s() < 0.005);
+        for _ in 0..8 {
+            p.record_batch("v", 0.060, &[(Lane::Normal, 0.060)]);
+        }
+        assert!(p.latency_ewma_s() > 0.050, "degraded samples must dominate quickly");
+        for _ in 0..12 {
+            p.record_batch("v", 0.004, &[(Lane::Normal, 0.004)]);
+        }
+        assert!(p.latency_ewma_s() < 0.010, "recovery samples must pull the estimate back");
     }
 
     #[test]

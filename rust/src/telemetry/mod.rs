@@ -12,7 +12,7 @@
 //! | **Observe** (resource monitor)| [`ResourceSnapshot`] — *predicted-side* context  |
 //! | **Observe** (runtime profiler)| [`Reservoir`] latency windows, [`Counter`]/[`Gauge`] totals and queue depths, published per worker into the [`TelemetryHub`] |
 //! | **Decide** (heuristic optimizer) | [`TelemetrySnapshot`] consumed by the control plane: the latency calibrator corrects Eq. 2 predictions with measured ratios, the AIMD sizer reads occupancy/rejections |
-//! | **Act** (configuration actuation) | `Actuator::actuate` (variant switch) and `Actuator::set_workers` (pool width), both in the optimizer layer |
+//! | **Act** (configuration actuation) | `Actuator::actuate` (variant switch), `Actuator::set_workers` (pool width), and `Actuator::set_shards` (cross-device peer admission), all in the optimizer layer |
 //!
 //! Design rules:
 //!
@@ -30,6 +30,12 @@
 //! - **Totals survive resizes.** Retired workers keep their slots, so
 //!   `served + rejected + failed` accounts for every submission across
 //!   dynamic grow/shrink episodes.
+//! - **Remote peers are first-class publishers.** The shard router's
+//!   peer links register *remote* slots (`TelemetryHub::register_remote`)
+//!   with the identical publishing surface; snapshots keep them out of
+//!   the local width/occupancy signals (the AIMD sizer reasons about
+//!   local cores) while merging their measured latencies into the
+//!   per-variant views the calibrator consumes.
 //!
 //! [`ResourceSnapshot`]: crate::device::ResourceSnapshot
 

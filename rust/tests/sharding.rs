@@ -1,0 +1,267 @@
+//! Cross-device sharding acceptance suite: the shard router serving
+//! through partition peers under a *time-varying link trace*, with every
+//! degrade/re-admit decision driven by `TelemetrySnapshot` data only —
+//! plus the fully closed control plane (`tick_with_telemetry` actuating
+//! `set_shards`) degrading a drifting link. Mock executors + simulated
+//! peers throughout: no built artifacts, no network.
+
+use std::time::Duration;
+
+use anyhow::Result;
+use crowdhmtware::coordinator::{
+    BatcherConfig, Executor, PoolConfig, ServingPool, ShardRouter, ShardRouterConfig,
+    REMOTE_WORKER_BASE,
+};
+use crowdhmtware::device::{device, ResourceMonitor};
+use crowdhmtware::models::{backbone, BackboneConfig};
+use crowdhmtware::optimizer::{AdaptLoop, Budgets, Candidate, Decision};
+use crowdhmtware::partition::SharedLink;
+
+const CLASSES: usize = 4;
+/// 16 KB inputs: big enough that link bandwidth — not RTT — dominates the
+/// transfer term, so a 10× bandwidth drop is a ~10× transfer-cost jump.
+const ELEMS: usize = 4096;
+
+/// Deterministic fake model: class = argmax over the first CLASSES input
+/// values; each batch costs a fixed wall-clock delay.
+struct MockExec {
+    delay: Duration,
+}
+
+impl Executor for MockExec {
+    fn batch_sizes(&self, _variant: &str) -> Vec<usize> {
+        vec![1]
+    }
+
+    fn num_classes(&self) -> usize {
+        CLASSES
+    }
+
+    fn input_elems(&self) -> usize {
+        ELEMS
+    }
+
+    fn run(&mut self, _variant: &str, batch: usize, input: &[f32]) -> Result<Vec<f32>> {
+        std::thread::sleep(self.delay);
+        let mut out = vec![0.0f32; batch * CLASSES];
+        for b in 0..batch {
+            let row = &input[b * ELEMS..b * ELEMS + CLASSES];
+            let total: f32 = row.iter().map(|x| x.exp()).sum();
+            for (k, &x) in row.iter().enumerate() {
+                out[b * CLASSES + k] = x.exp() / total;
+            }
+        }
+        Ok(out)
+    }
+}
+
+fn input_for(class: usize) -> Vec<f32> {
+    let mut v = vec![0.0f32; ELEMS];
+    v[class % CLASSES] = 4.0;
+    v
+}
+
+fn local_pool(workers: usize, delay: Duration, variant: &str) -> ServingPool {
+    ServingPool::spawn(
+        move |_| Box::new(MockExec { delay }) as Box<dyn Executor>,
+        variant,
+        PoolConfig {
+            workers,
+            queue_capacity: 256,
+            batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_micros(100) },
+            ..PoolConfig::default()
+        },
+    )
+}
+
+/// One adaptation-style tick: submit a burst through the router, wait for
+/// every response, snapshot the hub, reconcile shard admission from that
+/// snapshot alone. Returns (remote-routed delta, probe delta, local
+/// delta) for the burst.
+fn tick(router: &ShardRouter, burst: usize) -> (usize, usize, usize) {
+    let before = router.shard_stats();
+    let rxs: Vec<_> = (0..burst).map(|i| router.submit(input_for(i)).expect("admitted")).collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let r = rx.recv_timeout(Duration::from_secs(30)).expect("response");
+        assert_eq!(r.pred, i % CLASSES, "wrong prediction (local/remote must agree)");
+    }
+    let tel = router.telemetry_snapshot();
+    router.maintain(&tel);
+    let after = router.shard_stats();
+    (
+        after.routed_remote() - before.routed_remote(),
+        after.peers.iter().map(|p| p.probes).sum::<usize>()
+            - before.peers.iter().map(|p| p.probes).sum::<usize>(),
+        after.routed_local - before.routed_local,
+    )
+}
+
+/// The acceptance scenario: under a degrading link trace (bandwidth drops
+/// 10×) the router shifts traffic back to local workers within a few
+/// ticks — deciding from `TelemetrySnapshot` data only — and re-offloads
+/// after the link recovers.
+#[test]
+fn degrading_link_sheds_to_local_and_reoffloads_on_recovery() {
+    const BURST: usize = 8;
+    // Healthy peer round trip ≈ 1 ms exec + ~5.3 ms transfer (16 KB at
+    // 40 Mbit/s + 2 ms RTT) ≈ 6.3 ms; local ≈ 8 ms/request. After the 10×
+    // bandwidth drop the peer costs ≳ 35 ms — far past the 15 ms degrade
+    // budget; after recovery it is well under the 10 ms re-admit bar.
+    let link = SharedLink::new(40.0, 2.0);
+    let router = ShardRouter::new(
+        local_pool(2, Duration::from_millis(8), "v"),
+        ShardRouterConfig {
+            peer_capacity: 3,
+            degrade_latency_s: 0.015,
+            readmit_latency_s: 0.010,
+            probe_every: 2,
+            local_prior_s: 0.008,
+        },
+    );
+    router.add_simulated_peer(
+        "edge-peer",
+        || Box::new(MockExec { delay: Duration::from_millis(1) }) as Box<dyn Executor>,
+        link.clone(),
+        0.006, // plan-predicted remote latency: preferred over local
+    );
+
+    // ── Phase 1: healthy link — the plan-preferred peer takes traffic.
+    let mut remote_healthy = 0;
+    for _ in 0..3 {
+        let (r, _, _) = tick(&router, BURST);
+        remote_healthy += r;
+    }
+    assert_eq!(router.admitted_peers(), 1, "healthy peer must stay admitted");
+    assert!(
+        remote_healthy >= 4,
+        "plan-preferred peer must carry real traffic when healthy, got {remote_healthy}/24"
+    );
+
+    // ── Phase 2: the link degrades 10×. Measured round trips breach the
+    // budget and the router evicts the peer within a few ticks.
+    link.scale_bandwidth(0.1);
+    let mut degraded_at = None;
+    for t in 1..=5 {
+        tick(&router, BURST);
+        if router.admitted_peers() == 0 {
+            degraded_at = Some(t);
+            break;
+        }
+    }
+    let t = degraded_at.expect("router never degraded the 10×-slower link");
+    assert!(t <= 5, "degradation detected too slowly: {t} ticks");
+    assert!(router.shard_stats().degraded_events >= 1);
+
+    // Post-degrade, remote traffic is probes only — everything else runs
+    // on the local workers.
+    for _ in 0..2 {
+        let (remote, probes, local) = tick(&router, BURST);
+        assert_eq!(remote, probes, "degraded peer must receive probe traffic only");
+        assert_eq!(local + remote, BURST);
+        assert!(local >= BURST - probes, "traffic must shift to local workers");
+    }
+
+    // ── Phase 3: the link recovers. Probes observe it; the EWMA falls
+    // under the re-admit bar and traffic flows remote again.
+    link.scale_bandwidth(10.0);
+    let mut readmitted_at = None;
+    for t in 1..=8 {
+        tick(&router, BURST);
+        if router.admitted_peers() == 1 {
+            readmitted_at = Some(t);
+            break;
+        }
+    }
+    let t = readmitted_at.expect("router never re-admitted the recovered link");
+    assert!(t <= 8, "re-admission took too long: {t} ticks");
+    assert!(router.shard_stats().readmitted_events >= 1);
+
+    let mut remote_recovered = 0;
+    let mut probes_recovered = 0;
+    for _ in 0..3 {
+        let (r, p, _) = tick(&router, BURST);
+        remote_recovered += r;
+        probes_recovered += p;
+    }
+    assert!(
+        remote_recovered > probes_recovered,
+        "recovered peer must carry non-probe traffic again: {remote_recovered} routed, {probes_recovered} probes"
+    );
+
+    // Lifetime accounting holds across the whole trace: every submission
+    // was served exactly once, by a worker or by the peer link.
+    let tel = router.telemetry_snapshot();
+    let stats = router.shutdown();
+    assert_eq!(stats.served(), tel.served);
+    assert_eq!(stats.failed(), 0);
+}
+
+/// The closed control plane drives the same reconciliation: peers are
+/// `set_shards`-actuated by `AdaptLoop::tick_with_telemetry`, so a
+/// drifting link degrades without anyone calling the router directly.
+#[test]
+fn control_plane_degrades_drifting_link_via_set_shards() {
+    let g = backbone(&BackboneConfig::default());
+    let snap = ResourceMonitor::new(device("jetson-nx").unwrap()).idle_snapshot();
+    let mut l = AdaptLoop::new(
+        g,
+        80.0,
+        vec![Candidate::baseline()],
+        Budgets { latency_s: f64::INFINITY, memory_bytes: f64::INFINITY },
+    );
+
+    // A peer whose real round trip (~6 ms transfer) sits far above the
+    // 2 ms degrade budget, but whose optimistic plan prior attracts
+    // traffic first — the classic misprediction telemetry must correct.
+    let router = ShardRouter::new(
+        local_pool(1, Duration::from_micros(500), "cold-start"),
+        ShardRouterConfig {
+            degrade_latency_s: 0.002,
+            readmit_latency_s: 0.001,
+            probe_every: 0, // no probes: once degraded, stays local (deterministic)
+            local_prior_s: 0.050,
+            ..ShardRouterConfig::default()
+        },
+    );
+    router.add_simulated_peer(
+        "overloaded-peer",
+        || Box::new(MockExec { delay: Duration::from_millis(1) }) as Box<dyn Executor>,
+        SharedLink::new(40.0, 2.0),
+        0.0005,
+    );
+    assert_eq!(router.admitted_peers(), 1);
+
+    // Tick 1: first decision switches the variant; the broadcast reaches
+    // pool workers and the peer through the router's actuate.
+    let chosen = match l.tick_with_telemetry(&snap, &router.telemetry_snapshot(), &router) {
+        Decision::Switch(e) => e.candidate.spec.detailed_label(),
+        d => panic!("expected Switch, got {d:?}"),
+    };
+    assert_eq!(router.admitted_peers(), 1, "no measurements yet: peer stays admitted");
+
+    // Traffic flows; the optimistic prior routes it to the peer, whose
+    // measured round trips pile into the hub EWMA.
+    let rxs: Vec<_> = (0..6).map(|i| router.submit(input_for(i)).expect("admitted")).collect();
+    let mut remote = 0;
+    for rx in rxs {
+        let r = rx.recv_timeout(Duration::from_secs(20)).expect("response");
+        assert_eq!(r.variant, chosen, "actuated variant must reach peers and workers");
+        if r.worker >= REMOTE_WORKER_BASE {
+            remote += 1;
+        }
+    }
+    assert!(remote > 0, "optimistic plan prior must route traffic to the peer first");
+
+    // Tick 2: the control plane's set_shards arm reads the measured drift
+    // from the same snapshot the calibrator uses and evicts the peer.
+    l.tick_with_telemetry(&snap, &router.telemetry_snapshot(), &router);
+    assert_eq!(router.admitted_peers(), 0, "set_shards must degrade the drifting link");
+
+    // Subsequent traffic is local-only (probing disabled).
+    let rxs: Vec<_> = (0..4).map(|i| router.submit(input_for(i)).expect("admitted")).collect();
+    for rx in rxs {
+        let r = rx.recv_timeout(Duration::from_secs(20)).expect("response");
+        assert!(r.worker < REMOTE_WORKER_BASE, "degraded peer must not serve");
+    }
+    router.shutdown();
+}

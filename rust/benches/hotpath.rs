@@ -93,11 +93,21 @@ fn main() {
     bench("adapt tick", 20, || {
         std::hint::black_box(matches!(l.tick(&snap), crowdhmtware::optimizer::Decision::Hold));
     });
+    // One response channel shared across iterations: the bench measures
+    // batcher push/pop, not channel construction.
+    let (resp, _resp_rx) = std::sync::mpsc::channel();
     bench("batcher 8", 1000, || {
         let mut b = Batcher::new(BatcherConfig::default());
         let now = Instant::now();
         for i in 0..8 {
-            b.push(Request { id: i, input: vec![0.0; 16], enqueued: now, lane: crowdhmtware::telemetry::Lane::Normal });
+            let req = Request {
+                id: i,
+                input: vec![0.0; 16],
+                enqueued: now,
+                lane: crowdhmtware::telemetry::Lane::Normal,
+                resp: resp.clone(),
+            };
+            b.push(req);
         }
         std::hint::black_box(b.pop_batch(&[1, 8], now).map(|x| x.compiled_batch));
     });

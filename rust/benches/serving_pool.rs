@@ -6,6 +6,12 @@
 //! overlaps batches across workers. Reported per pool width: sustained
 //! req/s, pool p50/p95/p99 latency, mean batch occupancy, rejections.
 //!
+//! A second, *skewed* scenario measures the work-stealing path: one
+//! worker is wedged on slow batches with its queue pre-loaded, then fast
+//! idle workers join. With stealing on they drain the stranded backlog;
+//! with stealing off the backlog serializes behind the wedge. Both runs
+//! are reported so the head-of-line win stays visible across PRs.
+//!
 //! Besides the human-readable table, the run emits `BENCH_serving.json`
 //! (schema below) so the repo's serving-performance trajectory stays
 //! machine-readable across PRs:
@@ -14,7 +20,9 @@
 //! {"bench":"serving_pool","requests":512,"batch_delay_ms":1,
 //!  "widths":[{"workers":1,"req_per_s":...,"p50_ms":...,"p95_ms":...,
 //!             "p99_ms":...,"mean_batch":...,"rejected":0}, ...],
-//!  "best":{"workers":8,"req_per_s":...,"speedup_vs_single":...}}
+//!  "best":{"workers":8,"req_per_s":...,"speedup_vs_single":...},
+//!  "skewed":{"preload":64,"slow_batch_ms":20,
+//!            "configs":[{"steal":1,"wall_ms":...,"steals":...}, ...]}}
 //! ```
 //!
 //! Run: `cargo bench --bench serving_pool`
@@ -22,7 +30,7 @@
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
-use crowdhmtware::coordinator::{BatcherConfig, Executor, PoolConfig, ServingPool};
+use crowdhmtware::coordinator::{BatcherConfig, Executor, PoolConfig, ServingPool, StealConfig};
 use crowdhmtware::util::{Json, Table};
 
 const CLASSES: usize = 4;
@@ -94,6 +102,75 @@ fn run_width(workers: usize) -> WidthResult {
     }
 }
 
+const SKEW_PRELOAD: usize = 64;
+const SLOW_BATCH: Duration = Duration::from_millis(20);
+
+/// Slow executor for worker 0, fast for dynamically spawned workers —
+/// the wedged-victim topology.
+struct SkewExec {
+    delay: Duration,
+}
+
+impl Executor for SkewExec {
+    fn batch_sizes(&self, _v: &str) -> Vec<usize> {
+        vec![1]
+    }
+
+    fn num_classes(&self) -> usize {
+        CLASSES
+    }
+
+    fn input_elems(&self) -> usize {
+        ELEMS
+    }
+
+    fn run(&mut self, _v: &str, batch: usize, _input: &[f32]) -> Result<Vec<f32>> {
+        std::thread::sleep(self.delay);
+        Ok(vec![1.0 / CLASSES as f32; batch * CLASSES])
+    }
+}
+
+struct SkewedResult {
+    steal: bool,
+    wall_ms: f64,
+    steals: usize,
+}
+
+/// Pre-load a single slow worker, then grow the pool with fast idle
+/// workers and measure how long the stranded backlog takes to drain.
+fn run_skewed(steal_enabled: bool) -> SkewedResult {
+    let pool = ServingPool::spawn(
+        |worker| {
+            let delay = if worker == 0 { SLOW_BATCH } else { Duration::from_millis(1) };
+            Box::new(SkewExec { delay }) as Box<dyn Executor>
+        },
+        "v",
+        PoolConfig {
+            workers: 1,
+            queue_capacity: 2 * SKEW_PRELOAD,
+            batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_micros(100) },
+            steal: StealConfig { enabled: steal_enabled, ..StealConfig::default() },
+            ..PoolConfig::default()
+        },
+    );
+    let t0 = Instant::now();
+    let wedge = pool.submit(vec![0.0; ELEMS]).expect("capacity sized to the run");
+    std::thread::sleep(Duration::from_millis(5)); // let the wedge batch start
+    let rxs: Vec<_> = (0..SKEW_PRELOAD)
+        .map(|_| pool.submit(vec![0.0; ELEMS]).expect("capacity sized to the run"))
+        .collect();
+    pool.set_workers(4);
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(60)).expect("response");
+    }
+    wedge.recv_timeout(Duration::from_secs(60)).expect("response");
+    let wall = t0.elapsed().as_secs_f64();
+    let steals = pool.telemetry_snapshot().steals;
+    let stats = pool.shutdown();
+    assert_eq!(stats.served(), SKEW_PRELOAD + 1);
+    SkewedResult { steal: steal_enabled, wall_ms: wall * 1e3, steals }
+}
+
 fn main() {
     let mut table = Table::new(
         "Serving throughput vs pool width (mock executor, 1 ms/batch)",
@@ -127,6 +204,21 @@ fn main() {
         if single > 0.0 { best.req_per_s / single } else { 0.0 }
     );
 
+    // Skewed (wedged-victim) scenario: stealing on vs off.
+    let mut skew_table = Table::new(
+        "Stranded-backlog drain: wedged worker + 3 fast joiners (20 ms vs 1 ms batches)",
+        &["steal", "wall ms", "steals"],
+    );
+    let skewed: Vec<SkewedResult> = vec![run_skewed(true), run_skewed(false)];
+    for r in &skewed {
+        skew_table.row(&[
+            if r.steal { "on".to_string() } else { "off".to_string() },
+            format!("{:.0}", r.wall_ms),
+            r.steals.to_string(),
+        ]);
+    }
+    skew_table.print();
+
     // Machine-readable trajectory for cross-PR comparison.
     let widths: Vec<Json> = results
         .iter()
@@ -155,6 +247,28 @@ fn main() {
                 (
                     "speedup_vs_single",
                     Json::num(if single > 0.0 { best.req_per_s / single } else { 0.0 }),
+                ),
+            ]),
+        ),
+        (
+            "skewed",
+            Json::obj(vec![
+                ("preload", Json::num(SKEW_PRELOAD as f64)),
+                ("slow_batch_ms", Json::num(SLOW_BATCH.as_secs_f64() * 1e3)),
+                (
+                    "configs",
+                    Json::Arr(
+                        skewed
+                            .iter()
+                            .map(|r| {
+                                Json::obj(vec![
+                                    ("steal", Json::num(if r.steal { 1.0 } else { 0.0 })),
+                                    ("wall_ms", Json::num(r.wall_ms)),
+                                    ("steals", Json::num(r.steals as f64)),
+                                ])
+                            })
+                            .collect(),
+                    ),
                 ),
             ]),
         ),

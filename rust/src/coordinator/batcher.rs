@@ -6,10 +6,26 @@
 //! queue, so latency-critical requests jump ahead of the backlog without
 //! a separate worker. Batch formation policy (fullness/age triggers) is
 //! lane-agnostic; only the *draining order* is prioritized.
+//!
+//! Since work stealing landed, the two lanes have different owners:
+//!
+//! - the **high lane** is private to the worker (priority requests never
+//!   migrate — the lane-ordering guarantee survives stealing);
+//! - the **normal lane** is a shared [`StealDeque`] registered with the
+//!   pool's steal registry: this worker pops the front, an idle sibling
+//!   may claim a chunk off the back. Formation therefore tolerates the
+//!   lane shrinking between the length check and the pops.
+//!
+//! Each [`Request`] carries its response channel, so whichever worker
+//! ultimately executes it — owner or thief — can answer it directly.
 
 use std::collections::VecDeque;
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use super::server::Response;
+use super::steal::StealDeque;
 use crate::telemetry::Lane;
 
 /// One queued inference request.
@@ -21,6 +37,9 @@ pub struct Request {
     pub enqueued: Instant,
     /// Which batcher lane the request rides (tags its telemetry too).
     pub lane: Lane,
+    /// Where the answer goes — carried with the request so a stolen
+    /// request is answered by whichever worker ran it.
+    pub resp: Sender<Response>,
 }
 
 /// Batching policy knobs.
@@ -57,44 +76,56 @@ impl Batch {
     }
 }
 
-/// The batcher itself (single-consumer; the server thread owns it).
+/// The batcher itself. The worker thread is the only *mutator* (single
+/// consumer), but the normal lane is shared with thieves through the
+/// steal deque.
 #[derive(Debug)]
 pub struct Batcher {
     pub cfg: BatcherConfig,
-    /// High-priority lane: drained first when forming a batch.
+    /// High-priority lane: drained first when forming a batch. Private
+    /// to this worker — priority requests never migrate.
     high: VecDeque<Request>,
-    /// Normal lane.
-    queue: VecDeque<Request>,
+    /// Normal lane: shared, stealable (owner pops front, thieves take
+    /// the back).
+    normal: Arc<StealDeque>,
 }
 
 impl Batcher {
+    /// Standalone batcher with a private normal lane (tests, benches,
+    /// anything outside a pool).
     pub fn new(cfg: BatcherConfig) -> Self {
-        Batcher { cfg, high: VecDeque::new(), queue: VecDeque::new() }
+        Batcher::with_normal(cfg, Arc::new(StealDeque::new()))
+    }
+
+    /// Batcher whose normal lane is the given shared deque — the pool
+    /// registers the same deque with its steal registry.
+    pub fn with_normal(cfg: BatcherConfig, normal: Arc<StealDeque>) -> Self {
+        Batcher { cfg, high: VecDeque::new(), normal }
     }
 
     /// Enqueue into the lane the request is tagged with.
     pub fn push(&mut self, req: Request) {
         match req.lane {
             Lane::High => self.high.push_back(req),
-            Lane::Normal => self.queue.push_back(req),
+            Lane::Normal => self.normal.push_back(req),
         }
     }
 
     pub fn len(&self) -> usize {
-        self.high.len() + self.queue.len()
+        self.high.len() + self.normal.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.high.is_empty() && self.queue.is_empty()
+        self.high.is_empty() && self.normal.is_empty()
     }
 
     /// Oldest queued request across both lanes (batch-window anchor).
     fn oldest_enqueued(&self) -> Option<Instant> {
-        match (self.high.front(), self.queue.front()) {
-            (Some(h), Some(n)) => Some(h.enqueued.min(n.enqueued)),
-            (Some(h), None) => Some(h.enqueued),
-            (None, Some(n)) => Some(n.enqueued),
-            (None, None) => None,
+        let high = self.high.front().map(|r| r.enqueued);
+        let normal = self.normal.front_enqueued();
+        match (high, normal) {
+            (Some(h), Some(n)) => Some(h.min(n)),
+            (h, n) => h.or(n),
         }
     }
 
@@ -107,62 +138,78 @@ impl Batcher {
 
     /// Pick the compiled batch size for `k` ready requests: the smallest
     /// compiled size ≥ k (minimal padding), else the largest compiled size
-    /// (and the batch is truncated to it).
-    pub fn fit_compiled(k: usize, compiled: &[usize]) -> usize {
-        let mut sizes = compiled.to_vec();
-        sizes.sort_unstable();
-        for &b in &sizes {
-            if b >= k {
-                return b;
-            }
-        }
-        *sizes.last().expect("no compiled batch sizes")
+    /// (and the batch is truncated to it). `compiled` must be sorted
+    /// ascending (workers cache the sorted slice per variant — sorting on
+    /// every batch formation was a measured hot-path cost). `None` only
+    /// when no batch size is compiled at all.
+    pub fn fit_compiled(k: usize, compiled: &[usize]) -> Option<usize> {
+        debug_assert!(
+            compiled.windows(2).all(|w| w[0] <= w[1]),
+            "compiled batch sizes must be pre-sorted"
+        );
+        compiled.iter().copied().find(|&b| b >= k).or_else(|| compiled.last().copied())
     }
 
     /// Form a batch if the policy triggers; `now` injected for testability.
+    /// `compiled` must be sorted ascending and non-empty.
     pub fn pop_batch(&mut self, compiled: &[usize], now: Instant) -> Option<Batch> {
         let oldest = self.oldest_enqueued()?;
         let oldest_wait = now.duration_since(oldest);
         if self.len() < self.cfg.max_batch && oldest_wait < self.cfg.max_wait {
             return None;
         }
-        Some(self.form(compiled))
+        self.form(compiled)
     }
 
     /// Force-form a batch regardless of the fullness/age policy — used by
     /// graceful shutdown to drain every in-flight request.
     pub fn pop_batch_now(&mut self, compiled: &[usize]) -> Option<Batch> {
-        if self.is_empty() {
-            return None;
-        }
-        Some(self.form(compiled))
+        self.form(compiled)
     }
 
-    fn form(&mut self, compiled: &[usize]) -> Batch {
-        let k = self.len().min(self.cfg.max_batch);
-        let b = Self::fit_compiled(k, compiled);
-        let take = k.min(b);
-        let requests: Vec<Request> = (0..take).map(|_| self.pop_request().unwrap()).collect();
-        Batch { requests, compiled_batch: b }
+    fn form(&mut self, compiled: &[usize]) -> Option<Batch> {
+        let largest = *compiled.last()?;
+        // `len()` is advisory: a thief may shrink the normal lane between
+        // this read and the pops, so pop up to the target and fit the
+        // compiled size to what was actually collected.
+        let target = self.len().min(self.cfg.max_batch).min(largest);
+        let mut requests = Vec::with_capacity(target);
+        while requests.len() < target {
+            match self.pop_request() {
+                Some(r) => requests.push(r),
+                None => break,
+            }
+        }
+        if requests.is_empty() {
+            return None;
+        }
+        let b = Self::fit_compiled(requests.len(), compiled)?;
+        Some(Batch { requests, compiled_batch: b })
     }
 
     /// Remove and return the next queued request, priority lane first
     /// (also the drop path when no compiled artifact can ever run it).
     pub fn pop_request(&mut self) -> Option<Request> {
-        self.high.pop_front().or_else(|| self.queue.pop_front())
+        self.high.pop_front().or_else(|| self.normal.pop_front())
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::mpsc::channel;
+
+    fn lane_req(id: u64, t: Instant, lane: Lane) -> Request {
+        let (resp, _rx) = channel();
+        Request { id, input: vec![id as f32; 4], enqueued: t, lane, resp }
+    }
 
     fn req(id: u64, t: Instant) -> Request {
-        Request { id, input: vec![id as f32; 4], enqueued: t, lane: Lane::Normal }
+        lane_req(id, t, Lane::Normal)
     }
 
     fn prio(id: u64, t: Instant) -> Request {
-        Request { id, input: vec![id as f32; 4], enqueued: t, lane: Lane::High }
+        lane_req(id, t, Lane::High)
     }
 
     #[test]
@@ -193,9 +240,14 @@ mod tests {
 
     #[test]
     fn fit_picks_smallest_covering() {
-        assert_eq!(Batcher::fit_compiled(3, &[1, 4, 8]), 4);
-        assert_eq!(Batcher::fit_compiled(1, &[1, 4, 8]), 1);
-        assert_eq!(Batcher::fit_compiled(9, &[1, 4, 8]), 8);
+        assert_eq!(Batcher::fit_compiled(3, &[1, 4, 8]), Some(4));
+        assert_eq!(Batcher::fit_compiled(1, &[1, 4, 8]), Some(1));
+        assert_eq!(Batcher::fit_compiled(9, &[1, 4, 8]), Some(8));
+    }
+
+    #[test]
+    fn fit_of_empty_compiled_set_is_none() {
+        assert_eq!(Batcher::fit_compiled(1, &[]), None, "no artifacts: no panic, no batch");
     }
 
     #[test]
@@ -287,13 +339,51 @@ mod tests {
         assert!(b.pop_request().is_none());
     }
 
+    // ── the shared normal lane (work stealing) ─────────────────────────
+
+    /// A thief claiming the normal lane's tail mid-formation must not
+    /// break the owner: the formed batch simply carries what was left.
+    #[test]
+    fn formation_tolerates_concurrent_steal() {
+        let shared = Arc::new(StealDeque::new());
+        let cfg = BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(0) };
+        let mut b = Batcher::with_normal(cfg, Arc::clone(&shared));
+        let t = Instant::now();
+        for i in 0..6 {
+            b.push(req(i, t));
+        }
+        // A sibling steals the youngest four before the owner forms.
+        let stolen = shared.steal_tail(4);
+        assert_eq!(stolen.len(), 4);
+        let batch = b.pop_batch(&[1, 4, 8], t).unwrap();
+        let ids: Vec<u64> = batch.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1], "owner keeps the front of its lane");
+        assert_eq!(batch.compiled_batch, 4, "fit runs on what was actually collected");
+        assert!(b.is_empty());
+    }
+
+    /// Only the normal lane is reachable through the shared deque: the
+    /// priority lane stays private however deep the normal backlog is.
+    #[test]
+    fn priority_lane_is_never_stealable() {
+        let shared = Arc::new(StealDeque::new());
+        let mut b = Batcher::with_normal(BatcherConfig::default(), Arc::clone(&shared));
+        let t = Instant::now();
+        b.push(prio(1, t));
+        b.push(req(2, t));
+        let stolen = shared.steal_tail(8);
+        assert_eq!(stolen.len(), 1);
+        assert_eq!(stolen[0].id, 2, "only the normal request is claimable");
+        assert_eq!(b.pop_request().unwrap().id, 1, "the priority request stays put");
+    }
+
     // ── compiled-size selection across batch-size sets ────────────────
 
     /// `[1]`: every queue length maps to singleton batches.
     #[test]
     fn singleton_compiled_set() {
-        assert_eq!(Batcher::fit_compiled(1, &[1]), 1);
-        assert_eq!(Batcher::fit_compiled(5, &[1]), 1);
+        assert_eq!(Batcher::fit_compiled(1, &[1]), Some(1));
+        assert_eq!(Batcher::fit_compiled(5, &[1]), Some(1));
         let mut b = Batcher::new(BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(0) });
         let t = Instant::now();
         for i in 0..5 {
@@ -316,21 +406,22 @@ mod tests {
         let compiled = [1usize, 4, 8];
         let expect = [1usize, 4, 4, 4, 8, 8, 8, 8, 8, 8];
         for (k, &want) in (1..=10).zip(expect.iter()) {
-            assert_eq!(Batcher::fit_compiled(k, &compiled), want, "k={k}");
+            assert_eq!(Batcher::fit_compiled(k, &compiled), Some(want), "k={k}");
         }
     }
 
-    /// Non-contiguous `[2,6,32]` given unsorted: selection still works on
-    /// the sorted view, and a single request pads up to the smallest size.
+    /// Non-contiguous `[2,6,32]`: selection works on the sorted slice
+    /// (callers sort once per variant), and a single request pads up to
+    /// the smallest size.
     #[test]
     fn non_contiguous_compiled_set() {
-        let compiled = [32usize, 2, 6]; // deliberately unsorted
-        assert_eq!(Batcher::fit_compiled(1, &compiled), 2);
-        assert_eq!(Batcher::fit_compiled(2, &compiled), 2);
-        assert_eq!(Batcher::fit_compiled(3, &compiled), 6);
-        assert_eq!(Batcher::fit_compiled(6, &compiled), 6);
-        assert_eq!(Batcher::fit_compiled(7, &compiled), 32);
-        assert_eq!(Batcher::fit_compiled(33, &compiled), 32);
+        let compiled = [2usize, 6, 32];
+        assert_eq!(Batcher::fit_compiled(1, &compiled), Some(2));
+        assert_eq!(Batcher::fit_compiled(2, &compiled), Some(2));
+        assert_eq!(Batcher::fit_compiled(3, &compiled), Some(6));
+        assert_eq!(Batcher::fit_compiled(6, &compiled), Some(6));
+        assert_eq!(Batcher::fit_compiled(7, &compiled), Some(32));
+        assert_eq!(Batcher::fit_compiled(33, &compiled), Some(32));
 
         let mut b = Batcher::new(BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(0) });
         let t = Instant::now();

@@ -57,15 +57,17 @@ pub fn run_cascade(
         if pending.is_empty() {
             break;
         }
-        let sizes = exec.batch_sizes(&stage.variant);
+        let mut sizes = exec.batch_sizes(&stage.variant);
         anyhow::ensure!(!sizes.is_empty(), "variant '{}' has no artifacts", stage.variant);
+        sizes.sort_unstable(); // fit_compiled expects the sorted slice (sorted once per stage)
         let last = si + 1 == stages.len();
         let mut still = Vec::new();
         // Run pending rows in compiled-size chunks.
         let mut idx = 0;
         while idx < pending.len() {
-            let chunk: Vec<usize> = pending[idx..].iter().copied().take(*sizes.iter().max().unwrap()).collect();
-            let b = super::batcher::Batcher::fit_compiled(chunk.len(), &sizes);
+            let chunk: Vec<usize> = pending[idx..].iter().copied().take(*sizes.last().unwrap()).collect();
+            let b = super::batcher::Batcher::fit_compiled(chunk.len(), &sizes)
+                .expect("sizes checked non-empty");
             let take = chunk.len().min(b);
             let rows = &chunk[..take];
             let mut buf = vec![0.0f32; b * elems];

@@ -3,9 +3,11 @@
 //! [`batcher::Batcher`] with a priority lane), a request router with
 //! pluggable [`policy::DispatchPolicy`], bounded per-worker queues with
 //! typed admission-control rejections, atomic broadcast variant
-//! switching, and dynamic pool width ([`pool::ServingPool::set_workers`])
-//! — the actuation surface of the adaptation loop (Sec. III-D3's
-//! middleware role). Every worker publishes measured performance into the
+//! switching, dynamic pool width ([`pool::ServingPool::set_workers`]),
+//! and work stealing between worker batchers ([`steal`]: idle workers
+//! drain the stranded normal lane of a sibling wedged on a slow batch;
+//! priority requests never migrate) — the actuation surface of the
+//! adaptation loop (Sec. III-D3's middleware role). Every worker publishes measured performance into the
 //! [`crate::telemetry::TelemetryHub`]; [`pool::PoolStats`] and
 //! [`server::ServingStats`] are thin views over those slots.
 //!
@@ -22,12 +24,14 @@ pub mod policy;
 pub mod pool;
 pub mod server;
 pub mod shard;
+pub mod steal;
 
 pub use batcher::{Batch, Batcher, BatcherConfig, Request};
 pub use cascade::{run_cascade, CascadeStats, Stage};
 pub use policy::{rank_variants, select_variant, DispatchPolicy, ScoredVariant};
 pub use pool::{PoolConfig, PoolStats, ServingPool};
 pub use server::{Executor, Rejected, Response, ServingStats};
+pub use steal::{StealConfig, StealDeque, StealRegistry};
 pub use shard::{
     PeerStat, PeerTransport, ShardRouter, ShardRouterConfig, ShardStats, SimulatedPeer,
     REMOTE_WORKER_BASE,

@@ -2,9 +2,12 @@
 //! executor and dynamic batcher, behind a router with pluggable dispatch
 //! (round-robin / least-queue-depth), bounded per-worker queues with
 //! typed admission-control rejections, atomic broadcast variant
-//! switching, priority lanes, and *dynamic width*: the control plane's
-//! AIMD sizer grows and shrinks the worker set at runtime through
-//! [`ServingPool::set_workers`].
+//! switching, priority lanes, *dynamic width* (the control plane's AIMD
+//! sizer grows and shrinks the worker set at runtime through
+//! [`ServingPool::set_workers`]), and *work stealing*: every worker's
+//! normal lane is registered in a pool-level [`StealRegistry`] so idle
+//! workers can claim the stranded backlog of a sibling wedged on a slow
+//! batch (see [`super::steal`]; priority requests never migrate).
 //!
 //! Architecture (the L3 actuation layer at pool scale):
 //!
@@ -39,7 +42,10 @@ use std::time::{Duration, Instant};
 
 use super::batcher::{BatcherConfig, Request};
 use super::policy::DispatchPolicy;
-use super::server::{spawn_worker, Executor, Msg, Rejected, Response, ServingStats, Worker};
+use super::server::{
+    spawn_worker, Executor, Msg, Rejected, Response, ServingStats, StealContext, Worker,
+};
+use super::steal::{StealConfig, StealDeque, StealRegistry};
 use crate::telemetry::{Lane, TelemetryHub, TelemetrySnapshot};
 
 /// Pool sizing + routing knobs.
@@ -55,6 +61,9 @@ pub struct PoolConfig {
     pub batcher: BatcherConfig,
     /// Request routing policy.
     pub dispatch: DispatchPolicy,
+    /// Work stealing between worker batchers: idle workers claim chunks
+    /// of a wedged sibling's normal lane (see [`super::steal`]).
+    pub steal: StealConfig,
     /// How long `switch_variant` waits for each worker's acknowledgement
     /// before giving up on it (a wedged worker must not hang actuation).
     pub switch_ack_timeout: Duration,
@@ -67,6 +76,7 @@ impl Default for PoolConfig {
             queue_capacity: 256,
             batcher: BatcherConfig::default(),
             dispatch: DispatchPolicy::LeastQueueDepth,
+            steal: StealConfig::default(),
             switch_ack_timeout: Duration::from_secs(5),
         }
     }
@@ -134,6 +144,18 @@ impl PoolStats {
     }
 }
 
+/// Rejection shape when every dispatch attempt of a `submit_lane` call
+/// was consumed without a successful enqueue: blame the last queue
+/// *actually observed* at capacity, or — when only dead-worker channel
+/// sends failed — report no worker at all rather than fabricating a
+/// depth-0 "full" observation against worker 0.
+fn exhausted_rejection(last_full: Option<(usize, usize)>, capacity: usize) -> Rejected {
+    match last_full {
+        Some((wi, depth)) => Rejected { worker: Some(wi), queue_depth: depth, capacity },
+        None => Rejected { worker: None, queue_depth: 0, capacity },
+    }
+}
+
 /// The live worker set. Guarded by one RwLock: submissions and switches
 /// read-lock; only `set_workers`/`shutdown` write-lock.
 struct Workers {
@@ -154,9 +176,13 @@ pub struct ServingPool {
     /// Current serving variant — what dynamically spawned workers start on.
     variant: Mutex<String>,
     hub: Arc<TelemetryHub>,
+    /// Every local worker's shared normal lane, for idle siblings to
+    /// steal from (victim selection reads the hub).
+    steal_registry: Arc<StealRegistry>,
     capacity: usize,
     batcher: BatcherConfig,
     dispatch: DispatchPolicy,
+    steal: StealConfig,
     switch_ack_timeout: Duration,
     /// Round-robin cursor (also seeds full-scan fallback ordering).
     rr: AtomicUsize,
@@ -178,11 +204,21 @@ impl ServingPool {
         assert!(cfg.queue_capacity >= 1, "queue capacity must be positive");
         let make: Arc<dyn Fn(usize) -> Box<dyn Executor> + Send + Sync> = Arc::new(make_exec);
         let hub = Arc::new(TelemetryHub::new(cfg.queue_capacity));
+        let steal_registry = Arc::new(StealRegistry::new());
         let list = (0..cfg.workers)
             .map(|i| {
                 let make = Arc::clone(&make);
                 let tel = hub.register(i);
-                spawn_worker(i, move || make(i), initial_variant.to_string(), 0, cfg.batcher, tel)
+                let deque = Arc::new(StealDeque::new());
+                steal_registry.register(i, Arc::clone(&deque), Arc::clone(&tel));
+                let ctx = StealContext {
+                    registry: Arc::clone(&steal_registry),
+                    deque,
+                    cfg: cfg.steal,
+                    queue_capacity: cfg.queue_capacity,
+                };
+                let variant = initial_variant.to_string();
+                spawn_worker(i, move || make(i), variant, 0, cfg.batcher, ctx, tel)
             })
             .collect();
         ServingPool {
@@ -190,9 +226,11 @@ impl ServingPool {
             make,
             variant: Mutex::new(initial_variant.to_string()),
             hub,
+            steal_registry,
             capacity: cfg.queue_capacity,
             batcher: cfg.batcher,
             dispatch: cfg.dispatch,
+            steal: cfg.steal,
             switch_ack_timeout: cfg.switch_ack_timeout,
             rr: AtomicUsize::new(0),
             next_id: AtomicU64::new(0),
@@ -266,7 +304,11 @@ impl ServingPool {
     /// queue shows as full on the fresh read), and a dead worker (closed
     /// channel) is excluded from further picks instead of blackholing
     /// the pool.
-    pub fn submit_lane(&self, input: Vec<f32>, lane: Lane) -> Result<Receiver<Response>, Rejected> {
+    pub fn submit_lane(
+        &self,
+        mut input: Vec<f32>,
+        lane: Lane,
+    ) -> Result<Receiver<Response>, Rejected> {
         let guard = self.workers.read().unwrap();
         let workers = &guard.list;
         if workers.is_empty() {
@@ -274,7 +316,11 @@ impl ServingPool {
         }
         let cursor = self.rr.fetch_add(1, Ordering::Relaxed);
         let mut excluded = vec![false; workers.len()];
-        let mut last_full = (0usize, 0usize); // (worker, observed depth)
+        // The last queue *actually observed* at capacity during this call
+        // (worker, observed depth) — `None` until one is seen, so a call
+        // that only ever failed on dead workers' channels can never
+        // fabricate a "queue full" attribution.
+        let mut last_full: Option<(usize, usize)> = None;
         // Bounded retries: each failed attempt either excludes a dead
         // worker for the rest of this call or means the picked queue
         // filled under us; at most every worker can do that once before
@@ -288,18 +334,27 @@ impl ServingPool {
             }
             let Some(wi) = self.dispatch.pick(&depths, self.capacity, cursor + attempt) else {
                 // Pool-wide rejection (every queue full): attribute it to
-                // the least-loaded worker — the one dispatch would have
-                // picked had any queue had room — so per-worker rejected
-                // counts read as "rejections while this worker was the
-                // best available candidate" rather than round-robin noise.
-                let (wi, depth) = depths
+                // the least-loaded *live* worker — the one dispatch would
+                // have picked had any queue had room — so per-worker
+                // rejected counts read as "rejections while this worker
+                // was the best available candidate". Dead (excluded)
+                // workers are only *presented* as full and must not be
+                // charged for a rejection their queue never caused.
+                let observed = depths
                     .iter()
                     .copied()
                     .enumerate()
-                    .min_by_key(|&(_, d)| d)
-                    .unwrap_or((cursor % workers.len(), 0));
-                workers[wi].tel.record_rejected();
-                return Err(Rejected { worker: None, queue_depth: depth, capacity: self.capacity });
+                    .filter(|&(i, _)| !excluded[i])
+                    .min_by_key(|&(_, d)| d);
+                return match observed {
+                    Some((wi, depth)) => {
+                        workers[wi].tel.record_rejected();
+                        Err(Rejected { worker: None, queue_depth: depth, capacity: self.capacity })
+                    }
+                    // Every worker is dead: not a capacity rejection, and
+                    // there is no live queue to attribute it to.
+                    None => Err(Rejected { worker: None, queue_depth: 0, capacity: self.capacity }),
+                };
             };
             let worker = &workers[wi];
             // The depth gauge is the admission token: increment first, and
@@ -309,24 +364,35 @@ impl ServingPool {
             let prev = worker.tel.depth_inc();
             if prev >= self.capacity {
                 worker.tel.depth_cancel();
-                last_full = (wi, prev);
+                last_full = Some((wi, prev));
                 continue;
             }
             let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
             let (tx, rx) = channel();
-            let req = Request { id, input, enqueued: Instant::now(), lane };
-            if worker.tx.send(Msg::Infer(req, tx)).is_err() {
-                // Worker thread is gone (panicked executor factory, say):
-                // exclude it and try the remaining workers.
-                worker.tel.depth_cancel();
-                excluded[wi] = true;
-                continue;
+            let req = Request { id, input, enqueued: Instant::now(), lane, resp: tx };
+            match worker.tx.send(Msg::Infer(req)) {
+                Ok(()) => return Ok(rx),
+                Err(err) => {
+                    // Worker thread is gone (panicked executor factory or
+                    // mid-batch panic): exclude it, fail whatever it left
+                    // stranded in its shared lane (nothing can serve those
+                    // — thieves skip non-executing slots — so their
+                    // callers must see the channel close, not hang),
+                    // reclaim the input, and try the remaining workers.
+                    worker.tel.depth_cancel();
+                    excluded[wi] = true;
+                    self.steal_registry.drain_dead(worker.tel.worker);
+                    match err.0 {
+                        Msg::Infer(r) => input = r.input,
+                        _ => unreachable!("send failed on the message we just built"),
+                    }
+                }
             }
-            return Ok(rx);
         }
-        let (wi, depth) = last_full;
-        workers[wi].tel.record_rejected();
-        Err(Rejected { worker: Some(wi), queue_depth: depth, capacity: self.capacity })
+        if let Some((wi, _)) = last_full {
+            workers[wi].tel.record_rejected();
+        }
+        Err(exhausted_rejection(last_full, self.capacity))
     }
 
     /// Atomically actuate a variant switch across the pool: bump the
@@ -387,12 +453,21 @@ impl ServingPool {
         drop(ack_tx);
         let deadline = Instant::now() + self.switch_ack_timeout;
         let mut acked = 0usize;
-        for _ in 0..pending {
+        let mut received = 0usize;
+        while received < pending {
             let left = deadline.saturating_duration_since(Instant::now());
-            if ack_rx.recv_timeout(left).is_err() {
+            let Ok(g) = ack_rx.recv_timeout(left) else {
                 break;
+            };
+            received += 1;
+            // Acks carry the worker's generation *after* processing this
+            // broadcast: count only those at (or past) our generation.
+            // With concurrent switches in flight, an ack below ours would
+            // prove only that some older broadcast landed — counting it
+            // would overstate this switch's atomicity.
+            if g >= generation {
+                acked += 1;
             }
-            acked += 1;
         }
         (generation, acked, pending)
     }
@@ -436,12 +511,21 @@ impl ServingPool {
                     guard.next_id += 1;
                     let make = Arc::clone(&self.make);
                     let tel = self.hub.register(id);
+                    let deque = Arc::new(StealDeque::new());
+                    self.steal_registry.register(id, Arc::clone(&deque), Arc::clone(&tel));
+                    let ctx = StealContext {
+                        registry: Arc::clone(&self.steal_registry),
+                        deque,
+                        cfg: self.steal,
+                        queue_capacity: self.capacity,
+                    };
                     guard.list.push(spawn_worker(
                         id,
                         move || make(id),
                         variant.clone(),
                         generation,
                         self.batcher,
+                        ctx,
                         tel,
                     ));
                 }
@@ -452,6 +536,10 @@ impl ServingPool {
             let _ = w.tx.send(Msg::Shutdown);
             let _ = w.join.join();
             w.tel.retire();
+            // The drain above emptied its lane; drop the steal-registry
+            // entry so victim scans don't grow across resize cycles (the
+            // hub slot persists for lifetime totals, this need not).
+            self.steal_registry.unregister(w.tel.worker);
         }
         len
     }
@@ -466,6 +554,7 @@ impl ServingPool {
         for w in workers.list {
             let _ = w.join.join();
             w.tel.retire();
+            self.steal_registry.unregister(w.tel.worker);
         }
         PoolStats {
             per_worker: self.hub.slots().iter().map(|s| ServingStats::from_telemetry(s)).collect(),
@@ -727,6 +816,106 @@ mod tests {
         assert_eq!(tel.lanes[Lane::Normal.index()].served, 1);
         assert_eq!(tel.lanes[Lane::High.index()].served, 1);
         assert_eq!(pool.shutdown().served(), 2);
+    }
+
+    // ── rejection attribution ──────────────────────────────────────────
+
+    /// The exhausted-dispatch rejection only names a worker when one of
+    /// its queues was actually observed full; a call whose attempts all
+    /// died on closed channels must not fabricate a depth-0 "full"
+    /// verdict against worker 0.
+    #[test]
+    fn exhausted_rejection_shapes() {
+        let r = exhausted_rejection(Some((2, 5)), 8);
+        assert_eq!(r.worker, Some(2));
+        assert_eq!(r.queue_depth, 5);
+        assert_eq!(r.capacity, 8);
+        let r = exhausted_rejection(None, 8);
+        assert_eq!(r.worker, None, "no queue observed full: nothing to attribute");
+        assert_eq!(r.queue_depth, 0);
+    }
+
+    /// Pool-wide rejections are charged to the least-loaded *live*
+    /// worker: a dead worker — presented as full so dispatch skips it —
+    /// must never absorb the rejection count.
+    #[test]
+    fn pool_wide_rejection_skips_dead_workers_in_attribution() {
+        let pool = ServingPool::spawn(
+            |i| {
+                if i == 0 {
+                    panic!("worker 0 executor construction fails");
+                }
+                Box::new(MockExec { delay: Duration::from_millis(200), ..MockExec::quick() })
+                    as Box<dyn Executor>
+            },
+            "v",
+            PoolConfig {
+                workers: 2,
+                queue_capacity: 2,
+                batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_micros(100) },
+                ..PoolConfig::default()
+            },
+        );
+        // Let worker 0's thread die (its receiver drops with the panic).
+        std::thread::sleep(Duration::from_millis(100));
+        // Fill the surviving worker to capacity: dispatch prefers the
+        // dead worker's depth-0 queue, fails the send, and routes around.
+        let rxs: Vec<_> =
+            (0..2).map(|_| pool.submit(vec![1.0; 16]).expect("live worker has room")).collect();
+        let err = pool.submit(vec![1.0; 16]).expect_err("pool is saturated");
+        assert_eq!(err.worker, None, "pool-wide rejection");
+        assert!(err.queue_depth >= 2, "the observed depth is the live worker's, got {err:?}");
+        let stats = pool.stats();
+        assert_eq!(stats.per_worker[0].rejected, 0, "dead worker must not be charged");
+        assert_eq!(stats.per_worker[1].rejected, 1);
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        }
+        let stats = pool.shutdown();
+        assert_eq!(stats.served(), 2);
+        assert_eq!(stats.rejected(), 1);
+    }
+
+    // ── concurrent switches ────────────────────────────────────────────
+
+    /// Two overlapping switches: each waiter's ack count reflects its own
+    /// broadcast (acks are generation-filtered), and the pool converges
+    /// to the variant recorded with the higher generation — every
+    /// response admitted afterwards carries exactly that pair.
+    #[test]
+    fn concurrent_switches_converge_with_filtered_acks() {
+        let pool = Arc::new(quad(200, 1024));
+        let a = {
+            let p = Arc::clone(&pool);
+            std::thread::spawn(move || p.switch_variant_acked("x"))
+        };
+        let b = {
+            let p = Arc::clone(&pool);
+            std::thread::spawn(move || p.switch_variant_acked("y"))
+        };
+        let (gen_a, acked_a, fanout_a) = a.join().unwrap();
+        let (gen_b, acked_b, fanout_b) = b.join().unwrap();
+        assert_eq!(gen_a.min(gen_b), 1);
+        assert_eq!(gen_a.max(gen_b), 2);
+        // Workers end past both generations, so both broadcasts fully ack
+        // under the >= filter (an ack below a waiter's generation would
+        // not have counted).
+        assert_eq!(acked_a, fanout_a);
+        assert_eq!(acked_b, fanout_b);
+        // The surviving variant is the one that took generation 2 under
+        // the variant lock.
+        let current = pool.current_variant();
+        let expect = if gen_a > gen_b { "x" } else { "y" };
+        assert_eq!(current, expect);
+        let rxs: Vec<_> = (0..16).map(|_| pool.submit(vec![1.0; 16]).unwrap()).collect();
+        for rx in rxs {
+            let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(r.variant, current, "stale variant served after both switches returned");
+            assert_eq!(r.generation, 2);
+        }
+        let pool = Arc::try_unwrap(pool).unwrap_or_else(|_| panic!("pool still shared"));
+        let stats = pool.shutdown();
+        assert_eq!(stats.served(), 16);
     }
 
     #[test]

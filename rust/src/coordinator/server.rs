@@ -18,12 +18,20 @@
 //! serving variant so the calibrator can compare measured against
 //! predicted per variant.
 //!
-//! Response delivery is O(1) per request (a `HashMap` from request id to
-//! the caller's channel), and the loop never spin-sleeps: when a partial
-//! batch is waiting for its window to fill, the worker blocks in
-//! `recv_timeout` until exactly the batch-window deadline.
+//! Response delivery is O(1) per request (every [`Request`] carries its
+//! caller's channel — necessary since work stealing means the answering
+//! worker need not be the admitting one), and the loop never spin-sleeps:
+//! when a partial batch is waiting for its window to fill, the worker
+//! blocks in `recv_timeout` until exactly the batch-window deadline.
+//!
+//! **The steal phase** (see [`super::steal`]): when a worker goes idle —
+//! empty batcher, no channel messages for a full idle-poll interval — it
+//! consults the pool's [`StealRegistry`] for a sibling that is wedged
+//! mid-batch with a deep normal lane (queue-depth gauge × batch-latency
+//! EWMA, both measured hub signals: the Fig. 6 *observe→decide* path at
+//! worker scale) and claims a chunk of that lane onto itself, migrating
+//! the admission accounting with it. Priority requests never migrate.
 
-use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -32,6 +40,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use super::batcher::{Batch, Batcher, BatcherConfig, Request};
+use super::steal::{StealConfig, StealDeque, StealRegistry};
 use crate::telemetry::{Lane, WorkerTelemetry};
 
 /// Abstraction over the PJRT runtime so the serving layer is testable
@@ -80,7 +89,8 @@ pub struct Response {
     /// answered with `generation >= g` and the new variant (see
     /// `switch_variant_acked` for the partial-ack escape hatch).
     pub generation: u64,
-    /// Index of the worker that served the request.
+    /// Index of the worker that served the request — after a steal this
+    /// is the thief, not the worker the request was admitted to.
     pub worker: usize,
     /// Which batcher lane the request rode (normal vs priority).
     pub lane: Lane,
@@ -93,7 +103,9 @@ pub struct Response {
 /// at capacity. Callers may retry, shed load, or escalate.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Rejected {
-    /// The worker that was full, or `None` when every worker was full.
+    /// The specific worker whose queue was observed full, or `None` when
+    /// the rejection was pool-wide (or no queue was actually observed
+    /// full — every dispatch attempt failed on a dead worker's channel).
     pub worker: Option<usize>,
     /// Observed queue depth at rejection time.
     pub queue_depth: usize,
@@ -115,10 +127,12 @@ impl std::error::Error for Rejected {}
 /// Messages into a worker. Infer requests are admission-controlled by the
 /// pool before being sent; control messages always pass.
 pub(crate) enum Msg {
-    Infer(Request, Sender<Response>),
+    Infer(Request),
     /// Generation-tagged variant switch; the worker applies it (ignoring
     /// out-of-order stale generations) and acks with its current
-    /// generation so the pool can block until the broadcast is complete.
+    /// generation so the pool can block until the broadcast is complete
+    /// (and discount acks that only prove an older concurrent broadcast
+    /// landed).
     Switch { variant: String, generation: u64, ack: Sender<u64> },
     Shutdown,
 }
@@ -137,7 +151,8 @@ pub struct ServingStats {
     pub switches: usize,
     /// Requests rejected at admission for this worker's queue.
     pub rejected: usize,
-    /// Requests dropped because batch execution failed.
+    /// Requests dropped because batch execution failed (or because no
+    /// compiled artifact exists for the serving variant).
     pub failed: usize,
 }
 
@@ -189,6 +204,17 @@ pub(crate) struct Worker {
     pub join: JoinHandle<()>,
 }
 
+/// Everything a worker needs to participate in work stealing: the pool's
+/// registry (victim lookup), its own shared normal lane (registered in
+/// the same registry for siblings to claim from), the steal policy, and
+/// the admission capacity that bounds how much a thief may take on.
+pub(crate) struct StealContext {
+    pub registry: Arc<StealRegistry>,
+    pub deque: Arc<StealDeque>,
+    pub cfg: StealConfig,
+    pub queue_capacity: usize,
+}
+
 /// Spawn one serving worker. `make_exec` runs *on the worker thread*
 /// (PJRT clients are thread-affine and not `Send`). `initial_generation`
 /// seeds the worker's variant generation so dynamically spawned workers
@@ -199,6 +225,7 @@ pub(crate) fn spawn_worker<F>(
     initial_variant: String,
     initial_generation: u64,
     cfg: BatcherConfig,
+    steal: StealContext,
     tel: Arc<WorkerTelemetry>,
 ) -> Worker
 where
@@ -207,7 +234,7 @@ where
     let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
     let tel_w = Arc::clone(&tel);
     let join = std::thread::spawn(move || {
-        worker_main(index, make_exec(), rx, initial_variant, initial_generation, cfg, tel_w)
+        worker_main(index, make_exec(), rx, initial_variant, initial_generation, cfg, steal, tel_w)
     });
     Worker { tx, tel, join }
 }
@@ -215,7 +242,6 @@ where
 /// Mutable worker-loop state threaded through message absorption.
 struct WorkerState {
     batcher: Batcher,
-    waiting: HashMap<u64, Sender<Response>>,
     variant: String,
     generation: u64,
     tel: Arc<WorkerTelemetry>,
@@ -225,10 +251,7 @@ struct WorkerState {
 impl WorkerState {
     fn absorb(&mut self, msg: Msg) {
         match msg {
-            Msg::Infer(req, resp_tx) => {
-                self.waiting.insert(req.id, resp_tx);
-                self.batcher.push(req);
-            }
+            Msg::Infer(req) => self.batcher.push(req),
             Msg::Switch { variant, generation, ack } => {
                 // `>=` (not `>`): a worker spawned concurrently with a
                 // broadcast may start *at* the broadcast generation but
@@ -246,8 +269,83 @@ impl WorkerState {
             Msg::Shutdown => self.draining = true,
         }
     }
+
+    /// Drop every queued request as failed: no compiled artifact exists
+    /// for the serving variant, so nothing queued here can ever run (the
+    /// whole pool is on the same variant — siblings can't serve them
+    /// either). Callers observe their response channel closing; the
+    /// worker stays alive and resumes serving at the next good switch.
+    fn fail_unservable(&mut self) {
+        let mut dropped = 0usize;
+        while self.batcher.pop_request().is_some() {
+            self.tel.depth_dec();
+            dropped += 1;
+        }
+        if dropped > 0 {
+            eprintln!(
+                "worker {}: variant '{}' has no compiled batch sizes; failing {dropped} queued request(s)",
+                self.tel.worker, self.variant
+            );
+            self.tel.record_failed(dropped);
+        }
+    }
 }
 
+/// Per-variant cache of the executor's compiled batch sizes, sorted once
+/// per switch instead of cloned + sorted on every batch formation (the
+/// old hot-path cost).
+struct CompiledSizes {
+    variant: String,
+    sorted: Vec<usize>,
+}
+
+impl CompiledSizes {
+    fn for_variant(exec: &dyn Executor, variant: &str) -> CompiledSizes {
+        let mut sorted = exec.batch_sizes(variant);
+        sorted.sort_unstable();
+        CompiledSizes { variant: variant.to_string(), sorted }
+    }
+
+    fn refresh(&mut self, exec: &dyn Executor, variant: &str) {
+        if self.variant != variant {
+            *self = CompiledSizes::for_variant(exec, variant);
+        }
+    }
+}
+
+/// Idle-path steal phase: pick a wedged sibling from measured telemetry
+/// and migrate a chunk of its normal lane onto this worker, moving the
+/// admission accounting along. Returns how many requests were claimed.
+fn try_steal(steal: &StealContext, st: &mut WorkerState, index: usize) -> usize {
+    let Some(victim) = steal.registry.pick_victim(index, &steal.cfg) else {
+        return 0;
+    };
+    // Never take on more than our own admission bound has room for —
+    // the depth gauge stays a truthful dispatch signal.
+    let budget = steal.queue_capacity.saturating_sub(st.tel.queue_depth());
+    let want = victim.tel.queue_depth().div_ceil(2).min(steal.cfg.max_chunk).min(budget);
+    if want == 0 {
+        return 0;
+    }
+    // The victim's gauge also counts requests still in its channel or in
+    // its running batch; steal_tail takes only what is actually parked
+    // in the lane (possibly nothing — then we just poll again later).
+    let stolen = victim.deque.steal_tail(want);
+    let n = stolen.len();
+    if n == 0 {
+        return 0;
+    }
+    st.tel.depth_add(n);
+    victim.tel.depth_sub(n);
+    st.tel.record_steal(n);
+    victim.tel.record_stolen(n);
+    for req in stolen {
+        st.batcher.push(req);
+    }
+    n
+}
+
+#[allow(clippy::too_many_arguments)]
 fn worker_main(
     index: usize,
     mut exec: Box<dyn Executor>,
@@ -255,26 +353,59 @@ fn worker_main(
     initial_variant: String,
     initial_generation: u64,
     cfg: BatcherConfig,
+    steal: StealContext,
     tel: Arc<WorkerTelemetry>,
 ) {
     let elems = exec.input_elems();
     let classes = exec.num_classes();
     let mut st = WorkerState {
-        batcher: Batcher::new(cfg),
-        waiting: HashMap::new(),
+        batcher: Batcher::with_normal(cfg, Arc::clone(&steal.deque)),
         variant: initial_variant,
         generation: initial_generation,
         tel,
         draining: false,
     };
+    let mut compiled = CompiledSizes::for_variant(&*exec, &st.variant);
+    // Idle-poll backoff multiplier: fruitless steal polls double the
+    // wait (capped), so a fully idle pool costs a few wakeups per
+    // second per worker instead of a steady poll-rate spin; traffic or
+    // a successful steal snaps it back to the responsive base rate.
+    let mut idle_backoff: u32 = 1;
 
     while !st.draining {
         // Block for the next message — when a partial batch is pending,
-        // only until its window deadline (no busy-wait).
+        // only until its window deadline (no busy-wait); when idle, only
+        // until the next steal poll.
         let msg = if st.batcher.is_empty() {
-            match rx.recv() {
-                Ok(m) => Some(m),
-                Err(_) => break, // all senders gone: drain and exit
+            if steal.cfg.enabled {
+                match rx.recv_timeout(steal.cfg.idle_poll * idle_backoff) {
+                    Ok(m) => {
+                        idle_backoff = 1;
+                        Some(m)
+                    }
+                    Err(RecvTimeoutError::Timeout) => {
+                        // Idle for a full poll interval: the steal phase.
+                        // Any claimed requests carry their original
+                        // enqueue time, so their (long-expired) batch
+                        // window flushes them into a batch on this very
+                        // iteration.
+                        if try_steal(&steal, &mut st, index) > 0 {
+                            idle_backoff = 1;
+                        } else {
+                            idle_backoff =
+                                (idle_backoff * 2).min(StealConfig::IDLE_BACKOFF_MAX_FACTOR);
+                        }
+                        None
+                    }
+                    Err(RecvTimeoutError::Disconnected) => break, // pool gone: drain and exit
+                }
+            } else {
+                // Stealing off: nothing to poll for — block at zero cost
+                // until the next message, exactly the pre-stealing loop.
+                match rx.recv() {
+                    Ok(m) => Some(m),
+                    Err(_) => break,
+                }
             }
         } else {
             let now = Instant::now();
@@ -303,20 +434,16 @@ fn worker_main(
                 Err(TryRecvError::Disconnected) => break,
             }
         }
-        let sizes = exec.batch_sizes(&st.variant);
-        if sizes.is_empty() {
-            if !st.batcher.is_empty() {
-                // No compiled artifact can run the queued requests until a
-                // variant switch arrives — block for the next control
-                // message rather than spinning on an expired batch window.
-                match rx.recv() {
-                    Ok(m) => st.absorb(m),
-                    Err(_) => break,
-                }
-            }
+        compiled.refresh(&*exec, &st.variant);
+        if compiled.sorted.is_empty() {
+            // A manifest-missing variant must not kill the worker (a
+            // panicking worker thread silently shrinks the pool): fail
+            // the unservable requests and keep looping — the next good
+            // switch restores service.
+            st.fail_unservable();
             continue;
         }
-        if let Some(batch) = st.batcher.pop_batch(&sizes, Instant::now()) {
+        if let Some(batch) = st.batcher.pop_batch(&compiled.sorted, Instant::now()) {
             run_batch(&mut *exec, batch, index, elems, classes, &mut st);
         }
     }
@@ -326,27 +453,21 @@ fn worker_main(
     while let Ok(m) = rx.try_recv() {
         st.absorb(m);
     }
-    let sizes = exec.batch_sizes(&st.variant);
-    if sizes.is_empty() {
-        // No compiled artifacts for the current variant: the queued
-        // requests can never run; drop them (callers see a closed channel).
-        let mut dropped = 0usize;
-        while let Some(req) = st.batcher.pop_request() {
-            st.waiting.remove(&req.id);
-            st.tel.depth_dec();
-            dropped += 1;
-        }
-        st.tel.record_failed(dropped);
+    compiled.refresh(&*exec, &st.variant);
+    if compiled.sorted.is_empty() {
+        st.fail_unservable();
     } else {
-        while let Some(batch) = st.batcher.pop_batch_now(&sizes) {
+        while let Some(batch) = st.batcher.pop_batch_now(&compiled.sorted) {
             run_batch(&mut *exec, batch, index, elems, classes, &mut st);
         }
     }
 }
 
-/// Execute one batch and deliver every response (O(1) per request);
-/// publish lane-tagged, variant-keyed latencies to the telemetry slot in
-/// one batch-granular record.
+/// Execute one batch and deliver every response through the channel each
+/// request carries (O(1) per request); publish lane-tagged, variant-keyed
+/// latencies to the telemetry slot in one batch-granular record. The
+/// slot's executing flag brackets the run so the steal registry can tell
+/// a wedged worker from an idle one.
 fn run_batch(
     exec: &mut dyn Executor,
     batch: Batch,
@@ -357,7 +478,20 @@ fn run_batch(
 ) {
     let input = batch.padded_input(elems);
     let exec_start = Instant::now();
-    match exec.run(&st.variant, batch.compiled_batch, &input) {
+    // Drop guard, not a plain set/clear pair: if the executor panics the
+    // worker thread dies with the flag stuck true, and the zombie slot
+    // would out-score every live victim in steal selection forever.
+    struct ExecutingGuard<'a>(&'a WorkerTelemetry);
+    impl Drop for ExecutingGuard<'_> {
+        fn drop(&mut self) {
+            self.0.set_executing(false);
+        }
+    }
+    st.tel.set_executing(true);
+    let guard = ExecutingGuard(&st.tel);
+    let result = exec.run(&st.variant, batch.compiled_batch, &input);
+    drop(guard);
+    match result {
         Ok(probs) => {
             let now = Instant::now();
             // Execution-only time for the calibrator's per-variant view:
@@ -382,27 +516,24 @@ fn run_batch(
                 let latency = now.duration_since(req.enqueued);
                 samples.push((req.lane, latency.as_secs_f64()));
                 st.tel.depth_dec();
-                if let Some(tx) = st.waiting.remove(&req.id) {
-                    let _ = tx.send(Response {
-                        id: req.id,
-                        pred,
-                        confidence: conf,
-                        variant: st.variant.clone(),
-                        generation: st.generation,
-                        worker,
-                        lane: req.lane,
-                        latency,
-                    });
-                }
+                let _ = req.resp.send(Response {
+                    id: req.id,
+                    pred,
+                    confidence: conf,
+                    variant: st.variant.clone(),
+                    generation: st.generation,
+                    worker,
+                    lane: req.lane,
+                    latency,
+                });
             }
             st.tel.record_batch(&st.variant, exec_s, &samples);
         }
         Err(e) => {
             eprintln!("worker {worker}: batch execution failed: {e:#}");
-            for req in &batch.requests {
-                st.waiting.remove(&req.id);
-                st.tel.depth_dec();
-            }
+            // Dropping the batch drops each request's response sender:
+            // callers observe the closed channel rather than a hang.
+            st.tel.depth_sub(batch.requests.len());
             st.tel.record_failed(batch.requests.len());
         }
     }
@@ -542,6 +673,60 @@ mod tests {
         assert_eq!(r2.generation, gen);
         let stats = h.shutdown();
         assert_eq!(stats.switches(), 1);
+    }
+
+    /// A variant with no compiled batch sizes must not kill the worker:
+    /// requests queued under it are failed (counted, channels closed) and
+    /// the same worker resumes serving after the next good switch.
+    #[test]
+    fn unservable_variant_fails_requests_but_worker_survives() {
+        struct GappyExec;
+        impl Executor for GappyExec {
+            fn batch_sizes(&self, v: &str) -> Vec<usize> {
+                if v == "missing" {
+                    Vec::new()
+                } else {
+                    vec![1, 4]
+                }
+            }
+            fn num_classes(&self) -> usize {
+                4
+            }
+            fn input_elems(&self) -> usize {
+                16
+            }
+            fn run(&mut self, _v: &str, batch: usize, _input: &[f32]) -> Result<Vec<f32>> {
+                Ok(vec![0.25; batch * 4])
+            }
+        }
+        let h = ServingPool::spawn(
+            |_| Box::new(GappyExec) as Box<dyn Executor>,
+            "good",
+            PoolConfig {
+                workers: 1,
+                queue_capacity: 64,
+                batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+                ..PoolConfig::default()
+            },
+        );
+        let rx = h.submit(vec![1.0; 16]).unwrap();
+        rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        h.switch_variant("missing");
+        let doomed: Vec<_> = (0..4).map(|_| h.submit(vec![1.0; 16]).unwrap()).collect();
+        for rx in doomed {
+            assert!(
+                rx.recv_timeout(Duration::from_secs(5)).is_err(),
+                "unservable request must fail, not hang"
+            );
+        }
+        // The worker thread survived the episode: a switch back restores
+        // service on the very same worker.
+        h.switch_variant("good");
+        let rx = h.submit(vec![1.0; 16]).unwrap();
+        rx.recv_timeout(Duration::from_secs(5)).expect("worker must still be alive");
+        let stats = h.shutdown();
+        assert_eq!(stats.served(), 2);
+        assert_eq!(stats.failed(), 4);
     }
 
     #[test]

@@ -1,0 +1,365 @@
+//! Work stealing between worker batchers: the back-end scheduling level's
+//! answer to head-of-line blocking (Sec. III, Fig. 6).
+//!
+//! Least-queue-depth dispatch balances *admission*, but once a worker is
+//! wedged on a slow batch its already-admitted requests are stranded
+//! behind it while siblings sit idle. Here each worker's **normal lane**
+//! lives in a shared, lock-striped [`StealDeque`] (one mutex per worker,
+//! owner pops the front, a thief claims a chunk off the back) registered
+//! in a pool-level [`StealRegistry`]. An idle worker (empty batcher, no
+//! pending channel messages) consults the registry and picks a victim
+//! from *measured* telemetry — the hub's per-worker queue-depth gauges
+//! and batch-latency EWMAs, exactly the observation stream the AIMD
+//! sizer and the shard router decide from — then migrates a chunk of the
+//! victim's backlog onto itself, moving the admission accounting with it
+//! (the victim's depth gauge decrements, the thief's increments, so
+//! dispatch and the sizer stay truthful).
+//!
+//! **Lane-ordering invariant: priority requests never migrate.** The
+//! high-priority lane stays private to the worker that admitted it, so
+//! the guarantee that priority requests are drained before that worker's
+//! normal lane survives stealing; only normal-lane requests, which carry
+//! no ordering promise across workers, are claimed by thieves.
+//!
+//! Victim selection maps onto the paper's Fig. 6 feedback loop: the
+//! *observe* stage is the hub slot (depth gauge, batch-latency EWMA, the
+//! in-batch flag), the *decide* stage is [`StealRegistry::pick_victim`]
+//! (depth × measured batch latency ≈ expected serial drain time, the
+//! same measured-not-predicted principle as the latency calibrator), and
+//! the *act* stage is the migration itself — steal counters flow back
+//! into the hub so the next snapshot sees what moved.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+use super::batcher::Request;
+use crate::telemetry::WorkerTelemetry;
+
+/// Work-stealing knobs, applied pool-wide.
+#[derive(Debug, Clone, Copy)]
+pub struct StealConfig {
+    /// Master switch: disabled, idle workers simply wait for dispatch
+    /// (the pre-stealing behavior — kept togglable so benches can show
+    /// the head-of-line difference).
+    pub enabled: bool,
+    /// How long an idle worker blocks for new messages before running a
+    /// steal phase. Bounds the latency between a sibling wedging and the
+    /// first steal attempt. Fruitless polls back off exponentially (up
+    /// to [`StealConfig::IDLE_BACKOFF_MAX_FACTOR`] × this), so a fully
+    /// idle pool converges to a few wakeups per second per worker
+    /// instead of spinning at the poll rate; any received message or
+    /// successful steal resets the backoff.
+    pub idle_poll: Duration,
+    /// Minimum victim queue depth worth stealing from: below this the
+    /// victim drains faster than migration pays for itself.
+    pub min_victim_depth: usize,
+    /// Upper bound on requests claimed per steal (the victim also keeps
+    /// the front half of its queue — thieves take the younger tail).
+    pub max_chunk: usize,
+}
+
+impl StealConfig {
+    /// Ceiling of the idle-poll exponential backoff, as a multiple of
+    /// `idle_poll` (64 × 1 ms default = 64 ms worst-case reaction to a
+    /// sibling wedging — far below any batch worth stealing from).
+    pub const IDLE_BACKOFF_MAX_FACTOR: u32 = 64;
+}
+
+impl Default for StealConfig {
+    fn default() -> Self {
+        StealConfig {
+            enabled: true,
+            idle_poll: Duration::from_millis(1),
+            min_victim_depth: 2,
+            max_chunk: 16,
+        }
+    }
+}
+
+/// One worker's shared normal lane: owner pops the front (FIFO serving
+/// order), thieves split off a chunk of the back (the youngest requests,
+/// classic steal-deque discipline — the front stays with the owner, who
+/// is about to serve it anyway if it ever finishes its batch).
+#[derive(Debug, Default)]
+pub struct StealDeque {
+    q: Mutex<VecDeque<Request>>,
+}
+
+impl StealDeque {
+    pub fn new() -> StealDeque {
+        StealDeque::default()
+    }
+
+    /// Owner-side enqueue (admission order).
+    pub fn push_back(&self, req: Request) {
+        self.q.lock().unwrap().push_back(req);
+    }
+
+    /// Owner-side dequeue: the oldest queued request.
+    pub fn pop_front(&self) -> Option<Request> {
+        self.q.lock().unwrap().pop_front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.lock().unwrap().is_empty()
+    }
+
+    /// Enqueue instant of the oldest queued request (the batch-window
+    /// anchor for the owner's deadline computation).
+    pub fn front_enqueued(&self) -> Option<Instant> {
+        self.q.lock().unwrap().front().map(|r| r.enqueued)
+    }
+
+    /// Thief-side claim: detach up to `max` requests from the back,
+    /// preserving their relative order. Returns an empty vec when there
+    /// is nothing to take (e.g. the victim's backlog is still in its
+    /// channel, not yet absorbed into the lane).
+    pub fn steal_tail(&self, max: usize) -> Vec<Request> {
+        let mut q = self.q.lock().unwrap();
+        let take = max.min(q.len());
+        if take == 0 {
+            return Vec::new();
+        }
+        let at = q.len() - take;
+        q.split_off(at).into()
+    }
+}
+
+/// A selected steal victim: the handles a thief needs to migrate work
+/// and keep the admission accounting truthful.
+pub(crate) struct Victim {
+    pub deque: Arc<StealDeque>,
+    pub tel: Arc<WorkerTelemetry>,
+}
+
+struct Entry {
+    worker: usize,
+    deque: Arc<StealDeque>,
+    tel: Arc<WorkerTelemetry>,
+}
+
+/// Pool-level registry of every local worker's steal deque, paired with
+/// its telemetry slot so victim selection is driven by measured state.
+/// Retired workers keep their entries (skipped via the slot's retired
+/// flag) just like hub slots, so ids stay aligned across resizes.
+#[derive(Default)]
+pub struct StealRegistry {
+    slots: RwLock<Vec<Entry>>,
+}
+
+impl StealRegistry {
+    pub fn new() -> StealRegistry {
+        StealRegistry::default()
+    }
+
+    /// Register a worker's normal lane (pool spawn / dynamic grow).
+    pub(crate) fn register(
+        &self,
+        worker: usize,
+        deque: Arc<StealDeque>,
+        tel: Arc<WorkerTelemetry>,
+    ) {
+        self.slots.write().unwrap().push(Entry { worker, deque, tel });
+    }
+
+    /// Drop a retiring worker's entry: retirement joins the thread after
+    /// a full drain, so its lane is empty and — unlike hub slots, which
+    /// persist for lifetime totals — nothing here needs to outlive the
+    /// worker. Keeps the victim scan from growing without bound across
+    /// AIMD grow/shrink cycles.
+    pub(crate) fn unregister(&self, worker: usize) {
+        self.slots.write().unwrap().retain(|e| e.worker != worker);
+    }
+
+    /// Fail everything parked in `worker`'s lane: called by the pool
+    /// when it discovers the worker's thread is gone (a channel send
+    /// failed — the thread panicked mid-batch). The stranded requests
+    /// can never be served by the dead worker, and thieves skip
+    /// non-executing slots, so without this their callers would hang
+    /// forever; dropping them here closes each carried response channel
+    /// and keeps the depth gauge and failed counter truthful. Returns
+    /// how many requests were failed.
+    pub(crate) fn drain_dead(&self, worker: usize) -> usize {
+        let slots = self.slots.read().unwrap();
+        let Some(e) = slots.iter().find(|e| e.worker == worker) else {
+            return 0;
+        };
+        let stranded = e.deque.steal_tail(usize::MAX);
+        let n = stranded.len();
+        if n > 0 {
+            e.tel.depth_sub(n);
+            e.tel.record_failed(n);
+        }
+        n
+    }
+
+    /// Telemetry-driven victim selection for `thief`: among live siblings
+    /// currently *executing a batch* (an idle sibling's queue drains on
+    /// its own — stealing from it would just shuttle parked requests
+    /// back and forth) with depth ≥ `min_victim_depth`, pick the one
+    /// with the largest depth × measured batch-latency EWMA — the best
+    /// estimate of serial drain time were the backlog left stranded.
+    pub(crate) fn pick_victim(&self, thief: usize, cfg: &StealConfig) -> Option<Victim> {
+        let slots = self.slots.read().unwrap();
+        let mut best: Option<(f64, &Entry)> = None;
+        for e in slots.iter() {
+            if e.worker == thief || e.tel.is_retired() || !e.tel.is_executing() {
+                continue;
+            }
+            let depth = e.tel.queue_depth();
+            if depth < cfg.min_victim_depth {
+                continue;
+            }
+            // A victim with no measured batches yet still qualifies on
+            // depth alone (the epsilon keeps the product ordered).
+            let score = depth as f64 * e.tel.batch_latency_ewma_s().max(1e-6);
+            let better = match &best {
+                Some((s, _)) => score > *s,
+                None => true,
+            };
+            if better {
+                best = Some((score, e));
+            }
+        }
+        best.map(|(_, e)| Victim { deque: Arc::clone(&e.deque), tel: Arc::clone(&e.tel) })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{Lane, TelemetryHub};
+    use std::sync::mpsc::channel;
+
+    fn req(id: u64) -> Request {
+        let (resp, _rx) = channel();
+        Request { id, input: vec![0.0; 4], enqueued: Instant::now(), lane: Lane::Normal, resp }
+    }
+
+    #[test]
+    fn deque_is_fifo_for_the_owner() {
+        let d = StealDeque::new();
+        assert!(d.is_empty());
+        assert!(d.front_enqueued().is_none());
+        for i in 0..4 {
+            d.push_back(req(i));
+        }
+        assert_eq!(d.len(), 4);
+        assert!(d.front_enqueued().is_some());
+        assert_eq!(d.pop_front().unwrap().id, 0);
+        assert_eq!(d.pop_front().unwrap().id, 1);
+    }
+
+    #[test]
+    fn steal_tail_takes_the_back_in_order() {
+        let d = StealDeque::new();
+        for i in 0..6 {
+            d.push_back(req(i));
+        }
+        let stolen = d.steal_tail(3);
+        let ids: Vec<u64> = stolen.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![3, 4, 5], "thief takes the youngest tail, order preserved");
+        assert_eq!(d.len(), 3, "the owner keeps the front");
+        assert_eq!(d.pop_front().unwrap().id, 0);
+    }
+
+    #[test]
+    fn steal_tail_caps_at_len_and_handles_empty() {
+        let d = StealDeque::new();
+        assert!(d.steal_tail(4).is_empty());
+        d.push_back(req(0));
+        let stolen = d.steal_tail(8);
+        assert_eq!(stolen.len(), 1);
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn victim_selection_is_telemetry_driven() {
+        let hub = TelemetryHub::new(64);
+        let reg = StealRegistry::new();
+        let cfg = StealConfig::default();
+        let mut slots = Vec::new();
+        for i in 0..4 {
+            let tel = hub.register(i);
+            let deque = Arc::new(StealDeque::new());
+            reg.register(i, Arc::clone(&deque), Arc::clone(&tel));
+            slots.push(tel);
+        }
+        // Nobody is executing a batch: no victim, whatever the depths.
+        slots[1].depth_add(8);
+        assert!(reg.pick_victim(0, &cfg).is_none(), "idle siblings are not victims");
+
+        // Worker 1: deep and wedged in a slow batch. Worker 2: equally
+        // deep but measurably fast. Worker 3: executing but shallow.
+        slots[1].set_executing(true);
+        slots[1].record_batch("v", 0.500, &[(Lane::Normal, 0.5)]);
+        slots[2].depth_add(8);
+        slots[2].set_executing(true);
+        slots[2].record_batch("v", 0.001, &[(Lane::Normal, 0.001)]);
+        slots[3].depth_add(1);
+        slots[3].set_executing(true);
+        let v = reg.pick_victim(0, &cfg).expect("a wedged deep sibling is a victim");
+        assert_eq!(v.tel.worker, 1, "depth x batch latency picks the slow deep worker");
+
+        // The thief never picks itself, and retired slots are skipped.
+        let v = reg.pick_victim(1, &cfg).unwrap();
+        assert_eq!(v.tel.worker, 2);
+        slots[1].retire();
+        let v = reg.pick_victim(0, &cfg).unwrap();
+        assert_eq!(v.tel.worker, 2, "retired slots are never victims");
+    }
+
+    /// A dead worker's stranded lane is failed by the pool (via
+    /// `drain_dead`): the requests drop (closing their response
+    /// channels), the depth gauge drains, and the failure is counted.
+    #[test]
+    fn drain_dead_fails_the_stranded_lane() {
+        let hub = TelemetryHub::new(64);
+        let reg = StealRegistry::new();
+        let tel = hub.register(3);
+        let deque = Arc::new(StealDeque::new());
+        reg.register(3, Arc::clone(&deque), Arc::clone(&tel));
+        for i in 0..4 {
+            deque.push_back(req(i));
+            tel.depth_add(1);
+        }
+        assert_eq!(reg.drain_dead(3), 4);
+        assert!(deque.is_empty());
+        assert_eq!(tel.queue_depth(), 0);
+        assert_eq!(tel.failed(), 4);
+        assert_eq!(reg.drain_dead(3), 0, "a second drain finds nothing");
+        assert_eq!(reg.drain_dead(99), 0, "unknown workers are a no-op");
+    }
+
+    #[test]
+    fn unregister_removes_the_entry() {
+        let hub = TelemetryHub::new(64);
+        let reg = StealRegistry::new();
+        let tel = hub.register(5);
+        let deque = Arc::new(StealDeque::new());
+        reg.register(5, Arc::clone(&deque), Arc::clone(&tel));
+        tel.set_executing(true);
+        tel.depth_add(4);
+        assert!(reg.pick_victim(0, &StealConfig::default()).is_some());
+        reg.unregister(5);
+        assert!(reg.pick_victim(0, &StealConfig::default()).is_none());
+        assert_eq!(reg.drain_dead(5), 0);
+    }
+
+    #[test]
+    fn shallow_victims_are_left_alone() {
+        let hub = TelemetryHub::new(64);
+        let reg = StealRegistry::new();
+        let tel = hub.register(7);
+        reg.register(7, Arc::new(StealDeque::new()), Arc::clone(&tel));
+        tel.set_executing(true);
+        tel.depth_add(1);
+        let cfg = StealConfig { min_victim_depth: 2, ..StealConfig::default() };
+        assert!(reg.pick_victim(0, &cfg).is_none(), "below min depth, nothing worth moving");
+    }
+}

@@ -47,9 +47,25 @@ impl Gauge {
     }
 
     pub fn dec(&self) {
+        self.sub(1);
+    }
+
+    /// Bulk raise (work-stealing migrates whole chunks of admitted
+    /// requests between workers; the thief's gauge rises by the chunk).
+    pub fn add(&self, n: usize) {
+        self.0.fetch_add(n, Ordering::AcqRel);
+    }
+
+    /// Bulk lower, saturating at zero rather than wrapping if an
+    /// accounting bug ever over-decrements.
+    pub fn sub(&self, n: usize) {
         let mut cur = self.0.load(Ordering::Acquire);
-        while cur > 0 {
-            match self.0.compare_exchange_weak(cur, cur - 1, Ordering::AcqRel, Ordering::Acquire) {
+        loop {
+            let next = cur.saturating_sub(n);
+            if next == cur {
+                return;
+            }
+            match self.0.compare_exchange_weak(cur, next, Ordering::AcqRel, Ordering::Acquire) {
                 Ok(_) => return,
                 Err(seen) => cur = seen,
             }
@@ -86,6 +102,17 @@ mod tests {
         assert_eq!(g.inc(), 1);
         g.dec();
         assert_eq!(g.get(), 1);
+    }
+
+    #[test]
+    fn gauge_bulk_transfer() {
+        let g = Gauge::new();
+        g.add(5);
+        assert_eq!(g.get(), 5);
+        g.sub(3);
+        assert_eq!(g.get(), 2);
+        g.sub(10);
+        assert_eq!(g.get(), 0, "bulk sub saturates at zero");
     }
 
     #[test]

@@ -41,6 +41,13 @@ use super::reservoir::{percentiles_of, Reservoir};
 /// that one pathological request does not.
 const SLOT_LATENCY_EWMA_ALPHA: f64 = 0.3;
 
+/// Smoothing weight of each slot's *batch execution* latency EWMA — the
+/// work-stealing victim-selection signal ("is this worker's current
+/// batch likely to run long?"). Same recency bias as the drift signal:
+/// a worker that just slowed down becomes a steal victim within a few
+/// batches.
+const BATCH_LATENCY_EWMA_ALPHA: f64 = 0.3;
+
 /// Which queue a request rode through the batcher: the normal lane or the
 /// high-priority lane that is drained first (latency-critical requests).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -76,7 +83,18 @@ pub struct WorkerTelemetry {
     rejected: Counter,
     failed: Counter,
     switches: Counter,
+    /// Requests this worker claimed from siblings' normal lanes (thief
+    /// side of a work-steal migration).
+    steals: Counter,
+    /// Requests siblings claimed from this worker's normal lane (victim
+    /// side of a work-steal migration).
+    stolen_from: Counter,
     queue_depth: Gauge,
+    /// Whether the worker is currently inside a batch execution — the
+    /// steal registry's "is the victim actually wedged?" gate (an idle
+    /// worker's backlog drains on its own; stealing from it would just
+    /// shuttle parked requests between idle peers).
+    executing: AtomicBool,
     latency: [Mutex<Reservoir>; LANES],
     /// Measured *execution* latency keyed by the variant that ran it
     /// (one sample per request, valued at its batch's execution wall
@@ -90,6 +108,10 @@ pub struct WorkerTelemetry {
     /// EWMA of per-request end-to-end latency (both lanes): the recency-
     /// biased drift signal the shard router holds against its budget.
     ewma: Mutex<Ewma>,
+    /// EWMA of per-batch *execution* wall time: the steal registry's
+    /// victim-selection window (depth × this ≈ expected serial drain
+    /// time of a stranded backlog).
+    batch_ewma: Mutex<Ewma>,
     reservoir_capacity: usize,
     /// Remote peer-link slot (shard router) rather than a local worker.
     remote: bool,
@@ -105,13 +127,17 @@ impl WorkerTelemetry {
             rejected: Counter::new(),
             failed: Counter::new(),
             switches: Counter::new(),
+            steals: Counter::new(),
+            stolen_from: Counter::new(),
             queue_depth: Gauge::new(),
+            executing: AtomicBool::new(false),
             latency: [
                 Mutex::new(Reservoir::new(reservoir_capacity)),
                 Mutex::new(Reservoir::new(reservoir_capacity)),
             ],
             per_variant: Mutex::new(BTreeMap::new()),
             ewma: Mutex::new(Ewma::new(SLOT_LATENCY_EWMA_ALPHA)),
+            batch_ewma: Mutex::new(Ewma::new(BATCH_LATENCY_EWMA_ALPHA)),
             reservoir_capacity,
             remote,
             retired: AtomicBool::new(false),
@@ -150,6 +176,7 @@ impl WorkerTelemetry {
                 e.observe(lat);
             }
         }
+        self.batch_ewma.lock().unwrap().observe(exec_s);
         let mut per_v = self.per_variant.lock().unwrap();
         let r = per_v
             .entry(variant.to_string())
@@ -171,6 +198,24 @@ impl WorkerTelemetry {
         self.switches.inc();
     }
 
+    /// Thief side of a work-steal migration: `n` requests claimed from a
+    /// sibling's normal lane.
+    pub fn record_steal(&self, n: usize) {
+        self.steals.add(n);
+    }
+
+    /// Victim side of a work-steal migration: `n` requests claimed by a
+    /// sibling from this worker's normal lane.
+    pub fn record_stolen(&self, n: usize) {
+        self.stolen_from.add(n);
+    }
+
+    /// Mark the start/end of a batch execution — the steal registry only
+    /// considers victims currently inside a batch.
+    pub fn set_executing(&self, on: bool) {
+        self.executing.store(on, Ordering::Release);
+    }
+
     /// Admission gauge: returns the pre-increment depth (the admission
     /// token check the pool's bounded queue relies on).
     pub fn depth_inc(&self) -> usize {
@@ -184,6 +229,19 @@ impl WorkerTelemetry {
     /// Roll back a speculative `depth_inc` that never enqueued.
     pub fn depth_cancel(&self) {
         self.queue_depth.cancel()
+    }
+
+    /// Bulk depth raise: a steal migrates a whole chunk of admitted
+    /// requests onto this worker. (The thief raises its gauge *before*
+    /// the victim lowers hers, so the pool-wide admitted total never
+    /// momentarily undercounts.)
+    pub fn depth_add(&self, n: usize) {
+        self.queue_depth.add(n)
+    }
+
+    /// Bulk depth drop: a steal migrated a chunk away from this worker.
+    pub fn depth_sub(&self, n: usize) {
+        self.queue_depth.sub(n)
     }
 
     pub fn retire(&self) {
@@ -206,6 +264,17 @@ impl WorkerTelemetry {
     /// 0.0 until the first sample.
     pub fn latency_ewma_s(&self) -> f64 {
         self.ewma.lock().unwrap().value_or(0.0)
+    }
+
+    /// Smoothed per-batch execution wall time (seconds); 0.0 until the
+    /// first batch. The work-stealing victim-selection signal.
+    pub fn batch_latency_ewma_s(&self) -> f64 {
+        self.batch_ewma.lock().unwrap().value_or(0.0)
+    }
+
+    /// Whether the worker is currently executing a batch.
+    pub fn is_executing(&self) -> bool {
+        self.executing.load(Ordering::Acquire)
     }
 
     pub fn queue_depth(&self) -> usize {
@@ -234,6 +303,14 @@ impl WorkerTelemetry {
 
     pub fn switches(&self) -> usize {
         self.switches.get()
+    }
+
+    pub fn steals(&self) -> usize {
+        self.steals.get()
+    }
+
+    pub fn stolen_from(&self) -> usize {
+        self.stolen_from.get()
     }
 
     /// Clone of this worker's retained latency window for one lane.
@@ -288,12 +365,19 @@ pub struct WorkerView {
     pub rejected: usize,
     pub failed: usize,
     pub switches: usize,
+    /// Requests this worker claimed from siblings (work stealing).
+    pub steals: usize,
+    /// Requests siblings claimed from this worker (work stealing).
+    pub stolen_from: usize,
     pub queue_depth: usize,
     pub p50_s: f64,
     pub p95_s: f64,
     /// Smoothed end-to-end latency (seconds, 0.0 until measured) — the
     /// shard router's per-link degrade/re-admit signal.
     pub ewma_s: f64,
+    /// Smoothed per-batch execution wall time (seconds, 0.0 until
+    /// measured) — the steal registry's victim-selection window.
+    pub batch_ewma_s: f64,
 }
 
 /// What the control plane sees each tick: the measured counterpart of the
@@ -317,6 +401,10 @@ pub struct TelemetrySnapshot {
     pub rejected: usize,
     pub failed: usize,
     pub switches: usize,
+    /// Requests migrated between workers by work stealing (each steal
+    /// raises exactly one thief's counter, so this is also the number of
+    /// requests that escaped a head-of-line-blocked queue).
+    pub steals: usize,
     pub lanes: [LaneView; LANES],
     pub per_worker: Vec<WorkerView>,
     pub per_variant: BTreeMap<String, VariantView>,
@@ -340,6 +428,7 @@ impl Default for TelemetrySnapshot {
             rejected: 0,
             failed: 0,
             switches: 0,
+            steals: 0,
             lanes: [LaneView::default(), LaneView::default()],
             per_worker: Vec::new(),
             per_variant: BTreeMap::new(),
@@ -449,16 +538,20 @@ impl TelemetryHub {
                 rejected: s.rejected(),
                 failed: s.failed(),
                 switches: s.switches(),
+                steals: s.steals(),
+                stolen_from: s.stolen_from(),
                 queue_depth: depth,
                 p50_s: wp[0],
                 p95_s: wp[1],
                 ewma_s: s.latency_ewma_s(),
+                batch_ewma_s: s.batch_latency_ewma_s(),
             });
             snap.served += served;
             snap.batches += s.batches();
             snap.rejected += s.rejected();
             snap.failed += s.failed();
             snap.switches = snap.switches.max(s.switches());
+            snap.steals += s.steals();
             if !retired {
                 if s.is_remote() {
                     snap.remote_peers += 1;
@@ -628,6 +721,38 @@ mod tests {
             p.record_batch("v", 0.004, &[(Lane::Normal, 0.004)]);
         }
         assert!(p.latency_ewma_s() < 0.010, "recovery samples must pull the estimate back");
+    }
+
+    /// Steal counters and the batch-latency window flow through the
+    /// snapshot: the thief's steals, the victim's stolen_from, and the
+    /// per-batch execution EWMA the victim selection reads.
+    #[test]
+    fn steal_signals_flow_through_snapshots() {
+        let hub = TelemetryHub::new(16);
+        let victim = hub.register(0);
+        let thief = hub.register(1);
+        victim.record_batch("v", 0.200, &[(Lane::Normal, 0.2)]);
+        assert!((victim.batch_latency_ewma_s() - 0.200).abs() < 1e-12);
+        assert!(!victim.is_executing());
+        victim.set_executing(true);
+        assert!(victim.is_executing());
+
+        // Migrate 3 admitted requests: thief raises first, victim drops.
+        victim.depth_add(5);
+        thief.depth_add(3);
+        victim.depth_sub(3);
+        thief.record_steal(3);
+        victim.record_stolen(3);
+
+        let snap = hub.snapshot();
+        assert_eq!(snap.steals, 3);
+        assert_eq!(snap.per_worker[0].stolen_from, 3);
+        assert_eq!(snap.per_worker[0].steals, 0);
+        assert_eq!(snap.per_worker[1].steals, 3);
+        assert_eq!(snap.per_worker[0].queue_depth, 2);
+        assert_eq!(snap.per_worker[1].queue_depth, 3);
+        assert_eq!(snap.queue_depth, 5, "migration must not change the admitted total");
+        assert!((snap.per_worker[0].batch_ewma_s - 0.200).abs() < 1e-12);
     }
 
     #[test]

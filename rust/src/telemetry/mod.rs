@@ -36,6 +36,12 @@
 //!   the local width/occupancy signals (the AIMD sizer reasons about
 //!   local cores) while merging their measured latencies into the
 //!   per-variant views the calibrator consumes.
+//! - **Scheduling decisions read the hub too.** Work-steal victim
+//!   selection (`coordinator::steal`) runs on the same slots: the
+//!   queue-depth gauge, the per-worker batch-latency EWMA, and the
+//!   in-batch flag identify a wedged sibling, and the resulting
+//!   migrations flow back as `steals`/`stolen_from` counters — the
+//!   Fig. 6 loop closed at worker scale.
 //!
 //! [`ResourceSnapshot`]: crate::device::ResourceSnapshot
 

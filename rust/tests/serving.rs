@@ -1,10 +1,12 @@
 //! Serving-pool integration suite: concurrent load across workers,
 //! mid-stream variant switching, admission-control backpressure, graceful
-//! shutdown, priority lanes, pool-vs-single throughput, and the closed
-//! cross-level loop — a calibrated control plane converging to the
-//! variant the *measured* latencies support, and the AIMD sizer widening
-//! and narrowing the pool from telemetry. All through the public API with
-//! deterministic mock executors (no built artifacts needed).
+//! shutdown, priority lanes, pool-vs-single throughput, work stealing of
+//! a wedged worker's stranded backlog (with the priority lane pinned to
+//! its admitting worker), and the closed cross-level loop — a calibrated
+//! control plane converging to the variant the *measured* latencies
+//! support, and the AIMD sizer widening and narrowing the pool from
+//! telemetry. All through the public API with deterministic mock
+//! executors (no built artifacts needed).
 
 use std::collections::{HashMap, HashSet};
 use std::sync::{Arc, Mutex};
@@ -13,7 +15,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 use crowdhmtware::compress::{OperatorKind, VariantSpec};
 use crowdhmtware::coordinator::{
-    BatcherConfig, DispatchPolicy, Executor, Lane, PoolConfig, Rejected, ServingPool,
+    BatcherConfig, DispatchPolicy, Executor, Lane, PoolConfig, Rejected, ServingPool, StealConfig,
 };
 use crowdhmtware::device::{device, ResourceMonitor};
 use crowdhmtware::engine::EngineConfig;
@@ -339,6 +341,108 @@ fn pool_outperforms_single_worker() {
         quad >= 2 * single,
         "4 workers must serve ≥2× a single worker in the same window: {quad} vs {single}"
     );
+}
+
+/// Work stealing (acceptance): one worker is wedged by an artificially
+/// slow batch with its normal lane pre-loaded; the idle workers that
+/// then join the pool steal and drain the stranded requests — all of
+/// them complete in a fraction of the wedged worker's serial drain
+/// time, the hub's steal counters are nonzero, and a priority request
+/// parked on the victim is *not* stolen (the lane-ordering invariant:
+/// priority requests never migrate).
+#[test]
+fn idle_workers_steal_stranded_backlog() {
+    const STRANDED: usize = 12;
+    let slow = Duration::from_millis(250);
+    // Worker 0 (the victim) pays 250 ms per batch; dynamically spawned
+    // workers are fast.
+    let p = ServingPool::spawn(
+        move |worker| {
+            let delay = if worker == 0 { slow } else { Duration::from_millis(1) };
+            Box::new(MockExec { delay }) as Box<dyn Executor>
+        },
+        "base",
+        PoolConfig {
+            workers: 1,
+            queue_capacity: 64,
+            batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_micros(100) },
+            ..PoolConfig::default()
+        },
+    );
+    let t0 = Instant::now();
+    // Wedge the only worker: it absorbs this request and disappears into
+    // a 250 ms batch.
+    let wedge = p.submit(input_for(0)).expect("admitted");
+    std::thread::sleep(Duration::from_millis(30));
+    // Pre-load the victim's queue while it is stuck, priority last.
+    let stranded: Vec<_> = (0..STRANDED)
+        .map(|i| (i % CLASSES, p.submit(input_for(i)).expect("admitted")))
+        .collect();
+    let prio = p.submit_priority(input_for(1)).expect("admitted");
+    // Three idle fast workers join: the steal phase must move the
+    // stranded normal lane onto them.
+    p.set_workers(4);
+
+    for (want, rx) in stranded {
+        let r = rx.recv_timeout(Duration::from_secs(5)).expect("stranded request must complete");
+        assert_eq!(r.pred, want);
+    }
+    let normal_drain = t0.elapsed();
+    // Serial drain on the victim would cost ≥ (1 wedge + 12 stranded) ×
+    // 250 ms = 3.25 s; stolen requests must beat that by a wide margin.
+    assert!(
+        normal_drain < Duration::from_millis(2000),
+        "stranded normal lane took {normal_drain:?} — was anything stolen?"
+    );
+
+    // The priority request stays parked on (and is served by) the
+    // worker that admitted it.
+    let pr = prio.recv_timeout(Duration::from_secs(5)).expect("priority response");
+    assert_eq!(pr.lane, Lane::High);
+    assert_eq!(pr.worker, 0, "priority requests must never migrate");
+    wedge.recv_timeout(Duration::from_secs(5)).expect("wedge response");
+
+    let tel = p.telemetry_snapshot();
+    let victim = tel.per_worker.iter().find(|w| w.worker == 0).expect("victim slot");
+    assert!(victim.stolen_from >= 1, "the victim's lane was never stolen from");
+    let steals: usize = tel.per_worker.iter().map(|w| w.steals).sum();
+    assert!(steals >= victim.stolen_from, "every stolen request has a thief");
+    assert_eq!(tel.steals, steals, "snapshot total mirrors the per-worker counters");
+
+    let stats = p.shutdown();
+    assert_eq!(stats.served(), STRANDED + 2, "nothing lost in migration");
+    assert_eq!(stats.failed(), 0);
+}
+
+/// Stealing can be disabled: the same wedged-victim topology drains
+/// serially and the steal counters stay at zero (the bench relies on
+/// this toggle to show the head-of-line difference).
+#[test]
+fn steal_disabled_keeps_lanes_private() {
+    let p = ServingPool::spawn(
+        move |worker| {
+            let delay =
+                if worker == 0 { Duration::from_millis(40) } else { Duration::from_millis(1) };
+            Box::new(MockExec { delay }) as Box<dyn Executor>
+        },
+        "base",
+        PoolConfig {
+            workers: 1,
+            queue_capacity: 64,
+            batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_micros(100) },
+            steal: StealConfig { enabled: false, ..StealConfig::default() },
+            ..PoolConfig::default()
+        },
+    );
+    let rxs: Vec<_> = (0..6).map(|i| p.submit(input_for(i)).expect("admitted")).collect();
+    std::thread::sleep(Duration::from_millis(30));
+    p.set_workers(3);
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(10)).expect("response");
+    }
+    let tel = p.telemetry_snapshot();
+    assert_eq!(tel.steals, 0, "disabled stealing must never migrate a request");
+    p.shutdown();
 }
 
 // ── the closed cross-level loop (acceptance) ───────────────────────────

@@ -1,25 +1,37 @@
 #!/usr/bin/env python3
-"""Serving-bench regression gate.
+"""Bench regression gate.
 
-Compares a fresh `BENCH_serving.json` (written by
-`cargo bench --bench serving_pool`) against the committed baseline
-`ci/BENCH_baseline.json` and fails when any pool width's p95 latency
-regressed by more than the allowed fraction (default 20%).
+Compares a fresh bench JSON against its committed baseline and fails
+when any entry's p95 latency regressed by more than the allowed
+fraction (default 20%). Two schemas are understood, auto-detected per
+file:
 
-Schema (both files):
+  serving (`BENCH_serving.json` vs `ci/BENCH_baseline.json`):
 
     {"bench": "serving_pool", "requests": N, "batch_delay_ms": D,
      "widths": [{"workers": W, "req_per_s": R, "p50_ms": ..., "p95_ms": ...,
                  "p99_ms": ..., "mean_batch": ..., "rejected": ...}, ...],
      "best": {"workers": W, "req_per_s": R, "speedup_vs_single": S}}
 
-Refreshing the baseline: download the `BENCH_serving` artifact from a
-green run on the target runner class and commit it as
-`ci/BENCH_baseline.json`. The seeded baseline is intentionally slack
-(sleep-based mock benches on shared runners are noisy); it catches
-order-of-magnitude regressions — lost batching overlap, a reintroduced
-spin-wait, a serialized pool — rather than micro-drift. Tighten it by
-refreshing from real runner numbers once a few green runs exist.
+  sharding (`BENCH_sharding.json` vs `ci/BENCH_sharding_baseline.json`):
+
+    {"bench": "shard_router", "requests": N, "batch_delay_ms": D,
+     "configs": [{"peers": P, "req_per_s": R, "remote_share": ...,
+                  "p95_ms": ...}, ...],
+     "split": {"requests": N, "req_per_s": R, "split_share": ...,
+               "p95_ms": ...}}
+
+Additive top-level keys (`skewed`, `split`, `best`, ...) are ignored:
+the gate reads only the primary entry array, so recording a new
+scenario under a fresh key can never break an existing gate.
+
+Refreshing a baseline: download the bench artifact from a green run on
+the target runner class and commit it as the baseline file. Seeded
+baselines are intentionally slack (sleep-based mock benches on shared
+runners are noisy); they catch order-of-magnitude regressions — lost
+batching overlap, a reintroduced spin-wait, a serialized pool — rather
+than micro-drift. Tighten by refreshing from real runner numbers once a
+few green runs exist.
 
 Exit codes: 0 = within budget, 1 = regression or malformed input.
 """
@@ -27,6 +39,9 @@ Exit codes: 0 = within budget, 1 = regression or malformed input.
 import argparse
 import json
 import sys
+
+# (array key, per-entry id field) — tried in order, first match wins.
+SCHEMAS = [("widths", "workers"), ("configs", "peers")]
 
 
 def load(path):
@@ -38,51 +53,55 @@ def load(path):
         sys.exit(1)
 
 
-def by_width(doc, path):
-    widths = doc.get("widths")
-    if not isinstance(widths, list) or not widths:
-        print(f"error: {path} has no 'widths' array", file=sys.stderr)
+def entries(doc, path):
+    """Map entry-id -> entry for the first recognised schema in doc."""
+    for key, id_field in SCHEMAS:
+        arr = doc.get(key)
+        if not isinstance(arr, list) or not arr:
+            continue
+        out = {}
+        for e in arr:
+            try:
+                out[int(e[id_field])] = e
+            except (KeyError, TypeError, ValueError):
+                print(f"error: malformed '{key}' entry in {path}: {e}", file=sys.stderr)
+                sys.exit(1)
+        return out, id_field
+    known = " or ".join(f"'{k}'" for k, _ in SCHEMAS)
+    print(f"error: {path} has no {known} array", file=sys.stderr)
+    sys.exit(1)
+
+
+def compare(cur_doc, base_doc, max_p95_regression, cur_name="current", base_name="baseline"):
+    """Gate cur_doc against base_doc; returns True when within budget."""
+    cur, id_field = entries(cur_doc, cur_name)
+    base, base_field = entries(base_doc, base_name)
+    if id_field != base_field:
+        # A serving result gated against a sharding baseline (or vice
+        # versa) would silently compare unrelated entries whose integer
+        # ids happen to overlap — fail fast on the pairing mistake.
+        print(
+            f"error: schema mismatch: {cur_name} is keyed by '{id_field}' "
+            f"but {base_name} by '{base_field}' — wrong baseline file?",
+            file=sys.stderr,
+        )
         sys.exit(1)
-    out = {}
-    for w in widths:
-        try:
-            out[int(w["workers"])] = w
-        except (KeyError, TypeError, ValueError):
-            print(f"error: malformed width entry in {path}: {w}", file=sys.stderr)
-            sys.exit(1)
-    return out
-
-
-def main():
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("current", help="fresh BENCH_serving.json")
-    ap.add_argument("baseline", help="committed BENCH_baseline.json")
-    ap.add_argument(
-        "--max-p95-regression",
-        type=float,
-        default=0.20,
-        help="allowed fractional p95 increase per width (default 0.20)",
-    )
-    args = ap.parse_args()
-
-    cur = by_width(load(args.current), args.current)
-    base = by_width(load(args.baseline), args.baseline)
 
     shared = sorted(set(cur) & set(base))
     if not shared:
-        # First-run case: a fresh bench scenario has no baseline widths
+        # First-run case: a fresh bench scenario has no baseline entries
         # yet. That is a gap to close by refreshing the baseline, not a
         # regression — warn loudly and pass.
         print(
-            "warning: no pool widths shared between current and baseline "
-            "(first run for this scenario?) — skipping gate; refresh "
-            "ci/BENCH_baseline.json from this run's artifact",
+            f"warning: no '{id_field}' entries shared between {cur_name} "
+            f"and {base_name} (first run for this scenario?) — skipping "
+            "gate; refresh the committed baseline from this run's artifact",
             file=sys.stderr,
         )
-        sys.exit(0)
+        return True
 
     failed = False
-    print(f"{'workers':>8} {'base p95':>10} {'cur p95':>10} {'delta':>8} {'budget':>8}  verdict")
+    print(f"{id_field:>8} {'base p95':>10} {'cur p95':>10} {'delta':>8} {'budget':>8}  verdict")
     for w in shared:
         # Tolerate entries missing p95 (a baseline seeded before the key
         # existed, or a schema extension mid-flight): skip, don't crash.
@@ -96,7 +115,7 @@ def main():
             print(f"{w:>8} {'-':>10} {c95:>10.2f} {'-':>8} {'-':>8}  skipped (no baseline p95)")
             continue
         delta = (c95 - b95) / b95
-        budget = args.max_p95_regression
+        budget = max_p95_regression
         verdict = "ok" if delta <= budget else "REGRESSED"
         if delta > budget:
             failed = True
@@ -108,16 +127,35 @@ def main():
         br = float(base[w].get("req_per_s", 0.0))
         cr = float(cur[w].get("req_per_s", 0.0))
         if br > 0:
-            print(f"info: width {w} req/s {cr:.0f} vs baseline {br:.0f} ({(cr - br) / br:+.1%})")
+            print(f"info: {id_field} {w} req/s {cr:.0f} vs baseline {br:.0f} ({(cr - br) / br:+.1%})")
 
     if failed:
         print(
-            f"FAIL: p95 regressed more than {args.max_p95_regression:.0%} "
-            "against ci/BENCH_baseline.json",
+            f"FAIL: p95 regressed more than {max_p95_regression:.0%} "
+            f"against {base_name}",
             file=sys.stderr,
         )
-        sys.exit(1)
+        return False
     print("bench gate: OK")
+    return True
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="fresh bench JSON (BENCH_serving / BENCH_sharding)")
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument(
+        "--max-p95-regression",
+        type=float,
+        default=0.20,
+        help="allowed fractional p95 increase per entry (default 0.20)",
+    )
+    args = ap.parse_args(argv)
+
+    cur = load(args.current)
+    base = load(args.baseline)
+    ok = compare(cur, base, args.max_p95_regression, args.current, args.baseline)
+    sys.exit(0 if ok else 1)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,143 @@
+"""Unit tests for the bench regression gate (`ci/check_bench.py`).
+
+Run with `python3 -m unittest discover -s ci` (the CI `python-ci` job)
+— plain unittest, no third-party test runner required.
+"""
+
+import copy
+import os
+import sys
+import unittest
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+import check_bench  # noqa: E402
+
+
+def serving_doc(p95_by_width, req_per_s=1000.0):
+    return {
+        "bench": "serving_pool",
+        "requests": 512,
+        "widths": [
+            {"workers": w, "req_per_s": req_per_s, "p95_ms": p95}
+            for w, p95 in p95_by_width.items()
+        ],
+    }
+
+
+def sharding_doc(p95_by_peers, split_p95=None):
+    doc = {
+        "bench": "shard_router",
+        "requests": 256,
+        "configs": [
+            {"peers": p, "req_per_s": 900.0, "remote_share": 0.3, "p95_ms": p95}
+            for p, p95 in p95_by_peers.items()
+        ],
+    }
+    if split_p95 is not None:
+        # Schema-additive key the gate must ignore.
+        doc["split"] = {"requests": 128, "req_per_s": 400.0, "split_share": 0.8, "p95_ms": split_p95}
+    return doc
+
+
+class RegressionMathTest(unittest.TestCase):
+    def test_within_budget_passes(self):
+        base = serving_doc({1: 100.0, 2: 50.0})
+        cur = serving_doc({1: 110.0, 2: 55.0})  # +10%
+        self.assertTrue(check_bench.compare(cur, base, 0.20))
+
+    def test_regression_past_threshold_fails(self):
+        base = serving_doc({1: 100.0, 2: 50.0})
+        cur = serving_doc({1: 100.0, 2: 61.0})  # width 2: +22%
+        self.assertFalse(check_bench.compare(cur, base, 0.20))
+
+    def test_exact_threshold_is_within_budget(self):
+        # delta <= budget passes: the gate fails strictly past the line.
+        base = serving_doc({1: 100.0})
+        cur = serving_doc({1: 120.0})
+        self.assertTrue(check_bench.compare(cur, base, 0.20))
+
+    def test_improvement_always_passes(self):
+        base = serving_doc({1: 100.0})
+        cur = serving_doc({1: 10.0})
+        self.assertTrue(check_bench.compare(cur, base, 0.0))
+
+
+class MissingDataToleranceTest(unittest.TestCase):
+    def test_missing_baseline_p95_key_is_skipped(self):
+        base = serving_doc({1: 100.0})
+        del base["widths"][0]["p95_ms"]  # seeded before the key existed
+        cur = serving_doc({1: 500.0})
+        self.assertTrue(check_bench.compare(cur, base, 0.20))
+
+    def test_zero_baseline_p95_is_skipped(self):
+        base = serving_doc({1: 0.0})
+        cur = serving_doc({1: 500.0})
+        self.assertTrue(check_bench.compare(cur, base, 0.20))
+
+    def test_disjoint_widths_pass_with_warning(self):
+        # First-run case: a new scenario shares no entries with the
+        # committed baseline — gate skips instead of crashing/failing.
+        base = serving_doc({1: 100.0, 2: 50.0})
+        cur = serving_doc({4: 30.0, 8: 20.0})
+        self.assertTrue(check_bench.compare(cur, base, 0.20))
+
+    def test_partially_shared_widths_gate_the_overlap(self):
+        base = serving_doc({1: 100.0, 2: 50.0})
+        cur = serving_doc({2: 100.0, 4: 30.0})  # shared width 2 regressed 2x
+        self.assertFalse(check_bench.compare(cur, base, 0.20))
+
+    def test_malformed_doc_exits(self):
+        with self.assertRaises(SystemExit) as ctx:
+            check_bench.compare({"bench": "nothing here"}, serving_doc({1: 1.0}), 0.2)
+        self.assertEqual(ctx.exception.code, 1)
+
+    def test_malformed_entry_exits(self):
+        doc = {"widths": [{"req_per_s": 1.0}]}  # no 'workers' id
+        with self.assertRaises(SystemExit) as ctx:
+            check_bench.compare(doc, serving_doc({1: 1.0}), 0.2)
+        self.assertEqual(ctx.exception.code, 1)
+
+
+class ShardingSchemaTest(unittest.TestCase):
+    def test_configs_keyed_by_peers_gate(self):
+        base = sharding_doc({0: 300.0, 1: 250.0, 2: 220.0})
+        ok = sharding_doc({0: 310.0, 1: 240.0, 2: 230.0})
+        self.assertTrue(check_bench.compare(ok, base, 0.20))
+        bad = sharding_doc({0: 500.0, 1: 240.0, 2: 230.0})  # peers=0: +67%
+        self.assertFalse(check_bench.compare(bad, base, 0.20))
+
+    def test_additive_split_key_is_ignored(self):
+        # A wildly regressed `split` section must not trip the gate: it
+        # is recorded, not gated (no committed baseline for it yet).
+        base = sharding_doc({0: 300.0})
+        cur = sharding_doc({0: 300.0}, split_p95=99999.0)
+        self.assertTrue(check_bench.compare(cur, base, 0.20))
+
+    def test_additive_skewed_key_is_ignored_on_serving(self):
+        base = serving_doc({1: 100.0})
+        cur = serving_doc({1: 100.0})
+        cur["skewed"] = {"steal_on": {"p95_ms": 99999.0}}
+        self.assertTrue(check_bench.compare(cur, base, 0.20))
+
+    def test_cross_schema_pairing_fails_fast(self):
+        # Serving current vs sharding baseline: ids {1,2} vs {0,1,2}
+        # overlap numerically but mean different things — the gate must
+        # refuse the pairing instead of emitting a meaningless verdict.
+        cur = serving_doc({1: 100.0, 2: 50.0})
+        base = sharding_doc({0: 300.0, 1: 250.0, 2: 220.0})
+        with self.assertRaises(SystemExit) as ctx:
+            check_bench.compare(cur, base, 0.20)
+        self.assertEqual(ctx.exception.code, 1)
+
+    def test_schema_detection_prefers_widths(self):
+        # A doc carrying both arrays gates on 'widths' (serving schema
+        # comes first); the sharding array is then additive.
+        base = serving_doc({1: 100.0})
+        cur = copy.deepcopy(base)
+        cur["configs"] = [{"peers": 0, "p95_ms": 99999.0}]
+        self.assertTrue(check_bench.compare(cur, base, 0.20))
+
+
+if __name__ == "__main__":
+    unittest.main()

@@ -7,12 +7,21 @@
 //! overlap local batches with remote round trips, so attached peers raise
 //! sustained req/s; the table also reports the measured remote share.
 //!
-//! Emits `BENCH_sharding.json`:
+//! A second scenario records the **segment-streaming** trajectory: a
+//! two-segment chain whose heavy tail runs 10× faster on the peer, over
+//! a link that affords the 256 B frontier but not the 4 KB input — the
+//! router splits at the seeded cut and the split-vs-full-remote
+//! trajectory is captured from day one.
+//!
+//! Emits `BENCH_sharding.json` (the `split` key is schema-additive — the
+//! CI gate reads `configs` only, like PR 4's `skewed` key):
 //!
 //! ```json
 //! {"bench":"shard_router","requests":256,"batch_delay_ms":2,
 //!  "configs":[{"peers":0,"req_per_s":...,"remote_share":0.0,
-//!              "p95_ms":...}, ...]}
+//!              "p95_ms":...}, ...],
+//!  "split":{"requests":128,"req_per_s":...,"split_share":...,
+//!           "p95_ms":...}}
 //! ```
 //!
 //! Run: `cargo bench --bench shard_router`
@@ -24,6 +33,7 @@ use crowdhmtware::coordinator::{
     BatcherConfig, Executor, PoolConfig, ServingPool, ShardRouter, ShardRouterConfig,
 };
 use crowdhmtware::partition::SharedLink;
+use crowdhmtware::runtime::SegmentedExec;
 use crowdhmtware::util::{Json, Table};
 
 const CLASSES: usize = 4;
@@ -106,6 +116,81 @@ fn run_config(peers: usize) -> ConfigResult {
     }
 }
 
+// ── segment-streaming scenario ────────────────────────────────────────
+
+const SPLIT_REQUESTS: usize = 128;
+
+struct SplitResult {
+    req_per_s: f64,
+    split_share: f64,
+    p95_ms: f64,
+}
+
+/// Two-segment chain: `head_ms` then `tail_ms`, with a 64-element
+/// (256 B) frontier at the cut over the 4 KB input.
+fn chain(head_ms: u64, tail_ms: u64) -> SegmentedExec {
+    SegmentedExec::new(
+        CLASSES,
+        vec![ELEMS, 64, CLASSES],
+        vec![Duration::from_millis(head_ms), Duration::from_millis(tail_ms)],
+    )
+}
+
+/// Local tail is 10 ms; the peer runs it in 1 ms; the 8 Mbit/s link
+/// affords the frontier (~0.75 ms) but not the input (~4.6 ms). The
+/// router should stream most traffic through `split@1`.
+fn run_split_scenario() -> SplitResult {
+    let pool = ServingPool::spawn(
+        |_| Box::new(chain(1, 10)) as Box<dyn Executor>,
+        "v",
+        PoolConfig {
+            workers: 2,
+            queue_capacity: SPLIT_REQUESTS,
+            batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_micros(100) },
+            ..PoolConfig::default()
+        },
+    );
+    let router = ShardRouter::new(
+        pool,
+        ShardRouterConfig {
+            peer_capacity: SPLIT_REQUESTS,
+            local_prior_s: 0.011,
+            ..ShardRouterConfig::default()
+        },
+    );
+    router.add_simulated_peer(
+        "edge",
+        || Box::new(chain(5, 1)) as Box<dyn Executor>,
+        SharedLink::new(8.0, 1.0),
+        0.011,
+    );
+    router.seed_split(0, 1, 0.003);
+    // The peer thread publishes its segment capability asynchronously;
+    // wait so the whole run sees the split route.
+    for _ in 0..500 {
+        if router.admitted_splits() == 1 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..SPLIT_REQUESTS)
+        .map(|_| router.submit(vec![0.0; ELEMS]).expect("capacity sized to the run"))
+        .collect();
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(60)).expect("response");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let split = router.shard_stats().split_routed();
+    let stats = router.shutdown();
+    assert_eq!(stats.served(), SPLIT_REQUESTS);
+    SplitResult {
+        req_per_s: SPLIT_REQUESTS as f64 / wall,
+        split_share: split as f64 / SPLIT_REQUESTS as f64,
+        p95_ms: stats.percentile(0.95) * 1e3,
+    }
+}
+
 fn main() {
     let mut table = Table::new(
         "Serving throughput vs attached peers (mock executors, 2 ms/batch)",
@@ -124,6 +209,18 @@ fn main() {
     }
     table.print();
 
+    let split = run_split_scenario();
+    let mut split_table = Table::new(
+        "Segment streaming (2-seg chain, 10 ms local tail vs 1 ms remote, 8 Mbit/s link)",
+        &["req/s", "split share", "p95 ms"],
+    );
+    split_table.row(&[
+        format!("{:.0}", split.req_per_s),
+        format!("{:.2}", split.split_share),
+        format!("{:.2}", split.p95_ms),
+    ]);
+    split_table.print();
+
     let configs: Vec<Json> = results
         .iter()
         .map(|r| {
@@ -140,6 +237,18 @@ fn main() {
         ("requests", Json::num(REQUESTS as f64)),
         ("batch_delay_ms", Json::num(BATCH_DELAY.as_secs_f64() * 1e3)),
         ("configs", Json::Arr(configs)),
+        // Schema-additive (like PR 4's `skewed` key in BENCH_serving):
+        // the CI gate reads `configs` only, so recording the split
+        // trajectory cannot affect existing gates.
+        (
+            "split",
+            Json::obj(vec![
+                ("requests", Json::num(SPLIT_REQUESTS as f64)),
+                ("req_per_s", Json::num(split.req_per_s)),
+                ("split_share", Json::num(split.split_share)),
+                ("p95_ms", Json::num(split.p95_ms)),
+            ]),
+        ),
     ]);
     let path = "BENCH_sharding.json";
     match std::fs::write(path, doc.to_string() + "\n") {

@@ -17,6 +17,13 @@
 //! peer link a first-class remote telemetry slot — plan-predicted
 //! latencies seed the route weights, measured hub EWMAs correct them, and
 //! drifting links degrade to local-only and re-admit on recovery.
+//! Routing is a per-request placement search over the partition chain's
+//! cut points, not a binary local/remote pick: a request can run
+//! segments `0..k` on a pool-built executor, ship the frontier tensor,
+//! and finish on the peer ([`server::Executor::run_segments`] +
+//! [`shard::PeerTransport::infer_segments`]), with each peer's
+//! `split@k` route governed by its own telemetry lane. Priority-lane
+//! requests are never split-routed.
 
 pub mod batcher;
 pub mod cascade;

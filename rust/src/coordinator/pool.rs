@@ -265,6 +265,15 @@ impl ServingPool {
         self.capacity
     }
 
+    /// The executor factory workers are built from. The shard router
+    /// hands it to each peer link thread so the *local half* of a split
+    /// route (segments `0..k`) runs on a pool-built executor constructed
+    /// on that thread (PJRT clients are thread-affine) — one executor
+    /// code path for local workers, split prefixes, and simulated peers.
+    pub(crate) fn executor_factory(&self) -> Arc<dyn Fn(usize) -> Box<dyn Executor> + Send + Sync> {
+        Arc::clone(&self.make)
+    }
+
     /// The hub every worker publishes into — the control plane's
     /// observation channel.
     pub fn telemetry(&self) -> Arc<TelemetryHub> {

@@ -47,12 +47,63 @@ use crate::telemetry::{Lane, WorkerTelemetry};
 /// without built artifacts. Not `Send`: PJRT handles are thread-affine,
 /// so each executor is *constructed inside* its worker thread (see
 /// [`spawn_worker`]).
+///
+/// **Segment runs** (Sec. III-B partial offloading at serving time): an
+/// executor that can run a *contiguous range* of the model's
+/// pre-partitioned segments over a single request's frontier tensor
+/// overrides [`Executor::num_segments`] / [`Executor::frontier_elems`] /
+/// [`Executor::run_segments`]. The shard router then streams requests
+/// through a mid-chain cut — segments `0..k` on a local executor, the
+/// frontier shipped across the link, `k..n` on the peer — with both
+/// halves going through this one entry point. The defaults declare the
+/// model opaque (one segment, whole-model execution only), which makes
+/// split routing structurally impossible for that executor; existing
+/// whole-model executors need no changes.
 pub trait Executor {
     /// Compiled batch sizes available for the current variant.
     fn batch_sizes(&self, variant: &str) -> Vec<usize>;
     fn num_classes(&self) -> usize;
     fn input_elems(&self) -> usize;
     fn run(&mut self, variant: &str, batch: usize, input: &[f32]) -> Result<Vec<f32>>;
+
+    /// How many pre-partitioned segments this executor can run
+    /// piecewise. The default `1` means whole-model only — the shard
+    /// router never split-routes through such an executor.
+    fn num_segments(&self) -> usize {
+        1
+    }
+
+    /// f32 elements of the frontier tensor *entering* segment `seg`, so
+    /// `frontier_elems(0) == input_elems()` and
+    /// `frontier_elems(num_segments()) == num_classes()` (the chain's
+    /// final "frontier" is the class distribution).
+    fn frontier_elems(&self, seg: usize) -> usize {
+        if seg == 0 {
+            self.input_elems()
+        } else {
+            self.num_classes()
+        }
+    }
+
+    /// Run the contiguous segment range `[first, last)` over one
+    /// request's frontier tensor (`frontier_elems(first)` values),
+    /// returning the frontier entering segment `last` — or the class
+    /// probabilities when `last == num_segments()`. The default supports
+    /// only the full chain and delegates to [`Executor::run`] at batch 1.
+    fn run_segments(
+        &mut self,
+        variant: &str,
+        first: usize,
+        last: usize,
+        frontier: &[f32],
+    ) -> Result<Vec<f32>> {
+        if first != 0 || last != self.num_segments() {
+            anyhow::bail!(
+                "executor cannot run partial segment range {first}..{last} (whole-model only)"
+            );
+        }
+        self.run(variant, 1, frontier)
+    }
 }
 
 impl Executor for crate::runtime::ModelRuntime {

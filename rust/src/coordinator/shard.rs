@@ -3,37 +3,59 @@
 //! paper's scalable-offloading component (Sec. III-B) closed over the
 //! Fig. 6 cross-level loop.
 //!
+//! Since segment streaming landed, routing is no longer a binary
+//! local/remote dispatch: requests can execute a *contiguous segment
+//! prefix* `0..k` on a pool-built executor, ship the frontier tensor at
+//! the cut (Fig. 6's transmission-delay term priced per boundary via
+//! the live [`crate::partition::SharedLink`]), and finish `k..n` on the
+//! peer — the paper's Fig. 6 segment-run placement operating *per
+//! request at serving time*, not just in the planner.
+//!
 //! Mapping onto the paper:
 //!
 //! | Paper (Sec. III-B / Fig. 6)             | Here                                        |
 //! |-----------------------------------------|---------------------------------------------|
 //! | Peer devices running model segments     | [`PeerTransport`] executors behind [`ShardRouter`] peer links |
-//! | Transmission delay (feature bytes / BW) | [`crate::partition::SharedLink::delay_s`], folded into every measured peer sample |
-//! | Graph-search offloading plan            | [`crate::partition::OffloadPlan`] → [`ShardRouter::apply_plan`] route priors |
-//! | Runtime profiler feedback (Fig. 6)      | one remote [`WorkerTelemetry`] slot per peer link in the pool's [`TelemetryHub`] |
-//! | Configuration actuation (Fig. 6)        | `Actuator::set_shards` (degrade / re-admit reconciliation) alongside `set_workers` |
+//! | Contiguous segment runs per device      | [`Executor::run_segments`] local prefix + [`PeerTransport::infer_segments`] remote tail |
+//! | Transmission delay (feature bytes / BW) | [`crate::partition::SharedLink::delay_s`] of the *frontier* bytes at the cut (whole input for full-remote) |
+//! | Graph-search offloading plan            | [`crate::partition::OffloadPlan`] → [`ShardRouter::apply_plan`] route priors; a mid-chain [`crate::partition::OffloadPlan::split_cut`] seeds the peer's split route |
+//! | Runtime profiler feedback (Fig. 6)      | one remote [`WorkerTelemetry`] slot per peer link, with a separate *split lane* (`split_ewma_s`) per cut |
+//! | Configuration actuation (Fig. 6)        | `Actuator::set_shards` (degrade / re-admit reconciliation, full-remote and split independently) alongside `set_workers` |
 //!
-//! Routing policy, per submission:
+//! Routing policy, per submission — a placement search over the
+//! partition chain's cut points, not a target pick:
 //!
-//! 1. Every target gets a latency estimate: *plan-predicted* (the
-//!    offload planner's Sec. III-B cost, via [`ShardRouter::apply_plan`])
-//!    until the telemetry hub has measured it, then the slot's observed
-//!    EWMA — measurements correct the model, exactly like the control
-//!    plane's latency calibrator corrects Eq. 2.
-//! 2. Dispatch picks the target minimizing `(queue_depth + 1) × est`,
-//!    i.e. load-weighted expected latency across the local pool and every
-//!    *admitted* peer.
-//! 3. A peer whose measured EWMA drifts past the degrade budget — or
-//!    that produced fresh request *failures* since the last
+//! 1. Every *route* gets a latency estimate: local-only, each peer's
+//!    full-remote route, and each peer's `split@k` route (its active cut
+//!    point, seeded from the offload plan's placements). Estimates are
+//!    *plan-predicted* (via [`ShardRouter::apply_plan`]) until the
+//!    telemetry hub has measured them, then the slot's observed EWMA —
+//!    the split route reads its own `split_ewma_s` lane, so
+//!    measurements correct each cut's model independently, exactly like
+//!    the control plane's latency calibrator corrects Eq. 2.
+//! 2. Dispatch picks the route minimizing `(queue_depth + 1) × est`,
+//!    i.e. load-weighted expected latency across the local pool and
+//!    every *admitted* route.
+//! 3. A route whose measured EWMA drifts past the degrade budget — or
+//!    whose link produced fresh request *failures* since the last
 //!    reconciliation (a dead link yields no latency samples at all) — is
 //!    evicted from the route set (traffic falls back to local workers);
 //!    while degraded or unmeasurable it still receives every Nth
-//!    normal-lane submission as a *probe*, so link recovery is observed
-//!    and the peer re-admits once a clean window puts its EWMA under the
-//!    (hysteresis) re-admit threshold. Degrade/re-admit decisions
-//!    consume only [`TelemetrySnapshot`] data — they run in
+//!    normal-lane submission as a *probe*, so recovery is observed and
+//!    the route re-admits once a clean window puts its EWMA under the
+//!    (hysteresis) re-admit threshold. The split route degrades and
+//!    re-admits *independently* of full-remote routing — a cut whose
+//!    frontier no longer fits the link retreats to local-only without
+//!    tearing down the peer. Decisions consume only
+//!    [`TelemetrySnapshot`] data — they run in
 //!    [`ShardRouter::maintain`], the control plane's `set_shards`
 //!    actuation arm.
+//!
+//! **Invariant: priority-lane requests are never split-routed.** A split
+//! rides two executors and a mid-chain frontier shipment; the
+//! latency-critical lane keeps the single-hop guarantee (local worker or
+//! one full-remote round trip) and never serves as a degraded-route
+//! probe either.
 //!
 //! [`SimulatedPeer`] keeps all of this runnable offline: an in-process
 //! peer executing through any [`Executor`] with the transfer cost of a
@@ -82,6 +104,32 @@ pub trait PeerTransport {
     /// telemetry sample and the response latency, so the hub always sees
     /// the full round trip.
     fn infer(&mut self, variant: &str, input: &[f32]) -> Result<(Vec<f32>, f64)>;
+
+    /// How many pre-partitioned segments the remote device can run
+    /// piecewise. The default `1` declares the remote model opaque —
+    /// the router then never offers a split route through this link.
+    fn num_segments(&self) -> usize {
+        1
+    }
+
+    /// Segment-run entry point (Sec. III-B partial offloading): finish a
+    /// partially executed request by running segments `first_seg..` on
+    /// the remote device over the shipped `input_frontier`, returning
+    /// the class probabilities plus the analytically accounted transfer
+    /// seconds for the *frontier* (in) and the logits (back) — the same
+    /// convention as [`PeerTransport::infer`], which is exactly this
+    /// call at `first_seg == 0`. The default supports only that case.
+    fn infer_segments(
+        &mut self,
+        variant: &str,
+        first_seg: usize,
+        input_frontier: &[f32],
+    ) -> Result<(Vec<f32>, f64)> {
+        if first_seg == 0 {
+            return self.infer(variant, input_frontier);
+        }
+        anyhow::bail!("transport cannot resume at segment {first_seg} (whole-model only)")
+    }
 }
 
 /// In-process simulated peer: a local [`Executor`] behind a live
@@ -111,6 +159,27 @@ impl PeerTransport for SimulatedPeer {
         let transfer = self.link.delay_s(in_bytes) + self.link.delay_s(out_bytes);
         Ok((probs, transfer))
     }
+
+    fn num_segments(&self) -> usize {
+        self.exec.num_segments()
+    }
+
+    fn infer_segments(
+        &mut self,
+        variant: &str,
+        first_seg: usize,
+        input_frontier: &[f32],
+    ) -> Result<(Vec<f32>, f64)> {
+        // Transfer cost is live-link bandwidth × *frontier* bytes — the
+        // whole point of a mid-chain cut is that the frontier is smaller
+        // than the input the full-remote path would ship.
+        let in_bytes = std::mem::size_of_val(input_frontier);
+        let last = self.exec.num_segments();
+        let probs = self.exec.run_segments(variant, first_seg, last, input_frontier)?;
+        let out_bytes = std::mem::size_of_val(probs.as_slice());
+        let transfer = self.link.delay_s(in_bytes) + self.link.delay_s(out_bytes);
+        Ok((probs, transfer))
+    }
 }
 
 /// One request in flight to a peer link.
@@ -119,6 +188,10 @@ struct InferJob {
     input: Vec<f32>,
     enqueued: Instant,
     lane: Lane,
+    /// Segment cut: `0` ships the whole request (full-remote); `k > 0`
+    /// runs segments `0..k` on the link thread's local executor, ships
+    /// the frontier, and finishes `k..` on the peer.
+    cut: usize,
     resp: Sender<Response>,
 }
 
@@ -194,10 +267,37 @@ struct PeerSlot {
     routed: AtomicUsize,
     /// Probe submissions among `routed`.
     probes: AtomicUsize,
+    /// Active split cut point for this link (segments `0..cut` local,
+    /// `cut..` remote); `0` = no split route. Seeded from a mid-chain
+    /// offload plan ([`ShardRouter::apply_plan`]) or
+    /// [`ShardRouter::seed_split`].
+    cut: AtomicUsize,
+    /// Plan-predicted split round trip (f64 bits; `INFINITY` when no
+    /// plan priced the cut).
+    split_plan_s: AtomicU64,
+    /// Last snapshot-observed split-lane EWMA (f64 bits; 0.0 =
+    /// unmeasured).
+    split_measured_s: AtomicU64,
+    /// Split-route admission, governed independently of `admitted` —
+    /// a drifting cut retreats to local-only while full-remote routing
+    /// (and vice versa) stays live.
+    split_admitted: AtomicBool,
+    /// Split submissions among `routed`.
+    split_routed: AtomicUsize,
+    /// Probe submissions among `split_routed`.
+    split_probes: AtomicUsize,
+    /// Segments the link can stream piecewise — the *min* of the
+    /// transport's and the local-half executor's capabilities (written
+    /// by the peer thread once both are known; `0` until then). A cut
+    /// is only routable while `cut < segments`, so a whole-model half
+    /// on either side makes every cut unroutable rather than failing
+    /// (or silently mis-serving) split requests at execution time.
+    segments: Arc<AtomicUsize>,
 }
 
 impl PeerSlot {
-    /// Routing estimate: measured EWMA once observed, plan prior before.
+    /// Full-remote routing estimate: measured EWMA once observed, plan
+    /// prior before.
     fn estimate_s(&self) -> f64 {
         let m = b2f(self.measured_s.load(Ordering::Relaxed));
         if m > 0.0 {
@@ -206,6 +306,23 @@ impl PeerSlot {
             b2f(self.plan_s.load(Ordering::Relaxed))
         }
     }
+
+    /// Split-route estimate: the split lane's measured EWMA once
+    /// observed, the plan's split prior before.
+    fn split_estimate_s(&self) -> f64 {
+        let m = b2f(self.split_measured_s.load(Ordering::Relaxed));
+        if m > 0.0 {
+            m
+        } else {
+            b2f(self.split_plan_s.load(Ordering::Relaxed))
+        }
+    }
+
+    /// The active cut, if the link can actually stream it.
+    fn routable_cut(&self) -> Option<usize> {
+        let cut = self.cut.load(Ordering::Acquire);
+        (cut > 0 && cut < self.segments.load(Ordering::Acquire)).then_some(cut)
+    }
 }
 
 /// Point-in-time routing state of one peer link.
@@ -213,16 +330,31 @@ impl PeerSlot {
 pub struct PeerStat {
     pub name: String,
     pub admitted: bool,
-    /// Submissions routed to this peer (probes included).
+    /// Submissions routed to this peer (probes and splits included).
     pub routed: usize,
     pub probes: usize,
     pub served: usize,
     pub failed: usize,
     pub queue_depth: usize,
-    /// Measured round-trip EWMA (0.0 until observed by `maintain`).
+    /// Measured full-remote round-trip EWMA (0.0 until observed by
+    /// `maintain`).
     pub measured_s: f64,
-    /// Plan-predicted prior (`INFINITY` when plan-excluded).
+    /// Plan-predicted full-remote prior (`INFINITY` when plan-excluded).
     pub plan_s: f64,
+    /// Active split cut point (0 = no split route).
+    pub cut: usize,
+    /// Split-route admission (independent of `admitted`).
+    pub split_admitted: bool,
+    /// Split submissions among `routed` (split probes included).
+    pub split_routed: usize,
+    /// Probe submissions among `split_routed`.
+    pub split_probes: usize,
+    /// Requests that completed through the split route.
+    pub split_served: usize,
+    /// Measured split-lane EWMA (0.0 until observed by `maintain`).
+    pub split_measured_s: f64,
+    /// Plan-predicted split prior (`INFINITY` until a plan priced it).
+    pub split_plan_s: f64,
 }
 
 /// Router-level routing statistics.
@@ -230,17 +362,33 @@ pub struct PeerStat {
 pub struct ShardStats {
     /// Submissions served by the local pool.
     pub routed_local: usize,
-    /// Peer degrade events (admitted → degraded transitions).
+    /// Peer degrade events (admitted → degraded transitions of the
+    /// full-remote route).
     pub degraded_events: usize,
-    /// Peer re-admit events (degraded → admitted transitions).
+    /// Peer re-admit events (degraded → admitted transitions of the
+    /// full-remote route).
     pub readmitted_events: usize,
+    /// Split-route degrade events (split admitted → degraded).
+    pub split_degraded_events: usize,
+    /// Split-route re-admit events (split degraded → admitted).
+    pub split_readmitted_events: usize,
     pub peers: Vec<PeerStat>,
 }
 
 impl ShardStats {
-    /// Submissions routed to any peer (probes included).
+    /// Submissions routed to any peer (probes and splits included).
     pub fn routed_remote(&self) -> usize {
         self.peers.iter().map(|p| p.routed).sum()
+    }
+
+    /// Submissions routed through a split (local prefix + remote tail).
+    pub fn split_routed(&self) -> usize {
+        self.peers.iter().map(|p| p.split_routed).sum()
+    }
+
+    /// Requests that completed through a split route.
+    pub fn split_served(&self) -> usize {
+        self.peers.iter().map(|p| p.split_served).sum()
     }
 }
 
@@ -265,6 +413,8 @@ pub struct ShardRouter {
     routed_local: AtomicUsize,
     degraded_events: AtomicUsize,
     readmitted_events: AtomicUsize,
+    split_degraded_events: AtomicUsize,
+    split_readmitted_events: AtomicUsize,
     next_remote_id: AtomicU64,
 }
 
@@ -287,6 +437,8 @@ impl ShardRouter {
             routed_local: AtomicUsize::new(0),
             degraded_events: AtomicUsize::new(0),
             readmitted_events: AtomicUsize::new(0),
+            split_degraded_events: AtomicUsize::new(0),
+            split_readmitted_events: AtomicUsize::new(0),
             next_remote_id: AtomicU64::new(0),
         }
     }
@@ -322,8 +474,32 @@ impl ShardRouter {
         let generation = self.pool.generation();
         let (tx, rx) = channel();
         let tel_thread = Arc::clone(&tel);
+        // The link thread owns the *local half* of split routes: a
+        // pool-built executor constructed on that thread (PJRT clients
+        // are thread-affine) from the same factory the workers use —
+        // segments 0..k run through the identical code path as a local
+        // worker would run them.
+        let make_local = self.pool.executor_factory();
+        let segments = Arc::new(AtomicUsize::new(0));
+        let seg_thread = Arc::clone(&segments);
         let join = std::thread::spawn(move || {
-            peer_main(worker_id, make_transport(), rx, variant, generation, tel_thread)
+            let transport = make_transport();
+            let mut ctx = PeerCtx { transport, make_local, local: None, worker: worker_id };
+            // Publish the link's streamable capability: the min of what
+            // BOTH halves can run piecewise. A whole-model local
+            // executor (e.g. the PJRT runtime's default) must make every
+            // cut unroutable — otherwise its default `run_segments`
+            // would silently execute the whole model as the "prefix" and
+            // ship class probabilities to the peer as a frontier. The
+            // local half is only constructed (and paid for) when the
+            // transport is segmented at all.
+            let segs = if ctx.transport.num_segments() > 1 {
+                ctx.transport.num_segments().min(ctx.local_half().num_segments())
+            } else {
+                1
+            };
+            seg_thread.store(segs, Ordering::Release);
+            peer_main(ctx, rx, variant, generation, tel_thread)
         });
         peers.push(PeerSlot {
             name: name.to_string(),
@@ -336,6 +512,13 @@ impl ShardRouter {
             admitted: AtomicBool::new(true),
             routed: AtomicUsize::new(0),
             probes: AtomicUsize::new(0),
+            cut: AtomicUsize::new(0),
+            split_plan_s: AtomicU64::new(f2b(f64::INFINITY)),
+            split_measured_s: AtomicU64::new(f2b(0.0)),
+            split_admitted: AtomicBool::new(true),
+            split_routed: AtomicUsize::new(0),
+            split_probes: AtomicUsize::new(0),
+            segments,
         });
         idx
     }
@@ -369,6 +552,17 @@ impl ShardRouter {
         self.peers.read().unwrap().iter().filter(|p| p.admitted.load(Ordering::Acquire)).count()
     }
 
+    /// Peers whose *split* route is currently serveable: an active cut
+    /// the link can stream (`cut < segments`) that is admitted.
+    pub fn admitted_splits(&self) -> usize {
+        self.peers
+            .read()
+            .unwrap()
+            .iter()
+            .filter(|p| p.routable_cut().is_some() && p.split_admitted.load(Ordering::Acquire))
+            .count()
+    }
+
     /// Submit on the normal lane.
     pub fn submit(&self, input: Vec<f32>) -> Result<Receiver<Response>, Rejected> {
         self.submit_lane(input, Lane::Normal)
@@ -380,58 +574,76 @@ impl ShardRouter {
         self.submit_lane(input, Lane::High)
     }
 
-    /// Route one submission: probe turn → best-estimate target → local
+    /// Route one submission: probe turn → best-estimate *route* (each
+    /// peer offers up to two: full-remote and `split@cut`) → local
     /// fallback. Rejected only when the local pool *and* every routable
     /// peer are at capacity.
     pub fn submit_lane(&self, input: Vec<f32>, lane: Lane) -> Result<Receiver<Response>, Rejected> {
         let n = self.seq.fetch_add(1, Ordering::Relaxed);
         let peers = self.peers.read().unwrap();
 
-        // Probe turn: keep unroutable links measured. That covers both
-        // degraded peers (so recovery is seen) and admitted peers with no
-        // finite estimate (plan-excluded before any measurement — without
-        // probes no traffic could ever arrive to override the infinite
-        // prior, making the exclusion permanent).
+        // Probe turn: keep unroutable *routes* measured. That covers
+        // degraded routes (so recovery is seen) and admitted routes with
+        // no finite estimate (plan-excluded before any measurement —
+        // without probes no traffic could ever arrive to override the
+        // infinite prior, making the exclusion permanent). Full-remote
+        // and split routes probe separately: each has its own telemetry
+        // lane to refresh. Priority requests never probe.
         let mut input = input;
         if lane == Lane::Normal && self.cfg.probe_every > 0 && n % self.cfg.probe_every == 0 {
-            let unroutable: Vec<usize> = peers
-                .iter()
-                .enumerate()
-                .filter(|(_, p)| {
-                    !p.admitted.load(Ordering::Acquire) || !p.estimate_s().is_finite()
-                })
-                .map(|(i, _)| i)
-                .collect();
+            let mut unroutable: Vec<(usize, usize)> = Vec::new();
+            for (i, p) in peers.iter().enumerate() {
+                if !p.admitted.load(Ordering::Acquire) || !p.estimate_s().is_finite() {
+                    unroutable.push((i, 0));
+                }
+                if let Some(cut) = p.routable_cut() {
+                    if !p.split_admitted.load(Ordering::Acquire)
+                        || !p.split_estimate_s().is_finite()
+                    {
+                        unroutable.push((i, cut));
+                    }
+                }
+            }
             if !unroutable.is_empty() {
-                let pi = unroutable[(n / self.cfg.probe_every) % unroutable.len()];
-                match self.try_peer(&peers[pi], input, lane, true) {
+                let (pi, cut) = unroutable[(n / self.cfg.probe_every) % unroutable.len()];
+                match self.try_peer(&peers[pi], input, lane, true, cut) {
                     Ok(rx) => return Ok(rx),
                     Err(give_back) => input = give_back,
                 }
             }
         }
 
-        // Best admitted peer by load-weighted estimate.
-        let mut best: Option<(usize, f64)> = None;
+        // Best admitted route by load-weighted estimate: each peer
+        // contributes its full-remote route and, for normal-lane
+        // submissions, its split route (priority requests are never
+        // split-routed — the invariant the module doc states).
+        let mut best: Option<(usize, usize, f64)> = None;
         for (i, p) in peers.iter().enumerate() {
-            if !p.admitted.load(Ordering::Acquire) {
-                continue;
-            }
             let depth = p.tel.queue_depth();
             if depth >= self.cfg.peer_capacity {
                 continue;
             }
-            let est = p.estimate_s();
-            if !est.is_finite() {
-                continue;
-            }
-            let score = (depth as f64 + 1.0) * est;
-            let better = match best {
-                None => true,
-                Some((_, s)) => score < s,
+            let weight = depth as f64 + 1.0;
+            let mut consider = |cut: usize, est: f64| {
+                if !est.is_finite() {
+                    return;
+                }
+                let score = weight * est;
+                let better = match best {
+                    None => true,
+                    Some((_, _, s)) => score < s,
+                };
+                if better {
+                    best = Some((i, cut, score));
+                }
             };
-            if better {
-                best = Some((i, score));
+            if p.admitted.load(Ordering::Acquire) {
+                consider(0, p.estimate_s());
+            }
+            if lane == Lane::Normal && p.split_admitted.load(Ordering::Acquire) {
+                if let Some(cut) = p.routable_cut() {
+                    consider(cut, p.split_estimate_s());
+                }
             }
         }
 
@@ -449,9 +661,9 @@ impl ShardRouter {
         let cap = self.pool.queue_capacity();
         let local_full = !depths.is_empty() && depths.iter().all(|&d| d >= cap);
 
-        if let Some((pi, score)) = best {
+        if let Some((pi, cut, score)) = best {
             if score < local_score || local_full {
-                match self.try_peer(&peers[pi], input, lane, false) {
+                match self.try_peer(&peers[pi], input, lane, false, cut) {
                     Ok(rx) => return Ok(rx),
                     Err(give_back) => input = give_back,
                 }
@@ -470,15 +682,17 @@ impl ShardRouter {
         }
     }
 
-    /// Try one peer: admission against the link's bounded in-flight
-    /// window, then enqueue. Gives the input back on failure so the
-    /// caller can fall through to another target.
+    /// Try one route on one peer: admission against the link's bounded
+    /// in-flight window, then enqueue with the route's cut (`0` =
+    /// full-remote). Gives the input back on failure so the caller can
+    /// fall through to another target.
     fn try_peer(
         &self,
         slot: &PeerSlot,
         input: Vec<f32>,
         lane: Lane,
         probe: bool,
+        cut: usize,
     ) -> Result<Receiver<Response>, Vec<f32>> {
         let prev = slot.tel.depth_inc();
         if prev >= self.cfg.peer_capacity {
@@ -487,12 +701,19 @@ impl ShardRouter {
         }
         let id = REMOTE_ID_BASE + self.next_remote_id.fetch_add(1, Ordering::Relaxed) + 1;
         let (tx, rx) = channel();
-        let msg = PeerMsg::Infer(InferJob { id, input, enqueued: Instant::now(), lane, resp: tx });
+        let msg =
+            PeerMsg::Infer(InferJob { id, input, enqueued: Instant::now(), lane, cut, resp: tx });
         match slot.tx.send(msg) {
             Ok(()) => {
                 slot.routed.fetch_add(1, Ordering::Relaxed);
                 if probe {
                     slot.probes.fetch_add(1, Ordering::Relaxed);
+                }
+                if cut > 0 {
+                    slot.split_routed.fetch_add(1, Ordering::Relaxed);
+                    if probe {
+                        slot.split_probes.fetch_add(1, Ordering::Relaxed);
+                    }
                 }
                 Ok(rx)
             }
@@ -510,8 +731,13 @@ impl ShardRouter {
     /// plane's `set_shards` actuation arm, consuming only
     /// [`TelemetrySnapshot`] data (call it once per adaptation tick with
     /// the pool hub's snapshot). Refreshes the local and per-peer latency
-    /// estimates, degrades peers whose measured EWMA drifted past the
-    /// budget, re-admits recovered ones. Returns the admitted peer count.
+    /// estimates, degrades routes whose measured EWMA drifted past the
+    /// budget, re-admits recovered ones. Full-remote and split routes
+    /// reconcile *independently* from their own telemetry lanes
+    /// (`ewma_s` vs `split_ewma_s`): a drifting split retreats to
+    /// local-only without touching full-remote admission, and vice
+    /// versa. Fresh link *failures* degrade both routes — a dead link
+    /// serves neither. Returns the admitted peer count (full-remote).
     pub fn maintain(&self, tel: &TelemetrySnapshot) -> usize {
         // Local estimate: mean slot EWMA across live local workers.
         let mut sum = 0.0;
@@ -557,6 +783,32 @@ impl ShardRouter {
                     p.admitted.store(true, Ordering::Release);
                     self.readmitted_events.fetch_add(1, Ordering::Relaxed);
                 }
+
+                // Split-route reconciliation, on the split lane's own
+                // EWMA: same budget and hysteresis band, independent
+                // admission. (Failures are per link, not per route —
+                // they degrade both.)
+                if p.cut.load(Ordering::Acquire) > 0 {
+                    if v.split_ewma_s > 0.0 {
+                        p.split_measured_s.store(f2b(v.split_ewma_s), Ordering::Relaxed);
+                    }
+                    let was = p.split_admitted.load(Ordering::Acquire);
+                    let drifted = (v.split_ewma_s > 0.0
+                        && v.split_ewma_s > self.cfg.degrade_latency_s)
+                        || new_failures > 0;
+                    if was && drifted {
+                        p.split_admitted.store(false, Ordering::Release);
+                        self.split_degraded_events.fetch_add(1, Ordering::Relaxed);
+                        p.tel.record_split_degraded();
+                    } else if !was
+                        && !drifted
+                        && v.split_ewma_s > 0.0
+                        && v.split_ewma_s < self.cfg.readmit_latency_s
+                    {
+                        p.split_admitted.store(true, Ordering::Release);
+                        self.split_readmitted_events.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
             }
             if p.admitted.load(Ordering::Acquire) {
                 admitted += 1;
@@ -566,20 +818,65 @@ impl ShardRouter {
     }
 
     /// Refresh route priors from a fresh offload plan (Sec. III-B's
-    /// graph-search output informing admission): peers the plan routes
-    /// through get its predicted end-to-end latency as their prior;
-    /// plan-excluded peers get an infinite prior (measured estimates, once
-    /// observed, still override either way). `local_latency_s` is the
-    /// calibrated on-device prediction for the deployed variant — the
-    /// local prior (ignored when non-finite or non-positive).
+    /// graph-search output informing admission). A *mid-chain* plan —
+    /// segments `0..cut` on the local device, `cut..n` on one peer
+    /// ([`OffloadPlan::split_cut`]) — seeds that peer's **split route**
+    /// with the plan's predicted latency instead of being flattened to a
+    /// full-remote prior: the plan priced the frontier shipment at the
+    /// cut, not shipping the whole request, so full-remote routing on
+    /// that peer is plan-excluded until measurements say otherwise.
+    /// Other participating peers get the plan latency as their
+    /// full-remote prior; plan-excluded peers get an infinite prior
+    /// (measured estimates, once observed, still override either way).
+    /// `local_latency_s` is the calibrated on-device prediction for the
+    /// deployed variant — the local prior (ignored when non-finite or
+    /// non-positive).
     pub fn apply_plan(&self, plan: &OffloadPlan, local_latency_s: f64) {
         if local_latency_s.is_finite() && local_latency_s > 0.0 {
             self.local_prior_s.store(f2b(local_latency_s), Ordering::Relaxed);
         }
         let peers = self.peers.read().unwrap();
+        // The plan itself cannot know which device is local; only treat
+        // the cut as streamable when the head run is NOT another peer of
+        // this router (a peer→peer chain has no local prefix to run).
+        let split = plan.split_cut().filter(|(head, _, _)| peers.iter().all(|q| q.name != *head));
         for p in peers.iter() {
-            let w = plan.route_weight(&p.name).unwrap_or(f64::INFINITY);
-            p.plan_s.store(f2b(w), Ordering::Relaxed);
+            match split {
+                Some((_, tail, cut)) if tail == p.name => {
+                    Self::seed_split_slot(p, cut, plan.latency_s);
+                    p.plan_s.store(f2b(f64::INFINITY), Ordering::Relaxed);
+                }
+                _ => {
+                    let w = plan.route_weight(&p.name).unwrap_or(f64::INFINITY);
+                    p.plan_s.store(f2b(w), Ordering::Relaxed);
+                    Self::seed_split_slot(p, 0, f64::INFINITY);
+                }
+            }
+        }
+    }
+
+    /// Seed (or clear, with `cut == 0`) one peer's split route directly:
+    /// what [`ShardRouter::apply_plan`] does for mid-chain plans, exposed
+    /// for tests, benches, and callers that compute cut points outside
+    /// the planner. `plan_latency_s` is the predicted split round trip —
+    /// the route's prior until the split telemetry lane measures it.
+    pub fn seed_split(&self, peer: usize, cut: usize, plan_latency_s: f64) {
+        let peers = self.peers.read().unwrap();
+        Self::seed_split_slot(&peers[peer], cut, plan_latency_s);
+    }
+
+    fn seed_split_slot(slot: &PeerSlot, cut: usize, plan_latency_s: f64) {
+        let prev = slot.cut.swap(cut, Ordering::AcqRel);
+        slot.split_plan_s.store(f2b(plan_latency_s), Ordering::Relaxed);
+        if prev != cut {
+            // A different cut is a different route: forget the old cut's
+            // measured estimate and start admitted — `maintain()`
+            // re-degrades from fresh telemetry if the new cut drifts.
+            // (The split telemetry lane itself is per link, so its EWMA
+            // still carries the old cut's recent window until new
+            // samples dominate — a few requests at α = 0.3.)
+            slot.split_measured_s.store(f2b(0.0), Ordering::Relaxed);
+            slot.split_admitted.store(true, Ordering::Release);
         }
     }
 
@@ -590,6 +887,8 @@ impl ShardRouter {
             routed_local: self.routed_local.load(Ordering::Relaxed),
             degraded_events: self.degraded_events.load(Ordering::Relaxed),
             readmitted_events: self.readmitted_events.load(Ordering::Relaxed),
+            split_degraded_events: self.split_degraded_events.load(Ordering::Relaxed),
+            split_readmitted_events: self.split_readmitted_events.load(Ordering::Relaxed),
             peers: peers
                 .iter()
                 .map(|p| PeerStat {
@@ -602,6 +901,13 @@ impl ShardRouter {
                     queue_depth: p.tel.queue_depth(),
                     measured_s: b2f(p.measured_s.load(Ordering::Relaxed)),
                     plan_s: b2f(p.plan_s.load(Ordering::Relaxed)),
+                    cut: p.cut.load(Ordering::Acquire),
+                    split_admitted: p.split_admitted.load(Ordering::Acquire),
+                    split_routed: p.split_routed.load(Ordering::Relaxed),
+                    split_probes: p.split_probes.load(Ordering::Relaxed),
+                    split_served: p.tel.split_served(),
+                    split_measured_s: b2f(p.split_measured_s.load(Ordering::Relaxed)),
+                    split_plan_s: b2f(p.split_plan_s.load(Ordering::Relaxed)),
                 })
                 .collect(),
         }
@@ -634,21 +940,63 @@ impl ShardRouter {
     }
 }
 
-/// Serve one request on the peer thread: remote execution + analytic
-/// transfer, published to the slot as (congestion-free per-variant cost,
-/// end-to-end lane sample) — the same split the local workers use, so the
-/// calibrator and the router read peers and workers identically.
-fn serve_one(
-    transport: &mut dyn PeerTransport,
+/// The peer link thread's execution context: the transport to the remote
+/// device plus the (lazily constructed) pool-built local executor that
+/// runs the `0..k` prefix of split routes. Both halves of a split flow
+/// through [`Executor::run_segments`]-shaped entry points — one segment
+/// code path, regardless of which side of the link a segment lands on.
+struct PeerCtx {
+    transport: Box<dyn PeerTransport>,
+    make_local: Arc<dyn Fn(usize) -> Box<dyn Executor> + Send + Sync>,
+    /// Local-half executor. Constructed at link startup when the
+    /// transport is segmented — its capability co-determines the
+    /// published `segments` bound — and never for whole-model
+    /// transports, which cannot receive split jobs at all (the lazy
+    /// branch in [`PeerCtx::local_half`] is a safety net, not a path
+    /// routing can reach).
+    local: Option<Box<dyn Executor>>,
     worker: usize,
+}
+
+impl PeerCtx {
+    fn local_half(&mut self) -> &mut dyn Executor {
+        if self.local.is_none() {
+            self.local = Some((self.make_local)(self.worker));
+        }
+        self.local.as_deref_mut().expect("just constructed")
+    }
+}
+
+/// Serve one request on the peer thread: (for a split, the local segment
+/// prefix first, then) remote execution + analytic transfer, published to
+/// the slot as (congestion-free per-variant cost, end-to-end lane
+/// sample) — the same split the local workers use, so the calibrator and
+/// the router read peers and workers identically. Split round trips go to
+/// the slot's *split lane* so the router reconciles the cut independently
+/// of full-remote routing.
+fn serve_one(
+    ctx: &mut PeerCtx,
     variant: &str,
     generation: u64,
     tel: &WorkerTelemetry,
     job: InferJob,
 ) {
-    let classes = transport.num_classes();
+    let classes = ctx.transport.num_classes();
     let started = Instant::now();
-    match transport.infer(variant, &job.input) {
+    let cut = job.cut;
+    let result = if cut == 0 {
+        ctx.transport.infer(variant, &job.input)
+    } else {
+        // Segments 0..cut on the pool-built local executor; the frontier
+        // tensor — not the input — then crosses the link. (Bound first:
+        // the local-half borrow must end before the transport call.)
+        let frontier = ctx.local_half().run_segments(variant, 0, cut, &job.input);
+        match frontier {
+            Ok(frontier) => ctx.transport.infer_segments(variant, cut, &frontier),
+            Err(e) => Err(e),
+        }
+    };
+    match result {
         Ok((probs, transfer_s)) => {
             let transfer_s = transfer_s.max(0.0);
             let (pred, conf) = probs[..classes]
@@ -659,7 +1007,11 @@ fn serve_one(
                 .unwrap_or((0, 0.0));
             let exec_s = started.elapsed().as_secs_f64() + transfer_s;
             let latency = job.enqueued.elapsed() + Duration::from_secs_f64(transfer_s);
-            tel.record_batch(variant, exec_s, &[(job.lane, latency.as_secs_f64())]);
+            if cut > 0 {
+                tel.record_split(variant, exec_s, job.lane, latency.as_secs_f64());
+            } else {
+                tel.record_batch(variant, exec_s, &[(job.lane, latency.as_secs_f64())]);
+            }
             tel.depth_dec();
             let _ = job.resp.send(Response {
                 id: job.id,
@@ -667,13 +1019,14 @@ fn serve_one(
                 confidence: conf,
                 variant: variant.to_string(),
                 generation,
-                worker,
+                worker: ctx.worker,
                 lane: job.lane,
                 latency,
             });
         }
         Err(e) => {
-            eprintln!("peer {worker}: remote execution failed: {e:#}");
+            let what = if cut > 0 { "split" } else { "remote" };
+            eprintln!("peer {}: {what} execution failed: {e:#}", ctx.worker);
             tel.depth_dec();
             tel.record_failed(1);
         }
@@ -681,8 +1034,7 @@ fn serve_one(
 }
 
 fn peer_main(
-    worker: usize,
-    mut transport: Box<dyn PeerTransport>,
+    mut ctx: PeerCtx,
     rx: Receiver<PeerMsg>,
     mut variant: String,
     mut generation: u64,
@@ -695,7 +1047,7 @@ fn peer_main(
         };
         match msg {
             PeerMsg::Infer(job) => {
-                serve_one(&mut *transport, worker, &variant, generation, &tel, job);
+                serve_one(&mut ctx, &variant, generation, &tel, job);
             }
             PeerMsg::Switch { variant: v, generation: g } => {
                 // Same `>=` rationale as the pool workers: an equal-
@@ -716,7 +1068,7 @@ fn peer_main(
     // Graceful drain: serve whatever is already queued on the link.
     while let Ok(msg) = rx.try_recv() {
         if let PeerMsg::Infer(job) = msg {
-            serve_one(&mut *transport, worker, &variant, generation, &tel, job);
+            serve_one(&mut ctx, &variant, generation, &tel, job);
         }
     }
 }
@@ -752,6 +1104,48 @@ mod tests {
             Box::new(MockExec { delay: Duration::from_micros(delay_us), ..MockExec::quick() })
                 as Box<dyn Executor>
         }
+    }
+
+    /// Two-segment chain (64 → 8 → 4 classes) with per-segment delays —
+    /// the streamable counterpart of [`peer_exec`].
+    fn seg_exec(
+        d0_us: u64,
+        d1_us: u64,
+    ) -> impl Fn() -> Box<dyn Executor> + Send + Sync + Clone + 'static {
+        move || {
+            Box::new(crate::runtime::SegmentedExec::new(
+                4,
+                vec![64, 8, 4],
+                vec![Duration::from_micros(d0_us), Duration::from_micros(d1_us)],
+            )) as Box<dyn Executor>
+        }
+    }
+
+    fn seg_pool(workers: usize, d0_us: u64, d1_us: u64, capacity: usize) -> ServingPool {
+        let make = seg_exec(d0_us, d1_us);
+        ServingPool::spawn(
+            move |_| make(),
+            "v",
+            PoolConfig {
+                workers,
+                queue_capacity: capacity,
+                batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+                ..PoolConfig::default()
+            },
+        )
+    }
+
+    /// The peer thread publishes its transport's segment capability
+    /// asynchronously at startup; wait for the seeded split to become
+    /// routable before asserting on dispatch.
+    fn wait_split_routable(router: &ShardRouter) {
+        for _ in 0..500 {
+            if router.admitted_splits() == 1 {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        panic!("split route never became routable");
     }
 
     fn view(worker: usize, remote: bool, ewma_s: f64) -> WorkerView {
@@ -896,6 +1290,7 @@ mod tests {
         );
         router.add_simulated_peer("jetson-nx", peer_exec(100), SharedLink::new(80.0, 4.0), 0.5);
         router.add_simulated_peer("jetson-nano", peer_exec(100), SharedLink::new(80.0, 4.0), 0.5);
+        // A mid-chain plan: segment 0 local, segment 1 on jetson-nx.
         let plan = OffloadPlan {
             placements: vec![
                 crate::partition::Placement { device: "local".into(), segments: vec![0] },
@@ -910,16 +1305,61 @@ mod tests {
         let stats = router.shard_stats();
         let nx = stats.peers.iter().find(|p| p.name == "jetson-nx").unwrap();
         let nano = stats.peers.iter().find(|p| p.name == "jetson-nano").unwrap();
-        assert!((nx.plan_s - 0.003).abs() < 1e-12, "plan member gets the plan's latency");
+        assert_eq!(nx.cut, 1, "mid-chain plan seeds the peer's split cut");
+        assert!((nx.split_plan_s - 0.003).abs() < 1e-12, "split prior is the plan's latency");
+        assert!(
+            nx.plan_s.is_infinite(),
+            "the plan priced the frontier shipment, not whole-request shipping"
+        );
         assert!(nano.plan_s.is_infinite(), "plan-excluded peer is priced out until measured");
+        assert_eq!(nano.cut, 0);
 
-        // The plan-excluded peer cannot win a pick on an infinite prior.
+        // Neither peer can win a pick: nano's full-remote prior is
+        // infinite, and nx's split is structurally unroutable — its
+        // whole-model MockExec transport cannot resume mid-chain.
+        assert_eq!(router.admitted_splits(), 0, "whole-model peers cannot stream a cut");
         let rxs: Vec<_> = (0..8).map(|_| router.submit(vec![1.0; 16]).unwrap()).collect();
         for rx in rxs {
             rx.recv_timeout(Duration::from_secs(5)).unwrap();
         }
         let stats = router.shard_stats();
         assert_eq!(stats.peers.iter().find(|p| p.name == "jetson-nano").unwrap().routed, 0);
+        assert_eq!(stats.peers.iter().find(|p| p.name == "jetson-nx").unwrap().routed, 0);
+        assert_eq!(stats.routed_local, 8);
+
+        // A follow-up local-only plan clears the seeded cut.
+        router.apply_plan(&OffloadPlan::local_only("local", 2, 0.005, 0.1, 1.0), 0.005);
+        assert_eq!(router.shard_stats().peers[0].cut, 0);
+        router.shutdown();
+    }
+
+    /// A two-run plan whose *head* is another peer of this router has no
+    /// local prefix to stream: it must fall back to route-weight priors
+    /// for both peers instead of seeding a split.
+    #[test]
+    fn peer_to_peer_chains_do_not_seed_splits() {
+        let router = ShardRouter::new(
+            local_pool(1, 200, 64),
+            ShardRouterConfig { probe_every: 0, ..ShardRouterConfig::default() },
+        );
+        router.add_simulated_peer("jetson-nx", peer_exec(100), SharedLink::new(80.0, 4.0), 0.5);
+        router.add_simulated_peer("jetson-nano", peer_exec(100), SharedLink::new(80.0, 4.0), 0.5);
+        let plan = OffloadPlan {
+            placements: vec![
+                crate::partition::Placement { device: "jetson-nano".into(), segments: vec![0] },
+                crate::partition::Placement { device: "jetson-nx".into(), segments: vec![1] },
+            ],
+            latency_s: 0.003,
+            energy_j: 0.1,
+            local_memory_bytes: 1.0,
+            transfer_bytes: 1000,
+        };
+        router.apply_plan(&plan, 0.008);
+        let stats = router.shard_stats();
+        for p in &stats.peers {
+            assert_eq!(p.cut, 0, "no split without a local head run: {}", p.name);
+            assert!((p.plan_s - 0.003).abs() < 1e-12, "both participants keep plan priors");
+        }
         router.shutdown();
     }
 
@@ -1010,6 +1450,184 @@ mod tests {
             v
         }]);
         assert_eq!(router.maintain(&recovered), 1, "clean window must re-admit");
+        router.shutdown();
+    }
+
+    // ── segment streaming (split routes) ───────────────────────────────
+
+    /// A seeded split streams requests — local prefix, frontier across
+    /// the link, remote tail — and the halves agree with the whole chain
+    /// on every prediction. Round trips land in the split telemetry
+    /// lane, not the full-remote EWMA.
+    #[test]
+    fn split_route_streams_and_serves_correctly() {
+        // Local chain: cheap head, 20 ms tail; the peer runs the tail in
+        // 100 µs — a mid-chain cut is the only way to win.
+        let router = ShardRouter::new(
+            seg_pool(1, 100, 20_000, 64),
+            ShardRouterConfig {
+                probe_every: 0,
+                local_prior_s: 0.020,
+                ..ShardRouterConfig::default()
+            },
+        );
+        router.add_simulated_peer("edge", seg_exec(100, 100), SharedLink::new(800.0, 0.1), 0.5);
+        router.seed_split(0, 1, 0.001);
+        wait_split_routable(&router);
+
+        let mut rxs = Vec::new();
+        for i in 0..8 {
+            let mut input = vec![0.0f32; 64];
+            input[i % 4] = 3.0;
+            rxs.push((i % 4, router.submit(input).unwrap()));
+        }
+        let mut remote_served = 0usize;
+        for (want, rx) in rxs {
+            let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(r.pred, want, "split halves must agree with the whole chain");
+            if r.worker >= REMOTE_WORKER_BASE {
+                remote_served += 1;
+            }
+        }
+        assert!(remote_served >= 1, "the seeded split must carry traffic");
+        let stats = router.shard_stats();
+        assert!(stats.peers[0].split_routed >= 1);
+        assert_eq!(
+            stats.peers[0].split_routed, stats.peers[0].routed,
+            "all peer traffic rode the split: full-remote was never scored in"
+        );
+        assert_eq!(stats.split_served(), remote_served);
+
+        let tel = router.telemetry_snapshot();
+        assert_eq!(tel.split_served, remote_served);
+        let pv = tel.per_worker.iter().find(|v| v.remote).unwrap();
+        assert!(pv.split_ewma_s > 0.0, "split round trips feed the split lane");
+        assert_eq!(pv.ewma_s, 0.0, "no full-remote samples were recorded");
+        let totals = router.shutdown();
+        assert_eq!(totals.served(), 8);
+    }
+
+    /// The streamable capability is the MIN of both halves: a segmented
+    /// peer transport behind a whole-model local pool keeps every cut
+    /// unroutable — the local prefix cannot be produced, and silently
+    /// running the whole model as a "prefix" would ship class
+    /// probabilities to the peer as a frontier.
+    #[test]
+    fn whole_model_local_half_keeps_splits_unroutable() {
+        let router = ShardRouter::new(
+            local_pool(1, 200, 64), // MockExec: whole-model only
+            ShardRouterConfig {
+                probe_every: 0,
+                local_prior_s: 1.0,
+                ..ShardRouterConfig::default()
+            },
+        );
+        router.add_simulated_peer(
+            "edge",
+            seg_exec(100, 100),
+            SharedLink::new(800.0, 0.1),
+            f64::INFINITY,
+        );
+        router.seed_split(0, 1, 0.0001);
+        // Give the link thread time to publish min(local=1, transport=2).
+        std::thread::sleep(Duration::from_millis(100));
+        assert_eq!(router.admitted_splits(), 0, "whole-model local half must gate the cut out");
+        let rx = router.submit(vec![1.0; 16]).unwrap();
+        assert!(
+            rx.recv_timeout(Duration::from_secs(5)).unwrap().worker < REMOTE_WORKER_BASE,
+            "with no routable split the request serves locally"
+        );
+        assert_eq!(router.shard_stats().peers[0].split_routed, 0);
+        router.shutdown();
+    }
+
+    /// Full-remote and split admission reconcile independently, each
+    /// from its own telemetry lane — with the shared hysteresis band.
+    #[test]
+    fn maintain_reconciles_split_independently_of_full_remote() {
+        let router = ShardRouter::new(
+            seg_pool(1, 100, 100, 64),
+            ShardRouterConfig {
+                degrade_latency_s: 0.020,
+                readmit_latency_s: 0.010,
+                ..ShardRouterConfig::default()
+            },
+        );
+        router.add_simulated_peer("edge", seg_exec(100, 100), SharedLink::new(800.0, 0.1), 0.001);
+        router.seed_split(0, 1, 0.001);
+        wait_split_routable(&router);
+
+        let with_split = |ewma: f64, split: f64| {
+            snap_with(vec![{
+                let mut v = view(REMOTE_WORKER_BASE, true, ewma);
+                v.split_ewma_s = split;
+                v
+            }])
+        };
+
+        // Split lane drifts past the budget, full-remote healthy: only
+        // the split degrades.
+        router.maintain(&with_split(0.004, 0.150));
+        assert_eq!(router.admitted_splits(), 0);
+        assert_eq!(router.admitted_peers(), 1, "full-remote admission is untouched");
+        let stats = router.shard_stats();
+        assert_eq!(stats.split_degraded_events, 1);
+        assert_eq!(stats.degraded_events, 0);
+
+        // Inside the hysteresis band: still degraded.
+        router.maintain(&with_split(0.004, 0.015));
+        assert_eq!(router.admitted_splits(), 0);
+
+        // Recovered under the re-admit bar: the split rejoins.
+        router.maintain(&with_split(0.004, 0.004));
+        assert_eq!(router.admitted_splits(), 1);
+        assert_eq!(router.shard_stats().split_readmitted_events, 1);
+
+        // The reverse direction: full-remote drifts, the split stays.
+        router.maintain(&with_split(0.150, 0.004));
+        assert_eq!(router.admitted_peers(), 0);
+        assert_eq!(router.admitted_splits(), 1, "split ignores full-remote drift");
+
+        // The degrade charged the link's hub slot too.
+        assert_eq!(router.telemetry_snapshot().split_degraded, 1);
+        router.shutdown();
+    }
+
+    /// The invariant from the module docs: priority-lane requests keep
+    /// the single-hop path — they are never split-routed, even when the
+    /// split is the only remote route and local is badly priced.
+    #[test]
+    fn priority_requests_are_never_split_routed() {
+        let router = ShardRouter::new(
+            seg_pool(1, 100, 100, 1024),
+            ShardRouterConfig {
+                probe_every: 0,
+                local_prior_s: 1.0,
+                ..ShardRouterConfig::default()
+            },
+        );
+        // Full-remote priced out entirely; only the split is attractive.
+        router.add_simulated_peer(
+            "edge",
+            seg_exec(100, 100),
+            SharedLink::new(800.0, 0.1),
+            f64::INFINITY,
+        );
+        router.seed_split(0, 1, 0.001);
+        wait_split_routable(&router);
+
+        let rx = router.submit(vec![1.0; 64]).unwrap();
+        assert!(
+            rx.recv_timeout(Duration::from_secs(5)).unwrap().worker >= REMOTE_WORKER_BASE,
+            "normal lane streams the cut"
+        );
+        let rx = router.submit_priority(vec![1.0; 64]).unwrap();
+        assert!(
+            rx.recv_timeout(Duration::from_secs(5)).unwrap().worker < REMOTE_WORKER_BASE,
+            "priority must not ride the split route"
+        );
+        let stats = router.shard_stats();
+        assert_eq!(stats.peers[0].split_routed, 1, "only the normal submission split-routed");
         router.shutdown();
     }
 

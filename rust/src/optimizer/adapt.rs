@@ -66,7 +66,11 @@ pub trait Actuator {
     /// Push a fresh offload plan's predicted route weights down to the
     /// serving layer (the Sec. III-B plan informing shard admission);
     /// `local_latency_s` is the calibrated on-device latency of the
-    /// chosen variant — the local routing prior. No-op by default.
+    /// chosen variant — the local routing prior. A plan with a
+    /// *mid-chain cut* (segments `0..k` local, the rest on one peer)
+    /// actuates a **split route** at that cut — the serving layer
+    /// streams the frontier tensor per request — rather than being
+    /// flattened to a full-remote prior. No-op by default.
     fn apply_plan(&self, plan: &OffloadPlan, local_latency_s: f64) {
         let _ = (plan, local_latency_s);
     }

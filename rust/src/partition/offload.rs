@@ -6,6 +6,22 @@
 //! Because pre-partitioning reduced the model to a *chain* of segments
 //! with single-tensor frontiers, the optimal assignment is a shortest
 //! path in a DAG of (segment-boundary, device) states — O(S·D²).
+//!
+//! The plan is consumed at two granularities (Fig. 6's plan → actuation
+//! edge):
+//!
+//! - **Totals** (`latency_s`, `transfer_bytes`) price whole routes —
+//!   [`OffloadPlan::route_weight`] seeds the shard router's full-remote
+//!   priors.
+//! - **Per-segment structure** ([`OffloadPlan::segment_runs`],
+//!   [`OffloadPlan::split_cut`], with per-boundary frontier bytes from
+//!   [`super::prepartition::PrePartition::frontier_bytes`]) survives
+//!   into the serving path: a mid-chain plan actuates a *split route*
+//!   (`crate::coordinator::ShardRouter`) that executes segments
+//!   `0..cut` locally and ships the cut's frontier tensor per request —
+//!   the Sec. III-B placement operating at serving time instead of being
+//!   flattened to a single route prior. (Priority-lane requests are
+//!   never split-routed; see the shard router's invariant.)
 
 use crate::device::ResourceSnapshot;
 use crate::graph::Graph;
@@ -61,6 +77,41 @@ impl OffloadPlan {
     /// treats the peer as plan-excluded until measurements say otherwise).
     pub fn route_weight(&self, device: &str) -> Option<f64> {
         self.involves(device).then_some(self.latency_s)
+    }
+
+    /// The plan's contiguous segment runs in execution order, as
+    /// `(device, first_segment..one_past_last)` ranges — the Sec. III-B
+    /// assignment at the granularity the serving layer streams at,
+    /// instead of the `transfer_bytes`/`latency_s` totals.
+    pub fn segment_runs(&self) -> Vec<(&str, std::ops::Range<usize>)> {
+        self.placements
+            .iter()
+            .map(|p| {
+                let first = p.segments.first().copied().unwrap_or(0);
+                (p.device.as_str(), first..first + p.segments.len())
+            })
+            .collect()
+    }
+
+    /// Mid-chain split view: when the plan is exactly two contiguous
+    /// runs — `head_device` executes segments `0..cut`, `tail_device`
+    /// executes `cut..n` — returns `(head_device, tail_device, cut)`.
+    /// This is the shape the shard router's segment streaming serves
+    /// (head local, frontier shipped once, tail on the peer); the router
+    /// checks the head against its own peer set, since the plan itself
+    /// does not know which device is local. `None` for local-only plans,
+    /// whole-chain remote plans (cut 0 is full-remote routing, not a
+    /// split), and chains bouncing across three or more runs (streaming
+    /// ships a single frontier per request).
+    pub fn split_cut(&self) -> Option<(&str, &str, usize)> {
+        if self.placements.len() != 2 {
+            return None;
+        }
+        let (head, tail) = (&self.placements[0], &self.placements[1]);
+        if head.device == tail.device || head.segments.first() != Some(&0) {
+            return None;
+        }
+        Some((head.device.as_str(), tail.device.as_str(), head.segments.len()))
     }
 }
 
@@ -373,6 +424,92 @@ mod tests {
         let w = plan.route_weight("jetson-nx").expect("participating peer has a weight");
         assert!((w - plan.latency_s).abs() < 1e-12);
         assert_eq!(plan.route_weight("jetson-nano"), None, "absent devices have no weight");
+    }
+
+    /// Segment runs round-trip through the plan: runs are contiguous,
+    /// cover every segment in order, and the plan's `transfer_bytes`
+    /// total is exactly the sum of the pre-partition's per-boundary
+    /// frontier bytes at the run boundaries — so the serving layer can
+    /// price each cut individually and still agree with the planner.
+    #[test]
+    fn segment_runs_match_prepartition_frontier_bytes() {
+        let g = resnet18(ResNetStyle::Cifar, 100, 1);
+        let pp = prepartition(&g);
+        let topo = Topology::wifi_pair("raspberrypi-4b", "jetson-nx");
+        let devs = vec![state("raspberrypi-4b", 4.0), state("jetson-nx", 8.0)];
+        let plan = plan_offload(&g, &pp, &devs, &topo);
+        let runs = plan.segment_runs();
+        assert_eq!(runs.len(), plan.placements.len());
+        let mut next = 0usize;
+        let mut cut_transfer = 0usize;
+        for (i, (_, r)) in runs.iter().enumerate() {
+            assert_eq!(r.start, next, "runs must be contiguous and in order");
+            next = r.end;
+            if i + 1 < runs.len() {
+                cut_transfer += pp.frontier_bytes(r.end).expect("interior boundary");
+            }
+        }
+        assert_eq!(next, pp.n_segments(), "runs must cover every segment");
+        assert_eq!(
+            cut_transfer, plan.transfer_bytes,
+            "per-boundary frontier bytes must sum to the plan's transfer total"
+        );
+    }
+
+    /// The round trip holds on degraded plans too: local-only (explicit
+    /// and via PR 3's disconnected-topology hardening) has one full run,
+    /// zero transfer, and no split cut.
+    #[test]
+    fn local_only_and_degraded_plans_round_trip_with_no_cut() {
+        let g = resnet18(ResNetStyle::Cifar, 100, 1);
+        let pp = prepartition(&g);
+        let explicit = OffloadPlan::local_only("raspberrypi-4b", pp.n_segments(), 0.01, 0.1, 1.0);
+        let degraded = {
+            let topo = Topology::new(); // no links: hardening path
+            let devs = vec![state("raspberrypi-4b", 4.0), state("jetson-nx", 8.0)];
+            plan_offload(&g, &pp, &devs, &topo)
+        };
+        for plan in [&explicit, &degraded] {
+            assert!(plan.is_local_only());
+            let runs = plan.segment_runs();
+            assert_eq!(runs.len(), 1);
+            assert_eq!(runs[0].1, 0..pp.n_segments());
+            assert_eq!(plan.transfer_bytes, 0);
+            assert_eq!(plan.split_cut(), None, "local-only plans have no cut to stream at");
+        }
+    }
+
+    /// `split_cut` recognises exactly the single-cut local→peer shape.
+    #[test]
+    fn split_cut_covers_single_cut_plans_only() {
+        let seg = |d: &str, segs: Vec<usize>| Placement { device: d.into(), segments: segs };
+        let split = OffloadPlan {
+            placements: vec![seg("local", vec![0, 1]), seg("edge", vec![2, 3])],
+            latency_s: 0.004,
+            energy_j: 0.1,
+            local_memory_bytes: 1.0,
+            transfer_bytes: 256,
+        };
+        assert_eq!(split.split_cut(), Some(("local", "edge", 2)));
+        assert_eq!(split.segment_runs(), vec![("local", 0..2), ("edge", 2..4)]);
+
+        let full_remote =
+            OffloadPlan { placements: vec![seg("edge", vec![0, 1, 2, 3])], ..split.clone() };
+        assert_eq!(full_remote.split_cut(), None, "cut 0 is full-remote routing, not a split");
+
+        let bouncing = OffloadPlan {
+            placements: vec![seg("local", vec![0]), seg("edge", vec![1, 2]), seg("local", vec![3])],
+            ..split.clone()
+        };
+        assert_eq!(bouncing.split_cut(), None, "multi-run chains cannot stream one frontier");
+
+        // A remote-first chain is still reported — the *router* decides
+        // whether the head is its local device or another peer.
+        let remote_first = OffloadPlan {
+            placements: vec![seg("edge", vec![0, 1]), seg("local", vec![2, 3])],
+            ..split
+        };
+        assert_eq!(remote_first.split_cut(), Some(("edge", "local", 2)));
     }
 
     #[test]

@@ -39,6 +39,36 @@ pub struct PrePartition {
     pub segments: Vec<Segment>,
 }
 
+impl PrePartition {
+    /// Number of segments (the minimal offloadable units).
+    pub fn n_segments(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// Bytes of the single live tensor crossing boundary `b` — the
+    /// frontier after executing segments `0..b` and before segment `b`.
+    /// Interior boundaries only: `None` for `b == 0` (the model input is
+    /// not a cut frontier) and `b >= n_segments()` (nothing runs after
+    /// the last segment). This is what the serving layer prices when a
+    /// request executes segments `0..b` locally and ships the frontier
+    /// to a peer (Sec. III-B's transmission-delay term, per boundary
+    /// instead of the plan's `transfer_bytes` total).
+    pub fn frontier_bytes(&self, b: usize) -> Option<usize> {
+        if b == 0 || b >= self.segments.len() {
+            None
+        } else {
+            Some(self.segments[b - 1].out_bytes)
+        }
+    }
+
+    /// Every interior boundary's frontier bytes in order (entry `i` is
+    /// boundary `i + 1`): the per-cut table the shard router and the
+    /// segment-chain executor consume. Empty for single-segment models.
+    pub fn boundary_bytes(&self) -> Vec<usize> {
+        (1..self.segments.len()).map(|b| self.segments[b - 1].out_bytes).collect()
+    }
+}
+
 /// Compute the pre-partition: single-tensor frontier cut points via an
 /// open-edge sweep over a topological order, then segments between them.
 pub fn prepartition(g: &Graph) -> PrePartition {
@@ -199,6 +229,28 @@ mod tests {
         let pp = prepartition(&g);
         for c in &pp.cuts {
             assert_eq!(c.tensor_bytes, g.node(c.node).shape.bytes());
+        }
+    }
+
+    /// Per-boundary frontier bytes are the cut tensors in order: boundary
+    /// `b` carries exactly segment `b-1`'s out_bytes, which is the cut
+    /// point's tensor — and the interior-only domain holds at both ends.
+    #[test]
+    fn frontier_bytes_match_cut_tensors() {
+        let g = resnet18(ResNetStyle::Cifar, 100, 1);
+        let pp = prepartition(&g);
+        let n = pp.n_segments();
+        assert!(n >= 2);
+        assert_eq!(pp.frontier_bytes(0), None, "model input is not a cut frontier");
+        assert_eq!(pp.frontier_bytes(n), None, "nothing crosses after the last segment");
+        let table = pp.boundary_bytes();
+        assert_eq!(table.len(), n - 1);
+        for b in 1..n {
+            let bytes = pp.frontier_bytes(b).unwrap();
+            assert_eq!(bytes, pp.segments[b - 1].out_bytes);
+            assert_eq!(bytes, pp.cuts[b - 1].tensor_bytes, "boundary b is cut b-1's tensor");
+            assert_eq!(bytes, table[b - 1]);
+            assert!(bytes > 0);
         }
     }
 }

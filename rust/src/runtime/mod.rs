@@ -9,12 +9,20 @@
 //! build. The serving layer is exercised through its
 //! [`crate::coordinator::Executor`] abstraction either way.
 
+//!
+//! [`SegmentedExec`] is the third piece: a segment-chain executor over
+//! the partition layer's pre-partition that can run any *contiguous
+//! segment range* — the code path both halves of the serving layer's
+//! split routes (local prefix, remote tail) execute through.
+
 #[cfg(feature = "pjrt")]
 pub mod exec;
 #[cfg(not(feature = "pjrt"))]
 #[path = "exec_stub.rs"]
 pub mod exec;
 pub mod manifest;
+pub mod segmented;
 
 pub use exec::ModelRuntime;
 pub use manifest::{EvalSet, Manifest, VariantEntry};
+pub use segmented::SegmentedExec;

@@ -1,0 +1,278 @@
+//! Segment-chain execution: the runtime-side realization of the
+//! pre-partition (Sec. III-B1) that the serving layer's segment
+//! streaming runs on.
+//!
+//! [`SegmentedExec`] models a model as the chain the partition layer
+//! produced — per-segment execution costs plus the frontier tensor sizes
+//! at every boundary — and executes any *contiguous segment range* over
+//! a single request's frontier. That one entry point
+//! ([`crate::coordinator::Executor::run_segments`]) is shared by both
+//! halves of a split route: the local prefix (`0..k`, producing the
+//! frontier that crosses the link) and the remote tail (`k..n`, run by a
+//! peer transport over the shipped frontier). Because both halves apply
+//! the same deterministic chain, running `[0, k)` then `[k, n)` yields
+//! bit-identical class probabilities to running `[0, n)` in one go —
+//! which is what lets tests assert that split-served requests agree with
+//! local and full-remote serving.
+//!
+//! Like the rest of the offline tier-1 path (the device simulator, the
+//! simulated peer link), execution is *modeled*: each segment costs its
+//! configured wall-clock delay, and the frontier transform is a
+//! deterministic carrier of the class signal (the first `num_classes`
+//! values ride through every boundary; the final segment applies a
+//! softmax). The PJRT-backed [`super::ModelRuntime`] keeps the
+//! whole-model default instead: AOT artifacts are compiled end to end,
+//! so piecewise execution there would need per-segment artifacts — the
+//! manifest records none today.
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::partition::PrePartition;
+
+/// A deterministic segment-chain executor: per-segment delays +
+/// per-boundary frontier widths, executable over any contiguous range.
+///
+/// Invariants (checked at construction): `frontiers.len() ==
+/// delays.len() + 1`, every frontier is at least `classes` wide (the
+/// class signal must survive every boundary), and the final frontier is
+/// exactly `classes` (the chain ends in the class distribution).
+pub struct SegmentedExec {
+    classes: usize,
+    /// `frontiers[b]` = f32 elements entering segment `b`;
+    /// `frontiers[n]` is the output distribution (== `classes`).
+    frontiers: Vec<usize>,
+    /// Modeled execution wall time per segment.
+    delays: Vec<Duration>,
+    batch_sizes: Vec<usize>,
+}
+
+impl SegmentedExec {
+    /// Build a chain from explicit per-boundary frontier widths and
+    /// per-segment delays.
+    pub fn new(classes: usize, frontiers: Vec<usize>, delays: Vec<Duration>) -> SegmentedExec {
+        assert!(classes >= 1, "need at least one class");
+        assert!(!delays.is_empty(), "need at least one segment");
+        assert_eq!(
+            frontiers.len(),
+            delays.len() + 1,
+            "one frontier per boundary: n segments need n+1 widths"
+        );
+        assert!(
+            frontiers.iter().all(|&f| f >= classes),
+            "every frontier must carry the class signal"
+        );
+        assert_eq!(*frontiers.last().unwrap(), classes, "the chain ends in the distribution");
+        SegmentedExec { classes, frontiers, delays, batch_sizes: vec![1] }
+    }
+
+    /// Derive the chain from a model's pre-partition: frontier widths
+    /// from the per-boundary frontier bytes (f32 tensors), delays from
+    /// each segment's MAC share of `total_latency`. The serving-side
+    /// twin of the offload planner's per-segment cost split.
+    pub fn from_prepartition(
+        pp: &PrePartition,
+        classes: usize,
+        input_elems: usize,
+        total_latency: Duration,
+    ) -> SegmentedExec {
+        let n = pp.n_segments();
+        assert!(n >= 1, "pre-partition has no segments");
+        let mut frontiers = Vec::with_capacity(n + 1);
+        frontiers.push(input_elems.max(classes));
+        for b in 1..n {
+            let elems = pp.frontier_bytes(b).expect("interior boundary") / 4;
+            frontiers.push(elems.max(classes));
+        }
+        frontiers.push(classes);
+        let total_macs: usize = pp.segments.iter().map(|s| s.macs).sum();
+        let delays = pp
+            .segments
+            .iter()
+            .map(|s| {
+                let share =
+                    if total_macs > 0 { s.macs as f64 / total_macs as f64 } else { 1.0 / n as f64 };
+                total_latency.mul_f64(share)
+            })
+            .collect();
+        SegmentedExec::new(classes, frontiers, delays)
+    }
+
+    /// Advertise additional compiled batch sizes (the default is `[1]`).
+    pub fn with_batch_sizes(mut self, sizes: Vec<usize>) -> SegmentedExec {
+        assert!(!sizes.is_empty());
+        self.batch_sizes = sizes;
+        self
+    }
+
+    /// Execute segments `[first, last)` over one frontier. See
+    /// [`crate::coordinator::Executor::run_segments`] for the contract;
+    /// this is the shared implementation behind it.
+    pub fn run_range(&self, first: usize, last: usize, frontier: &[f32]) -> Result<Vec<f32>> {
+        let n = self.delays.len();
+        if first >= last || last > n {
+            bail!("segment range {first}..{last} out of bounds (chain has {n} segments)");
+        }
+        if frontier.len() != self.frontiers[first] {
+            bail!(
+                "frontier entering segment {first} has {} elements, expected {}",
+                frontier.len(),
+                self.frontiers[first]
+            );
+        }
+        let mut cur = frontier.to_vec();
+        for seg in first..last {
+            std::thread::sleep(self.delays[seg]);
+            let width = self.frontiers[seg + 1];
+            // The class signal rides the first `classes` values through
+            // every boundary; the rest is padding the next width keeps or
+            // truncates — deterministic either way.
+            cur.resize(width, 0.0);
+        }
+        if last == n {
+            let total: f32 = cur[..self.classes].iter().map(|x| x.exp()).sum();
+            cur = cur[..self.classes].iter().map(|&x| x.exp() / total).collect();
+        }
+        Ok(cur)
+    }
+
+    pub fn classes(&self) -> usize {
+        self.classes
+    }
+
+    pub fn segments(&self) -> usize {
+        self.delays.len()
+    }
+
+    /// Frontier width (f32 elements) entering segment `seg`.
+    pub fn frontier(&self, seg: usize) -> usize {
+        self.frontiers[seg]
+    }
+}
+
+impl crate::coordinator::Executor for SegmentedExec {
+    fn batch_sizes(&self, _variant: &str) -> Vec<usize> {
+        self.batch_sizes.clone()
+    }
+
+    fn num_classes(&self) -> usize {
+        self.classes
+    }
+
+    fn input_elems(&self) -> usize {
+        self.frontiers[0]
+    }
+
+    fn run(&mut self, _variant: &str, batch: usize, input: &[f32]) -> Result<Vec<f32>> {
+        let per = self.frontiers[0];
+        if input.len() != batch * per {
+            bail!("input length {} != batch {batch} × {per}", input.len());
+        }
+        let n = self.segments();
+        let mut out = Vec::with_capacity(batch * self.classes);
+        for row in input.chunks_exact(per) {
+            out.extend(self.run_range(0, n, row)?);
+        }
+        Ok(out)
+    }
+
+    fn num_segments(&self) -> usize {
+        self.segments()
+    }
+
+    fn frontier_elems(&self, seg: usize) -> usize {
+        self.frontiers[seg]
+    }
+
+    fn run_segments(
+        &mut self,
+        _variant: &str,
+        first: usize,
+        last: usize,
+        frontier: &[f32],
+    ) -> Result<Vec<f32>> {
+        self.run_range(first, last, frontier)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Executor;
+    use crate::models::{resnet18, ResNetStyle};
+    use crate::partition::prepartition;
+
+    fn chain() -> SegmentedExec {
+        SegmentedExec::new(
+            4,
+            vec![64, 16, 4],
+            vec![Duration::from_micros(50), Duration::from_micros(50)],
+        )
+    }
+
+    /// The load-bearing property of segment streaming: running the chain
+    /// in two halves over the shipped frontier equals running it whole.
+    #[test]
+    fn split_execution_equals_whole_chain() {
+        let mut c = chain();
+        let mut input = vec![0.0f32; 64];
+        input[2] = 3.0;
+        let whole = c.run_segments("v", 0, 2, &input).unwrap();
+        let frontier = c.run_segments("v", 0, 1, &input).unwrap();
+        assert_eq!(frontier.len(), 16, "local half yields the boundary frontier");
+        let split = c.run_segments("v", 1, 2, &frontier).unwrap();
+        assert_eq!(whole, split, "split halves must reproduce the whole chain exactly");
+        assert_eq!(whole.len(), 4);
+        let argmax = whole
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        assert_eq!(argmax, 2, "class signal survives the boundary");
+        let sum: f32 = whole.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-5, "output is a distribution");
+    }
+
+    #[test]
+    fn executor_surface_matches_chain() {
+        let mut c = chain();
+        assert_eq!(c.num_segments(), 2);
+        assert_eq!(c.input_elems(), 64);
+        assert_eq!(Executor::frontier_elems(&c, 1), 16);
+        assert_eq!(Executor::frontier_elems(&c, 2), 4, "final frontier is the distribution");
+        // Batched whole-model run agrees with per-row segment runs.
+        let mut input = vec![0.0f32; 128];
+        input[1] = 2.0; // row 0 → class 1
+        input[64 + 3] = 2.0; // row 1 → class 3
+        let probs = c.run("v", 2, &input).unwrap();
+        assert_eq!(probs.len(), 8);
+        assert!(probs[1] > 0.5);
+        assert!(probs[4 + 3] > 0.5);
+        // Bad ranges and bad frontiers error instead of panicking.
+        assert!(c.run_segments("v", 1, 1, &[0.0; 16]).is_err());
+        assert!(c.run_segments("v", 0, 3, &input[..64]).is_err());
+        assert!(c.run_segments("v", 1, 2, &[0.0; 7]).is_err());
+    }
+
+    /// Chains derived from a real pre-partition cover every boundary
+    /// with the partition layer's own frontier widths.
+    #[test]
+    fn from_prepartition_mirrors_boundary_table() {
+        let g = resnet18(ResNetStyle::Cifar, 100, 1);
+        let pp = prepartition(&g);
+        let c = SegmentedExec::from_prepartition(&pp, 100, 3072, Duration::from_micros(200));
+        assert_eq!(c.segments(), pp.n_segments());
+        for b in 1..pp.n_segments() {
+            let expect = (pp.frontier_bytes(b).unwrap() / 4).max(100);
+            assert_eq!(c.frontier(b), expect);
+        }
+        assert_eq!(c.frontier(pp.n_segments()), 100);
+        // And it still executes end to end.
+        let mut input = vec![0.0f32; c.input_elems()];
+        input[7] = 5.0;
+        let probs = c.run_range(0, pp.n_segments(), &input).unwrap();
+        assert_eq!(probs.len(), 100);
+    }
+}

@@ -26,6 +26,15 @@
 //! counted in `remote_peers`/`peer_queue_depth` instead. Per-variant
 //! latency views merge local and remote samples — the calibrator sees
 //! measured cross-device latency exactly the way it sees local latency.
+//!
+//! Peer slots additionally carry a *split lane*
+//! ([`WorkerTelemetry::record_split`] → `split_ewma_s` /
+//! `split_served` / `split_degraded`): requests that ran segments
+//! `0..k` locally, shipped the frontier tensor, and finished on the
+//! peer publish their round trips here instead of the slot's main
+//! EWMA, so the shard router can degrade a drifting split back to
+//! local-only while full-remote routing (and the reverse) stays
+//! independently governed.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -89,6 +98,15 @@ pub struct WorkerTelemetry {
     /// Requests siblings claimed from this worker's normal lane (victim
     /// side of a work-steal migration).
     stolen_from: Counter,
+    /// Requests served through a *split* route on this peer link:
+    /// segments `0..k` executed locally, the frontier tensor shipped,
+    /// the tail finished remotely (Sec. III-B partial offloading at
+    /// serving time). Zero on local worker slots.
+    split_served: Counter,
+    /// Split-route degrade events the shard router charged to this link
+    /// (the split lane drifted past budget while full-remote routing may
+    /// have stayed healthy).
+    split_degraded: Counter,
     queue_depth: Gauge,
     /// Whether the worker is currently inside a batch execution — the
     /// steal registry's "is the victim actually wedged?" gate (an idle
@@ -108,6 +126,11 @@ pub struct WorkerTelemetry {
     /// EWMA of per-request end-to-end latency (both lanes): the recency-
     /// biased drift signal the shard router holds against its budget.
     ewma: Mutex<Ewma>,
+    /// EWMA of *split-route* round trips only — a separate per-cut lane
+    /// next to `ewma`, so the router can degrade a drifting split back to
+    /// local-only without touching full-remote admission (and vice
+    /// versa). 0-valued on slots that never split-serve.
+    split_ewma: Mutex<Ewma>,
     /// EWMA of per-batch *execution* wall time: the steal registry's
     /// victim-selection window (depth × this ≈ expected serial drain
     /// time of a stranded backlog).
@@ -129,6 +152,8 @@ impl WorkerTelemetry {
             switches: Counter::new(),
             steals: Counter::new(),
             stolen_from: Counter::new(),
+            split_served: Counter::new(),
+            split_degraded: Counter::new(),
             queue_depth: Gauge::new(),
             executing: AtomicBool::new(false),
             latency: [
@@ -137,6 +162,7 @@ impl WorkerTelemetry {
             ],
             per_variant: Mutex::new(BTreeMap::new()),
             ewma: Mutex::new(Ewma::new(SLOT_LATENCY_EWMA_ALPHA)),
+            split_ewma: Mutex::new(Ewma::new(SLOT_LATENCY_EWMA_ALPHA)),
             batch_ewma: Mutex::new(Ewma::new(BATCH_LATENCY_EWMA_ALPHA)),
             reservoir_capacity,
             remote,
@@ -184,6 +210,30 @@ impl WorkerTelemetry {
         for _ in samples {
             r.push(exec_s);
         }
+    }
+
+    /// Record one *split-served* request (segments `0..k` local, frontier
+    /// shipped, tail remote): counted like any served request — lane
+    /// reservoir, per-variant stream, batch totals — but its round trip
+    /// feeds the dedicated `split_ewma` lane instead of the slot's main
+    /// end-to-end EWMA, so split-route and full-remote admission degrade
+    /// and recover independently in the shard router's reconciliation.
+    pub fn record_split(&self, variant: &str, exec_s: f64, lane: Lane, latency_s: f64) {
+        self.batches.inc();
+        self.served[lane.index()].inc();
+        self.latency[lane.index()].lock().unwrap().push(latency_s);
+        self.split_ewma.lock().unwrap().observe(latency_s);
+        self.split_served.inc();
+        let mut per_v = self.per_variant.lock().unwrap();
+        per_v
+            .entry(variant.to_string())
+            .or_insert_with(|| Reservoir::new(self.reservoir_capacity))
+            .push(exec_s);
+    }
+
+    /// A split-route degrade event was charged to this link.
+    pub fn record_split_degraded(&self) {
+        self.split_degraded.inc();
     }
 
     pub fn record_rejected(&self) {
@@ -266,6 +316,12 @@ impl WorkerTelemetry {
         self.ewma.lock().unwrap().value_or(0.0)
     }
 
+    /// Smoothed split-route round-trip latency (seconds); 0.0 until the
+    /// first split-served request. The per-cut drift signal.
+    pub fn split_latency_ewma_s(&self) -> f64 {
+        self.split_ewma.lock().unwrap().value_or(0.0)
+    }
+
     /// Smoothed per-batch execution wall time (seconds); 0.0 until the
     /// first batch. The work-stealing victim-selection signal.
     pub fn batch_latency_ewma_s(&self) -> f64 {
@@ -311,6 +367,14 @@ impl WorkerTelemetry {
 
     pub fn stolen_from(&self) -> usize {
         self.stolen_from.get()
+    }
+
+    pub fn split_served(&self) -> usize {
+        self.split_served.get()
+    }
+
+    pub fn split_degraded(&self) -> usize {
+        self.split_degraded.get()
     }
 
     /// Clone of this worker's retained latency window for one lane.
@@ -369,12 +433,20 @@ pub struct WorkerView {
     pub steals: usize,
     /// Requests siblings claimed from this worker (work stealing).
     pub stolen_from: usize,
+    /// Requests served through a split route on this peer link.
+    pub split_served: usize,
+    /// Split-route degrade events charged to this link.
+    pub split_degraded: usize,
     pub queue_depth: usize,
     pub p50_s: f64,
     pub p95_s: f64,
     /// Smoothed end-to-end latency (seconds, 0.0 until measured) — the
     /// shard router's per-link degrade/re-admit signal.
     pub ewma_s: f64,
+    /// Smoothed split-route round-trip latency (seconds, 0.0 until
+    /// measured) — the per-cut lane the router reconciles split
+    /// admission from, independent of `ewma_s`.
+    pub split_ewma_s: f64,
     /// Smoothed per-batch execution wall time (seconds, 0.0 until
     /// measured) — the steal registry's victim-selection window.
     pub batch_ewma_s: f64,
@@ -405,6 +477,11 @@ pub struct TelemetrySnapshot {
     /// raises exactly one thief's counter, so this is also the number of
     /// requests that escaped a head-of-line-blocked queue).
     pub steals: usize,
+    /// Requests served through a split route (local prefix + remote
+    /// tail) across all peer links.
+    pub split_served: usize,
+    /// Split-route degrade events across all peer links.
+    pub split_degraded: usize,
     pub lanes: [LaneView; LANES],
     pub per_worker: Vec<WorkerView>,
     pub per_variant: BTreeMap<String, VariantView>,
@@ -429,6 +506,8 @@ impl Default for TelemetrySnapshot {
             failed: 0,
             switches: 0,
             steals: 0,
+            split_served: 0,
+            split_degraded: 0,
             lanes: [LaneView::default(), LaneView::default()],
             per_worker: Vec::new(),
             per_variant: BTreeMap::new(),
@@ -540,10 +619,13 @@ impl TelemetryHub {
                 switches: s.switches(),
                 steals: s.steals(),
                 stolen_from: s.stolen_from(),
+                split_served: s.split_served(),
+                split_degraded: s.split_degraded(),
                 queue_depth: depth,
                 p50_s: wp[0],
                 p95_s: wp[1],
                 ewma_s: s.latency_ewma_s(),
+                split_ewma_s: s.split_latency_ewma_s(),
                 batch_ewma_s: s.batch_latency_ewma_s(),
             });
             snap.served += served;
@@ -552,6 +634,8 @@ impl TelemetryHub {
             snap.failed += s.failed();
             snap.switches = snap.switches.max(s.switches());
             snap.steals += s.steals();
+            snap.split_served += s.split_served();
+            snap.split_degraded += s.split_degraded();
             if !retired {
                 if s.is_remote() {
                     snap.remote_peers += 1;
@@ -753,6 +837,38 @@ mod tests {
         assert_eq!(snap.per_worker[1].queue_depth, 3);
         assert_eq!(snap.queue_depth, 5, "migration must not change the admitted total");
         assert!((snap.per_worker[0].batch_ewma_s - 0.200).abs() < 1e-12);
+    }
+
+    /// Split-served requests count as served (lane reservoir, per-variant
+    /// stream) but feed the dedicated split EWMA lane, leaving the main
+    /// end-to-end EWMA untouched — the independence the router's per-cut
+    /// degrade/re-admit logic relies on.
+    #[test]
+    fn split_lane_is_independent_of_main_ewma() {
+        let hub = TelemetryHub::new(8);
+        let p = hub.register_remote(1 << 16);
+        p.record_batch("v", 0.004, &[(Lane::Normal, 0.004)]);
+        p.record_split("v", 0.060, Lane::Normal, 0.060);
+        p.record_split("v", 0.060, Lane::Normal, 0.060);
+        assert!(p.latency_ewma_s() < 0.005, "split samples must not move the main EWMA");
+        assert!(p.split_latency_ewma_s() > 0.050, "split lane tracks split round trips");
+        p.record_split_degraded();
+
+        let snap = hub.snapshot();
+        assert_eq!(snap.served, 3, "split serves count as served");
+        assert_eq!(snap.split_served, 2);
+        assert_eq!(snap.split_degraded, 1);
+        assert_eq!(snap.per_variant["v"].count, 3, "split exec time joins the variant stream");
+        let pv = snap.per_worker.iter().find(|v| v.remote).unwrap();
+        assert_eq!(pv.split_served, 2);
+        assert_eq!(pv.split_degraded, 1);
+        assert!((pv.ewma_s - 0.004).abs() < 1e-12);
+        assert!(pv.split_ewma_s > 0.050);
+        // Local slots never split-serve: their lane stays zero.
+        let w = hub.register(0);
+        w.record_batch("v", 0.004, &[(Lane::Normal, 0.004)]);
+        assert_eq!(w.split_served(), 0);
+        assert_eq!(w.split_latency_ewma_s(), 0.0);
     }
 
     #[test]

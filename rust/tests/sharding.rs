@@ -2,8 +2,12 @@
 //! through partition peers under a *time-varying link trace*, with every
 //! degrade/re-admit decision driven by `TelemetrySnapshot` data only —
 //! plus the fully closed control plane (`tick_with_telemetry` actuating
-//! `set_shards`) degrading a drifting link. Mock executors + simulated
-//! peers throughout: no built artifacts, no network.
+//! `set_shards`) degrading a drifting link, and **segment streaming**:
+//! mid-chain splits (local prefix, frontier across the link, remote
+//! tail) that beat both local-only and full-remote serving when the
+//! link affords a frontier tensor but not whole-input shipping, and
+//! that retreat to local-only when bandwidth collapses. Mock executors
+//! + simulated peers throughout: no built artifacts, no network.
 
 use std::time::Duration;
 
@@ -15,7 +19,8 @@ use crowdhmtware::coordinator::{
 use crowdhmtware::device::{device, ResourceMonitor};
 use crowdhmtware::models::{backbone, BackboneConfig};
 use crowdhmtware::optimizer::{AdaptLoop, Budgets, Candidate, Decision};
-use crowdhmtware::partition::SharedLink;
+use crowdhmtware::partition::{OffloadPlan, Placement, SharedLink};
+use crowdhmtware::runtime::SegmentedExec;
 
 const CLASSES: usize = 4;
 /// 16 KB inputs: big enough that link bandwidth — not RTT — dominates the
@@ -264,4 +269,239 @@ fn control_plane_degrades_drifting_link_via_set_shards() {
         assert!(r.worker < REMOTE_WORKER_BASE, "degraded peer must not serve");
     }
     router.shutdown();
+}
+
+// ── segment streaming ─────────────────────────────────────────────────
+
+/// Two-segment chain over the 16 KB input: a cheap head, then a heavy
+/// tail, with a 64-element (256 B) frontier at the cut — the shape that
+/// makes a mid-chain split worthwhile on a link too slow for the input.
+fn seg_chain(head: Duration, tail: Duration) -> SegmentedExec {
+    SegmentedExec::new(CLASSES, vec![ELEMS, 64, CLASSES], vec![head, tail])
+}
+
+fn split_router(link: SharedLink) -> ShardRouter {
+    // Local: 1 ms head + 7 ms tail = 8 ms/request on 2 workers.
+    let pool = ServingPool::spawn(
+        move |_| {
+            Box::new(seg_chain(Duration::from_millis(1), Duration::from_millis(7)))
+                as Box<dyn Executor>
+        },
+        "v",
+        PoolConfig {
+            workers: 2,
+            queue_capacity: 256,
+            batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_micros(100) },
+            ..PoolConfig::default()
+        },
+    );
+    let router = ShardRouter::new(
+        pool,
+        ShardRouterConfig {
+            peer_capacity: 8,
+            degrade_latency_s: 0.020,
+            readmit_latency_s: 0.012,
+            probe_every: 4,
+            local_prior_s: 0.008,
+        },
+    );
+    // Peer runs both segments in 1 ms each; the plan prior is infinite
+    // until an offload plan prices a route.
+    router.add_simulated_peer(
+        "edge-split",
+        || {
+            Box::new(seg_chain(Duration::from_millis(1), Duration::from_millis(1)))
+                as Box<dyn Executor>
+        },
+        link,
+        f64::INFINITY,
+    );
+    router
+}
+
+/// The planner's mid-chain output for the chain above: segment 0 local,
+/// segment 1 on the peer, split round trip predicted at 4 ms.
+fn mid_chain_plan() -> OffloadPlan {
+    OffloadPlan {
+        placements: vec![
+            Placement { device: "local-device".into(), segments: vec![0] },
+            Placement { device: "edge-split".into(), segments: vec![1] },
+        ],
+        latency_s: 0.004,
+        energy_j: 0.1,
+        local_memory_bytes: 1.0,
+        transfer_bytes: 256,
+    }
+}
+
+/// Serial burst: one request at a time, so measured round trips carry no
+/// queueing noise and route comparisons stay deterministic. Returns how
+/// many responses came from the peer link.
+fn serial_burst(router: &ShardRouter, n: usize) -> usize {
+    let mut remote = 0usize;
+    for i in 0..n {
+        let rx = router.submit(input_for(i)).expect("admitted");
+        let r = rx.recv_timeout(Duration::from_secs(30)).expect("response");
+        assert_eq!(r.pred, i % CLASSES, "split, remote, and local serving must agree");
+        if r.worker >= REMOTE_WORKER_BASE {
+            remote += 1;
+        }
+    }
+    router.maintain(&router.telemetry_snapshot());
+    remote
+}
+
+/// Wait for the peer thread to publish its transport's segment
+/// capability (the seeded cut is unroutable until it does).
+fn wait_split_routable(router: &ShardRouter) {
+    for _ in 0..500 {
+        if router.admitted_splits() == 1 {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    panic!("split route never became routable");
+}
+
+/// The acceptance scenario (ISSUE 5): on a link fast enough for the
+/// frontier tensor (256 B ≈ 0.5 ms) but too slow for whole-input
+/// shipping (16 KB ≈ 33 ms), the router serves `split@1` requests whose
+/// measured latency beats BOTH local-only (8 ms) and full-remote
+/// (~35 ms), with nonzero `split_served` counters — the offload plan's
+/// per-segment placement surviving into the serving path.
+#[test]
+fn mid_chain_split_beats_local_and_full_remote() {
+    // 4 Mbit/s, 1 ms RTT: 500 KB/s → input 33 ms, frontier 0.5 ms.
+    let router = split_router(SharedLink::new(4.0, 1.0));
+
+    // ── Phase 1: no plan yet. Traffic runs local (the peer's only
+    // exposure is probe turns on its unpriced full-remote route, which
+    // measure the ~35 ms round trip).
+    let remote = serial_burst(&router, 16);
+    let tel = router.telemetry_snapshot();
+    let local_ewma: Vec<f64> = tel
+        .per_worker
+        .iter()
+        .filter(|v| !v.remote && v.ewma_s > 0.0)
+        .map(|v| v.ewma_s)
+        .collect();
+    assert!(!local_ewma.is_empty(), "local workers must be measured in phase 1");
+    let local_s = local_ewma.iter().sum::<f64>() / local_ewma.len() as f64;
+    assert!(local_s > 0.004, "local serving costs ~8 ms, measured {local_s}");
+    let stats = router.shard_stats();
+    assert_eq!(
+        remote, stats.peers[0].probes,
+        "an unpriced peer gets probe traffic only"
+    );
+
+    // ── Phase 2: the planner's mid-chain cut actuates a split route.
+    router.apply_plan(&mid_chain_plan(), 0.008);
+    wait_split_routable(&router);
+    serial_burst(&router, 32);
+
+    let stats = router.shard_stats();
+    let peer = &stats.peers[0];
+    assert!(peer.split_served > 0, "split_served must be nonzero");
+    assert!(
+        peer.split_routed > peer.split_probes,
+        "the split must win scored dispatch, not just probe turns"
+    );
+    assert_eq!(peer.cut, 1);
+
+    // The measured comparison the split exists for: frontier streaming
+    // beats both alternatives.
+    let tel = router.telemetry_snapshot();
+    let pv = tel.per_worker.iter().find(|v| v.remote).expect("peer slot");
+    assert!(pv.split_ewma_s > 0.0, "split lane must be measured");
+    assert!(
+        pv.split_ewma_s < local_s,
+        "split ({:.4}s) must beat local-only ({local_s:.4}s)",
+        pv.split_ewma_s
+    );
+    assert!(pv.ewma_s > 0.020, "probed full-remote round trips ship the whole input");
+    assert!(
+        pv.split_ewma_s < pv.ewma_s,
+        "split ({:.4}s) must beat full-remote ({:.4}s)",
+        pv.split_ewma_s,
+        pv.ewma_s
+    );
+    assert_eq!(tel.split_served, peer.split_served, "hub total mirrors the link counter");
+
+    // Full accounting across the whole run.
+    let stats = router.shutdown();
+    assert_eq!(stats.served(), 48);
+    assert_eq!(stats.failed(), 0);
+}
+
+/// A bandwidth collapse makes even the frontier shipment breach the
+/// budget: the router retreats `split@k → local-only` from telemetry
+/// alone, keeps the cut probed while degraded, and re-admits it after
+/// the link recovers.
+#[test]
+fn bandwidth_drop_retreats_split_to_local_and_readmits() {
+    let link = SharedLink::new(4.0, 1.0);
+    let router = split_router(link.clone());
+    router.apply_plan(&mid_chain_plan(), 0.008);
+    wait_split_routable(&router);
+
+    // Healthy: the split carries real (non-probe) traffic.
+    serial_burst(&router, 16);
+    let healthy = router.shard_stats();
+    assert!(healthy.peers[0].split_routed > healthy.peers[0].split_probes);
+    assert_eq!(router.admitted_splits(), 1);
+
+    // ── The link collapses 100×: the 256 B frontier now costs ~51 ms,
+    // far past the 20 ms degrade budget. The router must retreat the
+    // split within a few reconciliations.
+    link.scale_bandwidth(0.01);
+    let mut retreated_at = None;
+    for t in 1..=6 {
+        serial_burst(&router, 8);
+        if router.admitted_splits() == 0 {
+            retreated_at = Some(t);
+            break;
+        }
+    }
+    retreated_at.expect("router never retreated the collapsed split to local-only");
+    assert!(router.shard_stats().split_degraded_events >= 1);
+    let tel = router.telemetry_snapshot();
+    assert!(tel.split_degraded >= 1, "the degrade is charged to the link's hub slot");
+
+    // While degraded, split traffic is probes only.
+    let before = router.shard_stats();
+    serial_burst(&router, 8);
+    let after = router.shard_stats();
+    let split_delta = after.peers[0].split_routed - before.peers[0].split_routed;
+    let probe_delta = after.peers[0].split_probes - before.peers[0].split_probes;
+    assert_eq!(split_delta, probe_delta, "a degraded split receives probe traffic only");
+
+    // ── Recovery: probes observe the restored link; the split EWMA
+    // decays under the re-admit bar and the route rejoins.
+    link.scale_bandwidth(100.0);
+    let mut readmitted_at = None;
+    for t in 1..=15 {
+        serial_burst(&router, 8);
+        if router.admitted_splits() == 1 {
+            readmitted_at = Some(t);
+            break;
+        }
+    }
+    readmitted_at.expect("router never re-admitted the recovered split");
+    assert!(router.shard_stats().split_readmitted_events >= 1);
+
+    // Re-admitted: non-probe split traffic resumes.
+    let before = router.shard_stats();
+    serial_burst(&router, 16);
+    let after = router.shard_stats();
+    let split_delta = after.peers[0].split_routed - before.peers[0].split_routed;
+    let probe_delta = after.peers[0].split_probes - before.peers[0].split_probes;
+    assert!(
+        split_delta > probe_delta,
+        "re-admitted split must carry scored traffic again ({split_delta} vs {probe_delta})"
+    );
+
+    let tel = router.telemetry_snapshot();
+    let stats = router.shutdown();
+    assert_eq!(stats.served(), tel.served);
+    assert_eq!(stats.failed(), 0);
 }

@@ -114,6 +114,19 @@ class ShardingSchemaTest(unittest.TestCase):
         cur = sharding_doc({0: 300.0}, split_p95=99999.0)
         self.assertTrue(check_bench.compare(cur, base, 0.20))
 
+    def test_additive_frontier_batch_key_is_ignored(self):
+        # ISSUE 6's frontier-coalescing scenario rides the same additive
+        # convention as `split`: nested window-on/off numbers, however
+        # wild, are recorded but never gated.
+        base = sharding_doc({0: 300.0})
+        cur = sharding_doc({0: 300.0})
+        cur["frontier_batch"] = {
+            "requests": 16,
+            "window_on": {"req_per_s": 0.001, "p95_ms": 99999.0, "mean_coalesced": 0.0},
+            "window_off": {"req_per_s": 99999.0, "p95_ms": 0.001, "mean_coalesced": 99.0},
+        }
+        self.assertTrue(check_bench.compare(cur, base, 0.20))
+
     def test_additive_skewed_key_is_ignored_on_serving(self):
         base = serving_doc({1: 100.0})
         cur = serving_doc({1: 100.0})

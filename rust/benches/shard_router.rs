@@ -13,15 +13,29 @@
 //! router splits at the seeded cut and the split-vs-full-remote
 //! trajectory is captured from day one.
 //!
-//! Emits `BENCH_sharding.json` (the `split` key is schema-additive — the
-//! CI gate reads `configs` only, like PR 4's `skewed` key):
+//! A third scenario measures **frontier coalescing** (ISSUE 6): the same
+//! split shape over a high-RTT link, served through a *wall-clock* peer
+//! transport (transfer time actually slept, not analytically returned —
+//! the batching win must show up in measured req/s, which the analytic
+//! `SimulatedPeer` cannot do). A burst of concurrent split requests runs
+//! with the link's coalescing window off (every frontier pays the round
+//! trip alone) vs on (the window stacks frontiers into one transfer);
+//! batching-on must win on throughput.
+//!
+//! Emits `BENCH_sharding.json` (the `split` and `frontier_batch` keys
+//! are schema-additive — the CI gate reads `configs` only, like PR 4's
+//! `skewed` key):
 //!
 //! ```json
 //! {"bench":"shard_router","requests":256,"batch_delay_ms":2,
 //!  "configs":[{"peers":0,"req_per_s":...,"remote_share":0.0,
 //!              "p95_ms":...}, ...],
 //!  "split":{"requests":128,"req_per_s":...,"split_share":...,
-//!           "p95_ms":...}}
+//!           "p95_ms":...},
+//!  "frontier_batch":{"requests":16,
+//!                    "window_on":{"req_per_s":...,"p95_ms":...,
+//!                                 "mean_coalesced":...},
+//!                    "window_off":{...}}}
 //! ```
 //!
 //! Run: `cargo bench --bench shard_router`
@@ -191,6 +205,147 @@ fn run_split_scenario() -> SplitResult {
     }
 }
 
+// ── frontier-coalescing scenario ──────────────────────────────────────
+
+const FRONTIER_REQUESTS: usize = 16;
+
+/// A peer transport that *sleeps* its link transfers instead of
+/// returning them analytically: with modeled transfers the router's
+/// wall clock never contains the round trips the window amortizes, so
+/// only a wall-clock transport can show the coalescing win as measured
+/// throughput. Transfers therefore report `0.0` analytic seconds — the
+/// cost is already in the wall time, like a real network transport.
+struct WallClockPeer {
+    exec: SegmentedExec,
+    link: SharedLink,
+}
+
+impl WallClockPeer {
+    fn sleep_transfer(&self, bytes: usize) {
+        std::thread::sleep(Duration::from_secs_f64(self.link.delay_s(bytes)));
+    }
+}
+
+impl crowdhmtware::coordinator::PeerTransport for WallClockPeer {
+    fn num_classes(&self) -> usize {
+        self.exec.classes()
+    }
+
+    fn infer(&mut self, _variant: &str, input: &[f32]) -> Result<(Vec<f32>, f64)> {
+        self.sleep_transfer(std::mem::size_of_val(input));
+        let probs = self.exec.run_range(0, self.exec.segments(), input)?;
+        self.sleep_transfer(std::mem::size_of_val(&probs[..]));
+        Ok((probs, 0.0))
+    }
+
+    fn num_segments(&self) -> usize {
+        self.exec.segments()
+    }
+
+    fn infer_segments(
+        &mut self,
+        _variant: &str,
+        first_seg: usize,
+        input_frontier: &[f32],
+    ) -> Result<(Vec<f32>, f64)> {
+        self.sleep_transfer(std::mem::size_of_val(input_frontier));
+        let probs = self.exec.run_range(first_seg, self.exec.segments(), input_frontier)?;
+        self.sleep_transfer(std::mem::size_of_val(&probs[..]));
+        Ok((probs, 0.0))
+    }
+
+    fn infer_segments_batch(
+        &mut self,
+        _variant: &str,
+        first_seg: usize,
+        rows: usize,
+        frontiers: &[f32],
+    ) -> Result<(Vec<f32>, f64)> {
+        // One transfer each way for the whole stack — the amortization
+        // the window exists to buy.
+        self.sleep_transfer(std::mem::size_of_val(frontiers));
+        let per = frontiers.len() / rows.max(1);
+        let mut out = Vec::with_capacity(rows * self.exec.classes());
+        for row in frontiers.chunks_exact(per) {
+            out.extend(self.exec.run_range(first_seg, self.exec.segments(), row)?);
+        }
+        self.sleep_transfer(std::mem::size_of_val(&out[..]));
+        Ok((out, 0.0))
+    }
+
+    fn link_profile(&self) -> Option<(f64, f64)> {
+        Some((self.link.rtt_s(), self.link.bytes_per_s()))
+    }
+}
+
+struct FrontierResult {
+    req_per_s: f64,
+    p95_ms: f64,
+    mean_coalesced: f64,
+}
+
+/// High-delay link (30 ms RTT), concurrent split burst: with the window
+/// off each frontier pays the full round trip alone (~32 ms serialized
+/// on the link thread); with the window on, stacked frontiers share it.
+fn run_frontier_scenario(window_on: bool) -> FrontierResult {
+    let pool = ServingPool::spawn(
+        |_| Box::new(chain(1, 10)) as Box<dyn Executor>,
+        "v",
+        PoolConfig {
+            workers: 1,
+            queue_capacity: FRONTIER_REQUESTS,
+            batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_micros(100) },
+            ..PoolConfig::default()
+        },
+    );
+    let router = ShardRouter::new(
+        pool,
+        ShardRouterConfig {
+            peer_capacity: FRONTIER_REQUESTS,
+            local_prior_s: 10.0, // the split route must take the whole burst
+            probe_every: 0,
+            ..ShardRouterConfig::default()
+        },
+    );
+    let link = SharedLink::new(50.0, 30.0);
+    let peer_link = link.clone();
+    router.add_peer(
+        "far-edge",
+        move || Box::new(WallClockPeer { exec: chain(5, 1), link: peer_link }),
+        0.003,
+    );
+    router.seed_split(0, 1, 0.003);
+    for _ in 0..500 {
+        if router.admitted_splits() == 1 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    if window_on {
+        router.set_frontier_window(0, 8, Duration::from_millis(10));
+    } else {
+        router.set_frontier_window(0, 1, Duration::ZERO);
+    }
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..FRONTIER_REQUESTS)
+        .map(|_| router.submit(vec![0.0; ELEMS]).expect("capacity sized to the run"))
+        .collect();
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(60)).expect("response");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let shard = router.shard_stats();
+    let (batches, coalesced) =
+        (shard.peers[0].frontier_batches, shard.peers[0].frontier_coalesced);
+    let stats = router.shutdown();
+    assert_eq!(stats.served(), FRONTIER_REQUESTS);
+    FrontierResult {
+        req_per_s: FRONTIER_REQUESTS as f64 / wall,
+        p95_ms: stats.percentile(0.95) * 1e3,
+        mean_coalesced: if batches > 0 { coalesced as f64 / batches as f64 } else { 0.0 },
+    }
+}
+
 fn main() {
     let mut table = Table::new(
         "Serving throughput vs attached peers (mock executors, 2 ms/batch)",
@@ -221,6 +376,30 @@ fn main() {
     ]);
     split_table.print();
 
+    let frontier_off = run_frontier_scenario(false);
+    let frontier_on = run_frontier_scenario(true);
+    let mut frontier_table = Table::new(
+        "Frontier coalescing (30 ms RTT wall-clock link, 16 concurrent split requests)",
+        &["window", "req/s", "p95 ms", "mean coalesced"],
+    );
+    for (label, r) in [("off", &frontier_off), ("on", &frontier_on)] {
+        frontier_table.row(&[
+            label.to_string(),
+            format!("{:.0}", r.req_per_s),
+            format!("{:.2}", r.p95_ms),
+            format!("{:.2}", r.mean_coalesced),
+        ]);
+    }
+    frontier_table.print();
+    // The acceptance bar of the coalescing scenario: amortizing the
+    // round trips must show up as measured throughput.
+    assert!(
+        frontier_on.req_per_s > frontier_off.req_per_s,
+        "frontier batching must beat per-request serving: {:.0} vs {:.0} req/s",
+        frontier_on.req_per_s,
+        frontier_off.req_per_s
+    );
+
     let configs: Vec<Json> = results
         .iter()
         .map(|r| {
@@ -247,6 +426,30 @@ fn main() {
                 ("req_per_s", Json::num(split.req_per_s)),
                 ("split_share", Json::num(split.split_share)),
                 ("p95_ms", Json::num(split.p95_ms)),
+            ]),
+        ),
+        // Schema-additive like `split`: the window-on/off comparison of
+        // the coalescing scenario, invisible to the existing gate.
+        (
+            "frontier_batch",
+            Json::obj(vec![
+                ("requests", Json::num(FRONTIER_REQUESTS as f64)),
+                (
+                    "window_on",
+                    Json::obj(vec![
+                        ("req_per_s", Json::num(frontier_on.req_per_s)),
+                        ("p95_ms", Json::num(frontier_on.p95_ms)),
+                        ("mean_coalesced", Json::num(frontier_on.mean_coalesced)),
+                    ]),
+                ),
+                (
+                    "window_off",
+                    Json::obj(vec![
+                        ("req_per_s", Json::num(frontier_off.req_per_s)),
+                        ("p95_ms", Json::num(frontier_off.p95_ms)),
+                        ("mean_coalesced", Json::num(frontier_off.mean_coalesced)),
+                    ]),
+                ),
             ]),
         ),
     ]);

@@ -57,6 +57,26 @@ impl Default for BatcherConfig {
     }
 }
 
+impl BatcherConfig {
+    /// The batch-window trigger itself, factored out of [`Batcher`] so
+    /// every coalescing point applies the same policy: a window holding
+    /// `len` requests whose oldest member arrived at `oldest` closes at
+    /// `now` when it is full *or* the oldest member has aged out. The
+    /// pool workers consume this through [`Batcher::pop_batch`]; the
+    /// shard router's peer-link threads consume it directly to coalesce
+    /// split-routed frontiers into one transfer.
+    pub fn window_closes(&self, len: usize, oldest: Instant, now: Instant) -> bool {
+        len >= self.max_batch || now.duration_since(oldest) >= self.max_wait
+    }
+
+    /// Instant at which the age trigger fires for a window anchored at
+    /// `oldest` — what a consumer blocks until (`recv_timeout`) instead
+    /// of spin-sleeping.
+    pub fn window_deadline(&self, oldest: Instant) -> Instant {
+        oldest + self.max_wait
+    }
+}
+
 /// A formed batch: requests + the compiled batch size to run (≥ len,
 /// padding rows with zeros).
 #[derive(Debug)]
@@ -133,7 +153,7 @@ impl Batcher {
     /// the worker blocks in `recv_timeout` until exactly this deadline
     /// instead of spin-sleeping. `None` when both lanes are empty.
     pub fn deadline(&self) -> Option<Instant> {
-        self.oldest_enqueued().map(|t| t + self.cfg.max_wait)
+        self.oldest_enqueued().map(|t| self.cfg.window_deadline(t))
     }
 
     /// Pick the compiled batch size for `k` ready requests: the smallest
@@ -154,8 +174,7 @@ impl Batcher {
     /// `compiled` must be sorted ascending and non-empty.
     pub fn pop_batch(&mut self, compiled: &[usize], now: Instant) -> Option<Batch> {
         let oldest = self.oldest_enqueued()?;
-        let oldest_wait = now.duration_since(oldest);
-        if self.len() < self.cfg.max_batch && oldest_wait < self.cfg.max_wait {
+        if !self.cfg.window_closes(self.len(), oldest, now) {
             return None;
         }
         self.form(compiled)
@@ -236,6 +255,24 @@ mod tests {
         let batch = b.pop_batch(&[1, 8], later).unwrap();
         assert_eq!(batch.requests.len(), 1);
         assert_eq!(batch.compiled_batch, 1);
+    }
+
+    /// The trigger the pool workers and the shard router's peer-link
+    /// coalescers share: full closes immediately, age closes at exactly
+    /// the deadline, and a young non-full window stays open.
+    #[test]
+    fn window_trigger_is_shared_policy() {
+        let cfg = BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(5) };
+        let t0 = Instant::now();
+        assert!(!cfg.window_closes(1, t0, t0), "young and not full");
+        assert!(cfg.window_closes(4, t0, t0), "full closes regardless of age");
+        assert!(cfg.window_closes(9, t0, t0), "overfull closes too");
+        assert!(cfg.window_closes(1, t0, cfg.window_deadline(t0)), "aged out at the deadline");
+        assert!(
+            !cfg.window_closes(3, t0, t0 + Duration::from_millis(4)),
+            "one tick before the deadline the window is still open"
+        );
+        assert_eq!(cfg.window_deadline(t0), t0 + cfg.max_wait);
     }
 
     #[test]

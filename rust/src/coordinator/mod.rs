@@ -22,8 +22,13 @@
 //! segments `0..k` on a pool-built executor, ship the frontier tensor,
 //! and finish on the peer ([`server::Executor::run_segments`] +
 //! [`shard::PeerTransport::infer_segments`]), with each peer's
-//! `split@k` route governed by its own telemetry lane. Priority-lane
-//! requests are never split-routed.
+//! `split@k` route governed by its own telemetry lane. Concurrent
+//! split-routed submissions **coalesce on the peer link**: each link
+//! runs a frontier-batching window (seeded from the link profile, tuned
+//! closed-loop by [`shard::ShardRouter::maintain`]) that stacks their
+//! frontiers into one transfer, amortizing the per-call round trip —
+//! see [`shard::PeerTransport::infer_segments_batch`]. Priority-lane
+//! requests are never split-routed, and never wait on a window.
 
 pub mod batcher;
 pub mod cascade;

@@ -19,8 +19,8 @@
 //! | Contiguous segment runs per device      | [`Executor::run_segments`] local prefix + [`PeerTransport::infer_segments`] remote tail |
 //! | Transmission delay (feature bytes / BW) | [`crate::partition::SharedLink::delay_s`] of the *frontier* bytes at the cut (whole input for full-remote) |
 //! | Graph-search offloading plan            | [`crate::partition::OffloadPlan`] → [`ShardRouter::apply_plan`] route priors; a mid-chain [`crate::partition::OffloadPlan::split_cut`] seeds the peer's split route |
-//! | Runtime profiler feedback (Fig. 6)      | one remote [`WorkerTelemetry`] slot per peer link, with a separate *split lane* (`split_ewma_s`) per cut |
-//! | Configuration actuation (Fig. 6)        | `Actuator::set_shards` (degrade / re-admit reconciliation, full-remote and split independently) alongside `set_workers` |
+//! | Runtime profiler feedback (Fig. 6)      | one remote [`WorkerTelemetry`] slot per peer link, with a separate *split lane* (`split_ewma_s`) and a *frontier-batch lane* (windows closed, requests coalesced) per link |
+//! | Configuration actuation (Fig. 6)        | `Actuator::set_shards` (degrade / re-admit reconciliation, full-remote and split independently, plus per-link frontier-window tuning) alongside `set_workers` |
 //!
 //! Routing policy, per submission — a placement search over the
 //! partition chain's cut points, not a target pick:
@@ -51,11 +51,38 @@
 //!    [`ShardRouter::maintain`], the control plane's `set_shards`
 //!    actuation arm.
 //!
+//! **Peer-link frontier batching.** Split-routed submissions that land
+//! on the same link concurrently *coalesce*: the link thread holds a
+//! batch window (the same fullness/age trigger as the pool batchers,
+//! via [`super::batcher::BatcherConfig::window_closes`]), runs each
+//! request's `0..k` prefix, stacks the frontiers, and ships the stack
+//! as **one** transfer finished by a single batched remote tail call
+//! ([`PeerTransport::infer_segments_batch`]) — amortizing the per-call
+//! half-RTT terms of [`crate::partition::Link::delay_s`] across the
+//! window, which is where OODIn-style multi-device serving wins its
+//! throughput. The window is *link-aware*, not a fixed constant: it is
+//! seeded from the transport's published link profile
+//! ([`PeerTransport::link_profile`]) against the split route's latency
+//! estimate (bandwidth enters through the estimate's frontier-bytes
+//! term), and then runs closed-loop through the Fig. 6 stages —
+//! *measure* (the link publishes its `frontier_batch` lane and
+//! `split_ewma_s` through the hub), *decide* ([`ShardRouter::maintain`]
+//! differences window occupancy per tick and holds the split EWMA
+//! against the degrade budget), *act* (the window widens additively on
+//! high occupancy, narrows on empty windows, retreats
+//! multiplicatively — and later re-opens — with split-lane health,
+//! exactly the AIMD shape the pool sizer applies to width). The same
+//! `maintain` call *is* the control plane's `set_shards` arm, so window
+//! actuation rides every adaptation tick with no extra plumbing.
+//!
 //! **Invariant: priority-lane requests are never split-routed.** A split
 //! rides two executors and a mid-chain frontier shipment; the
 //! latency-critical lane keeps the single-hop guarantee (local worker or
 //! one full-remote round trip) and never serves as a degraded-route
-//! probe either.
+//! probe either. Frontier batching preserves this: only split jobs
+//! (normal lane by the invariant above) ever enter a link's window —
+//! priority and full-remote jobs are served the moment they arrive and
+//! never wait on a coalescing window.
 //!
 //! [`SimulatedPeer`] keeps all of this runnable offline: an in-process
 //! peer executing through any [`Executor`] with the transfer cost of a
@@ -75,6 +102,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use super::batcher::BatcherConfig;
 use super::pool::{PoolStats, ServingPool};
 use super::server::{Executor, Rejected, Response};
 use crate::partition::{OffloadPlan, SharedLink};
@@ -130,6 +158,57 @@ pub trait PeerTransport {
         }
         anyhow::bail!("transport cannot resume at segment {first_seg} (whole-model only)")
     }
+
+    /// Batched segment-run entry point: finish `rows` partially executed
+    /// requests in one call over their *stacked* frontiers (`frontiers`
+    /// is `rows` equal-length rows, concatenated). Returns `rows ×
+    /// num_classes()` stacked class probabilities — row `i`'s
+    /// distribution at `[i*classes, (i+1)*classes)` — plus the
+    /// analytically accounted transfer seconds for the whole window. Row
+    /// `i`'s probabilities must bit-equal what
+    /// [`PeerTransport::infer_segments`] returns for row `i` alone:
+    /// coalescing may only change *transfer pricing*, never values.
+    ///
+    /// The default loops the per-request path (each row priced as its
+    /// own transfer), so existing transports keep working unchanged; a
+    /// transport that can ship the stack as one transfer overrides this
+    /// to amortize the per-call link delay — see [`SimulatedPeer`].
+    fn infer_segments_batch(
+        &mut self,
+        variant: &str,
+        first_seg: usize,
+        rows: usize,
+        frontiers: &[f32],
+    ) -> Result<(Vec<f32>, f64)> {
+        let classes = self.num_classes();
+        let per = if rows > 0 { frontiers.len() / rows } else { 0 };
+        if rows == 0 || per == 0 || per * rows != frontiers.len() {
+            anyhow::bail!("ragged frontier stack: {} values across {rows} rows", frontiers.len());
+        }
+        let mut out = Vec::with_capacity(rows * classes);
+        let mut transfer = 0.0;
+        for row in frontiers.chunks_exact(per) {
+            let (mut probs, t) = self.infer_segments(variant, first_seg, row)?;
+            if probs.len() < classes {
+                anyhow::bail!("remote tail produced {} values, need {classes}", probs.len());
+            }
+            probs.truncate(classes);
+            out.extend(probs);
+            transfer += t;
+        }
+        Ok((out, transfer))
+    }
+
+    /// Link quality for frontier-window seeding: `(rtt_s, bytes_per_s)`
+    /// of the link this transport ships frontiers over, or `None` (the
+    /// default) when unknown. Read once at link startup and published to
+    /// the router; with no profile the router leaves the coalescing
+    /// window closed (drift after startup is the closed loop's job, not
+    /// the seed's). A real transport can return its measured
+    /// ping/bandwidth here.
+    fn link_profile(&self) -> Option<(f64, f64)> {
+        None
+    }
 }
 
 /// In-process simulated peer: a local [`Executor`] behind a live
@@ -180,6 +259,45 @@ impl PeerTransport for SimulatedPeer {
         let transfer = self.link.delay_s(in_bytes) + self.link.delay_s(out_bytes);
         Ok((probs, transfer))
     }
+
+    /// The coalesced counterpart: each row still runs through the same
+    /// per-row `run_segments` call as the one-at-a-time path (bit-equal
+    /// by construction), but the *stack* is priced as ONE transfer each
+    /// way — the per-call half-RTT terms of
+    /// [`crate::partition::Link::delay_s`] are paid once per window
+    /// instead of once per request, which is exactly what the link
+    /// thread's coalescing window buys on a high-delay link.
+    fn infer_segments_batch(
+        &mut self,
+        variant: &str,
+        first_seg: usize,
+        rows: usize,
+        frontiers: &[f32],
+    ) -> Result<(Vec<f32>, f64)> {
+        let classes = self.exec.num_classes();
+        let last = self.exec.num_segments();
+        let per = if rows > 0 { frontiers.len() / rows } else { 0 };
+        if rows == 0 || per == 0 || per * rows != frontiers.len() {
+            anyhow::bail!("ragged frontier stack: {} values across {rows} rows", frontiers.len());
+        }
+        let mut out = Vec::with_capacity(rows * classes);
+        for row in frontiers.chunks_exact(per) {
+            let mut probs = self.exec.run_segments(variant, first_seg, last, row)?;
+            if probs.len() < classes {
+                anyhow::bail!("remote tail produced {} values, need {classes}", probs.len());
+            }
+            probs.truncate(classes);
+            out.extend(probs);
+        }
+        let in_bytes = std::mem::size_of_val(frontiers);
+        let out_bytes = std::mem::size_of_val(out.as_slice());
+        let transfer = self.link.delay_s(in_bytes) + self.link.delay_s(out_bytes);
+        Ok((out, transfer))
+    }
+
+    fn link_profile(&self) -> Option<(f64, f64)> {
+        Some((self.link.rtt_s(), self.link.bytes_per_s()))
+    }
 }
 
 /// One request in flight to a peer link.
@@ -224,6 +342,17 @@ pub struct ShardRouterConfig {
     /// (typically the calibrated on-device prediction for the deployed
     /// variant, refreshed by [`ShardRouter::apply_plan`]).
     pub local_prior_s: f64,
+    /// Ceiling on any link's frontier-coalescing window (split jobs per
+    /// batched transfer). The *actual* window per link is seeded from
+    /// its link profile and tuned closed-loop by
+    /// [`ShardRouter::maintain`]; this only bounds it. `1` disables
+    /// frontier batching globally.
+    pub frontier_batch_cap: usize,
+    /// Ceiling on any link's window age trigger — the longest a split
+    /// job may wait for company before its window ships anyway. The
+    /// seeded wait is half the link's RTT (batching should never cost
+    /// more than the round trip it saves), capped here.
+    pub frontier_wait_cap: Duration,
 }
 
 impl Default for ShardRouterConfig {
@@ -234,6 +363,8 @@ impl Default for ShardRouterConfig {
             readmit_latency_s: 0.040,
             probe_every: 8,
             local_prior_s: 0.010,
+            frontier_batch_cap: 8,
+            frontier_wait_cap: Duration::from_millis(5),
         }
     }
 }
@@ -244,6 +375,48 @@ fn f2b(x: f64) -> u64 {
 
 fn b2f(b: u64) -> f64 {
     f64::from_bits(b)
+}
+
+/// One peer link's frontier-coalescing window, shared between the router
+/// (which seeds and tunes it in [`ShardRouter::maintain`] /
+/// [`ShardRouter::set_frontier_window`]) and the link thread (which
+/// reads it on every wakeup). `batch <= 1` means coalescing is off and
+/// split jobs serve one at a time — the pre-batching behavior.
+#[derive(Debug)]
+struct FrontierWindow {
+    /// Max split jobs coalesced into one transfer (the window's
+    /// fullness trigger).
+    batch: AtomicUsize,
+    /// Age trigger for a non-full window, in microseconds.
+    wait_us: AtomicU64,
+}
+
+impl FrontierWindow {
+    /// Coalescing off: every split job ships alone.
+    fn off() -> FrontierWindow {
+        FrontierWindow { batch: AtomicUsize::new(1), wait_us: AtomicU64::new(0) }
+    }
+
+    /// The window as the batcher-shared trigger policy.
+    fn config(&self) -> BatcherConfig {
+        BatcherConfig {
+            max_batch: self.batch(),
+            max_wait: Duration::from_micros(self.wait_us.load(Ordering::Relaxed)),
+        }
+    }
+
+    fn batch(&self) -> usize {
+        self.batch.load(Ordering::Relaxed).max(1)
+    }
+
+    fn set(&self, batch: usize, wait: Duration) {
+        self.batch.store(batch.max(1), Ordering::Relaxed);
+        self.wait_us.store(wait.as_micros() as u64, Ordering::Relaxed);
+    }
+
+    fn set_batch(&self, batch: usize) {
+        self.batch.store(batch.max(1), Ordering::Relaxed);
+    }
 }
 
 /// One peer link: the channel to its thread, its remote telemetry slot,
@@ -293,6 +466,30 @@ struct PeerSlot {
     /// on either side makes every cut unroutable rather than failing
     /// (or silently mis-serving) split requests at execution time.
     segments: Arc<AtomicUsize>,
+    /// This link's frontier-coalescing window, shared with the link
+    /// thread.
+    window: Arc<FrontierWindow>,
+    /// Link RTT published by the transport at startup (f64 bits; 0.0 =
+    /// no profile) — the window seed's amortizable quantity.
+    link_rtt_s: Arc<AtomicU64>,
+    /// Link bandwidth published alongside the RTT (f64 bits; 0.0 = no
+    /// profile). Bandwidth shapes the seed through the split estimate's
+    /// frontier-bytes term; kept observable for stats and callers.
+    link_bytes_per_s: Arc<AtomicU64>,
+    /// The window size the seed picked (0 = not yet seeded). A window
+    /// that retreated to 1 only re-opens when the seed wanted batching
+    /// (> 1) in the first place — a fast link never batches just
+    /// because its split lane is healthy.
+    window_seed: AtomicUsize,
+    /// One-shot guard: `maintain` seeds each window once, then only
+    /// tunes it. Also set by [`ShardRouter::set_frontier_window`] so a
+    /// manual window is tuned from, not re-seeded over.
+    window_seeded: AtomicBool,
+    /// `frontier_batches` at the last `maintain` (occupancy is a
+    /// per-tick difference, like the failure counter above).
+    last_frontier_batches: AtomicUsize,
+    /// `frontier_coalesced` at the last `maintain`.
+    last_frontier_coalesced: AtomicUsize,
 }
 
 impl PeerSlot {
@@ -355,6 +552,14 @@ pub struct PeerStat {
     pub split_measured_s: f64,
     /// Plan-predicted split prior (`INFINITY` until a plan priced it).
     pub split_plan_s: f64,
+    /// Current frontier-coalescing window (max split jobs per batched
+    /// transfer; 1 = coalescing off).
+    pub frontier_window: usize,
+    /// Frontier-batch windows this link has closed.
+    pub frontier_batches: usize,
+    /// Split requests those windows carried (mean coalesced size =
+    /// `frontier_coalesced / frontier_batches`).
+    pub frontier_coalesced: usize,
 }
 
 /// Router-level routing statistics.
@@ -403,8 +608,14 @@ pub struct ShardRouter {
     pool: ServingPool,
     peers: RwLock<Vec<PeerSlot>>,
     cfg: ShardRouterConfig,
-    /// Submission sequence: probe cadence + rotation.
+    /// Submission sequence: probe cadence.
     seq: AtomicUsize,
+    /// Probe rotation cursor, advanced once per *probe turn* (not per
+    /// submission): which unroutable route the turn starts from. Indexing
+    /// the unroutable list by the submission sequence instead would starve
+    /// routes whenever the turn cadence and the list length fall into
+    /// lockstep (see `submit_lane`).
+    probe_cursor: AtomicUsize,
     /// Measured mean local-worker EWMA from the last `maintain` (f64
     /// bits; 0.0 = unmeasured → `local_prior`).
     local_measured_s: AtomicU64,
@@ -427,11 +638,13 @@ impl ShardRouter {
             cfg.readmit_latency_s <= cfg.degrade_latency_s,
             "re-admit threshold above the degrade threshold would thrash"
         );
+        assert!(cfg.frontier_batch_cap >= 1, "frontier window cap must be positive");
         ShardRouter {
             pool,
             peers: RwLock::new(Vec::new()),
             cfg,
             seq: AtomicUsize::new(0),
+            probe_cursor: AtomicUsize::new(0),
             local_measured_s: AtomicU64::new(f2b(0.0)),
             local_prior_s: AtomicU64::new(f2b(cfg.local_prior_s)),
             routed_local: AtomicUsize::new(0),
@@ -482,9 +695,22 @@ impl ShardRouter {
         let make_local = self.pool.executor_factory();
         let segments = Arc::new(AtomicUsize::new(0));
         let seg_thread = Arc::clone(&segments);
+        let window = Arc::new(FrontierWindow::off());
+        let win_thread = Arc::clone(&window);
+        let link_rtt_s = Arc::new(AtomicU64::new(f2b(0.0)));
+        let link_bytes_per_s = Arc::new(AtomicU64::new(f2b(0.0)));
+        let rtt_thread = Arc::clone(&link_rtt_s);
+        let bw_thread = Arc::clone(&link_bytes_per_s);
         let join = std::thread::spawn(move || {
             let transport = make_transport();
             let mut ctx = PeerCtx { transport, make_local, local: None, worker: worker_id };
+            // Publish the link profile for window seeding — before the
+            // segment capability, whose Release store makes both visible
+            // to a router that has seen the cut become routable.
+            if let Some((rtt_s, bytes_per_s)) = ctx.transport.link_profile() {
+                rtt_thread.store(f2b(rtt_s), Ordering::Relaxed);
+                bw_thread.store(f2b(bytes_per_s), Ordering::Relaxed);
+            }
             // Publish the link's streamable capability: the min of what
             // BOTH halves can run piecewise. A whole-model local
             // executor (e.g. the PJRT runtime's default) must make every
@@ -499,7 +725,7 @@ impl ShardRouter {
                 1
             };
             seg_thread.store(segs, Ordering::Release);
-            peer_main(ctx, rx, variant, generation, tel_thread)
+            peer_main(ctx, rx, variant, generation, tel_thread, win_thread)
         });
         peers.push(PeerSlot {
             name: name.to_string(),
@@ -519,6 +745,13 @@ impl ShardRouter {
             split_routed: AtomicUsize::new(0),
             split_probes: AtomicUsize::new(0),
             segments,
+            window,
+            link_rtt_s,
+            link_bytes_per_s,
+            window_seed: AtomicUsize::new(0),
+            window_seeded: AtomicBool::new(false),
+            last_frontier_batches: AtomicUsize::new(0),
+            last_frontier_coalesced: AtomicUsize::new(0),
         });
         idx
     }
@@ -605,19 +838,33 @@ impl ShardRouter {
                 }
             }
             if !unroutable.is_empty() {
-                let (pi, cut) = unroutable[(n / self.cfg.probe_every) % unroutable.len()];
-                match self.try_peer(&peers[pi], input, lane, true, cut) {
-                    Ok(rx) => return Ok(rx),
-                    Err(give_back) => input = give_back,
+                // Rotate with a dedicated cursor that advances once per
+                // probe *turn*. Indexing by `n / probe_every` looks
+                // equivalent, but `n` counts every submission — so a
+                // traffic pattern whose non-probing submissions (priority
+                // requests included) consume the turns of one parity can
+                // lock that formula onto a single index and starve the
+                // other unroutable routes of probes indefinitely.
+                let start = self.probe_cursor.fetch_add(1, Ordering::Relaxed);
+                // A probe target that loses its `try_peer` admission race
+                // hands the input back; re-arm the turn on the next
+                // unroutable route instead of silently dropping the probe
+                // (the degraded route would wait a full extra cadence).
+                for k in 0..unroutable.len() {
+                    let (pi, cut) = unroutable[(start + k) % unroutable.len()];
+                    match self.try_peer(&peers[pi], input, lane, true, cut) {
+                        Ok(rx) => return Ok(rx),
+                        Err(give_back) => input = give_back,
+                    }
                 }
             }
         }
 
-        // Best admitted route by load-weighted estimate: each peer
+        // Admitted routes ranked by load-weighted estimate: each peer
         // contributes its full-remote route and, for normal-lane
         // submissions, its split route (priority requests are never
         // split-routed — the invariant the module doc states).
-        let mut best: Option<(usize, usize, f64)> = None;
+        let mut routes: Vec<(usize, usize, f64)> = Vec::new();
         for (i, p) in peers.iter().enumerate() {
             let depth = p.tel.queue_depth();
             if depth >= self.cfg.peer_capacity {
@@ -625,16 +872,8 @@ impl ShardRouter {
             }
             let weight = depth as f64 + 1.0;
             let mut consider = |cut: usize, est: f64| {
-                if !est.is_finite() {
-                    return;
-                }
-                let score = weight * est;
-                let better = match best {
-                    None => true,
-                    Some((_, _, s)) => score < s,
-                };
-                if better {
-                    best = Some((i, cut, score));
+                if est.is_finite() {
+                    routes.push((i, cut, weight * est));
                 }
             };
             if p.admitted.load(Ordering::Acquire) {
@@ -646,6 +885,7 @@ impl ShardRouter {
                 }
             }
         }
+        routes.sort_by(|a, b| a.2.partial_cmp(&b.2).unwrap_or(std::cmp::Ordering::Equal));
 
         // Local score: mean live queue depth × measured-or-prior latency.
         let depths = self.pool.queue_depths();
@@ -661,12 +901,21 @@ impl ShardRouter {
         let cap = self.pool.queue_capacity();
         let local_full = !depths.is_empty() && depths.iter().all(|&d| d >= cap);
 
-        if let Some((pi, cut, score)) = best {
-            if score < local_score || local_full {
-                match self.try_peer(&peers[pi], input, lane, false, cut) {
-                    Ok(rx) => return Ok(rx),
-                    Err(give_back) => input = give_back,
-                }
+        // Walk the ranked routes while they beat local. The admission
+        // check inside `try_peer` is a *different* depth read than the
+        // scoring one above, so the best route can lose a concurrent
+        // admission race it appeared to win — `try_peer` hands the input
+        // back precisely so the caller can try another target. Falling
+        // straight to the local pool here would strand the request on a
+        // badly priced fallback while the next-best finite-estimate
+        // route stands idle.
+        for &(pi, cut, score) in &routes {
+            if score >= local_score && !local_full {
+                break; // local now beats every remaining (sorted) route
+            }
+            match self.try_peer(&peers[pi], input, lane, false, cut) {
+                Ok(rx) => return Ok(rx),
+                Err(give_back) => input = give_back,
             }
         }
 
@@ -685,7 +934,9 @@ impl ShardRouter {
     /// Try one route on one peer: admission against the link's bounded
     /// in-flight window, then enqueue with the route's cut (`0` =
     /// full-remote). Gives the input back on failure so the caller can
-    /// fall through to another target.
+    /// fall through to another target — and both callers do: a probe
+    /// turn re-arms on the next unroutable route, scored dispatch walks
+    /// the remaining ranked routes before settling for local.
     fn try_peer(
         &self,
         slot: &PeerSlot,
@@ -809,12 +1060,117 @@ impl ShardRouter {
                         self.split_readmitted_events.fetch_add(1, Ordering::Relaxed);
                     }
                 }
+
+                // Frontier-window actuation — the transfer-path arm of
+                // the same Fig. 6 loop: seed each link's coalescing
+                // window once from its published profile, then tune it
+                // per tick from the link's frontier-batch lane (window
+                // occupancy) and split EWMA, the AIMD shape the pool
+                // sizer applies to width.
+                if self.cfg.frontier_batch_cap > 1 && p.routable_cut().is_some() {
+                    self.tune_window(p, v);
+                }
             }
             if p.admitted.load(Ordering::Acquire) {
                 admitted += 1;
             }
         }
         admitted
+    }
+
+    /// Seed-then-tune one link's frontier-coalescing window (see the
+    /// module doc's batching section for the Fig. 6 stage mapping).
+    ///
+    /// **Seed** (once, when the transport has published a link profile
+    /// and the split route has a finite latency estimate): the window
+    /// should hold roughly as many requests as *arrive during one round
+    /// trip* — `1 + rtt / compute`, where `compute` is the estimate
+    /// minus the RTT it embeds (floored at a tenth of the estimate).
+    /// Bandwidth enters through the estimate's frontier-bytes term: a
+    /// thin link inflates the estimate, which shrinks the seed. The age
+    /// trigger is half the RTT (waiting longer than the saving), capped
+    /// by `frontier_wait_cap`. A sub-millisecond link seeds at 1 —
+    /// nothing to amortize — and stays unbatched.
+    ///
+    /// **Tune** (every tick after seeding):
+    /// - split EWMA above 80% of the degrade budget → halve the window
+    ///   (multiplicative retreat *before* the split route itself
+    ///   degrades — the window's wait must never be what pushes the
+    ///   lane over);
+    /// - otherwise, difference the link's frontier-batch lane: mean
+    ///   coalesced size over the tick, divided by the current window,
+    ///   is the window occupancy — ≥ 0.75 widens by one (up to the
+    ///   cap), ≤ 0.25 narrows by one;
+    /// - a window fully retreated to 1 records no occupancy at all, so
+    ///   it re-opens to 2 once the split EWMA recovers under the
+    ///   re-admit bar — but only if the seed wanted batching (> 1).
+    fn tune_window(&self, p: &PeerSlot, v: &crate::telemetry::WorkerView) {
+        let cap = self.cfg.frontier_batch_cap;
+        if !p.window_seeded.load(Ordering::Acquire) {
+            let rtt = b2f(p.link_rtt_s.load(Ordering::Relaxed));
+            let est = p.split_estimate_s();
+            // rtt == 0.0 doubles as "no profile published (yet)".
+            if rtt > 0.0 && est.is_finite() && est > 0.0 {
+                let compute = (est - rtt).max(est * 0.1).max(1e-6);
+                let batch = ((1.0 + rtt / compute).round() as usize).clamp(1, cap);
+                let wait = (rtt / 2.0).min(self.cfg.frontier_wait_cap.as_secs_f64());
+                p.window.set(batch, Duration::from_secs_f64(wait));
+                p.window_seed.store(batch, Ordering::Relaxed);
+                p.window_seeded.store(true, Ordering::Release);
+            }
+            return;
+        }
+        let db = v
+            .frontier_batches
+            .saturating_sub(p.last_frontier_batches.swap(v.frontier_batches, Ordering::Relaxed));
+        let dc = v.frontier_coalesced.saturating_sub(
+            p.last_frontier_coalesced.swap(v.frontier_coalesced, Ordering::Relaxed),
+        );
+        let cur = p.window.batch();
+        let split = v.split_ewma_s;
+        let mut next = cur;
+        if split > 0.0 && split > 0.8 * self.cfg.degrade_latency_s {
+            next = (cur / 2).max(1);
+        } else if db > 0 && cur > 1 {
+            let occupancy = dc as f64 / db as f64 / cur as f64;
+            if occupancy >= 0.75 && cur < cap {
+                next = cur + 1;
+            } else if occupancy <= 0.25 {
+                next = cur - 1;
+            }
+        } else if cur == 1
+            && p.window_seed.load(Ordering::Relaxed) > 1
+            && split > 0.0
+            && split < self.cfg.readmit_latency_s
+        {
+            next = 2;
+        }
+        if next != cur {
+            p.window.set_batch(next);
+        }
+    }
+
+    /// Directly set one peer link's frontier-coalescing window: at most
+    /// `batch` split jobs per transfer (clamped to
+    /// `frontier_batch_cap`; ≤ 1 turns coalescing off), shipping early
+    /// once the oldest has waited `wait`. The manual counterpart of the
+    /// seed in [`ShardRouter::maintain`] — for tests, benches, and
+    /// callers with out-of-band link knowledge. Marks the window seeded,
+    /// so `maintain` tunes *from* this setting instead of re-seeding
+    /// over it.
+    pub fn set_frontier_window(&self, peer: usize, batch: usize, wait: Duration) {
+        let peers = self.peers.read().unwrap();
+        let p = &peers[peer];
+        let batch = batch.clamp(1, self.cfg.frontier_batch_cap);
+        p.window.set(batch, wait);
+        p.window_seed.store(batch, Ordering::Relaxed);
+        p.window_seeded.store(true, Ordering::Release);
+    }
+
+    /// Current frontier-coalescing window of one peer link (max split
+    /// jobs per batched transfer; 1 = off).
+    pub fn frontier_window(&self, peer: usize) -> usize {
+        self.peers.read().unwrap()[peer].window.batch()
     }
 
     /// Refresh route priors from a fresh offload plan (Sec. III-B's
@@ -908,6 +1264,9 @@ impl ShardRouter {
                     split_served: p.tel.split_served(),
                     split_measured_s: b2f(p.split_measured_s.load(Ordering::Relaxed)),
                     split_plan_s: b2f(p.split_plan_s.load(Ordering::Relaxed)),
+                    frontier_window: p.window.batch(),
+                    frontier_batches: p.tel.frontier_batches(),
+                    frontier_coalesced: p.tel.frontier_coalesced(),
                 })
                 .collect(),
         }
@@ -1033,23 +1392,156 @@ fn serve_one(
     }
 }
 
+/// Flush one frontier window: run every pending job's `0..cut` prefix,
+/// stack the frontiers, finish the stack with ONE batched remote tail
+/// call, and answer each job from its row of the result. Per-row values
+/// bit-equal one-at-a-time serving (the prefixes run the exact same
+/// per-request `run_segments` calls; the batched tail's contract demands
+/// row-equality) — only the transfer pricing is shared. A singleton
+/// window (the age trigger fired alone) serves through [`serve_one`];
+/// it still counts on the frontier-batch lane, because window occupancy
+/// must see mostly-empty windows to narrow them.
+fn serve_window(
+    ctx: &mut PeerCtx,
+    variant: &str,
+    generation: u64,
+    tel: &WorkerTelemetry,
+    pending: &mut Vec<InferJob>,
+) {
+    if pending.is_empty() {
+        return;
+    }
+    tel.record_frontier_batch(pending.len());
+    if pending.len() == 1 {
+        let job = pending.pop().expect("len == 1");
+        serve_one(ctx, variant, generation, tel, job);
+        return;
+    }
+    let jobs = std::mem::take(pending);
+    let cut = jobs[0].cut;
+    let classes = ctx.transport.num_classes();
+    let started = Instant::now();
+    let mut stacked: Vec<f32> = Vec::new();
+    let mut ok: Vec<InferJob> = Vec::with_capacity(jobs.len());
+    for job in jobs {
+        match ctx.local_half().run_segments(variant, 0, cut, &job.input) {
+            Ok(frontier) => {
+                stacked.extend_from_slice(&frontier);
+                ok.push(job);
+            }
+            Err(e) => {
+                eprintln!("peer {}: split prefix failed: {e:#}", ctx.worker);
+                tel.depth_dec();
+                tel.record_failed(1);
+            }
+        }
+    }
+    if ok.is_empty() {
+        return;
+    }
+    let rows = ok.len();
+    let worker = ctx.worker;
+    let fail_all = |e: String| {
+        eprintln!("peer {worker}: batched split tail failed: {e}");
+        for _ in 0..rows {
+            tel.depth_dec();
+        }
+        tel.record_failed(rows);
+    };
+    match ctx.transport.infer_segments_batch(variant, cut, rows, &stacked) {
+        Ok((probs, transfer_s)) if probs.len() >= rows * classes => {
+            let transfer_s = transfer_s.max(0.0);
+            // Same conventions as `serve_one`: `exec_s` is the wall the
+            // batch actually took plus the analytic transfer — what each
+            // coalesced request waited through, batching-aware, exactly
+            // like a local worker charges its batch wall to every row.
+            let exec_s = started.elapsed().as_secs_f64() + transfer_s;
+            for (i, job) in ok.into_iter().enumerate() {
+                let row = &probs[i * classes..(i + 1) * classes];
+                let (pred, conf) = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+                    .map(|(k, &v)| (k, v))
+                    .unwrap_or((0, 0.0));
+                let latency = job.enqueued.elapsed() + Duration::from_secs_f64(transfer_s);
+                tel.record_split(variant, exec_s, job.lane, latency.as_secs_f64());
+                tel.depth_dec();
+                let _ = job.resp.send(Response {
+                    id: job.id,
+                    pred,
+                    confidence: conf,
+                    variant: variant.to_string(),
+                    generation,
+                    worker: ctx.worker,
+                    lane: job.lane,
+                    latency,
+                });
+            }
+        }
+        Ok((probs, _)) => {
+            fail_all(format!("{} values for {rows} rows of {classes} classes", probs.len()));
+        }
+        Err(e) => fail_all(format!("{e:#}")),
+    }
+}
+
 fn peer_main(
     mut ctx: PeerCtx,
     rx: Receiver<PeerMsg>,
     mut variant: String,
     mut generation: u64,
     tel: Arc<WorkerTelemetry>,
+    window: Arc<FrontierWindow>,
 ) {
-    loop {
-        let msg = match rx.recv() {
-            Ok(m) => m,
-            Err(_) => break, // router gone: drain and exit
+    // Split jobs waiting for their frontier window to close. All hold
+    // the same cut: a cut change mid-stream flushes first.
+    let mut pending: Vec<InferJob> = Vec::new();
+    'main: loop {
+        let msg = if pending.is_empty() {
+            match rx.recv() {
+                Ok(m) => Some(m),
+                Err(_) => break 'main, // router gone: drain and exit
+            }
+        } else {
+            // Block until the window's age trigger, exactly like a pool
+            // worker sleeping until its batcher deadline.
+            let deadline = window.config().window_deadline(pending[0].enqueued);
+            let timeout = deadline.saturating_duration_since(Instant::now());
+            match rx.recv_timeout(timeout) {
+                Ok(m) => Some(m),
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => None,
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break 'main,
+            }
         };
         match msg {
-            PeerMsg::Infer(job) => {
-                serve_one(&mut ctx, &variant, generation, &tel, job);
+            None => serve_window(&mut ctx, &variant, generation, &tel, &mut pending),
+            Some(PeerMsg::Infer(job)) => {
+                let cfg = window.config();
+                if job.cut == 0 || cfg.max_batch <= 1 {
+                    // Full-remote jobs — every priority request among
+                    // them — never wait on a coalescing window (the
+                    // module-doc invariant), and neither does anything
+                    // when the window is off.
+                    serve_one(&mut ctx, &variant, generation, &tel, job);
+                } else {
+                    if pending.first().map(|f| f.cut) == Some(job.cut) || pending.is_empty() {
+                        pending.push(job);
+                    } else {
+                        // A re-seeded cut is a different route: close the
+                        // old cut's window before opening the new one.
+                        serve_window(&mut ctx, &variant, generation, &tel, &mut pending);
+                        pending.push(job);
+                    }
+                    if cfg.window_closes(pending.len(), pending[0].enqueued, Instant::now()) {
+                        serve_window(&mut ctx, &variant, generation, &tel, &mut pending);
+                    }
+                }
             }
-            PeerMsg::Switch { variant: v, generation: g } => {
+            Some(PeerMsg::Switch { variant: v, generation: g }) => {
+                // Jobs already admitted precede the switch in channel
+                // order: flush them under the pre-switch configuration.
+                serve_window(&mut ctx, &variant, generation, &tel, &mut pending);
                 // Same `>=` rationale as the pool workers: an equal-
                 // generation re-application is idempotent, and a peer
                 // attached concurrently with a broadcast may start at the
@@ -1062,10 +1554,12 @@ fn peer_main(
                     }
                 }
             }
-            PeerMsg::Shutdown => break,
+            Some(PeerMsg::Shutdown) => break 'main,
         }
     }
-    // Graceful drain: serve whatever is already queued on the link.
+    // Graceful drain: the open window first, then whatever is already
+    // queued on the link.
+    serve_window(&mut ctx, &variant, generation, &tel, &mut pending);
     while let Ok(msg) = rx.try_recv() {
         if let PeerMsg::Infer(job) = msg {
             serve_one(&mut ctx, &variant, generation, &tel, job);
@@ -1139,13 +1633,17 @@ mod tests {
     /// asynchronously at startup; wait for the seeded split to become
     /// routable before asserting on dispatch.
     fn wait_split_routable(router: &ShardRouter) {
+        wait_splits_routable(router, 1);
+    }
+
+    fn wait_splits_routable(router: &ShardRouter, n: usize) {
         for _ in 0..500 {
-            if router.admitted_splits() == 1 {
+            if router.admitted_splits() == n {
                 return;
             }
             std::thread::sleep(Duration::from_millis(1));
         }
-        panic!("split route never became routable");
+        panic!("split routes never became routable (want {n})");
     }
 
     fn view(worker: usize, remote: bool, ewma_s: f64) -> WorkerView {
@@ -1644,6 +2142,335 @@ mod tests {
         assert_eq!(r.generation, 1);
         let stats = router.shutdown();
         assert_eq!(stats.switches(), 1, "peer slots count the switch like workers do");
+    }
+
+    // ── routing-path bugfix regressions (ISSUE 6) ─────────────────────
+
+    /// Regression: the old probe rotation indexed the unroutable list
+    /// with `(n / probe_every) % len`, and `n` counts *every*
+    /// submission — so a traffic pattern whose non-probing submissions
+    /// (here: a priority request per cycle) absorb the turns of one
+    /// parity locks the formula onto a single index and starves the
+    /// other degraded route of probes forever. The dedicated cursor
+    /// advances once per actual probe turn, reaching every route.
+    #[test]
+    fn probe_rotation_reaches_every_degraded_route() {
+        let router = ShardRouter::new(
+            local_pool(1, 100, 1024),
+            ShardRouterConfig { probe_every: 2, ..ShardRouterConfig::default() },
+        );
+        router.add_simulated_peer("edge-a", peer_exec(100), SharedLink::new(800.0, 0.1), 0.001);
+        router.add_simulated_peer("edge-b", peer_exec(100), SharedLink::new(800.0, 0.1), 0.001);
+        // Degrade both: every probe turn sees the unroutable list [a, b].
+        router.maintain(&snap_with(vec![
+            view(REMOTE_WORKER_BASE, true, 0.500),
+            view(REMOTE_WORKER_BASE + 1, true, 0.500),
+        ]));
+        assert_eq!(router.admitted_peers(), 0);
+
+        // The starvation pattern: per 4-submission cycle [N, N, P, N],
+        // the priority request lands on every odd probe turn (n ≡ 2 mod
+        // 4), so the old formula only ever probed `(even) % 2 == 0` —
+        // edge-a — no matter how long traffic ran.
+        let mut rxs = Vec::new();
+        for _ in 0..8 {
+            rxs.push(router.submit(vec![1.0; 16]).unwrap()); // n ≡ 0: probe turn
+            rxs.push(router.submit(vec![1.0; 16]).unwrap()); // n ≡ 1: local
+            rxs.push(router.submit_priority(vec![1.0; 16]).unwrap()); // n ≡ 2: never probes
+            rxs.push(router.submit(vec![1.0; 16]).unwrap()); // n ≡ 3: local
+        }
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        }
+        let stats = router.shard_stats();
+        assert!(stats.peers[0].probes >= 1, "first degraded route keeps probing: {stats:?}");
+        assert!(
+            stats.peers[1].probes >= 1,
+            "second degraded route must not be starved of probes: {stats:?}"
+        );
+        router.shutdown();
+    }
+
+    /// Regression: a probe turn whose target loses the `try_peer`
+    /// admission race used to consume the whole `probe_every` slot — the
+    /// probe was silently dropped and the degraded route waited a full
+    /// extra cadence. The turn now re-arms on the next unroutable route.
+    #[test]
+    fn probe_turn_rearms_on_admission_failure() {
+        let router = ShardRouter::new(
+            local_pool(1, 100, 1024),
+            ShardRouterConfig {
+                probe_every: 4,
+                peer_capacity: 1,
+                ..ShardRouterConfig::default()
+            },
+        );
+        // edge-a serves its probe in ~1.5 s: its single in-flight slot
+        // stays occupied across every later probe turn of this test.
+        router.add_simulated_peer(
+            "edge-a",
+            peer_exec(1_500_000),
+            SharedLink::new(800.0, 0.1),
+            0.001,
+        );
+        router.add_simulated_peer("edge-b", peer_exec(100), SharedLink::new(800.0, 0.1), 0.001);
+        router.maintain(&snap_with(vec![
+            view(REMOTE_WORKER_BASE, true, 0.500),
+            view(REMOTE_WORKER_BASE + 1, true, 0.500),
+        ]));
+        assert_eq!(router.admitted_peers(), 0);
+
+        let mut rxs = Vec::new();
+        let mut burst = |rxs: &mut Vec<_>| {
+            for _ in 0..4 {
+                rxs.push(router.submit(vec![1.0; 16]).unwrap());
+            }
+        };
+        burst(&mut rxs); // probe turn 1 (cursor 0) → edge-a, in flight for 1.5 s
+        std::thread::sleep(Duration::from_millis(50));
+        burst(&mut rxs); // probe turn 2 (cursor 1) → edge-b, drains fast
+        std::thread::sleep(Duration::from_millis(50));
+        // Probe turn 3 (cursor 2) → edge-a again — but its slot is still
+        // occupied, so `try_peer` refuses admission. The turn must fall
+        // through to edge-b instead of dropping the probe.
+        burst(&mut rxs);
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        }
+        let stats = router.shard_stats();
+        assert_eq!(stats.peers[0].probes, 1, "edge-a got exactly the first probe: {stats:?}");
+        assert_eq!(
+            stats.peers[1].probes, 2,
+            "the blocked third turn must re-arm onto edge-b: {stats:?}"
+        );
+        router.shutdown();
+    }
+
+    /// Regression: when the best-scored route lost its `try_peer`
+    /// admission race (the scoring depth read and the admission depth
+    /// increment are separate, so a concurrent submission can take the
+    /// last slot in between), dispatch fell straight through to the
+    /// local pool even though a second admitted route with a finite
+    /// estimate stood idle. Two racing submitters through a capacity-1
+    /// best peer must land one request on the best route and one on the
+    /// runner-up — never on the (badly priced) local pool, under ANY
+    /// interleaving.
+    #[test]
+    fn admission_race_loser_retries_next_best_route() {
+        let router = Arc::new(ShardRouter::new(
+            local_pool(1, 100, 1024),
+            ShardRouterConfig {
+                probe_every: 0,
+                peer_capacity: 1,
+                local_prior_s: 10.0, // local must never win while a route is free
+                ..ShardRouterConfig::default()
+            },
+        ));
+        router.add_simulated_peer("best", peer_exec(100), SharedLink::new(800.0, 0.1), 0.001);
+        router.add_simulated_peer("backup", peer_exec(100), SharedLink::new(800.0, 0.1), 0.002);
+
+        for round in 0..100 {
+            let barrier = Arc::new(std::sync::Barrier::new(2));
+            let handles: Vec<_> = (0..2)
+                .map(|_| {
+                    let r = Arc::clone(&router);
+                    let b = Arc::clone(&barrier);
+                    std::thread::spawn(move || {
+                        b.wait();
+                        let rx = r.submit(vec![1.0; 16]).unwrap();
+                        rx.recv_timeout(Duration::from_secs(5)).unwrap()
+                    })
+                })
+                .collect();
+            for h in handles {
+                let resp = h.join().unwrap();
+                assert!(resp.worker >= REMOTE_WORKER_BASE, "round {round} served locally");
+            }
+            // Both responses received → both depth_dec done: the next
+            // round starts with both peers idle again.
+            let stats = router.shard_stats();
+            assert_eq!(
+                stats.routed_local, 0,
+                "round {round}: an admission-race loser must retry the next-best \
+                 route, not fall through to local: {stats:?}"
+            );
+        }
+        let stats = router.shard_stats();
+        assert_eq!(stats.routed_remote(), 200, "every submission found a peer route");
+        Arc::try_unwrap(router).ok().expect("all submitters joined").shutdown();
+    }
+
+    // ── peer-link frontier batching (ISSUE 6 tentpole) ────────────────
+
+    /// Coalescing must not change a single bit: the batched entry point
+    /// runs the same per-row remote tail as per-request serving, so only
+    /// the transfer pricing differs — one round trip for the stack
+    /// instead of one per request.
+    #[test]
+    fn batched_segments_bit_equal_per_request() {
+        let link = SharedLink::new(8.0, 20.0); // 20 ms RTT: round trips dominate
+        let make = seg_exec(100, 100);
+        let mut single = SimulatedPeer::new(make(), link.clone());
+        let mut batched = SimulatedPeer::new(make(), link.clone());
+        let mut prefix = make();
+        let mut stacked = Vec::new();
+        let mut rows = Vec::new();
+        for i in 0..6 {
+            let mut input = vec![0.0f32; 64];
+            input[i % 4] = 2.5 + i as f32 * 0.25;
+            let f = prefix.run_segments("v", 0, 1, &input).unwrap();
+            stacked.extend_from_slice(&f);
+            rows.push(f);
+        }
+        let mut singles = Vec::new();
+        let mut single_transfer = 0.0;
+        for f in &rows {
+            let (p, t) = single.infer_segments("v", 1, f).unwrap();
+            singles.extend(p);
+            single_transfer += t;
+        }
+        let (batch_probs, batch_transfer) =
+            batched.infer_segments_batch("v", 1, 6, &stacked).unwrap();
+        assert_eq!(batch_probs, singles, "coalescing must not change any value");
+        assert!(
+            batch_transfer < single_transfer / 3.0,
+            "one transfer for the stack must amortize six per-request round trips: \
+             {batch_transfer} vs {single_transfer}"
+        );
+    }
+
+    /// End to end through the router: with the window open, a burst of
+    /// split submissions coalesces (the link's frontier-batch lane
+    /// records multi-request windows) and every response is
+    /// bit-identical to what the whole chain computes for that input.
+    #[test]
+    fn coalesced_window_serves_bit_identical_responses() {
+        let router = ShardRouter::new(
+            seg_pool(1, 100, 100, 64),
+            ShardRouterConfig {
+                probe_every: 0,
+                local_prior_s: 1.0, // split route wins every pick
+                ..ShardRouterConfig::default()
+            },
+        );
+        router.add_simulated_peer("edge", seg_exec(100, 100), SharedLink::new(800.0, 0.1), 0.5);
+        router.seed_split(0, 1, 0.001);
+        wait_split_routable(&router);
+        router.set_frontier_window(0, 4, Duration::from_millis(20));
+
+        let inputs: Vec<Vec<f32>> = (0..8)
+            .map(|i| {
+                let mut v = vec![0.0f32; 64];
+                v[i % 4] = 2.0 + i as f32 * 0.5;
+                v
+            })
+            .collect();
+        let rxs: Vec<_> = inputs.iter().map(|v| router.submit(v.clone()).unwrap()).collect();
+        let mut reference = seg_exec(100, 100)();
+        for (input, rx) in inputs.iter().zip(rxs) {
+            let r = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            assert!(r.worker >= REMOTE_WORKER_BASE, "burst must ride the split route");
+            let probs = reference.run_segments("v", 0, 2, input).unwrap();
+            let (pred, conf) = probs
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(k, &v)| (k, v))
+                .unwrap();
+            assert_eq!(r.pred, pred, "batched serving must match the whole chain");
+            assert_eq!(
+                r.confidence.to_bits(),
+                conf.to_bits(),
+                "batched confidence must be bit-identical to per-request serving"
+            );
+        }
+        let stats = router.shard_stats();
+        let p = &stats.peers[0];
+        assert_eq!(p.frontier_coalesced, 8, "every split job rode a window: {stats:?}");
+        assert!(
+            p.frontier_batches < 8,
+            "at least one window must have coalesced >1 request: {stats:?}"
+        );
+        assert_eq!(p.frontier_window, 4, "manual window survives serving");
+        let tel = router.telemetry_snapshot();
+        assert_eq!(tel.frontier_coalesced, 8, "hub totals carry the frontier-batch lane");
+        router.shutdown();
+    }
+
+    /// `maintain` seeds each link's window from its published profile +
+    /// split estimate: a high-RTT link opens a wide window (round trips
+    /// are worth amortizing), a sub-millisecond link stays unbatched.
+    #[test]
+    fn maintain_seeds_link_aware_windows() {
+        let router = ShardRouter::new(
+            seg_pool(1, 100, 100, 64),
+            ShardRouterConfig { probe_every: 0, ..ShardRouterConfig::default() },
+        );
+        // 40 ms RTT against ~2 ms of estimated compute → the seed slams
+        // into the cap.
+        router.add_simulated_peer("slow-link", seg_exec(100, 100), SharedLink::new(8.0, 40.0), 0.5);
+        // 0.1 ms RTT: nothing to amortize → seeds (and stays) at 1.
+        router.add_simulated_peer(
+            "fast-link",
+            seg_exec(100, 100),
+            SharedLink::new(800.0, 0.1),
+            0.5,
+        );
+        router.seed_split(0, 1, 0.042);
+        router.seed_split(1, 1, 0.002);
+        wait_splits_routable(&router, 2);
+        assert_eq!(router.frontier_window(0), 1, "window closed before seeding");
+        router.maintain(&snap_with(vec![
+            view(REMOTE_WORKER_BASE, true, 0.0),
+            view(REMOTE_WORKER_BASE + 1, true, 0.0),
+        ]));
+        assert_eq!(router.frontier_window(0), 8, "40 ms of RTT per round trip caps the window");
+        assert_eq!(router.frontier_window(1), 1, "a fast link never batches");
+        router.shutdown();
+    }
+
+    /// The closed loop on a seeded window: high occupancy widens it
+    /// (additive), mostly-empty windows narrow it, a split EWMA near the
+    /// degrade budget halves it, and a fully retreated window re-opens
+    /// once the lane recovers under the re-admit bar.
+    #[test]
+    fn maintain_tunes_window_from_occupancy_and_drift() {
+        let router = ShardRouter::new(
+            seg_pool(1, 100, 100, 64),
+            ShardRouterConfig { probe_every: 0, ..ShardRouterConfig::default() },
+        );
+        router.add_simulated_peer("edge", seg_exec(100, 100), SharedLink::new(800.0, 0.1), 0.5);
+        router.seed_split(0, 1, 0.001);
+        wait_split_routable(&router);
+        router.set_frontier_window(0, 4, Duration::from_millis(2));
+
+        let mk = |batches: usize, coalesced: usize, split_ewma: f64| {
+            let mut v = view(REMOTE_WORKER_BASE, true, 0.004);
+            v.split_ewma_s = split_ewma;
+            v.frontier_batches = batches;
+            v.frontier_coalesced = coalesced;
+            snap_with(vec![v])
+        };
+        // 3 windows carrying 12 requests → mean 4.0 over window 4 →
+        // occupancy 1.0 → widen.
+        router.maintain(&mk(3, 12, 0.004));
+        assert_eq!(router.frontier_window(0), 5, "full windows widen additively");
+        // Next tick: 5 more windows, 5 requests → mean 1.0, occupancy
+        // 0.2 → narrow.
+        router.maintain(&mk(8, 17, 0.004));
+        assert_eq!(router.frontier_window(0), 4, "empty windows narrow additively");
+        // Split EWMA at 90% of the degrade budget (0.050 default):
+        // multiplicative retreat, twice → fully closed.
+        router.maintain(&mk(8, 17, 0.045));
+        assert_eq!(router.frontier_window(0), 2, "near-budget split halves the window");
+        router.maintain(&mk(8, 17, 0.045));
+        assert_eq!(router.frontier_window(0), 1, "and halves it again to fully closed");
+        // Recovery under the re-admit bar (0.040 default) re-opens the
+        // retreated window — a closed window records no occupancy, so
+        // nothing else could.
+        router.maintain(&mk(8, 17, 0.004));
+        assert_eq!(router.frontier_window(0), 2, "healthy split re-opens the window");
+        router.shutdown();
     }
 
     #[test]

@@ -57,7 +57,12 @@ pub trait Actuator {
     /// Reconcile cross-device shard admission from measured telemetry
     /// (degrade peer links whose measured latency drifted past budget,
     /// re-admit recovered ones); returns the number of admitted remote
-    /// peers. Local-only actuators keep the no-op default.
+    /// peers. The shard router's implementation also tunes each peer
+    /// link's **frontier-coalescing window** on the same tick — seeded
+    /// from the link profile, then widened/narrowed from the link's
+    /// `frontier_batch` telemetry lane and split EWMA — so transfer
+    /// batching rides the identical Fig. 6 measure→decide→act cadence
+    /// as admission. Local-only actuators keep the no-op default.
     fn set_shards(&self, tel: &TelemetrySnapshot) -> usize {
         let _ = tel;
         0
@@ -409,8 +414,10 @@ impl AdaptLoop {
     /// [`Actuator::set_workers`], and finally reconcile cross-device
     /// shard admission through [`Actuator::set_shards`] — peer links
     /// whose *measured* latency drifted past budget degrade to
-    /// local-only, recovered ones re-admit. This is the Fig. 6
-    /// Observe→Decide→Act cycle with all three actuation arms live.
+    /// local-only, recovered ones re-admit, and each link's
+    /// frontier-coalescing window is retuned from the same snapshot.
+    /// This is the Fig. 6 Observe→Decide→Act cycle with all three
+    /// actuation arms live.
     pub fn tick_with_telemetry(
         &mut self,
         snap: &ResourceSnapshot,

@@ -275,4 +275,29 @@ mod tests {
         let probs = c.run_range(0, pp.n_segments(), &input).unwrap();
         assert_eq!(probs.len(), 100);
     }
+
+    /// Frontier coalescing on a peer link stacks several requests'
+    /// boundary frontiers and runs the remote tail row by row — the
+    /// chain is deterministic per row, so the stacked serving order must
+    /// reproduce each single-request tail bit for bit.
+    #[test]
+    fn stacked_tail_rows_bit_equal_single_requests() {
+        let c = chain();
+        let width = c.frontier(1);
+        let mut stacked = Vec::new();
+        let mut singles = Vec::new();
+        for i in 0..5 {
+            let mut input = vec![0.0f32; 64];
+            input[i % 4] = 1.5 + i as f32 * 0.75;
+            let frontier = c.run_range(0, 1, &input).unwrap();
+            assert_eq!(frontier.len(), width);
+            singles.extend(c.run_range(1, 2, &frontier).unwrap());
+            stacked.extend(frontier);
+        }
+        let mut batched = Vec::new();
+        for row in stacked.chunks_exact(width) {
+            batched.extend(c.run_range(1, 2, row).unwrap());
+        }
+        assert_eq!(batched, singles, "stacked tails must bit-equal one-at-a-time serving");
+    }
 }

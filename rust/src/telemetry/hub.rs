@@ -107,6 +107,15 @@ pub struct WorkerTelemetry {
     /// (the split lane drifted past budget while full-remote routing may
     /// have stayed healthy).
     split_degraded: Counter,
+    /// Frontier-batch windows this peer link closed: each is one
+    /// coalesced transfer of split-routed frontiers (a singleton window
+    /// that aged out counts too — window occupancy must see it). Zero on
+    /// local worker slots and on links with the window off.
+    frontier_batches: Counter,
+    /// Split requests that rode those windows. `frontier_coalesced /
+    /// frontier_batches` is the mean coalesced size the shard router's
+    /// window tuning differences per tick.
+    frontier_coalesced: Counter,
     queue_depth: Gauge,
     /// Whether the worker is currently inside a batch execution — the
     /// steal registry's "is the victim actually wedged?" gate (an idle
@@ -154,6 +163,8 @@ impl WorkerTelemetry {
             stolen_from: Counter::new(),
             split_served: Counter::new(),
             split_degraded: Counter::new(),
+            frontier_batches: Counter::new(),
+            frontier_coalesced: Counter::new(),
             queue_depth: Gauge::new(),
             executing: AtomicBool::new(false),
             latency: [
@@ -234,6 +245,16 @@ impl WorkerTelemetry {
     /// A split-route degrade event was charged to this link.
     pub fn record_split_degraded(&self) {
         self.split_degraded.inc();
+    }
+
+    /// One frontier-batch window closed on this peer link, coalescing
+    /// `coalesced` split requests into a single transfer. The per-request
+    /// outcomes still go through [`WorkerTelemetry::record_split`]; this
+    /// lane only carries the window-shape signal (count + occupancy) the
+    /// shard router's link-aware window tuning consumes.
+    pub fn record_frontier_batch(&self, coalesced: usize) {
+        self.frontier_batches.inc();
+        self.frontier_coalesced.add(coalesced);
     }
 
     pub fn record_rejected(&self) {
@@ -377,6 +398,14 @@ impl WorkerTelemetry {
         self.split_degraded.get()
     }
 
+    pub fn frontier_batches(&self) -> usize {
+        self.frontier_batches.get()
+    }
+
+    pub fn frontier_coalesced(&self) -> usize {
+        self.frontier_coalesced.get()
+    }
+
     /// Clone of this worker's retained latency window for one lane.
     pub fn lane_reservoir(&self, lane: Lane) -> Reservoir {
         self.latency[lane.index()].lock().unwrap().clone()
@@ -437,6 +466,12 @@ pub struct WorkerView {
     pub split_served: usize,
     /// Split-route degrade events charged to this link.
     pub split_degraded: usize,
+    /// Frontier-batch windows closed on this peer link (coalesced
+    /// transfers of split-routed frontiers; singleton windows included).
+    pub frontier_batches: usize,
+    /// Split requests those windows carried — the numerator of the mean
+    /// coalesced size / window occupancy the router tunes from.
+    pub frontier_coalesced: usize,
     pub queue_depth: usize,
     pub p50_s: f64,
     pub p95_s: f64,
@@ -482,6 +517,10 @@ pub struct TelemetrySnapshot {
     pub split_served: usize,
     /// Split-route degrade events across all peer links.
     pub split_degraded: usize,
+    /// Frontier-batch windows closed across all peer links.
+    pub frontier_batches: usize,
+    /// Split requests coalesced into those windows.
+    pub frontier_coalesced: usize,
     pub lanes: [LaneView; LANES],
     pub per_worker: Vec<WorkerView>,
     pub per_variant: BTreeMap<String, VariantView>,
@@ -508,6 +547,8 @@ impl Default for TelemetrySnapshot {
             steals: 0,
             split_served: 0,
             split_degraded: 0,
+            frontier_batches: 0,
+            frontier_coalesced: 0,
             lanes: [LaneView::default(), LaneView::default()],
             per_worker: Vec::new(),
             per_variant: BTreeMap::new(),
@@ -621,6 +662,8 @@ impl TelemetryHub {
                 stolen_from: s.stolen_from(),
                 split_served: s.split_served(),
                 split_degraded: s.split_degraded(),
+                frontier_batches: s.frontier_batches(),
+                frontier_coalesced: s.frontier_coalesced(),
                 queue_depth: depth,
                 p50_s: wp[0],
                 p95_s: wp[1],
@@ -636,6 +679,8 @@ impl TelemetryHub {
             snap.steals += s.steals();
             snap.split_served += s.split_served();
             snap.split_degraded += s.split_degraded();
+            snap.frontier_batches += s.frontier_batches();
+            snap.frontier_coalesced += s.frontier_coalesced();
             if !retired {
                 if s.is_remote() {
                     snap.remote_peers += 1;
@@ -869,6 +914,32 @@ mod tests {
         w.record_batch("v", 0.004, &[(Lane::Normal, 0.004)]);
         assert_eq!(w.split_served(), 0);
         assert_eq!(w.split_latency_ewma_s(), 0.0);
+    }
+
+    /// The frontier-batch lane is pure window-shape signal: it flows to
+    /// the per-link view and the snapshot totals without touching the
+    /// served/latency accounting (requests in a window still publish
+    /// through `record_split`).
+    #[test]
+    fn frontier_batch_lane_carries_window_shape_only() {
+        let hub = TelemetryHub::new(8);
+        let p = hub.register_remote(1 << 16);
+        p.record_frontier_batch(3);
+        p.record_frontier_batch(1); // aged-out singleton window counts
+        assert_eq!(p.frontier_batches(), 2);
+        assert_eq!(p.frontier_coalesced(), 4);
+
+        let snap = hub.snapshot();
+        assert_eq!(snap.frontier_batches, 2);
+        assert_eq!(snap.frontier_coalesced, 4);
+        assert_eq!(snap.served, 0, "window shape must not count as served traffic");
+        let pv = snap.per_worker.iter().find(|v| v.remote).unwrap();
+        assert_eq!(pv.frontier_batches, 2);
+        assert_eq!(pv.frontier_coalesced, 4);
+        // Local slots never close frontier windows: their lane stays zero.
+        let w = hub.register(0);
+        assert_eq!(w.frontier_batches(), 0);
+        assert_eq!(w.frontier_coalesced(), 0);
     }
 
     #[test]

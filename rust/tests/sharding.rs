@@ -121,6 +121,7 @@ fn degrading_link_sheds_to_local_and_reoffloads_on_recovery() {
             readmit_latency_s: 0.010,
             probe_every: 2,
             local_prior_s: 0.008,
+            ..ShardRouterConfig::default()
         },
     );
     router.add_simulated_peer(
@@ -303,6 +304,7 @@ fn split_router(link: SharedLink) -> ShardRouter {
             readmit_latency_s: 0.012,
             probe_every: 4,
             local_prior_s: 0.008,
+            ..ShardRouterConfig::default()
         },
     );
     // Peer runs both segments in 1 ms each; the plan prior is infinite

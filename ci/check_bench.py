@@ -3,7 +3,7 @@
 
 Compares a fresh bench JSON against its committed baseline and fails
 when any entry's p95 latency regressed by more than the allowed
-fraction (default 20%). Two schemas are understood, auto-detected per
+fraction (default 20%). Three schemas are understood, auto-detected per
 file:
 
   serving (`BENCH_serving.json` vs `ci/BENCH_baseline.json`):
@@ -20,6 +20,14 @@ file:
                   "p95_ms": ...}, ...],
      "split": {"requests": N, "req_per_s": R, "split_share": ...,
                "p95_ms": ...}}
+
+  hotpath (`BENCH_hotpath.json` vs `ci/BENCH_hotpath_baseline.json`)
+  — string-keyed scenarios:
+
+    {"bench": "hotpath",
+     "scenarios": [{"name": "submit_unique", "req_per_s": R,
+                    "p95_ms": ...}, ...],
+     "cache": {"hits": ..., "coalesced": ..., "served": ...}}
 
 Additive top-level keys (`skewed`, `split`, `best`, ...) are ignored:
 the gate reads only the primary entry array, so recording a new
@@ -40,8 +48,10 @@ import argparse
 import json
 import sys
 
-# (array key, per-entry id field) — tried in order, first match wins.
-SCHEMAS = [("widths", "workers"), ("configs", "peers")]
+# (array key, per-entry id field, id coercion) — tried in order, first
+# match wins. Ids are coerced so 8 and 8.0 pair up in numeric schemas
+# while the hotpath scenarios stay string-keyed.
+SCHEMAS = [("widths", "workers", int), ("configs", "peers", int), ("scenarios", "name", str)]
 
 
 def load(path):
@@ -55,19 +65,19 @@ def load(path):
 
 def entries(doc, path):
     """Map entry-id -> entry for the first recognised schema in doc."""
-    for key, id_field in SCHEMAS:
+    for key, id_field, coerce in SCHEMAS:
         arr = doc.get(key)
         if not isinstance(arr, list) or not arr:
             continue
         out = {}
         for e in arr:
             try:
-                out[int(e[id_field])] = e
+                out[coerce(e[id_field])] = e
             except (KeyError, TypeError, ValueError):
                 print(f"error: malformed '{key}' entry in {path}: {e}", file=sys.stderr)
                 sys.exit(1)
         return out, id_field
-    known = " or ".join(f"'{k}'" for k, _ in SCHEMAS)
+    known = " or ".join(f"'{k}'" for k, _, _ in SCHEMAS)
     print(f"error: {path} has no {known} array", file=sys.stderr)
     sys.exit(1)
 
@@ -142,7 +152,9 @@ def compare(cur_doc, base_doc, max_p95_regression, cur_name="current", base_name
 
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("current", help="fresh bench JSON (BENCH_serving / BENCH_sharding)")
+    ap.add_argument(
+        "current", help="fresh bench JSON (BENCH_serving / BENCH_sharding / BENCH_hotpath)"
+    )
     ap.add_argument("baseline", help="committed baseline JSON")
     ap.add_argument(
         "--max-p95-regression",

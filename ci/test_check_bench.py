@@ -40,6 +40,20 @@ def sharding_doc(p95_by_peers, split_p95=None):
     return doc
 
 
+def hotpath_doc(p95_by_name, cache=None):
+    doc = {
+        "bench": "hotpath",
+        "requests": 256,
+        "scenarios": [
+            {"name": n, "req_per_s": 2000.0, "p95_ms": p95} for n, p95 in p95_by_name.items()
+        ],
+    }
+    if cache is not None:
+        # Schema-additive key the gate must ignore.
+        doc["cache"] = cache
+    return doc
+
+
 class RegressionMathTest(unittest.TestCase):
     def test_within_budget_passes(self):
         base = serving_doc({1: 100.0, 2: 50.0})
@@ -150,6 +164,49 @@ class ShardingSchemaTest(unittest.TestCase):
         cur = copy.deepcopy(base)
         cur["configs"] = [{"peers": 0, "p95_ms": 99999.0}]
         self.assertTrue(check_bench.compare(cur, base, 0.20))
+
+
+class HotpathSchemaTest(unittest.TestCase):
+    def test_scenarios_keyed_by_name_gate(self):
+        base = hotpath_doc({"submit_unique": 100.0, "submit_hot_cached": 40.0})
+        ok = hotpath_doc({"submit_unique": 110.0, "submit_hot_cached": 44.0})  # +10%
+        self.assertTrue(check_bench.compare(ok, base, 0.20))
+        bad = hotpath_doc({"submit_unique": 100.0, "submit_hot_cached": 61.0})  # +52%
+        self.assertFalse(check_bench.compare(bad, base, 0.20))
+
+    def test_string_ids_pair_exactly(self):
+        # String ids must pair by exact name — a renamed scenario is the
+        # first-run case (warn + pass), not a silent cross-comparison.
+        base = hotpath_doc({"submit_unique": 100.0})
+        cur = hotpath_doc({"submit_unique_v2": 99999.0})
+        self.assertTrue(check_bench.compare(cur, base, 0.20))
+
+    def test_partially_shared_scenarios_gate_the_overlap(self):
+        base = hotpath_doc({"submit_unique": 100.0, "submit_hot_cached": 40.0})
+        cur = hotpath_doc({"submit_unique": 300.0, "brand_new": 5.0})  # shared one: 3x
+        self.assertFalse(check_bench.compare(cur, base, 0.20))
+
+    def test_additive_cache_and_micro_keys_are_ignored(self):
+        base = hotpath_doc({"submit_unique": 100.0})
+        cur = hotpath_doc(
+            {"submit_unique": 100.0},
+            cache={"served": 1, "hits": 200, "coalesced": 55},
+        )
+        cur["micro"] = {"batcher_8_us": 99999.0}
+        self.assertTrue(check_bench.compare(cur, base, 0.20))
+
+    def test_missing_name_field_exits(self):
+        doc = {"scenarios": [{"p95_ms": 1.0}]}  # no 'name' id
+        with self.assertRaises(SystemExit) as ctx:
+            check_bench.compare(doc, hotpath_doc({"submit_unique": 1.0}), 0.2)
+        self.assertEqual(ctx.exception.code, 1)
+
+    def test_cross_schema_pairing_with_serving_fails_fast(self):
+        cur = hotpath_doc({"submit_unique": 100.0})
+        base = serving_doc({1: 100.0})
+        with self.assertRaises(SystemExit) as ctx:
+            check_bench.compare(cur, base, 0.20)
+        self.assertEqual(ctx.exception.code, 1)
 
 
 if __name__ == "__main__":

@@ -9,11 +9,38 @@
 //!   offload   — pre-partition + DP offload planning
 //!   tick      — one full adaptation-loop tick (4-candidate front)
 //!   batcher   — push+pop of an 8-request batch
+//!
+//! Plus two end-to-end *submit-path* scenarios through a live pool:
+//!
+//!   submit_unique     — a burst of all-distinct inputs (the zero-copy
+//!                       admission + per-worker padding-scratch path)
+//!   submit_hot_cached — a burst of *identical* inputs against the
+//!                       single-flight response cache: the whole burst
+//!                       collapses onto ~one inference, every other
+//!                       caller answered by a hit or an in-flight join
+//!
+//! The run emits `BENCH_hotpath.json` so the submit-path trajectory is
+//! machine-readable across PRs (gated by `ci/check_bench.py` against
+//! `ci/BENCH_hotpath_baseline.json`; the string-keyed `scenarios` array
+//! is the gated entry set, `cache` and `micro` are additive):
+//!
+//! ```json
+//! {"bench":"hotpath","requests":256,
+//!  "scenarios":[{"name":"submit_unique","req_per_s":...,"p95_ms":...},
+//!               {"name":"submit_hot_cached","req_per_s":...,"p95_ms":...}],
+//!  "cache":{"served":...,"hits":...,"coalesced":...},
+//!  "micro":{"batcher_8_us":..., ...}}
+//! ```
+//!
+//! Run: `cargo bench --bench hotpath`
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
+use anyhow::Result;
 use crowdhmtware::compress::{OperatorKind, VariantSpec};
-use crowdhmtware::coordinator::{Batcher, BatcherConfig, Request};
+use crowdhmtware::coordinator::{
+    Batcher, BatcherConfig, CacheConfig, Executor, PoolConfig, Request, ServingPool,
+};
 use crowdhmtware::device::{device, ResourceMonitor};
 use crowdhmtware::engine::{allocate, fuse, EngineConfig, FusionConfig};
 use crowdhmtware::graph::CostProfile;
@@ -21,8 +48,9 @@ use crowdhmtware::models::{resnet18, ResNetStyle};
 use crowdhmtware::optimizer::{AdaptLoop, Budgets, Candidate};
 use crowdhmtware::partition::{plan_offload, prepartition, DeviceState, Topology};
 use crowdhmtware::profiler::{estimate_energy, estimate_latency};
+use crowdhmtware::util::Json;
 
-fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
     // Warmup.
     for _ in 0..3 {
         f();
@@ -38,6 +66,134 @@ fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
     samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let med = samples[2];
     println!("{name:<22} {:>12.1} µs/iter  ({iters} iters, median of 5)", med * 1e6);
+    med
+}
+
+// ── submit-path scenarios ──────────────────────────────────────────────
+
+const CLASSES: usize = 4;
+const ELEMS: usize = 16;
+const SUBMIT_REQUESTS: usize = 256;
+const BATCH_DELAY: Duration = Duration::from_millis(2);
+
+struct BenchExec;
+
+impl Executor for BenchExec {
+    fn batch_sizes(&self, _v: &str) -> Vec<usize> {
+        vec![1, 4, 8]
+    }
+
+    fn num_classes(&self) -> usize {
+        CLASSES
+    }
+
+    fn input_elems(&self) -> usize {
+        ELEMS
+    }
+
+    fn run(&mut self, _v: &str, batch: usize, _input: &[f32]) -> Result<Vec<f32>> {
+        std::thread::sleep(BATCH_DELAY);
+        Ok(vec![1.0 / CLASSES as f32; batch * CLASSES])
+    }
+}
+
+struct Scenario {
+    name: &'static str,
+    req_per_s: f64,
+    p95_ms: f64,
+}
+
+struct CacheCounters {
+    served: usize,
+    hits: usize,
+    coalesced: usize,
+}
+
+fn submit_pool(cache: CacheConfig) -> ServingPool {
+    ServingPool::spawn(
+        |_| Box::new(BenchExec) as Box<dyn Executor>,
+        "v",
+        PoolConfig {
+            workers: 2,
+            queue_capacity: SUBMIT_REQUESTS,
+            batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_micros(500) },
+            cache,
+            ..PoolConfig::default()
+        },
+    )
+}
+
+/// A burst of all-distinct inputs: measures the zero-copy admission and
+/// per-worker padding-scratch path with no cache interference.
+fn run_submit_unique() -> Scenario {
+    let pool = submit_pool(CacheConfig::default());
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..SUBMIT_REQUESTS)
+        .map(|i| {
+            let mut input = vec![0.0f32; ELEMS];
+            input[0] = i as f32; // every request a distinct buffer
+            pool.submit(input).expect("capacity sized to the run")
+        })
+        .collect();
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(60)).expect("response");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = pool.shutdown();
+    assert_eq!(stats.served(), SUBMIT_REQUESTS);
+    let p95 = stats.merged().percentiles(&[0.95])[0];
+    Scenario {
+        name: "submit_unique",
+        req_per_s: SUBMIT_REQUESTS as f64 / wall,
+        p95_ms: p95 * 1e3,
+    }
+}
+
+/// A burst of *identical* inputs against the single-flight cache: one
+/// leader pays the inference, concurrent identical submissions join its
+/// flight, later ones hit the completed entry — N callers, ~1 batch.
+fn run_submit_hot_cached() -> (Scenario, CacheCounters) {
+    let pool = submit_pool(CacheConfig { enabled: true, capacity: 64 });
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..SUBMIT_REQUESTS)
+        .map(|_| pool.submit(vec![0.5f32; ELEMS]).expect("capacity sized to the run"))
+        .collect();
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(60)).expect("response");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = pool.telemetry_snapshot();
+    let stats = pool.shutdown();
+    // The acceptance bar for the cache: repeated identical inputs cost
+    // ~one inference for the whole burst, with the other callers
+    // accounted as hits or in-flight joins.
+    assert!(
+        stats.served() < SUBMIT_REQUESTS / 8,
+        "hot-input burst must collapse: served {} of {}",
+        stats.served(),
+        SUBMIT_REQUESTS
+    );
+    assert_eq!(
+        snap.cache_hits + snap.cache_inflight_coalesced + stats.served(),
+        SUBMIT_REQUESTS,
+        "every caller is a leader, a hit, or a join"
+    );
+    // Latency percentiles only sample executed requests; cached callers
+    // return without touching a worker, so report wall-derived p95 as 0
+    // only if nothing executed (never: the leader always runs).
+    let p95 = stats.merged().percentiles(&[0.95])[0];
+    (
+        Scenario {
+            name: "submit_hot_cached",
+            req_per_s: SUBMIT_REQUESTS as f64 / wall,
+            p95_ms: p95 * 1e3,
+        },
+        CacheCounters {
+            served: stats.served(),
+            hits: snap.cache_hits,
+            coalesced: snap.cache_inflight_coalesced,
+        },
+    )
 }
 
 fn main() {
@@ -46,20 +202,33 @@ fn main() {
     let cost = CostProfile::of(&g);
 
     println!("== hotpath micro-benchmarks (L3) ==");
-    bench("profiler eval", 200, || {
-        let l = estimate_latency(&cost, &snap);
-        let e = estimate_energy(&cost, &snap);
-        std::hint::black_box((l.total_s, e.total_j));
-    });
-    bench("cost profile", 200, || {
-        std::hint::black_box(CostProfile::of(&g).total_macs());
-    });
-    bench("fusion pass", 100, || {
-        std::hint::black_box(fuse(&g, FusionConfig::all()).0.len());
-    });
-    bench("memalloc", 100, || {
-        std::hint::black_box(allocate(&g).arena_bytes);
-    });
+    let mut micro: Vec<(&str, f64)> = Vec::new();
+    micro.push((
+        "profiler_eval_us",
+        bench("profiler eval", 200, || {
+            let l = estimate_latency(&cost, &snap);
+            let e = estimate_energy(&cost, &snap);
+            std::hint::black_box((l.total_s, e.total_j));
+        }) * 1e6,
+    ));
+    micro.push((
+        "cost_profile_us",
+        bench("cost profile", 200, || {
+            std::hint::black_box(CostProfile::of(&g).total_macs());
+        }) * 1e6,
+    ));
+    micro.push((
+        "fusion_pass_us",
+        bench("fusion pass", 100, || {
+            std::hint::black_box(fuse(&g, FusionConfig::all()).0.len());
+        }) * 1e6,
+    ));
+    micro.push((
+        "memalloc_us",
+        bench("memalloc", 100, || {
+            std::hint::black_box(allocate(&g).arena_bytes);
+        }) * 1e6,
+    ));
     let pp = prepartition(&g);
     let topo = Topology::wifi_pair("raspberrypi-4b", "jetson-nx");
     let devs = vec![
@@ -69,12 +238,18 @@ fn main() {
             mem_budget: 8e9,
         },
     ];
-    bench("prepartition", 100, || {
-        std::hint::black_box(prepartition(&g).cuts.len());
-    });
-    bench("offload DP", 100, || {
-        std::hint::black_box(plan_offload(&g, &pp, &devs, &topo).latency_s);
-    });
+    micro.push((
+        "prepartition_us",
+        bench("prepartition", 100, || {
+            std::hint::black_box(prepartition(&g).cuts.len());
+        }) * 1e6,
+    ));
+    micro.push((
+        "offload_dp_us",
+        bench("offload DP", 100, || {
+            std::hint::black_box(plan_offload(&g, &pp, &devs, &topo).latency_s);
+        }) * 1e6,
+    ));
     let front = vec![
         Candidate::baseline(),
         Candidate { engine: EngineConfig::all(), ..Candidate::baseline() },
@@ -90,25 +265,79 @@ fn main() {
         },
     ];
     let mut l = AdaptLoop::new(g.clone(), 76.23, front, Budgets::unconstrained());
-    bench("adapt tick", 20, || {
-        std::hint::black_box(matches!(l.tick(&snap), crowdhmtware::optimizer::Decision::Hold));
-    });
+    micro.push((
+        "adapt_tick_us",
+        bench("adapt tick", 20, || {
+            std::hint::black_box(matches!(l.tick(&snap), crowdhmtware::optimizer::Decision::Hold));
+        }) * 1e6,
+    ));
     // One response channel shared across iterations: the bench measures
-    // batcher push/pop, not channel construction.
+    // batcher push/pop, not channel construction. The input Arc is also
+    // shared — pushing a request moves a pointer, mirroring production.
     let (resp, _resp_rx) = std::sync::mpsc::channel();
-    bench("batcher 8", 1000, || {
-        let mut b = Batcher::new(BatcherConfig::default());
-        let now = Instant::now();
-        for i in 0..8 {
-            let req = Request {
-                id: i,
-                input: vec![0.0; 16],
-                enqueued: now,
-                lane: crowdhmtware::telemetry::Lane::Normal,
-                resp: resp.clone(),
-            };
-            b.push(req);
-        }
-        std::hint::black_box(b.pop_batch(&[1, 8], now).map(|x| x.compiled_batch));
-    });
+    let shared_input: std::sync::Arc<[f32]> = vec![0.0f32; ELEMS].into();
+    micro.push((
+        "batcher_8_us",
+        bench("batcher 8", 1000, || {
+            let mut b = Batcher::new(BatcherConfig::default());
+            let now = Instant::now();
+            for i in 0..8 {
+                let req = Request {
+                    id: i,
+                    input: std::sync::Arc::clone(&shared_input),
+                    enqueued: now,
+                    lane: crowdhmtware::telemetry::Lane::Normal,
+                    resp: resp.clone(),
+                    cache: None,
+                };
+                b.push(req);
+            }
+            std::hint::black_box(b.pop_batch(&[1, 8], now).map(|x| x.compiled_batch));
+        }) * 1e6,
+    ));
+
+    println!("\n== submit-path scenarios (2 workers, 2 ms/batch) ==");
+    let unique = run_submit_unique();
+    let (hot, counters) = run_submit_hot_cached();
+    for s in [&unique, &hot] {
+        println!("{:<20} {:>8.0} req/s   p95 {:>7.2} ms", s.name, s.req_per_s, s.p95_ms);
+    }
+    println!(
+        "cache: served {} of {SUBMIT_REQUESTS} (hits {}, in-flight joins {})",
+        counters.served, counters.hits, counters.coalesced
+    );
+
+    // Machine-readable trajectory for cross-PR comparison.
+    let scenarios: Vec<Json> = [&unique, &hot]
+        .iter()
+        .map(|s| {
+            Json::obj(vec![
+                ("name", Json::str(s.name)),
+                ("req_per_s", Json::num(s.req_per_s)),
+                ("p95_ms", Json::num(s.p95_ms)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::str("hotpath")),
+        ("requests", Json::num(SUBMIT_REQUESTS as f64)),
+        ("scenarios", Json::Arr(scenarios)),
+        (
+            "cache",
+            Json::obj(vec![
+                ("served", Json::num(counters.served as f64)),
+                ("hits", Json::num(counters.hits as f64)),
+                ("coalesced", Json::num(counters.coalesced as f64)),
+            ]),
+        ),
+        (
+            "micro",
+            Json::obj(micro.iter().map(|&(k, v)| (k, Json::num(v))).collect()),
+        ),
+    ]);
+    let path = "BENCH_hotpath.json";
+    match std::fs::write(path, doc.to_string() + "\n") {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }

@@ -22,15 +22,23 @@
 //!             "p99_ms":...,"mean_batch":...,"rejected":0}, ...],
 //!  "best":{"workers":8,"req_per_s":...,"speedup_vs_single":...},
 //!  "skewed":{"preload":64,"slow_batch_ms":20,
-//!            "configs":[{"steal":1,"wall_ms":...,"steals":...}, ...]}}
+//!            "configs":[{"steal":1,"wall_ms":...,"steals":...}, ...]},
+//!  "cache":{"hot_requests":256,
+//!           "configs":[{"enabled":1,"wall_ms":...,"served":...,
+//!                       "hits":...,"coalesced":...}, ...]}}
 //! ```
+//!
+//! The `cache` key (hot-input burst, single-flight cache on vs off) is
+//! schema-additive: `ci/check_bench.py` pairs on `widths` and ignores it.
 //!
 //! Run: `cargo bench --bench serving_pool`
 
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
-use crowdhmtware::coordinator::{BatcherConfig, Executor, PoolConfig, ServingPool, StealConfig};
+use crowdhmtware::coordinator::{
+    BatcherConfig, CacheConfig, Executor, PoolConfig, ServingPool, StealConfig,
+};
 use crowdhmtware::util::{Json, Table};
 
 const CLASSES: usize = 4;
@@ -91,12 +99,15 @@ fn run_width(workers: usize) -> WidthResult {
     let stats = pool.shutdown();
     assert_eq!(stats.served(), REQUESTS);
     let merged = stats.merged();
+    // One sorted scratch serves all three quantiles (see
+    // `ServingStats::percentiles`) instead of three clone+sort passes.
+    let ps = merged.percentiles(&[0.5, 0.95, 0.99]);
     WidthResult {
         workers,
         req_per_s: REQUESTS as f64 / wall,
-        p50_ms: merged.percentile(0.5) * 1e3,
-        p95_ms: merged.percentile(0.95) * 1e3,
-        p99_ms: merged.percentile(0.99) * 1e3,
+        p50_ms: ps[0] * 1e3,
+        p95_ms: ps[1] * 1e3,
+        p99_ms: ps[2] * 1e3,
         mean_batch: merged.mean_batch_size(),
         rejected: stats.rejected(),
     }
@@ -171,6 +182,50 @@ fn run_skewed(steal_enabled: bool) -> SkewedResult {
     SkewedResult { steal: steal_enabled, wall_ms: wall * 1e3, steals }
 }
 
+const HOT_REQUESTS: usize = 256;
+
+struct HotResult {
+    enabled: bool,
+    wall_ms: f64,
+    served: usize,
+    hits: usize,
+    coalesced: usize,
+}
+
+/// Hot-input scenario: every request carries the *same* input. With the
+/// single-flight cache on, the whole burst collapses onto roughly one
+/// inference; off, every request pays a batch slot.
+fn run_hot_input(enabled: bool) -> HotResult {
+    let pool = ServingPool::spawn(
+        |_| Box::new(MockExec) as Box<dyn Executor>,
+        "v",
+        PoolConfig {
+            workers: 2,
+            queue_capacity: HOT_REQUESTS,
+            batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_micros(500) },
+            cache: CacheConfig { enabled, capacity: 64 },
+            ..PoolConfig::default()
+        },
+    );
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..HOT_REQUESTS)
+        .map(|_| pool.submit(vec![0.5; ELEMS]).expect("capacity sized to the run"))
+        .collect();
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(60)).expect("response");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = pool.telemetry_snapshot();
+    let stats = pool.shutdown();
+    HotResult {
+        enabled,
+        wall_ms: wall * 1e3,
+        served: stats.served(),
+        hits: snap.cache_hits,
+        coalesced: snap.cache_inflight_coalesced,
+    }
+}
+
 fn main() {
     let mut table = Table::new(
         "Serving throughput vs pool width (mock executor, 1 ms/batch)",
@@ -219,6 +274,23 @@ fn main() {
     }
     skew_table.print();
 
+    // Hot-input scenario: identical requests, cache on vs off.
+    let mut hot_table = Table::new(
+        "Hot-input burst: 256 identical requests (single-flight cache on vs off)",
+        &["cache", "wall ms", "served", "hits", "coalesced"],
+    );
+    let hot: Vec<HotResult> = vec![run_hot_input(true), run_hot_input(false)];
+    for r in &hot {
+        hot_table.row(&[
+            if r.enabled { "on".to_string() } else { "off".to_string() },
+            format!("{:.0}", r.wall_ms),
+            r.served.to_string(),
+            r.hits.to_string(),
+            r.coalesced.to_string(),
+        ]);
+    }
+    hot_table.print();
+
     // Machine-readable trajectory for cross-PR comparison.
     let widths: Vec<Json> = results
         .iter()
@@ -265,6 +337,29 @@ fn main() {
                                     ("steal", Json::num(if r.steal { 1.0 } else { 0.0 })),
                                     ("wall_ms", Json::num(r.wall_ms)),
                                     ("steals", Json::num(r.steals as f64)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+        ),
+        // Schema-additive: readers pairing on "widths" ignore this key.
+        (
+            "cache",
+            Json::obj(vec![
+                ("hot_requests", Json::num(HOT_REQUESTS as f64)),
+                (
+                    "configs",
+                    Json::Arr(
+                        hot.iter()
+                            .map(|r| {
+                                Json::obj(vec![
+                                    ("enabled", Json::num(if r.enabled { 1.0 } else { 0.0 })),
+                                    ("wall_ms", Json::num(r.wall_ms)),
+                                    ("served", Json::num(r.served as f64)),
+                                    ("hits", Json::num(r.hits as f64)),
+                                    ("coalesced", Json::num(r.coalesced as f64)),
                                 ])
                             })
                             .collect(),

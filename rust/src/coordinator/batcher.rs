@@ -24,22 +24,35 @@ use std::sync::mpsc::Sender;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use super::cache::CacheSlot;
 use super::server::Response;
 use super::steal::StealDeque;
 use crate::telemetry::Lane;
 
 /// One queued inference request.
+///
+/// The input rides as a *shared immutable* buffer: admission converts the
+/// caller's tensor into an `Arc<[f32]>` once, and every later movement —
+/// dead-worker reclaim, steal-chunk migration, split-route retry — clones
+/// the pointer, never the rows. Padding into the executor's batch layout
+/// (the only place rows are actually copied) happens once, into the
+/// worker's reusable scratch via [`Batch::write_padded`].
 #[derive(Debug)]
 pub struct Request {
     pub id: u64,
-    /// Row-major `[H, W, C]` f32 input.
-    pub input: Vec<f32>,
+    /// Row-major `[H, W, C]` f32 input — cheap-clone shared handle.
+    pub input: Arc<[f32]>,
     pub enqueued: Instant,
     /// Which batcher lane the request rides (tags its telemetry too).
     pub lane: Lane,
     /// Where the answer goes — carried with the request so a stolen
     /// request is answered by whichever worker ran it.
     pub resp: Sender<Response>,
+    /// Single-flight cache slot: `Some` when this request is the *leader*
+    /// for its content key — whoever executes it fans the response out to
+    /// the coalesced waiters and stores the completed entry. Travels with
+    /// the request through steal migration so the thief completes it.
+    pub cache: Option<CacheSlot>,
 }
 
 /// Batching policy knobs.
@@ -86,13 +99,27 @@ pub struct Batch {
 }
 
 impl Batch {
-    /// Build the padded input buffer for execution.
+    /// Build the padded input buffer for execution (allocating form —
+    /// tests and one-shot callers). The serving loop threads a per-worker
+    /// scratch through [`Batch::write_padded`] instead, so steady-state
+    /// batch execution allocates nothing.
     pub fn padded_input(&self, elems_per_row: usize) -> Vec<f32> {
-        let mut buf = vec![0.0f32; self.compiled_batch * elems_per_row];
+        let mut buf = Vec::new();
+        self.write_padded(elems_per_row, &mut buf);
+        buf
+    }
+
+    /// Write the padded input into a reusable scratch buffer: resized to
+    /// exactly `compiled_batch * elems_per_row`, occupied rows copied in,
+    /// padding rows zeroed. The buffer's *capacity* is retained across
+    /// calls, so a worker serving same-shaped batches pays the allocation
+    /// once, not per batch.
+    pub fn write_padded(&self, elems_per_row: usize, buf: &mut Vec<f32>) {
+        buf.clear();
+        buf.resize(self.compiled_batch * elems_per_row, 0.0);
         for (i, r) in self.requests.iter().enumerate() {
             buf[i * elems_per_row..(i + 1) * elems_per_row].copy_from_slice(&r.input);
         }
-        buf
     }
 }
 
@@ -220,7 +247,7 @@ mod tests {
 
     fn lane_req(id: u64, t: Instant, lane: Lane) -> Request {
         let (resp, _rx) = channel();
-        Request { id, input: vec![id as f32; 4], enqueued: t, lane, resp }
+        Request { id, input: vec![id as f32; 4].into(), enqueued: t, lane, resp, cache: None }
     }
 
     fn req(id: u64, t: Instant) -> Request {
@@ -485,6 +512,65 @@ mod tests {
         assert_eq!(buf.len(), 8);
         assert_eq!(&buf[0..4], &[1.0; 4]);
         assert_eq!(&buf[4..8], &[2.0; 4]);
+    }
+
+    // ── reusable padding scratch (zero-copy hot path) ──────────────────
+
+    /// The per-worker scratch is reused across batches without leaking
+    /// state: a later smaller batch truncates the buffer and re-zeroes
+    /// its padding rows, and the retained capacity means no reallocation.
+    #[test]
+    fn write_padded_reuses_scratch_without_stale_rows() {
+        let t = Instant::now();
+        let mut scratch = Vec::new();
+
+        let big = Batch { requests: vec![req(1, t), req(2, t), req(3, t)], compiled_batch: 4 };
+        big.write_padded(4, &mut scratch);
+        assert_eq!(scratch.len(), 16);
+        assert_eq!(&scratch[0..4], &[1.0; 4]);
+        assert_eq!(&scratch[12..], &[0.0; 4]);
+        let cap_after_big = scratch.capacity();
+
+        // Smaller follow-up batch: buffer shrinks to the new exact size,
+        // the padding row is zero (no bleed-through from request 2/3),
+        // and the allocation is the one we already own.
+        let small = Batch { requests: vec![req(9, t)], compiled_batch: 2 };
+        small.write_padded(4, &mut scratch);
+        assert_eq!(scratch.len(), 8);
+        assert_eq!(&scratch[0..4], &[9.0; 4]);
+        assert_eq!(&scratch[4..8], &[0.0; 4], "padding must be re-zeroed, not stale");
+        assert_eq!(scratch.capacity(), cap_after_big, "reuse the allocation, don't shrink");
+    }
+
+    /// The allocating wrapper and the scratch form agree bit-for-bit.
+    #[test]
+    fn padded_input_matches_write_padded() {
+        let t = Instant::now();
+        let batch = Batch { requests: vec![req(1, t), req(2, t)], compiled_batch: 4 };
+        let mut scratch = vec![7.0f32; 3]; // dirty, wrong-sized scratch
+        batch.write_padded(4, &mut scratch);
+        assert_eq!(batch.padded_input(4), scratch);
+    }
+
+    /// Queued requests share their input buffer with the submitter: the
+    /// batcher moves pointers, so the row popped out of a formed batch is
+    /// the *same* allocation that went in.
+    #[test]
+    fn queued_inputs_are_shared_not_copied() {
+        let input: Arc<[f32]> = vec![1.0f32; 4].into();
+        let (resp, _rx) = channel();
+        let t = Instant::now();
+        let mut b = Batcher::new(BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(0) });
+        b.push(Request {
+            id: 7,
+            input: Arc::clone(&input),
+            enqueued: t,
+            lane: Lane::Normal,
+            resp,
+            cache: None,
+        });
+        let batch = b.pop_batch(&[1], t).unwrap();
+        assert!(Arc::ptr_eq(&batch.requests[0].input, &input), "no copy through the batcher");
     }
 
     // ── max-wait deadline behavior ─────────────────────────────────────

@@ -1,0 +1,475 @@
+//! Content-addressed response cache with **single-flight deduplication**
+//! — the serving hot path's answer to repeated identical inputs: at
+//! million-user scale a hot input (the same sensor frame, the same
+//! canned query) should cost *one* inference, not N.
+//!
+//! In the paper's Fig. 6 cross-level loop this sits on the back-end
+//! serving level and publishes its observables upward: every hit,
+//! coalesced waiter, and eviction lands in the [`TelemetryHub`] as
+//! `cache_hits` / `cache_inflight_coalesced` / `cache_evictions`,
+//! surfaced through `TelemetrySnapshot` so the front-end decision level
+//! (the adaptation tick) can see how much measured traffic is *absorbed*
+//! before it ever reaches a worker queue — load the AIMD sizer must not
+//! provision for, and headroom the variant selector can spend on a
+//! heavier model. Like the sizer, shard router, and steal registry, the
+//! mechanism makes nothing observable by side channel: the hub is the
+//! only window.
+//!
+//! ## Keying and staleness
+//!
+//! Entries are keyed by `(content hash, variant, switch generation)`.
+//! The generation is the pool's variant-switch counter, read under the
+//! same lock a switch bumps it under — so after
+//! `ServingPool::switch_variant` returns, every new submission carries a
+//! newer generation than any entry cached before the switch, and a
+//! variant switch can therefore **never serve a stale answer**: the old
+//! entries are unreachable (and purged eagerly). The 64-bit content hash
+//! is verified against the stored input bit-for-bit on every hit, so a
+//! hash collision degrades to an uncached inference, never to a wrong
+//! answer.
+//!
+//! ## Single flight
+//!
+//! The first request for a key becomes the **leader**: it carries a
+//! [`CacheSlot`] through admission → batcher → (possibly a steal
+//! migration) → execution, and whoever finally runs it calls
+//! [`CacheSlot::complete`], which fans the response out to every waiter
+//! that joined meanwhile and stores the completed entry (bounded LRU).
+//! Identical requests arriving while the leader is in flight don't touch
+//! a queue at all — they park on a channel and receive a bit-identical
+//! clone of the leader's response. If the leader dies (executor failure,
+//! worker death, shutdown drain), dropping the slot removes the
+//! in-flight entry and closes the waiters' channels — they observe the
+//! same failure the leader's caller does, and the next identical
+//! submission starts a fresh flight.
+//!
+//! ## Lane interaction invariant
+//!
+//! Priority-lane requests **may take a completed hit** (a cached answer
+//! is strictly faster than any queue) and **may lead** a flight, but
+//! they **never join one as a waiter**: waiting on an in-flight normal
+//! request would chain the priority request behind the normal lane's
+//! batch window — exactly the inversion the high lane exists to prevent.
+//! They bypass instead and run their own inference. This is tested in
+//! `pool.rs` (`priority_never_waits_on_inflight_normal`).
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+use super::server::Response;
+use crate::telemetry::TelemetryHub;
+
+/// Response-cache knobs (part of `PoolConfig`).
+#[derive(Debug, Clone, Copy)]
+pub struct CacheConfig {
+    /// Off by default: caching changes observable serving behavior
+    /// (identical inputs stop costing one inference each), so workloads
+    /// opt in.
+    pub enabled: bool,
+    /// Completed-entry bound; the least-recently-used entry is evicted
+    /// past it. In-flight entries are bounded by admission, not by this.
+    pub capacity: usize,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig { enabled: false, capacity: 512 }
+    }
+}
+
+/// FNV-1a over the input's f32 *bit patterns* (so `-0.0 != 0.0` and NaN
+/// payloads key distinctly — bitwise identity is the only equality the
+/// verifying compare accepts anyway).
+fn content_hash(input: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &v in input {
+        for b in v.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    h
+}
+
+fn bits_equal(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct CacheKey {
+    hash: u64,
+    /// Cheap-clone variant id — admission clones the pool's current
+    /// `Arc<str>`, not the string bytes.
+    variant: Arc<str>,
+    /// Pool variant-switch generation: bumping it orphans every older
+    /// entry (staleness guarantee).
+    generation: u64,
+}
+
+/// A completed entry: the full input is retained so a hit verifies
+/// content bit-for-bit (hash collisions degrade to a miss, never to a
+/// wrong answer).
+struct Completed {
+    input: Arc<[f32]>,
+    resp: Response,
+    last_used: u64,
+}
+
+/// An in-flight entry: the leader's input (for the same verification)
+/// plus everyone waiting on its answer.
+struct Inflight {
+    input: Arc<[f32]>,
+    waiters: Vec<Sender<Response>>,
+}
+
+struct CacheState {
+    completed: HashMap<CacheKey, Completed>,
+    inflight: HashMap<CacheKey, Inflight>,
+    /// Monotonic use-clock for LRU ordering.
+    tick: u64,
+}
+
+/// What admission learned from the cache for one submission.
+pub enum CacheOutcome {
+    /// A completed entry matched: the response is already sitting in the
+    /// receiver — no admission, no queue, no inference.
+    Hit(Receiver<Response>),
+    /// An identical request is in flight; this one parked on it and the
+    /// receiver yields the leader's response when it completes (or
+    /// closes if the leader dies).
+    Joined(Receiver<Response>),
+    /// No entry: this request leads. Attach the slot to the request and
+    /// serve it normally; completion fans out and stores the entry.
+    Lead(CacheSlot),
+    /// The cache declined (priority refusing to wait on an in-flight
+    /// normal request, or a hash collision): serve uncached.
+    Bypass,
+}
+
+/// The leader's handle on its in-flight entry. Travels inside the
+/// `Request` so whichever worker executes it — admitting worker or
+/// steal thief — completes the flight. Dropping it un-completed (leader
+/// failed) removes the entry and closes the waiters' channels.
+pub struct CacheSlot {
+    cache: Arc<ResponseCache>,
+    key: CacheKey,
+    input: Arc<[f32]>,
+    done: bool,
+}
+
+impl fmt::Debug for CacheSlot {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("CacheSlot")
+            .field("hash", &self.key.hash)
+            .field("variant", &self.key.variant)
+            .field("generation", &self.key.generation)
+            .finish()
+    }
+}
+
+impl CacheSlot {
+    /// Deliver the leader's response: fan a clone out to every waiter
+    /// that joined this flight, then store the completed entry (evicting
+    /// LRU past the bound). Waiters receive the response bit-identical
+    /// to the leader's — same prediction, same confidence bits.
+    pub fn complete(mut self, resp: &Response) {
+        self.done = true;
+        let evicted = {
+            let mut st = self.cache.state.lock().unwrap();
+            if let Some(flight) = st.inflight.remove(&self.key) {
+                for w in flight.waiters {
+                    let _ = w.send(resp.clone());
+                }
+            }
+            st.tick += 1;
+            let tick = st.tick;
+            st.completed.insert(
+                self.key.clone(),
+                Completed { input: Arc::clone(&self.input), resp: resp.clone(), last_used: tick },
+            );
+            let mut evicted = 0usize;
+            while st.completed.len() > self.cache.capacity {
+                let Some(lru) =
+                    st.completed.iter().min_by_key(|(_, c)| c.last_used).map(|(k, _)| k.clone())
+                else {
+                    break;
+                };
+                st.completed.remove(&lru);
+                evicted += 1;
+            }
+            evicted
+        };
+        if evicted > 0 {
+            self.cache.hub.record_cache_evictions(evicted);
+        }
+    }
+}
+
+impl Drop for CacheSlot {
+    fn drop(&mut self) {
+        if self.done {
+            return;
+        }
+        // Leader died without completing: clear the in-flight entry so
+        // the key is retryable, and drop the waiters' senders — their
+        // receivers close, surfacing the same failure the leader's
+        // caller sees.
+        let mut st = self.cache.state.lock().unwrap();
+        st.inflight.remove(&self.key);
+    }
+}
+
+/// The pool-level cache. One mutex over both maps: lookups are a hash
+/// probe + (on hit) one row compare — orders of magnitude below an
+/// inference, and far below the worker-queue locks the hit avoids.
+pub struct ResponseCache {
+    state: Mutex<CacheState>,
+    capacity: usize,
+    hub: Arc<TelemetryHub>,
+}
+
+impl ResponseCache {
+    pub fn new(capacity: usize, hub: Arc<TelemetryHub>) -> ResponseCache {
+        ResponseCache {
+            state: Mutex::new(CacheState {
+                completed: HashMap::new(),
+                inflight: HashMap::new(),
+                tick: 0,
+            }),
+            capacity: capacity.max(1),
+            hub,
+        }
+    }
+
+    /// One cache consultation at admission. `allow_join` is false for
+    /// priority-lane requests (see the module docs' lane invariant):
+    /// they still take completed hits and still lead, but never wait on
+    /// an in-flight normal request.
+    pub fn lookup(
+        self: &Arc<Self>,
+        input: &Arc<[f32]>,
+        variant: &Arc<str>,
+        generation: u64,
+        allow_join: bool,
+    ) -> CacheOutcome {
+        let key = CacheKey { hash: content_hash(input), variant: Arc::clone(variant), generation };
+        let mut st = self.state.lock().unwrap();
+        st.tick += 1;
+        let tick = st.tick;
+        if let Some(c) = st.completed.get_mut(&key) {
+            if !bits_equal(&c.input, input) {
+                // 64-bit hash collision: serve uncached rather than
+                // evict the resident entry or risk cross-talk.
+                return CacheOutcome::Bypass;
+            }
+            c.last_used = tick;
+            let resp = c.resp.clone();
+            drop(st);
+            self.hub.record_cache_hit();
+            let (tx, rx) = channel();
+            let _ = tx.send(resp);
+            return CacheOutcome::Hit(rx);
+        }
+        if let Some(flight) = st.inflight.get_mut(&key) {
+            if !allow_join || !bits_equal(&flight.input, input) {
+                return CacheOutcome::Bypass;
+            }
+            let (tx, rx) = channel();
+            flight.waiters.push(tx);
+            drop(st);
+            self.hub.record_cache_coalesced();
+            return CacheOutcome::Joined(rx);
+        }
+        st.inflight
+            .insert(key.clone(), Inflight { input: Arc::clone(input), waiters: Vec::new() });
+        CacheOutcome::Lead(CacheSlot {
+            cache: Arc::clone(self),
+            key,
+            input: Arc::clone(input),
+            done: false,
+        })
+    }
+
+    /// Eagerly drop every completed entry older than the current
+    /// generation — called right after a variant switch bumps it. Purely
+    /// a memory optimization: stale entries are already unreachable
+    /// (lookups carry the new generation), this just stops them from
+    /// squatting in the LRU until natural eviction. In-flight entries
+    /// stay: their pre-switch waiters were admitted pre-switch and get
+    /// the pre-switch answer they were promised.
+    pub fn purge_stale(&self, current_generation: u64) {
+        let evicted = {
+            let mut st = self.state.lock().unwrap();
+            let before = st.completed.len();
+            st.completed.retain(|k, _| k.generation >= current_generation);
+            before - st.completed.len()
+        };
+        if evicted > 0 {
+            self.hub.record_cache_evictions(evicted);
+        }
+    }
+
+    /// Completed-entry count (tests/diagnostics).
+    pub fn completed_len(&self) -> usize {
+        self.state.lock().unwrap().completed.len()
+    }
+
+    /// In-flight entry count (tests/diagnostics).
+    pub fn inflight_len(&self) -> usize {
+        self.state.lock().unwrap().inflight.len()
+    }
+}
+
+impl fmt::Debug for ResponseCache {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let st = self.state.lock().unwrap();
+        f.debug_struct("ResponseCache")
+            .field("completed", &st.completed.len())
+            .field("inflight", &st.inflight.len())
+            .field("capacity", &self.capacity)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::Lane;
+    use std::time::Duration;
+
+    fn hub() -> Arc<TelemetryHub> {
+        Arc::new(TelemetryHub::new(8))
+    }
+
+    fn cache(capacity: usize, hub: &Arc<TelemetryHub>) -> Arc<ResponseCache> {
+        Arc::new(ResponseCache::new(capacity, Arc::clone(hub)))
+    }
+
+    fn resp(id: u64, pred: usize) -> Response {
+        Response {
+            id,
+            pred,
+            confidence: 0.9,
+            variant: "v".to_string(),
+            generation: 0,
+            worker: 0,
+            lane: Lane::Normal,
+            latency: Duration::from_millis(1),
+        }
+    }
+
+    fn arc(vals: &[f32]) -> Arc<[f32]> {
+        vals.to_vec().into()
+    }
+
+    #[test]
+    fn lead_complete_hit_roundtrip() {
+        let hub = hub();
+        let c = cache(8, &hub);
+        let v: Arc<str> = Arc::from("v");
+        let input = arc(&[1.0, 2.0]);
+        let CacheOutcome::Lead(slot) = c.lookup(&input, &v, 0, true) else {
+            panic!("first lookup must lead");
+        };
+        assert_eq!(c.inflight_len(), 1);
+        slot.complete(&resp(7, 3));
+        assert_eq!(c.inflight_len(), 0);
+        assert_eq!(c.completed_len(), 1);
+        let CacheOutcome::Hit(rx) = c.lookup(&input, &v, 0, true) else {
+            panic!("second lookup must hit");
+        };
+        assert_eq!(rx.recv().unwrap().pred, 3);
+        assert_eq!(hub.cache_hits(), 1);
+    }
+
+    #[test]
+    fn waiters_fan_out_and_priority_never_joins() {
+        let hub = hub();
+        let c = cache(8, &hub);
+        let v: Arc<str> = Arc::from("v");
+        let input = arc(&[4.0; 3]);
+        let CacheOutcome::Lead(slot) = c.lookup(&input, &v, 0, true) else { panic!("lead") };
+        let CacheOutcome::Joined(w1) = c.lookup(&input, &v, 0, true) else { panic!("join") };
+        let CacheOutcome::Joined(w2) = c.lookup(&input, &v, 0, true) else { panic!("join") };
+        // allow_join=false (priority lane): bypass, don't wait.
+        assert!(matches!(c.lookup(&input, &v, 0, false), CacheOutcome::Bypass));
+        assert_eq!(hub.cache_inflight_coalesced(), 2);
+        slot.complete(&resp(1, 2));
+        assert_eq!(w1.recv().unwrap().pred, 2);
+        assert_eq!(w2.recv().unwrap().pred, 2);
+    }
+
+    #[test]
+    fn dead_leader_closes_waiters_and_frees_the_key() {
+        let hub = hub();
+        let c = cache(8, &hub);
+        let v: Arc<str> = Arc::from("v");
+        let input = arc(&[9.0]);
+        let CacheOutcome::Lead(slot) = c.lookup(&input, &v, 0, true) else { panic!("lead") };
+        let CacheOutcome::Joined(w) = c.lookup(&input, &v, 0, true) else { panic!("join") };
+        drop(slot); // leader died un-completed
+        assert!(w.recv().is_err(), "waiter must see the failure, not hang");
+        assert_eq!(c.inflight_len(), 0);
+        // The key is retryable: the next identical submission leads anew.
+        assert!(matches!(c.lookup(&input, &v, 0, true), CacheOutcome::Lead(_)));
+    }
+
+    #[test]
+    fn generation_bump_orphans_old_entries() {
+        let hub = hub();
+        let c = cache(8, &hub);
+        let v: Arc<str> = Arc::from("v");
+        let input = arc(&[1.0; 4]);
+        let CacheOutcome::Lead(slot) = c.lookup(&input, &v, 0, true) else { panic!("lead") };
+        slot.complete(&resp(1, 1));
+        // Same input, new generation: the old entry is unreachable.
+        assert!(matches!(c.lookup(&input, &v, 1, true), CacheOutcome::Lead(_)));
+        c.purge_stale(1);
+        assert_eq!(c.completed_len(), 0);
+        assert_eq!(hub.cache_evictions(), 1);
+    }
+
+    #[test]
+    fn variant_id_keys_distinctly() {
+        let hub = hub();
+        let c = cache(8, &hub);
+        let a: Arc<str> = Arc::from("a");
+        let b: Arc<str> = Arc::from("b");
+        let input = arc(&[2.0; 4]);
+        let CacheOutcome::Lead(slot) = c.lookup(&input, &a, 0, true) else { panic!("lead") };
+        slot.complete(&resp(1, 1));
+        assert!(matches!(c.lookup(&input, &b, 0, true), CacheOutcome::Lead(_)));
+    }
+
+    #[test]
+    fn lru_bound_evicts_least_recently_used() {
+        let hub = hub();
+        let c = cache(2, &hub);
+        let v: Arc<str> = Arc::from("v");
+        let (i1, i2, i3) = (arc(&[1.0]), arc(&[2.0]), arc(&[3.0]));
+        for (i, input) in [&i1, &i2].into_iter().enumerate() {
+            let CacheOutcome::Lead(slot) = c.lookup(input, &v, 0, true) else { panic!("lead") };
+            slot.complete(&resp(i as u64, i));
+        }
+        // Touch i1 so i2 is the LRU entry, then insert i3 to force eviction.
+        assert!(matches!(c.lookup(&i1, &v, 0, true), CacheOutcome::Hit(_)));
+        let CacheOutcome::Lead(slot) = c.lookup(&i3, &v, 0, true) else { panic!("lead") };
+        slot.complete(&resp(3, 3));
+        assert_eq!(c.completed_len(), 2);
+        assert_eq!(hub.cache_evictions(), 1);
+        assert!(matches!(c.lookup(&i1, &v, 0, true), CacheOutcome::Hit(_)), "recently used survives");
+        assert!(matches!(c.lookup(&i2, &v, 0, true), CacheOutcome::Lead(_)), "LRU entry evicted");
+    }
+
+    #[test]
+    fn content_hash_is_bitwise() {
+        assert_ne!(content_hash(&[0.0]), content_hash(&[-0.0]));
+        assert_ne!(content_hash(&[1.0, 2.0]), content_hash(&[2.0, 1.0]));
+        assert_eq!(content_hash(&[1.5; 8]), content_hash(&[1.5; 8]));
+        assert!(bits_equal(&[f32::NAN], &[f32::NAN]));
+        assert!(!bits_equal(&[0.0], &[-0.0]));
+        assert!(!bits_equal(&[1.0], &[1.0, 1.0]));
+    }
+}

@@ -30,7 +30,18 @@
 //! see [`shard::PeerTransport::infer_segments_batch`]. Priority-lane
 //! requests are never split-routed, and never wait on a window.
 
+//!
+//! The request hot path through all of the above is **zero-copy**:
+//! inputs are admitted as shared immutable [`std::sync::Arc`]`<[f32]>`
+//! buffers, so dead-worker reclaim, steal migration, split-route retry,
+//! and frontier stacking move pointers, not rows. Identical in-flight
+//! requests are deduplicated by the single-flight [`cache`] at the pool
+//! admission boundary: one inference fans out to every waiter, keyed by
+//! input content + variant + switch generation so a variant switch can
+//! never serve a stale answer.
+
 pub mod batcher;
+pub mod cache;
 pub mod cascade;
 pub mod policy;
 pub mod pool;
@@ -39,6 +50,7 @@ pub mod shard;
 pub mod steal;
 
 pub use batcher::{Batch, Batcher, BatcherConfig, Request};
+pub use cache::{CacheConfig, CacheOutcome, CacheSlot, ResponseCache};
 pub use cascade::{run_cascade, CascadeStats, Stage};
 pub use policy::{rank_variants, select_variant, DispatchPolicy, ScoredVariant};
 pub use pool::{PoolConfig, PoolStats, ServingPool};

@@ -41,6 +41,7 @@ use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use super::batcher::{BatcherConfig, Request};
+use super::cache::{CacheConfig, CacheOutcome, ResponseCache};
 use super::policy::DispatchPolicy;
 use super::server::{
     spawn_worker, Executor, Msg, Rejected, Response, ServingStats, StealContext, Worker,
@@ -64,6 +65,9 @@ pub struct PoolConfig {
     /// Work stealing between worker batchers: idle workers claim chunks
     /// of a wedged sibling's normal lane (see [`super::steal`]).
     pub steal: StealConfig,
+    /// Single-flight response cache consulted at admission (see
+    /// [`super::cache`]; off by default).
+    pub cache: CacheConfig,
     /// How long `switch_variant` waits for each worker's acknowledgement
     /// before giving up on it (a wedged worker must not hang actuation).
     pub switch_ack_timeout: Duration,
@@ -77,6 +81,7 @@ impl Default for PoolConfig {
             batcher: BatcherConfig::default(),
             dispatch: DispatchPolicy::LeastQueueDepth,
             steal: StealConfig::default(),
+            cache: CacheConfig::default(),
             switch_ack_timeout: Duration::from_secs(5),
         }
     }
@@ -133,6 +138,13 @@ impl PoolStats {
         self.merged().percentile(p)
     }
 
+    /// Several pool-wide percentiles from **one** merged window and one
+    /// sort — result collection asking for p50/p95/p99 together pays one
+    /// merge + sort instead of three (see [`ServingStats::percentiles`]).
+    pub fn percentiles(&self, ps: &[f64]) -> Vec<f64> {
+        self.merged().percentiles(ps)
+    }
+
     /// Pool-wide mean batch occupancy.
     pub fn mean_batch_size(&self) -> f64 {
         self.merged().mean_batch_size()
@@ -173,9 +185,13 @@ pub struct ServingPool {
     /// Executor factory, retained so the pool can spawn workers after
     /// construction (dynamic grow).
     make: Arc<dyn Fn(usize) -> Box<dyn Executor> + Send + Sync>,
-    /// Current serving variant — what dynamically spawned workers start on.
-    variant: Mutex<String>,
+    /// Current serving variant — what dynamically spawned workers start
+    /// on. `Arc<str>` so admission-time cache keying clones a pointer,
+    /// not the string bytes.
+    variant: Mutex<Arc<str>>,
     hub: Arc<TelemetryHub>,
+    /// Single-flight response cache, consulted at admission when enabled.
+    cache: Option<Arc<ResponseCache>>,
     /// Every local worker's shared normal lane, for idle siblings to
     /// steal from (victim selection reads the hub).
     steal_registry: Arc<StealRegistry>,
@@ -221,11 +237,16 @@ impl ServingPool {
                 spawn_worker(i, move || make(i), variant, 0, cfg.batcher, ctx, tel)
             })
             .collect();
+        let cache = cfg
+            .cache
+            .enabled
+            .then(|| Arc::new(ResponseCache::new(cfg.cache.capacity, Arc::clone(&hub))));
         ServingPool {
             workers: RwLock::new(Workers { list, next_id: cfg.workers }),
             make,
-            variant: Mutex::new(initial_variant.to_string()),
+            variant: Mutex::new(Arc::from(initial_variant)),
             hub,
+            cache,
             steal_registry,
             capacity: cfg.queue_capacity,
             batcher: cfg.batcher,
@@ -257,7 +278,7 @@ impl ServingPool {
     /// dynamically spawned worker (or a shard router's freshly attached
     /// peer) starts on.
     pub fn current_variant(&self) -> String {
-        self.variant.lock().unwrap().clone()
+        self.variant.lock().unwrap().to_string()
     }
 
     /// Per-worker bounded queue capacity (the admission bound).
@@ -294,8 +315,10 @@ impl ServingPool {
         }
     }
 
-    /// Submit a request on the normal lane.
-    pub fn submit(&self, input: Vec<f32>) -> Result<Receiver<Response>, Rejected> {
+    /// Submit a request on the normal lane. Accepts anything convertible
+    /// into the shared input handle — a `Vec<f32>` (converted once, no
+    /// copy) or an already-shared `Arc<[f32]>` (pointer clone).
+    pub fn submit(&self, input: impl Into<Arc<[f32]>>) -> Result<Receiver<Response>, Rejected> {
         self.submit_lane(input, Lane::Normal)
     }
 
@@ -303,7 +326,10 @@ impl ServingPool {
     /// high-priority queue, which the batcher drains before the normal
     /// lane. Admission control is shared with the normal lane (the
     /// bounded queue protects the worker, not the lane).
-    pub fn submit_priority(&self, input: Vec<f32>) -> Result<Receiver<Response>, Rejected> {
+    pub fn submit_priority(
+        &self,
+        input: impl Into<Arc<[f32]>>,
+    ) -> Result<Receiver<Response>, Rejected> {
         self.submit_lane(input, Lane::High)
     }
 
@@ -313,11 +339,36 @@ impl ServingPool {
     /// queue shows as full on the fresh read), and a dead worker (closed
     /// channel) is excluded from further picks instead of blackholing
     /// the pool.
+    ///
+    /// The input becomes a shared immutable buffer here, once; every
+    /// later movement — into a worker queue, back out of a dead worker's
+    /// channel, across a steal migration — clones the `Arc`, never the
+    /// rows.
     pub fn submit_lane(
         &self,
-        mut input: Vec<f32>,
+        input: impl Into<Arc<[f32]>>,
         lane: Lane,
     ) -> Result<Receiver<Response>, Rejected> {
+        let mut input: Arc<[f32]> = input.into();
+        // Cache consultation precedes dispatch entirely: a hit answers
+        // without touching any queue, a join parks on the in-flight
+        // leader. Priority requests never join (the lane/cache invariant
+        // — see [`super::cache`]); they may still hit and still lead.
+        // (variant, generation) are read under the variant lock — the
+        // lock switches bump the generation under — so a post-switch
+        // submission can never carry a pre-switch key.
+        let mut cache_slot = None;
+        if let Some(cache) = &self.cache {
+            let (variant, generation) = {
+                let v = self.variant.lock().unwrap();
+                (Arc::clone(&v), self.generation.load(Ordering::SeqCst))
+            };
+            match cache.lookup(&input, &variant, generation, lane == Lane::Normal) {
+                CacheOutcome::Hit(rx) | CacheOutcome::Joined(rx) => return Ok(rx),
+                CacheOutcome::Lead(slot) => cache_slot = Some(slot),
+                CacheOutcome::Bypass => {}
+            }
+        }
         let guard = self.workers.read().unwrap();
         let workers = &guard.list;
         if workers.is_empty() {
@@ -378,7 +429,14 @@ impl ServingPool {
             }
             let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
             let (tx, rx) = channel();
-            let req = Request { id, input, enqueued: Instant::now(), lane, resp: tx };
+            let req = Request {
+                id,
+                input,
+                enqueued: Instant::now(),
+                lane,
+                resp: tx,
+                cache: cache_slot.take(),
+            };
             match worker.tx.send(Msg::Infer(req)) {
                 Ok(()) => return Ok(rx),
                 Err(err) => {
@@ -387,12 +445,17 @@ impl ServingPool {
                     // stranded in its shared lane (nothing can serve those
                     // — thieves skip non-executing slots — so their
                     // callers must see the channel close, not hang),
-                    // reclaim the input, and try the remaining workers.
+                    // reclaim the input (an `Arc` move — dead-worker
+                    // retry copies no rows) and the single-flight slot,
+                    // and try the remaining workers.
                     worker.tel.depth_cancel();
                     excluded[wi] = true;
                     self.steal_registry.drain_dead(worker.tel.worker);
                     match err.0 {
-                        Msg::Infer(r) => input = r.input,
+                        Msg::Infer(r) => {
+                            input = r.input;
+                            cache_slot = r.cache;
+                        }
                         _ => unreachable!("send failed on the message we just built"),
                     }
                 }
@@ -440,9 +503,17 @@ impl ServingPool {
         let generation = {
             let mut v = self.variant.lock().unwrap();
             let generation = self.generation.fetch_add(1, Ordering::SeqCst) + 1;
-            *v = variant.to_string();
+            *v = Arc::from(variant);
             generation
         };
+        // Response-cache staleness guarantee: every submission admitted
+        // after this point reads the bumped generation (under the same
+        // lock), so pre-switch entries are already unreachable — the
+        // purge just frees their memory eagerly instead of letting them
+        // squat in the LRU.
+        if let Some(cache) = &self.cache {
+            cache.purge_stale(generation);
+        }
         let (ack_tx, ack_rx) = channel();
         let mut pending = 0usize;
         {
@@ -513,7 +584,7 @@ impl ServingPool {
                 // so there is no cycle.
                 let (variant, generation) = {
                     let v = self.variant.lock().unwrap();
-                    (v.clone(), self.generation.load(Ordering::SeqCst))
+                    (v.to_string(), self.generation.load(Ordering::SeqCst))
                 };
                 while guard.list.len() < target {
                     let id = guard.next_id;
@@ -925,6 +996,195 @@ mod tests {
         let pool = Arc::try_unwrap(pool).unwrap_or_else(|_| panic!("pool still shared"));
         let stats = pool.shutdown();
         assert_eq!(stats.served(), 16);
+    }
+
+    // ── single-flight response cache (see `coordinator::cache`) ────────
+
+    fn cached(delay_us: u64) -> ServingPool {
+        ServingPool::spawn(
+            move |_| {
+                Box::new(MockExec { delay: Duration::from_micros(delay_us), ..MockExec::quick() })
+                    as Box<dyn Executor>
+            },
+            "v",
+            PoolConfig {
+                workers: 1,
+                queue_capacity: 256,
+                batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) },
+                cache: CacheConfig { enabled: true, capacity: 64 },
+                ..PoolConfig::default()
+            },
+        )
+    }
+
+    fn probe_input() -> Vec<f32> {
+        let mut input = vec![0.0f32; 16];
+        input[2] = 5.0;
+        input
+    }
+
+    #[test]
+    fn cache_hit_answers_identical_input_without_reinference() {
+        let pool = cached(300);
+        let r1 = pool
+            .submit(probe_input())
+            .unwrap()
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap();
+        // The leader completes its cache entry *before* answering, so a
+        // resubmission after recv deterministically hits.
+        let r2 = pool
+            .submit(probe_input())
+            .unwrap()
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap();
+        assert_eq!(r2.pred, r1.pred);
+        assert_eq!(r2.confidence.to_bits(), r1.confidence.to_bits(), "bit-identical answer");
+        assert_eq!(r2.variant, r1.variant);
+        assert_eq!(r2.generation, r1.generation);
+        let snap = pool.telemetry_snapshot();
+        assert_eq!(snap.cache_hits, 1);
+        assert_eq!(snap.cache_inflight_coalesced, 0);
+        assert_eq!(pool.shutdown().served(), 1, "the hit must cost zero inferences");
+    }
+
+    /// N identical submissions while the first is in flight coalesce
+    /// onto one inference, every waiter receiving the leader's response
+    /// bit-identical to what an uncached pool computes for that input.
+    #[test]
+    fn single_flight_coalesces_identical_inflight_requests() {
+        let pool = cached(50_000);
+        let lead = pool.submit(probe_input()).unwrap();
+        let waiters: Vec<_> = (0..4).map(|_| pool.submit(probe_input()).unwrap()).collect();
+        let r0 = lead.recv_timeout(Duration::from_secs(10)).unwrap();
+        for w in waiters {
+            let r = w.recv_timeout(Duration::from_secs(10)).unwrap();
+            assert_eq!(r.id, r0.id, "waiters receive the leader's response");
+            assert_eq!(r.pred, r0.pred);
+            assert_eq!(r.confidence.to_bits(), r0.confidence.to_bits());
+        }
+        // Bit-identical to an uncached run of the same deterministic
+        // executor on the same input.
+        let plain = ServingPool::spawn(
+            |_| Box::new(MockExec::quick()) as Box<dyn Executor>,
+            "v",
+            PoolConfig {
+                workers: 1,
+                queue_capacity: 64,
+                batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) },
+                ..PoolConfig::default()
+            },
+        );
+        let ru = plain
+            .submit(probe_input())
+            .unwrap()
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap();
+        assert_eq!(ru.pred, r0.pred);
+        assert_eq!(ru.confidence.to_bits(), r0.confidence.to_bits());
+        plain.shutdown();
+
+        let snap = pool.telemetry_snapshot();
+        assert_eq!(snap.cache_inflight_coalesced, 4);
+        assert_eq!(pool.shutdown().served(), 1, "five callers, one inference");
+    }
+
+    /// A variant switch can never serve a stale answer: the generation
+    /// bump (under the same lock the submit path reads) orphans every
+    /// pre-switch entry, completed or in flight.
+    #[test]
+    fn variant_switch_invalidates_cache_across_generations() {
+        let pool = cached(300);
+        let r1 = pool
+            .submit(probe_input())
+            .unwrap()
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap();
+        assert_eq!((r1.variant.as_str(), r1.generation), ("v", 0));
+        // Warm hit under the old generation.
+        pool.submit(probe_input()).unwrap().recv_timeout(Duration::from_secs(5)).unwrap();
+        let gen = pool.switch_variant("w");
+        let r2 = pool
+            .submit(probe_input())
+            .unwrap()
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap();
+        assert_eq!(r2.variant, "w", "post-switch submission must not see the cached 'v' answer");
+        assert_eq!(r2.generation, gen);
+        let snap = pool.telemetry_snapshot();
+        assert_eq!(snap.cache_hits, 1, "only the pre-switch resubmission hit");
+        assert!(snap.cache_evictions >= 1, "the stale entry was purged at the switch");
+        assert_eq!(pool.shutdown().served(), 2);
+    }
+
+    /// Switch while the leader is mid-flight: a post-switch identical
+    /// submission must neither hit nor join the pre-switch flight — its
+    /// key carries the new generation, so it runs its own inference
+    /// under the new variant.
+    #[test]
+    fn switch_mid_flight_does_not_coalesce_across_generations() {
+        let pool = cached(50_000);
+        let lead = pool.submit(probe_input()).unwrap();
+        let gen = pool.switch_variant("w"); // acked once the in-flight batch finishes
+        let post = pool.submit(probe_input()).unwrap();
+        let r_post = post.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(r_post.variant, "w");
+        assert_eq!(r_post.generation, gen);
+        lead.recv_timeout(Duration::from_secs(10)).unwrap();
+        let snap = pool.telemetry_snapshot();
+        assert_eq!(snap.cache_inflight_coalesced, 0, "no coalescing across generations");
+        assert_eq!(snap.cache_hits, 0);
+        assert_eq!(pool.shutdown().served(), 2);
+    }
+
+    /// The lane/cache invariant: a priority request never parks behind
+    /// an in-flight normal request (that would chain it through the
+    /// normal lane's batch window), but it *does* take completed hits —
+    /// a cached answer is faster than any queue.
+    #[test]
+    fn priority_never_waits_on_inflight_normal_but_takes_hits() {
+        let pool = cached(50_000);
+        let lead = pool.submit(probe_input()).unwrap();
+        let prio = pool.submit_priority(probe_input()).unwrap();
+        let r_lead = lead.recv_timeout(Duration::from_secs(10)).unwrap();
+        let r_prio = prio.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_ne!(r_prio.id, r_lead.id, "priority ran its own inference");
+        assert_eq!(r_prio.lane, Lane::High);
+        let snap = pool.telemetry_snapshot();
+        assert_eq!(snap.cache_inflight_coalesced, 0, "priority must not join a flight");
+        // A *completed* entry is a different story: hits are allowed.
+        let hit = pool
+            .submit_priority(probe_input())
+            .unwrap()
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap();
+        assert_eq!(hit.pred, r_lead.pred);
+        let snap = pool.telemetry_snapshot();
+        assert_eq!(snap.cache_hits, 1, "priority takes completed hits");
+        assert_eq!(pool.shutdown().served(), 2);
+    }
+
+    // ── zero-copy reclaim ──────────────────────────────────────────────
+
+    /// The dead-worker reclaim path moves the request's `Arc` back out of
+    /// the failed send — retrying on the next worker copies no rows.
+    #[test]
+    fn dead_worker_reclaim_moves_the_input_arc() {
+        let (tx, rx) = channel::<Msg>();
+        drop(rx); // the dead worker's closed channel
+        let input: Arc<[f32]> = vec![1.0f32; 8].into();
+        let (resp, _r) = channel();
+        let req = Request {
+            id: 1,
+            input: Arc::clone(&input),
+            enqueued: Instant::now(),
+            lane: Lane::Normal,
+            resp,
+            cache: None,
+        };
+        let err = tx.send(Msg::Infer(req)).unwrap_err();
+        let Msg::Infer(r) = err.0 else { panic!("send failed on the message we just built") };
+        assert!(Arc::ptr_eq(&r.input, &input), "reclaim must move the Arc, not copy rows");
     }
 
     #[test]

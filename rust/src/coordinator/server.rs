@@ -221,8 +221,18 @@ impl ServingStats {
         }
     }
 
+    /// Several percentiles of the retained window with **one** clone and
+    /// one sort — callers wanting p50/p95/p99 of the same window ask for
+    /// them together instead of paying a full vector clone + sort per
+    /// percentile (the old per-call cost, visible in every bench's
+    /// result collection).
+    pub fn percentiles(&self, ps: &[f64]) -> Vec<f64> {
+        crate::telemetry::percentiles_of(self.latencies_s.clone(), ps)
+    }
+
+    /// Single-percentile convenience over [`ServingStats::percentiles`].
     pub fn percentile(&self, p: f64) -> f64 {
-        crate::telemetry::percentile_of(self.latencies_s.clone(), p)
+        self.percentiles(std::slice::from_ref(&p))[0]
     }
 
     pub fn mean_batch_size(&self) -> f64 {
@@ -417,6 +427,10 @@ fn worker_main(
         draining: false,
     };
     let mut compiled = CompiledSizes::for_variant(&*exec, &st.variant);
+    // Per-worker padding scratch: every batch writes its padded input
+    // here (`Batch::write_padded`), so steady-state serving reuses one
+    // allocation instead of a fresh `Vec<f32>` per batch.
+    let mut padded: Vec<f32> = Vec::new();
     // Idle-poll backoff multiplier: fruitless steal polls double the
     // wait (capped), so a fully idle pool costs a few wakeups per
     // second per worker instead of a steady poll-rate spin; traffic or
@@ -495,7 +509,7 @@ fn worker_main(
             continue;
         }
         if let Some(batch) = st.batcher.pop_batch(&compiled.sorted, Instant::now()) {
-            run_batch(&mut *exec, batch, index, elems, classes, &mut st);
+            run_batch(&mut *exec, batch, index, elems, classes, &mut st, &mut padded);
         }
     }
 
@@ -509,7 +523,7 @@ fn worker_main(
         st.fail_unservable();
     } else {
         while let Some(batch) = st.batcher.pop_batch_now(&compiled.sorted) {
-            run_batch(&mut *exec, batch, index, elems, classes, &mut st);
+            run_batch(&mut *exec, batch, index, elems, classes, &mut st, &mut padded);
         }
     }
 }
@@ -518,7 +532,9 @@ fn worker_main(
 /// request carries (O(1) per request); publish lane-tagged, variant-keyed
 /// latencies to the telemetry slot in one batch-granular record. The
 /// slot's executing flag brackets the run so the steal registry can tell
-/// a wedged worker from an idle one.
+/// a wedged worker from an idle one. `padded` is the worker's reusable
+/// padding scratch — the one place request rows are copied.
+#[allow(clippy::too_many_arguments)]
 fn run_batch(
     exec: &mut dyn Executor,
     batch: Batch,
@@ -526,8 +542,10 @@ fn run_batch(
     elems: usize,
     classes: usize,
     st: &mut WorkerState,
+    padded: &mut Vec<f32>,
 ) {
-    let input = batch.padded_input(elems);
+    batch.write_padded(elems, padded);
+    let input: &[f32] = padded;
     let exec_start = Instant::now();
     // Drop guard, not a plain set/clear pair: if the executor panics the
     // worker thread dies with the flag stuck true, and the zombie slot
@@ -540,7 +558,7 @@ fn run_batch(
     }
     st.tel.set_executing(true);
     let guard = ExecutingGuard(&st.tel);
-    let result = exec.run(&st.variant, batch.compiled_batch, &input);
+    let result = exec.run(&st.variant, batch.compiled_batch, input);
     drop(guard);
     match result {
         Ok(probs) => {
@@ -556,7 +574,7 @@ fn run_batch(
             // the lane samples below stay end-to-end.
             let exec_s = now.duration_since(exec_start).as_secs_f64();
             let mut samples: Vec<(Lane, f64)> = Vec::with_capacity(batch.requests.len());
-            for (i, req) in batch.requests.iter().enumerate() {
+            for (i, req) in batch.requests.into_iter().enumerate() {
                 let row = &probs[i * classes..(i + 1) * classes];
                 let (pred, conf) = row
                     .iter()
@@ -567,7 +585,7 @@ fn run_batch(
                 let latency = now.duration_since(req.enqueued);
                 samples.push((req.lane, latency.as_secs_f64()));
                 st.tel.depth_dec();
-                let _ = req.resp.send(Response {
+                let resp = Response {
                     id: req.id,
                     pred,
                     confidence: conf,
@@ -576,7 +594,16 @@ fn run_batch(
                     worker,
                     lane: req.lane,
                     latency,
-                });
+                };
+                // A single-flight leader fans its answer out to every
+                // coalesced waiter and stores the completed entry —
+                // *before* answering its own caller, so once a submitter
+                // has the response in hand, an identical resubmission is
+                // guaranteed to hit (not re-join a phantom flight).
+                if let Some(slot) = req.cache {
+                    slot.complete(&resp);
+                }
+                let _ = req.resp.send(resp);
             }
             st.tel.record_batch(&st.variant, exec_s, &samples);
         }
@@ -785,6 +812,25 @@ mod tests {
         let stats = ServingStats { served: 4, batches: 2, latencies_s: vec![0.1, 0.2, 0.3, 0.4], ..Default::default() };
         assert!((stats.percentile(0.5) - 0.3).abs() < 1e-9 || (stats.percentile(0.5) - 0.2).abs() < 1e-9);
         assert!((stats.percentile(1.0) - 0.4).abs() < 1e-9);
+    }
+
+    /// The batched form returns the same values as per-percentile
+    /// queries — it just clones and sorts the window once instead of
+    /// once per requested percentile.
+    #[test]
+    fn stats_percentiles_batch_matches_single() {
+        let stats = ServingStats {
+            served: 5,
+            batches: 2,
+            latencies_s: vec![0.5, 0.1, 0.4, 0.2, 0.3],
+            ..Default::default()
+        };
+        let ps = [0.0, 0.5, 0.95, 0.99, 1.0];
+        let batch = stats.percentiles(&ps);
+        for (i, &p) in ps.iter().enumerate() {
+            assert!((batch[i] - stats.percentile(p)).abs() < 1e-12, "p={p}");
+        }
+        assert_eq!(ServingStats::default().percentiles(&ps), vec![0.0; ps.len()]);
     }
 
     #[test]

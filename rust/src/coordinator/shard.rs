@@ -300,10 +300,13 @@ impl PeerTransport for SimulatedPeer {
     }
 }
 
-/// One request in flight to a peer link.
+/// One request in flight to a peer link. The input rides as a shared
+/// immutable buffer so losing an admission race (and retrying the next
+/// ranked route) moves a pointer, never rows — see
+/// [`ShardRouter::submit_lane`]'s give-back loop.
 struct InferJob {
     id: u64,
-    input: Vec<f32>,
+    input: Arc<[f32]>,
     enqueued: Instant,
     lane: Lane,
     /// Segment cut: `0` ships the whole request (full-remote); `k > 0`
@@ -797,21 +800,31 @@ impl ShardRouter {
     }
 
     /// Submit on the normal lane.
-    pub fn submit(&self, input: Vec<f32>) -> Result<Receiver<Response>, Rejected> {
+    pub fn submit(&self, input: impl Into<Arc<[f32]>>) -> Result<Receiver<Response>, Rejected> {
         self.submit_lane(input, Lane::Normal)
     }
 
     /// Submit on the high-priority lane. Priority requests are routed by
     /// the same estimates but are never used as degraded-link probes.
-    pub fn submit_priority(&self, input: Vec<f32>) -> Result<Receiver<Response>, Rejected> {
+    pub fn submit_priority(
+        &self,
+        input: impl Into<Arc<[f32]>>,
+    ) -> Result<Receiver<Response>, Rejected> {
         self.submit_lane(input, Lane::High)
     }
 
     /// Route one submission: probe turn → best-estimate *route* (each
     /// peer offers up to two: full-remote and `split@cut`) → local
     /// fallback. Rejected only when the local pool *and* every routable
-    /// peer are at capacity.
-    pub fn submit_lane(&self, input: Vec<f32>, lane: Lane) -> Result<Receiver<Response>, Rejected> {
+    /// peer are at capacity. The input is shared, not owned: every
+    /// failed admission attempt hands the same `Arc` back for the next
+    /// target, so a request that tries three routes before landing still
+    /// copies zero rows.
+    pub fn submit_lane(
+        &self,
+        input: impl Into<Arc<[f32]>>,
+        lane: Lane,
+    ) -> Result<Receiver<Response>, Rejected> {
         let n = self.seq.fetch_add(1, Ordering::Relaxed);
         let peers = self.peers.read().unwrap();
 
@@ -822,7 +835,7 @@ impl ShardRouter {
         // infinite prior, making the exclusion permanent). Full-remote
         // and split routes probe separately: each has its own telemetry
         // lane to refresh. Priority requests never probe.
-        let mut input = input;
+        let mut input: Arc<[f32]> = input.into();
         if lane == Lane::Normal && self.cfg.probe_every > 0 && n % self.cfg.probe_every == 0 {
             let mut unroutable: Vec<(usize, usize)> = Vec::new();
             for (i, p) in peers.iter().enumerate() {
@@ -940,11 +953,11 @@ impl ShardRouter {
     fn try_peer(
         &self,
         slot: &PeerSlot,
-        input: Vec<f32>,
+        input: Arc<[f32]>,
         lane: Lane,
         probe: bool,
         cut: usize,
-    ) -> Result<Receiver<Response>, Vec<f32>> {
+    ) -> Result<Receiver<Response>, Arc<[f32]>> {
         let prev = slot.tel.depth_inc();
         if prev >= self.cfg.peer_capacity {
             slot.tel.depth_cancel();
@@ -1652,6 +1665,31 @@ mod tests {
 
     fn snap_with(views: Vec<WorkerView>) -> TelemetrySnapshot {
         TelemetrySnapshot { per_worker: views, ..TelemetrySnapshot::default() }
+    }
+
+    /// Losing a peer-admission race hands the *same* shared input buffer
+    /// back (pointer equality), so walking the ranked routes — and the
+    /// eventual local fallback — never copies a row no matter how many
+    /// targets refuse the request.
+    #[test]
+    fn try_peer_gives_the_input_arc_back_on_admission_loss() {
+        let router = ShardRouter::new(
+            local_pool(1, 100, 64),
+            ShardRouterConfig { peer_capacity: 1, ..ShardRouterConfig::default() },
+        );
+        router.add_simulated_peer("edge", peer_exec(100), SharedLink::new(800.0, 0.1), 0.001);
+        let input: Arc<[f32]> = vec![1.0f32; 16].into();
+        let peers = router.peers.read().unwrap();
+        let slot = &peers[0];
+        // Fill the link's bounded in-flight window so admission refuses.
+        slot.tel.depth_inc();
+        let back = router
+            .try_peer(slot, Arc::clone(&input), Lane::Normal, false, 0)
+            .expect_err("a full window must refuse admission");
+        assert!(Arc::ptr_eq(&back, &input), "give-back must move the Arc, not copy rows");
+        slot.tel.depth_cancel();
+        drop(peers);
+        router.shutdown();
     }
 
     #[test]

@@ -238,7 +238,14 @@ mod tests {
 
     fn req(id: u64) -> Request {
         let (resp, _rx) = channel();
-        Request { id, input: vec![0.0; 4], enqueued: Instant::now(), lane: Lane::Normal, resp }
+        Request {
+            id,
+            input: vec![0.0; 4].into(),
+            enqueued: Instant::now(),
+            lane: Lane::Normal,
+            resp,
+            cache: None,
+        }
     }
 
     #[test]
@@ -266,6 +273,29 @@ mod tests {
         assert_eq!(ids, vec![3, 4, 5], "thief takes the youngest tail, order preserved");
         assert_eq!(d.len(), 3, "the owner keeps the front");
         assert_eq!(d.pop_front().unwrap().id, 0);
+    }
+
+    /// Migration moves the request's shared input buffer, never its
+    /// contents: the stolen request holds the *same* `Arc<[f32]>` the
+    /// owner enqueued (pointer equality, not just value equality).
+    #[test]
+    fn steal_tail_migrates_inputs_zero_copy() {
+        let d = StealDeque::new();
+        let input: Arc<[f32]> = vec![1.0f32; 64].into();
+        let (resp, _rx) = channel();
+        d.push_back(Request {
+            id: 9,
+            input: Arc::clone(&input),
+            enqueued: Instant::now(),
+            lane: Lane::Normal,
+            resp,
+            cache: None,
+        });
+        let stolen = d.steal_tail(1);
+        assert!(
+            Arc::ptr_eq(&stolen[0].input, &input),
+            "a steal must move the Arc, not copy rows"
+        );
     }
 
     #[test]

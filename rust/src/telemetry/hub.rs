@@ -521,6 +521,17 @@ pub struct TelemetrySnapshot {
     pub frontier_batches: usize,
     /// Split requests coalesced into those windows.
     pub frontier_coalesced: usize,
+    /// Requests answered from a completed response-cache entry: traffic
+    /// that never reached a worker queue. Load the AIMD sizer must not
+    /// provision for (it already sees the *un*-absorbed traffic via
+    /// occupancy — this tells the decision level how much is absorbed).
+    pub cache_hits: usize,
+    /// Requests coalesced onto an identical in-flight inference
+    /// (single-flight waiters; the leader itself counts as served).
+    pub cache_inflight_coalesced: usize,
+    /// Completed cache entries dropped — LRU bound or generation purge
+    /// after a variant switch.
+    pub cache_evictions: usize,
     pub lanes: [LaneView; LANES],
     pub per_worker: Vec<WorkerView>,
     pub per_variant: BTreeMap<String, VariantView>,
@@ -549,6 +560,9 @@ impl Default for TelemetrySnapshot {
             split_degraded: 0,
             frontier_batches: 0,
             frontier_coalesced: 0,
+            cache_hits: 0,
+            cache_inflight_coalesced: 0,
+            cache_evictions: 0,
             lanes: [LaneView::default(), LaneView::default()],
             per_worker: Vec::new(),
             per_variant: BTreeMap::new(),
@@ -574,11 +588,24 @@ impl TelemetrySnapshot {
 }
 
 /// The hub itself: slot registry + snapshot assembly.
+///
+/// Besides the per-worker slots, the hub carries a few *pool-level*
+/// counters published by mechanisms that sit **above** the workers —
+/// the response cache consults at admission, before any worker is even
+/// picked, so its observables have no slot to live in. They follow the
+/// same rules as slot counters: relaxed atomics on the publish side,
+/// summed into every [`TelemetrySnapshot`].
 #[derive(Debug)]
 pub struct TelemetryHub {
     slots: RwLock<Vec<Arc<WorkerTelemetry>>>,
     queue_capacity: AtomicUsize,
     reservoir_capacity: usize,
+    /// Response-cache hits (completed-entry answers, no inference).
+    cache_hits: Counter,
+    /// Single-flight waiters coalesced onto an in-flight inference.
+    cache_coalesced: Counter,
+    /// Completed cache entries evicted (LRU bound or generation purge).
+    cache_evictions: Counter,
 }
 
 /// Default per-lane / per-variant reservoir size: large enough that test
@@ -596,7 +623,39 @@ impl TelemetryHub {
             slots: RwLock::new(Vec::new()),
             queue_capacity: AtomicUsize::new(queue_capacity),
             reservoir_capacity,
+            cache_hits: Counter::new(),
+            cache_coalesced: Counter::new(),
+            cache_evictions: Counter::new(),
         }
+    }
+
+    // ── pool-level cache lane (published by `coordinator::cache`) ─────
+
+    /// One request answered from a completed response-cache entry.
+    pub fn record_cache_hit(&self) {
+        self.cache_hits.inc();
+    }
+
+    /// One request coalesced onto an identical in-flight inference.
+    pub fn record_cache_coalesced(&self) {
+        self.cache_coalesced.inc();
+    }
+
+    /// `n` completed cache entries evicted (LRU bound / generation purge).
+    pub fn record_cache_evictions(&self, n: usize) {
+        self.cache_evictions.add(n);
+    }
+
+    pub fn cache_hits(&self) -> usize {
+        self.cache_hits.get()
+    }
+
+    pub fn cache_inflight_coalesced(&self) -> usize {
+        self.cache_coalesced.get()
+    }
+
+    pub fn cache_evictions(&self) -> usize {
+        self.cache_evictions.get()
     }
 
     /// Register a new local worker slot (pool spawn / dynamic grow).
@@ -630,7 +689,13 @@ impl TelemetryHub {
     pub fn snapshot(&self) -> TelemetrySnapshot {
         let slots = self.slots();
         let queue_capacity = self.queue_capacity();
-        let mut snap = TelemetrySnapshot { queue_capacity, ..TelemetrySnapshot::default() };
+        let mut snap = TelemetrySnapshot {
+            queue_capacity,
+            cache_hits: self.cache_hits(),
+            cache_inflight_coalesced: self.cache_inflight_coalesced(),
+            cache_evictions: self.cache_evictions(),
+            ..TelemetrySnapshot::default()
+        };
 
         let mut lane_samples: [Vec<f64>; LANES] = [Vec::new(), Vec::new()];
         let mut variant_acc: BTreeMap<String, (usize, Vec<f64>)> = BTreeMap::new();
@@ -940,6 +1005,26 @@ mod tests {
         let w = hub.register(0);
         assert_eq!(w.frontier_batches(), 0);
         assert_eq!(w.frontier_coalesced(), 0);
+    }
+
+    /// The pool-level cache lane flows through the snapshot without
+    /// touching slot accounting: hits are absorbed traffic, not served
+    /// traffic.
+    #[test]
+    fn cache_lane_flows_through_snapshots() {
+        let hub = TelemetryHub::new(8);
+        let w = hub.register(0);
+        w.record_batch("v", 0.004, &[(Lane::Normal, 0.004)]);
+        hub.record_cache_hit();
+        hub.record_cache_hit();
+        hub.record_cache_coalesced();
+        hub.record_cache_evictions(3);
+        let snap = hub.snapshot();
+        assert_eq!(snap.cache_hits, 2);
+        assert_eq!(snap.cache_inflight_coalesced, 1);
+        assert_eq!(snap.cache_evictions, 3);
+        assert_eq!(snap.served, 1, "cache hits must not inflate served");
+        assert_eq!(snap.queue_depth, 0, "absorbed traffic never touched a queue");
     }
 
     #[test]

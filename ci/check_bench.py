@@ -3,8 +3,10 @@
 
 Compares a fresh bench JSON against its committed baseline and fails
 when any entry's p95 latency regressed by more than the allowed
-fraction (default 20%). Three schemas are understood, auto-detected per
-file:
+fraction (default 20%). With `--max-p99-regression` set, each entry's
+p99 is gated too under its own budget (tail latency is the open-loop
+scenario suite's whole point, but it is noisier than p95 — give it a
+wider budget). Three schemas are understood, auto-detected per file:
 
   serving (`BENCH_serving.json` vs `ci/BENCH_baseline.json`):
 
@@ -28,6 +30,16 @@ file:
      "scenarios": [{"name": "submit_unique", "req_per_s": R,
                     "p95_ms": ...}, ...],
      "cache": {"hits": ..., "coalesced": ..., "served": ...}}
+
+  open-loop scenario suite (`BENCH_scenarios.json` vs
+  `ci/BENCH_scenarios_baseline.json`) — same string-keyed scenarios
+  array, gated on p95 *and* (with the flag) p99:
+
+    {"bench": "scenarios", "seed": S,
+     "scenarios": [{"name": "flash_crowd_x8", "req_per_s": R,
+                    "p95_ms": ..., "p99_ms": ...,
+                    "rejected": ..., "failed": ...,
+                    "adaptation": {...}}, ...]}
 
 Additive top-level keys (`skewed`, `split`, `best`, ...) are ignored:
 the gate reads only the primary entry array, so recording a new
@@ -82,8 +94,51 @@ def entries(doc, path):
     sys.exit(1)
 
 
-def compare(cur_doc, base_doc, max_p95_regression, cur_name="current", base_name="baseline"):
-    """Gate cur_doc against base_doc; returns True when within budget."""
+def gate_metric(shared, cur, base, id_field, key, budget):
+    """Gate one latency column across shared entries; True if any regressed.
+
+    Entries missing the key on either side are skipped, not failed — a
+    baseline seeded before the key existed (or a schema extension
+    mid-flight) must not break the gate.
+    """
+    label = key.removesuffix("_ms")
+    failed = False
+    print(
+        f"{id_field:>8} {'base ' + label:>10} {'cur ' + label:>10} "
+        f"{'delta':>8} {'budget':>8}  verdict"
+    )
+    for w in shared:
+        b = base[w].get(key)
+        c = cur[w].get(key)
+        if b is None or c is None:
+            print(f"{w:>8} {'-':>10} {'-':>10} {'-':>8} {'-':>8}  skipped ({label} key missing)")
+            continue
+        b, c = float(b), float(c)
+        if b <= 0:
+            print(f"{w:>8} {'-':>10} {c:>10.2f} {'-':>8} {'-':>8}  skipped (no baseline {label})")
+            continue
+        delta = (c - b) / b
+        verdict = "ok" if delta <= budget else "REGRESSED"
+        if delta > budget:
+            failed = True
+        print(f"{w:>8} {b:>10.2f} {c:>10.2f} {delta:>+7.1%} {budget:>7.0%}  {verdict}")
+    return failed
+
+
+def compare(
+    cur_doc,
+    base_doc,
+    max_p95_regression,
+    cur_name="current",
+    base_name="baseline",
+    max_p99_regression=None,
+):
+    """Gate cur_doc against base_doc; returns True when within budget.
+
+    `max_p99_regression=None` (the default) keeps the historical
+    behavior: only p95 is gated. A float adds a second gate over each
+    entry's `p99_ms` with its own budget.
+    """
     cur, id_field = entries(cur_doc, cur_name)
     base, base_field = entries(base_doc, base_name)
     if id_field != base_field:
@@ -110,26 +165,14 @@ def compare(cur_doc, base_doc, max_p95_regression, cur_name="current", base_name
         )
         return True
 
-    failed = False
-    print(f"{id_field:>8} {'base p95':>10} {'cur p95':>10} {'delta':>8} {'budget':>8}  verdict")
-    for w in shared:
-        # Tolerate entries missing p95 (a baseline seeded before the key
-        # existed, or a schema extension mid-flight): skip, don't crash.
-        b95 = base[w].get("p95_ms")
-        c95 = cur[w].get("p95_ms")
-        if b95 is None or c95 is None:
-            print(f"{w:>8} {'-':>10} {'-':>10} {'-':>8} {'-':>8}  skipped (p95 key missing)")
-            continue
-        b95, c95 = float(b95), float(c95)
-        if b95 <= 0:
-            print(f"{w:>8} {'-':>10} {c95:>10.2f} {'-':>8} {'-':>8}  skipped (no baseline p95)")
-            continue
-        delta = (c95 - b95) / b95
-        budget = max_p95_regression
-        verdict = "ok" if delta <= budget else "REGRESSED"
-        if delta > budget:
-            failed = True
-        print(f"{w:>8} {b95:>10.2f} {c95:>10.2f} {delta:>+7.1%} {budget:>7.0%}  {verdict}")
+    gates = [("p95_ms", "p95", max_p95_regression)]
+    if max_p99_regression is not None:
+        gates.append(("p99_ms", "p99", max_p99_regression))
+    broken = [
+        label
+        for key, label, budget in gates
+        if gate_metric(shared, cur, base, id_field, key, budget)
+    ]
 
     # Throughput is informational (wall-clock req/s on shared runners is
     # too noisy to gate on); surface it so trends stay visible in logs.
@@ -139,10 +182,9 @@ def compare(cur_doc, base_doc, max_p95_regression, cur_name="current", base_name
         if br > 0:
             print(f"info: {id_field} {w} req/s {cr:.0f} vs baseline {br:.0f} ({(cr - br) / br:+.1%})")
 
-    if failed:
+    if broken:
         print(
-            f"FAIL: p95 regressed more than {max_p95_regression:.0%} "
-            f"against {base_name}",
+            f"FAIL: {' and '.join(broken)} regressed past budget against {base_name}",
             file=sys.stderr,
         )
         return False
@@ -153,7 +195,8 @@ def compare(cur_doc, base_doc, max_p95_regression, cur_name="current", base_name
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument(
-        "current", help="fresh bench JSON (BENCH_serving / BENCH_sharding / BENCH_hotpath)"
+        "current",
+        help="fresh bench JSON (BENCH_serving / BENCH_sharding / BENCH_hotpath / BENCH_scenarios)",
     )
     ap.add_argument("baseline", help="committed baseline JSON")
     ap.add_argument(
@@ -162,11 +205,24 @@ def main(argv=None):
         default=0.20,
         help="allowed fractional p95 increase per entry (default 0.20)",
     )
+    ap.add_argument(
+        "--max-p99-regression",
+        type=float,
+        default=None,
+        help="also gate p99_ms under this fractional budget (default: p99 not gated)",
+    )
     args = ap.parse_args(argv)
 
     cur = load(args.current)
     base = load(args.baseline)
-    ok = compare(cur, base, args.max_p95_regression, args.current, args.baseline)
+    ok = compare(
+        cur,
+        base,
+        args.max_p95_regression,
+        args.current,
+        args.baseline,
+        max_p99_regression=args.max_p99_regression,
+    )
     sys.exit(0 if ok else 1)
 
 

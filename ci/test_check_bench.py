@@ -209,5 +209,60 @@ class HotpathSchemaTest(unittest.TestCase):
         self.assertEqual(ctx.exception.code, 1)
 
 
+def scenarios_doc(tails_by_name):
+    """Open-loop suite doc: name -> (p95_ms, p99_ms); p99 may be None."""
+    doc = {"bench": "scenarios", "seed": 2026, "scenarios": []}
+    for n, (p95, p99) in tails_by_name.items():
+        entry = {"name": n, "req_per_s": 800.0, "p95_ms": p95, "rejected": 0, "failed": 0}
+        if p99 is not None:
+            entry["p99_ms"] = p99
+        doc["scenarios"].append(entry)
+    return doc
+
+
+class P99GateTest(unittest.TestCase):
+    def test_p99_within_budget_passes(self):
+        base = scenarios_doc({"steady_poisson": (50.0, 120.0), "flash_crowd_x8": (400.0, 1200.0)})
+        cur = scenarios_doc({"steady_poisson": (55.0, 150.0), "flash_crowd_x8": (420.0, 1400.0)})
+        self.assertTrue(check_bench.compare(cur, base, 0.20, max_p99_regression=0.35))
+
+    def test_p99_regression_fails_with_flag(self):
+        # p95 healthy, p99 blown: exactly the tail blowup the open-loop
+        # suite exists to catch (coordinated-omission-free measurement).
+        base = scenarios_doc({"flash_crowd_x8": (400.0, 1200.0)})
+        cur = scenarios_doc({"flash_crowd_x8": (410.0, 2000.0)})  # p99 +67%
+        self.assertFalse(check_bench.compare(cur, base, 0.20, max_p99_regression=0.35))
+
+    def test_p99_ignored_without_flag(self):
+        # Historical callers (serving/sharding/hotpath gates) pass no
+        # p99 budget and must keep passing on p95 alone.
+        base = scenarios_doc({"flash_crowd_x8": (400.0, 1200.0)})
+        cur = scenarios_doc({"flash_crowd_x8": (410.0, 99999.0)})
+        self.assertTrue(check_bench.compare(cur, base, 0.20))
+
+    def test_missing_p99_keys_are_skipped(self):
+        # A baseline seeded before p99 existed gates p95 only, even with
+        # the flag on — schema extension must not break the gate.
+        base = scenarios_doc({"churn_under_load": (300.0, None)})
+        cur = scenarios_doc({"churn_under_load": (310.0, 99999.0)})
+        self.assertTrue(check_bench.compare(cur, base, 0.20, max_p99_regression=0.35))
+
+    def test_separate_budgets_apply_per_metric(self):
+        # +30% on both tails: past the 0.20 p95 budget even though it is
+        # inside the wider 0.35 p99 budget.
+        base = scenarios_doc({"diurnal": (100.0, 200.0)})
+        cur = scenarios_doc({"diurnal": (130.0, 260.0)})
+        self.assertFalse(check_bench.compare(cur, base, 0.20, max_p99_regression=0.35))
+        # Same run under a looser p95 budget is fine.
+        self.assertTrue(check_bench.compare(cur, base, 0.35, max_p99_regression=0.35))
+
+    def test_p99_gate_applies_to_numeric_schemas_too(self):
+        base = serving_doc({1: 100.0, 2: 50.0})
+        base["widths"][0]["p99_ms"] = 200.0
+        cur = serving_doc({1: 100.0, 2: 50.0})
+        cur["widths"][0]["p99_ms"] = 400.0
+        self.assertFalse(check_bench.compare(cur, base, 0.20, max_p99_regression=0.35))
+
+
 if __name__ == "__main__":
     unittest.main()

@@ -428,7 +428,13 @@ struct PeerSlot {
     name: String,
     tx: Sender<PeerMsg>,
     tel: Arc<WorkerTelemetry>,
-    join: JoinHandle<()>,
+    /// Link thread handle; taken (and joined) by
+    /// [`ShardRouter::kill_peer`], so `None` marks a reaped thread.
+    join: Option<JoinHandle<()>>,
+    /// Scripted death ([`ShardRouter::kill_peer`]): a dead peer is
+    /// excluded from routing, probing, and reconciliation permanently —
+    /// unlike a degraded peer, it can never be re-admitted.
+    dead: AtomicBool,
     /// Plan-predicted per-request latency prior (f64 bits; `INFINITY`
     /// when the current plan excludes this peer).
     plan_s: AtomicU64,
@@ -530,6 +536,10 @@ impl PeerSlot {
 pub struct PeerStat {
     pub name: String,
     pub admitted: bool,
+    /// Scripted death ([`ShardRouter::kill_peer`]): permanently out of
+    /// the fleet (never re-admitted), kept in the list for index
+    /// stability.
+    pub dead: bool,
     /// Submissions routed to this peer (probes and splits included).
     pub routed: usize,
     pub probes: usize,
@@ -734,7 +744,8 @@ impl ShardRouter {
             name: name.to_string(),
             tx,
             tel,
-            join,
+            join: Some(join),
+            dead: AtomicBool::new(false),
             plan_s: AtomicU64::new(f2b(plan_latency_s)),
             measured_s: AtomicU64::new(f2b(0.0)),
             last_failed: AtomicUsize::new(0),
@@ -839,6 +850,12 @@ impl ShardRouter {
         if lane == Lane::Normal && self.cfg.probe_every > 0 && n % self.cfg.probe_every == 0 {
             let mut unroutable: Vec<(usize, usize)> = Vec::new();
             for (i, p) in peers.iter().enumerate() {
+                // A dead peer is not "unroutable, keep measured" — it is
+                // gone. Probing it would strand every probe request on a
+                // drained channel's error path.
+                if p.dead.load(Ordering::Acquire) {
+                    continue;
+                }
                 if !p.admitted.load(Ordering::Acquire) || !p.estimate_s().is_finite() {
                     unroutable.push((i, 0));
                 }
@@ -879,6 +896,9 @@ impl ShardRouter {
         // split-routed — the invariant the module doc states).
         let mut routes: Vec<(usize, usize, f64)> = Vec::new();
         for (i, p) in peers.iter().enumerate() {
+            if p.dead.load(Ordering::Acquire) {
+                continue;
+            }
             let depth = p.tel.queue_depth();
             if depth >= self.cfg.peer_capacity {
                 continue;
@@ -1019,6 +1039,12 @@ impl ShardRouter {
         let peers = self.peers.read().unwrap();
         let mut admitted = 0usize;
         for (i, p) in peers.iter().enumerate() {
+            // Dead peers are past reconciliation: no estimate refresh,
+            // no window tuning, and — critically — no re-admission (a
+            // drained link with a healthy final EWMA must stay out).
+            if p.dead.load(Ordering::Acquire) {
+                continue;
+            }
             let view = tel.per_worker.iter().find(|v| v.worker == REMOTE_WORKER_BASE + i);
             if let Some(v) = view {
                 // Failed requests produce no latency sample, so a dead
@@ -1263,6 +1289,7 @@ impl ShardRouter {
                 .map(|p| PeerStat {
                     name: p.name.clone(),
                     admitted: p.admitted.load(Ordering::Acquire),
+                    dead: p.dead.load(Ordering::Acquire),
                     routed: p.routed.load(Ordering::Relaxed),
                     probes: p.probes.load(Ordering::Relaxed),
                     served: p.tel.served_total(),
@@ -1291,10 +1318,52 @@ impl ShardRouter {
     pub fn switch_variant(&self, variant: &str) -> u64 {
         let generation = self.pool.switch_variant(variant);
         let peers = self.peers.read().unwrap();
-        for p in peers.iter() {
+        for p in peers.iter().filter(|p| !p.dead.load(Ordering::Acquire)) {
             let _ = p.tx.send(PeerMsg::Switch { variant: variant.to_string(), generation });
         }
         generation
+    }
+
+    /// Remove one peer from the fleet mid-run — the scenario harness's
+    /// "device left" event — without failing a single in-flight caller.
+    ///
+    /// Ordering is the whole contract. Every submission sends to a peer
+    /// while holding the `peers` **read** lock; this method flags the
+    /// peer dead and sends `Shutdown` under the **write** lock, which
+    /// waits out every in-flight reader first. So by channel order,
+    /// `Shutdown` lands *after* every admitted request, and any
+    /// submission that acquires the lock afterwards sees `dead` and
+    /// never targets the peer — the link thread's graceful drain
+    /// (flush the open frontier window, then serve everything still
+    /// queued) therefore answers every admitted caller before exiting.
+    ///
+    /// The join happens *outside* the lock: the drain takes real time,
+    /// and holding the write lock through it would stall every
+    /// concurrent submission on the router.
+    ///
+    /// Returns `false` if the peer was already dead. The slot stays in
+    /// the peer list (indices are stable for scripts and stats); its
+    /// telemetry slot is retired so snapshots drop it from
+    /// `remote_peers`.
+    pub fn kill_peer(&self, peer: usize) -> bool {
+        let join = {
+            let mut peers = self.peers.write().unwrap();
+            let p = &mut peers[peer];
+            if p.dead.swap(true, Ordering::AcqRel) {
+                return false;
+            }
+            p.admitted.store(false, Ordering::Release);
+            p.split_admitted.store(false, Ordering::Release);
+            let _ = p.tx.send(PeerMsg::Shutdown);
+            p.join.take()
+        };
+        if let Some(handle) = join {
+            let _ = handle.join();
+        }
+        // The drain is complete: retire the telemetry slot *after* the
+        // last served sample so the final snapshot still carries it.
+        self.peers.read().unwrap()[peer].tel.retire();
+        true
     }
 
     /// Stop peers (draining their queued requests) and the pool; returns
@@ -1305,7 +1374,9 @@ impl ShardRouter {
             let _ = p.tx.send(PeerMsg::Shutdown);
         }
         for p in peers {
-            let _ = p.join.join();
+            if let Some(handle) = p.join {
+                let _ = handle.join();
+            }
             p.tel.retire();
         }
         self.pool.shutdown()
@@ -2529,6 +2600,51 @@ mod tests {
         let tel = router.telemetry_snapshot();
         let pv = tel.per_worker.iter().find(|v| v.remote).unwrap();
         assert!(pv.ewma_s >= 600e-6, "hub EWMA must include Link::delay_s: {}", pv.ewma_s);
+        router.shutdown();
+    }
+
+    /// Scripted peer death must fail zero in-flight callers: everything
+    /// admitted to the link before the kill is drained and answered,
+    /// and everything submitted after routes around the dead peer.
+    #[test]
+    fn kill_peer_drains_inflight_and_excludes_routing() {
+        let router = ShardRouter::new(
+            local_pool(1, 100, 64),
+            ShardRouterConfig { local_prior_s: 0.050, ..ShardRouterConfig::default() },
+        );
+        // A slow peer the plan prior strongly prefers: submissions pile
+        // up on the link so the kill lands with requests in flight.
+        router.add_simulated_peer("edge", peer_exec(3_000), SharedLink::new(800.0, 0.1), 0.0001);
+        let mut rxs = Vec::new();
+        for _ in 0..12 {
+            rxs.push(router.submit(vec![1.0f32; 16]).unwrap());
+        }
+        assert!(router.kill_peer(0), "first kill reports the transition");
+        assert!(!router.kill_peer(0), "second kill is a no-op");
+        for rx in rxs {
+            let r = rx.recv_timeout(Duration::from_secs(5));
+            assert!(r.is_ok(), "an admitted request died with the peer: {r:?}");
+        }
+        let stats = router.shard_stats();
+        assert!(stats.peers[0].dead && !stats.peers[0].admitted);
+        assert_eq!(stats.peers[0].failed, 0, "drain must serve, not fail");
+        assert_eq!(router.admitted_peers(), 0);
+        // Post-kill traffic routes locally — including probe turns,
+        // which must never target a dead peer.
+        let routed_before = stats.peers[0].routed;
+        let mut rxs = Vec::new();
+        for _ in 0..24 {
+            rxs.push(router.submit(vec![1.0f32; 16]).unwrap());
+        }
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        }
+        let stats = router.shard_stats();
+        assert_eq!(stats.peers[0].routed, routed_before, "dead peer saw new submissions");
+        // Reconciliation never resurrects a dead peer, even with a
+        // healthy-looking final EWMA in the snapshot.
+        router.maintain(&snap_with(vec![view(REMOTE_WORKER_BASE, true, 0.001)]));
+        assert_eq!(router.admitted_peers(), 0, "maintain re-admitted a dead peer");
         router.shutdown();
     }
 }

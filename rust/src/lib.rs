@@ -86,6 +86,20 @@
 //! [`partition::SharedLink`]) keeps the whole path testable offline;
 //! [`coordinator::PeerTransport`] is the seam for a real network
 //! transport.
+//!
+//! ## Open-loop scenario harness
+//!
+//! The [`workload`] module measures all of the above the way a fleet
+//! of real users would load it: trace-driven **open-loop** arrival
+//! schedules (Poisson / diurnal / flash-crowd, replayable by seed)
+//! whose latency is charged from each request's *scheduled arrival
+//! instant* — no coordinated omission — plus scripted **fleet
+//! dynamics** ([`workload::FleetScript`]: peers joining and dying
+//! mid-run, links collapsing, device profiles drifting, variant
+//! switches) applied against the live router + pool stack while the
+//! control loop ticks. `benches/scenarios.rs` runs the named scenario
+//! suite (steady / diurnal / flash crowd / churn / campus replay) and
+//! CI gates its p95 *and* p99 against committed baselines.
 
 pub mod baselines;
 pub mod compress;
@@ -102,3 +116,4 @@ pub mod runtime;
 pub mod telemetry;
 pub mod transform;
 pub mod util;
+pub mod workload;

@@ -585,6 +585,56 @@ impl TelemetrySnapshot {
             (self.queue_depth as f64 / cap).clamp(0.0, 1.0)
         }
     }
+
+    /// Difference of this snapshot's monotonic counters against an
+    /// earlier `base` snapshot of the same hub: what happened *during*
+    /// the window between the two. Saturating, so a slot retired and
+    /// replaced between snapshots degrades to zero instead of wrapping.
+    /// Gauges and percentiles are point-in-time, not windowed — read
+    /// them off the snapshots directly.
+    pub fn delta_since(&self, base: &TelemetrySnapshot) -> SnapshotDelta {
+        SnapshotDelta {
+            served: self.served.saturating_sub(base.served),
+            batches: self.batches.saturating_sub(base.batches),
+            rejected: self.rejected.saturating_sub(base.rejected),
+            failed: self.failed.saturating_sub(base.failed),
+            switches: self.switches.saturating_sub(base.switches),
+            steals: self.steals.saturating_sub(base.steals),
+            split_served: self.split_served.saturating_sub(base.split_served),
+            split_degraded: self.split_degraded.saturating_sub(base.split_degraded),
+            frontier_batches: self.frontier_batches.saturating_sub(base.frontier_batches),
+            frontier_coalesced: self.frontier_coalesced.saturating_sub(base.frontier_coalesced),
+            cache_hits: self.cache_hits.saturating_sub(base.cache_hits),
+            cache_inflight_coalesced: self
+                .cache_inflight_coalesced
+                .saturating_sub(base.cache_inflight_coalesced),
+            cache_evictions: self.cache_evictions.saturating_sub(base.cache_evictions),
+        }
+    }
+}
+
+/// Windowed counter deltas between two [`TelemetrySnapshot`]s of the
+/// same hub (see [`TelemetrySnapshot::delta_since`]) — the scenario
+/// harness's per-window adaptation/serving accounting: "this scenario
+/// caused N steals, M cache hits, K switches", independent of whatever
+/// ran on the stack before it.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SnapshotDelta {
+    pub served: usize,
+    pub batches: usize,
+    pub rejected: usize,
+    pub failed: usize,
+    /// Per-slot switch applications (a pool-wide variant switch counts
+    /// once per worker/peer that applied it).
+    pub switches: usize,
+    pub steals: usize,
+    pub split_served: usize,
+    pub split_degraded: usize,
+    pub frontier_batches: usize,
+    pub frontier_coalesced: usize,
+    pub cache_hits: usize,
+    pub cache_inflight_coalesced: usize,
+    pub cache_evictions: usize,
 }
 
 /// The hub itself: slot registry + snapshot assembly.
@@ -1035,5 +1085,27 @@ mod tests {
         assert_eq!(snap.occupancy(), 0.0);
         assert_eq!(snap.p95_s, 0.0);
         assert_eq!(snap.mean_batch_size, 0.0);
+    }
+
+    #[test]
+    fn delta_since_windows_the_counters() {
+        let hub = TelemetryHub::new(8);
+        let w = hub.register(0);
+        w.record_batch("v", 0.004, &[(Lane::Normal, 0.004)]);
+        hub.record_cache_hit();
+        let base = hub.snapshot();
+        w.record_batch("v", 0.002, &[(Lane::Normal, 0.002), (Lane::Normal, 0.002)]);
+        w.record_rejected();
+        hub.record_cache_hit();
+        hub.record_cache_hit();
+        let delta = hub.snapshot().delta_since(&base);
+        assert_eq!(delta.served, 2);
+        assert_eq!(delta.batches, 1);
+        assert_eq!(delta.rejected, 1);
+        assert_eq!(delta.cache_hits, 2);
+        assert_eq!(delta.failed, 0);
+        // A stale "current" against a newer base saturates to zero
+        // instead of wrapping.
+        assert_eq!(base.delta_since(&hub.snapshot()).served, 0);
     }
 }

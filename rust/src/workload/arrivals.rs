@@ -1,0 +1,176 @@
+//! Arrival schedules: *when* requests arrive, decoupled from *what*
+//! they carry (see [`super::trace`]).
+//!
+//! Every schedule is a non-homogeneous Poisson process sampled by
+//! Lewis–Shedler thinning: draw candidate arrivals at the schedule's
+//! peak rate with exact exponential interarrivals, then accept each
+//! candidate at `rate(t) / peak`. For the constant-rate
+//! [`ArrivalSchedule::Poisson`] every candidate is accepted and the
+//! output is an exact homogeneous Poisson process. Sampling consumes
+//! the caller's [`Rng`] deterministically, so the same seed always
+//! yields the bit-identical arrival vector — the replayability
+//! contract the scenario harness gates on.
+
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+/// When requests arrive, as a time-varying rate in requests/second.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalSchedule {
+    /// Constant-rate Poisson arrivals: the steady-state baseline.
+    Poisson { rate_hz: f64 },
+    /// Sinusoidal day/night shape:
+    /// `rate(t) = base_hz * (1 + amplitude * sin(2πt / period))`.
+    /// `amplitude` in `[0, 1)`; over whole periods the expected volume
+    /// equals `base_hz * duration` (the property the tests integrate).
+    Diurnal { base_hz: f64, amplitude: f64, period: Duration },
+    /// Constant base rate with one burst window at
+    /// `base_hz * burst_factor` — the paper's "crowd of devices shows
+    /// up at once" overload case. Open-loop measurement keeps offering
+    /// load through the burst, so queueing delay lands in the tail
+    /// percentiles instead of silently throttling the generator.
+    FlashCrowd { base_hz: f64, burst_factor: f64, burst_start: Duration, burst_len: Duration },
+}
+
+impl ArrivalSchedule {
+    /// Instantaneous rate at `t` seconds into the trace.
+    pub fn rate_at(&self, t: f64) -> f64 {
+        match *self {
+            ArrivalSchedule::Poisson { rate_hz } => rate_hz,
+            ArrivalSchedule::Diurnal { base_hz, amplitude, period } => {
+                let phase = 2.0 * std::f64::consts::PI * t / period.as_secs_f64();
+                base_hz * (1.0 + amplitude * phase.sin())
+            }
+            ArrivalSchedule::FlashCrowd { base_hz, burst_factor, burst_start, burst_len } => {
+                let start = burst_start.as_secs_f64();
+                if t >= start && t < start + burst_len.as_secs_f64() {
+                    base_hz * burst_factor
+                } else {
+                    base_hz
+                }
+            }
+        }
+    }
+
+    /// The schedule's peak rate — the thinning envelope.
+    pub fn peak_hz(&self) -> f64 {
+        match *self {
+            ArrivalSchedule::Poisson { rate_hz } => rate_hz,
+            ArrivalSchedule::Diurnal { base_hz, amplitude, .. } => base_hz * (1.0 + amplitude),
+            ArrivalSchedule::FlashCrowd { base_hz, burst_factor, .. } => {
+                base_hz * burst_factor.max(1.0)
+            }
+        }
+    }
+
+    /// Sample arrival instants over `[0, duration)`, strictly
+    /// nondecreasing. Deterministic in the rng state.
+    pub fn arrivals(&self, duration: Duration, rng: &mut Rng) -> Vec<Duration> {
+        let peak = self.peak_hz();
+        assert!(peak > 0.0 && peak.is_finite(), "arrival schedule needs a positive peak rate");
+        let end = duration.as_secs_f64();
+        let mut out = Vec::with_capacity((peak * end) as usize + 16);
+        let mut t = 0.0f64;
+        loop {
+            // gen() is in [0, 1); flip to (0, 1] so ln never sees zero.
+            let u = 1.0 - rng.gen();
+            t += -u.ln() / peak;
+            if t >= end {
+                break;
+            }
+            if rng.gen() * peak <= self.rate_at(t) {
+                out.push(Duration::from_secs_f64(t));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_interarrival_mean_within_tolerance() {
+        let sched = ArrivalSchedule::Poisson { rate_hz: 1000.0 };
+        let mut rng = Rng::seed_from_u64(7);
+        let at = sched.arrivals(Duration::from_secs(20), &mut rng);
+        // E[count] = 20_000, sd ≈ 141 — 5% covers many sigmas.
+        assert!((at.len() as f64 - 20_000.0).abs() < 1000.0, "count {}", at.len());
+        let gaps: Vec<f64> = at.windows(2).map(|w| (w[1] - w[0]).as_secs_f64()).collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        assert!((mean - 1e-3).abs() < 5e-5, "mean interarrival {mean}");
+    }
+
+    #[test]
+    fn diurnal_integral_matches_configured_volume() {
+        // Over whole periods the sine integrates to zero, so the
+        // expected volume is exactly base_hz * duration.
+        let sched = ArrivalSchedule::Diurnal {
+            base_hz: 500.0,
+            amplitude: 0.9,
+            period: Duration::from_secs(2),
+        };
+        let mut rng = Rng::seed_from_u64(11);
+        let at = sched.arrivals(Duration::from_secs(8), &mut rng);
+        let expected = 500.0 * 8.0;
+        let got = at.len() as f64;
+        assert!((got - expected).abs() / expected < 0.08, "volume {got} vs {expected}");
+    }
+
+    #[test]
+    fn diurnal_rate_peaks_at_quarter_period() {
+        let sched = ArrivalSchedule::Diurnal {
+            base_hz: 100.0,
+            amplitude: 0.5,
+            period: Duration::from_secs(4),
+        };
+        assert!((sched.rate_at(1.0) - 150.0).abs() < 1e-9);
+        assert!((sched.rate_at(3.0) - 50.0).abs() < 1e-9);
+        assert!((sched.peak_hz() - 150.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn flash_crowd_burst_density_matches_factor() {
+        let sched = ArrivalSchedule::FlashCrowd {
+            base_hz: 200.0,
+            burst_factor: 8.0,
+            burst_start: Duration::from_secs(2),
+            burst_len: Duration::from_secs(1),
+        };
+        let mut rng = Rng::seed_from_u64(3);
+        let at = sched.arrivals(Duration::from_secs(5), &mut rng);
+        let in_burst =
+            at.iter().filter(|t| t.as_secs_f64() >= 2.0 && t.as_secs_f64() < 3.0).count();
+        let outside = at.len() - in_burst;
+        // Per-second densities: burst ≈ 1600, outside ≈ 200 over 4s.
+        let ratio = in_burst as f64 / (outside as f64 / 4.0);
+        assert!((5.0..=11.0).contains(&ratio), "burst density ratio {ratio}");
+    }
+
+    #[test]
+    fn same_seed_is_bit_identical() {
+        let sched = ArrivalSchedule::FlashCrowd {
+            base_hz: 300.0,
+            burst_factor: 4.0,
+            burst_start: Duration::from_millis(500),
+            burst_len: Duration::from_millis(250),
+        };
+        let a = sched.arrivals(Duration::from_secs(2), &mut Rng::seed_from_u64(42));
+        let b = sched.arrivals(Duration::from_secs(2), &mut Rng::seed_from_u64(42));
+        assert_eq!(a, b);
+        let c = sched.arrivals(Duration::from_secs(2), &mut Rng::seed_from_u64(43));
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn arrivals_are_sorted_and_in_range() {
+        let sched = ArrivalSchedule::Poisson { rate_hz: 800.0 };
+        let mut rng = Rng::seed_from_u64(5);
+        let at = sched.arrivals(Duration::from_secs(1), &mut rng);
+        assert!(!at.is_empty());
+        assert!(at.windows(2).all(|w| w[0] <= w[1]));
+        assert!(at.iter().all(|t| *t < Duration::from_secs(1)));
+    }
+}

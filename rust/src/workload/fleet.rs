@@ -1,0 +1,204 @@
+//! Scripted fleet dynamics: "the deployment changed under you" as
+//! data.
+//!
+//! The paper's Sec. IV setting is not a fixed cluster: devices join
+//! and leave, links collapse and flap, battery and thermal state bend
+//! a device's effective compute, and the adaptation loop answers with
+//! variant switches and re-routing. A [`FleetScript`] captures that as
+//! a sorted timeline of [`FleetEvent`]s on the *same clock as the
+//! request trace* — the scenario driver ([`super::scenario`]) replays
+//! both against a live [`crate::coordinator::shard::ShardRouter`]
+//! stack, so every mid-run mutation lands while open-loop load is in
+//! flight.
+//!
+//! The simulated device profile is a [`SharedDelay`]: a per-batch
+//! execution delay read by every [`SimExec`] built from it, mutable
+//! mid-run ([`FleetEvent::DeviceDrift`] scales it — battery sag and
+//! thermal throttling slow *future* batches without touching in-flight
+//! ones).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::coordinator::server::Executor;
+
+/// A mutable per-batch execution delay shared between a scenario's
+/// control script and the executors it drives. Stored as
+/// micro-seconds; reads are wait-free (one relaxed atomic load per
+/// batch).
+#[derive(Debug, Clone)]
+pub struct SharedDelay(Arc<AtomicU64>);
+
+impl SharedDelay {
+    pub fn new(delay: Duration) -> SharedDelay {
+        SharedDelay(Arc::new(AtomicU64::new(delay.as_micros() as u64)))
+    }
+
+    pub fn get(&self) -> Duration {
+        Duration::from_micros(self.0.load(Ordering::Relaxed))
+    }
+
+    pub fn set(&self, delay: Duration) {
+        self.0.store(delay.as_micros() as u64, Ordering::Relaxed);
+    }
+
+    /// Scale the current delay (device drift: `factor > 1` slows the
+    /// device down). Saturates at 1 µs so a profile can always recover.
+    pub fn scale(&self, factor: f64) {
+        let cur = self.0.load(Ordering::Relaxed) as f64;
+        self.0.store((cur * factor).max(1.0) as u64, Ordering::Relaxed);
+    }
+}
+
+/// Sleep-based executor whose per-batch cost tracks a [`SharedDelay`]
+/// — the scenario harness's stand-in for a real accelerator, with the
+/// device profile adjustable mid-run. Prediction is the same
+/// softmax-over-prefix contract as the serving tests' mock, so cached
+/// and recomputed answers agree bit-for-bit.
+pub struct SimExec {
+    pub classes: usize,
+    pub elems: usize,
+    pub sizes: Vec<usize>,
+    pub delay: SharedDelay,
+}
+
+impl SimExec {
+    pub fn new(classes: usize, elems: usize, sizes: Vec<usize>, delay: SharedDelay) -> SimExec {
+        SimExec { classes, elems, sizes, delay }
+    }
+}
+
+impl Executor for SimExec {
+    fn batch_sizes(&self, _variant: &str) -> Vec<usize> {
+        self.sizes.clone()
+    }
+
+    fn num_classes(&self) -> usize {
+        self.classes
+    }
+
+    fn input_elems(&self) -> usize {
+        self.elems
+    }
+
+    fn run(&mut self, _variant: &str, batch: usize, input: &[f32]) -> Result<Vec<f32>> {
+        std::thread::sleep(self.delay.get());
+        let mut out = vec![0.0f32; batch * self.classes];
+        for b in 0..batch {
+            let row = &input[b * self.elems..b * self.elems + self.classes];
+            let total: f32 = row.iter().map(|x| x.exp()).sum();
+            for (k, &x) in row.iter().enumerate() {
+                out[b * self.classes + k] = x.exp() / total.max(f32::MIN_POSITIVE);
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// One scripted change to the fleet. Peer indices are router peer
+/// indices — joins append, so a script that joins then kills refers to
+/// the joined peer by the index the join returned (scripts written
+/// against a known stack know their indices statically).
+#[derive(Debug, Clone)]
+pub enum FleetEvent {
+    /// A device joins the fleet: attach a simulated peer with its own
+    /// execution delay and [`crate::partition::network::SharedLink`].
+    PeerJoin {
+        name: String,
+        exec_delay: Duration,
+        link_mbps: f64,
+        link_rtt_ms: f64,
+        /// Plan-prior per-request latency seeding the route.
+        prior_s: f64,
+    },
+    /// A device leaves mid-run: the router's dead-lane drain must
+    /// answer every already-admitted request before the link thread
+    /// exits ([`crate::coordinator::shard::ShardRouter::kill_peer`]).
+    PeerDeath { peer: usize },
+    /// Re-point a peer's link profile (bandwidth collapse, flap legs).
+    LinkSet { peer: usize, mbps: f64, rtt_ms: f64 },
+    /// Scale a peer's link bandwidth by `factor` (0.01 = collapse).
+    LinkScale { peer: usize, factor: f64 },
+    /// Scale the *local* device's per-batch delay (battery sag,
+    /// thermal throttling; `factor > 1` slows it down).
+    DeviceDrift { factor: f64 },
+    /// Switch the serving variant everywhere — the decision level
+    /// changing strategy (accuracy-first → energy-saving).
+    VariantSwitch { variant: String },
+}
+
+/// A timeline of fleet events on the trace's clock.
+#[derive(Debug, Clone, Default)]
+pub struct FleetScript {
+    /// `(offset from scenario start, event)`, kept sorted by offset.
+    pub events: Vec<(Duration, FleetEvent)>,
+}
+
+impl FleetScript {
+    pub fn new() -> FleetScript {
+        FleetScript::default()
+    }
+
+    /// Builder-style: append an event, keeping the timeline sorted.
+    pub fn at(mut self, offset: Duration, event: FleetEvent) -> FleetScript {
+        self.events.push((offset, event));
+        self.events.sort_by_key(|&(t, _)| t);
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shared_delay_scales_and_recovers() {
+        let d = SharedDelay::new(Duration::from_micros(400));
+        d.scale(2.5);
+        assert_eq!(d.get(), Duration::from_micros(1000));
+        d.scale(1e-9);
+        assert_eq!(d.get(), Duration::from_micros(1));
+        d.set(Duration::from_millis(2));
+        assert_eq!(d.get(), Duration::from_millis(2));
+    }
+
+    #[test]
+    fn sim_exec_tracks_drift() {
+        let d = SharedDelay::new(Duration::from_micros(100));
+        let mut exec = SimExec::new(2, 4, vec![1, 2], d.clone());
+        let out = exec.run("v", 1, &[1.0, 0.0, 0.0, 0.0]).unwrap();
+        assert_eq!(out.len(), 2);
+        assert!(out[0] > out[1]);
+        d.scale(50.0);
+        let t0 = std::time::Instant::now();
+        exec.run("v", 1, &[0.0; 4]).unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(5));
+    }
+
+    #[test]
+    fn script_keeps_timeline_sorted() {
+        let script = FleetScript::new()
+            .at(Duration::from_millis(500), FleetEvent::DeviceDrift { factor: 2.0 })
+            .at(Duration::from_millis(100), FleetEvent::PeerDeath { peer: 0 })
+            .at(
+                Duration::from_millis(300),
+                FleetEvent::VariantSwitch { variant: "e3".to_string() },
+            );
+        let offsets: Vec<_> = script.events.iter().map(|&(t, _)| t).collect();
+        assert_eq!(
+            offsets,
+            vec![
+                Duration::from_millis(100),
+                Duration::from_millis(300),
+                Duration::from_millis(500)
+            ]
+        );
+    }
+}

@@ -1,0 +1,68 @@
+//! Open-loop scenario harness: trace-driven load + scripted fleet
+//! dynamics against the live serving stack.
+//!
+//! Everything before this module measured the system with closed-loop
+//! synchronous callers — submit, wait, submit — which quietly
+//! *coordinates* the generator with the system under test: when the
+//! stack slows down, the offered load slows down with it, and the
+//! latency histogram omits exactly the requests that would have hurt
+//! (coordinated omission). This module replaces that with the
+//! million-user measurement model:
+//!
+//! - [`arrivals`] — *when* requests arrive: Poisson, diurnal, and
+//!   flash-crowd schedules, sampled by Lewis–Shedler thinning from a
+//!   seeded [`crate::util::rng::Rng`] (same seed → bit-identical
+//!   arrivals).
+//! - [`trace`] — *what* arrives: request-mix (priority share, hot
+//!   share, tensor-size distribution) materialized into a replayable
+//!   [`trace::Trace`].
+//! - [`openloop`] — *how it is measured*: requests are submitted at
+//!   their scheduled instants whether or not earlier ones completed,
+//!   and latency is charged **from the scheduled arrival instant**, so
+//!   queueing delay under overload lands in the percentiles.
+//! - [`fleet`] — *what happens to the deployment meanwhile*: a
+//!   timeline DSL of peer joins/deaths, link collapse/flap, device
+//!   drift, and variant switches.
+//! - [`scenario`] — one harness running all of the above on a shared
+//!   clock against a [`crate::coordinator::shard::ShardRouter`] +
+//!   [`crate::coordinator::pool::ServingPool`] stack, with the control
+//!   loop ticking live telemetry throughout.
+//!
+//! # Mapping onto the paper's evaluation (Sec. IV)
+//!
+//! The paper evaluates CrowdHMTware across **15 heterogeneous
+//! platforms** under "diversity and dynamics": device capability
+//! spread, network variance, context drift, and a day-long **campus
+//! case study** (Sec. IV-G) where a vehicle-mounted device and a drone
+//! cooperate while battery drains and workload shifts into the
+//! evening. The scenario suite in `benches/scenarios.rs` reproduces
+//! those settings as executable, CI-gated workloads:
+//!
+//! | Scenario (bench)    | Paper setting                                         |
+//! |---------------------|-------------------------------------------------------|
+//! | `steady_poisson`    | steady-state serving on one platform (Tab. 4 baseline) |
+//! | `diurnal`           | day/night load shape of the campus deployment          |
+//! | `flash_crowd_x8`    | "crowd shows up at once" burst — Sec. IV's dynamics    |
+//! | `churn_under_load`  | devices joining/leaving, links collapsing (Sec. IV-F)  |
+//! | `campus_replay`     | Sec. IV-G: drone joins, battery sag, strategy switch   |
+//!
+//! Each scenario reports open-loop p50/p95/p99 + goodput +
+//! rejected/failed counts and the adaptation events the stack answered
+//! with (resizes, degrades/re-admits, switches, steals, cache hits) —
+//! the cross-level co-adaptation story as numbers, gated per push like
+//! the synthetic benches (`ci/BENCH_scenarios_baseline.json`).
+
+pub mod arrivals;
+pub mod fleet;
+pub mod openloop;
+pub mod scenario;
+pub mod trace;
+
+pub use arrivals::ArrivalSchedule;
+pub use fleet::{FleetEvent, FleetScript, SharedDelay, SimExec};
+pub use openloop::{run_open_loop, run_open_loop_from, LoadTarget, OpenLoopConfig, OpenLoopReport};
+pub use scenario::{
+    run_scenario, AdaptationCounts, Controller, MaintainController, Scenario, ScenarioReport,
+    ScenarioStack, StackConfig, StackCounters,
+};
+pub use trace::{RequestMix, Trace, TraceRequest};

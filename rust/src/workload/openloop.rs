@@ -1,0 +1,250 @@
+//! Open-loop trace replay: submit on schedule, never wait on answers.
+//!
+//! The closed-loop callers used by the synthetic benches submit, block
+//! on the response, then submit again — so when the stack slows down,
+//! the *generator* slows down with it and the latency histogram never
+//! sees the requests that "would have" arrived meanwhile. That is
+//! coordinated omission, and it makes an overloaded system look
+//! merely busy. This driver replays a [`Trace`] open-loop instead:
+//! every request is submitted at its scheduled arrival instant whether
+//! or not earlier ones have completed, and its latency is measured
+//! **from the scheduled instant** —
+//!
+//! ```text
+//! sample = (actual submit instant − scheduled instant)   // submit lag
+//!        + Response.latency                              // queue + execution
+//! ```
+//!
+//! The serving stack stamps `Response.latency` from admission
+//! (`enqueued`) to completion, so queueing delay under overload lands
+//! in the sample; the submit-lag term additionally charges any delay
+//! of the submitter itself (an overshooting sleep, a slow routing
+//! walk) to the requests it pushed late. Rejections are counted, not
+//! retried — retry policy is a workload property, and uncontrolled
+//! retry storms are a *scenario* to model, not a driver default.
+
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::pool::ServingPool;
+use crate::coordinator::server::{Rejected, Response};
+use crate::coordinator::shard::ShardRouter;
+use crate::telemetry::{percentiles_of, Lane};
+
+use super::trace::Trace;
+
+/// Anything the open-loop driver can aim at. Both the bare pool and
+/// the shard router qualify; scenario stacks submit through the
+/// router.
+pub trait LoadTarget: Sync {
+    fn submit_load(&self, input: Arc<[f32]>, lane: Lane) -> Result<Receiver<Response>, Rejected>;
+}
+
+impl LoadTarget for ServingPool {
+    fn submit_load(&self, input: Arc<[f32]>, lane: Lane) -> Result<Receiver<Response>, Rejected> {
+        self.submit_lane(input, lane)
+    }
+}
+
+impl LoadTarget for ShardRouter {
+    fn submit_load(&self, input: Arc<[f32]>, lane: Lane) -> Result<Receiver<Response>, Rejected> {
+        self.submit_lane(input, lane)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct OpenLoopConfig {
+    /// How long the drain phase waits for each outstanding response
+    /// before declaring it failed. Generous by default: a hit here
+    /// means a hung lane, not a slow one.
+    pub drain_timeout: Duration,
+}
+
+impl Default for OpenLoopConfig {
+    fn default() -> Self {
+        OpenLoopConfig { drain_timeout: Duration::from_secs(10) }
+    }
+}
+
+/// What one open-loop replay measured.
+#[derive(Debug, Clone, Default)]
+pub struct OpenLoopReport {
+    /// Requests the trace scheduled.
+    pub offered: usize,
+    /// Requests that completed successfully.
+    pub completed: usize,
+    /// Requests refused at admission (backpressure).
+    pub rejected: usize,
+    /// Requests admitted but never answered successfully.
+    pub failed: usize,
+    /// Wall-clock span from first scheduled arrival to last drained
+    /// response.
+    pub wall_s: f64,
+    /// Scheduled offered rate (`offered / trace duration`).
+    pub offered_rps: f64,
+    /// Completed requests per wall-clock second.
+    pub goodput_rps: f64,
+    /// Latency percentiles from the scheduled arrival instant, ms.
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+    /// Worst lateness of the submitter itself, ms (how far behind
+    /// schedule a submission happened — nonzero under load is fine,
+    /// large means the driver machine, not the stack, was the
+    /// bottleneck).
+    pub max_submit_lag_ms: f64,
+}
+
+/// Replay `trace` against `target`, measuring from each request's
+/// scheduled arrival instant. See the module doc for the latency
+/// accounting.
+pub fn run_open_loop(
+    target: &dyn LoadTarget,
+    trace: &Trace,
+    cfg: &OpenLoopConfig,
+) -> OpenLoopReport {
+    run_open_loop_from(target, trace, cfg, Instant::now())
+}
+
+/// [`run_open_loop`] with an explicit epoch, so fleet scripts and the
+/// load share one timeline (`start + request.at` = scheduled instant).
+pub fn run_open_loop_from(
+    target: &dyn LoadTarget,
+    trace: &Trace,
+    cfg: &OpenLoopConfig,
+    start: Instant,
+) -> OpenLoopReport {
+    let mut inflight: Vec<(f64, Receiver<Response>)> = Vec::with_capacity(trace.requests.len());
+    let mut rejected = 0usize;
+    let mut max_lag = 0.0f64;
+    for req in &trace.requests {
+        let scheduled = start + req.at;
+        loop {
+            let now = Instant::now();
+            if now >= scheduled {
+                break;
+            }
+            std::thread::sleep(scheduled - now);
+        }
+        // Lateness of this submission relative to its schedule: charged
+        // to the request's own latency sample below.
+        let lag_s = Instant::now().saturating_duration_since(scheduled).as_secs_f64();
+        max_lag = max_lag.max(lag_s);
+        match target.submit_load(Arc::clone(&req.input), req.lane) {
+            Ok(rx) => inflight.push((lag_s, rx)),
+            Err(_) => rejected += 1,
+        }
+    }
+
+    // Drain phase: the generator never blocked on responses while
+    // submitting; now collect them all.
+    let mut samples: Vec<f64> = Vec::with_capacity(inflight.len());
+    let mut failed = 0usize;
+    for (lag_s, rx) in inflight {
+        match rx.recv_timeout(cfg.drain_timeout) {
+            Ok(resp) => samples.push(lag_s + resp.latency.as_secs_f64()),
+            Err(_) => failed += 1,
+        }
+    }
+    let wall_s = start.elapsed().as_secs_f64();
+
+    let offered = trace.requests.len();
+    let completed = samples.len();
+    let max_ms = samples.iter().cloned().fold(0.0f64, f64::max) * 1e3;
+    let pcts = percentiles_of(samples, &[0.50, 0.95, 0.99]);
+    OpenLoopReport {
+        offered,
+        completed,
+        rejected,
+        failed,
+        wall_s,
+        offered_rps: trace.offered_rps(),
+        goodput_rps: if wall_s > 0.0 { completed as f64 / wall_s } else { 0.0 },
+        p50_ms: pcts[0] * 1e3,
+        p95_ms: pcts[1] * 1e3,
+        p99_ms: pcts[2] * 1e3,
+        max_ms,
+        max_submit_lag_ms: max_lag * 1e3,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::{channel, Sender};
+    use std::sync::Mutex;
+
+    /// A serial 3 ms/request target whose `Response.latency` is stamped
+    /// from admission — like the real stack, queueing is visible.
+    struct SerialTarget {
+        jobs: Mutex<Sender<(Instant, Sender<Response>)>>,
+        _worker: std::thread::JoinHandle<()>,
+    }
+
+    impl SerialTarget {
+        fn new(service: Duration) -> SerialTarget {
+            let (tx, rx) = channel::<(Instant, Sender<Response>)>();
+            let worker = std::thread::spawn(move || {
+                for (enqueued, resp) in rx {
+                    std::thread::sleep(service);
+                    let _ = resp.send(Response {
+                        id: 0,
+                        pred: 0,
+                        confidence: 1.0,
+                        variant: "v".to_string(),
+                        generation: 0,
+                        worker: 0,
+                        lane: Lane::Normal,
+                        latency: enqueued.elapsed(),
+                    });
+                }
+            });
+            SerialTarget { jobs: Mutex::new(tx), _worker: worker }
+        }
+    }
+
+    impl LoadTarget for SerialTarget {
+        fn submit_load(
+            &self,
+            _input: Arc<[f32]>,
+            _lane: Lane,
+        ) -> Result<Receiver<Response>, Rejected> {
+            let (tx, rx) = channel();
+            self.jobs.lock().unwrap().send((Instant::now(), tx)).unwrap();
+            Ok(rx)
+        }
+    }
+
+    #[test]
+    fn open_loop_exposes_queueing_delay_under_overload() {
+        // 1 ms arrivals into a 3 ms serial server: a closed-loop caller
+        // would report ~3 ms per request (it submits only after the
+        // previous answer). Open-loop keeps submitting on schedule, so
+        // the backlog grows by ~2 ms per request and the tail must see
+        // tens of milliseconds of queueing.
+        let target = SerialTarget::new(Duration::from_millis(3));
+        let trace = Trace::uniform(30, Duration::from_millis(1), 4, 0);
+        let report = run_open_loop(&target, &trace, &OpenLoopConfig::default());
+        assert_eq!(report.completed, 30);
+        assert_eq!(report.rejected + report.failed, 0);
+        assert!(
+            report.p99_ms > 30.0,
+            "p99 {} ms should carry the backlog, not the 3 ms service time",
+            report.p99_ms
+        );
+        assert!(report.p50_ms > report.max_submit_lag_ms);
+    }
+
+    #[test]
+    fn report_counts_conserve() {
+        let target = SerialTarget::new(Duration::from_micros(200));
+        let trace = Trace::uniform(20, Duration::from_millis(1), 4, 1);
+        let report = run_open_loop(&target, &trace, &OpenLoopConfig::default());
+        assert_eq!(report.offered, 20);
+        assert_eq!(report.completed + report.rejected + report.failed, report.offered);
+        assert!(report.goodput_rps > 0.0);
+        assert!(report.p50_ms <= report.p95_ms && report.p95_ms <= report.p99_ms);
+    }
+}

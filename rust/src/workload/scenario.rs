@@ -1,0 +1,406 @@
+//! Scenario execution: open-loop load + fleet script + control loop
+//! against one live serving stack, on one shared clock.
+//!
+//! A [`ScenarioStack`] is the full deployment under test — a
+//! [`ShardRouter`] over a [`ServingPool`] of [`SimExec`] workers, plus
+//! the registries ([`SharedLink`]s, [`SharedDelay`]s) a
+//! [`FleetScript`] mutates mid-run. [`run_scenario`] replays the
+//! trace open-loop on the caller's thread while two scoped threads
+//! run alongside it:
+//!
+//! - the **fleet thread** fires each [`FleetEvent`] at its scripted
+//!   offset from the same epoch the trace replays against;
+//! - the **control thread** ticks a [`Controller`] on a fixed cadence
+//!   with a fresh [`TelemetrySnapshot`] — the Fig. 6
+//!   observe→decide→act loop running *while the fleet changes*.
+//!
+//! The report pairs the open-loop latency numbers with windowed
+//! adaptation counts: counter deltas over exactly this scenario's
+//! window ([`TelemetrySnapshot::delta_since`]) plus the router's
+//! degrade/re-admit event deltas, so back-to-back scenarios on fresh
+//! stacks stay independent.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::pool::{PoolConfig, ServingPool};
+use crate::coordinator::server::Executor;
+use crate::coordinator::shard::{ShardRouter, ShardRouterConfig, ShardStats};
+use crate::partition::network::SharedLink;
+use crate::telemetry::{SnapshotDelta, TelemetrySnapshot};
+
+use super::fleet::{FleetEvent, FleetScript, SharedDelay, SimExec};
+use super::openloop::{run_open_loop_from, OpenLoopConfig, OpenLoopReport};
+use super::trace::Trace;
+
+/// How to build a [`ScenarioStack`].
+#[derive(Debug, Clone)]
+pub struct StackConfig {
+    pub classes: usize,
+    pub elems: usize,
+    /// Compiled batch sizes every [`SimExec`] reports.
+    pub batch_sizes: Vec<usize>,
+    /// Local per-batch execution delay (the device profile;
+    /// [`FleetEvent::DeviceDrift`] scales it mid-run).
+    pub local_delay: Duration,
+    pub variant: String,
+    pub pool: PoolConfig,
+    pub router: ShardRouterConfig,
+}
+
+impl Default for StackConfig {
+    fn default() -> Self {
+        StackConfig {
+            classes: 4,
+            elems: 64,
+            batch_sizes: vec![1, 4, 8],
+            local_delay: Duration::from_millis(1),
+            variant: "v".to_string(),
+            pool: PoolConfig::default(),
+            router: ShardRouterConfig::default(),
+        }
+    }
+}
+
+/// Script-driven counters a scenario window reports alongside the
+/// telemetry deltas.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StackCounters {
+    /// Pool-width changes actuated through
+    /// [`ScenarioStack::resize_workers`].
+    pub resizes: usize,
+    /// Variant switches applied through the stack.
+    pub switches: usize,
+    pub peers_joined: usize,
+    pub peers_killed: usize,
+}
+
+/// The live deployment a scenario runs against.
+pub struct ScenarioStack {
+    router: ShardRouter,
+    local_delay: SharedDelay,
+    classes: usize,
+    elems: usize,
+    batch_sizes: Vec<usize>,
+    /// Index-aligned with the router's peer list.
+    peer_links: Mutex<Vec<SharedLink>>,
+    peer_delays: Mutex<Vec<SharedDelay>>,
+    resizes: AtomicUsize,
+    switches: AtomicUsize,
+    peers_joined: AtomicUsize,
+    peers_killed: AtomicUsize,
+}
+
+impl ScenarioStack {
+    /// Spawn the pool + router; peers attach via
+    /// [`ScenarioStack::add_peer`] or a scripted
+    /// [`FleetEvent::PeerJoin`].
+    pub fn spawn(cfg: StackConfig) -> ScenarioStack {
+        let local_delay = SharedDelay::new(cfg.local_delay);
+        let (classes, elems, sizes) = (cfg.classes, cfg.elems, cfg.batch_sizes.clone());
+        let delay = local_delay.clone();
+        let pool = ServingPool::spawn(
+            move |_| {
+                Box::new(SimExec::new(classes, elems, sizes.clone(), delay.clone()))
+                    as Box<dyn Executor>
+            },
+            &cfg.variant,
+            cfg.pool,
+        );
+        ScenarioStack {
+            router: ShardRouter::new(pool, cfg.router),
+            local_delay,
+            classes: cfg.classes,
+            elems: cfg.elems,
+            batch_sizes: cfg.batch_sizes,
+            peer_links: Mutex::new(Vec::new()),
+            peer_delays: Mutex::new(Vec::new()),
+            resizes: AtomicUsize::new(0),
+            switches: AtomicUsize::new(0),
+            peers_joined: AtomicUsize::new(0),
+            peers_killed: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn router(&self) -> &ShardRouter {
+        &self.router
+    }
+
+    /// The local device's drift-able per-batch delay.
+    pub fn local_delay(&self) -> &SharedDelay {
+        &self.local_delay
+    }
+
+    /// Attach a simulated peer device behind its own mutable link.
+    /// Returns the router peer index (stable for the stack's lifetime —
+    /// dead peers keep their slot).
+    pub fn add_peer(
+        &self,
+        name: &str,
+        exec_delay: Duration,
+        link_mbps: f64,
+        link_rtt_ms: f64,
+        prior_s: f64,
+    ) -> usize {
+        let link = SharedLink::new(link_mbps, link_rtt_ms);
+        let delay = SharedDelay::new(exec_delay);
+        let (classes, elems, sizes) = (self.classes, self.elems, self.batch_sizes.clone());
+        let exec_delay_handle = delay.clone();
+        let idx = self.router.add_simulated_peer(
+            name,
+            move || {
+                Box::new(SimExec::new(classes, elems, sizes, exec_delay_handle))
+                    as Box<dyn Executor>
+            },
+            link.clone(),
+            prior_s,
+        );
+        self.peer_links.lock().unwrap().push(link);
+        self.peer_delays.lock().unwrap().push(delay);
+        self.peers_joined.fetch_add(1, Ordering::Relaxed);
+        idx
+    }
+
+    /// Actuate pool width, counting actual changes as resizes.
+    pub fn resize_workers(&self, target: usize) {
+        if self.router.pool().num_workers() != target {
+            self.router.pool().set_workers(target);
+            self.resizes.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Apply one scripted fleet event. Panics on a peer index the stack
+    /// never created — a script bug, not a runtime condition.
+    pub fn apply(&self, event: &FleetEvent) {
+        match event {
+            FleetEvent::PeerJoin { name, exec_delay, link_mbps, link_rtt_ms, prior_s } => {
+                self.add_peer(name, *exec_delay, *link_mbps, *link_rtt_ms, *prior_s);
+            }
+            FleetEvent::PeerDeath { peer } => {
+                if self.router.kill_peer(*peer) {
+                    self.peers_killed.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            FleetEvent::LinkSet { peer, mbps, rtt_ms } => {
+                self.peer_links.lock().unwrap()[*peer].set(*mbps, *rtt_ms);
+            }
+            FleetEvent::LinkScale { peer, factor } => {
+                self.peer_links.lock().unwrap()[*peer].scale_bandwidth(*factor);
+            }
+            FleetEvent::DeviceDrift { factor } => {
+                self.local_delay.scale(*factor);
+            }
+            FleetEvent::VariantSwitch { variant } => {
+                self.router.switch_variant(variant);
+                self.switches.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    pub fn counters(&self) -> StackCounters {
+        StackCounters {
+            resizes: self.resizes.load(Ordering::Relaxed),
+            switches: self.switches.load(Ordering::Relaxed),
+            peers_joined: self.peers_joined.load(Ordering::Relaxed),
+            peers_killed: self.peers_killed.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Tear the stack down (drains peers and workers).
+    pub fn shutdown(self) {
+        self.router.shutdown();
+    }
+}
+
+/// The scenario's control plane, ticked on a fixed cadence with fresh
+/// telemetry while load and fleet events are in flight.
+pub trait Controller: Send {
+    fn tick(&mut self, stack: &ScenarioStack, tel: &TelemetrySnapshot);
+}
+
+/// Minimal controller: shard-admission reconciliation only
+/// ([`ShardRouter::maintain`]) — degrade/probe/re-admit keeps working,
+/// pool width stays fixed.
+pub struct MaintainController;
+
+impl Controller for MaintainController {
+    fn tick(&mut self, stack: &ScenarioStack, tel: &TelemetrySnapshot) {
+        stack.router().maintain(tel);
+    }
+}
+
+/// One named scenario: a trace, a fleet script, and the control
+/// cadence.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: String,
+    pub trace: Trace,
+    pub script: FleetScript,
+    /// Controller tick cadence.
+    pub control_tick: Duration,
+    pub openloop: OpenLoopConfig,
+}
+
+impl Scenario {
+    pub fn new(name: &str, trace: Trace) -> Scenario {
+        Scenario {
+            name: name.to_string(),
+            trace,
+            script: FleetScript::new(),
+            control_tick: Duration::from_millis(20),
+            openloop: OpenLoopConfig::default(),
+        }
+    }
+
+    pub fn with_script(mut self, script: FleetScript) -> Scenario {
+        self.script = script;
+        self
+    }
+}
+
+/// Adaptation events observed during one scenario window.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AdaptationCounts {
+    pub resizes: usize,
+    pub switches: usize,
+    pub peers_joined: usize,
+    pub peers_killed: usize,
+    /// Route degrade events (full-remote + split) from the router.
+    pub degraded: usize,
+    /// Route re-admit events (full-remote + split).
+    pub readmitted: usize,
+    pub steals: usize,
+    pub cache_hits: usize,
+}
+
+/// What one scenario run produced.
+#[derive(Debug, Clone)]
+pub struct ScenarioReport {
+    pub name: String,
+    pub load: OpenLoopReport,
+    pub adaptation: AdaptationCounts,
+    /// Raw serving-counter deltas over the scenario window.
+    pub window: SnapshotDelta,
+}
+
+fn route_events(stats: &ShardStats) -> (usize, usize) {
+    (
+        stats.degraded_events + stats.split_degraded_events,
+        stats.readmitted_events + stats.split_readmitted_events,
+    )
+}
+
+/// Run one scenario: replay the trace open-loop against the stack's
+/// router while the fleet script and the controller run on scoped
+/// side threads sharing the trace's epoch.
+pub fn run_scenario(
+    stack: &ScenarioStack,
+    scenario: &Scenario,
+    controller: &mut dyn Controller,
+) -> ScenarioReport {
+    let tel0 = stack.router().telemetry_snapshot();
+    let shard0 = stack.router().shard_stats();
+    let counts0 = stack.counters();
+    let start = Instant::now();
+    let stop = AtomicBool::new(false);
+    let stop = &stop;
+
+    let load = std::thread::scope(|s| {
+        s.spawn(|| {
+            for (at, event) in &scenario.script.events {
+                let due = start + *at;
+                loop {
+                    if stop.load(Ordering::Acquire) {
+                        return;
+                    }
+                    let now = Instant::now();
+                    if now >= due {
+                        break;
+                    }
+                    // Sliced sleep: a stopped run must not pin the
+                    // scope open for the rest of a long script.
+                    std::thread::sleep((due - now).min(Duration::from_millis(10)));
+                }
+                stack.apply(event);
+            }
+        });
+        s.spawn(move || {
+            while !stop.load(Ordering::Acquire) {
+                let tel = stack.router().telemetry_snapshot();
+                controller.tick(stack, &tel);
+                std::thread::sleep(scenario.control_tick);
+            }
+        });
+        let load = run_open_loop_from(stack.router(), &scenario.trace, &scenario.openloop, start);
+        stop.store(true, Ordering::Release);
+        load
+    });
+
+    let tel1 = stack.router().telemetry_snapshot();
+    let shard1 = stack.router().shard_stats();
+    let counts1 = stack.counters();
+    let (deg0, read0) = route_events(&shard0);
+    let (deg1, read1) = route_events(&shard1);
+    let window = tel1.delta_since(&tel0);
+    ScenarioReport {
+        name: scenario.name.clone(),
+        load,
+        adaptation: AdaptationCounts {
+            resizes: counts1.resizes - counts0.resizes,
+            switches: counts1.switches - counts0.switches,
+            peers_joined: counts1.peers_joined - counts0.peers_joined,
+            peers_killed: counts1.peers_killed - counts0.peers_killed,
+            degraded: deg1.saturating_sub(deg0),
+            readmitted: read1.saturating_sub(read0),
+            steals: window.steals,
+            cache_hits: window.cache_hits,
+        },
+        window,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::arrivals::ArrivalSchedule;
+    use crate::workload::trace::RequestMix;
+
+    #[test]
+    fn scenario_window_counts_are_scoped_to_the_run() {
+        let stack = ScenarioStack::spawn(StackConfig {
+            elems: 16,
+            local_delay: Duration::from_micros(300),
+            ..StackConfig::default()
+        });
+        // Pre-scenario traffic the window must not count.
+        let rx = stack.router().submit(vec![1.0f32; 16]).unwrap();
+        rx.recv_timeout(Duration::from_secs(5)).unwrap();
+
+        let trace = Trace::generate(
+            &ArrivalSchedule::Poisson { rate_hz: 400.0 },
+            &RequestMix::default(),
+            Duration::from_millis(300),
+            16,
+            9,
+        );
+        let scenario = Scenario::new("smoke", trace).with_script(
+            FleetScript::new()
+                .at(
+                    Duration::from_millis(100),
+                    FleetEvent::VariantSwitch { variant: "v2".to_string() },
+                )
+                .at(Duration::from_millis(150), FleetEvent::DeviceDrift { factor: 1.5 }),
+        );
+        let report = run_scenario(&stack, &scenario, &mut MaintainController);
+        assert_eq!(report.load.offered, scenario.trace.requests.len());
+        assert_eq!(
+            report.load.completed + report.load.rejected + report.load.failed,
+            report.load.offered
+        );
+        assert_eq!(report.adaptation.switches, 1);
+        assert_eq!(report.adaptation.peers_joined, 0);
+        assert_eq!(report.window.served, report.load.completed - report.window.cache_hits);
+        stack.shutdown();
+    }
+}

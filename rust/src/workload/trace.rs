@@ -1,0 +1,225 @@
+//! Request traces: a fully materialized, replayable list of
+//! `(arrival instant, lane, input tensor)` triples.
+//!
+//! The mix models the paper's heterogeneous request population:
+//! a **priority share** (latency-critical submissions on
+//! [`Lane::High`], which the router never split-routes or uses as
+//! probes), a **hot share** (repeated identical inputs — consecutive
+//! camera frames, popular queries — which share one `Arc` so the
+//! single-flight response cache can collapse them), and a
+//! **tensor-size distribution**. The serving stack pads batches to the
+//! model's fixed input shape ([`crate::coordinator::batcher`] copies
+//! exactly `input_elems` per row), so a drawn payload size means "the
+//! first `k` elements carry signal, the rest are zero" — fixed-shape
+//! serving with variable information content, which still exercises
+//! distinct cache keys and distinct frontier bytes per size class.
+//!
+//! Generation is deterministic in the seed: the same
+//! `(schedule, mix, duration, input_elems, seed)` tuple yields a
+//! bit-identical trace, inputs included.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::telemetry::Lane;
+use crate::util::rng::Rng;
+
+use super::arrivals::ArrivalSchedule;
+
+/// What the request population looks like, independent of arrival
+/// timing.
+#[derive(Debug, Clone, Default)]
+pub struct RequestMix {
+    /// Fraction submitted on [`Lane::High`].
+    pub priority_share: f64,
+    /// Fraction that repeat the one shared "hot" input (same `Arc`).
+    pub hot_share: f64,
+    /// Weighted payload sizes in elements, `(payload_elems, weight)`.
+    /// Empty = every request carries a full `input_elems` payload.
+    pub sizes: Vec<(usize, f64)>,
+}
+
+/// One scheduled request.
+#[derive(Debug, Clone)]
+pub struct TraceRequest {
+    /// Scheduled arrival instant, relative to trace start. Open-loop
+    /// latency is measured from here (see [`super::openloop`]).
+    pub at: Duration,
+    pub lane: Lane,
+    pub input: Arc<[f32]>,
+}
+
+/// A materialized workload trace.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub seed: u64,
+    pub duration: Duration,
+    /// Requests sorted by `at`.
+    pub requests: Vec<TraceRequest>,
+}
+
+impl Trace {
+    /// Generate a trace. Deterministic: one [`Rng`] seeded from `seed`
+    /// drives arrivals, lane draws, hotness draws, size draws, and
+    /// input contents, in that fixed order.
+    pub fn generate(
+        schedule: &ArrivalSchedule,
+        mix: &RequestMix,
+        duration: Duration,
+        input_elems: usize,
+        seed: u64,
+    ) -> Trace {
+        assert!(input_elems > 0, "input_elems must be positive");
+        let mut rng = Rng::seed_from_u64(seed);
+        let arrivals = schedule.arrivals(duration, &mut rng);
+        let hot: Arc<[f32]> = fill(input_elems, input_elems, &mut rng);
+        let total_weight: f64 = mix.sizes.iter().map(|&(_, w)| w.max(0.0)).sum();
+        let mut requests = Vec::with_capacity(arrivals.len());
+        for at in arrivals {
+            let lane = if rng.gen_bool(mix.priority_share) { Lane::High } else { Lane::Normal };
+            let input = if rng.gen_bool(mix.hot_share) {
+                Arc::clone(&hot)
+            } else {
+                let payload = draw_size(&mix.sizes, total_weight, input_elems, &mut rng);
+                fill(payload, input_elems, &mut rng)
+            };
+            requests.push(TraceRequest { at, lane, input });
+        }
+        Trace { seed, duration, requests }
+    }
+
+    /// Evenly spaced full-payload normal-lane requests — the minimal
+    /// deterministic trace for tests that need exact arrival control.
+    pub fn uniform(n: usize, spacing: Duration, input_elems: usize, seed: u64) -> Trace {
+        let mut rng = Rng::seed_from_u64(seed);
+        let requests = (0..n)
+            .map(|i| TraceRequest {
+                at: spacing * i as u32,
+                lane: Lane::Normal,
+                input: fill(input_elems, input_elems, &mut rng),
+            })
+            .collect();
+        Trace { seed, duration: spacing * n as u32, requests }
+    }
+
+    /// Offered rate over the trace duration.
+    pub fn offered_rps(&self) -> f64 {
+        let secs = self.duration.as_secs_f64();
+        if secs > 0.0 {
+            self.requests.len() as f64 / secs
+        } else {
+            0.0
+        }
+    }
+}
+
+/// A full-shape buffer whose first `payload` elements carry random
+/// signal; the rest stay zero (fixed-shape serving).
+fn fill(payload: usize, input_elems: usize, rng: &mut Rng) -> Arc<[f32]> {
+    let mut buf = vec![0.0f32; input_elems];
+    for v in buf.iter_mut().take(payload.min(input_elems)) {
+        *v = rng.gen_range(-1.0, 1.0) as f32;
+    }
+    buf.into()
+}
+
+fn draw_size(
+    sizes: &[(usize, f64)],
+    total_weight: f64,
+    input_elems: usize,
+    rng: &mut Rng,
+) -> usize {
+    if sizes.is_empty() || total_weight <= 0.0 {
+        return input_elems;
+    }
+    let mut pick = rng.gen() * total_weight;
+    for &(elems, w) in sizes {
+        let w = w.max(0.0);
+        if pick < w {
+            return elems.min(input_elems).max(1);
+        }
+        pick -= w;
+    }
+    sizes.last().map(|&(elems, _)| elems).unwrap_or(input_elems).min(input_elems).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mix() -> RequestMix {
+        RequestMix {
+            priority_share: 0.2,
+            hot_share: 0.3,
+            sizes: vec![(4, 0.5), (12, 0.3), (16, 0.2)],
+        }
+    }
+
+    #[test]
+    fn same_seed_is_bit_identical_inputs_included() {
+        let sched = ArrivalSchedule::Poisson { rate_hz: 500.0 };
+        let a = Trace::generate(&sched, &mix(), Duration::from_secs(2), 16, 99);
+        let b = Trace::generate(&sched, &mix(), Duration::from_secs(2), 16, 99);
+        assert_eq!(a.requests.len(), b.requests.len());
+        for (x, y) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(x.at, y.at);
+            assert_eq!(x.lane, y.lane);
+            assert_eq!(&x.input[..], &y.input[..]);
+        }
+        let c = Trace::generate(&sched, &mix(), Duration::from_secs(2), 16, 100);
+        let same = a.requests.len() == c.requests.len()
+            && a.requests.iter().zip(&c.requests).all(|(x, y)| x.at == y.at);
+        assert!(!same, "different seeds must not replay the same trace");
+    }
+
+    #[test]
+    fn shares_are_respected_within_tolerance() {
+        let sched = ArrivalSchedule::Poisson { rate_hz: 2000.0 };
+        let t = Trace::generate(&sched, &mix(), Duration::from_secs(4), 16, 1);
+        let n = t.requests.len() as f64;
+        let high = t.requests.iter().filter(|r| r.lane == Lane::High).count() as f64;
+        assert!((high / n - 0.2).abs() < 0.03, "priority share {}", high / n);
+    }
+
+    #[test]
+    fn hot_requests_share_one_arc() {
+        let sched = ArrivalSchedule::Poisson { rate_hz: 1000.0 };
+        let t = Trace::generate(&sched, &mix(), Duration::from_secs(2), 16, 7);
+        // The hot input is the unique most-shared pointer.
+        let mut best = 0usize;
+        for r in &t.requests {
+            let same = t
+                .requests
+                .iter()
+                .filter(|q| Arc::ptr_eq(&q.input, &r.input))
+                .count();
+            best = best.max(same);
+        }
+        let n = t.requests.len() as f64;
+        assert!((best as f64 / n - 0.3).abs() < 0.05, "hot share {}", best as f64 / n);
+    }
+
+    #[test]
+    fn all_inputs_are_full_shape() {
+        let sched = ArrivalSchedule::Poisson { rate_hz: 500.0 };
+        let t = Trace::generate(&sched, &mix(), Duration::from_secs(1), 16, 3);
+        assert!(t.requests.iter().all(|r| r.input.len() == 16));
+        // Size classes show up as distinct zero-suffix lengths.
+        let small = t
+            .requests
+            .iter()
+            .filter(|r| {
+                r.input[4..].iter().all(|&v| v == 0.0) && r.input[..4].iter().any(|&v| v != 0.0)
+            })
+            .count();
+        assert!(small > 0, "expected some 4-element payloads");
+    }
+
+    #[test]
+    fn uniform_trace_is_evenly_spaced() {
+        let t = Trace::uniform(5, Duration::from_millis(2), 8, 0);
+        assert_eq!(t.requests.len(), 5);
+        assert_eq!(t.requests[3].at, Duration::from_millis(6));
+        assert!(t.requests.iter().all(|r| r.input.len() == 8));
+    }
+}

@@ -1,0 +1,91 @@
+//! Integration regressions for the open-loop scenario harness: scripted
+//! fleet dynamics landing while trace-driven load is in flight against
+//! the live router + pool stack.
+
+use std::time::Duration;
+
+use crowdhmtware::coordinator::{BatcherConfig, PoolConfig, ShardRouterConfig};
+use crowdhmtware::workload::{
+    run_scenario, ArrivalSchedule, FleetEvent, FleetScript, MaintainController, RequestMix,
+    Scenario, ScenarioStack, StackConfig, Trace,
+};
+
+const ELEMS: usize = 32;
+
+fn stack() -> ScenarioStack {
+    ScenarioStack::spawn(StackConfig {
+        classes: 4,
+        elems: ELEMS,
+        batch_sizes: vec![1, 4, 8],
+        local_delay: Duration::from_millis(1),
+        variant: "v".to_string(),
+        pool: PoolConfig {
+            workers: 2,
+            queue_capacity: 64,
+            batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_micros(500) },
+            ..PoolConfig::default()
+        },
+        router: ShardRouterConfig { peer_capacity: 8, ..ShardRouterConfig::default() },
+    })
+}
+
+/// The harness's reason to exist: a peer that dies *while carrying
+/// live open-loop traffic* must not strand a single admitted caller —
+/// `kill_peer`'s dead-lane drain answers everything already on the
+/// link, and the dead slot never routes again.
+#[test]
+fn scripted_peer_death_fails_no_inflight_callers() {
+    let stack = stack();
+    // Strongly preferred peer (tiny prior, fast link): it is carrying
+    // traffic at the moment the script kills it.
+    stack.add_peer("edge", Duration::from_millis(1), 200.0, 1.0, 0.0005);
+    let trace = Trace::generate(
+        &ArrivalSchedule::Poisson { rate_hz: 600.0 },
+        &RequestMix::default(),
+        Duration::from_millis(600),
+        ELEMS,
+        7,
+    );
+    let scenario = Scenario::new("peer_death", trace).with_script(
+        FleetScript::new().at(Duration::from_millis(300), FleetEvent::PeerDeath { peer: 0 }),
+    );
+    let report = run_scenario(&stack, &scenario, &mut MaintainController);
+
+    assert_eq!(report.load.failed, 0, "dead-lane drain must answer every admitted caller");
+    assert_eq!(report.load.completed + report.load.rejected, report.load.offered);
+    assert_eq!(report.adaptation.peers_killed, 1);
+    let stats = stack.router().shard_stats();
+    assert!(stats.peers[0].dead);
+    assert!(stats.peers[0].routed > 0, "the peer must have carried traffic before dying");
+    stack.shutdown();
+}
+
+/// Decision-level dynamics mid-run: a variant switch and a device
+/// drift land under load without failing requests, and the scenario
+/// window attributes exactly one switch to the run.
+#[test]
+fn variant_switch_and_drift_land_under_open_loop_load() {
+    let stack = stack();
+    let trace = Trace::generate(
+        &ArrivalSchedule::Poisson { rate_hz: 500.0 },
+        &RequestMix { priority_share: 0.1, hot_share: 0.0, sizes: vec![(ELEMS, 1.0)] },
+        Duration::from_millis(400),
+        ELEMS,
+        11,
+    );
+    let scenario = Scenario::new("switch_under_load", trace).with_script(
+        FleetScript::new()
+            .at(Duration::from_millis(150), FleetEvent::DeviceDrift { factor: 1.5 })
+            .at(
+                Duration::from_millis(200),
+                FleetEvent::VariantSwitch { variant: "e3".to_string() },
+            ),
+    );
+    let report = run_scenario(&stack, &scenario, &mut MaintainController);
+
+    assert_eq!(report.load.failed, 0);
+    assert_eq!(report.load.completed + report.load.rejected, report.load.offered);
+    assert_eq!(report.adaptation.switches, 1);
+    assert!(report.window.switches >= 1, "worker slots must have applied the new variant");
+    stack.shutdown();
+}

@@ -1,0 +1,260 @@
+#!/usr/bin/env python3
+"""Project-specific concurrency-invariant lints over `rust/src`.
+
+Four rules, each guarding an invariant the type system cannot:
+
+  R1  telemetry parity — every `Counter` field on `WorkerTelemetry` or
+      `TelemetryHub` must surface as a field of `TelemetrySnapshot`
+      AND an entry of `SnapshotDelta` (modulo the alias map below), so
+      a new counter can never be half-plumbed: published but invisible
+      to the control plane, or visible in totals but not in windowed
+      deltas. Waivers list counters that intentionally have no
+      snapshot total (`stolen_from` mirrors `steals` — every stolen
+      request has a thief, so a pool-wide total would double-count).
+
+  R2  no `.lock().unwrap()` / `.read().unwrap()` / `.write().unwrap()`
+      (or `.expect`) outside `sync.rs` — poison must be recovered via
+      `lock_or_recover` / `read_or_recover` / `write_or_recover`, not
+      propagated into every subsequent submitter.
+
+  R3  no textual `std::sync` / `std::thread` outside `sync.rs` — the
+      loom build swaps the whole crate onto checkable primitives
+      through `crate::sync`; a stray direct import silently falls out
+      of the model. Comment/doc lines are exempt (prose may name std
+      types).
+
+  R4  every `Ordering::Relaxed` / `Acquire` / `Release` site carries a
+      justification: an `ordering:` comment on the same line, or in a
+      comment within the preceding 25 lines with no blank line in
+      between (a blank line ends a comment's scope). `AcqRel`/`SeqCst`
+      are exempt — they are the conservative choices; the lint exists
+      to make *weakening* a conscious, reviewed act.
+
+Complements clippy's `disallowed-methods` (clippy.toml): clippy sees
+resolved paths (catching aliased imports), these lints see structure
+clippy cannot (counter parity, comment-carried justifications).
+
+Exit codes: 0 = clean, 1 = violations (or missing inputs).
+"""
+
+import argparse
+import os
+import re
+import sys
+
+# Hub-level counter names -> their TelemetrySnapshot/SnapshotDelta field.
+ALIASES = {"cache_coalesced": "cache_inflight_coalesced"}
+
+# Counters with intentionally no snapshot total (reason in module doc).
+WAIVED = {"stolen_from"}
+
+HUB_RS = os.path.join("telemetry", "hub.rs")
+SYNC_RS = "sync.rs"
+
+LOCK_UNWRAP_RE = re.compile(r"\.(lock|read|write)\(\)\s*\.\s*(unwrap|expect)\s*\(")
+STD_SYNC_RE = re.compile(r"std::(sync|thread)\b")
+ORDERING_RE = re.compile(r"Ordering::(Relaxed|Acquire|Release)\b")
+JUSTIFIED_RE = re.compile(r"ordering:")
+COMMENT_RE = re.compile(r"^\s*//")
+
+# How far back an `ordering:` comment covers (uninterrupted by blanks).
+ORDERING_SCOPE = 25
+
+
+def is_comment(line):
+    return bool(COMMENT_RE.match(line))
+
+
+def struct_fields(text, name):
+    """Names and types of the fields of `struct name { ... }` in text.
+
+    Returns a list of (field_name, type_text) in declaration order, or
+    None when the struct is not found. Brace-matched, so nested
+    generics/arrays in types are kept intact.
+    """
+    m = re.search(r"struct\s+%s\s*\{" % re.escape(name), text)
+    if not m:
+        return None
+    depth, i = 1, m.end()
+    while i < len(text) and depth > 0:
+        if text[i] == "{":
+            depth += 1
+        elif text[i] == "}":
+            depth -= 1
+        i += 1
+    body = text[m.end() : i - 1]
+    fields = []
+    for fm in re.finditer(
+        r"^\s*(?:pub(?:\(crate\))?\s+)?(\w+)\s*:\s*([^,\n]+(?:\[[^\]]*\])?[^,\n]*)",
+        body,
+        re.M,
+    ):
+        fields.append((fm.group(1), fm.group(2).strip()))
+    return fields
+
+
+def counter_fields(text, name):
+    """Counter-typed fields (plain or per-lane arrays) of a struct."""
+    fields = struct_fields(text, name)
+    if fields is None:
+        return None
+    return [f for f, ty in fields if ty == "Counter" or ty.startswith("[Counter")]
+
+
+def check_telemetry_parity(hub_text, hub_path=HUB_RS):
+    """R1: counter <-> snapshot field <-> delta entry parity."""
+    violations = []
+    counters = []
+    for struct in ("WorkerTelemetry", "TelemetryHub"):
+        got = counter_fields(hub_text, struct)
+        if got is None:
+            violations.append((hub_path, 0, "R1", f"struct {struct} not found"))
+            continue
+        counters.extend(got)
+    snapshot = struct_fields(hub_text, "TelemetrySnapshot")
+    delta = struct_fields(hub_text, "SnapshotDelta")
+    for struct, fields in (("TelemetrySnapshot", snapshot), ("SnapshotDelta", delta)):
+        if fields is None:
+            violations.append((hub_path, 0, "R1", f"struct {struct} not found"))
+    if violations:
+        return violations
+    snapshot_names = {f for f, _ in snapshot}
+    delta_names = {f for f, _ in delta}
+    for c in counters:
+        if c in WAIVED:
+            continue
+        surfaced = ALIASES.get(c, c)
+        if surfaced not in snapshot_names:
+            violations.append(
+                (hub_path, 0, "R1", f"counter `{c}` has no TelemetrySnapshot field `{surfaced}`")
+            )
+        if surfaced not in delta_names:
+            violations.append(
+                (hub_path, 0, "R1", f"counter `{c}` has no SnapshotDelta entry `{surfaced}`")
+            )
+    # The reverse direction: a delta entry with no snapshot field can
+    # never be computed (delta_since differences snapshot fields).
+    for d in delta_names - snapshot_names:
+        violations.append(
+            (hub_path, 0, "R1", f"SnapshotDelta entry `{d}` has no TelemetrySnapshot field")
+        )
+    return violations
+
+
+def check_lock_unwrap(path, text):
+    """R2: poison-propagating lock acquisition outside sync.rs."""
+    violations = []
+    for m in LOCK_UNWRAP_RE.finditer(text):
+        line_no = text.count("\n", 0, m.start()) + 1
+        line = text.splitlines()[line_no - 1]
+        if is_comment(line):
+            continue
+        violations.append(
+            (
+                path,
+                line_no,
+                "R2",
+                f".{m.group(1)}().{m.group(2)}() — use {m.group(1)}_or_recover "
+                "from crate::sync",
+            )
+        )
+    return violations
+
+
+def check_std_sync(path, text):
+    """R3: direct std::sync / std::thread reference outside sync.rs."""
+    violations = []
+    for i, line in enumerate(text.splitlines(), 1):
+        if is_comment(line):
+            continue
+        m = STD_SYNC_RE.search(line)
+        if m:
+            violations.append(
+                (path, i, "R3", f"`{m.group(0)}` — import from crate::sync instead")
+            )
+    return violations
+
+
+def check_ordering_justified(path, text):
+    """R4: weak-ordering sites must carry an `ordering:` justification."""
+    violations = []
+    lines = text.splitlines()
+    for i, line in enumerate(lines):
+        if is_comment(line):
+            continue
+        m = ORDERING_RE.search(line)
+        if not m:
+            continue
+        if JUSTIFIED_RE.search(line):
+            continue
+        justified = False
+        for back in range(1, ORDERING_SCOPE + 1):
+            j = i - back
+            if j < 0:
+                break
+            prev = lines[j]
+            if not prev.strip():
+                break  # a blank line ends the comment's scope
+            if is_comment(prev) and JUSTIFIED_RE.search(prev):
+                justified = True
+                break
+        if not justified:
+            violations.append(
+                (
+                    path,
+                    i + 1,
+                    "R4",
+                    f"Ordering::{m.group(1)} without an `// ordering:` justification",
+                )
+            )
+    return violations
+
+
+def lint_tree(root):
+    """All violations across `root` (the crate's src directory)."""
+    violations = []
+    hub_seen = False
+    for dirpath, _, files in sorted(os.walk(root)):
+        for f in sorted(files):
+            if not f.endswith(".rs"):
+                continue
+            path = os.path.join(dirpath, f)
+            rel = os.path.relpath(path, root)
+            with open(path, "r", encoding="utf-8") as fh:
+                text = fh.read()
+            if rel == SYNC_RS:
+                continue  # the shim is the one blessed home of std::sync
+            if rel == HUB_RS:
+                hub_seen = True
+                violations.extend(check_telemetry_parity(text, rel))
+            violations.extend(check_lock_unwrap(rel, text))
+            violations.extend(check_std_sync(rel, text))
+            violations.extend(check_ordering_justified(rel, text))
+    if not hub_seen:
+        violations.append((HUB_RS, 0, "R1", "telemetry hub source not found"))
+    return violations
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--root",
+        default=os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "rust", "src"),
+        help="crate source root to lint (default: rust/src next to ci/)",
+    )
+    args = ap.parse_args(argv)
+    if not os.path.isdir(args.root):
+        print(f"error: no such source root: {args.root}", file=sys.stderr)
+        return 1
+    violations = lint_tree(args.root)
+    for path, line, rule, msg in violations:
+        print(f"{path}:{line}: [{rule}] {msg}")
+    if violations:
+        print(f"\n{len(violations)} invariant violation(s)", file=sys.stderr)
+        return 1
+    print("lint_invariants: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,243 @@
+"""Unit tests for the concurrency-invariant lints (`ci/lint_invariants.py`).
+
+Run with `python3 -m unittest discover -s ci` (the CI `python-ci` job)
+— plain unittest, no third-party test runner required.
+"""
+
+import os
+import sys
+import tempfile
+import unittest
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+import lint_invariants  # noqa: E402
+
+
+HUB_OK = """
+pub struct WorkerTelemetry {
+    pub worker: usize,
+    served: [Counter; LANES],
+    batches: Counter,
+    steals: Counter,
+    stolen_from: Counter,
+    queue_depth: Gauge,
+}
+
+pub struct TelemetryHub {
+    slots: RwLock<Vec<Arc<WorkerTelemetry>>>,
+    cache_coalesced: Counter,
+}
+
+pub struct TelemetrySnapshot {
+    pub served: usize,
+    pub batches: usize,
+    pub steals: usize,
+    pub cache_inflight_coalesced: usize,
+    pub p95_s: f64,
+}
+
+pub struct SnapshotDelta {
+    pub served: usize,
+    pub batches: usize,
+    pub steals: usize,
+    pub cache_inflight_coalesced: usize,
+}
+"""
+
+
+def rules(violations):
+    return [rule for _, _, rule, _ in violations]
+
+
+class TelemetryParityTests(unittest.TestCase):
+    def test_clean_hub_passes(self):
+        self.assertEqual(lint_invariants.check_telemetry_parity(HUB_OK), [])
+
+    def test_counter_missing_from_snapshot_and_delta_fails_twice(self):
+        text = HUB_OK.replace("    batches: Counter,\n", "    batches: Counter,\n    evicted: Counter,\n", 1)
+        violations = lint_invariants.check_telemetry_parity(text)
+        self.assertEqual(rules(violations), ["R1", "R1"])
+        self.assertIn("`evicted`", violations[0][3])
+
+    def test_alias_map_routes_hub_counter_to_renamed_field(self):
+        # cache_coalesced surfaces as cache_inflight_coalesced: removing
+        # the aliased field must be flagged under the *surfaced* name.
+        text = HUB_OK.replace("    pub cache_inflight_coalesced: usize,\n", "", 1)
+        violations = lint_invariants.check_telemetry_parity(text)
+        self.assertTrue(any("cache_inflight_coalesced" in v[3] for v in violations))
+
+    def test_waived_counter_needs_no_snapshot_total(self):
+        # stolen_from is in HUB_OK with no snapshot/delta field: waived.
+        self.assertEqual(lint_invariants.check_telemetry_parity(HUB_OK), [])
+
+    def test_delta_entry_without_snapshot_field_fails(self):
+        text = HUB_OK.replace(
+            "pub struct SnapshotDelta {\n",
+            "pub struct SnapshotDelta {\n    pub phantom: usize,\n",
+            1,
+        )
+        violations = lint_invariants.check_telemetry_parity(text)
+        self.assertEqual(rules(violations), ["R1"])
+        self.assertIn("`phantom`", violations[0][3])
+
+    def test_missing_struct_is_reported(self):
+        violations = lint_invariants.check_telemetry_parity("fn nothing() {}")
+        self.assertTrue(violations)
+        self.assertTrue(all(r == "R1" for r in rules(violations)))
+
+
+class LockUnwrapTests(unittest.TestCase):
+    def test_lock_unwrap_fails(self):
+        v = lint_invariants.check_lock_unwrap("x.rs", "let g = self.q.lock().unwrap();\n")
+        self.assertEqual(rules(v), ["R2"])
+        self.assertIn("lock_or_recover", v[0][3])
+
+    def test_read_expect_across_lines_fails(self):
+        text = "let g = self.slots\n    .read()\n    .expect(\"poisoned\");\n"
+        v = lint_invariants.check_lock_unwrap("x.rs", text)
+        self.assertEqual(rules(v), ["R2"])
+
+    def test_write_unwrap_fails_and_reports_line(self):
+        text = "fn f() {\n    let g = l.write().unwrap();\n}\n"
+        v = lint_invariants.check_lock_unwrap("x.rs", text)
+        self.assertEqual(v[0][1], 2)
+
+    def test_recover_helpers_pass(self):
+        text = "let g = lock_or_recover(&self.q);\nlet r = read_or_recover(&l);\n"
+        self.assertEqual(lint_invariants.check_lock_unwrap("x.rs", text), [])
+
+    def test_comment_mention_passes(self):
+        text = "// never call .lock().unwrap() here\n"
+        self.assertEqual(lint_invariants.check_lock_unwrap("x.rs", text), [])
+
+
+class StdSyncTests(unittest.TestCase):
+    def test_std_sync_import_fails(self):
+        v = lint_invariants.check_std_sync("x.rs", "use std::sync::Mutex;\n")
+        self.assertEqual(rules(v), ["R3"])
+
+    def test_std_thread_call_fails(self):
+        v = lint_invariants.check_std_sync("x.rs", "let h = std::thread::spawn(f);\n")
+        self.assertEqual(rules(v), ["R3"])
+
+    def test_doc_comment_mention_passes(self):
+        text = "//! buffers are shared [std::sync::Arc]`<[f32]>` handles\n"
+        self.assertEqual(lint_invariants.check_std_sync("x.rs", text), [])
+
+    def test_crate_sync_passes(self):
+        text = "use crate::sync::{Arc, Mutex};\nuse crate::sync::thread;\n"
+        self.assertEqual(lint_invariants.check_std_sync("x.rs", text), [])
+
+
+class OrderingJustificationTests(unittest.TestCase):
+    def test_bare_relaxed_fails(self):
+        v = lint_invariants.check_ordering_justified(
+            "x.rs", "self.count.fetch_add(1, Ordering::Relaxed);\n"
+        )
+        self.assertEqual(rules(v), ["R4"])
+
+    def test_same_line_justification_passes(self):
+        text = "self.count.fetch_add(1, Ordering::Relaxed); // ordering: pure counter\n"
+        self.assertEqual(lint_invariants.check_ordering_justified("x.rs", text), [])
+
+    def test_preceding_comment_justifies(self):
+        text = (
+            "// ordering: Release — publishes the seed values; pairs with\n"
+            "// the Acquire in `seeded()`.\n"
+            "self.seeded.store(true, Ordering::Release);\n"
+        )
+        self.assertEqual(lint_invariants.check_ordering_justified("x.rs", text), [])
+
+    def test_block_comment_covers_a_following_cluster(self):
+        text = (
+            "// ordering: Relaxed — statistics snapshot, no consistency.\n"
+            "let a = self.x.load(Ordering::Relaxed);\n"
+            "let b = self.y.load(Ordering::Relaxed);\n"
+        )
+        self.assertEqual(lint_invariants.check_ordering_justified("x.rs", text), [])
+
+    def test_blank_line_ends_the_comment_scope(self):
+        text = (
+            "// ordering: Relaxed — covers only the adjacent cluster.\n"
+            "let a = self.x.load(Ordering::Relaxed);\n"
+            "\n"
+            "let b = self.y.load(Ordering::Relaxed);\n"
+        )
+        v = lint_invariants.check_ordering_justified("x.rs", text)
+        self.assertEqual(rules(v), ["R4"])
+        self.assertEqual(v[0][1], 4)
+
+    def test_scope_is_bounded(self):
+        filler = "let z = 1;\n" * (lint_invariants.ORDERING_SCOPE + 1)
+        text = "// ordering: Relaxed — too far away.\n" + filler
+        text += "let a = self.x.load(Ordering::Relaxed);\n"
+        v = lint_invariants.check_ordering_justified("x.rs", text)
+        self.assertEqual(rules(v), ["R4"])
+
+    def test_seqcst_and_acqrel_are_exempt(self):
+        text = (
+            "let g = self.generation.fetch_add(1, Ordering::SeqCst);\n"
+            "let prev = slot.cut.swap(cut, Ordering::AcqRel);\n"
+        )
+        self.assertEqual(lint_invariants.check_ordering_justified("x.rs", text), [])
+
+    def test_comment_mentioning_ordering_is_not_a_site(self):
+        text = "// pairs with the Ordering::Acquire load in `seeded()`\n"
+        self.assertEqual(lint_invariants.check_ordering_justified("x.rs", text), [])
+
+
+class TreeWalkTests(unittest.TestCase):
+    def lint_tree_of(self, files):
+        with tempfile.TemporaryDirectory() as root:
+            for rel, text in files.items():
+                path = os.path.join(root, rel)
+                os.makedirs(os.path.dirname(path), exist_ok=True)
+                with open(path, "w", encoding="utf-8") as f:
+                    f.write(text)
+            return lint_invariants.lint_tree(root)
+
+    def test_sync_rs_is_exempt_from_r2_and_r3(self):
+        violations = self.lint_tree_of(
+            {
+                "sync.rs": "pub use std::sync::Arc;\nmatch m.lock().unwrap() {}\n",
+                "telemetry/hub.rs": HUB_OK,
+            }
+        )
+        self.assertEqual(violations, [])
+
+    def test_violations_carry_relative_paths(self):
+        violations = self.lint_tree_of(
+            {
+                "coordinator/pool.rs": "use std::sync::Mutex;\n",
+                "telemetry/hub.rs": HUB_OK,
+            }
+        )
+        self.assertEqual(rules(violations), ["R3"])
+        self.assertEqual(violations[0][0], os.path.join("coordinator", "pool.rs"))
+
+    def test_missing_hub_is_reported(self):
+        violations = self.lint_tree_of({"lib.rs": "pub mod sync;\n"})
+        self.assertEqual(rules(violations), ["R1"])
+
+    def test_real_tree_is_clean(self):
+        # The actual crate must satisfy its own invariants — this is the
+        # same gate CI runs, kept here so `unittest discover` alone
+        # catches a regression even if the CI step is skipped.
+        root = os.path.join(
+            os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "rust", "src"
+        )
+        self.assertTrue(os.path.isdir(root))
+        self.assertEqual(lint_invariants.lint_tree(root), [])
+
+
+class MainTests(unittest.TestCase):
+    def test_main_green_on_real_tree(self):
+        self.assertEqual(lint_invariants.main([]), 0)
+
+    def test_main_red_on_bad_root(self):
+        self.assertEqual(lint_invariants.main(["--root", "/nonexistent/src"]), 1)
+
+
+if __name__ == "__main__":
+    unittest.main()

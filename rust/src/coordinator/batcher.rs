@@ -20,9 +20,10 @@
 //! ultimately executes it — owner or thief — can answer it directly.
 
 use std::collections::VecDeque;
-use std::sync::mpsc::Sender;
-use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+use crate::sync::mpsc::Sender;
+use crate::sync::Arc;
 
 use super::cache::CacheSlot;
 use super::server::Response;
@@ -243,7 +244,7 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::mpsc::channel;
+    use crate::sync::mpsc::channel;
 
     fn lane_req(id: u64, t: Instant, lane: Lane) -> Request {
         let (resp, _rx) = channel();

@@ -55,8 +55,8 @@
 
 use std::collections::HashMap;
 use std::fmt;
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use crate::sync::mpsc::{channel, Receiver, Sender};
+use crate::sync::{lock_or_recover, Arc, Mutex};
 
 use super::server::Response;
 use crate::telemetry::TelemetryHub;
@@ -177,7 +177,7 @@ impl CacheSlot {
     pub fn complete(mut self, resp: &Response) {
         self.done = true;
         let evicted = {
-            let mut st = self.cache.state.lock().unwrap();
+            let mut st = lock_or_recover(&self.cache.state);
             if let Some(flight) = st.inflight.remove(&self.key) {
                 for w in flight.waiters {
                     let _ = w.send(resp.clone());
@@ -216,7 +216,7 @@ impl Drop for CacheSlot {
         // the key is retryable, and drop the waiters' senders — their
         // receivers close, surfacing the same failure the leader's
         // caller sees.
-        let mut st = self.cache.state.lock().unwrap();
+        let mut st = lock_or_recover(&self.cache.state);
         st.inflight.remove(&self.key);
     }
 }
@@ -255,7 +255,7 @@ impl ResponseCache {
         allow_join: bool,
     ) -> CacheOutcome {
         let key = CacheKey { hash: content_hash(input), variant: Arc::clone(variant), generation };
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_or_recover(&self.state);
         st.tick += 1;
         let tick = st.tick;
         if let Some(c) = st.completed.get_mut(&key) {
@@ -301,7 +301,7 @@ impl ResponseCache {
     /// the pre-switch answer they were promised.
     pub fn purge_stale(&self, current_generation: u64) {
         let evicted = {
-            let mut st = self.state.lock().unwrap();
+            let mut st = lock_or_recover(&self.state);
             let before = st.completed.len();
             st.completed.retain(|k, _| k.generation >= current_generation);
             before - st.completed.len()
@@ -313,18 +313,18 @@ impl ResponseCache {
 
     /// Completed-entry count (tests/diagnostics).
     pub fn completed_len(&self) -> usize {
-        self.state.lock().unwrap().completed.len()
+        lock_or_recover(&self.state).completed.len()
     }
 
     /// In-flight entry count (tests/diagnostics).
     pub fn inflight_len(&self) -> usize {
-        self.state.lock().unwrap().inflight.len()
+        lock_or_recover(&self.state).inflight.len()
     }
 }
 
 impl fmt::Debug for ResponseCache {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        let st = self.state.lock().unwrap();
+        let st = lock_or_recover(&self.state);
         f.debug_struct("ResponseCache")
             .field("completed", &st.completed.len())
             .field("inflight", &st.inflight.len())

@@ -39,6 +39,50 @@
 //! admission boundary: one inference fans out to every waiter, keyed by
 //! input content + variant + switch generation so a variant switch can
 //! never serve a stale answer.
+//!
+//! # Concurrency invariants
+//!
+//! Every sync primitive in this module comes from [`crate::sync`], the
+//! std/loom shim, so the protocols below are *model-checked*: under
+//! `--cfg loom` the loom CI job explores every interleaving (up to the
+//! preemption bound) of the models in `rust/tests/loom_*.rs`. Each
+//! model file also re-seeds a previously-fixed race as a
+//! `#[should_panic]` mutant, proving the model would catch its
+//! reintroduction. The invariants, and where they are checked:
+//!
+//! - **Steal lane** ([`steal::StealDeque`], `loom_steal`): a request
+//!   enqueued on a worker's normal lane is served *exactly once* —
+//!   owner pop, thief [`steal::StealDeque::steal_tail`], and
+//!   [`steal::StealRegistry::drain_dead`] partition the lane, never
+//!   duplicate or drop; the queue-depth gauge matches what remains.
+//! - **Single-flight cache** ([`cache::ResponseCache`], `loom_cache`):
+//!   a leader completing before any waiter registers can never strand
+//!   that waiter (the send happens-before the waiter's receive or the
+//!   waiter observes a `Hit`); a leader that *dies* drops its
+//!   [`cache::CacheSlot`], which frees the in-flight key and
+//!   disconnects every joined waiter so they retry rather than hang;
+//!   a generation bump ([`pool::SwitchGate::begin`] + purge) can never
+//!   let a pre-switch answer satisfy a post-switch lookup.
+//! - **Switch gate** ([`pool::SwitchGate`], `loom_switch`): concurrent
+//!   variant switches leave every worker on the *newest* generation —
+//!   workers absorb broadcasts through
+//!   [`pool::SwitchGate::accepts`]-filtered application, so a stale
+//!   broadcast arriving late cannot regress an already-switched
+//!   worker; `current()` never returns a torn (variant, generation)
+//!   pair.
+//! - **Frontier window** ([`shard::FrontierWindow`], `loom_frontier`):
+//!   observing `seeded() == true` implies the seed batch/wait values
+//!   are visible (Release/Acquire pairing), so
+//!   [`shard::ShardRouter::maintain`]'s retune racing a link thread's
+//!   close/deadline read yields only values from one epoch or the
+//!   other, never the type-level defaults.
+//!
+//! Two repo-wide rules back these up, enforced by
+//! `ci/lint_invariants.py` (and `clippy.toml`'s `disallowed-methods`):
+//! lock acquisition goes through the poison-tolerant
+//! [`crate::sync::lock_or_recover`] family (a panicking batch must not
+//! poison every later submitter), and any `Relaxed`/`Acquire`/`Release`
+//! atomic site carries an `// ordering:` justification.
 
 pub mod batcher;
 pub mod cache;
@@ -53,12 +97,12 @@ pub use batcher::{Batch, Batcher, BatcherConfig, Request};
 pub use cache::{CacheConfig, CacheOutcome, CacheSlot, ResponseCache};
 pub use cascade::{run_cascade, CascadeStats, Stage};
 pub use policy::{rank_variants, select_variant, DispatchPolicy, ScoredVariant};
-pub use pool::{PoolConfig, PoolStats, ServingPool};
+pub use pool::{PoolConfig, PoolStats, ServingPool, SwitchGate};
 pub use server::{Executor, Rejected, Response, ServingStats};
 pub use steal::{StealConfig, StealDeque, StealRegistry};
 pub use shard::{
-    PeerStat, PeerTransport, ShardRouter, ShardRouterConfig, ShardStats, SimulatedPeer,
-    REMOTE_WORKER_BASE,
+    FrontierWindow, PeerStat, PeerTransport, ShardRouter, ShardRouterConfig, ShardStats,
+    SimulatedPeer, REMOTE_WORKER_BASE,
 };
 
 pub use crate::telemetry::Lane;

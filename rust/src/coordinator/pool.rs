@@ -35,10 +35,13 @@
 //! drain their queues before exiting, and their telemetry slots persist
 //! so pool totals stay monotonic across resizes.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver};
-use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
+
+use crate::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use crate::sync::mpsc::{channel, Receiver};
+use crate::sync::{
+    lock_or_recover, read_or_recover, rwlock_into_inner, write_or_recover, Arc, Mutex, RwLock,
+};
 
 use super::batcher::{BatcherConfig, Request};
 use super::cache::{CacheConfig, CacheOutcome, ResponseCache};
@@ -156,6 +159,85 @@ impl PoolStats {
     }
 }
 
+/// The pool's variant-switch synchronization protocol, extracted so the
+/// loom model (`rust/tests/loom_switch.rs`) can check it against the
+/// real type: a variant string and a generation counter that must move
+/// **together** under one lock, plus the generation filter that keeps
+/// concurrent broadcasts from counting each other's acknowledgements.
+///
+/// Invariants (each one has been a real bug when violated):
+///
+/// - **No inversion**: [`SwitchGate::begin`] bumps the generation and
+///   records the variant under ONE lock, so two concurrent switches can
+///   never leave the earlier variant string paired with the later
+///   generation (which would make later-grown workers serve a stale
+///   variant no future broadcast corrects).
+/// - **Consistent reads**: [`SwitchGate::current`] reads the pair under
+///   the same lock, so a cache key or a spawned worker can never carry
+///   the previous variant stamped with the new generation.
+/// - **Filtered acks**: an acknowledgement proves only that the acking
+///   worker reached *some* generation; [`SwitchGate::accepts`] is the
+///   `>=` filter that keeps a waiter from counting an ack that only
+///   proves an older concurrent broadcast landed (see
+///   `concurrent_switches_converge_with_filtered_acks`).
+#[derive(Debug)]
+pub struct SwitchGate {
+    /// Current serving variant. `Arc<str>` so admission-time cache
+    /// keying clones a pointer, not the string bytes.
+    variant: Mutex<Arc<str>>,
+    /// Pool-wide variant generation; bumped per switch broadcast.
+    generation: AtomicU64,
+}
+
+impl SwitchGate {
+    pub fn new(initial_variant: &str) -> SwitchGate {
+        SwitchGate {
+            variant: Mutex::new(Arc::from(initial_variant)),
+            generation: AtomicU64::new(0),
+        }
+    }
+
+    /// Open a new switch: bump the generation and record the variant
+    /// under one lock (see the no-inversion invariant above). Returns
+    /// the new generation the caller broadcasts under.
+    pub fn begin(&self, variant: &str) -> u64 {
+        let mut v = lock_or_recover(&self.variant);
+        // ordering: SeqCst — the generation is read on the submit path
+        // without the lock held (`generation()`), and admission/cache
+        // correctness arguments are written in terms of a single total
+        // order of switches; the bump is rare (per actuation, not per
+        // request), so the strongest ordering costs nothing that matters.
+        let generation = self.generation.fetch_add(1, Ordering::SeqCst) + 1;
+        *v = Arc::from(variant);
+        generation
+    }
+
+    /// The current `(variant, generation)` pair, read under the lock so
+    /// the two can never be observed torn across a concurrent `begin`.
+    pub fn current(&self) -> (Arc<str>, u64) {
+        let v = lock_or_recover(&self.variant);
+        // ordering: SeqCst — paired with `begin`'s bump; reading under
+        // the lock already orders against the write, SeqCst keeps the
+        // standalone `generation()` read in the same total order.
+        (Arc::clone(&v), self.generation.load(Ordering::SeqCst))
+    }
+
+    /// Current generation without the variant (lock-free read).
+    pub fn generation(&self) -> u64 {
+        // ordering: SeqCst — see `begin`.
+        self.generation.load(Ordering::SeqCst)
+    }
+
+    /// The generation filter: does an observed generation prove that the
+    /// switch which requires `required` landed? Used by the ack counter
+    /// (an ack below the waiter's generation only proves an older
+    /// concurrent broadcast landed) and by the worker absorb path (a
+    /// stale out-of-order broadcast must not roll a worker back).
+    pub fn accepts(observed: u64, required: u64) -> bool {
+        observed >= required
+    }
+}
+
 /// Rejection shape when every dispatch attempt of a `submit_lane` call
 /// was consumed without a successful enqueue: blame the last queue
 /// *actually observed* at capacity, or — when only dead-worker channel
@@ -185,10 +267,9 @@ pub struct ServingPool {
     /// Executor factory, retained so the pool can spawn workers after
     /// construction (dynamic grow).
     make: Arc<dyn Fn(usize) -> Box<dyn Executor> + Send + Sync>,
-    /// Current serving variant — what dynamically spawned workers start
-    /// on. `Arc<str>` so admission-time cache keying clones a pointer,
-    /// not the string bytes.
-    variant: Mutex<Arc<str>>,
+    /// Variant-switch protocol state: the current variant + generation
+    /// pair and the ack filter (see [`SwitchGate`]).
+    gate: SwitchGate,
     hub: Arc<TelemetryHub>,
     /// Single-flight response cache, consulted at admission when enabled.
     cache: Option<Arc<ResponseCache>>,
@@ -203,8 +284,6 @@ pub struct ServingPool {
     /// Round-robin cursor (also seeds full-scan fallback ordering).
     rr: AtomicUsize,
     next_id: AtomicU64,
-    /// Pool-wide variant generation; bumped per switch broadcast.
-    generation: AtomicU64,
 }
 
 impl ServingPool {
@@ -244,7 +323,7 @@ impl ServingPool {
         ServingPool {
             workers: RwLock::new(Workers { list, next_id: cfg.workers }),
             make,
-            variant: Mutex::new(Arc::from(initial_variant)),
+            gate: SwitchGate::new(initial_variant),
             hub,
             cache,
             steal_registry,
@@ -255,30 +334,29 @@ impl ServingPool {
             switch_ack_timeout: cfg.switch_ack_timeout,
             rr: AtomicUsize::new(0),
             next_id: AtomicU64::new(0),
-            generation: AtomicU64::new(0),
         }
     }
 
     /// Current live worker count.
     pub fn num_workers(&self) -> usize {
-        self.workers.read().unwrap().list.len()
+        read_or_recover(&self.workers).list.len()
     }
 
     /// Current admitted-but-unanswered depth of each live worker queue.
     pub fn queue_depths(&self) -> Vec<usize> {
-        self.workers.read().unwrap().list.iter().map(|w| w.tel.queue_depth()).collect()
+        read_or_recover(&self.workers).list.iter().map(|w| w.tel.queue_depth()).collect()
     }
 
     /// Current pool-wide variant generation.
     pub fn generation(&self) -> u64 {
-        self.generation.load(Ordering::SeqCst)
+        self.gate.generation()
     }
 
     /// The variant new submissions are currently served under — what a
     /// dynamically spawned worker (or a shard router's freshly attached
     /// peer) starts on.
     pub fn current_variant(&self) -> String {
-        self.variant.lock().unwrap().to_string()
+        self.gate.current().0.to_string()
     }
 
     /// Per-worker bounded queue capacity (the admission bound).
@@ -359,21 +437,21 @@ impl ServingPool {
         // submission can never carry a pre-switch key.
         let mut cache_slot = None;
         if let Some(cache) = &self.cache {
-            let (variant, generation) = {
-                let v = self.variant.lock().unwrap();
-                (Arc::clone(&v), self.generation.load(Ordering::SeqCst))
-            };
+            let (variant, generation) = self.gate.current();
             match cache.lookup(&input, &variant, generation, lane == Lane::Normal) {
                 CacheOutcome::Hit(rx) | CacheOutcome::Joined(rx) => return Ok(rx),
                 CacheOutcome::Lead(slot) => cache_slot = Some(slot),
                 CacheOutcome::Bypass => {}
             }
         }
-        let guard = self.workers.read().unwrap();
+        let guard = read_or_recover(&self.workers);
         let workers = &guard.list;
         if workers.is_empty() {
             return Err(Rejected { worker: None, queue_depth: 0, capacity: self.capacity });
         }
+        // ordering: Relaxed — the cursor only spreads picks; no memory
+        // is published through it and any interleaving of increments is
+        // an equally valid round-robin.
         let cursor = self.rr.fetch_add(1, Ordering::Relaxed);
         let mut excluded = vec![false; workers.len()];
         // The last queue *actually observed* at capacity during this call
@@ -427,6 +505,8 @@ impl ServingPool {
                 last_full = Some((wi, prev));
                 continue;
             }
+            // ordering: Relaxed — request ids only need uniqueness, which
+            // the RMW provides under any ordering.
             let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
             let (tx, rx) = channel();
             let req = Request {
@@ -493,19 +573,13 @@ impl ServingPool {
     /// switch when it next drains its channel, but requests admitted
     /// meanwhile may be served by the stale variant).
     pub fn switch_variant_acked(&self, variant: &str) -> (u64, usize, usize) {
-        // Bump the generation and record the variant under ONE lock, so
-        // concurrent switches can never invert (a variant string left
-        // behind with a newer generation would make later-grown workers
-        // serve a stale variant that no future broadcast corrects). A
-        // concurrent grow either sees the new string (and spawns directly
-        // onto it) or spawns in time to receive the broadcast — never
-        // neither. Recording *before* broadcasting keeps that guarantee.
-        let generation = {
-            let mut v = self.variant.lock().unwrap();
-            let generation = self.generation.fetch_add(1, Ordering::SeqCst) + 1;
-            *v = Arc::from(variant);
-            generation
-        };
+        // The gate bumps the generation and records the variant under ONE
+        // lock, so concurrent switches can never invert (see
+        // [`SwitchGate`]'s no-inversion invariant). A concurrent grow
+        // either sees the new string (and spawns directly onto it) or
+        // spawns in time to receive the broadcast — never neither.
+        // Recording *before* broadcasting keeps that guarantee.
+        let generation = self.gate.begin(variant);
         // Response-cache staleness guarantee: every submission admitted
         // after this point reads the bumped generation (under the same
         // lock), so pre-switch entries are already unreachable — the
@@ -517,7 +591,7 @@ impl ServingPool {
         let (ack_tx, ack_rx) = channel();
         let mut pending = 0usize;
         {
-            let guard = self.workers.read().unwrap();
+            let guard = read_or_recover(&self.workers);
             for w in &guard.list {
                 let msg = Msg::Switch { variant: variant.to_string(), generation, ack: ack_tx.clone() };
                 if w.tx.send(msg).is_ok() {
@@ -545,7 +619,7 @@ impl ServingPool {
             // With concurrent switches in flight, an ack below ours would
             // prove only that some older broadcast landed — counting it
             // would overstate this switch's atomicity.
-            if g >= generation {
+            if SwitchGate::accepts(g, generation) {
                 acked += 1;
             }
         }
@@ -569,23 +643,21 @@ impl ServingPool {
         // the duration instead of letting them proceed on the survivors.
         let mut retiring = Vec::new();
         let len = {
-            let mut guard = self.workers.write().unwrap();
+            let mut guard = write_or_recover(&self.workers);
             while guard.list.len() > target {
                 retiring.push(guard.list.pop().expect("len > target >= 1"));
             }
             if guard.list.len() < target {
-                // Read (variant, generation) under the variant lock — the
-                // same lock switches bump the generation under — so the
-                // pair is always consistent: a worker can never spawn
+                // The gate reads (variant, generation) under its lock —
+                // the same lock switches bump the generation under — so
+                // the pair is always consistent: a worker can never spawn
                 // with the *previous* variant already stamped with the
                 // *new* generation (which would ignore the corrective
-                // broadcast). Lock order is workers.write → variant here;
-                // switches never hold variant while taking workers.read,
-                // so there is no cycle.
-                let (variant, generation) = {
-                    let v = self.variant.lock().unwrap();
-                    (v.to_string(), self.generation.load(Ordering::SeqCst))
-                };
+                // broadcast). Lock order is workers.write → gate here;
+                // switches never hold the gate lock while taking
+                // workers.read, so there is no cycle.
+                let (variant, generation) = self.gate.current();
+                let variant = variant.to_string();
                 while guard.list.len() < target {
                     let id = guard.next_id;
                     guard.next_id += 1;
@@ -627,7 +699,11 @@ impl ServingPool {
     /// Stop every worker, draining in-flight requests, and return the
     /// lifetime statistics (retired workers included).
     pub fn shutdown(self) -> PoolStats {
-        let workers = self.workers.into_inner().unwrap();
+        // Poison-tolerant teardown: a worker that panicked while a
+        // submitter held the lock must not turn shutdown into a second
+        // panic — the drain below still owes every in-flight caller a
+        // closed channel or an answer.
+        let workers = rwlock_into_inner(self.workers);
         for w in &workers.list {
             let _ = w.tx.send(Msg::Shutdown);
         }
@@ -937,7 +1013,7 @@ mod tests {
             },
         );
         // Let worker 0's thread die (its receiver drops with the panic).
-        std::thread::sleep(Duration::from_millis(100));
+        crate::sync::thread::sleep(Duration::from_millis(100));
         // Fill the surviving worker to capacity: dispatch prefers the
         // dead worker's depth-0 queue, fails the send, and routes around.
         let rxs: Vec<_> =
@@ -967,11 +1043,11 @@ mod tests {
         let pool = Arc::new(quad(200, 1024));
         let a = {
             let p = Arc::clone(&pool);
-            std::thread::spawn(move || p.switch_variant_acked("x"))
+            crate::sync::thread::spawn(move || p.switch_variant_acked("x"))
         };
         let b = {
             let p = Arc::clone(&pool);
-            std::thread::spawn(move || p.switch_variant_acked("y"))
+            crate::sync::thread::spawn(move || p.switch_variant_acked("y"))
         };
         let (gen_a, acked_a, fanout_a) = a.join().unwrap();
         let (gen_b, acked_b, fanout_b) = b.join().unwrap();

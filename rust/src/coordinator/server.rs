@@ -32,10 +32,11 @@
 //! worker scale) and claims a chunk of that lane onto itself, migrating
 //! the admission accounting with it. Priority requests never migrate.
 
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
-use std::sync::Arc;
-use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+use crate::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use crate::sync::thread::{self, JoinHandle};
+use crate::sync::Arc;
 
 use anyhow::Result;
 
@@ -294,7 +295,7 @@ where
 {
     let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
     let tel_w = Arc::clone(&tel);
-    let join = std::thread::spawn(move || {
+    let join = thread::spawn(move || {
         worker_main(index, make_exec(), rx, initial_variant, initial_generation, cfg, steal, tel_w)
     });
     Worker { tx, tel, join }
@@ -317,8 +318,9 @@ impl WorkerState {
                 // `>=` (not `>`): a worker spawned concurrently with a
                 // broadcast may start *at* the broadcast generation but
                 // with the previous variant string; the equal-generation
-                // re-application is idempotent for everyone else.
-                if generation >= self.generation {
+                // re-application is idempotent for everyone else. Same
+                // filter the ack waiter applies, via the same predicate.
+                if super::pool::SwitchGate::accepts(generation, self.generation) {
                     self.generation = generation;
                     if variant != self.variant {
                         self.variant = variant;
@@ -528,6 +530,26 @@ fn worker_main(
     }
 }
 
+/// Argmax over one probability row with a **NaN-hostile** comparator: a
+/// NaN score loses every comparison (a corrupted estimate must never be
+/// selected, nor tie its way past a finite competitor — the old
+/// `partial_cmp(..).unwrap_or(Equal)` let it do exactly that). Ties
+/// between finite scores keep the *last* maximum, matching
+/// `Iterator::max_by`. Returns `(0, 0.0)` for an empty or all-NaN row.
+pub(crate) fn argmax_prob(row: &[f32]) -> (usize, f32) {
+    let mut best: Option<(usize, f32)> = None;
+    for (k, &v) in row.iter().enumerate() {
+        if v.is_nan() {
+            continue;
+        }
+        match best {
+            Some((_, bv)) if v < bv => {}
+            _ => best = Some((k, v)),
+        }
+    }
+    best.unwrap_or((0, 0.0))
+}
+
 /// Execute one batch and deliver every response through the channel each
 /// request carries (O(1) per request); publish lane-tagged, variant-keyed
 /// latencies to the telemetry slot in one batch-granular record. The
@@ -576,12 +598,7 @@ fn run_batch(
             let mut samples: Vec<(Lane, f64)> = Vec::with_capacity(batch.requests.len());
             for (i, req) in batch.requests.into_iter().enumerate() {
                 let row = &probs[i * classes..(i + 1) * classes];
-                let (pred, conf) = row
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
-                    .map(|(k, &v)| (k, v))
-                    .unwrap_or((0, 0.0));
+                let (pred, conf) = argmax_prob(row);
                 let latency = now.duration_since(req.enqueued);
                 samples.push((req.lane, latency.as_secs_f64()));
                 st.tel.depth_dec();
@@ -650,7 +667,7 @@ pub(crate) mod testing {
         }
 
         fn run(&mut self, _v: &str, batch: usize, input: &[f32]) -> Result<Vec<f32>> {
-            std::thread::sleep(self.delay);
+            thread::sleep(self.delay);
             let mut out = vec![0.0f32; batch * self.classes];
             for b in 0..batch {
                 let row = &input[b * self.elems..b * self.elems + self.classes];

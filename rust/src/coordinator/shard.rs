@@ -94,11 +94,12 @@
 //! [`TelemetryHub`]: crate::telemetry::TelemetryHub
 //! [`WorkerTelemetry`]: crate::telemetry::WorkerTelemetry
 
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, RwLock};
-use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+use crate::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use crate::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use crate::sync::thread::{self, JoinHandle};
+use crate::sync::{read_or_recover, rwlock_into_inner, write_or_recover, Arc, RwLock};
 
 use anyhow::Result;
 
@@ -385,40 +386,95 @@ fn b2f(b: u64) -> f64 {
 /// [`ShardRouter::set_frontier_window`]) and the link thread (which
 /// reads it on every wakeup). `batch <= 1` means coalescing is off and
 /// split jobs serve one at a time — the pre-batching behavior.
+///
+/// The seed is a one-shot publication protocol (checked by the
+/// `loom_frontier` model): [`FrontierWindow::seed`] stores the window
+/// values *then* Release-publishes the seeded flag, so a `maintain`
+/// tick that Acquire-observes [`FrontierWindow::seeded`] tunes from the
+/// seeded values — never from the pre-seed defaults.
 #[derive(Debug)]
-struct FrontierWindow {
+pub struct FrontierWindow {
     /// Max split jobs coalesced into one transfer (the window's
     /// fullness trigger).
     batch: AtomicUsize,
     /// Age trigger for a non-full window, in microseconds.
     wait_us: AtomicU64,
+    /// The window size the seed picked (0 = not yet seeded). A window
+    /// that retreated to 1 only re-opens when the seed wanted batching
+    /// (> 1) in the first place — a fast link never batches just
+    /// because its split lane is healthy.
+    seed: AtomicUsize,
+    /// One-shot guard: `maintain` seeds each window once, then only
+    /// tunes it. Also set by [`ShardRouter::set_frontier_window`] so a
+    /// manual window is tuned from, not re-seeded over.
+    seeded: AtomicBool,
 }
 
 impl FrontierWindow {
     /// Coalescing off: every split job ships alone.
-    fn off() -> FrontierWindow {
-        FrontierWindow { batch: AtomicUsize::new(1), wait_us: AtomicU64::new(0) }
+    pub fn off() -> FrontierWindow {
+        FrontierWindow {
+            batch: AtomicUsize::new(1),
+            wait_us: AtomicU64::new(0),
+            seed: AtomicUsize::new(0),
+            seeded: AtomicBool::new(false),
+        }
     }
 
     /// The window as the batcher-shared trigger policy.
-    fn config(&self) -> BatcherConfig {
+    pub fn config(&self) -> BatcherConfig {
         BatcherConfig {
             max_batch: self.batch(),
+            // ordering: Relaxed — the wait is an advisory tuning scalar;
+            // the link thread tolerates reading either epoch's value (it
+            // re-reads every wakeup), and seeded values are ordered by
+            // the `seed`/`seeded` Release/Acquire pair, not by this load.
             max_wait: Duration::from_micros(self.wait_us.load(Ordering::Relaxed)),
         }
     }
 
-    fn batch(&self) -> usize {
+    pub fn batch(&self) -> usize {
+        // ordering: Relaxed — same advisory-scalar argument as `config`.
         self.batch.load(Ordering::Relaxed).max(1)
     }
 
-    fn set(&self, batch: usize, wait: Duration) {
+    pub fn set(&self, batch: usize, wait: Duration) {
+        // ordering: Relaxed — tuning writes race only against readers
+        // that tolerate either epoch; publication of the *initial* seed
+        // goes through `seed` below instead.
         self.batch.store(batch.max(1), Ordering::Relaxed);
         self.wait_us.store(wait.as_micros() as u64, Ordering::Relaxed);
     }
 
-    fn set_batch(&self, batch: usize) {
+    pub fn set_batch(&self, batch: usize) {
+        // ordering: Relaxed — see `set`.
         self.batch.store(batch.max(1), Ordering::Relaxed);
+    }
+
+    /// One-shot seed: publish the window values, record what the seed
+    /// picked, then flip the seeded flag — in that order.
+    pub fn seed(&self, batch: usize, wait: Duration) {
+        self.set(batch, wait);
+        // ordering: Relaxed — `seed` is ordered by the Release store
+        // below, exactly like `batch`/`wait_us` above it.
+        self.seed.store(batch.max(1), Ordering::Relaxed);
+        // ordering: Release — publishes the three stores above; pairs
+        // with the Acquire in `seeded()`, so an observer of the flag
+        // reads the seeded window, never the defaults.
+        self.seeded.store(true, Ordering::Release);
+    }
+
+    /// Whether the one-shot seed has happened.
+    pub fn seeded(&self) -> bool {
+        // ordering: Acquire — pairs with the Release in `seed`.
+        self.seeded.load(Ordering::Acquire)
+    }
+
+    /// The window size the seed picked (0 = not yet seeded).
+    pub fn seed_batch(&self) -> usize {
+        // ordering: Relaxed — callers gate on `seeded()` first; its
+        // Acquire already ordered this value.
+        self.seed.load(Ordering::Relaxed)
     }
 }
 
@@ -485,15 +541,6 @@ struct PeerSlot {
     /// profile). Bandwidth shapes the seed through the split estimate's
     /// frontier-bytes term; kept observable for stats and callers.
     link_bytes_per_s: Arc<AtomicU64>,
-    /// The window size the seed picked (0 = not yet seeded). A window
-    /// that retreated to 1 only re-opens when the seed wanted batching
-    /// (> 1) in the first place — a fast link never batches just
-    /// because its split lane is healthy.
-    window_seed: AtomicUsize,
-    /// One-shot guard: `maintain` seeds each window once, then only
-    /// tunes it. Also set by [`ShardRouter::set_frontier_window`] so a
-    /// manual window is tuned from, not re-seeded over.
-    window_seeded: AtomicBool,
     /// `frontier_batches` at the last `maintain` (occupancy is a
     /// per-tick difference, like the failure counter above).
     last_frontier_batches: AtomicUsize,
@@ -505,6 +552,9 @@ impl PeerSlot {
     /// Full-remote routing estimate: measured EWMA once observed, plan
     /// prior before.
     fn estimate_s(&self) -> f64 {
+        // ordering: Relaxed — estimate inputs are advisory routing
+        // scalars written by `maintain`/`apply_plan`; a racing reader
+        // scoring with either epoch's value routes acceptably.
         let m = b2f(self.measured_s.load(Ordering::Relaxed));
         if m > 0.0 {
             m
@@ -516,6 +566,9 @@ impl PeerSlot {
     /// Split-route estimate: the split lane's measured EWMA once
     /// observed, the plan's split prior before.
     fn split_estimate_s(&self) -> f64 {
+        // ordering: Relaxed — same advisory-scalar argument as
+        // `estimate_s`; the split prior is additionally ordered behind
+        // the `cut` publish (see `seed_split_slot`).
         let m = b2f(self.split_measured_s.load(Ordering::Relaxed));
         if m > 0.0 {
             m
@@ -526,6 +579,12 @@ impl PeerSlot {
 
     /// The active cut, if the link can actually stream it.
     fn routable_cut(&self) -> Option<usize> {
+        // ordering: Acquire — pairs with `seed_split_slot`'s AcqRel swap
+        // of `cut` (whose release half publishes the split prior written
+        // before it) and with the link thread's Release store of
+        // `segments` (which publishes the link profile): a routable cut
+        // implies both the route's pricing and the link's capability are
+        // visible.
         let cut = self.cut.load(Ordering::Acquire);
         (cut > 0 && cut < self.segments.load(Ordering::Acquire)).then_some(cut)
     }
@@ -688,7 +747,7 @@ impl ShardRouter {
     where
         F: FnOnce() -> Box<dyn PeerTransport> + Send + 'static,
     {
-        let mut peers = self.peers.write().unwrap();
+        let mut peers = write_or_recover(&self.peers);
         let idx = peers.len();
         let worker_id = REMOTE_WORKER_BASE + idx;
         let tel = self.pool.telemetry().register_remote(worker_id);
@@ -714,13 +773,16 @@ impl ShardRouter {
         let link_bytes_per_s = Arc::new(AtomicU64::new(f2b(0.0)));
         let rtt_thread = Arc::clone(&link_rtt_s);
         let bw_thread = Arc::clone(&link_bytes_per_s);
-        let join = std::thread::spawn(move || {
+        let join = thread::spawn(move || {
             let transport = make_transport();
             let mut ctx = PeerCtx { transport, make_local, local: None, worker: worker_id };
             // Publish the link profile for window seeding — before the
             // segment capability, whose Release store makes both visible
             // to a router that has seen the cut become routable.
             if let Some((rtt_s, bytes_per_s)) = ctx.transport.link_profile() {
+                // ordering: Relaxed — sequenced before the `segments`
+                // Release store below, which is what publishes the
+                // profile to routers that observed the capability.
                 rtt_thread.store(f2b(rtt_s), Ordering::Relaxed);
                 bw_thread.store(f2b(bytes_per_s), Ordering::Relaxed);
             }
@@ -737,6 +799,9 @@ impl ShardRouter {
             } else {
                 1
             };
+            // ordering: Release — publishes the link-profile stores
+            // above to any router whose `routable_cut` Acquire-loads
+            // `segments`.
             seg_thread.store(segs, Ordering::Release);
             peer_main(ctx, rx, variant, generation, tel_thread, win_thread)
         });
@@ -762,8 +827,6 @@ impl ShardRouter {
             window,
             link_rtt_s,
             link_bytes_per_s,
-            window_seed: AtomicUsize::new(0),
-            window_seeded: AtomicBool::new(false),
             last_frontier_batches: AtomicUsize::new(0),
             last_frontier_coalesced: AtomicUsize::new(0),
         });
@@ -791,20 +854,21 @@ impl ShardRouter {
     }
 
     pub fn num_peers(&self) -> usize {
-        self.peers.read().unwrap().len()
+        read_or_recover(&self.peers).len()
     }
 
     /// Peers currently in the route set.
     pub fn admitted_peers(&self) -> usize {
-        self.peers.read().unwrap().iter().filter(|p| p.admitted.load(Ordering::Acquire)).count()
+        // ordering: Acquire — pairs with `maintain`'s Release stores on
+        // the admission flags.
+        read_or_recover(&self.peers).iter().filter(|p| p.admitted.load(Ordering::Acquire)).count()
     }
 
     /// Peers whose *split* route is currently serveable: an active cut
     /// the link can stream (`cut < segments`) that is admitted.
     pub fn admitted_splits(&self) -> usize {
-        self.peers
-            .read()
-            .unwrap()
+        // ordering: Acquire — same pairing as `admitted_peers`.
+        read_or_recover(&self.peers)
             .iter()
             .filter(|p| p.routable_cut().is_some() && p.split_admitted.load(Ordering::Acquire))
             .count()
@@ -836,8 +900,10 @@ impl ShardRouter {
         input: impl Into<Arc<[f32]>>,
         lane: Lane,
     ) -> Result<Receiver<Response>, Rejected> {
+        // ordering: Relaxed — the sequence only drives probe cadence; no
+        // memory is published through it.
         let n = self.seq.fetch_add(1, Ordering::Relaxed);
-        let peers = self.peers.read().unwrap();
+        let peers = read_or_recover(&self.peers);
 
         // Probe turn: keep unroutable *routes* measured. That covers
         // degraded routes (so recovery is seen) and admitted routes with
@@ -853,6 +919,10 @@ impl ShardRouter {
                 // A dead peer is not "unroutable, keep measured" — it is
                 // gone. Probing it would strand every probe request on a
                 // drained channel's error path.
+                // ordering: Acquire — `dead` pairs with `kill_peer`'s
+                // AcqRel swap; the admission flags pair with `maintain`'s
+                // Release stores, so a probe decision reads the freshest
+                // reconciliation.
                 if p.dead.load(Ordering::Acquire) {
                     continue;
                 }
@@ -875,6 +945,8 @@ impl ShardRouter {
                 // requests included) consume the turns of one parity can
                 // lock that formula onto a single index and starve the
                 // other unroutable routes of probes indefinitely.
+                // ordering: Relaxed — the cursor only rotates probe
+                // targets; any interleaving is a valid rotation.
                 let start = self.probe_cursor.fetch_add(1, Ordering::Relaxed);
                 // A probe target that loses its `try_peer` admission race
                 // hands the input back; re-arm the turn on the next
@@ -895,6 +967,8 @@ impl ShardRouter {
         // submissions, its split route (priority requests are never
         // split-routed — the invariant the module doc states).
         let mut routes: Vec<(usize, usize, f64)> = Vec::new();
+        // ordering: Acquire — same pairing as the probe loop above: the
+        // routing flags read the freshest kill/reconciliation publishes.
         for (i, p) in peers.iter().enumerate() {
             if p.dead.load(Ordering::Acquire) {
                 continue;
@@ -918,7 +992,12 @@ impl ShardRouter {
                 }
             }
         }
-        routes.sort_by(|a, b| a.2.partial_cmp(&b.2).unwrap_or(std::cmp::Ordering::Equal));
+        // Total order with NaN last: a route whose estimate arithmetic
+        // produced NaN must rank behind every real score, not tie with
+        // whatever the sort happens to compare it against.
+        routes.sort_by(|a, b| {
+            a.2.partial_cmp(&b.2).unwrap_or_else(|| a.2.is_nan().cmp(&b.2.is_nan()))
+        });
 
         // Local score: mean live queue depth × measured-or-prior latency.
         let depths = self.pool.queue_depths();
@@ -927,6 +1006,8 @@ impl ShardRouter {
         } else {
             depths.iter().sum::<usize>() as f64 / depths.len() as f64
         };
+        // ordering: Relaxed — advisory routing scalars, same argument as
+        // `PeerSlot::estimate_s`.
         let measured = b2f(self.local_measured_s.load(Ordering::Relaxed));
         let local_est =
             if measured > 0.0 { measured } else { b2f(self.local_prior_s.load(Ordering::Relaxed)) };
@@ -957,6 +1038,7 @@ impl ShardRouter {
         // pool's own telemetry.
         match self.pool.submit_lane(input, lane) {
             Ok(rx) => {
+                // ordering: Relaxed — pure event counter, read by stats.
                 self.routed_local.fetch_add(1, Ordering::Relaxed);
                 Ok(rx)
             }
@@ -983,12 +1065,16 @@ impl ShardRouter {
             slot.tel.depth_cancel();
             return Err(input);
         }
+        // ordering: Relaxed — response ids only need uniqueness, which
+        // the RMW provides under any ordering.
         let id = REMOTE_ID_BASE + self.next_remote_id.fetch_add(1, Ordering::Relaxed) + 1;
         let (tx, rx) = channel();
         let msg =
             PeerMsg::Infer(InferJob { id, input, enqueued: Instant::now(), lane, cut, resp: tx });
         match slot.tx.send(msg) {
             Ok(()) => {
+                // ordering: Relaxed — pure event counters; stats readers
+                // promise no cross-counter consistency.
                 slot.routed.fetch_add(1, Ordering::Relaxed);
                 if probe {
                     slot.probes.fetch_add(1, Ordering::Relaxed);
@@ -1033,15 +1119,18 @@ impl ShardRouter {
             }
         }
         if n > 0 {
+            // ordering: Relaxed — advisory routing scalar (see
+            // `submit_lane`'s local-estimate read).
             self.local_measured_s.store(f2b(sum / n as f64), Ordering::Relaxed);
         }
 
-        let peers = self.peers.read().unwrap();
+        let peers = read_or_recover(&self.peers);
         let mut admitted = 0usize;
         for (i, p) in peers.iter().enumerate() {
             // Dead peers are past reconciliation: no estimate refresh,
             // no window tuning, and — critically — no re-admission (a
             // drained link with a healthy final EWMA must stay out).
+            // ordering: Acquire — pairs with `kill_peer`'s AcqRel swap.
             if p.dead.load(Ordering::Acquire) {
                 continue;
             }
@@ -1051,11 +1140,18 @@ impl ShardRouter {
                 // link would keep a frozen healthy EWMA forever —
                 // difference the failure counter and treat fresh failures
                 // as drift in their own right.
+                // ordering: Relaxed — `last_failed` is a per-tick
+                // difference register and `measured_s` an advisory
+                // estimate scalar; `maintain` is their only writer.
                 let prev_failed = p.last_failed.swap(v.failed, Ordering::Relaxed);
                 let new_failures = v.failed.saturating_sub(prev_failed);
                 if v.ewma_s > 0.0 {
                     p.measured_s.store(f2b(v.ewma_s), Ordering::Relaxed);
                 }
+                // ordering: Acquire/Release on the admission flag — the
+                // store publishes this reconciliation to the submit
+                // path's Acquire loads; the event counters are Relaxed
+                // pure stats.
                 let was = p.admitted.load(Ordering::Acquire);
                 let drifted = (v.ewma_s > 0.0 && v.ewma_s > self.cfg.degrade_latency_s)
                     || new_failures > 0;
@@ -1078,6 +1174,10 @@ impl ShardRouter {
                 // EWMA: same budget and hysteresis band, independent
                 // admission. (Failures are per link, not per route —
                 // they degrade both.)
+                // ordering: Acquire on `cut` (pairs with the seed's
+                // AcqRel swap); the split flag/estimate mirror the
+                // full-remote block above — Release-published admission,
+                // Relaxed advisory scalars and event counters.
                 if p.cut.load(Ordering::Acquire) > 0 {
                     if v.split_ewma_s > 0.0 {
                         p.split_measured_s.store(f2b(v.split_ewma_s), Ordering::Relaxed);
@@ -1110,6 +1210,7 @@ impl ShardRouter {
                     self.tune_window(p, v);
                 }
             }
+            // ordering: Acquire — see the flag pairing above.
             if p.admitted.load(Ordering::Acquire) {
                 admitted += 1;
             }
@@ -1145,7 +1246,11 @@ impl ShardRouter {
     ///   re-admit bar — but only if the seed wanted batching (> 1).
     fn tune_window(&self, p: &PeerSlot, v: &crate::telemetry::WorkerView) {
         let cap = self.cfg.frontier_batch_cap;
-        if !p.window_seeded.load(Ordering::Acquire) {
+        if !p.window.seeded() {
+            // ordering: Relaxed — the profile scalars were published by
+            // the link thread before its `segments` Release store, and a
+            // routable cut (this function's precondition) implies that
+            // store was observed.
             let rtt = b2f(p.link_rtt_s.load(Ordering::Relaxed));
             let est = p.split_estimate_s();
             // rtt == 0.0 doubles as "no profile published (yet)".
@@ -1153,12 +1258,12 @@ impl ShardRouter {
                 let compute = (est - rtt).max(est * 0.1).max(1e-6);
                 let batch = ((1.0 + rtt / compute).round() as usize).clamp(1, cap);
                 let wait = (rtt / 2.0).min(self.cfg.frontier_wait_cap.as_secs_f64());
-                p.window.set(batch, Duration::from_secs_f64(wait));
-                p.window_seed.store(batch, Ordering::Relaxed);
-                p.window_seeded.store(true, Ordering::Release);
+                p.window.seed(batch, Duration::from_secs_f64(wait));
             }
             return;
         }
+        // ordering: Relaxed — per-tick difference registers; `maintain`
+        // is the only thread that swaps them.
         let db = v
             .frontier_batches
             .saturating_sub(p.last_frontier_batches.swap(v.frontier_batches, Ordering::Relaxed));
@@ -1178,7 +1283,7 @@ impl ShardRouter {
                 next = cur - 1;
             }
         } else if cur == 1
-            && p.window_seed.load(Ordering::Relaxed) > 1
+            && p.window.seed_batch() > 1
             && split > 0.0
             && split < self.cfg.readmit_latency_s
         {
@@ -1198,18 +1303,15 @@ impl ShardRouter {
     /// so `maintain` tunes *from* this setting instead of re-seeding
     /// over it.
     pub fn set_frontier_window(&self, peer: usize, batch: usize, wait: Duration) {
-        let peers = self.peers.read().unwrap();
-        let p = &peers[peer];
+        let peers = read_or_recover(&self.peers);
         let batch = batch.clamp(1, self.cfg.frontier_batch_cap);
-        p.window.set(batch, wait);
-        p.window_seed.store(batch, Ordering::Relaxed);
-        p.window_seeded.store(true, Ordering::Release);
+        peers[peer].window.seed(batch, wait);
     }
 
     /// Current frontier-coalescing window of one peer link (max split
     /// jobs per batched transfer; 1 = off).
     pub fn frontier_window(&self, peer: usize) -> usize {
-        self.peers.read().unwrap()[peer].window.batch()
+        read_or_recover(&self.peers)[peer].window.batch()
     }
 
     /// Refresh route priors from a fresh offload plan (Sec. III-B's
@@ -1228,15 +1330,18 @@ impl ShardRouter {
     /// non-positive).
     pub fn apply_plan(&self, plan: &OffloadPlan, local_latency_s: f64) {
         if local_latency_s.is_finite() && local_latency_s > 0.0 {
+            // ordering: Relaxed — advisory routing scalar.
             self.local_prior_s.store(f2b(local_latency_s), Ordering::Relaxed);
         }
-        let peers = self.peers.read().unwrap();
+        let peers = read_or_recover(&self.peers);
         // The plan itself cannot know which device is local; only treat
         // the cut as streamable when the head run is NOT another peer of
         // this router (a peer→peer chain has no local prefix to run).
         let split = plan.split_cut().filter(|(head, _, _)| peers.iter().all(|q| q.name != *head));
         for p in peers.iter() {
             match split {
+                // ordering: Relaxed — `plan_s` is an advisory routing
+                // prior (see `PeerSlot::estimate_s`).
                 Some((_, tail, cut)) if tail == p.name => {
                     Self::seed_split_slot(p, cut, plan.latency_s);
                     p.plan_s.store(f2b(f64::INFINITY), Ordering::Relaxed);
@@ -1256,13 +1361,22 @@ impl ShardRouter {
     /// the planner. `plan_latency_s` is the predicted split round trip —
     /// the route's prior until the split telemetry lane measures it.
     pub fn seed_split(&self, peer: usize, cut: usize, plan_latency_s: f64) {
-        let peers = self.peers.read().unwrap();
+        let peers = read_or_recover(&self.peers);
         Self::seed_split_slot(&peers[peer], cut, plan_latency_s);
     }
 
     fn seed_split_slot(slot: &PeerSlot, cut: usize, plan_latency_s: f64) {
-        let prev = slot.cut.swap(cut, Ordering::AcqRel);
+        // The route's pricing is written BEFORE the cut publishes: a
+        // router that Acquire-observes the new cut in `routable_cut`
+        // must never score it with the previous route's prior. (The old
+        // order — cut first, prior after — let a racing submit price a
+        // fresh cut with a stale, possibly infinite, plan latency.)
+        // ordering: Relaxed — ordered by the AcqRel swap below.
         slot.split_plan_s.store(f2b(plan_latency_s), Ordering::Relaxed);
+        // ordering: AcqRel swap (release half publishes the prior above
+        // to `routable_cut`'s Acquire; acquire half orders the
+        // estimate-reset below after any prior seed's stores).
+        let prev = slot.cut.swap(cut, Ordering::AcqRel);
         if prev != cut {
             // A different cut is a different route: forget the old cut's
             // measured estimate and start admitted — `maintain()`
@@ -1270,6 +1384,8 @@ impl ShardRouter {
             // (The split telemetry lane itself is per link, so its EWMA
             // still carries the old cut's recent window until new
             // samples dominate — a few requests at α = 0.3.)
+            // ordering: Relaxed scalar reset + Release on the admission
+            // flag, pairing with the submit path's Acquire loads.
             slot.split_measured_s.store(f2b(0.0), Ordering::Relaxed);
             slot.split_admitted.store(true, Ordering::Release);
         }
@@ -1277,8 +1393,10 @@ impl ShardRouter {
 
     /// Routing statistics (cheap, lock-light).
     pub fn shard_stats(&self) -> ShardStats {
-        let peers = self.peers.read().unwrap();
+        let peers = read_or_recover(&self.peers);
         ShardStats {
+            // ordering: Relaxed — point-in-time stats snapshot; no
+            // cross-counter consistency is promised to readers.
             routed_local: self.routed_local.load(Ordering::Relaxed),
             degraded_events: self.degraded_events.load(Ordering::Relaxed),
             readmitted_events: self.readmitted_events.load(Ordering::Relaxed),
@@ -1288,6 +1406,10 @@ impl ShardRouter {
                 .iter()
                 .map(|p| PeerStat {
                     name: p.name.clone(),
+                    // ordering: each load mirrors its routing-side
+                    // counterpart (Acquire flags, Relaxed counters and
+                    // estimate scalars); the snapshot itself promises no
+                    // cross-field atomicity.
                     admitted: p.admitted.load(Ordering::Acquire),
                     dead: p.dead.load(Ordering::Acquire),
                     routed: p.routed.load(Ordering::Relaxed),
@@ -1317,7 +1439,8 @@ impl ShardRouter {
     /// generation. Returns the new generation.
     pub fn switch_variant(&self, variant: &str) -> u64 {
         let generation = self.pool.switch_variant(variant);
-        let peers = self.peers.read().unwrap();
+        let peers = read_or_recover(&self.peers);
+        // ordering: Acquire — pairs with `kill_peer`'s AcqRel swap.
         for p in peers.iter().filter(|p| !p.dead.load(Ordering::Acquire)) {
             let _ = p.tx.send(PeerMsg::Switch { variant: variant.to_string(), generation });
         }
@@ -1347,11 +1470,15 @@ impl ShardRouter {
     /// `remote_peers`.
     pub fn kill_peer(&self, peer: usize) -> bool {
         let join = {
-            let mut peers = self.peers.write().unwrap();
+            let mut peers = write_or_recover(&self.peers);
             let p = &mut peers[peer];
             if p.dead.swap(true, Ordering::AcqRel) {
                 return false;
             }
+            // ordering: Release — pairs with the submit path's Acquire
+            // loads; a submitter that still reads `admitted` raced ahead
+            // of the kill, and the write-lock barrier above already
+            // ordered its send before the Shutdown message below.
             p.admitted.store(false, Ordering::Release);
             p.split_admitted.store(false, Ordering::Release);
             let _ = p.tx.send(PeerMsg::Shutdown);
@@ -1362,14 +1489,18 @@ impl ShardRouter {
         }
         // The drain is complete: retire the telemetry slot *after* the
         // last served sample so the final snapshot still carries it.
-        self.peers.read().unwrap()[peer].tel.retire();
+        read_or_recover(&self.peers)[peer].tel.retire();
         true
     }
 
     /// Stop peers (draining their queued requests) and the pool; returns
     /// lifetime statistics over every slot, peer links included.
     pub fn shutdown(self) -> PoolStats {
-        let peers = self.peers.into_inner().unwrap();
+        // Poison-tolerant teardown: a panicked peer thread (its poison
+        // would live on the peers lock via any writer it killed) must
+        // not turn shutdown into a second panic — the drain below still
+        // owes every in-flight caller an answer.
+        let peers = rwlock_into_inner(self.peers);
         for p in &peers {
             let _ = p.tx.send(PeerMsg::Shutdown);
         }
@@ -1442,12 +1573,7 @@ fn serve_one(
     match result {
         Ok((probs, transfer_s)) => {
             let transfer_s = transfer_s.max(0.0);
-            let (pred, conf) = probs[..classes]
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
-                .map(|(k, &v)| (k, v))
-                .unwrap_or((0, 0.0));
+            let (pred, conf) = super::server::argmax_prob(&probs[..classes]);
             let exec_s = started.elapsed().as_secs_f64() + transfer_s;
             let latency = job.enqueued.elapsed() + Duration::from_secs_f64(transfer_s);
             if cut > 0 {
@@ -1542,12 +1668,7 @@ fn serve_window(
             let exec_s = started.elapsed().as_secs_f64() + transfer_s;
             for (i, job) in ok.into_iter().enumerate() {
                 let row = &probs[i * classes..(i + 1) * classes];
-                let (pred, conf) = row
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
-                    .map(|(k, &v)| (k, v))
-                    .unwrap_or((0, 0.0));
+                let (pred, conf) = super::server::argmax_prob(row);
                 let latency = job.enqueued.elapsed() + Duration::from_secs_f64(transfer_s);
                 tel.record_split(variant, exec_s, job.lane, latency.as_secs_f64());
                 tel.depth_dec();
@@ -1594,8 +1715,8 @@ fn peer_main(
             let timeout = deadline.saturating_duration_since(Instant::now());
             match rx.recv_timeout(timeout) {
                 Ok(m) => Some(m),
-                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => None,
-                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break 'main,
+                Err(RecvTimeoutError::Timeout) => None,
+                Err(RecvTimeoutError::Disconnected) => break 'main,
             }
         };
         match msg {
@@ -1725,7 +1846,7 @@ mod tests {
             if router.admitted_splits() == n {
                 return;
             }
-            std::thread::sleep(Duration::from_millis(1));
+            thread::sleep(Duration::from_millis(1));
         }
         panic!("split routes never became routable (want {n})");
     }
@@ -1750,7 +1871,7 @@ mod tests {
         );
         router.add_simulated_peer("edge", peer_exec(100), SharedLink::new(800.0, 0.1), 0.001);
         let input: Arc<[f32]> = vec![1.0f32; 16].into();
-        let peers = router.peers.read().unwrap();
+        let peers = read_or_recover(&router.peers);
         let slot = &peers[0];
         // Fill the link's bounded in-flight window so admission refuses.
         slot.tel.depth_inc();
@@ -2137,7 +2258,7 @@ mod tests {
         );
         router.seed_split(0, 1, 0.0001);
         // Give the link thread time to publish min(local=1, transport=2).
-        std::thread::sleep(Duration::from_millis(100));
+        thread::sleep(Duration::from_millis(100));
         assert_eq!(router.admitted_splits(), 0, "whole-model local half must gate the cut out");
         let rx = router.submit(vec![1.0; 16]).unwrap();
         assert!(
@@ -2336,9 +2457,9 @@ mod tests {
             }
         };
         burst(&mut rxs); // probe turn 1 (cursor 0) → edge-a, in flight for 1.5 s
-        std::thread::sleep(Duration::from_millis(50));
+        thread::sleep(Duration::from_millis(50));
         burst(&mut rxs); // probe turn 2 (cursor 1) → edge-b, drains fast
-        std::thread::sleep(Duration::from_millis(50));
+        thread::sleep(Duration::from_millis(50));
         // Probe turn 3 (cursor 2) → edge-a again — but its slot is still
         // occupied, so `try_peer` refuses admission. The turn must fall
         // through to edge-b instead of dropping the probe.
@@ -2379,12 +2500,12 @@ mod tests {
         router.add_simulated_peer("backup", peer_exec(100), SharedLink::new(800.0, 0.1), 0.002);
 
         for round in 0..100 {
-            let barrier = Arc::new(std::sync::Barrier::new(2));
+            let barrier = Arc::new(crate::sync::Barrier::new(2));
             let handles: Vec<_> = (0..2)
                 .map(|_| {
                     let r = Arc::clone(&router);
                     let b = Arc::clone(&barrier);
-                    std::thread::spawn(move || {
+                    thread::spawn(move || {
                         b.wait();
                         let rx = r.submit(vec![1.0; 16]).unwrap();
                         rx.recv_timeout(Duration::from_secs(5)).unwrap()

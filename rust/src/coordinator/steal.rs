@@ -30,8 +30,9 @@
 //! into the hub so the next snapshot sees what moved.
 
 use std::collections::VecDeque;
-use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
+
+use crate::sync::{lock_or_recover, read_or_recover, write_or_recover, Arc, Mutex, RwLock};
 
 use super::batcher::Request;
 use crate::telemetry::WorkerTelemetry;
@@ -93,26 +94,26 @@ impl StealDeque {
 
     /// Owner-side enqueue (admission order).
     pub fn push_back(&self, req: Request) {
-        self.q.lock().unwrap().push_back(req);
+        lock_or_recover(&self.q).push_back(req);
     }
 
     /// Owner-side dequeue: the oldest queued request.
     pub fn pop_front(&self) -> Option<Request> {
-        self.q.lock().unwrap().pop_front()
+        lock_or_recover(&self.q).pop_front()
     }
 
     pub fn len(&self) -> usize {
-        self.q.lock().unwrap().len()
+        lock_or_recover(&self.q).len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.q.lock().unwrap().is_empty()
+        lock_or_recover(&self.q).is_empty()
     }
 
     /// Enqueue instant of the oldest queued request (the batch-window
     /// anchor for the owner's deadline computation).
     pub fn front_enqueued(&self) -> Option<Instant> {
-        self.q.lock().unwrap().front().map(|r| r.enqueued)
+        lock_or_recover(&self.q).front().map(|r| r.enqueued)
     }
 
     /// Thief-side claim: detach up to `max` requests from the back,
@@ -120,7 +121,7 @@ impl StealDeque {
     /// is nothing to take (e.g. the victim's backlog is still in its
     /// channel, not yet absorbed into the lane).
     pub fn steal_tail(&self, max: usize) -> Vec<Request> {
-        let mut q = self.q.lock().unwrap();
+        let mut q = lock_or_recover(&self.q);
         let take = max.min(q.len());
         if take == 0 {
             return Vec::new();
@@ -158,13 +159,15 @@ impl StealRegistry {
     }
 
     /// Register a worker's normal lane (pool spawn / dynamic grow).
-    pub(crate) fn register(
+    /// Public so the `loom_steal` model can drive the registry protocol
+    /// through the same entry points the pool uses.
+    pub fn register(
         &self,
         worker: usize,
         deque: Arc<StealDeque>,
         tel: Arc<WorkerTelemetry>,
     ) {
-        self.slots.write().unwrap().push(Entry { worker, deque, tel });
+        write_or_recover(&self.slots).push(Entry { worker, deque, tel });
     }
 
     /// Drop a retiring worker's entry: retirement joins the thread after
@@ -173,7 +176,7 @@ impl StealRegistry {
     /// worker. Keeps the victim scan from growing without bound across
     /// AIMD grow/shrink cycles.
     pub(crate) fn unregister(&self, worker: usize) {
-        self.slots.write().unwrap().retain(|e| e.worker != worker);
+        write_or_recover(&self.slots).retain(|e| e.worker != worker);
     }
 
     /// Fail everything parked in `worker`'s lane: called by the pool
@@ -184,8 +187,11 @@ impl StealRegistry {
     /// forever; dropping them here closes each carried response channel
     /// and keeps the depth gauge and failed counter truthful. Returns
     /// how many requests were failed.
-    pub(crate) fn drain_dead(&self, worker: usize) -> usize {
-        let slots = self.slots.read().unwrap();
+    ///
+    /// Public for the `loom_steal` model: `drain_dead` racing a thief's
+    /// [`StealDeque::steal_tail`] is one of the checked protocols.
+    pub fn drain_dead(&self, worker: usize) -> usize {
+        let slots = read_or_recover(&self.slots);
         let Some(e) = slots.iter().find(|e| e.worker == worker) else {
             return 0;
         };
@@ -205,7 +211,7 @@ impl StealRegistry {
     /// with the largest depth × measured batch-latency EWMA — the best
     /// estimate of serial drain time were the backlog left stranded.
     pub(crate) fn pick_victim(&self, thief: usize, cfg: &StealConfig) -> Option<Victim> {
-        let slots = self.slots.read().unwrap();
+        let slots = read_or_recover(&self.slots);
         let mut best: Option<(f64, &Entry)> = None;
         for e in slots.iter() {
             if e.worker == thief || e.tel.is_retired() || !e.tel.is_executing() {
@@ -234,7 +240,7 @@ impl StealRegistry {
 mod tests {
     use super::*;
     use crate::telemetry::{Lane, TelemetryHub};
-    use std::sync::mpsc::channel;
+    use crate::sync::mpsc::channel;
 
     fn req(id: u64) -> Request {
         let (resp, _rx) = channel();

@@ -113,6 +113,7 @@ pub mod optimizer;
 pub mod partition;
 pub mod profiler;
 pub mod runtime;
+pub mod sync;
 pub mod telemetry;
 pub mod transform;
 pub mod util;

@@ -457,6 +457,7 @@ mod tests {
     use crate::engine::EngineConfig;
     use crate::models::{resnet18, ResNetStyle};
     use crate::optimizer::evolution::{search, SearchConfig};
+    use crate::sync::{lock_or_recover, Mutex};
     use crate::telemetry::VariantView;
 
     fn small_front() -> Vec<Candidate> {
@@ -575,44 +576,44 @@ mod tests {
 
     /// Records every actuation, like the serving pool but inspectable.
     struct RecordingActuator {
-        switched: std::sync::Mutex<Vec<String>>,
-        resized: std::sync::Mutex<Vec<usize>>,
+        switched: Mutex<Vec<String>>,
+        resized: Mutex<Vec<usize>>,
         /// One entry per set_shards reconciliation call.
-        sharded: std::sync::Mutex<usize>,
+        sharded: Mutex<usize>,
         /// (plan devices, local prior) per apply_plan call.
-        plans: std::sync::Mutex<Vec<(usize, f64)>>,
+        plans: Mutex<Vec<(usize, f64)>>,
     }
 
     impl RecordingActuator {
         fn new() -> RecordingActuator {
             RecordingActuator {
-                switched: std::sync::Mutex::new(Vec::new()),
-                resized: std::sync::Mutex::new(Vec::new()),
-                sharded: std::sync::Mutex::new(0),
-                plans: std::sync::Mutex::new(Vec::new()),
+                switched: Mutex::new(Vec::new()),
+                resized: Mutex::new(Vec::new()),
+                sharded: Mutex::new(0),
+                plans: Mutex::new(Vec::new()),
             }
         }
     }
 
     impl Actuator for RecordingActuator {
         fn actuate(&self, variant: &str) -> u64 {
-            let mut v = self.switched.lock().unwrap();
+            let mut v = lock_or_recover(&self.switched);
             v.push(variant.to_string());
             v.len() as u64
         }
 
         fn set_workers(&self, n: usize) -> usize {
-            self.resized.lock().unwrap().push(n);
+            lock_or_recover(&self.resized).push(n);
             n
         }
 
         fn set_shards(&self, _tel: &TelemetrySnapshot) -> usize {
-            *self.sharded.lock().unwrap() += 1;
+            *lock_or_recover(&self.sharded) += 1;
             0
         }
 
         fn apply_plan(&self, plan: &OffloadPlan, local_latency_s: f64) {
-            self.plans.lock().unwrap().push((plan.placements.len(), local_latency_s));
+            lock_or_recover(&self.plans).push((plan.placements.len(), local_latency_s));
         }
     }
 
@@ -624,7 +625,7 @@ mod tests {
         // First tick switches → one actuation carrying the chosen label.
         match l.tick_with(&snap, &act) {
             Decision::Switch(e) => {
-                let v = act.switched.lock().unwrap();
+                let v = lock_or_recover(&act.switched);
                 assert_eq!(v.as_slice(), &[e.candidate.spec.detailed_label()]);
             }
             d => panic!("expected Switch, got {d:?}"),
@@ -633,7 +634,7 @@ mod tests {
         for _ in 0..3 {
             l.tick_with(&snap, &act);
         }
-        assert_eq!(act.switched.lock().unwrap().len(), 1);
+        assert_eq!(lock_or_recover(&act.switched).len(), 1);
     }
 
     #[test]
@@ -754,17 +755,17 @@ mod tests {
         // High occupancy, no rejections: grow.
         let mut tel = TelemetrySnapshot { live_workers: 1, queue_capacity: 16, queue_depth: 12, ..TelemetrySnapshot::default() };
         l.tick_with_telemetry(&snap, &tel, &act);
-        assert_eq!(act.resized.lock().unwrap().as_slice(), &[2]);
+        assert_eq!(lock_or_recover(&act.resized).as_slice(), &[2]);
         // Fresh rejections: multiplicative shrink.
         tel.live_workers = 4;
         tel.rejected = 10;
         l.tick_with_telemetry(&snap, &tel, &act);
-        assert_eq!(act.resized.lock().unwrap().as_slice(), &[2, 2]);
+        assert_eq!(lock_or_recover(&act.resized).as_slice(), &[2, 2]);
         // Without a sizer, width is never touched.
         let mut plain = mk_loop(Budgets::unconstrained());
         let act2 = RecordingActuator::new();
         plain.tick_with_telemetry(&snap, &tel, &act2);
-        assert!(act2.resized.lock().unwrap().is_empty());
+        assert!(lock_or_recover(&act2.resized).is_empty());
     }
 
     /// Every telemetry tick reconciles shard admission (the third
@@ -779,10 +780,10 @@ mod tests {
         for _ in 0..3 {
             l.tick_with_telemetry(&snap, &tel, &act);
         }
-        assert_eq!(*act.sharded.lock().unwrap(), 3);
+        assert_eq!(*lock_or_recover(&act.sharded), 3);
         // Prediction-only ticks have no telemetry to reconcile from.
         l.tick_with(&snap, &act);
-        assert_eq!(*act.sharded.lock().unwrap(), 3);
+        assert_eq!(*lock_or_recover(&act.sharded), 3);
     }
 
     /// An offload decision pushes the searched plan's route weights to
@@ -805,11 +806,11 @@ mod tests {
         let snap = ResourceMonitor::new(device("raspberrypi-4b").unwrap()).idle_snapshot();
         match l.tick_with(&snap, &act) {
             Decision::Offload(e, plan) => {
-                let plans = act.plans.lock().unwrap();
+                let plans = lock_or_recover(&act.plans);
                 assert_eq!(plans.len(), 1);
                 assert_eq!(plans[0].0, plan.placements.len());
                 assert!((plans[0].1 - e.metrics.latency_s).abs() < 1e-12);
-                assert_eq!(act.switched.lock().unwrap().len(), 1, "variant actuated too");
+                assert_eq!(lock_or_recover(&act.switched).len(), 1, "variant actuated too");
             }
             d => panic!("expected Offload, got {d:?}"),
         }

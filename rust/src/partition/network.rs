@@ -7,7 +7,8 @@
 //! (feature bytes / bandwidth).
 
 use std::collections::HashMap;
-use std::sync::{Arc, RwLock};
+
+use crate::sync::{read_or_recover, write_or_recover, Arc, RwLock};
 
 /// A directed link between two devices.
 #[derive(Debug, Clone)]
@@ -53,27 +54,27 @@ impl SharedLink {
 
     /// Current time to move `bytes` across the link.
     pub fn delay_s(&self, bytes: usize) -> f64 {
-        self.0.read().unwrap().delay_s(bytes)
+        read_or_recover(&self.0).delay_s(bytes)
     }
 
     /// Replace the link quality outright.
     pub fn set(&self, mbps: f64, rtt_ms: f64) {
-        let mut l = self.0.write().unwrap();
+        let mut l = write_or_recover(&self.0);
         l.bytes_per_s = mbps * 1e6 / 8.0;
         l.rtt_s = rtt_ms / 1e3;
     }
 
     /// Scale the current bandwidth (a degradation/recovery trace step).
     pub fn scale_bandwidth(&self, factor: f64) {
-        self.0.write().unwrap().bytes_per_s *= factor;
+        write_or_recover(&self.0).bytes_per_s *= factor;
     }
 
     pub fn bytes_per_s(&self) -> f64 {
-        self.0.read().unwrap().bytes_per_s
+        read_or_recover(&self.0).bytes_per_s
     }
 
     pub fn rtt_s(&self) -> f64 {
-        self.0.read().unwrap().rtt_s
+        read_or_recover(&self.0).rtt_s
     }
 }
 

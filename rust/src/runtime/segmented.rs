@@ -123,7 +123,7 @@ impl SegmentedExec {
         }
         let mut cur = frontier.to_vec();
         for seg in first..last {
-            std::thread::sleep(self.delays[seg]);
+            crate::sync::thread::sleep(self.delays[seg]);
             let width = self.frontiers[seg + 1];
             // The class signal rides the first `classes` values through
             // every boundary; the rest is padding the next width keeps or

@@ -1,0 +1,215 @@
+//! Crate-wide synchronization shim: one import surface for every lock,
+//! atomic, and thread the middleware spawns — `std` in normal builds,
+//! [loom](https://docs.rs/loom) equivalents under `--cfg loom` so the
+//! concurrency protocols can be model-checked exhaustively
+//! (`rust/tests/loom_*.rs`, the `loom` CI job).
+//!
+//! Two project rules hang off this module, both enforced by
+//! `ci/lint_invariants.py`:
+//!
+//! - **No `std::sync` / `std::thread` outside this file.** Every other
+//!   module imports from `crate::sync`, so the loom build swaps the
+//!   whole crate onto checkable primitives at once — a single stray
+//!   `std::sync::Mutex` would silently fall out of the model.
+//! - **No `.lock().unwrap()` / `.read().unwrap()` / `.write().unwrap()`
+//!   anywhere.** Callers go through [`lock_or_recover`] /
+//!   [`read_or_recover`] / [`write_or_recover`] instead: a worker or
+//!   link thread that panics while holding a lock must not cascade
+//!   poison panics into every subsequent submitter. The protected state
+//!   here is always valid mid-panic (counters, registries, route
+//!   tables — no multi-step invariants are ever broken across a
+//!   `.unwrap()` boundary), so recovering the guard is sound where
+//!   propagating the poison is an availability bug.
+//!
+//! What stays `std` even under loom, and why that is sound:
+//!
+//! - [`Arc`]: the zero-copy hot path shares unsized `Arc<[f32]>`
+//!   buffers, which loom's `Arc` cannot represent (no unsized
+//!   coercion). The buffers are immutable after construction, so there
+//!   is no ordering for loom to explore — only the refcount, which is
+//!   std's own well-tested code.
+//! - [`mpsc`]: loom has no channel. Loom models therefore never *block*
+//!   on a channel — they hand senders across threads and drain with
+//!   `try_recv`/`recv` only after the owning thread joined.
+//! - [`Barrier`], [`thread::scope`]: test/harness-only conveniences
+//!   that no loom model touches.
+
+// ── `Arc` / channels / barriers: std under every cfg ─────────────────
+
+pub use std::sync::Arc;
+pub use std::sync::Barrier;
+
+/// Re-export of [`std::sync::mpsc`] (loom has no channel type; see the
+/// module docs for why that is sound).
+pub mod mpsc {
+    pub use std::sync::mpsc::*;
+}
+
+// ── locks: std normally, loom under `--cfg loom` ─────────────────────
+
+#[cfg(not(loom))]
+pub use std::sync::{Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+#[cfg(loom)]
+pub use loom::sync::{Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// Re-export of `std::sync::atomic` / `loom::sync::atomic`. Only the
+/// types the crate actually uses are listed, so a new atomic flavor is
+/// a conscious (reviewed) addition to the shim.
+pub mod atomic {
+    #[cfg(not(loom))]
+    pub use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+
+    #[cfg(loom)]
+    pub use loom::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+}
+
+/// Thread spawning/sleeping through the shim. [`thread::spawn`] is a
+/// wrapper *function* rather than a re-export on purpose: clippy's
+/// `disallowed-methods` bans `std::thread::spawn` by resolved path, and
+/// a plain re-export would still resolve to the banned item at every
+/// call site.
+pub mod thread {
+    #[cfg(not(loom))]
+    pub use std::thread::JoinHandle;
+
+    #[cfg(loom)]
+    pub use loom::thread::JoinHandle;
+
+    // Scoped threads are harness-only (the workload scenario runner);
+    // no loom model uses them, so they stay std under every cfg.
+    pub use std::thread::{scope, Scope, ScopedJoinHandle};
+
+    /// Spawn a thread — `std::thread::spawn` normally, a loom model
+    /// thread under `--cfg loom`.
+    #[cfg(not(loom))]
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        // The one blessed route to std's spawn (see module docs).
+        #[allow(clippy::disallowed_methods)]
+        std::thread::spawn(f)
+    }
+
+    /// Spawn a thread — `std::thread::spawn` normally, a loom model
+    /// thread under `--cfg loom`.
+    #[cfg(loom)]
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        loom::thread::spawn(f)
+    }
+
+    #[cfg(not(loom))]
+    pub use std::thread::sleep;
+
+    /// Loom has no clock: a sleep inside a model is just a scheduling
+    /// point, so yield to the model scheduler instead.
+    #[cfg(loom)]
+    pub fn sleep(_d: std::time::Duration) {
+        loom::thread::yield_now();
+    }
+}
+
+// ── poison-tolerant lock helpers ─────────────────────────────────────
+
+/// Lock a [`Mutex`], recovering the guard if a previous holder
+/// panicked. See the module docs for why recovery (not propagation) is
+/// the right poison policy for this crate's state.
+pub fn lock_or_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    // The one blessed route to `lock` (clippy bans it everywhere else).
+    #[allow(clippy::disallowed_methods)]
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Read-lock a [`RwLock`], recovering the guard if a writer panicked.
+pub fn read_or_recover<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    #[allow(clippy::disallowed_methods)]
+    match l.read() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Write-lock a [`RwLock`], recovering the guard if a holder panicked.
+pub fn write_or_recover<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    #[allow(clippy::disallowed_methods)]
+    match l.write() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Consume a [`RwLock`], recovering the value even if poisoned — the
+/// shutdown path's counterpart of [`write_or_recover`]: a pool or
+/// router being torn down after a worker panic must still drain and
+/// report, not double-panic.
+#[cfg(not(loom))]
+pub fn rwlock_into_inner<T>(l: RwLock<T>) -> T {
+    match l.into_inner() {
+        Ok(v) => v,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Shutdown paths are never exercised inside a loom model (models drive
+/// the protocols, not pool teardown), so this arm only needs to
+/// type-check.
+#[cfg(loom)]
+pub fn rwlock_into_inner<T>(_l: RwLock<T>) -> T {
+    unreachable!("shutdown paths are not modeled under loom")
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    fn poison_mutex(m: &Mutex<Vec<u32>>) {
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            let _g = lock_or_recover(m);
+            panic!("holder dies with the lock held");
+        }));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn lock_or_recover_survives_a_panicked_holder() {
+        let m = Mutex::new(vec![1u32]);
+        poison_mutex(&m);
+        let mut g = lock_or_recover(&m);
+        g.push(2);
+        assert_eq!(*g, vec![1, 2], "state is intact after recovery");
+    }
+
+    #[test]
+    fn read_and_write_or_recover_survive_a_panicked_writer() {
+        let l = RwLock::new(7u32);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            let _g = write_or_recover(&l);
+            panic!("writer dies");
+        }));
+        assert!(r.is_err());
+        assert_eq!(*read_or_recover(&l), 7);
+        *write_or_recover(&l) = 8;
+        assert_eq!(*read_or_recover(&l), 8);
+    }
+
+    #[test]
+    fn rwlock_into_inner_recovers_poisoned_value() {
+        let l = RwLock::new(String::from("drained"));
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            let _g = write_or_recover(&l);
+            panic!("writer dies");
+        }));
+        assert!(r.is_err());
+        assert_eq!(rwlock_into_inner(l), "drained");
+    }
+}

@@ -7,7 +7,7 @@
 //! consistency is *not* guaranteed within one snapshot; the adaptation
 //! loop differences successive snapshots instead of trusting instants.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use crate::sync::atomic::{AtomicUsize, Ordering};
 
 /// A monotonically increasing counter.
 #[derive(Debug, Default)]
@@ -23,10 +23,15 @@ impl Counter {
     }
 
     pub fn add(&self, n: usize) {
+        // ordering: Relaxed — a pure event count; no other memory is
+        // published through it, and snapshot readers difference
+        // successive reads rather than trusting cross-counter instants.
         self.0.fetch_add(n, Ordering::Relaxed);
     }
 
     pub fn get(&self) -> usize {
+        // ordering: Relaxed — see `add`; the read is a statistical
+        // sample, not a synchronization point.
         self.0.load(Ordering::Relaxed)
     }
 }
@@ -43,6 +48,10 @@ impl Gauge {
     }
 
     pub fn inc(&self) -> usize {
+        // ordering: AcqRel — inc/dec pair across admitting and serving
+        // threads; the returned prior level orders against the paired
+        // `sub` so depth-based dispatch never reads a stale level it
+        // itself just changed.
         self.0.fetch_add(1, Ordering::AcqRel)
     }
 
@@ -53,12 +62,16 @@ impl Gauge {
     /// Bulk raise (work-stealing migrates whole chunks of admitted
     /// requests between workers; the thief's gauge rises by the chunk).
     pub fn add(&self, n: usize) {
+        // ordering: AcqRel — pairs with `sub` on the victim side of a
+        // steal migration (see `inc`).
         self.0.fetch_add(n, Ordering::AcqRel);
     }
 
     /// Bulk lower, saturating at zero rather than wrapping if an
     /// accounting bug ever over-decrements.
     pub fn sub(&self, n: usize) {
+        // ordering: Acquire/AcqRel — the CAS loop pairs with `inc`/`add`
+        // so a saturating decrement never overwrites a concurrent raise.
         let mut cur = self.0.load(Ordering::Acquire);
         loop {
             let next = cur.saturating_sub(n);
@@ -79,6 +92,8 @@ impl Gauge {
     }
 
     pub fn get(&self) -> usize {
+        // ordering: Acquire — pairs with the AcqRel RMWs above; a
+        // dispatch decision reads the latest settled level.
         self.0.load(Ordering::Acquire)
     }
 }
@@ -128,12 +143,12 @@ mod tests {
 
     #[test]
     fn counter_is_shareable_across_threads() {
-        use std::sync::Arc;
+        use crate::sync::{thread, Arc};
         let c = Arc::new(Counter::new());
         let joins: Vec<_> = (0..4)
             .map(|_| {
                 let c = Arc::clone(&c);
-                std::thread::spawn(move || {
+                thread::spawn(move || {
                     for _ in 0..1000 {
                         c.inc();
                     }

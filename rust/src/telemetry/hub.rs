@@ -37,8 +37,8 @@
 //! independently governed.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
+use crate::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use crate::sync::{lock_or_recover, read_or_recover, write_or_recover, Arc, Mutex, RwLock};
 
 use super::counter::{Counter, Gauge};
 use super::ewma::Ewma;
@@ -200,7 +200,7 @@ impl WorkerTelemetry {
                 continue;
             }
             self.served[i].add(n);
-            let mut r = self.latency[i].lock().unwrap();
+            let mut r = lock_or_recover(&self.latency[i]);
             for &(lane, lat) in samples {
                 if lane.index() == i {
                     r.push(lat);
@@ -208,13 +208,13 @@ impl WorkerTelemetry {
             }
         }
         {
-            let mut e = self.ewma.lock().unwrap();
+            let mut e = lock_or_recover(&self.ewma);
             for &(_, lat) in samples {
                 e.observe(lat);
             }
         }
-        self.batch_ewma.lock().unwrap().observe(exec_s);
-        let mut per_v = self.per_variant.lock().unwrap();
+        lock_or_recover(&self.batch_ewma).observe(exec_s);
+        let mut per_v = lock_or_recover(&self.per_variant);
         let r = per_v
             .entry(variant.to_string())
             .or_insert_with(|| Reservoir::new(self.reservoir_capacity));
@@ -232,10 +232,10 @@ impl WorkerTelemetry {
     pub fn record_split(&self, variant: &str, exec_s: f64, lane: Lane, latency_s: f64) {
         self.batches.inc();
         self.served[lane.index()].inc();
-        self.latency[lane.index()].lock().unwrap().push(latency_s);
-        self.split_ewma.lock().unwrap().observe(latency_s);
+        lock_or_recover(&self.latency[lane.index()]).push(latency_s);
+        lock_or_recover(&self.split_ewma).observe(latency_s);
         self.split_served.inc();
-        let mut per_v = self.per_variant.lock().unwrap();
+        let mut per_v = lock_or_recover(&self.per_variant);
         per_v
             .entry(variant.to_string())
             .or_insert_with(|| Reservoir::new(self.reservoir_capacity))
@@ -284,6 +284,9 @@ impl WorkerTelemetry {
     /// Mark the start/end of a batch execution — the steal registry only
     /// considers victims currently inside a batch.
     pub fn set_executing(&self, on: bool) {
+        // ordering: Release — pairs with the Acquire load in
+        // `is_executing`: a thief that observes `true` also observes the
+        // victim's batch bookkeeping written before the flag.
         self.executing.store(on, Ordering::Release);
     }
 
@@ -316,12 +319,16 @@ impl WorkerTelemetry {
     }
 
     pub fn retire(&self) {
+        // ordering: Release — pairs with `is_retired`'s Acquire load so
+        // a consumer that sees the slot retired also sees every total
+        // the worker published before retiring.
         self.retired.store(true, Ordering::Release);
     }
 
     // ── consumer side (control plane / stats adapters) ────────────────
 
     pub fn is_retired(&self) -> bool {
+        // ordering: Acquire — pairs with `retire`'s Release store.
         self.retired.load(Ordering::Acquire)
     }
 
@@ -334,23 +341,24 @@ impl WorkerTelemetry {
     /// Smoothed per-request end-to-end latency for this slot (seconds);
     /// 0.0 until the first sample.
     pub fn latency_ewma_s(&self) -> f64 {
-        self.ewma.lock().unwrap().value_or(0.0)
+        lock_or_recover(&self.ewma).value_or(0.0)
     }
 
     /// Smoothed split-route round-trip latency (seconds); 0.0 until the
     /// first split-served request. The per-cut drift signal.
     pub fn split_latency_ewma_s(&self) -> f64 {
-        self.split_ewma.lock().unwrap().value_or(0.0)
+        lock_or_recover(&self.split_ewma).value_or(0.0)
     }
 
     /// Smoothed per-batch execution wall time (seconds); 0.0 until the
     /// first batch. The work-stealing victim-selection signal.
     pub fn batch_latency_ewma_s(&self) -> f64 {
-        self.batch_ewma.lock().unwrap().value_or(0.0)
+        lock_or_recover(&self.batch_ewma).value_or(0.0)
     }
 
     /// Whether the worker is currently executing a batch.
     pub fn is_executing(&self) -> bool {
+        // ordering: Acquire — pairs with `set_executing`'s Release store.
         self.executing.load(Ordering::Acquire)
     }
 
@@ -408,20 +416,20 @@ impl WorkerTelemetry {
 
     /// Clone of this worker's retained latency window for one lane.
     pub fn lane_reservoir(&self, lane: Lane) -> Reservoir {
-        self.latency[lane.index()].lock().unwrap().clone()
+        lock_or_recover(&self.latency[lane.index()]).clone()
     }
 
     /// All retained latency samples across both lanes (stats adapter).
     pub fn latency_samples(&self) -> Vec<f64> {
         let mut out = Vec::new();
         for lane in &self.latency {
-            out.extend_from_slice(lane.lock().unwrap().samples());
+            out.extend_from_slice(lock_or_recover(lane).samples());
         }
         out
     }
 
     fn per_variant_clone(&self) -> BTreeMap<String, Reservoir> {
-        self.per_variant.lock().unwrap().clone()
+        lock_or_recover(&self.per_variant).clone()
     }
 }
 
@@ -711,7 +719,7 @@ impl TelemetryHub {
     /// Register a new local worker slot (pool spawn / dynamic grow).
     pub fn register(&self, worker: usize) -> Arc<WorkerTelemetry> {
         let slot = Arc::new(WorkerTelemetry::new(worker, self.reservoir_capacity, false));
-        self.slots.write().unwrap().push(Arc::clone(&slot));
+        write_or_recover(&self.slots).push(Arc::clone(&slot));
         slot
     }
 
@@ -721,17 +729,19 @@ impl TelemetryHub {
     /// excluded from the snapshot's local width/occupancy signals.
     pub fn register_remote(&self, worker: usize) -> Arc<WorkerTelemetry> {
         let slot = Arc::new(WorkerTelemetry::new(worker, self.reservoir_capacity, true));
-        self.slots.write().unwrap().push(Arc::clone(&slot));
+        write_or_recover(&self.slots).push(Arc::clone(&slot));
         slot
     }
 
     /// Every slot ever registered, in registration order (retired
     /// included — the stats adapters fold them into pool totals).
     pub fn slots(&self) -> Vec<Arc<WorkerTelemetry>> {
-        self.slots.read().unwrap().clone()
+        read_or_recover(&self.slots).clone()
     }
 
     pub fn queue_capacity(&self) -> usize {
+        // ordering: Relaxed — a configuration scalar set at construction
+        // and read for occupancy math; it publishes no other memory.
         self.queue_capacity.load(Ordering::Relaxed)
     }
 

@@ -17,9 +17,10 @@
 //! thermal throttling slow *future* batches without touching in-flight
 //! ones).
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
 use std::time::Duration;
+
+use crate::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::Arc;
 
 use anyhow::Result;
 
@@ -38,16 +39,22 @@ impl SharedDelay {
     }
 
     pub fn get(&self) -> Duration {
+        // ordering: Relaxed — an advisory device-profile scalar; an
+        // executor reading either epoch's delay mid-drift is exactly the
+        // scenario semantics (drift affects *future* batches).
         Duration::from_micros(self.0.load(Ordering::Relaxed))
     }
 
     pub fn set(&self, delay: Duration) {
+        // ordering: Relaxed — see `get`.
         self.0.store(delay.as_micros() as u64, Ordering::Relaxed);
     }
 
     /// Scale the current delay (device drift: `factor > 1` slows the
     /// device down). Saturates at 1 µs so a profile can always recover.
     pub fn scale(&self, factor: f64) {
+        // ordering: Relaxed — the script thread is the only writer, so
+        // the load/store pair cannot lose a concurrent update.
         let cur = self.0.load(Ordering::Relaxed) as f64;
         self.0.store((cur * factor).max(1.0) as u64, Ordering::Relaxed);
     }
@@ -85,7 +92,7 @@ impl Executor for SimExec {
     }
 
     fn run(&mut self, _variant: &str, batch: usize, input: &[f32]) -> Result<Vec<f32>> {
-        std::thread::sleep(self.delay.get());
+        crate::sync::thread::sleep(self.delay.get());
         let mut out = vec![0.0f32; batch * self.classes];
         for b in 0..batch {
             let row = &input[b * self.elems..b * self.elems + self.classes];

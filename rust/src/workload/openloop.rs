@@ -23,9 +23,10 @@
 //! retried — retry policy is a workload property, and uncontrolled
 //! retry storms are a *scenario* to model, not a driver default.
 
-use std::sync::mpsc::Receiver;
-use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+use crate::sync::mpsc::Receiver;
+use crate::sync::Arc;
 
 use crate::coordinator::pool::ServingPool;
 use crate::coordinator::server::{Rejected, Response};
@@ -126,7 +127,7 @@ pub fn run_open_loop_from(
             if now >= scheduled {
                 break;
             }
-            std::thread::sleep(scheduled - now);
+            crate::sync::thread::sleep(scheduled - now);
         }
         // Lateness of this submission relative to its schedule: charged
         // to the request's own latency sample below.
@@ -173,22 +174,22 @@ pub fn run_open_loop_from(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::mpsc::{channel, Sender};
-    use std::sync::Mutex;
+    use crate::sync::mpsc::{channel, Sender};
+    use crate::sync::{lock_or_recover, thread, Mutex};
 
     /// A serial 3 ms/request target whose `Response.latency` is stamped
     /// from admission — like the real stack, queueing is visible.
     struct SerialTarget {
         jobs: Mutex<Sender<(Instant, Sender<Response>)>>,
-        _worker: std::thread::JoinHandle<()>,
+        _worker: thread::JoinHandle<()>,
     }
 
     impl SerialTarget {
         fn new(service: Duration) -> SerialTarget {
             let (tx, rx) = channel::<(Instant, Sender<Response>)>();
-            let worker = std::thread::spawn(move || {
+            let worker = thread::spawn(move || {
                 for (enqueued, resp) in rx {
-                    std::thread::sleep(service);
+                    thread::sleep(service);
                     let _ = resp.send(Response {
                         id: 0,
                         pred: 0,
@@ -212,7 +213,7 @@ mod tests {
             _lane: Lane,
         ) -> Result<Receiver<Response>, Rejected> {
             let (tx, rx) = channel();
-            self.jobs.lock().unwrap().send((Instant::now(), tx)).unwrap();
+            lock_or_recover(&self.jobs).send((Instant::now(), tx)).unwrap();
             Ok(rx)
         }
     }

@@ -20,9 +20,10 @@
 //! degrade/re-admit event deltas, so back-to-back scenarios on fresh
 //! stacks stay independent.
 
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Mutex;
 use std::time::{Duration, Instant};
+
+use crate::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use crate::sync::{lock_or_recover, thread, Mutex};
 
 use crate::coordinator::pool::{PoolConfig, ServingPool};
 use crate::coordinator::server::Executor;
@@ -156,8 +157,9 @@ impl ScenarioStack {
             link.clone(),
             prior_s,
         );
-        self.peer_links.lock().unwrap().push(link);
-        self.peer_delays.lock().unwrap().push(delay);
+        lock_or_recover(&self.peer_links).push(link);
+        lock_or_recover(&self.peer_delays).push(delay);
+        // ordering: Relaxed — pure event counter, read by `counters`.
         self.peers_joined.fetch_add(1, Ordering::Relaxed);
         idx
     }
@@ -166,6 +168,7 @@ impl ScenarioStack {
     pub fn resize_workers(&self, target: usize) {
         if self.router.pool().num_workers() != target {
             self.router.pool().set_workers(target);
+            // ordering: Relaxed — pure event counter.
             self.resizes.fetch_add(1, Ordering::Relaxed);
         }
     }
@@ -179,20 +182,22 @@ impl ScenarioStack {
             }
             FleetEvent::PeerDeath { peer } => {
                 if self.router.kill_peer(*peer) {
+                    // ordering: Relaxed — pure event counter.
                     self.peers_killed.fetch_add(1, Ordering::Relaxed);
                 }
             }
             FleetEvent::LinkSet { peer, mbps, rtt_ms } => {
-                self.peer_links.lock().unwrap()[*peer].set(*mbps, *rtt_ms);
+                lock_or_recover(&self.peer_links)[*peer].set(*mbps, *rtt_ms);
             }
             FleetEvent::LinkScale { peer, factor } => {
-                self.peer_links.lock().unwrap()[*peer].scale_bandwidth(*factor);
+                lock_or_recover(&self.peer_links)[*peer].scale_bandwidth(*factor);
             }
             FleetEvent::DeviceDrift { factor } => {
                 self.local_delay.scale(*factor);
             }
             FleetEvent::VariantSwitch { variant } => {
                 self.router.switch_variant(variant);
+                // ordering: Relaxed — pure event counter.
                 self.switches.fetch_add(1, Ordering::Relaxed);
             }
         }
@@ -200,6 +205,8 @@ impl ScenarioStack {
 
     pub fn counters(&self) -> StackCounters {
         StackCounters {
+            // ordering: Relaxed — point-in-time counter snapshot; no
+            // cross-counter consistency is promised.
             resizes: self.resizes.load(Ordering::Relaxed),
             switches: self.switches.load(Ordering::Relaxed),
             peers_joined: self.peers_joined.load(Ordering::Relaxed),
@@ -306,11 +313,14 @@ pub fn run_scenario(
     let stop = AtomicBool::new(false);
     let stop = &stop;
 
-    let load = std::thread::scope(|s| {
+    let load = thread::scope(|s| {
         s.spawn(|| {
             for (at, event) in &scenario.script.events {
                 let due = start + *at;
                 loop {
+                    // ordering: Acquire — pairs with the load thread's
+                    // Release store below; a stopped side thread must
+                    // also see everything the load replay wrote.
                     if stop.load(Ordering::Acquire) {
                         return;
                     }
@@ -320,19 +330,22 @@ pub fn run_scenario(
                     }
                     // Sliced sleep: a stopped run must not pin the
                     // scope open for the rest of a long script.
-                    std::thread::sleep((due - now).min(Duration::from_millis(10)));
+                    thread::sleep((due - now).min(Duration::from_millis(10)));
                 }
                 stack.apply(event);
             }
         });
         s.spawn(move || {
+            // ordering: Acquire — same pairing as the fleet thread.
             while !stop.load(Ordering::Acquire) {
                 let tel = stack.router().telemetry_snapshot();
                 controller.tick(stack, &tel);
-                std::thread::sleep(scenario.control_tick);
+                thread::sleep(scenario.control_tick);
             }
         });
         let load = run_open_loop_from(stack.router(), &scenario.trace, &scenario.openloop, start);
+        // ordering: Release — publishes the finished replay to the side
+        // threads' Acquire loads before they observe the stop flag.
         stop.store(true, Ordering::Release);
         load
     });

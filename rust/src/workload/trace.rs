@@ -18,7 +18,7 @@
 //! `(schedule, mix, duration, input_elems, seed)` tuple yields a
 //! bit-identical trace, inputs included.
 
-use std::sync::Arc;
+use crate::sync::Arc;
 use std::time::Duration;
 
 use crate::telemetry::Lane;

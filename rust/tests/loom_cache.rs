@@ -1,0 +1,230 @@
+//! Loom model: the single-flight response cache
+//! ([`crowdhmtware::coordinator::ResponseCache`]).
+//!
+//! Checked invariants:
+//!
+//! - **Single flight, no stranded waiter**: of N identical concurrent
+//!   submissions exactly one leads; once the leader completes, every
+//!   waiter holds the leader's response (fan-out happens before the
+//!   flight entry is released).
+//! - **Leader death wakes waiters**: a leader dropped un-completed
+//!   closes every waiter's channel (they observe the failure, they
+//!   don't hang) and frees the key for a fresh flight.
+//! - **Generation bump never serves stale**: a lookup carrying the
+//!   post-switch generation can never hit an entry cached under the old
+//!   one, whatever the interleaving of the switch and an in-flight
+//!   leader.
+//!
+//! The `mutant_*` test re-seeds the bug `CacheSlot`'s `Drop` cleanup
+//! fixes (a dying leader leaving its in-flight entry — and the waiters'
+//! senders — in the map) and demonstrates loom catches it.
+//!
+//! Runs only under `RUSTFLAGS="--cfg loom"` (the `loom` CI job).
+#![cfg(loom)]
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use crowdhmtware::coordinator::{CacheOutcome, Lane, Response, ResponseCache, SwitchGate};
+use crowdhmtware::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use crowdhmtware::sync::{lock_or_recover, thread, Arc, Mutex};
+use crowdhmtware::telemetry::TelemetryHub;
+
+/// Bounded exploration; see `loom_steal.rs` for the rationale.
+fn model<F: Fn() + Sync + Send + 'static>(f: F) {
+    let mut b = loom::model::Builder::new();
+    b.preemption_bound = Some(3);
+    b.check(f);
+}
+
+fn resp(pred: usize, generation: u64) -> Response {
+    Response {
+        id: 0,
+        pred,
+        confidence: 1.0,
+        variant: "v".to_string(),
+        generation,
+        worker: 0,
+        lane: Lane::Normal,
+        latency: Duration::from_millis(1),
+    }
+}
+
+fn cache() -> (Arc<TelemetryHub>, Arc<ResponseCache>) {
+    let hub = Arc::new(TelemetryHub::new(4));
+    let c = Arc::new(ResponseCache::new(4, Arc::clone(&hub)));
+    (hub, c)
+}
+
+/// Two identical concurrent submissions: one inference, two answers.
+/// Whichever thread leads completes; the other (hit or joined waiter)
+/// must find the leader's response already fanned out by the time the
+/// leader thread finished.
+#[test]
+fn leader_completes_before_any_waiter_can_miss_the_send() {
+    model(|| {
+        let (_hub, c) = cache();
+        let v: Arc<str> = Arc::from("v");
+        let input: Arc<[f32]> = vec![1.0f32].into();
+        let mut joins = Vec::new();
+        for _ in 0..2 {
+            let c = Arc::clone(&c);
+            let v = Arc::clone(&v);
+            let input = Arc::clone(&input);
+            joins.push(thread::spawn(move || {
+                match c.lookup(&input, &v, 0, true) {
+                    CacheOutcome::Lead(slot) => {
+                        // The leader "runs the inference" and completes.
+                        slot.complete(&resp(3, 0));
+                        Ok(3)
+                    }
+                    CacheOutcome::Hit(rx) | CacheOutcome::Joined(rx) => Err(rx),
+                    CacheOutcome::Bypass => panic!("no collision is possible here"),
+                }
+            }));
+        }
+        let mut preds = Vec::new();
+        for j in joins {
+            match j.join().unwrap() {
+                Ok(p) => preds.push(p),
+                // The joins above ordered the leader's complete before
+                // this drain: an Empty channel here is a lost waiter.
+                Err(rx) => preds.push(rx.try_recv().expect("waiter stranded by the flight").pred),
+            }
+        }
+        assert_eq!(preds, vec![3, 3], "every submission gets the leader's answer");
+        assert_eq!(c.inflight_len(), 0, "the flight entry must be released");
+        assert_eq!(c.completed_len(), 1, "one inference, one cached entry");
+    });
+}
+
+/// A leader dropped un-completed (executor failure, worker death): its
+/// waiters' channels close — same failure the leader's caller sees —
+/// and the key immediately admits a fresh flight.
+#[test]
+fn dead_leader_wakes_waiters_and_frees_the_key() {
+    model(|| {
+        let (_hub, c) = cache();
+        let v: Arc<str> = Arc::from("v");
+        let input: Arc<[f32]> = vec![9.0f32].into();
+        let mut joins = Vec::new();
+        for _ in 0..2 {
+            let c = Arc::clone(&c);
+            let v = Arc::clone(&v);
+            let input = Arc::clone(&input);
+            joins.push(thread::spawn(move || {
+                match c.lookup(&input, &v, 0, true) {
+                    // Every leader dies un-completed in this model.
+                    CacheOutcome::Lead(slot) => {
+                        drop(slot);
+                        None
+                    }
+                    CacheOutcome::Joined(rx) => Some(rx),
+                    CacheOutcome::Hit(_) => panic!("nothing ever completes"),
+                    CacheOutcome::Bypass => panic!("no collision is possible here"),
+                }
+            }));
+        }
+        let waiters: Vec<Receiver<Response>> =
+            joins.into_iter().filter_map(|j| j.join().unwrap()).collect();
+        for rx in waiters {
+            assert!(
+                matches!(rx.try_recv(), Err(TryRecvError::Disconnected)),
+                "a dead leader's waiter must observe the failure, not hang"
+            );
+        }
+        assert_eq!(c.inflight_len(), 0, "the dead flight must be cleared");
+        assert!(
+            matches!(c.lookup(&input, &v, 0, true), CacheOutcome::Lead(_)),
+            "the key must be retryable after the leader's death"
+        );
+    });
+}
+
+/// An admission snapshotting `(variant, generation)` from the gate races
+/// `switch_variant`'s begin + purge: whatever the interleaving, a
+/// post-switch lookup can only hit an entry completed under the new
+/// generation — never a stale pre-switch answer.
+#[test]
+fn generation_bump_never_serves_a_stale_answer() {
+    model(|| {
+        let (_hub, c) = cache();
+        let gate = Arc::new(SwitchGate::new("base"));
+        let input: Arc<[f32]> = vec![2.0f32].into();
+
+        let c1 = Arc::clone(&c);
+        let g1 = Arc::clone(&gate);
+        let i1 = Arc::clone(&input);
+        let requester = thread::spawn(move || {
+            // Admission order: one consistent (variant, generation) read,
+            // then the cache consult — exactly `submit_lane`'s sequence.
+            let (v, g) = g1.current();
+            if let CacheOutcome::Lead(slot) = c1.lookup(&i1, &v, g, true) {
+                slot.complete(&resp(1, g));
+            }
+        });
+        let c2 = Arc::clone(&c);
+        let g2 = Arc::clone(&gate);
+        let switcher = thread::spawn(move || {
+            // `switch_variant`'s sequence: bump the gate, then purge.
+            let g = g2.begin("upgraded");
+            c2.purge_stale(g);
+            g
+        });
+        requester.join().unwrap();
+        let g_new = switcher.join().unwrap();
+
+        // A post-switch admission (both racers joined: the gate now
+        // reads the new variant) must never see a pre-switch response.
+        let (v, g) = gate.current();
+        assert_eq!(g, g_new);
+        match c.lookup(&input, &v, g, true) {
+            CacheOutcome::Hit(rx) => {
+                let r = rx.try_recv().expect("hit carries its response");
+                assert_eq!(r.generation, g_new, "stale answer served across a switch");
+            }
+            CacheOutcome::Lead(slot) => drop(slot),
+            CacheOutcome::Joined(_) | CacheOutcome::Bypass => {
+                panic!("no flight or collision can be live here")
+            }
+        }
+    });
+}
+
+/// Seeded mutant — the bug `CacheSlot::drop` fixes: a dying leader that
+/// does *not* clear its in-flight entry leaves the waiters' senders
+/// alive inside the map, so the waiters' channels never close and their
+/// callers hang. Loom finds the lead→join→death interleaving; the test
+/// passes only because the model panics.
+#[test]
+#[should_panic]
+fn mutant_leader_death_without_cleanup_strands_waiters() {
+    model(|| {
+        // In-flight map replica with the Drop cleanup removed.
+        type Flights = Arc<Mutex<HashMap<u64, Vec<Sender<u64>>>>>;
+        let flights: Flights = Arc::new(Mutex::new(HashMap::new()));
+
+        let f1 = Arc::clone(&flights);
+        let leader = thread::spawn(move || {
+            lock_or_recover(&f1).insert(7, Vec::new());
+            // Leader dies here. The mutant: no cleanup — the entry (and
+            // any waiter senders pushed meanwhile) stay in the map.
+        });
+        let f2 = Arc::clone(&flights);
+        let waiter = thread::spawn(move || {
+            let mut m = lock_or_recover(&f2);
+            m.get_mut(&7).map(|ws| {
+                let (tx, rx) = channel();
+                ws.push(tx);
+                rx
+            })
+        });
+        leader.join().unwrap();
+        if let Some(rx) = waiter.join().unwrap() {
+            assert!(
+                matches!(rx.try_recv(), Err(TryRecvError::Disconnected)),
+                "waiter stranded: the leader died but its flight entry survived"
+            );
+        }
+    });
+}

@@ -1,0 +1,129 @@
+//! Loom model: the frontier-coalescing window's seed/tune protocol
+//! ([`crowdhmtware::coordinator::FrontierWindow`]).
+//!
+//! Checked invariants:
+//!
+//! - **Seed publication**: `seed` stores the window values and *then*
+//!   Release-publishes the seeded flag, so any thread that
+//!   Acquire-observes `seeded()` reads the seeded values — never the
+//!   pre-seed defaults. This is the ordering `maintain()`'s retune
+//!   depends on (it tunes from `seed_batch()` after checking
+//!   `seeded()`).
+//! - **Retune vs link-thread close**: the link thread deciding a
+//!   window's close trigger (`batch()` / `config()`) concurrently with
+//!   a `maintain` retune (`set_batch` / `set`) observes a value from
+//!   one of the two epochs — never garbage, never a batch below 1.
+//!
+//! The `mutant_*` test re-seeds the flag-before-values bug and
+//! demonstrates loom catches the schedule where an observer sees the
+//! flag but reads the defaults.
+//!
+//! Runs only under `RUSTFLAGS="--cfg loom"` (the `loom` CI job).
+#![cfg(loom)]
+
+use std::time::Duration;
+
+use crowdhmtware::coordinator::FrontierWindow;
+use crowdhmtware::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use crowdhmtware::sync::{thread, Arc};
+
+/// Bounded exploration; see `loom_steal.rs` for the rationale.
+fn model<F: Fn() + Sync + Send + 'static>(f: F) {
+    let mut b = loom::model::Builder::new();
+    b.preemption_bound = Some(3);
+    b.check(f);
+}
+
+/// A `maintain` tick Acquire-observing the seeded flag reads the seeded
+/// window, never the `off()` defaults — the one-shot publication the
+/// Release store in `seed` guarantees.
+#[test]
+fn observing_the_seeded_flag_implies_the_seeded_values() {
+    model(|| {
+        let w = Arc::new(FrontierWindow::off());
+        let w1 = Arc::clone(&w);
+        let seeder = thread::spawn(move || {
+            w1.seed(4, Duration::from_micros(250));
+        });
+        let w2 = Arc::clone(&w);
+        let maintainer = thread::spawn(move || {
+            if w2.seeded() {
+                assert_eq!(w2.seed_batch(), 4, "seeded flag up, seed value missing");
+                assert_eq!(w2.batch(), 4, "seeded flag up, window still at defaults");
+                assert_eq!(
+                    w2.config().max_wait,
+                    Duration::from_micros(250),
+                    "seeded flag up, wait still at defaults"
+                );
+            }
+        });
+        seeder.join().unwrap();
+        maintainer.join().unwrap();
+        assert!(w.seeded());
+        assert_eq!(w.seed_batch(), 4);
+    });
+}
+
+/// The link thread reads its close trigger while `maintain` retunes the
+/// window: every observation is from one of the two epochs (the
+/// advisory-scalar contract), the floor of 1 always holds, and after
+/// both settle the retuned values win.
+#[test]
+fn retune_racing_the_link_thread_yields_only_epoch_values() {
+    model(|| {
+        let w = Arc::new(FrontierWindow::off());
+        w.seed(2, Duration::from_micros(100));
+        let w1 = Arc::clone(&w);
+        let maintainer = thread::spawn(move || {
+            // `maintain`'s retune path: tune only a seeded window.
+            if w1.seeded() && w1.seed_batch() > 1 {
+                w1.set(4, Duration::from_micros(200));
+            }
+        });
+        let w2 = Arc::clone(&w);
+        let link = thread::spawn(move || {
+            // The link thread's wakeup read: fullness + age triggers.
+            let cfg = w2.config();
+            (w2.batch(), cfg.max_wait)
+        });
+        maintainer.join().unwrap();
+        let (batch, wait) = link.join().unwrap();
+        assert!(batch == 2 || batch == 4, "batch outside both epochs: {batch}");
+        assert!(
+            wait == Duration::from_micros(100) || wait == Duration::from_micros(200),
+            "wait outside both epochs: {wait:?}"
+        );
+        assert_eq!(w.batch(), 4, "the retune must stick once settled");
+        assert_eq!(w.seed_batch(), 2, "retunes never rewrite what the seed picked");
+    });
+}
+
+/// Seeded mutant — the flag-before-values bug `FrontierWindow::seed`'s
+/// store order fixes: publishing the seeded flag *before* the window
+/// values lets an observer pass the `seeded()` gate and still read the
+/// pre-seed defaults. Loom finds the schedule; the test passes only
+/// because the model panics.
+#[test]
+#[should_panic]
+fn mutant_flag_published_before_values_leaks_the_defaults() {
+    model(|| {
+        let batch = Arc::new(AtomicUsize::new(1));
+        let seeded = Arc::new(AtomicBool::new(false));
+        let b1 = Arc::clone(&batch);
+        let s1 = Arc::clone(&seeded);
+        let seeder = thread::spawn(move || {
+            // The mutant: flag first, values after.
+            s1.store(true, Ordering::Release);
+            b1.store(4, Ordering::Relaxed);
+        });
+        let b2 = Arc::clone(&batch);
+        let s2 = Arc::clone(&seeded);
+        let observer = thread::spawn(move || {
+            if s2.load(Ordering::Acquire) {
+                assert_eq!(b2.load(Ordering::Relaxed), 4, "seeded flag up, defaults visible");
+            }
+        });
+        seeder.join().unwrap();
+        observer.join().unwrap();
+    });
+}

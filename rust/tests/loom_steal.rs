@@ -1,0 +1,143 @@
+//! Loom model: the work-stealing lane protocol
+//! ([`crowdhmtware::coordinator::StealDeque`] +
+//! [`crowdhmtware::coordinator::StealRegistry`]).
+//!
+//! Checked invariant — **every admitted request leaves the lane exactly
+//! once**: whatever interleaving of the owner's `pop_front`, a thief's
+//! `steal_tail`, and the pool's `drain_dead` reclaim, no request is
+//! served twice and none is lost, and the depth gauge/failed counter
+//! stay truthful.
+//!
+//! The `mutant_*` test re-seeds the bug the one-lock discipline fixes
+//! (a two-step peek-then-pop claim) and demonstrates loom catches it:
+//! it MUST fail, and is kept as `#[should_panic]` proof that the model
+//! has teeth.
+//!
+//! Runs only under `RUSTFLAGS="--cfg loom"` (the `loom` CI job).
+#![cfg(loom)]
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use crowdhmtware::coordinator::{Lane, Request, StealDeque, StealRegistry};
+use crowdhmtware::sync::{lock_or_recover, mpsc::channel, thread, Arc, Mutex};
+use crowdhmtware::telemetry::TelemetryHub;
+
+/// Bounded exploration: the protocols here are a handful of lock
+/// acquisitions, so 3 preemptions reach every distinguishable
+/// interleaving while keeping the job seconds-fast.
+fn model<F: Fn() + Sync + Send + 'static>(f: F) {
+    let mut b = loom::model::Builder::new();
+    b.preemption_bound = Some(3);
+    b.check(f);
+}
+
+fn req(id: u64) -> Request {
+    let (resp, _rx) = channel();
+    Request {
+        id,
+        input: vec![0.0f32; 1].into(),
+        enqueued: Instant::now(),
+        lane: Lane::Normal,
+        resp,
+        cache: None,
+    }
+}
+
+/// Owner pops the front while a thief splits off the tail: the union of
+/// popped + stolen + remaining is exactly the admitted set, no
+/// duplicates, no losses.
+#[test]
+fn owner_pop_vs_thief_steal_neither_duplicates_nor_drops() {
+    model(|| {
+        let d = Arc::new(StealDeque::new());
+        for i in 0..3 {
+            d.push_back(req(i));
+        }
+        let d1 = Arc::clone(&d);
+        let owner = thread::spawn(move || {
+            let mut got = Vec::new();
+            for _ in 0..2 {
+                if let Some(r) = d1.pop_front() {
+                    got.push(r.id);
+                }
+            }
+            got
+        });
+        let d2 = Arc::clone(&d);
+        let thief = thread::spawn(move || {
+            d2.steal_tail(2).into_iter().map(|r| r.id).collect::<Vec<u64>>()
+        });
+        let mut all = owner.join().unwrap();
+        all.extend(thief.join().unwrap());
+        while let Some(r) = d.pop_front() {
+            all.push(r.id);
+        }
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 2], "a request was double-served or lost");
+    });
+}
+
+/// The pool reclaiming a dead worker's lane (`drain_dead`) races a
+/// thief still stealing from it: each stranded request is either failed
+/// by the reclaim or migrated by the thief — never both, never neither
+/// — and the telemetry gauge/counter agree with where they went.
+#[test]
+fn drain_dead_vs_thief_partition_the_lane() {
+    model(|| {
+        let hub = Arc::new(TelemetryHub::new(4));
+        let reg = Arc::new(StealRegistry::new());
+        let tel = hub.register(0);
+        let d = Arc::new(StealDeque::new());
+        reg.register(0, Arc::clone(&d), Arc::clone(&tel));
+        for i in 0..2 {
+            d.push_back(req(i));
+            tel.depth_add(1);
+        }
+        let r1 = Arc::clone(&reg);
+        let pool = thread::spawn(move || r1.drain_dead(0));
+        let d2 = Arc::clone(&d);
+        let t2 = Arc::clone(&tel);
+        let thief = thread::spawn(move || {
+            // The thief moves the admission accounting with the work,
+            // exactly as the pool's steal phase does.
+            let stolen = d2.steal_tail(1);
+            t2.depth_sub(stolen.len());
+            stolen.len()
+        });
+        let drained = pool.join().unwrap();
+        let stolen = thief.join().unwrap();
+        assert_eq!(drained + stolen + d.len(), 2, "requests double-claimed or lost");
+        assert_eq!(tel.queue_depth(), d.len(), "depth gauge out of step with the lane");
+        assert_eq!(tel.failed(), drained, "every drained request is a counted failure");
+    });
+}
+
+/// Seeded mutant — the bug `StealDeque::pop_front`'s single-lock claim
+/// prevents: peeking the front and re-locking to remove it lets a thief
+/// drain the lane in between, so the owner serves a request the thief
+/// also took. Loom finds the interleaving; the test passes only because
+/// the model panics.
+#[test]
+#[should_panic]
+fn mutant_two_step_pop_double_serves_under_a_racing_thief() {
+    model(|| {
+        let q = Arc::new(Mutex::new(VecDeque::from([0u64, 1])));
+        let q1 = Arc::clone(&q);
+        let owner = thread::spawn(move || {
+            // The mutant: claim = unlocked peek + separate pop.
+            let peeked = lock_or_recover(&q1).front().copied();
+            let _ = lock_or_recover(&q1).pop_front();
+            peeked
+        });
+        let q2 = Arc::clone(&q);
+        let thief = thread::spawn(move || {
+            lock_or_recover(&q2).drain(..).collect::<Vec<u64>>()
+        });
+        let mut all: Vec<u64> = owner.join().unwrap().into_iter().collect();
+        all.extend(thief.join().unwrap());
+        all.extend(lock_or_recover(&q).iter().copied());
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1], "the two-step pop double-claimed a request");
+    });
+}

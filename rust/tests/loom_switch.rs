@@ -1,0 +1,147 @@
+//! Loom model: atomic variant switching through
+//! [`crowdhmtware::coordinator::SwitchGate`].
+//!
+//! Checked invariants:
+//!
+//! - **Unique, ordered generations**: concurrent `begin` calls hand out
+//!   distinct, strictly-increasing generation numbers.
+//! - **Consistent reads**: `current()` never returns a torn
+//!   (variant, generation) pair — every observation matches some switch
+//!   that actually happened.
+//! - **Filtered acks** (the PR 4 fix): a worker absorbing racing switch
+//!   broadcasts through [`SwitchGate::accepts`] can never end on an
+//!   older generation than the last acknowledged switch — stale
+//!   messages are filtered, not applied.
+//!
+//! The `mutant_*` test re-seeds the pre-fix bug (absorbing every
+//! broadcast unfiltered) and demonstrates loom catches the interleaving
+//! where the older broadcast lands last.
+//!
+//! Runs only under `RUSTFLAGS="--cfg loom"` (the `loom` CI job).
+#![cfg(loom)]
+
+use crowdhmtware::coordinator::SwitchGate;
+use crowdhmtware::sync::{lock_or_recover, thread, Arc, Mutex};
+
+/// Bounded exploration; see `loom_steal.rs` for the rationale.
+fn model<F: Fn() + Sync + Send + 'static>(f: F) {
+    let mut b = loom::model::Builder::new();
+    b.preemption_bound = Some(3);
+    b.check(f);
+}
+
+/// A worker's absorb loop: drain `want` broadcasts from the shared
+/// inbox, applying each through the gate's ack filter (the exact
+/// predicate `WorkerState::absorb` and the pool's ack waiter use).
+fn absorb_loop(inbox: &Mutex<Vec<u64>>, want: usize, filtered: bool) -> u64 {
+    let mut local = 0u64;
+    let mut absorbed = 0;
+    while absorbed < want {
+        let msg = lock_or_recover(inbox).pop();
+        match msg {
+            Some(g) => {
+                if !filtered || SwitchGate::accepts(g, local) {
+                    local = g;
+                }
+                absorbed += 1;
+            }
+            None => loom::thread::yield_now(),
+        }
+    }
+    local
+}
+
+/// Two racing switches: generations are unique, and a worker draining
+/// both broadcasts (in whatever order the race delivered them) always
+/// ends on the *newest* generation — the fixed ack filter never lets a
+/// stale broadcast regress it.
+#[test]
+fn racing_switches_leave_the_worker_on_the_newest_generation() {
+    model(|| {
+        let gate = Arc::new(SwitchGate::new("base"));
+        let inbox = Arc::new(Mutex::new(Vec::new()));
+
+        let mut switchers = Vec::new();
+        for variant in ["a", "b"] {
+            let gate = Arc::clone(&gate);
+            let inbox = Arc::clone(&inbox);
+            switchers.push(thread::spawn(move || {
+                // `switch_variant_acked`'s sequence: bump the gate, then
+                // broadcast the required generation to the workers.
+                let g = gate.begin(variant);
+                lock_or_recover(&inbox).push(g);
+                g
+            }));
+        }
+        let i2 = Arc::clone(&inbox);
+        let worker = thread::spawn(move || absorb_loop(&i2, 2, true));
+
+        let g1 = switchers.remove(0).join().unwrap();
+        let g2 = switchers.remove(0).join().unwrap();
+        let local = worker.join().unwrap();
+
+        let mut gens = [g1, g2];
+        gens.sort_unstable();
+        assert_eq!(gens, [1, 2], "concurrent begins must hand out distinct generations");
+        assert_eq!(local, 2, "a stale broadcast regressed the worker's generation");
+        assert_eq!(gate.generation(), 2);
+    });
+}
+
+/// `current()` is a single consistent read: concurrent with one switch,
+/// an observer sees either the pre-switch pair or the post-switch pair
+/// — never the new variant with the old generation or vice versa.
+#[test]
+fn current_never_returns_a_torn_pair() {
+    model(|| {
+        let gate = Arc::new(SwitchGate::new("base"));
+        let g1 = Arc::clone(&gate);
+        let switcher = thread::spawn(move || g1.begin("upgraded"));
+        let g2 = Arc::clone(&gate);
+        let observer = thread::spawn(move || {
+            let (v, g) = g2.current();
+            (v.to_string(), g)
+        });
+        let new_gen = switcher.join().unwrap();
+        let (v, g) = observer.join().unwrap();
+        assert_eq!(new_gen, 1);
+        assert!(
+            (v == "base" && g == 0) || (v == "upgraded" && g == 1),
+            "torn read: ({v:?}, {g})"
+        );
+    });
+}
+
+/// Seeded mutant — the pre-fix absorb: applying every broadcast without
+/// the `accepts` generation filter lets the interleaving where the
+/// older switch's message is delivered *after* the newer one leave the
+/// worker serving the stale variant (while both switch calls report
+/// success). Loom finds it; the test passes only because the model
+/// panics.
+#[test]
+#[should_panic]
+fn mutant_unfiltered_absorb_regresses_to_a_stale_switch() {
+    model(|| {
+        let gate = Arc::new(SwitchGate::new("base"));
+        let inbox = Arc::new(Mutex::new(Vec::new()));
+
+        let mut switchers = Vec::new();
+        for variant in ["a", "b"] {
+            let gate = Arc::clone(&gate);
+            let inbox = Arc::clone(&inbox);
+            switchers.push(thread::spawn(move || {
+                let g = gate.begin(variant);
+                lock_or_recover(&inbox).push(g);
+                g
+            }));
+        }
+        let i2 = Arc::clone(&inbox);
+        let worker = thread::spawn(move || absorb_loop(&i2, 2, false));
+
+        for s in switchers {
+            s.join().unwrap();
+        }
+        let local = worker.join().unwrap();
+        assert_eq!(local, 2, "a stale broadcast regressed the worker's generation");
+    });
+}

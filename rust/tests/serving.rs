@@ -9,8 +9,9 @@
 //! executors (no built artifacts needed).
 
 use std::collections::{HashMap, HashSet};
-use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+use crowdhmtware::sync::{lock_or_recover, thread, Arc, Mutex};
 
 use anyhow::Result;
 use crowdhmtware::compress::{OperatorKind, VariantSpec};
@@ -47,7 +48,7 @@ impl Executor for MockExec {
     }
 
     fn run(&mut self, _variant: &str, batch: usize, input: &[f32]) -> Result<Vec<f32>> {
-        std::thread::sleep(self.delay);
+        thread::sleep(self.delay);
         let mut out = vec![0.0f32; batch * CLASSES];
         for b in 0..batch {
             let row = &input[b * ELEMS..b * ELEMS + CLASSES];
@@ -100,7 +101,7 @@ fn concurrent_load_across_workers() {
     let mut joins = Vec::new();
     for t in 0..THREADS {
         let p = Arc::clone(&p);
-        joins.push(std::thread::spawn(move || {
+        joins.push(thread::spawn(move || {
             let mut got = Vec::new();
             let mut rxs = Vec::new();
             for i in 0..PER_THREAD {
@@ -157,20 +158,20 @@ fn variant_switch_mid_stream() {
     // Background load running across the switch.
     let bg = {
         let p = Arc::clone(&p);
-        std::thread::spawn(move || {
+        thread::spawn(move || {
             let mut rxs = Vec::new();
             for i in 0..128 {
                 if let Ok(rx) = p.submit(input_for(i)) {
                     rxs.push(rx);
                 }
-                std::thread::sleep(Duration::from_micros(50));
+                thread::sleep(Duration::from_micros(50));
             }
             rxs.into_iter()
                 .map(|rx| rx.recv_timeout(Duration::from_secs(10)).expect("bg response"))
                 .collect::<Vec<_>>()
         })
     };
-    std::thread::sleep(Duration::from_millis(2));
+    thread::sleep(Duration::from_millis(2));
 
     let gen = p.switch_variant("upgraded");
     assert_eq!(gen, 1);
@@ -324,7 +325,7 @@ fn pool_outperforms_single_worker() {
             match p.submit(input_for(0)) {
                 Ok(rx) => rxs.push(rx),
                 // Queues full: the workers are saturated; back off briefly.
-                Err(_) => std::thread::sleep(Duration::from_micros(200)),
+                Err(_) => thread::sleep(Duration::from_micros(200)),
             }
         }
         let stats = p.shutdown();
@@ -373,7 +374,7 @@ fn idle_workers_steal_stranded_backlog() {
     // Wedge the only worker: it absorbs this request and disappears into
     // a 250 ms batch.
     let wedge = p.submit(input_for(0)).expect("admitted");
-    std::thread::sleep(Duration::from_millis(30));
+    thread::sleep(Duration::from_millis(30));
     // Pre-load the victim's queue while it is stuck, priority last.
     let stranded: Vec<_> = (0..STRANDED)
         .map(|i| (i % CLASSES, p.submit(input_for(i)).expect("admitted")))
@@ -435,7 +436,7 @@ fn steal_disabled_keeps_lanes_private() {
         },
     );
     let rxs: Vec<_> = (0..6).map(|i| p.submit(input_for(i)).expect("admitted")).collect();
-    std::thread::sleep(Duration::from_millis(30));
+    thread::sleep(Duration::from_millis(30));
     p.set_workers(3);
     for rx in rxs {
         rx.recv_timeout(Duration::from_secs(10)).expect("response");
@@ -468,14 +469,11 @@ impl Executor for SleepExec {
     }
 
     fn run(&mut self, variant: &str, batch: usize, _input: &[f32]) -> Result<Vec<f32>> {
-        let delay = self
-            .sleeps
-            .lock()
-            .unwrap()
+        let delay = lock_or_recover(&self.sleeps)
             .get(variant)
             .copied()
             .unwrap_or(Duration::from_micros(500));
-        std::thread::sleep(delay);
+        thread::sleep(delay);
         Ok(vec![1.0 / CLASSES as f32; batch * CLASSES])
     }
 }
@@ -536,8 +534,8 @@ fn calibrated_control_plane_converges_to_measured_choice() {
 
     // The device disagrees with the model: the deployed variant actually
     // costs 2.5× the *budget* per batch; the alternative is honest.
-    sleeps.lock().unwrap().insert(first.clone(), Duration::from_secs_f64(budget * 2.5));
-    sleeps.lock().unwrap().insert(other.clone(), Duration::from_millis(1));
+    lock_or_recover(&sleeps).insert(first.clone(), Duration::from_secs_f64(budget * 2.5));
+    lock_or_recover(&sleeps).insert(other.clone(), Duration::from_millis(1));
 
     let mut converged_at = None;
     for tick in 1..=6 {

@@ -11,6 +11,12 @@ Four rules, each guarding an invariant the type system cannot:
       deltas. Waivers list counters that intentionally have no
       snapshot total (`stolen_from` mirrors `steals` — every stolen
       request has a thief, so a pool-wide total would double-count).
+      The same parity holds on the per-tenant lane: every `Counter` on
+      `TenantTelemetry` must surface in `TenantView` AND `TenantDelta`,
+      and the snapshot/delta pair must carry the `per_tenant` maps that
+      transport them — the tenancy arm's conservation assertions read
+      those deltas, so a half-plumbed tenant counter would silently
+      break per-tenant accounting.
 
   R2  no `.lock().unwrap()` / `.read().unwrap()` / `.write().unwrap()`
       (or `.expect`) outside `sync.rs` — poison must be recovered via
@@ -102,7 +108,13 @@ def counter_fields(text, name):
 
 
 def check_telemetry_parity(hub_text, hub_path=HUB_RS):
-    """R1: counter <-> snapshot field <-> delta entry parity."""
+    """R1: counter <-> snapshot field <-> delta entry parity.
+
+    Covers both lanes: the pool-wide counters (WorkerTelemetry /
+    TelemetryHub -> TelemetrySnapshot / SnapshotDelta) and the
+    per-tenant counters (TenantTelemetry -> TenantView / TenantDelta,
+    transported by the `per_tenant` maps on the snapshot pair).
+    """
     violations = []
     counters = []
     for struct in ("WorkerTelemetry", "TelemetryHub"):
@@ -114,6 +126,16 @@ def check_telemetry_parity(hub_text, hub_path=HUB_RS):
     snapshot = struct_fields(hub_text, "TelemetrySnapshot")
     delta = struct_fields(hub_text, "SnapshotDelta")
     for struct, fields in (("TelemetrySnapshot", snapshot), ("SnapshotDelta", delta)):
+        if fields is None:
+            violations.append((hub_path, 0, "R1", f"struct {struct} not found"))
+    tenant_counters = counter_fields(hub_text, "TenantTelemetry")
+    view = struct_fields(hub_text, "TenantView")
+    tenant_delta = struct_fields(hub_text, "TenantDelta")
+    for struct, fields in (
+        ("TenantTelemetry", tenant_counters),
+        ("TenantView", view),
+        ("TenantDelta", tenant_delta),
+    ):
         if fields is None:
             violations.append((hub_path, 0, "R1", f"struct {struct} not found"))
     if violations:
@@ -138,6 +160,31 @@ def check_telemetry_parity(hub_text, hub_path=HUB_RS):
         violations.append(
             (hub_path, 0, "R1", f"SnapshotDelta entry `{d}` has no TelemetrySnapshot field")
         )
+    # Tenant lane: every per-tenant counter must surface in the view
+    # AND the windowed delta (no aliases or waivers here — the tenancy
+    # conservation asserts consume these fields by their hub names).
+    view_names = {f for f, _ in view}
+    tenant_delta_names = {f for f, _ in tenant_delta}
+    for c in tenant_counters:
+        if c not in view_names:
+            violations.append(
+                (hub_path, 0, "R1", f"tenant counter `{c}` has no TenantView field")
+            )
+        if c not in tenant_delta_names:
+            violations.append(
+                (hub_path, 0, "R1", f"tenant counter `{c}` has no TenantDelta entry")
+            )
+    for d in tenant_delta_names - view_names:
+        violations.append(
+            (hub_path, 0, "R1", f"TenantDelta entry `{d}` has no TenantView field")
+        )
+    # The per-tenant lane must ride the snapshot pair itself, or the
+    # views/deltas above are unreachable from the control plane.
+    for struct, names in (("TelemetrySnapshot", snapshot_names), ("SnapshotDelta", delta_names)):
+        if "per_tenant" not in names:
+            violations.append(
+                (hub_path, 0, "R1", f"{struct} has no `per_tenant` map")
+            )
     return violations
 
 

@@ -256,6 +256,38 @@ class P99GateTest(unittest.TestCase):
         # Same run under a looser p95 budget is fine.
         self.assertTrue(check_bench.compare(cur, base, 0.35, max_p99_regression=0.35))
 
+    def test_victim_lane_is_gated_independently_of_the_composite(self):
+        # The tenant scenario publishes two entries: the merged run and
+        # the victim-only tail. A victim p99 blowup must trip the gate
+        # even when the composite (dominated by the absorbed aggressor
+        # rejections) looks healthy.
+        base = scenarios_doc(
+            {"tenant_flash_crowd": (400.0, 1200.0), "tenant_flash_crowd_victim": (150.0, 400.0)}
+        )
+        cur = scenarios_doc(
+            {"tenant_flash_crowd": (400.0, 1200.0), "tenant_flash_crowd_victim": (160.0, 900.0)}
+        )  # victim p99 +125%
+        self.assertFalse(check_bench.compare(cur, base, 0.25, max_p99_regression=0.35))
+        ok = scenarios_doc(
+            {"tenant_flash_crowd": (420.0, 1300.0), "tenant_flash_crowd_victim": (160.0, 450.0)}
+        )
+        self.assertTrue(check_bench.compare(ok, base, 0.25, max_p99_regression=0.35))
+
+    def test_committed_baseline_seeds_the_tenant_entries(self):
+        # The committed baseline must carry both tenant entries with
+        # both tails, or the victim-isolation gate silently degrades to
+        # the first-run warn-and-pass path.
+        import json
+
+        path = os.path.join(os.path.dirname(os.path.abspath(__file__)), "BENCH_scenarios_baseline.json")
+        with open(path, "r", encoding="utf-8") as f:
+            doc = json.load(f)
+        by_name = {e["name"]: e for e in doc["scenarios"]}
+        for name in ("tenant_flash_crowd", "tenant_flash_crowd_victim"):
+            self.assertIn(name, by_name)
+            self.assertGreater(by_name[name]["p95_ms"], 0.0)
+            self.assertGreater(by_name[name]["p99_ms"], 0.0)
+
     def test_p99_gate_applies_to_numeric_schemas_too(self):
         base = serving_doc({1: 100.0, 2: 50.0})
         base["widths"][0]["p99_ms"] = 200.0

@@ -35,6 +35,7 @@ pub struct TelemetrySnapshot {
     pub steals: usize,
     pub cache_inflight_coalesced: usize,
     pub p95_s: f64,
+    pub per_tenant: BTreeMap<String, TenantView>,
 }
 
 pub struct SnapshotDelta {
@@ -42,6 +43,27 @@ pub struct SnapshotDelta {
     pub batches: usize,
     pub steals: usize,
     pub cache_inflight_coalesced: usize,
+    pub per_tenant: BTreeMap<String, TenantDelta>,
+}
+
+pub struct TenantTelemetry {
+    admitted: Counter,
+    rejected: Counter,
+    retry_spent: Counter,
+    latency: Mutex<Reservoir>,
+}
+
+pub struct TenantView {
+    pub admitted: usize,
+    pub rejected: usize,
+    pub retry_spent: usize,
+    pub p99_s: f64,
+}
+
+pub struct TenantDelta {
+    pub admitted: usize,
+    pub rejected: usize,
+    pub retry_spent: usize,
 }
 """
 
@@ -85,6 +107,54 @@ class TelemetryParityTests(unittest.TestCase):
         violations = lint_invariants.check_telemetry_parity("fn nothing() {}")
         self.assertTrue(violations)
         self.assertTrue(all(r == "R1" for r in rules(violations)))
+
+    def test_tenant_counter_missing_from_view_and_delta_fails_twice(self):
+        text = HUB_OK.replace(
+            "    retry_spent: Counter,\n    latency",
+            "    retry_spent: Counter,\n    hedged: Counter,\n    latency",
+            1,
+        )
+        violations = lint_invariants.check_telemetry_parity(text)
+        self.assertEqual(rules(violations), ["R1", "R1"])
+        self.assertIn("`hedged`", violations[0][3])
+        self.assertIn("TenantView", violations[0][3])
+        self.assertIn("TenantDelta", violations[1][3])
+
+    def test_tenant_delta_dropping_a_counter_fails(self):
+        text = HUB_OK.replace(
+            "    pub rejected: usize,\n    pub retry_spent: usize,\n}",
+            "    pub rejected: usize,\n}",
+            1,
+        )
+        violations = lint_invariants.check_telemetry_parity(text)
+        self.assertEqual(rules(violations), ["R1"])
+        self.assertIn("`retry_spent`", violations[0][3])
+        self.assertIn("TenantDelta", violations[0][3])
+
+    def test_tenant_delta_entry_without_view_field_fails(self):
+        text = HUB_OK.replace(
+            "pub struct TenantDelta {\n",
+            "pub struct TenantDelta {\n    pub orphan: usize,\n",
+            1,
+        )
+        violations = lint_invariants.check_telemetry_parity(text)
+        self.assertEqual(rules(violations), ["R1"])
+        self.assertIn("`orphan`", violations[0][3])
+
+    def test_missing_per_tenant_map_fails_per_struct(self):
+        text = HUB_OK.replace(
+            "    pub per_tenant: BTreeMap<String, TenantDelta>,\n", "", 1
+        )
+        violations = lint_invariants.check_telemetry_parity(text)
+        self.assertEqual(rules(violations), ["R1"])
+        self.assertIn("SnapshotDelta", violations[0][3])
+        self.assertIn("per_tenant", violations[0][3])
+
+    def test_missing_tenant_struct_is_reported(self):
+        text = HUB_OK.replace("pub struct TenantDelta {", "pub struct Renamed {", 1)
+        violations = lint_invariants.check_telemetry_parity(text)
+        self.assertEqual(rules(violations), ["R1"])
+        self.assertIn("TenantDelta not found", violations[0][3])
 
 
 class LockUnwrapTests(unittest.TestCase):

@@ -13,7 +13,8 @@
 use std::time::{Duration, Instant};
 
 use crowdhmtware::coordinator::{
-    run_cascade, select_variant, BatcherConfig, DispatchPolicy, Executor, PoolConfig, ServingPool, Stage,
+    run_cascade, select_variant, BatcherConfig, DispatchPolicy, Executor, PoolConfig,
+    ServingPool, Stage, Submission,
 };
 use crowdhmtware::device::{device, ContextState, ResourceMonitor};
 use crowdhmtware::runtime::{Manifest, ModelRuntime};
@@ -93,7 +94,8 @@ fn main() -> anyhow::Result<()> {
         let mut warm = Vec::new();
         for i in 0..9 * WORKERS {
             let idx = i % labels.len();
-            warm.push(server.submit(inputs[idx * per..(idx + 1) * per].to_vec()).expect("warmup admitted"));
+            let input = inputs[idx * per..(idx + 1) * per].to_vec();
+            warm.push(server.submit_with(Submission::new(input)).expect("warmup admitted"));
         }
         for w in warm {
             let _ = w.recv_timeout(Duration::from_secs(120))?;
@@ -104,7 +106,9 @@ fn main() -> anyhow::Result<()> {
         for _ in 0..per_phase {
             let idx = req_i % labels.len();
             req_i += 1;
-            rxs.push((labels[idx], server.submit(inputs[idx * per..(idx + 1) * per].to_vec()).expect("admitted")));
+            let input = inputs[idx * per..(idx + 1) * per].to_vec();
+            let rx = server.submit_with(Submission::new(input)).expect("admitted");
+            rxs.push((labels[idx], rx));
         }
         let mut correct = 0usize;
         let mut lats = Vec::new();

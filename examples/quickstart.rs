@@ -6,7 +6,7 @@
 
 use std::time::Duration;
 
-use crowdhmtware::coordinator::{BatcherConfig, Executor, PoolConfig, ServingPool};
+use crowdhmtware::coordinator::{BatcherConfig, Executor, PoolConfig, ServingPool, Submission};
 use crowdhmtware::runtime::{Manifest, ModelRuntime};
 
 fn main() -> anyhow::Result<()> {
@@ -44,7 +44,7 @@ fn main() -> anyhow::Result<()> {
     let mut rxs = Vec::new();
     for i in 0..n {
         let row = inputs[i * per..(i + 1) * per].to_vec();
-        rxs.push((labels[i], server.submit(row).expect("admitted")));
+        rxs.push((labels[i], server.submit_with(Submission::new(row)).expect("admitted")));
     }
     let mut correct = 0;
     for (label, rx) in rxs {

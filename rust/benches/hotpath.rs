@@ -39,7 +39,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 use crowdhmtware::compress::{OperatorKind, VariantSpec};
 use crowdhmtware::coordinator::{
-    Batcher, BatcherConfig, CacheConfig, Executor, PoolConfig, Request, ServingPool,
+    Batcher, BatcherConfig, CacheConfig, Executor, PoolConfig, Request, ServingPool, Submission,
 };
 use crowdhmtware::device::{device, ResourceMonitor};
 use crowdhmtware::engine::{allocate, fuse, EngineConfig, FusionConfig};
@@ -132,11 +132,21 @@ fn run_submit_unique() -> Scenario {
         .map(|i| {
             let mut input = vec![0.0f32; ELEMS];
             input[0] = i as f32; // every request a distinct buffer
-            pool.submit(input).expect("capacity sized to the run")
+            pool.submit_with(Submission::new(input)).expect("capacity sized to the run")
         })
         .collect();
+    // Variant names are interned: every response clones one `Arc<str>`
+    // allocation made at spawn/switch time, never a per-response String.
+    let mut first_variant: Option<std::sync::Arc<str>> = None;
     for rx in rxs {
-        rx.recv_timeout(Duration::from_secs(60)).expect("response");
+        let resp = rx.recv_timeout(Duration::from_secs(60)).expect("response");
+        match &first_variant {
+            None => first_variant = Some(std::sync::Arc::clone(&resp.variant)),
+            Some(v) => assert!(
+                std::sync::Arc::ptr_eq(v, &resp.variant),
+                "per-response variant allocation on the hot path"
+            ),
+        }
     }
     let wall = t0.elapsed().as_secs_f64();
     let stats = pool.shutdown();
@@ -153,10 +163,13 @@ fn run_submit_unique() -> Scenario {
 /// leader pays the inference, concurrent identical submissions join its
 /// flight, later ones hit the completed entry — N callers, ~1 batch.
 fn run_submit_hot_cached() -> (Scenario, CacheCounters) {
-    let pool = submit_pool(CacheConfig { enabled: true, capacity: 64 });
+    let pool = submit_pool(CacheConfig { enabled: true, capacity: 64, ..CacheConfig::default() });
     let t0 = Instant::now();
     let rxs: Vec<_> = (0..SUBMIT_REQUESTS)
-        .map(|_| pool.submit(vec![0.5f32; ELEMS]).expect("capacity sized to the run"))
+        .map(|_| {
+            pool.submit_with(Submission::new(vec![0.5f32; ELEMS]))
+                .expect("capacity sized to the run")
+        })
         .collect();
     for rx in rxs {
         rx.recv_timeout(Duration::from_secs(60)).expect("response");

@@ -3,7 +3,7 @@
 //! `crowdhmtware::workload` for the measurement model and the mapping
 //! onto the paper's Sec. IV evaluation).
 //!
-//! Five named scenarios, all replayable by seed:
+//! Six named scenarios, all replayable by seed:
 //!
 //!   steady_poisson   — Poisson arrivals well inside capacity; the
 //!                      Tab. 4 steady-state baseline, AIMD sizer live
@@ -19,6 +19,11 @@
 //!   campus_replay    — Sec. IV-G: a drone joins, battery sag slows
 //!                      the local device, the decision level switches
 //!                      to an energy variant
+//!   tenant_flash_crowd — a governed aggressor tenant bursts ×8 while
+//!                      a victim tenant stays inside its contract; the
+//!                      tenancy arm clips the aggressor at the front
+//!                      door, the victim's p99 is gated on its own
+//!                      (`tenant_flash_crowd_victim`)
 //!
 //! Latency is charged from each request's *scheduled arrival instant*
 //! (no coordinated omission), so queueing under overload is visible in
@@ -32,7 +37,9 @@
 
 use std::time::Duration;
 
-use crowdhmtware::coordinator::{BatcherConfig, CacheConfig, PoolConfig, ShardRouterConfig};
+use crowdhmtware::coordinator::{
+    BatcherConfig, CacheConfig, ClassConfig, PoolConfig, ShardRouterConfig, TenancyConfig,
+};
 use crowdhmtware::device::{device, ResourceMonitor, ResourceSnapshot};
 use crowdhmtware::optimizer::{PoolSizer, PoolSizerConfig};
 use crowdhmtware::telemetry::TelemetrySnapshot;
@@ -69,7 +76,7 @@ fn stack_config(
             workers,
             queue_capacity: 64,
             batcher: BatcherConfig { max_batch, max_wait: Duration::from_micros(500) },
-            cache: CacheConfig { enabled: cache, capacity: 512 },
+            cache: CacheConfig { enabled: cache, capacity: 512, ..CacheConfig::default() },
             ..PoolConfig::default()
         },
         router: ShardRouterConfig { peer_capacity: 8, ..ShardRouterConfig::default() },
@@ -81,6 +88,7 @@ fn mix() -> RequestMix {
         priority_share: 0.10,
         hot_share: 0.15,
         sizes: vec![(16, 0.5), (48, 0.3), (ELEMS, 0.2)],
+        ..RequestMix::default()
     }
 }
 
@@ -248,6 +256,7 @@ fn campus_replay() -> ScenarioReport {
             priority_share: 0.05,
             hot_share: 0.25,
             sizes: vec![(16, 0.4), (32, 0.4), (ELEMS, 0.2)],
+            ..RequestMix::default()
         },
         Duration::from_millis(1600),
         ELEMS,
@@ -257,6 +266,95 @@ fn campus_replay() -> ScenarioReport {
     let report = run_scenario(&stack, &scenario, &mut SizerController::new(0.050));
     assert_eq!(report.adaptation.switches, 1, "the scripted strategy switch must land");
     assert_eq!(report.adaptation.peers_joined, 1);
+    stack.shutdown();
+    report
+}
+
+fn tenant_flash_crowd() -> ScenarioReport {
+    // Two tenants share the flash-crowd stack: the victim offers a
+    // steady 400 req/s inside its admission contract while the
+    // aggressor's ×8 burst (2400 req/s peak) would oversubscribe the
+    // 2-worker pool on its own. The tenancy arm's token bucket clips
+    // the aggressor at its contracted rate at the front door — before
+    // the queues — so the victim's tail holds (gated below as
+    // `tenant_flash_crowd_victim`) and the aggressor absorbs the
+    // rejections.
+    let mut cfg = stack_config(2, 4, Duration::from_millis(2), false);
+    cfg.pool.tenancy = TenancyConfig {
+        classes: vec![
+            ClassConfig {
+                tenant: "victim".to_string(),
+                rate_hz: 800.0,
+                burst: 64,
+                reserve_frac: 0.5,
+                retry_frac: 0.0,
+            },
+            ClassConfig {
+                tenant: "aggressor".to_string(),
+                rate_hz: 500.0,
+                burst: 32,
+                reserve_frac: 0.0,
+                retry_frac: 0.0,
+            },
+        ],
+    };
+    let stack = ScenarioStack::spawn(cfg);
+    let victim = Trace::generate(
+        &ArrivalSchedule::Poisson { rate_hz: 400.0 },
+        &mix(),
+        Duration::from_millis(1400),
+        ELEMS,
+        SEED + 5,
+    )
+    .tagged("victim");
+    let aggressor = Trace::generate(
+        &ArrivalSchedule::FlashCrowd {
+            base_hz: 300.0,
+            burst_factor: 8.0,
+            burst_start: Duration::from_millis(500),
+            burst_len: Duration::from_millis(400),
+        },
+        &mix(),
+        Duration::from_millis(1400),
+        ELEMS,
+        SEED + 6,
+    )
+    .tagged("aggressor");
+    let scenario = Scenario::new("tenant_flash_crowd", Trace::merged(vec![victim, aggressor]));
+    let report = run_scenario(&stack, &scenario, &mut MaintainController);
+
+    // The tenancy accounting contract, asserted from the windowed
+    // telemetry delta: every submission bumped exactly one of
+    // admitted / rejected / retry_spent, so the counters reconstruct
+    // the offered load exactly.
+    for tenant in ["victim", "aggressor"] {
+        let d = &report.window.per_tenant[tenant];
+        let l = &report.load.per_tenant[tenant];
+        assert_eq!(
+            d.admitted + d.rejected + d.retry_spent,
+            l.offered + l.retries_submitted,
+            "{tenant}: per-tenant conservation broke"
+        );
+        assert_eq!(d.retry_spent, 0, "{tenant}: no retry policy configured");
+    }
+    let v = &report.load.per_tenant["victim"];
+    let a = &report.load.per_tenant["aggressor"];
+    assert!(
+        a.rejected * 5 >= a.offered,
+        "aggressor must absorb the burst as rejections: {} of {}",
+        a.rejected,
+        a.offered
+    );
+    assert!(
+        v.rejected * 50 <= v.offered,
+        "victim traffic inside its contract must be admitted: {} of {} rejected",
+        v.rejected,
+        v.offered
+    );
+    println!(
+        "  tenant_flash_crowd: victim {}/{} rejected p99 {:.2} ms | aggressor {}/{} rejected",
+        v.rejected, v.offered, v.p99_ms, a.rejected, a.offered
+    );
     stack.shutdown();
     report
 }
@@ -292,8 +390,14 @@ fn scenario_json(r: &ScenarioReport) -> Json {
 
 fn main() {
     println!("== open-loop scenario suite (seed {SEED}) ==");
-    let reports =
-        vec![steady_poisson(), diurnal(), flash_crowd(), churn_under_load(), campus_replay()];
+    let reports = vec![
+        steady_poisson(),
+        diurnal(),
+        flash_crowd(),
+        churn_under_load(),
+        campus_replay(),
+        tenant_flash_crowd(),
+    ];
 
     println!(
         "{:<18} {:>6} {:>9} {:>9} {:>8} {:>8} {:>8} {:>5} {:>5}  adaptation",
@@ -331,11 +435,33 @@ fn main() {
     }
 
     let total: usize = reports.iter().map(|r| r.load.offered).sum();
+    let mut scenarios: Vec<Json> = reports.iter().map(scenario_json).collect();
+    // The isolation claim, as its own gated entry: the *victim's*
+    // latency percentiles under the aggressor's burst.
+    if let Some(r) = reports.iter().find(|r| r.name == "tenant_flash_crowd") {
+        let v = &r.load.per_tenant["victim"];
+        scenarios.push(Json::obj(vec![
+            ("name", Json::str("tenant_flash_crowd_victim")),
+            ("requests", Json::num(v.offered as f64)),
+            (
+                "req_per_s",
+                Json::num(if r.load.wall_s > 0.0 {
+                    v.completed as f64 / r.load.wall_s
+                } else {
+                    0.0
+                }),
+            ),
+            ("p50_ms", Json::num(v.p50_ms)),
+            ("p95_ms", Json::num(v.p95_ms)),
+            ("p99_ms", Json::num(v.p99_ms)),
+            ("rejected", Json::num(v.rejected as f64)),
+        ]));
+    }
     let doc = Json::obj(vec![
         ("bench", Json::str("scenarios")),
         ("seed", Json::num(SEED as f64)),
         ("requests", Json::num(total as f64)),
-        ("scenarios", Json::Arr(reports.iter().map(scenario_json).collect())),
+        ("scenarios", Json::Arr(scenarios)),
     ]);
     let path = "BENCH_scenarios.json";
     match std::fs::write(path, doc.to_string() + "\n") {

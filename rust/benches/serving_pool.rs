@@ -37,7 +37,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 use crowdhmtware::coordinator::{
-    BatcherConfig, CacheConfig, Executor, PoolConfig, ServingPool, StealConfig,
+    BatcherConfig, CacheConfig, Executor, PoolConfig, ServingPool, StealConfig, Submission,
 };
 use crowdhmtware::util::{Json, Table};
 
@@ -90,7 +90,9 @@ fn run_width(workers: usize) -> WidthResult {
     );
     let t0 = Instant::now();
     let rxs: Vec<_> = (0..REQUESTS)
-        .map(|_| pool.submit(vec![0.0; ELEMS]).expect("capacity sized to the run"))
+        .map(|_| {
+            pool.submit_with(Submission::new(vec![0.0; ELEMS])).expect("capacity sized to the run")
+        })
         .collect();
     for rx in rxs {
         rx.recv_timeout(Duration::from_secs(60)).expect("response");
@@ -165,10 +167,13 @@ fn run_skewed(steal_enabled: bool) -> SkewedResult {
         },
     );
     let t0 = Instant::now();
-    let wedge = pool.submit(vec![0.0; ELEMS]).expect("capacity sized to the run");
+    let wedge =
+        pool.submit_with(Submission::new(vec![0.0; ELEMS])).expect("capacity sized to the run");
     std::thread::sleep(Duration::from_millis(5)); // let the wedge batch start
     let rxs: Vec<_> = (0..SKEW_PRELOAD)
-        .map(|_| pool.submit(vec![0.0; ELEMS]).expect("capacity sized to the run"))
+        .map(|_| {
+            pool.submit_with(Submission::new(vec![0.0; ELEMS])).expect("capacity sized to the run")
+        })
         .collect();
     pool.set_workers(4);
     for rx in rxs {
@@ -203,13 +208,15 @@ fn run_hot_input(enabled: bool) -> HotResult {
             workers: 2,
             queue_capacity: HOT_REQUESTS,
             batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_micros(500) },
-            cache: CacheConfig { enabled, capacity: 64 },
+            cache: CacheConfig { enabled, capacity: 64, ..CacheConfig::default() },
             ..PoolConfig::default()
         },
     );
     let t0 = Instant::now();
     let rxs: Vec<_> = (0..HOT_REQUESTS)
-        .map(|_| pool.submit(vec![0.5; ELEMS]).expect("capacity sized to the run"))
+        .map(|_| {
+            pool.submit_with(Submission::new(vec![0.5; ELEMS])).expect("capacity sized to the run")
+        })
         .collect();
     for rx in rxs {
         rx.recv_timeout(Duration::from_secs(60)).expect("response");

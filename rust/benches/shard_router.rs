@@ -44,7 +44,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 use crowdhmtware::coordinator::{
-    BatcherConfig, Executor, PoolConfig, ServingPool, ShardRouter, ShardRouterConfig,
+    BatcherConfig, Executor, PoolConfig, ServingPool, ShardRouter, ShardRouterConfig, Submission,
 };
 use crowdhmtware::partition::SharedLink;
 use crowdhmtware::runtime::SegmentedExec;
@@ -112,7 +112,10 @@ fn run_config(peers: usize) -> ConfigResult {
     }
     let t0 = Instant::now();
     let rxs: Vec<_> = (0..REQUESTS)
-        .map(|_| router.submit(vec![0.0; ELEMS]).expect("capacity sized to the run"))
+        .map(|_| {
+            router.submit_with(Submission::new(vec![0.0; ELEMS]))
+                .expect("capacity sized to the run")
+        })
         .collect();
     for rx in rxs {
         rx.recv_timeout(Duration::from_secs(60)).expect("response");
@@ -189,7 +192,10 @@ fn run_split_scenario() -> SplitResult {
     }
     let t0 = Instant::now();
     let rxs: Vec<_> = (0..SPLIT_REQUESTS)
-        .map(|_| router.submit(vec![0.0; ELEMS]).expect("capacity sized to the run"))
+        .map(|_| {
+            router.submit_with(Submission::new(vec![0.0; ELEMS]))
+                .expect("capacity sized to the run")
+        })
         .collect();
     for rx in rxs {
         rx.recv_timeout(Duration::from_secs(60)).expect("response");
@@ -328,7 +334,10 @@ fn run_frontier_scenario(window_on: bool) -> FrontierResult {
     }
     let t0 = Instant::now();
     let rxs: Vec<_> = (0..FRONTIER_REQUESTS)
-        .map(|_| router.submit(vec![0.0; ELEMS]).expect("capacity sized to the run"))
+        .map(|_| {
+            router.submit_with(Submission::new(vec![0.0; ELEMS]))
+                .expect("capacity sized to the run")
+        })
         .collect();
     for rx in rxs {
         rx.recv_timeout(Duration::from_secs(60)).expect("response");

@@ -28,6 +28,7 @@ use crate::sync::Arc;
 use super::cache::CacheSlot;
 use super::server::Response;
 use super::steal::StealDeque;
+use super::tenancy::TenantPermit;
 use crate::telemetry::Lane;
 
 /// One queued inference request.
@@ -54,6 +55,11 @@ pub struct Request {
     /// the coalesced waiters and stores the completed entry. Travels with
     /// the request through steal migration so the thief completes it.
     pub cache: Option<CacheSlot>,
+    /// Tenant accounting handle: holds the class's bulkhead slot for the
+    /// request's whole pool lifetime (released on drop — answered,
+    /// failed, reclaimed, or drained alike) and the tenant's hub lane
+    /// for worker-side latency observation. Empty for untagged traffic.
+    pub tenant: TenantPermit,
 }
 
 /// Batching policy knobs.
@@ -248,7 +254,15 @@ mod tests {
 
     fn lane_req(id: u64, t: Instant, lane: Lane) -> Request {
         let (resp, _rx) = channel();
-        Request { id, input: vec![id as f32; 4].into(), enqueued: t, lane, resp, cache: None }
+        Request {
+            id,
+            input: vec![id as f32; 4].into(),
+            enqueued: t,
+            lane,
+            resp,
+            cache: None,
+            tenant: TenantPermit::untracked(),
+        }
     }
 
     fn req(id: u64, t: Instant) -> Request {
@@ -569,6 +583,7 @@ mod tests {
             lane: Lane::Normal,
             resp,
             cache: None,
+            tenant: TenantPermit::untracked(),
         });
         let batch = b.pop_batch(&[1], t).unwrap();
         assert!(Arc::ptr_eq(&batch.requests[0].input, &input), "no copy through the batcher");

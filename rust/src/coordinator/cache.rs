@@ -71,12 +71,30 @@ pub struct CacheConfig {
     /// Completed-entry bound; the least-recently-used entry is evicted
     /// past it. In-flight entries are bounded by admission, not by this.
     pub capacity: usize,
+    /// Byte budget over completed entries. Each entry is charged its
+    /// retained input (`len * 4` bytes — the full input is kept for the
+    /// bit-for-bit hit verification) plus a fixed bookkeeping overhead,
+    /// and the LRU entry is evicted until the charge fits. An entry-count
+    /// bound alone lets a few fat inputs squat on memory a thousand thin
+    /// ones would share; this bounds the actual footprint. Unlimited by
+    /// default.
+    pub max_bytes: usize,
 }
 
 impl Default for CacheConfig {
     fn default() -> Self {
-        CacheConfig { enabled: false, capacity: 512 }
+        CacheConfig { enabled: false, capacity: 512, max_bytes: usize::MAX }
     }
+}
+
+/// Fixed per-entry charge on top of the retained input bytes: key,
+/// response, LRU stamp, and map-slot bookkeeping. A coarse constant —
+/// the point is that *some* floor stops zero-length inputs from being
+/// free — not an allocator-exact measurement.
+const ENTRY_OVERHEAD_BYTES: usize = 96;
+
+fn entry_cost(input: &[f32]) -> usize {
+    input.len() * 4 + ENTRY_OVERHEAD_BYTES
 }
 
 /// FNV-1a over the input's f32 *bit patterns* (so `-0.0 != 0.0` and NaN
@@ -129,6 +147,9 @@ struct CacheState {
     inflight: HashMap<CacheKey, Inflight>,
     /// Monotonic use-clock for LRU ordering.
     tick: u64,
+    /// Sum of [`entry_cost`] over `completed` — kept exact on every
+    /// insert/evict/purge so the byte bound never needs a full rescan.
+    bytes: usize,
 }
 
 /// What admission learned from the cache for one submission.
@@ -172,8 +193,13 @@ impl fmt::Debug for CacheSlot {
 impl CacheSlot {
     /// Deliver the leader's response: fan a clone out to every waiter
     /// that joined this flight, then store the completed entry (evicting
-    /// LRU past the bound). Waiters receive the response bit-identical
-    /// to the leader's — same prediction, same confidence bits.
+    /// LRU past the entry-count bound *and* the byte budget). Waiters
+    /// receive the response bit-identical to the leader's — same
+    /// prediction, same confidence bits.
+    ///
+    /// An entry fatter than the whole byte budget evicts everything —
+    /// including itself: caching it would pin the cache over budget
+    /// until the next insert anyway, so it is simply not retained.
     pub fn complete(mut self, resp: &Response) {
         self.done = true;
         let evicted = {
@@ -185,18 +211,24 @@ impl CacheSlot {
             }
             st.tick += 1;
             let tick = st.tick;
-            st.completed.insert(
+            let prev = st.completed.insert(
                 self.key.clone(),
                 Completed { input: Arc::clone(&self.input), resp: resp.clone(), last_used: tick },
             );
+            if let Some(prev) = prev {
+                st.bytes -= entry_cost(&prev.input);
+            }
+            st.bytes += entry_cost(&self.input);
             let mut evicted = 0usize;
-            while st.completed.len() > self.cache.capacity {
+            while st.completed.len() > self.cache.capacity || st.bytes > self.cache.max_bytes {
                 let Some(lru) =
                     st.completed.iter().min_by_key(|(_, c)| c.last_used).map(|(k, _)| k.clone())
                 else {
                     break;
                 };
-                st.completed.remove(&lru);
+                if let Some(gone) = st.completed.remove(&lru) {
+                    st.bytes -= entry_cost(&gone.input);
+                }
                 evicted += 1;
             }
             evicted
@@ -227,18 +259,21 @@ impl Drop for CacheSlot {
 pub struct ResponseCache {
     state: Mutex<CacheState>,
     capacity: usize,
+    max_bytes: usize,
     hub: Arc<TelemetryHub>,
 }
 
 impl ResponseCache {
-    pub fn new(capacity: usize, hub: Arc<TelemetryHub>) -> ResponseCache {
+    pub fn new(cfg: CacheConfig, hub: Arc<TelemetryHub>) -> ResponseCache {
         ResponseCache {
             state: Mutex::new(CacheState {
                 completed: HashMap::new(),
                 inflight: HashMap::new(),
                 tick: 0,
+                bytes: 0,
             }),
-            capacity: capacity.max(1),
+            capacity: cfg.capacity.max(1),
+            max_bytes: cfg.max_bytes,
             hub,
         }
     }
@@ -303,7 +338,16 @@ impl ResponseCache {
         let evicted = {
             let mut st = lock_or_recover(&self.state);
             let before = st.completed.len();
-            st.completed.retain(|k, _| k.generation >= current_generation);
+            let mut freed = 0usize;
+            st.completed.retain(|k, c| {
+                if k.generation >= current_generation {
+                    true
+                } else {
+                    freed += entry_cost(&c.input);
+                    false
+                }
+            });
+            st.bytes -= freed;
             before - st.completed.len()
         };
         if evicted > 0 {
@@ -314,6 +358,11 @@ impl ResponseCache {
     /// Completed-entry count (tests/diagnostics).
     pub fn completed_len(&self) -> usize {
         lock_or_recover(&self.state).completed.len()
+    }
+
+    /// Current byte charge over completed entries (tests/diagnostics).
+    pub fn bytes_used(&self) -> usize {
+        lock_or_recover(&self.state).bytes
     }
 
     /// In-flight entry count (tests/diagnostics).
@@ -329,6 +378,8 @@ impl fmt::Debug for ResponseCache {
             .field("completed", &st.completed.len())
             .field("inflight", &st.inflight.len())
             .field("capacity", &self.capacity)
+            .field("bytes", &st.bytes)
+            .field("max_bytes", &self.max_bytes)
             .finish()
     }
 }
@@ -344,7 +395,13 @@ mod tests {
     }
 
     fn cache(capacity: usize, hub: &Arc<TelemetryHub>) -> Arc<ResponseCache> {
-        Arc::new(ResponseCache::new(capacity, Arc::clone(hub)))
+        let cfg = CacheConfig { enabled: true, capacity, ..CacheConfig::default() };
+        Arc::new(ResponseCache::new(cfg, Arc::clone(hub)))
+    }
+
+    fn byte_cache(max_bytes: usize, hub: &Arc<TelemetryHub>) -> Arc<ResponseCache> {
+        let cfg = CacheConfig { enabled: true, capacity: 1024, max_bytes };
+        Arc::new(ResponseCache::new(cfg, Arc::clone(hub)))
     }
 
     fn resp(id: u64, pred: usize) -> Response {
@@ -352,7 +409,7 @@ mod tests {
             id,
             pred,
             confidence: 0.9,
-            variant: "v".to_string(),
+            variant: Arc::from("v"),
             generation: 0,
             worker: 0,
             lane: Lane::Normal,
@@ -461,6 +518,62 @@ mod tests {
         assert_eq!(hub.cache_evictions(), 1);
         assert!(matches!(c.lookup(&i1, &v, 0, true), CacheOutcome::Hit(_)), "recently used survives");
         assert!(matches!(c.lookup(&i2, &v, 0, true), CacheOutcome::Lead(_)), "LRU entry evicted");
+    }
+
+    #[test]
+    fn byte_budget_evicts_fat_entries_entry_count_would_keep() {
+        let hub = hub();
+        // Budget fits the two thin entries (1 f32 each) with room to
+        // spare, but a fat 256-f32 entry blows it. Entry-count capacity
+        // (1024) never binds in this test — only bytes do.
+        let thin_cost = entry_cost(&[0.0]);
+        let fat = arc(&[7.0; 256]);
+        let c = byte_cache(thin_cost * 3, &hub);
+
+        let (t1, t2) = (arc(&[1.0]), arc(&[2.0]));
+        for (i, input) in [&t1, &t2].into_iter().enumerate() {
+            let CacheOutcome::Lead(slot) = c.lookup(input, &Arc::from("v"), 0, true) else {
+                panic!("lead")
+            };
+            slot.complete(&resp(i as u64, i));
+        }
+        assert_eq!(c.completed_len(), 2);
+        assert_eq!(c.bytes_used(), thin_cost * 2);
+
+        // Touch t1 so t2 is LRU, then insert the fat entry: it charges
+        // more than the whole remaining budget, so eviction walks the
+        // LRU order (t2, then t1, then the fat entry itself) until the
+        // charge fits — an over-budget input is not retained.
+        let v: Arc<str> = Arc::from("v");
+        assert!(matches!(c.lookup(&t1, &v, 0, true), CacheOutcome::Hit(_)));
+        let CacheOutcome::Lead(slot) = c.lookup(&fat, &v, 0, true) else { panic!("lead") };
+        slot.complete(&resp(9, 9));
+        assert_eq!(c.completed_len(), 0, "fat entry exceeds the whole budget");
+        assert_eq!(c.bytes_used(), 0);
+        assert_eq!(hub.cache_evictions(), 3);
+
+        // A thin entry under a roomy budget is retained and charged
+        // exactly its cost: the byte clock stays exact across the churn.
+        let CacheOutcome::Lead(slot) = c.lookup(&t1, &v, 0, true) else { panic!("lead") };
+        slot.complete(&resp(1, 1));
+        assert_eq!(c.bytes_used(), thin_cost);
+        assert!(matches!(c.lookup(&t1, &v, 0, true), CacheOutcome::Hit(_)));
+    }
+
+    #[test]
+    fn byte_clock_tracks_purge_and_replacement() {
+        let hub = hub();
+        let c = byte_cache(usize::MAX, &hub);
+        let v: Arc<str> = Arc::from("v");
+        let input = arc(&[3.0; 8]);
+        let CacheOutcome::Lead(slot) = c.lookup(&input, &v, 0, true) else { panic!("lead") };
+        slot.complete(&resp(1, 1));
+        let CacheOutcome::Lead(slot) = c.lookup(&input, &v, 1, true) else { panic!("lead") };
+        slot.complete(&resp(2, 2));
+        assert_eq!(c.bytes_used(), entry_cost(&input) * 2);
+        c.purge_stale(1);
+        assert_eq!(c.completed_len(), 1);
+        assert_eq!(c.bytes_used(), entry_cost(&input), "purge refunds the byte charge");
     }
 
     #[test]

@@ -76,6 +76,15 @@
 //!   [`shard::ShardRouter::maintain`]'s retune racing a link thread's
 //!   close/deadline read yields only values from one epoch or the
 //!   other, never the type-level defaults.
+//! - **Tenant budgets** ([`tenancy::TokenBucket`] /
+//!   [`tenancy::Bulkhead`], `loom_tenancy`): a bucket holding one token
+//!   admits exactly one of two racing takers — the lazy refill credits
+//!   each elapsed interval *once* (timestamp-CAS; a losing refiller
+//!   rereads rather than double-credits) and the level CAS hands each
+//!   token to one caller; a bulkhead's held count never exceeds its cap
+//!   even under concurrent acquire/release, and every
+//!   [`tenancy::TenantPermit`] drop releases the slot it holds exactly
+//!   once.
 //!
 //! Two repo-wide rules back these up, enforced by
 //! `ci/lint_invariants.py` (and `clippy.toml`'s `disallowed-methods`):
@@ -92,12 +101,17 @@ pub mod pool;
 pub mod server;
 pub mod shard;
 pub mod steal;
+pub mod tenancy;
 
 pub use batcher::{Batch, Batcher, BatcherConfig, Request};
 pub use cache::{CacheConfig, CacheOutcome, CacheSlot, ResponseCache};
 pub use cascade::{run_cascade, CascadeStats, Stage};
 pub use policy::{rank_variants, select_variant, DispatchPolicy, ScoredVariant};
-pub use pool::{PoolConfig, PoolStats, ServingPool, SwitchGate};
+pub use pool::{PoolConfig, PoolStats, ServingPool, Submission, SwitchGate};
+pub use tenancy::{
+    Bulkhead, ClassConfig, ClassState, RetryBudget, TenancyConfig, TenancyController,
+    TenantPermit, TokenBucket,
+};
 pub use server::{Executor, Rejected, Response, ServingStats};
 pub use steal::{StealConfig, StealDeque, StealRegistry};
 pub use shard::{

@@ -50,10 +50,11 @@ use super::server::{
     spawn_worker, Executor, Msg, Rejected, Response, ServingStats, StealContext, Worker,
 };
 use super::steal::{StealConfig, StealDeque, StealRegistry};
-use crate::telemetry::{Lane, TelemetryHub, TelemetrySnapshot};
+use super::tenancy::{ClassState, TenancyConfig, TenancyController, TenantPermit};
+use crate::telemetry::{Lane, TelemetryHub, TelemetrySnapshot, TenantTelemetry};
 
 /// Pool sizing + routing knobs.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct PoolConfig {
     /// Number of replicated workers at spawn (each constructs its own
     /// executor); [`ServingPool::set_workers`] may change it later.
@@ -74,6 +75,10 @@ pub struct PoolConfig {
     /// How long `switch_variant` waits for each worker's acknowledgement
     /// before giving up on it (a wedged worker must not hang actuation).
     pub switch_ack_timeout: Duration,
+    /// Per-tenant isolation: token-bucket admission, bulkhead capacity
+    /// reservations, retry budgets (see [`super::tenancy`]). Empty =
+    /// no enforcement; tagged submissions still get hub lanes.
+    pub tenancy: TenancyConfig,
 }
 
 impl Default for PoolConfig {
@@ -86,7 +91,77 @@ impl Default for PoolConfig {
             steal: StealConfig::default(),
             cache: CacheConfig::default(),
             switch_ack_timeout: Duration::from_secs(5),
+            tenancy: TenancyConfig::default(),
         }
+    }
+}
+
+/// One submission, descriptor-style: the single front-door argument of
+/// [`ServingPool::submit_with`] and `ShardRouter::submit_with`, folding
+/// what used to be the `submit` / `submit_priority` / `submit_lane`
+/// method triad (now deprecated wrappers) into one builder:
+///
+/// ```
+/// # use crowdhmtware::coordinator::{Submission, Lane};
+/// let sub = Submission::new(vec![0.0f32; 16]).lane(Lane::High).tenant("t0");
+/// ```
+///
+/// The input becomes the shared immutable `Arc<[f32]>` handle here,
+/// once — every later movement clones the pointer, never the rows.
+#[derive(Debug, Clone)]
+pub struct Submission {
+    pub(crate) input: Arc<[f32]>,
+    pub(crate) lane: Lane,
+    pub(crate) tenant: Option<Arc<str>>,
+    pub(crate) bypass_cache: bool,
+    pub(crate) retry: bool,
+}
+
+impl Submission {
+    /// A normal-lane, untagged submission of `input`.
+    pub fn new(input: impl Into<Arc<[f32]>>) -> Submission {
+        Submission {
+            input: input.into(),
+            lane: Lane::Normal,
+            tenant: None,
+            bypass_cache: false,
+            retry: false,
+        }
+    }
+
+    /// Ride `lane` ([`Lane::High`] is drained before normal traffic).
+    pub fn lane(mut self, lane: Lane) -> Submission {
+        self.lane = lane;
+        self
+    }
+
+    /// Tag with a tenant id: accounted on the tenant's hub lane and,
+    /// when the pool has a [`TenancyConfig`] class for it, governed by
+    /// that class's token bucket / bulkhead / retry budget.
+    pub fn tenant(mut self, tenant: &str) -> Submission {
+        self.tenant = Some(Arc::from(tenant));
+        self
+    }
+
+    /// Skip the single-flight response cache for this submission (a
+    /// caller that needs a fresh inference for an input it knows to be
+    /// hot — e.g. a calibration probe).
+    pub fn bypass_cache(mut self) -> Submission {
+        self.bypass_cache = true;
+        self
+    }
+
+    /// Mark as a retry of a previously rejected submission: paid from
+    /// the tenant's retry *budget* instead of its fresh-traffic bucket,
+    /// so retry storms are bounded as a fraction of fresh traffic.
+    pub fn retry(mut self) -> Submission {
+        self.retry = true;
+        self
+    }
+
+    /// The tenant tag, if any.
+    pub fn tenant_id(&self) -> Option<&str> {
+        self.tenant.as_deref()
     }
 }
 
@@ -276,6 +351,10 @@ pub struct ServingPool {
     /// Every local worker's shared normal lane, for idle siblings to
     /// steal from (victim selection reads the hub).
     steal_registry: Arc<StealRegistry>,
+    /// Per-tenant isolation arm (admission budgets / bulkheads / retry
+    /// budgets), present when the config lists classes. Shared with the
+    /// shard router so both front doors charge the same budgets.
+    tenancy: Option<Arc<TenancyController>>,
     capacity: usize,
     batcher: BatcherConfig,
     dispatch: DispatchPolicy,
@@ -300,6 +379,9 @@ impl ServingPool {
         let make: Arc<dyn Fn(usize) -> Box<dyn Executor> + Send + Sync> = Arc::new(make_exec);
         let hub = Arc::new(TelemetryHub::new(cfg.queue_capacity));
         let steal_registry = Arc::new(StealRegistry::new());
+        // Interned once for the whole pool: every worker (and so every
+        // response) clones this one allocation until the next switch.
+        let variant: Arc<str> = Arc::from(initial_variant);
         let list = (0..cfg.workers)
             .map(|i| {
                 let make = Arc::clone(&make);
@@ -312,14 +394,18 @@ impl ServingPool {
                     cfg: cfg.steal,
                     queue_capacity: cfg.queue_capacity,
                 };
-                let variant = initial_variant.to_string();
-                spawn_worker(i, move || make(i), variant, 0, cfg.batcher, ctx, tel)
+                spawn_worker(i, move || make(i), Arc::clone(&variant), 0, cfg.batcher, ctx, tel)
             })
             .collect();
-        let cache = cfg
-            .cache
-            .enabled
-            .then(|| Arc::new(ResponseCache::new(cfg.cache.capacity, Arc::clone(&hub))));
+        let cache =
+            cfg.cache.enabled.then(|| Arc::new(ResponseCache::new(cfg.cache, Arc::clone(&hub))));
+        let tenancy = (!cfg.tenancy.is_empty()).then(|| {
+            Arc::new(TenancyController::new(
+                cfg.tenancy.clone(),
+                &hub,
+                cfg.workers * cfg.queue_capacity,
+            ))
+        });
         ServingPool {
             workers: RwLock::new(Workers { list, next_id: cfg.workers }),
             make,
@@ -327,6 +413,7 @@ impl ServingPool {
             hub,
             cache,
             steal_registry,
+            tenancy,
             capacity: cfg.queue_capacity,
             batcher: cfg.batcher,
             dispatch: cfg.dispatch,
@@ -396,19 +483,91 @@ impl ServingPool {
     /// Submit a request on the normal lane. Accepts anything convertible
     /// into the shared input handle — a `Vec<f32>` (converted once, no
     /// copy) or an already-shared `Arc<[f32]>` (pointer clone).
+    #[deprecated(note = "use `submit_with(Submission::new(input))`")]
     pub fn submit(&self, input: impl Into<Arc<[f32]>>) -> Result<Receiver<Response>, Rejected> {
-        self.submit_lane(input, Lane::Normal)
+        self.submit_with(Submission::new(input))
     }
 
     /// Submit a latency-critical request: rides the per-worker
     /// high-priority queue, which the batcher drains before the normal
     /// lane. Admission control is shared with the normal lane (the
     /// bounded queue protects the worker, not the lane).
+    #[deprecated(note = "use `submit_with(Submission::new(input).lane(Lane::High))`")]
     pub fn submit_priority(
         &self,
         input: impl Into<Arc<[f32]>>,
     ) -> Result<Receiver<Response>, Rejected> {
-        self.submit_lane(input, Lane::High)
+        self.submit_with(Submission::new(input).lane(Lane::High))
+    }
+
+    /// Submit on an explicit lane.
+    #[deprecated(note = "use `submit_with(Submission::new(input).lane(lane))`")]
+    pub fn submit_lane(
+        &self,
+        input: impl Into<Arc<[f32]>>,
+        lane: Lane,
+    ) -> Result<Receiver<Response>, Rejected> {
+        self.submit_with(Submission::new(input).lane(lane))
+    }
+
+    /// The unified front door: admit one [`Submission`].
+    ///
+    /// Tenancy admission happens first, **before** any queue or cache
+    /// is touched: a tagged submission whose class is out of bucket
+    /// tokens (fresh) or retry budget (retry), or whose bulkhead is at
+    /// its reservation-adjusted cap, is rejected here — overload from
+    /// one tenant is absorbed at the door instead of melting the shared
+    /// queues. Exactly one per-tenant hub counter is bumped per call at
+    /// its final outcome (`admitted` / `retry_spent` / `rejected`), so
+    /// per tenant `admitted + retry_spent + rejected == offered`.
+    ///
+    /// Routing, caching, and backpressure semantics are unchanged from
+    /// the old triad: see [`ServingPool::submit_inner`].
+    pub fn submit_with(&self, sub: Submission) -> Result<Receiver<Response>, Rejected> {
+        let tel_lane = sub.tenant.as_deref().map(|t| self.hub.tenant(t));
+        let class = match (&self.tenancy, sub.tenant.as_deref()) {
+            (Some(ctl), Some(tenant)) => {
+                let class = ctl.class(tenant);
+                if let Some(class) = class {
+                    let paid = if sub.retry {
+                        class.retry_budget().try_spend()
+                    } else {
+                        class.bucket().try_take(ctl.now_micros())
+                    };
+                    if !paid {
+                        if let Some(t) = &tel_lane {
+                            t.record_rejected();
+                        }
+                        return Err(Rejected {
+                            worker: None,
+                            queue_depth: 0,
+                            capacity: self.capacity,
+                        });
+                    }
+                }
+                class
+            }
+            _ => None,
+        };
+        let retry = sub.retry;
+        let out = self.submit_inner(sub, tel_lane.clone(), class);
+        match (&out, &tel_lane) {
+            (Ok(_), Some(t)) => {
+                if retry {
+                    t.record_retry_spent();
+                } else {
+                    t.record_admitted();
+                    if let Some(class) = class {
+                        class.retry_budget().earn();
+                    }
+                }
+            }
+            (Err(_), Some(t)) => t.record_rejected(),
+            // An untagged submission has no class (tenancy keys on the
+            // tenant id), so there is nothing to account.
+            _ => {}
+        }
+        out
     }
 
     /// Routes by the dispatch policy; rejects with a typed [`Rejected`]
@@ -418,16 +577,40 @@ impl ServingPool {
     /// channel) is excluded from further picks instead of blackholing
     /// the pool.
     ///
-    /// The input becomes a shared immutable buffer here, once; every
-    /// later movement — into a worker queue, back out of a dead worker's
-    /// channel, across a steal migration — clones the `Arc`, never the
-    /// rows.
-    pub fn submit_lane(
+    /// The input becomes a shared immutable buffer at [`Submission`]
+    /// construction, once; every later movement — into a worker queue,
+    /// back out of a dead worker's channel, across a steal migration —
+    /// clones the `Arc`, never the rows.
+    ///
+    /// This is the *pre-paid* path: the caller (either
+    /// [`ServingPool::submit_with`] or the shard router's front door)
+    /// has already charged the tenant's token bucket / retry budget and
+    /// owns the per-tenant outcome accounting. The class's **bulkhead**
+    /// is acquired here — worker-capacity reservations guard the local
+    /// queues specifically, so peer-routed submissions never pay them.
+    pub(crate) fn submit_inner(
         &self,
-        input: impl Into<Arc<[f32]>>,
-        lane: Lane,
+        sub: Submission,
+        tel_lane: Option<Arc<TenantTelemetry>>,
+        class: Option<&ClassState>,
     ) -> Result<Receiver<Response>, Rejected> {
-        let mut input: Arc<[f32]> = input.into();
+        let Submission { input, lane, bypass_cache, .. } = sub;
+        let mut input: Arc<[f32]> = input;
+        // Bulkhead before anything shared: the class's reservation-
+        // adjusted cap on concurrently-held local slots. Acquired even
+        // for submissions the cache will absorb — a hit returns before
+        // any queue is touched and the permit's Drop releases the slot
+        // immediately, so the conservative pre-acquire costs two atomic
+        // RMWs, never capacity.
+        let mut permit = match class {
+            Some(class) => {
+                if !class.bulkhead().try_acquire() {
+                    return Err(Rejected { worker: None, queue_depth: 0, capacity: self.capacity });
+                }
+                TenantPermit::new(tel_lane, Some(Arc::clone(class.bulkhead())))
+            }
+            None => TenantPermit::new(tel_lane, None),
+        };
         // Cache consultation precedes dispatch entirely: a hit answers
         // without touching any queue, a join parks on the in-flight
         // leader. Priority requests never join (the lane/cache invariant
@@ -436,12 +619,14 @@ impl ServingPool {
         // lock switches bump the generation under — so a post-switch
         // submission can never carry a pre-switch key.
         let mut cache_slot = None;
-        if let Some(cache) = &self.cache {
-            let (variant, generation) = self.gate.current();
-            match cache.lookup(&input, &variant, generation, lane == Lane::Normal) {
-                CacheOutcome::Hit(rx) | CacheOutcome::Joined(rx) => return Ok(rx),
-                CacheOutcome::Lead(slot) => cache_slot = Some(slot),
-                CacheOutcome::Bypass => {}
+        if !bypass_cache {
+            if let Some(cache) = &self.cache {
+                let (variant, generation) = self.gate.current();
+                match cache.lookup(&input, &variant, generation, lane == Lane::Normal) {
+                    CacheOutcome::Hit(rx) | CacheOutcome::Joined(rx) => return Ok(rx),
+                    CacheOutcome::Lead(slot) => cache_slot = Some(slot),
+                    CacheOutcome::Bypass => {}
+                }
             }
         }
         let guard = read_or_recover(&self.workers);
@@ -516,6 +701,7 @@ impl ServingPool {
                 lane,
                 resp: tx,
                 cache: cache_slot.take(),
+                tenant: permit,
             };
             match worker.tx.send(Msg::Infer(req)) {
                 Ok(()) => return Ok(rx),
@@ -535,6 +721,7 @@ impl ServingPool {
                         Msg::Infer(r) => {
                             input = r.input;
                             cache_slot = r.cache;
+                            permit = r.tenant;
                         }
                         _ => unreachable!("send failed on the message we just built"),
                     }
@@ -591,9 +778,14 @@ impl ServingPool {
         let (ack_tx, ack_rx) = channel();
         let mut pending = 0usize;
         {
+            // Intern once per broadcast: every worker (and through it,
+            // every per-response variant stamp until the next switch)
+            // shares this one allocation.
+            let interned: Arc<str> = Arc::from(variant);
             let guard = read_or_recover(&self.workers);
             for w in &guard.list {
-                let msg = Msg::Switch { variant: variant.to_string(), generation, ack: ack_tx.clone() };
+                let msg =
+                    Msg::Switch { variant: Arc::clone(&interned), generation, ack: ack_tx.clone() };
                 if w.tx.send(msg).is_ok() {
                     pending += 1;
                 }
@@ -657,7 +849,6 @@ impl ServingPool {
                 // switches never hold the gate lock while taking
                 // workers.read, so there is no cycle.
                 let (variant, generation) = self.gate.current();
-                let variant = variant.to_string();
                 while guard.list.len() < target {
                     let id = guard.next_id;
                     guard.next_id += 1;
@@ -696,6 +887,24 @@ impl ServingPool {
         len
     }
 
+    /// One maintenance tick against a telemetry snapshot: actuate the
+    /// tenancy arm (resync bulkhead caps to the live worker set, AIMD
+    /// the per-class bucket rates against measured occupancy — see
+    /// [`TenancyController::actuate`]). The optimizer's adaptation loop
+    /// calls this from `set_workers`/`tick_with_telemetry`; a no-op for
+    /// pools without tenancy classes.
+    pub fn maintain(&self, tel: &TelemetrySnapshot) {
+        if let Some(ctl) = &self.tenancy {
+            ctl.actuate(tel);
+        }
+    }
+
+    /// The tenancy controller, when configured — shared with the shard
+    /// router so both front doors charge the same per-class budgets.
+    pub(crate) fn tenancy(&self) -> Option<&Arc<TenancyController>> {
+        self.tenancy.as_ref()
+    }
+
     /// Stop every worker, draining in-flight requests, and return the
     /// lifetime statistics (retired workers included).
     pub fn shutdown(self) -> PoolStats {
@@ -723,6 +932,14 @@ mod tests {
     use super::*;
     use crate::coordinator::server::testing::MockExec;
 
+    /// Normal-lane submission shorthand (the old `pool.submit(..)`).
+    fn submit(
+        pool: &ServingPool,
+        input: impl Into<Arc<[f32]>>,
+    ) -> Result<Receiver<Response>, Rejected> {
+        pool.submit_with(Submission::new(input))
+    }
+
     fn quad(delay_us: u64, capacity: usize) -> ServingPool {
         ServingPool::spawn(
             move |_| {
@@ -748,7 +965,7 @@ mod tests {
         for i in 0..64 {
             let mut input = vec![0.0f32; 16];
             input[i % 4] = 3.0;
-            rxs.push((i % 4, pool.submit(input).unwrap()));
+            rxs.push((i % 4, submit(&pool, input).unwrap()));
         }
         let mut seen_workers = std::collections::HashSet::new();
         for (want, rx) in rxs {
@@ -772,11 +989,11 @@ mod tests {
         // Every worker acked, so every subsequent response is post-switch.
         let mut rxs = Vec::new();
         for _ in 0..32 {
-            rxs.push(pool.submit(vec![1.0; 16]).unwrap());
+            rxs.push(submit(&pool, vec![1.0; 16]).unwrap());
         }
         for rx in rxs {
             let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
-            assert_eq!(r.variant, "w");
+            assert_eq!(&*r.variant, "w");
             assert_eq!(r.generation, 1);
         }
         let stats = pool.shutdown();
@@ -791,7 +1008,7 @@ mod tests {
         let mut oks = Vec::new();
         let mut rejected = 0usize;
         for _ in 0..64 {
-            match pool.submit(vec![1.0; 16]) {
+            match submit(&pool, vec![1.0; 16]) {
                 Ok(rx) => oks.push(rx),
                 Err(r) => {
                     assert_eq!(r.capacity, 2);
@@ -823,7 +1040,7 @@ mod tests {
                 ..PoolConfig::default()
             },
         );
-        let rxs: Vec<_> = (0..16).map(|_| pool.submit(vec![1.0; 16]).unwrap()).collect();
+        let rxs: Vec<_> = (0..16).map(|_| submit(&pool, vec![1.0; 16]).unwrap()).collect();
         let stats = pool.shutdown();
         assert_eq!(stats.served(), 16);
         for rx in rxs {
@@ -844,7 +1061,7 @@ mod tests {
             },
         );
         assert_eq!(pool.num_workers(), 1);
-        let rx = pool.submit(vec![1.0; 16]).unwrap();
+        let rx = submit(&pool, vec![1.0; 16]).unwrap();
         rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(pool.shutdown().served(), 1);
     }
@@ -881,12 +1098,12 @@ mod tests {
         // from workers spawned after the switch.
         let mut rxs = Vec::new();
         for _ in 0..96 {
-            rxs.push(pool.submit(vec![1.0; 16]).unwrap());
+            rxs.push(submit(&pool, vec![1.0; 16]).unwrap());
         }
         let mut seen = std::collections::HashSet::new();
         for rx in rxs {
             let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
-            assert_eq!(r.variant, "w2");
+            assert_eq!(&*r.variant, "w2");
             assert_eq!(r.generation, 1);
             seen.insert(r.worker);
         }
@@ -901,7 +1118,7 @@ mod tests {
         let pool = quad(200, 1024);
         let mut rxs = Vec::new();
         for _ in 0..32 {
-            rxs.push(pool.submit(vec![1.0; 16]).unwrap());
+            rxs.push(submit(&pool, vec![1.0; 16]).unwrap());
         }
         for rx in rxs {
             rx.recv_timeout(Duration::from_secs(5)).unwrap();
@@ -909,7 +1126,7 @@ mod tests {
         assert_eq!(pool.set_workers(1), 1);
         assert_eq!(pool.num_workers(), 1);
         // The shrunken pool still serves.
-        let rx = pool.submit(vec![1.0; 16]).unwrap();
+        let rx = submit(&pool, vec![1.0; 16]).unwrap();
         rx.recv_timeout(Duration::from_secs(5)).unwrap();
         let stats = pool.shutdown();
         assert_eq!(stats.served(), 33, "retired workers' serves must stay in the totals");
@@ -920,7 +1137,7 @@ mod tests {
     fn set_workers_clamps_to_one() {
         let pool = quad(200, 64);
         assert_eq!(pool.set_workers(0), 1);
-        let rx = pool.submit(vec![1.0; 16]).unwrap();
+        let rx = submit(&pool, vec![1.0; 16]).unwrap();
         rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(pool.shutdown().served(), 1);
     }
@@ -939,7 +1156,7 @@ mod tests {
                 ..PoolConfig::default()
             },
         );
-        let rxs: Vec<_> = (0..24).map(|_| pool.submit(vec![1.0; 16]).unwrap()).collect();
+        let rxs: Vec<_> = (0..24).map(|_| submit(&pool, vec![1.0; 16]).unwrap()).collect();
         pool.set_workers(1);
         // Everything parked on the three retired workers was force-drained;
         // whatever landed on the surviving worker is drained at shutdown.
@@ -964,8 +1181,8 @@ mod tests {
                 ..PoolConfig::default()
             },
         );
-        let rx_n = pool.submit(vec![1.0; 16]).unwrap();
-        let rx_p = pool.submit_priority(vec![1.0; 16]).unwrap();
+        let rx_n = submit(&pool, vec![1.0; 16]).unwrap();
+        let rx_p = pool.submit_with(Submission::new(vec![1.0f32; 16]).lane(Lane::High)).unwrap();
         assert_eq!(rx_n.recv_timeout(Duration::from_secs(5)).unwrap().lane, Lane::Normal);
         assert_eq!(rx_p.recv_timeout(Duration::from_secs(5)).unwrap().lane, Lane::High);
         let tel = pool.telemetry_snapshot();
@@ -1017,8 +1234,8 @@ mod tests {
         // Fill the surviving worker to capacity: dispatch prefers the
         // dead worker's depth-0 queue, fails the send, and routes around.
         let rxs: Vec<_> =
-            (0..2).map(|_| pool.submit(vec![1.0; 16]).expect("live worker has room")).collect();
-        let err = pool.submit(vec![1.0; 16]).expect_err("pool is saturated");
+            (0..2).map(|_| submit(&pool, vec![1.0; 16]).expect("live worker has room")).collect();
+        let err = submit(&pool, vec![1.0; 16]).expect_err("pool is saturated");
         assert_eq!(err.worker, None, "pool-wide rejection");
         assert!(err.queue_depth >= 2, "the observed depth is the live worker's, got {err:?}");
         let stats = pool.stats();
@@ -1063,10 +1280,10 @@ mod tests {
         let current = pool.current_variant();
         let expect = if gen_a > gen_b { "x" } else { "y" };
         assert_eq!(current, expect);
-        let rxs: Vec<_> = (0..16).map(|_| pool.submit(vec![1.0; 16]).unwrap()).collect();
+        let rxs: Vec<_> = (0..16).map(|_| submit(&pool, vec![1.0; 16]).unwrap()).collect();
         for rx in rxs {
             let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
-            assert_eq!(r.variant, current, "stale variant served after both switches returned");
+            assert_eq!(&*r.variant, current.as_str(), "stale variant after both switches");
             assert_eq!(r.generation, 2);
         }
         let pool = Arc::try_unwrap(pool).unwrap_or_else(|_| panic!("pool still shared"));
@@ -1087,7 +1304,7 @@ mod tests {
                 workers: 1,
                 queue_capacity: 256,
                 batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) },
-                cache: CacheConfig { enabled: true, capacity: 64 },
+                cache: CacheConfig { enabled: true, capacity: 64, ..CacheConfig::default() },
                 ..PoolConfig::default()
             },
         )
@@ -1102,15 +1319,13 @@ mod tests {
     #[test]
     fn cache_hit_answers_identical_input_without_reinference() {
         let pool = cached(300);
-        let r1 = pool
-            .submit(probe_input())
+        let r1 = submit(&pool, probe_input())
             .unwrap()
             .recv_timeout(Duration::from_secs(5))
             .unwrap();
         // The leader completes its cache entry *before* answering, so a
         // resubmission after recv deterministically hits.
-        let r2 = pool
-            .submit(probe_input())
+        let r2 = submit(&pool, probe_input())
             .unwrap()
             .recv_timeout(Duration::from_secs(5))
             .unwrap();
@@ -1130,8 +1345,8 @@ mod tests {
     #[test]
     fn single_flight_coalesces_identical_inflight_requests() {
         let pool = cached(50_000);
-        let lead = pool.submit(probe_input()).unwrap();
-        let waiters: Vec<_> = (0..4).map(|_| pool.submit(probe_input()).unwrap()).collect();
+        let lead = submit(&pool, probe_input()).unwrap();
+        let waiters: Vec<_> = (0..4).map(|_| submit(&pool, probe_input()).unwrap()).collect();
         let r0 = lead.recv_timeout(Duration::from_secs(10)).unwrap();
         for w in waiters {
             let r = w.recv_timeout(Duration::from_secs(10)).unwrap();
@@ -1151,8 +1366,7 @@ mod tests {
                 ..PoolConfig::default()
             },
         );
-        let ru = plain
-            .submit(probe_input())
+        let ru = submit(&plain, probe_input())
             .unwrap()
             .recv_timeout(Duration::from_secs(5))
             .unwrap();
@@ -1171,21 +1385,19 @@ mod tests {
     #[test]
     fn variant_switch_invalidates_cache_across_generations() {
         let pool = cached(300);
-        let r1 = pool
-            .submit(probe_input())
+        let r1 = submit(&pool, probe_input())
             .unwrap()
             .recv_timeout(Duration::from_secs(5))
             .unwrap();
-        assert_eq!((r1.variant.as_str(), r1.generation), ("v", 0));
+        assert_eq!((&*r1.variant, r1.generation), ("v", 0));
         // Warm hit under the old generation.
-        pool.submit(probe_input()).unwrap().recv_timeout(Duration::from_secs(5)).unwrap();
+        submit(&pool, probe_input()).unwrap().recv_timeout(Duration::from_secs(5)).unwrap();
         let gen = pool.switch_variant("w");
-        let r2 = pool
-            .submit(probe_input())
+        let r2 = submit(&pool, probe_input())
             .unwrap()
             .recv_timeout(Duration::from_secs(5))
             .unwrap();
-        assert_eq!(r2.variant, "w", "post-switch submission must not see the cached 'v' answer");
+        assert_eq!(&*r2.variant, "w", "post-switch submission must not see the cached 'v' answer");
         assert_eq!(r2.generation, gen);
         let snap = pool.telemetry_snapshot();
         assert_eq!(snap.cache_hits, 1, "only the pre-switch resubmission hit");
@@ -1200,11 +1412,11 @@ mod tests {
     #[test]
     fn switch_mid_flight_does_not_coalesce_across_generations() {
         let pool = cached(50_000);
-        let lead = pool.submit(probe_input()).unwrap();
+        let lead = submit(&pool, probe_input()).unwrap();
         let gen = pool.switch_variant("w"); // acked once the in-flight batch finishes
-        let post = pool.submit(probe_input()).unwrap();
+        let post = submit(&pool, probe_input()).unwrap();
         let r_post = post.recv_timeout(Duration::from_secs(10)).unwrap();
-        assert_eq!(r_post.variant, "w");
+        assert_eq!(&*r_post.variant, "w");
         assert_eq!(r_post.generation, gen);
         lead.recv_timeout(Duration::from_secs(10)).unwrap();
         let snap = pool.telemetry_snapshot();
@@ -1220,8 +1432,8 @@ mod tests {
     #[test]
     fn priority_never_waits_on_inflight_normal_but_takes_hits() {
         let pool = cached(50_000);
-        let lead = pool.submit(probe_input()).unwrap();
-        let prio = pool.submit_priority(probe_input()).unwrap();
+        let lead = submit(&pool, probe_input()).unwrap();
+        let prio = pool.submit_with(Submission::new(probe_input()).lane(Lane::High)).unwrap();
         let r_lead = lead.recv_timeout(Duration::from_secs(10)).unwrap();
         let r_prio = prio.recv_timeout(Duration::from_secs(10)).unwrap();
         assert_ne!(r_prio.id, r_lead.id, "priority ran its own inference");
@@ -1230,7 +1442,7 @@ mod tests {
         assert_eq!(snap.cache_inflight_coalesced, 0, "priority must not join a flight");
         // A *completed* entry is a different story: hits are allowed.
         let hit = pool
-            .submit_priority(probe_input())
+            .submit_with(Submission::new(probe_input()).lane(Lane::High))
             .unwrap()
             .recv_timeout(Duration::from_secs(5))
             .unwrap();
@@ -1257,6 +1469,7 @@ mod tests {
             lane: Lane::Normal,
             resp,
             cache: None,
+            tenant: TenantPermit::untracked(),
         };
         let err = tx.send(Msg::Infer(req)).unwrap_err();
         let Msg::Infer(r) = err.0 else { panic!("send failed on the message we just built") };
@@ -1266,7 +1479,7 @@ mod tests {
     #[test]
     fn live_stats_match_shutdown_stats() {
         let pool = quad(200, 1024);
-        let rxs: Vec<_> = (0..16).map(|_| pool.submit(vec![1.0; 16]).unwrap()).collect();
+        let rxs: Vec<_> = (0..16).map(|_| submit(&pool, vec![1.0; 16]).unwrap()).collect();
         for rx in rxs {
             rx.recv_timeout(Duration::from_secs(5)).unwrap();
         }
@@ -1276,5 +1489,155 @@ mod tests {
         assert_eq!(tel.served, 16);
         assert_eq!(tel.live_workers, 4);
         assert_eq!(pool.shutdown().served(), 16);
+    }
+
+    // ── deprecated wrappers ────────────────────────────────────────────
+
+    /// The old triad must keep compiling and behave identically to the
+    /// `submit_with` spellings it now delegates to.
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_triad_behaves_like_submit_with() {
+        let pool = quad(200, 1024);
+        let a = pool.submit(vec![1.0; 16]).unwrap();
+        let b = pool.submit_priority(vec![1.0; 16]).unwrap();
+        let c = pool.submit_lane(vec![1.0; 16], Lane::High).unwrap();
+        assert_eq!(a.recv_timeout(Duration::from_secs(5)).unwrap().lane, Lane::Normal);
+        assert_eq!(b.recv_timeout(Duration::from_secs(5)).unwrap().lane, Lane::High);
+        assert_eq!(c.recv_timeout(Duration::from_secs(5)).unwrap().lane, Lane::High);
+        assert_eq!(pool.shutdown().served(), 3);
+    }
+
+    // ── tenancy front door (see `coordinator::tenancy`) ────────────────
+
+    use crate::coordinator::tenancy::ClassConfig;
+
+    fn tenant_pool(classes: Vec<ClassConfig>) -> ServingPool {
+        ServingPool::spawn(
+            |_| Box::new(MockExec::quick()) as Box<dyn Executor>,
+            "v",
+            PoolConfig {
+                workers: 2,
+                queue_capacity: 64,
+                batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+                tenancy: TenancyConfig { classes },
+                ..PoolConfig::default()
+            },
+        )
+    }
+
+    /// A governed tenant's bucket bounds its admissions; every outcome
+    /// lands on exactly one per-tenant counter, so conservation holds.
+    #[test]
+    fn tenant_bucket_rejects_over_budget_and_conserves_counts() {
+        let pool = tenant_pool(vec![ClassConfig {
+            tenant: "t0".into(),
+            rate_hz: 0.0001, // effectively no refill within the test
+            burst: 4,
+            ..ClassConfig::default()
+        }]);
+        let mut rxs = Vec::new();
+        let mut rejected = 0usize;
+        for _ in 0..10 {
+            match pool.submit_with(Submission::new(vec![1.0; 16]).tenant("t0")) {
+                Ok(rx) => rxs.push(rx),
+                Err(_) => rejected += 1,
+            }
+        }
+        assert_eq!(rxs.len(), 4, "burst admits exactly the bucket depth");
+        assert_eq!(rejected, 6);
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        }
+        let snap = pool.telemetry_snapshot();
+        let t0 = &snap.per_tenant["t0"];
+        assert_eq!((t0.admitted, t0.rejected, t0.retry_spent), (4, 6, 0));
+        assert_eq!(t0.admitted + t0.rejected + t0.retry_spent, 10, "conservation");
+        // An unmanaged tenant is accounted but never throttled.
+        for _ in 0..10 {
+            pool.submit_with(Submission::new(vec![1.0; 16]).tenant("free")).unwrap();
+        }
+        let snap = pool.telemetry_snapshot();
+        assert_eq!(snap.per_tenant["free"].admitted, 10);
+        pool.shutdown();
+    }
+
+    /// Retries draw from the earned retry budget, not the fresh bucket:
+    /// with `retry_frac = 0.5` and 8 fresh admits, at most
+    /// `4 + burst` retries can ever pass.
+    #[test]
+    fn tenant_retries_are_budgeted_as_fraction_of_fresh() {
+        let pool = tenant_pool(vec![ClassConfig {
+            tenant: "t0".into(),
+            rate_hz: 0.0001,
+            burst: 8,
+            retry_frac: 0.5,
+            ..ClassConfig::default()
+        }]);
+        for _ in 0..8 {
+            pool.submit_with(Submission::new(vec![1.0; 16]).tenant("t0")).unwrap();
+        }
+        let mut retried = 0usize;
+        for _ in 0..32 {
+            if pool.submit_with(Submission::new(vec![1.0; 16]).tenant("t0").retry()).is_ok() {
+                retried += 1;
+            }
+        }
+        // 8 fresh admits × 0.5 earn 4 tokens; the budget starts empty
+        // (burst only caps accrual), so exactly 4 retries pass.
+        assert_eq!(retried, 4);
+        let snap = pool.telemetry_snapshot();
+        let t0 = &snap.per_tenant["t0"];
+        assert_eq!(t0.admitted, 8);
+        assert_eq!(t0.retry_spent, 4);
+        assert_eq!(t0.rejected, 28);
+        assert!(t0.retry_spent as f64 <= 0.5 * t0.admitted as f64 + 8.0, "budget bound");
+        pool.shutdown();
+    }
+
+    /// The bulkhead caps *concurrently held* local slots; waiting for
+    /// answers releases them, so the same tenant can keep flowing.
+    #[test]
+    fn tenant_bulkhead_releases_slots_when_requests_complete() {
+        let pool = tenant_pool(vec![ClassConfig {
+            tenant: "t0".into(),
+            rate_hz: 1_000_000.0,
+            burst: 1024,
+            reserve_frac: 0.02, // 2% of 128 slots → ceil = 3 reserved, cap = full
+            ..ClassConfig::default()
+        }]);
+        // Sequential round trips: each permit is dropped (slot released)
+        // when the worker answers, so far more requests than the cap
+        // pass over time.
+        for _ in 0..32 {
+            let rx = pool.submit_with(Submission::new(vec![1.0; 16]).tenant("t0")).unwrap();
+            rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        }
+        let snap = pool.telemetry_snapshot();
+        assert_eq!(snap.per_tenant["t0"].admitted, 32);
+        assert_eq!(pool.shutdown().served(), 32);
+    }
+
+    /// `maintain()` is the tenancy arm's actuation point: under measured
+    /// congestion the per-class bucket rate backs off multiplicatively.
+    #[test]
+    fn maintain_actuates_tenancy_backoff() {
+        let pool = tenant_pool(vec![ClassConfig {
+            tenant: "t0".into(),
+            rate_hz: 1000.0,
+            burst: 8,
+            ..ClassConfig::default()
+        }]);
+        let ctl = Arc::clone(pool.tenancy().expect("configured"));
+        let before = ctl.class("t0").unwrap().bucket().rate_hz();
+        let mut tel = pool.telemetry_snapshot();
+        // Fake a congested pool: queues ~94% full.
+        tel.live_workers = 2;
+        tel.queue_capacity = 64;
+        tel.queue_depth = 120;
+        pool.maintain(&tel);
+        let after = ctl.class("t0").unwrap().bucket().rate_hz();
+        assert!(after < before, "congestion must shrink the admission rate: {after} < {before}");
+        pool.shutdown();
     }
 }

@@ -134,7 +134,11 @@ pub struct Response {
     pub id: u64,
     pub pred: usize,
     pub confidence: f32,
-    pub variant: String,
+    /// Variant the response was served under. Interned: every response
+    /// clones the worker's current `Arc<str>` (shared from the switch
+    /// gate's broadcast), so the steady-state serve path allocates no
+    /// per-response string.
+    pub variant: Arc<str>,
     /// Pool-wide variant generation the response was served under. After
     /// a fully-acknowledged [`super::pool::ServingPool::switch_variant`]
     /// returning generation `g`, every subsequently admitted request is
@@ -185,7 +189,7 @@ pub(crate) enum Msg {
     /// generation so the pool can block until the broadcast is complete
     /// (and discount acks that only prove an older concurrent broadcast
     /// landed).
-    Switch { variant: String, generation: u64, ack: Sender<u64> },
+    Switch { variant: Arc<str>, generation: u64, ack: Sender<u64> },
     Shutdown,
 }
 
@@ -284,7 +288,7 @@ pub(crate) struct StealContext {
 pub(crate) fn spawn_worker<F>(
     index: usize,
     make_exec: F,
-    initial_variant: String,
+    initial_variant: Arc<str>,
     initial_generation: u64,
     cfg: BatcherConfig,
     steal: StealContext,
@@ -304,7 +308,7 @@ where
 /// Mutable worker-loop state threaded through message absorption.
 struct WorkerState {
     batcher: Batcher,
-    variant: String,
+    variant: Arc<str>,
     generation: u64,
     tel: Arc<WorkerTelemetry>,
     draining: bool,
@@ -322,7 +326,7 @@ impl WorkerState {
                 // filter the ack waiter applies, via the same predicate.
                 if super::pool::SwitchGate::accepts(generation, self.generation) {
                     self.generation = generation;
-                    if variant != self.variant {
+                    if *variant != *self.variant {
                         self.variant = variant;
                         self.tel.record_switch();
                     }
@@ -358,19 +362,19 @@ impl WorkerState {
 /// per switch instead of cloned + sorted on every batch formation (the
 /// old hot-path cost).
 struct CompiledSizes {
-    variant: String,
+    variant: Arc<str>,
     sorted: Vec<usize>,
 }
 
 impl CompiledSizes {
-    fn for_variant(exec: &dyn Executor, variant: &str) -> CompiledSizes {
+    fn for_variant(exec: &dyn Executor, variant: &Arc<str>) -> CompiledSizes {
         let mut sorted = exec.batch_sizes(variant);
         sorted.sort_unstable();
-        CompiledSizes { variant: variant.to_string(), sorted }
+        CompiledSizes { variant: Arc::clone(variant), sorted }
     }
 
-    fn refresh(&mut self, exec: &dyn Executor, variant: &str) {
-        if self.variant != variant {
+    fn refresh(&mut self, exec: &dyn Executor, variant: &Arc<str>) {
+        if *self.variant != **variant {
             *self = CompiledSizes::for_variant(exec, variant);
         }
     }
@@ -413,7 +417,7 @@ fn worker_main(
     index: usize,
     mut exec: Box<dyn Executor>,
     rx: Receiver<Msg>,
-    initial_variant: String,
+    initial_variant: Arc<str>,
     initial_generation: u64,
     cfg: BatcherConfig,
     steal: StealContext,
@@ -602,11 +606,15 @@ fn run_batch(
                 let latency = now.duration_since(req.enqueued);
                 samples.push((req.lane, latency.as_secs_f64()));
                 st.tel.depth_dec();
+                // End-to-end latency onto the tenant's hub lane; the
+                // permit itself drops at the end of this iteration,
+                // releasing the class's bulkhead slot.
+                req.tenant.observe_latency(latency.as_secs_f64());
                 let resp = Response {
                     id: req.id,
                     pred,
                     confidence: conf,
-                    variant: st.variant.clone(),
+                    variant: Arc::clone(&st.variant),
                     generation: st.generation,
                     worker,
                     lane: req.lane,
@@ -685,7 +693,11 @@ pub(crate) mod testing {
 mod tests {
     use super::testing::MockExec;
     use super::*;
-    use crate::coordinator::pool::{PoolConfig, ServingPool};
+    use crate::coordinator::pool::{PoolConfig, ServingPool, Submission};
+
+    fn submit(pool: &ServingPool, input: Vec<f32>) -> Receiver<Response> {
+        pool.submit_with(Submission::new(input)).unwrap()
+    }
 
     fn single() -> ServingPool {
         ServingPool::spawn(
@@ -705,7 +717,7 @@ mod tests {
         let h = single();
         let mut input = vec![0.0f32; 16];
         input[2] = 5.0;
-        let rx = h.submit(input).unwrap();
+        let rx = submit(&h, input);
         let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(resp.pred, 2);
         assert!(resp.confidence > 0.5);
@@ -731,7 +743,7 @@ mod tests {
         for i in 0..8 {
             let mut input = vec![0.0f32; 16];
             input[i % 4] = 3.0;
-            rxs.push((i % 4, h.submit(input).unwrap()));
+            rxs.push((i % 4, submit(&h, input)));
         }
         for (want, rx) in rxs {
             let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
@@ -755,16 +767,16 @@ mod tests {
                 ..PoolConfig::default()
             },
         );
-        let rx = h.submit(vec![1.0; 16]).unwrap();
+        let rx = submit(&h, vec![1.0; 16]);
         let r1 = rx.recv_timeout(Duration::from_secs(5)).unwrap();
-        assert_eq!(r1.variant, "a");
+        assert_eq!(&*r1.variant, "a");
         assert_eq!(r1.generation, 0);
         // switch_variant blocks until the worker acks: no sleep needed.
         let gen = h.switch_variant("b");
         assert_eq!(gen, 1);
-        let rx = h.submit(vec![1.0; 16]).unwrap();
+        let rx = submit(&h, vec![1.0; 16]);
         let r2 = rx.recv_timeout(Duration::from_secs(5)).unwrap();
-        assert_eq!(r2.variant, "b");
+        assert_eq!(&*r2.variant, "b");
         assert_eq!(r2.generation, gen);
         let stats = h.shutdown();
         assert_eq!(stats.switches(), 1);
@@ -804,10 +816,10 @@ mod tests {
                 ..PoolConfig::default()
             },
         );
-        let rx = h.submit(vec![1.0; 16]).unwrap();
+        let rx = submit(&h, vec![1.0; 16]);
         rx.recv_timeout(Duration::from_secs(5)).unwrap();
         h.switch_variant("missing");
-        let doomed: Vec<_> = (0..4).map(|_| h.submit(vec![1.0; 16]).unwrap()).collect();
+        let doomed: Vec<_> = (0..4).map(|_| submit(&h, vec![1.0; 16])).collect();
         for rx in doomed {
             assert!(
                 rx.recv_timeout(Duration::from_secs(5)).is_err(),
@@ -817,7 +829,7 @@ mod tests {
         // The worker thread survived the episode: a switch back restores
         // service on the very same worker.
         h.switch_variant("good");
-        let rx = h.submit(vec![1.0; 16]).unwrap();
+        let rx = submit(&h, vec![1.0; 16]);
         rx.recv_timeout(Duration::from_secs(5)).expect("worker must still be alive");
         let stats = h.shutdown();
         assert_eq!(stats.served(), 2);

@@ -104,10 +104,11 @@ use crate::sync::{read_or_recover, rwlock_into_inner, write_or_recover, Arc, RwL
 use anyhow::Result;
 
 use super::batcher::BatcherConfig;
-use super::pool::{PoolStats, ServingPool};
+use super::pool::{PoolStats, ServingPool, Submission};
 use super::server::{Executor, Rejected, Response};
+use super::tenancy::ClassState;
 use crate::partition::{OffloadPlan, SharedLink};
-use crate::telemetry::{Lane, TelemetrySnapshot, WorkerTelemetry};
+use crate::telemetry::{Lane, TelemetrySnapshot, TenantTelemetry, WorkerTelemetry};
 
 /// Telemetry worker-id base for remote peer slots: keeps peer ids
 /// disjoint from local worker ids across any realistic number of dynamic
@@ -304,7 +305,7 @@ impl PeerTransport for SimulatedPeer {
 /// One request in flight to a peer link. The input rides as a shared
 /// immutable buffer so losing an admission race (and retrying the next
 /// ranked route) moves a pointer, never rows — see
-/// [`ShardRouter::submit_lane`]'s give-back loop.
+/// [`ShardRouter::submit_with`]'s give-back loop.
 struct InferJob {
     id: u64,
     input: Arc<[f32]>,
@@ -314,13 +315,18 @@ struct InferJob {
     /// runs segments `0..k` on the link thread's local executor, ships
     /// the frontier, and finishes `k..` on the peer.
     cut: usize,
+    /// Tenant hub lane of a tagged submission: the link thread records
+    /// the end-to-end latency there, the same per-tenant view a locally
+    /// served request feeds (budget *enforcement* stays at the router's
+    /// front door — bulkheads reserve local worker capacity only).
+    tenant: Option<Arc<TenantTelemetry>>,
     resp: Sender<Response>,
 }
 
 /// Messages into a peer-link thread.
 enum PeerMsg {
     Infer(InferJob),
-    Switch { variant: String, generation: u64 },
+    Switch { variant: Arc<str>, generation: u64 },
     Shutdown,
 }
 
@@ -686,7 +692,7 @@ pub struct ShardRouter {
     /// submission): which unroutable route the turn starts from. Indexing
     /// the unroutable list by the submission sequence instead would starve
     /// routes whenever the turn cadence and the list length fall into
-    /// lockstep (see `submit_lane`).
+    /// lockstep (see `route`).
     probe_cursor: AtomicUsize,
     /// Measured mean local-worker EWMA from the last `maintain` (f64
     /// bits; 0.0 = unmeasured → `local_prior`).
@@ -755,7 +761,7 @@ impl ShardRouter {
         // the live configuration; a racing switch_variant broadcast is
         // not yet fanned out to this peer (it is not in the list), but the
         // router's own actuate re-broadcasts to every peer present then.
-        let variant = self.pool.current_variant();
+        let variant: Arc<str> = self.pool.current_variant().into();
         let generation = self.pool.generation();
         let (tx, rx) = channel();
         let tel_thread = Arc::clone(&tel);
@@ -874,18 +880,101 @@ impl ShardRouter {
             .count()
     }
 
-    /// Submit on the normal lane.
+    /// Pre-[`Submission`] front door; identical to
+    /// `submit_with(Submission::new(input))`.
+    #[deprecated(note = "use `submit_with(Submission::new(input))`")]
     pub fn submit(&self, input: impl Into<Arc<[f32]>>) -> Result<Receiver<Response>, Rejected> {
-        self.submit_lane(input, Lane::Normal)
+        self.submit_with(Submission::new(input))
     }
 
-    /// Submit on the high-priority lane. Priority requests are routed by
-    /// the same estimates but are never used as degraded-link probes.
+    /// Pre-[`Submission`] front door; identical to
+    /// `submit_with(Submission::new(input).lane(Lane::High))`.
+    #[deprecated(note = "use `submit_with(Submission::new(input).lane(Lane::High))`")]
     pub fn submit_priority(
         &self,
         input: impl Into<Arc<[f32]>>,
     ) -> Result<Receiver<Response>, Rejected> {
-        self.submit_lane(input, Lane::High)
+        self.submit_with(Submission::new(input).lane(Lane::High))
+    }
+
+    /// Pre-[`Submission`] front door; identical to
+    /// `submit_with(Submission::new(input).lane(lane))`.
+    #[deprecated(note = "use `submit_with(Submission::new(input).lane(lane))`")]
+    pub fn submit_lane(
+        &self,
+        input: impl Into<Arc<[f32]>>,
+        lane: Lane,
+    ) -> Result<Receiver<Response>, Rejected> {
+        self.submit_with(Submission::new(input).lane(lane))
+    }
+
+    /// Submit one request, descriptor-style — the router's single front
+    /// door, sharing the [`Submission`] builder (and the tenant
+    /// isolation semantics) with [`ServingPool::submit_with`].
+    ///
+    /// A tagged submission is charged against its tenant class **here**,
+    /// once, before routing: fresh traffic takes a token from the
+    /// class's rate bucket, a retry spends from the retry budget, and a
+    /// submission neither can pay for is rejected without touching any
+    /// route. The class state is *shared with the wrapped pool* (same
+    /// [`super::tenancy::TenancyController`]), so traffic entering
+    /// through the router and traffic entering through the pool directly
+    /// drain the same budgets. Exactly one per-tenant outcome counter —
+    /// admitted, rejected, or retry-spent — is bumped per submission, at
+    /// the final outcome, so per-tenant conservation
+    /// (`admitted + retry_spent + rejected == offered`) holds across
+    /// both front doors.
+    ///
+    /// Bulkhead worker-capacity reservations apply only to the **local**
+    /// route (they reserve local worker slots; a peer's capacity is the
+    /// link's own bounded in-flight window), and peer-served requests
+    /// still record their end-to-end latency on the tenant's hub lane.
+    pub fn submit_with(&self, sub: Submission) -> Result<Receiver<Response>, Rejected> {
+        let tel_lane = sub.tenant_id().map(|t| self.pool.telemetry().tenant(t));
+        let tenancy = self.pool.tenancy();
+        let class = match (tenancy, sub.tenant_id()) {
+            (Some(ctl), Some(tenant)) => {
+                let class = ctl.class(tenant);
+                if let Some(class) = class {
+                    let paid = if sub.retry {
+                        class.retry_budget().try_spend()
+                    } else {
+                        class.bucket().try_take(ctl.now_micros())
+                    };
+                    if !paid {
+                        if let Some(t) = &tel_lane {
+                            t.record_rejected();
+                        }
+                        return Err(Rejected {
+                            worker: None,
+                            queue_depth: 0,
+                            capacity: self.pool.queue_capacity(),
+                        });
+                    }
+                }
+                class
+            }
+            _ => None,
+        };
+        let retry = sub.retry;
+        let out = self.route(sub, tel_lane.clone(), class);
+        match (&out, &tel_lane) {
+            (Ok(_), Some(t)) => {
+                if retry {
+                    t.record_retry_spent();
+                } else {
+                    t.record_admitted();
+                    if let Some(class) = class {
+                        class.retry_budget().earn();
+                    }
+                }
+            }
+            (Err(_), Some(t)) => t.record_rejected(),
+            // An untagged submission has no hub lane (and tenancy keys on
+            // the tenant id), so there is nothing to account.
+            _ => {}
+        }
+        out
     }
 
     /// Route one submission: probe turn → best-estimate *route* (each
@@ -894,12 +983,17 @@ impl ShardRouter {
     /// peer are at capacity. The input is shared, not owned: every
     /// failed admission attempt hands the same `Arc` back for the next
     /// target, so a request that tries three routes before landing still
-    /// copies zero rows.
-    pub fn submit_lane(
+    /// copies zero rows. Tenancy budgets were already charged by
+    /// [`ShardRouter::submit_with`]; this only threads the tenant's hub
+    /// lane (for peer-side latency recording) and class (for the local
+    /// route's bulkhead) through to wherever the request lands.
+    fn route(
         &self,
-        input: impl Into<Arc<[f32]>>,
-        lane: Lane,
+        sub: Submission,
+        tel_lane: Option<Arc<TenantTelemetry>>,
+        class: Option<&ClassState>,
     ) -> Result<Receiver<Response>, Rejected> {
+        let Submission { input, lane, tenant, bypass_cache, retry } = sub;
         // ordering: Relaxed — the sequence only drives probe cadence; no
         // memory is published through it.
         let n = self.seq.fetch_add(1, Ordering::Relaxed);
@@ -912,7 +1006,7 @@ impl ShardRouter {
         // infinite prior, making the exclusion permanent). Full-remote
         // and split routes probe separately: each has its own telemetry
         // lane to refresh. Priority requests never probe.
-        let mut input: Arc<[f32]> = input.into();
+        let mut input: Arc<[f32]> = input;
         if lane == Lane::Normal && self.cfg.probe_every > 0 && n % self.cfg.probe_every == 0 {
             let mut unroutable: Vec<(usize, usize)> = Vec::new();
             for (i, p) in peers.iter().enumerate() {
@@ -954,7 +1048,7 @@ impl ShardRouter {
                 // (the degraded route would wait a full extra cadence).
                 for k in 0..unroutable.len() {
                     let (pi, cut) = unroutable[(start + k) % unroutable.len()];
-                    match self.try_peer(&peers[pi], input, lane, true, cut) {
+                    match self.try_peer(&peers[pi], input, lane, true, cut, &tel_lane) {
                         Ok(rx) => return Ok(rx),
                         Err(give_back) => input = give_back,
                     }
@@ -1027,16 +1121,21 @@ impl ShardRouter {
             if score >= local_score && !local_full {
                 break; // local now beats every remaining (sorted) route
             }
-            match self.try_peer(&peers[pi], input, lane, false, cut) {
+            match self.try_peer(&peers[pi], input, lane, false, cut, &tel_lane) {
                 Ok(rx) => return Ok(rx),
                 Err(give_back) => input = give_back,
             }
         }
 
-        // Local serving (the default and the fallback). A full pool still
-        // goes through submit_lane so the rejection is accounted on the
-        // pool's own telemetry.
-        match self.pool.submit_lane(input, lane) {
+        // Local serving (the default and the fallback), through the
+        // pool's inner admission path: the bulkhead (local worker
+        // capacity reservation) applies here, but no per-tenant outcome
+        // counter is bumped — `submit_with` accounts the final outcome
+        // exactly once, and the budgets were already charged at the
+        // router's front door. A full pool's rejection is still
+        // accounted on the pool's own worker telemetry.
+        let sub = Submission { input, lane, tenant, bypass_cache, retry };
+        match self.pool.submit_inner(sub, tel_lane, class) {
             Ok(rx) => {
                 // ordering: Relaxed — pure event counter, read by stats.
                 self.routed_local.fetch_add(1, Ordering::Relaxed);
@@ -1059,6 +1158,7 @@ impl ShardRouter {
         lane: Lane,
         probe: bool,
         cut: usize,
+        tel_lane: &Option<Arc<TenantTelemetry>>,
     ) -> Result<Receiver<Response>, Arc<[f32]>> {
         let prev = slot.tel.depth_inc();
         if prev >= self.cfg.peer_capacity {
@@ -1069,8 +1169,15 @@ impl ShardRouter {
         // the RMW provides under any ordering.
         let id = REMOTE_ID_BASE + self.next_remote_id.fetch_add(1, Ordering::Relaxed) + 1;
         let (tx, rx) = channel();
-        let msg =
-            PeerMsg::Infer(InferJob { id, input, enqueued: Instant::now(), lane, cut, resp: tx });
+        let msg = PeerMsg::Infer(InferJob {
+            id,
+            input,
+            enqueued: Instant::now(),
+            lane,
+            cut,
+            tenant: tel_lane.clone(),
+            resp: tx,
+        });
         match slot.tx.send(msg) {
             Ok(()) => {
                 // ordering: Relaxed — pure event counters; stats readers
@@ -1109,6 +1216,12 @@ impl ShardRouter {
     /// versa. Fresh link *failures* degrade both routes — a dead link
     /// serves neither. Returns the admitted peer count (full-remote).
     pub fn maintain(&self, tel: &TelemetrySnapshot) -> usize {
+        // Tenant isolation is the fourth control arm riding the same
+        // tick: resync class bulkhead caps to the live local width and
+        // AIMD the per-class admission rates (see
+        // `TenancyController::actuate`) before reconciling routes.
+        self.pool.maintain(tel);
+
         // Local estimate: mean slot EWMA across live local workers.
         let mut sum = 0.0;
         let mut n = 0usize;
@@ -1120,7 +1233,7 @@ impl ShardRouter {
         }
         if n > 0 {
             // ordering: Relaxed — advisory routing scalar (see
-            // `submit_lane`'s local-estimate read).
+            // `route`'s local-estimate read).
             self.local_measured_s.store(f2b(sum / n as f64), Ordering::Relaxed);
         }
 
@@ -1439,10 +1552,13 @@ impl ShardRouter {
     /// generation. Returns the new generation.
     pub fn switch_variant(&self, variant: &str) -> u64 {
         let generation = self.pool.switch_variant(variant);
+        // Interned once per switch; every peer link (and every response
+        // it builds from then on) shares this one allocation.
+        let interned: Arc<str> = Arc::from(variant);
         let peers = read_or_recover(&self.peers);
         // ordering: Acquire — pairs with `kill_peer`'s AcqRel swap.
         for p in peers.iter().filter(|p| !p.dead.load(Ordering::Acquire)) {
-            let _ = p.tx.send(PeerMsg::Switch { variant: variant.to_string(), generation });
+            let _ = p.tx.send(PeerMsg::Switch { variant: Arc::clone(&interned), generation });
         }
         generation
     }
@@ -1550,7 +1666,7 @@ impl PeerCtx {
 /// of full-remote routing.
 fn serve_one(
     ctx: &mut PeerCtx,
-    variant: &str,
+    variant: &Arc<str>,
     generation: u64,
     tel: &WorkerTelemetry,
     job: InferJob,
@@ -1581,12 +1697,15 @@ fn serve_one(
             } else {
                 tel.record_batch(variant, exec_s, &[(job.lane, latency.as_secs_f64())]);
             }
+            if let Some(t) = &job.tenant {
+                t.record_latency(latency.as_secs_f64());
+            }
             tel.depth_dec();
             let _ = job.resp.send(Response {
                 id: job.id,
                 pred,
                 confidence: conf,
-                variant: variant.to_string(),
+                variant: Arc::clone(variant),
                 generation,
                 worker: ctx.worker,
                 lane: job.lane,
@@ -1613,7 +1732,7 @@ fn serve_one(
 /// must see mostly-empty windows to narrow them.
 fn serve_window(
     ctx: &mut PeerCtx,
-    variant: &str,
+    variant: &Arc<str>,
     generation: u64,
     tel: &WorkerTelemetry,
     pending: &mut Vec<InferJob>,
@@ -1671,12 +1790,15 @@ fn serve_window(
                 let (pred, conf) = super::server::argmax_prob(row);
                 let latency = job.enqueued.elapsed() + Duration::from_secs_f64(transfer_s);
                 tel.record_split(variant, exec_s, job.lane, latency.as_secs_f64());
+                if let Some(t) = &job.tenant {
+                    t.record_latency(latency.as_secs_f64());
+                }
                 tel.depth_dec();
                 let _ = job.resp.send(Response {
                     id: job.id,
                     pred,
                     confidence: conf,
-                    variant: variant.to_string(),
+                    variant: Arc::clone(variant),
                     generation,
                     worker: ctx.worker,
                     lane: job.lane,
@@ -1694,7 +1816,7 @@ fn serve_window(
 fn peer_main(
     mut ctx: PeerCtx,
     rx: Receiver<PeerMsg>,
-    mut variant: String,
+    mut variant: Arc<str>,
     mut generation: u64,
     tel: Arc<WorkerTelemetry>,
     window: Arc<FrontierWindow>,
@@ -1805,6 +1927,20 @@ mod tests {
         }
     }
 
+    fn submit(
+        router: &ShardRouter,
+        input: impl Into<Arc<[f32]>>,
+    ) -> Result<Receiver<Response>, Rejected> {
+        router.submit_with(Submission::new(input))
+    }
+
+    fn submit_priority(
+        router: &ShardRouter,
+        input: impl Into<Arc<[f32]>>,
+    ) -> Result<Receiver<Response>, Rejected> {
+        router.submit_with(Submission::new(input).lane(Lane::High))
+    }
+
     /// Two-segment chain (64 → 8 → 4 classes) with per-segment delays —
     /// the streamable counterpart of [`peer_exec`].
     fn seg_exec(
@@ -1896,7 +2032,7 @@ mod tests {
         for i in 0..16 {
             let mut input = vec![0.0f32; 16];
             input[i % 4] = 3.0;
-            rxs.push((i % 4, router.submit(input).unwrap()));
+            rxs.push((i % 4, submit(&router, input).unwrap()));
         }
         let mut remote_served = 0usize;
         for (want, rx) in rxs {
@@ -1927,7 +2063,7 @@ mod tests {
         );
         // ...but the peer is slow (50 ms/request) and admits one at a time.
         router.add_simulated_peer("edge", peer_exec(50_000), SharedLink::new(800.0, 0.1), 0.001);
-        let rxs: Vec<_> = (0..4).map(|_| router.submit(vec![1.0; 16]).unwrap()).collect();
+        let rxs: Vec<_> = (0..4).map(|_| submit(&router, vec![1.0; 16]).unwrap()).collect();
         for rx in rxs {
             rx.recv_timeout(Duration::from_secs(10)).unwrap();
         }
@@ -1990,7 +2126,7 @@ mod tests {
         router.maintain(&snap_with(vec![view(REMOTE_WORKER_BASE, true, 0.500)]));
         assert_eq!(router.admitted_peers(), 0);
 
-        let rxs: Vec<_> = (0..16).map(|_| router.submit(vec![1.0; 16]).unwrap()).collect();
+        let rxs: Vec<_> = (0..16).map(|_| submit(&router, vec![1.0; 16]).unwrap()).collect();
         for rx in rxs {
             rx.recv_timeout(Duration::from_secs(5)).unwrap();
         }
@@ -2003,7 +2139,7 @@ mod tests {
         assert_eq!(stats.routed_local, 12);
 
         // Priority submissions never probe a degraded link.
-        let rx = router.submit_priority(vec![1.0; 16]).unwrap();
+        let rx = submit_priority(&router, vec![1.0; 16]).unwrap();
         assert!(rx.recv_timeout(Duration::from_secs(5)).unwrap().worker < REMOTE_WORKER_BASE);
         router.shutdown();
     }
@@ -2046,7 +2182,7 @@ mod tests {
         // infinite, and nx's split is structurally unroutable — its
         // whole-model MockExec transport cannot resume mid-chain.
         assert_eq!(router.admitted_splits(), 0, "whole-model peers cannot stream a cut");
-        let rxs: Vec<_> = (0..8).map(|_| router.submit(vec![1.0; 16]).unwrap()).collect();
+        let rxs: Vec<_> = (0..8).map(|_| submit(&router, vec![1.0; 16]).unwrap()).collect();
         for rx in rxs {
             rx.recv_timeout(Duration::from_secs(5)).unwrap();
         }
@@ -2105,7 +2241,7 @@ mod tests {
         router.apply_plan(&OffloadPlan::local_only("local", 1, 0.005, 0.1, 1.0), 0.005);
         assert!(router.shard_stats().peers[0].plan_s.is_infinite());
 
-        let rxs: Vec<_> = (0..8).map(|_| router.submit(vec![1.0; 16]).unwrap()).collect();
+        let rxs: Vec<_> = (0..8).map(|_| submit(&router, vec![1.0; 16]).unwrap()).collect();
         for rx in rxs {
             rx.recv_timeout(Duration::from_secs(5)).unwrap();
         }
@@ -2119,7 +2255,7 @@ mod tests {
         let stats = router.shard_stats();
         assert!(stats.peers[0].measured_s > 0.0);
         let before = stats.peers[0].routed;
-        let rxs: Vec<_> = (1..=8).map(|_| router.submit(vec![1.0; 16]).unwrap()).collect();
+        let rxs: Vec<_> = (1..=8).map(|_| submit(&router, vec![1.0; 16]).unwrap()).collect();
         for rx in rxs {
             rx.recv_timeout(Duration::from_secs(5)).unwrap();
         }
@@ -2207,7 +2343,7 @@ mod tests {
         for i in 0..8 {
             let mut input = vec![0.0f32; 64];
             input[i % 4] = 3.0;
-            rxs.push((i % 4, router.submit(input).unwrap()));
+            rxs.push((i % 4, submit(&router, input).unwrap()));
         }
         let mut remote_served = 0usize;
         for (want, rx) in rxs {
@@ -2260,7 +2396,7 @@ mod tests {
         // Give the link thread time to publish min(local=1, transport=2).
         thread::sleep(Duration::from_millis(100));
         assert_eq!(router.admitted_splits(), 0, "whole-model local half must gate the cut out");
-        let rx = router.submit(vec![1.0; 16]).unwrap();
+        let rx = submit(&router, vec![1.0; 16]).unwrap();
         assert!(
             rx.recv_timeout(Duration::from_secs(5)).unwrap().worker < REMOTE_WORKER_BASE,
             "with no routable split the request serves locally"
@@ -2344,12 +2480,12 @@ mod tests {
         router.seed_split(0, 1, 0.001);
         wait_split_routable(&router);
 
-        let rx = router.submit(vec![1.0; 64]).unwrap();
+        let rx = submit(&router, vec![1.0; 64]).unwrap();
         assert!(
             rx.recv_timeout(Duration::from_secs(5)).unwrap().worker >= REMOTE_WORKER_BASE,
             "normal lane streams the cut"
         );
-        let rx = router.submit_priority(vec![1.0; 64]).unwrap();
+        let rx = submit_priority(&router, vec![1.0; 64]).unwrap();
         assert!(
             rx.recv_timeout(Duration::from_secs(5)).unwrap().worker < REMOTE_WORKER_BASE,
             "priority must not ride the split route"
@@ -2366,9 +2502,9 @@ mod tests {
         let gen = router.switch_variant("w2");
         assert_eq!(gen, 1);
         // Channel FIFO: a submission after the switch is served post-switch.
-        let rx = router.submit(vec![1.0; 16]).unwrap();
+        let rx = submit(&router, vec![1.0; 16]).unwrap();
         let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
-        assert_eq!(r.variant, "w2");
+        assert_eq!(&*r.variant, "w2");
         assert_eq!(r.generation, 1);
         let stats = router.shutdown();
         assert_eq!(stats.switches(), 1, "peer slots count the switch like workers do");
@@ -2404,10 +2540,10 @@ mod tests {
         // edge-a — no matter how long traffic ran.
         let mut rxs = Vec::new();
         for _ in 0..8 {
-            rxs.push(router.submit(vec![1.0; 16]).unwrap()); // n ≡ 0: probe turn
-            rxs.push(router.submit(vec![1.0; 16]).unwrap()); // n ≡ 1: local
-            rxs.push(router.submit_priority(vec![1.0; 16]).unwrap()); // n ≡ 2: never probes
-            rxs.push(router.submit(vec![1.0; 16]).unwrap()); // n ≡ 3: local
+            rxs.push(submit(&router, vec![1.0; 16]).unwrap()); // n ≡ 0: probe turn
+            rxs.push(submit(&router, vec![1.0; 16]).unwrap()); // n ≡ 1: local
+            rxs.push(submit_priority(&router, vec![1.0; 16]).unwrap()); // n ≡ 2: never probes
+            rxs.push(submit(&router, vec![1.0; 16]).unwrap()); // n ≡ 3: local
         }
         for rx in rxs {
             rx.recv_timeout(Duration::from_secs(5)).unwrap();
@@ -2453,7 +2589,7 @@ mod tests {
         let mut rxs = Vec::new();
         let mut burst = |rxs: &mut Vec<_>| {
             for _ in 0..4 {
-                rxs.push(router.submit(vec![1.0; 16]).unwrap());
+                rxs.push(submit(&router, vec![1.0; 16]).unwrap());
             }
         };
         burst(&mut rxs); // probe turn 1 (cursor 0) → edge-a, in flight for 1.5 s
@@ -2507,7 +2643,7 @@ mod tests {
                     let b = Arc::clone(&barrier);
                     thread::spawn(move || {
                         b.wait();
-                        let rx = r.submit(vec![1.0; 16]).unwrap();
+                        let rx = submit(&r, vec![1.0; 16]).unwrap();
                         rx.recv_timeout(Duration::from_secs(5)).unwrap()
                     })
                 })
@@ -2595,7 +2731,7 @@ mod tests {
                 v
             })
             .collect();
-        let rxs: Vec<_> = inputs.iter().map(|v| router.submit(v.clone()).unwrap()).collect();
+        let rxs: Vec<_> = inputs.iter().map(|v| submit(&router, v.clone()).unwrap()).collect();
         let mut reference = seg_exec(100, 100)();
         for (input, rx) in inputs.iter().zip(rxs) {
             let r = rx.recv_timeout(Duration::from_secs(10)).unwrap();
@@ -2710,7 +2846,7 @@ mod tests {
         // must include the analytic transfer cost.
         let router = ShardRouter::new(local_pool(1, 100, 64), ShardRouterConfig::default());
         router.add_simulated_peer("edge", peer_exec(0), SharedLink::new(1.0, 0.0), 0.0001);
-        let rx = router.submit(vec![1.0; 16]).unwrap();
+        let rx = submit(&router, vec![1.0; 16]).unwrap();
         let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert!(r.worker >= REMOTE_WORKER_BASE);
         assert!(
@@ -2738,7 +2874,7 @@ mod tests {
         router.add_simulated_peer("edge", peer_exec(3_000), SharedLink::new(800.0, 0.1), 0.0001);
         let mut rxs = Vec::new();
         for _ in 0..12 {
-            rxs.push(router.submit(vec![1.0f32; 16]).unwrap());
+            rxs.push(submit(&router, vec![1.0f32; 16]).unwrap());
         }
         assert!(router.kill_peer(0), "first kill reports the transition");
         assert!(!router.kill_peer(0), "second kill is a no-op");
@@ -2755,7 +2891,7 @@ mod tests {
         let routed_before = stats.peers[0].routed;
         let mut rxs = Vec::new();
         for _ in 0..24 {
-            rxs.push(router.submit(vec![1.0f32; 16]).unwrap());
+            rxs.push(submit(&router, vec![1.0f32; 16]).unwrap());
         }
         for rx in rxs {
             rx.recv_timeout(Duration::from_secs(5)).unwrap();
@@ -2766,6 +2902,85 @@ mod tests {
         // healthy-looking final EWMA in the snapshot.
         router.maintain(&snap_with(vec![view(REMOTE_WORKER_BASE, true, 0.001)]));
         assert_eq!(router.admitted_peers(), 0, "maintain re-admitted a dead peer");
+        router.shutdown();
+    }
+
+    fn tenant_router(classes: Vec<crate::coordinator::tenancy::ClassConfig>) -> ShardRouter {
+        let pool = ServingPool::spawn(
+            move |_| {
+                Box::new(MockExec { delay: Duration::from_micros(50), ..MockExec::quick() })
+                    as Box<dyn Executor>
+            },
+            "v",
+            PoolConfig {
+                workers: 2,
+                queue_capacity: 64,
+                tenancy: crate::coordinator::tenancy::TenancyConfig { classes },
+                ..PoolConfig::default()
+            },
+        );
+        ShardRouter::new(pool, ShardRouterConfig::default())
+    }
+
+    /// The router's front door charges the *same* per-class budgets as
+    /// the wrapped pool's (one shared `TenancyController`), bumps
+    /// exactly one outcome counter per submission, and conservation
+    /// (`admitted + retry_spent + rejected == offered`) holds on the
+    /// tenant's hub lane.
+    #[test]
+    fn router_charges_shared_tenant_budgets_and_conserves() {
+        use crate::coordinator::tenancy::ClassConfig;
+        let router = tenant_router(vec![ClassConfig {
+            tenant: "t0".to_string(),
+            rate_hz: 0.0001, // no refill within the test: burst is the budget
+            burst: 3,
+            ..ClassConfig::default()
+        }]);
+        let mut rxs = Vec::new();
+        let mut rejected = 0usize;
+        for _ in 0..8 {
+            match router.submit_with(Submission::new(vec![1.0f32; 16]).tenant("t0")) {
+                Ok(rx) => rxs.push(rx),
+                Err(_) => rejected += 1,
+            }
+        }
+        assert_eq!(rxs.len(), 3, "burst tokens bound router admissions");
+        assert_eq!(rejected, 5);
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        }
+        let hub = router.pool().telemetry();
+        let t = hub.tenant("t0");
+        assert_eq!(
+            t.admitted() + t.retry_spent() + t.rejected(),
+            t.offered(),
+            "per-tenant conservation across the router front door"
+        );
+        assert_eq!((t.admitted(), t.rejected(), t.retry_spent()), (3, 5, 0));
+        let tel = router.telemetry_snapshot();
+        let view = &tel.per_tenant["t0"];
+        assert_eq!(view.admitted, 3);
+        assert!(view.count >= 3, "peerless routing still records tenant latency");
+        router.shutdown();
+    }
+
+    /// The deprecated triad must behave identically to the
+    /// `Submission`-based front door it wraps.
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_router_triad_behaves_like_submit_with() {
+        let router = tenant_router(Vec::new());
+        let r1 = router.submit(vec![1.0f32; 16]).unwrap();
+        let r2 = router.submit_priority(vec![2.0f32; 16]).unwrap();
+        let r3 = router.submit_lane(vec![3.0f32; 16], Lane::Normal).unwrap();
+        let (a, b, c) = (
+            r1.recv_timeout(Duration::from_secs(5)).unwrap(),
+            r2.recv_timeout(Duration::from_secs(5)).unwrap(),
+            r3.recv_timeout(Duration::from_secs(5)).unwrap(),
+        );
+        assert_eq!(a.lane, Lane::Normal);
+        assert_eq!(b.lane, Lane::High);
+        assert_eq!(c.lane, Lane::Normal);
         router.shutdown();
     }
 }

@@ -239,6 +239,7 @@ impl StealRegistry {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::tenancy::TenantPermit;
     use crate::telemetry::{Lane, TelemetryHub};
     use crate::sync::mpsc::channel;
 
@@ -251,6 +252,7 @@ mod tests {
             lane: Lane::Normal,
             resp,
             cache: None,
+            tenant: TenantPermit::untracked(),
         }
     }
 
@@ -296,6 +298,7 @@ mod tests {
             lane: Lane::Normal,
             resp,
             cache: None,
+            tenant: TenantPermit::untracked(),
         });
         let stolen = d.steal_tail(1);
         assert!(

@@ -1,0 +1,744 @@
+//! Per-tenant / workload-class isolation: the **fourth control-loop
+//! arm** next to the AIMD pool sizer, the shard router's route
+//! reconciliation, and the steal registry (Fig. 6's actuation level,
+//! applied to multi-tenant admission — OODIn-style resource
+//! partitioning across co-resident workloads, arXiv:2106.04723).
+//!
+//! Three mechanisms, composed per class ([`ClassConfig`]):
+//!
+//! - **Token-bucket admission** ([`TokenBucket`]): each class admits
+//!   fresh traffic at a bounded rate with a bounded burst. The bucket
+//!   refills lazily from a shared monotonic clock on the submit path
+//!   (no refill thread), and its *rate* is retuned each adaptation
+//!   tick from measured [`TelemetrySnapshot`] rate meters — AIMD like
+//!   the sizer: multiplicative backoff toward the class's reserved
+//!   share of measured service rate when occupancy is critical,
+//!   additive recovery toward the configured rate otherwise.
+//! - **Bulkhead reservations** ([`Bulkhead`]): each class holds a cap
+//!   on concurrently admitted-but-unanswered local requests, sized so
+//!   that every *other* class's reserved fraction of pool capacity is
+//!   subtracted from this class's cap. One melting tenant can fill its
+//!   own bulkhead but can never occupy the capacity reserved for the
+//!   others. Caps resync from `live_workers × queue_capacity` each
+//!   tick, so the sizer growing or shrinking the pool re-partitions
+//!   the reservations automatically.
+//! - **Retry budgets** ([`RetryBudget`]): retry traffic is paid for
+//!   from a budget earned as a fraction of *fresh* admits (ninelives
+//!   P3.05 retry budgeting), so a retry storm amplifies rejected
+//!   traffic by at most `1 + retry_frac` instead of unboundedly.
+//!
+//! Accounting contract (the conservation law the scenario harness
+//! asserts): the submission front doors bump **exactly one** of the
+//! tenant's `admitted` / `rejected` / `retry_spent` hub counters per
+//! submission, at its final outcome — so per tenant
+//! `admitted + retry_spent + rejected == offered` at every instant.
+//! Tenancy *observability* (hub lanes) works with no controller
+//! configured; this module is only the *enforcement* side.
+//!
+//! Concurrency: the bucket, bulkhead, and retry budget are lock-free
+//! atomic counters on the submit hot path. Their protocols are
+//! model-checked in `rust/tests/loom_tenancy.rs` (per the PR 9 gate),
+//! including a `#[should_panic]` mutant re-seeding the classic
+//! check-then-increment bulkhead race.
+
+use std::time::Instant;
+
+use crate::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use crate::sync::{lock_or_recover, Arc, Mutex};
+use crate::telemetry::{RateMeter, TelemetryHub, TelemetrySnapshot, TenantTelemetry};
+
+/// Micro-tokens per token: buckets count in millionths so fractional
+/// rates and fractional retry earn rates stay integer arithmetic.
+const MICROS_PER_TOKEN: u64 = 1_000_000;
+
+/// Occupancy above which the actuation tick backs class rates off
+/// multiplicatively (the sizer's own "critical" band).
+const BACKOFF_OCCUPANCY: f64 = 0.85;
+
+/// Multiplicative decrease factor under critical occupancy.
+const RATE_DECREASE: f64 = 0.7;
+
+/// Additive recovery per tick, as a fraction of the configured rate.
+const RATE_RECOVER_FRAC: f64 = 0.1;
+
+/// Smoothing for the measured pool service-rate meter.
+const SERVED_RATE_ALPHA: f64 = 0.3;
+
+/// One class's admission contract.
+#[derive(Debug, Clone)]
+pub struct ClassConfig {
+    /// Tenant id this class governs (must match `Submission::tenant`).
+    pub tenant: String,
+    /// Steady fresh-admission rate (tokens per second).
+    pub rate_hz: f64,
+    /// Bucket depth: the burst admitted above the steady rate.
+    pub burst: usize,
+    /// Fraction of total pool queue capacity reserved for this class:
+    /// subtracted from every *other* class's bulkhead cap.
+    pub reserve_frac: f64,
+    /// Retry budget earned per fresh admit (0.0 disables retries for
+    /// the class; 0.1 bounds retry traffic at 10% of fresh traffic).
+    pub retry_frac: f64,
+}
+
+impl Default for ClassConfig {
+    fn default() -> Self {
+        ClassConfig {
+            tenant: String::new(),
+            rate_hz: 1_000.0,
+            burst: 64,
+            reserve_frac: 0.0,
+            retry_frac: 0.0,
+        }
+    }
+}
+
+/// The tenancy arm's configuration: one [`ClassConfig`] per governed
+/// tenant. Tenants not listed are admitted without budgets (their hub
+/// lanes still account for them).
+#[derive(Debug, Clone, Default)]
+pub struct TenancyConfig {
+    pub classes: Vec<ClassConfig>,
+}
+
+impl TenancyConfig {
+    pub fn is_empty(&self) -> bool {
+        self.classes.is_empty()
+    }
+}
+
+/// A lock-free token bucket counted in micro-tokens. Refill is lazy:
+/// callers pass the current micros on a shared monotonic clock and the
+/// elapsed interval is credited at the current rate, capped at the
+/// burst depth. The rate is itself an atomic so the actuation tick can
+/// retune it without a lock.
+#[derive(Debug)]
+pub struct TokenBucket {
+    /// Current level in micro-tokens.
+    level: AtomicU64,
+    /// Burst cap in micro-tokens.
+    cap: AtomicU64,
+    /// Refill rate in micro-tokens per second.
+    rate: AtomicU64,
+    /// Clock micros at the last credited refill.
+    last_refill: AtomicU64,
+}
+
+impl TokenBucket {
+    /// A bucket that starts full (a cold class gets its burst).
+    pub fn new(rate_hz: f64, burst: usize) -> TokenBucket {
+        let cap = (burst.max(1) as u64).saturating_mul(MICROS_PER_TOKEN);
+        TokenBucket {
+            level: AtomicU64::new(cap),
+            cap: AtomicU64::new(cap),
+            rate: AtomicU64::new(rate_to_micros(rate_hz)),
+            last_refill: AtomicU64::new(0),
+        }
+    }
+
+    /// Retune the refill rate (the actuation tick's AIMD output).
+    pub fn set_rate_hz(&self, rate_hz: f64) {
+        // ordering: Relaxed — the rate is a tuning scalar; admission
+        // reads whichever of the old/new rates it races onto, both of
+        // which are valid configurations publishing no other memory.
+        self.rate.store(rate_to_micros(rate_hz), Ordering::Relaxed);
+    }
+
+    pub fn rate_hz(&self) -> f64 {
+        // ordering: Relaxed — see `set_rate_hz`.
+        self.rate.load(Ordering::Relaxed) as f64 / MICROS_PER_TOKEN as f64
+    }
+
+    /// Current whole-token level (tests / introspection).
+    pub fn level_tokens(&self) -> u64 {
+        // ordering: Relaxed — an introspection read; the take CAS below
+        // is what enforces the admission invariant.
+        self.level.load(Ordering::Relaxed) / MICROS_PER_TOKEN
+    }
+
+    /// Credit elapsed time since the last refill at the current rate.
+    /// Exactly one of any set of racing callers wins the interval: the
+    /// winner moves `last_refill` forward with a CAS and credits the
+    /// whole elapsed window; losers see the moved timestamp and credit
+    /// nothing — time is never credited twice.
+    fn refill(&self, now_micros: u64) {
+        // ordering: Relaxed — the timestamp CAS only arbitrates which
+        // caller credits the interval; the level itself is updated by
+        // the CAS loop below, and over-approximation is impossible
+        // because each interval is credited at most once.
+        let last = self.last_refill.load(Ordering::Relaxed);
+        if now_micros <= last {
+            return;
+        }
+        if self
+            .last_refill
+            .compare_exchange(last, now_micros, Ordering::Relaxed, Ordering::Relaxed)
+            .is_err()
+        {
+            return; // another caller claimed the interval
+        }
+        let elapsed = now_micros - last;
+        // ordering: Relaxed — see `set_rate_hz`.
+        let rate = self.rate.load(Ordering::Relaxed);
+        let add = ((elapsed as u128 * rate as u128) / MICROS_PER_TOKEN as u128) as u64;
+        if add == 0 {
+            return;
+        }
+        self.grant_micros(add);
+    }
+
+    /// Add `add` micro-tokens, clamped at the cap.
+    fn grant_micros(&self, add: u64) {
+        // ordering: Relaxed — the level is a pure counting gate: no
+        // memory is published through it, and the CAS loop preserves
+        // the cap bound under any interleaving.
+        let cap = self.cap.load(Ordering::Relaxed);
+        let mut cur = self.level.load(Ordering::Relaxed);
+        loop {
+            let next = cur.saturating_add(add).min(cap);
+            match self.level.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Grant whole tokens directly (tests and the loom model drive the
+    /// bucket deterministically without a clock).
+    pub fn grant(&self, tokens: u64) {
+        self.grant_micros(tokens.saturating_mul(MICROS_PER_TOKEN));
+    }
+
+    /// Take one token, refilling for the elapsed interval first.
+    /// Returns whether a token was available. The CAS loop guarantees
+    /// the level never underflows: N concurrent takers on a bucket
+    /// holding K tokens admit exactly `min(N, K)`.
+    pub fn try_take(&self, now_micros: u64) -> bool {
+        self.refill(now_micros);
+        // ordering: Relaxed — pure counting gate, see `grant_micros`;
+        // the admission decision carries no data dependency beyond the
+        // count itself.
+        let mut cur = self.level.load(Ordering::Relaxed);
+        loop {
+            if cur < MICROS_PER_TOKEN {
+                return false;
+            }
+            let next = cur - MICROS_PER_TOKEN;
+            match self.level.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => return true,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+}
+
+fn rate_to_micros(rate_hz: f64) -> u64 {
+    (rate_hz.max(0.0) * MICROS_PER_TOKEN as f64) as u64
+}
+
+/// A lock-free bulkhead: a cap on concurrently held slots. Acquisition
+/// is a check-then-CAS loop on one atomic, so the cap can never be
+/// exceeded — the classic load-check-then-`fetch_add` TOCTOU (two
+/// admitters both pass the check, both increment, cap + 1 held) is the
+/// mutant `loom_tenancy` re-seeds. The cap is retunable at runtime;
+/// shrinking below the current occupancy only blocks *new* admissions
+/// until holders release.
+#[derive(Debug)]
+pub struct Bulkhead {
+    held: AtomicUsize,
+    cap: AtomicUsize,
+}
+
+impl Bulkhead {
+    pub fn new(cap: usize) -> Bulkhead {
+        Bulkhead { held: AtomicUsize::new(0), cap: AtomicUsize::new(cap) }
+    }
+
+    /// Retune the cap (the actuation tick resyncs it to the pool's
+    /// live capacity minus the other classes' reservations).
+    pub fn set_cap(&self, cap: usize) {
+        // ordering: Relaxed — a tuning scalar; an admission racing the
+        // store sees the old or new cap, both valid bounds.
+        self.cap.store(cap, Ordering::Relaxed);
+    }
+
+    pub fn cap(&self) -> usize {
+        // ordering: Relaxed — see `set_cap`.
+        self.cap.load(Ordering::Relaxed)
+    }
+
+    /// Currently held slots.
+    pub fn held(&self) -> usize {
+        // ordering: Relaxed — introspection; the acquire CAS enforces
+        // the bound.
+        self.held.load(Ordering::Relaxed)
+    }
+
+    /// Acquire one slot; `false` when the class is at its cap. Pair
+    /// every success with exactly one [`Bulkhead::release`] (the
+    /// [`TenantPermit`] drop guard does this).
+    pub fn try_acquire(&self) -> bool {
+        // ordering: Relaxed — pure counting gate: the CAS re-validates
+        // the check atomically, so `held` can never exceed `cap` under
+        // any interleaving; no other memory is published through it.
+        let cap = self.cap.load(Ordering::Relaxed);
+        let mut cur = self.held.load(Ordering::Relaxed);
+        loop {
+            if cur >= cap {
+                return false;
+            }
+            let next = cur + 1;
+            match self.held.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => return true,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Release one previously acquired slot.
+    pub fn release(&self) {
+        // ordering: Relaxed — counting gate, see `try_acquire`.
+        let prev = self.held.fetch_sub(1, Ordering::Relaxed);
+        debug_assert!(prev > 0, "bulkhead release without acquire");
+    }
+}
+
+/// The retry budget: micro-tokens earned per fresh admit, spent one
+/// token per admitted retry, capped at the class's burst depth. With
+/// earn rate `retry_frac`, lifetime `retry_spent <= retry_frac ×
+/// admitted + burst` — the amplification bound the retry scenario
+/// test asserts from `SnapshotDelta`.
+#[derive(Debug)]
+pub struct RetryBudget {
+    level: AtomicU64,
+    cap: u64,
+    earn: u64,
+}
+
+impl RetryBudget {
+    pub fn new(retry_frac: f64, burst: usize) -> RetryBudget {
+        RetryBudget {
+            level: AtomicU64::new(0),
+            cap: (burst.max(1) as u64).saturating_mul(MICROS_PER_TOKEN),
+            earn: (retry_frac.clamp(0.0, 1.0) * MICROS_PER_TOKEN as f64) as u64,
+        }
+    }
+
+    /// Credit one fresh admission's worth of retry allowance.
+    pub fn earn(&self) {
+        if self.earn == 0 {
+            return;
+        }
+        // ordering: Relaxed — counting gate (see `TokenBucket`); the
+        // CAS loop preserves the cap bound.
+        let mut cur = self.level.load(Ordering::Relaxed);
+        loop {
+            let next = cur.saturating_add(self.earn).min(self.cap);
+            match self.level.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Spend one retry token; `false` when the budget is dry.
+    pub fn try_spend(&self) -> bool {
+        // ordering: Relaxed — counting gate, see `earn`.
+        let mut cur = self.level.load(Ordering::Relaxed);
+        loop {
+            if cur < MICROS_PER_TOKEN {
+                return false;
+            }
+            let next = cur - MICROS_PER_TOKEN;
+            match self.level.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => return true,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+}
+
+/// One governed class's live state: the three mechanisms plus its hub
+/// lane, shared between the submission front doors (admission) and
+/// the actuation tick (retuning).
+#[derive(Debug)]
+pub struct ClassState {
+    tenant: Arc<str>,
+    cfg: ClassConfig,
+    bucket: TokenBucket,
+    bulkhead: Arc<Bulkhead>,
+    retry: Arc<RetryBudget>,
+    tel: Arc<TenantTelemetry>,
+}
+
+impl ClassState {
+    pub fn tenant(&self) -> &str {
+        &self.tenant
+    }
+
+    pub fn bucket(&self) -> &TokenBucket {
+        &self.bucket
+    }
+
+    pub fn bulkhead(&self) -> &Arc<Bulkhead> {
+        &self.bulkhead
+    }
+
+    pub fn retry_budget(&self) -> &Arc<RetryBudget> {
+        &self.retry
+    }
+}
+
+/// Travels inside a `Request` for the request's whole pool lifetime:
+/// holds the class's bulkhead slot (released on drop — response sent,
+/// request failed, dead-worker reclaim, shutdown drain alike) and the
+/// tenant's hub lane for worker-side latency observation. Untracked
+/// submissions carry an empty permit.
+#[derive(Debug, Default)]
+pub struct TenantPermit {
+    tel: Option<Arc<TenantTelemetry>>,
+    bulkhead: Option<Arc<Bulkhead>>,
+}
+
+impl TenantPermit {
+    /// A permit for an untagged (or unmanaged) submission.
+    pub fn untracked() -> TenantPermit {
+        TenantPermit::default()
+    }
+
+    /// A permit carrying the tenant lane and (for governed classes) a
+    /// held bulkhead slot. The caller must have acquired the slot
+    /// (`bulkhead.try_acquire() == true`) before wrapping it — the
+    /// permit's drop releases it exactly once. Public so custom front
+    /// doors embedding a [`TenancyController`] (and the loom model)
+    /// can thread permits through their own request types.
+    pub fn new(tel: Option<Arc<TenantTelemetry>>, bulkhead: Option<Arc<Bulkhead>>) -> TenantPermit {
+        TenantPermit { tel, bulkhead }
+    }
+
+    /// Record one answered request's end-to-end latency on the
+    /// tenant's lane (no-op for untracked permits).
+    pub fn observe_latency(&self, latency_s: f64) {
+        if let Some(t) = &self.tel {
+            t.record_latency(latency_s);
+        }
+    }
+}
+
+impl Drop for TenantPermit {
+    fn drop(&mut self) {
+        if let Some(b) = self.bulkhead.take() {
+            b.release();
+        }
+    }
+}
+
+/// AIMD state the actuation tick carries between calls.
+#[derive(Debug)]
+struct ActuateState {
+    served_meter: RateMeter,
+    last_micros: Option<u64>,
+}
+
+/// The tenancy control arm: class lookup for the submission front
+/// doors plus the per-tick actuation ([`TenancyController::actuate`])
+/// that retunes bucket rates and bulkhead caps from measured
+/// telemetry. Shared (`Arc`) between the pool and the shard router —
+/// both front doors charge the same budgets, so a tenant cannot
+/// double its allowance by splitting traffic across doors.
+#[derive(Debug)]
+pub struct TenancyController {
+    classes: Vec<ClassState>,
+    /// Shared monotonic clock epoch for lazy bucket refill.
+    epoch: Instant,
+    state: Mutex<ActuateState>,
+}
+
+impl TenancyController {
+    /// Build the controller and eagerly register each class's hub lane
+    /// (so snapshots show the governed tenants at zero before any
+    /// traffic). `total_capacity` seeds the bulkhead caps; they resync
+    /// from live telemetry each [`TenancyController::actuate`].
+    pub fn new(cfg: TenancyConfig, hub: &TelemetryHub, total_capacity: usize) -> TenancyController {
+        let reserved: Vec<usize> = cfg
+            .classes
+            .iter()
+            .map(|c| reserved_slots(c.reserve_frac, total_capacity))
+            .collect();
+        let reserved_sum: usize = reserved.iter().sum();
+        let classes = cfg
+            .classes
+            .iter()
+            .zip(&reserved)
+            .map(|(c, &mine)| ClassState {
+                tenant: Arc::from(c.tenant.as_str()),
+                bucket: TokenBucket::new(c.rate_hz, c.burst),
+                bulkhead: Arc::new(Bulkhead::new(class_cap(total_capacity, reserved_sum, mine))),
+                retry: Arc::new(RetryBudget::new(c.retry_frac, c.burst)),
+                tel: hub.tenant(&c.tenant),
+                cfg: c.clone(),
+            })
+            .collect();
+        TenancyController {
+            classes,
+            epoch: Instant::now(),
+            state: Mutex::new(ActuateState {
+                served_meter: RateMeter::new(SERVED_RATE_ALPHA),
+                last_micros: None,
+            }),
+        }
+    }
+
+    /// Micros on the controller's monotonic clock (the token buckets'
+    /// refill timebase).
+    pub fn now_micros(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// The governed class for `tenant`, if any.
+    pub fn class(&self, tenant: &str) -> Option<&ClassState> {
+        self.classes.iter().find(|c| &*c.tenant == tenant)
+    }
+
+    pub fn classes(&self) -> &[ClassState] {
+        &self.classes
+    }
+
+    /// The per-tick actuation (the fourth arm of
+    /// `AdaptLoop::tick_with_telemetry` / `ShardRouter::maintain`):
+    ///
+    /// 1. Resync bulkhead caps to the *live* pool capacity minus every
+    ///    other class's reservation — the sizer resizing the pool
+    ///    re-partitions the reservations on the next tick.
+    /// 2. AIMD the bucket rates: under critical occupancy, decrease
+    ///    multiplicatively toward the class's reserved share of the
+    ///    measured service rate (the hub rate meter); otherwise
+    ///    recover additively toward the configured rate.
+    pub fn actuate(&self, tel: &TelemetrySnapshot) {
+        if self.classes.is_empty() {
+            return;
+        }
+        let total = (tel.live_workers * tel.queue_capacity).max(1);
+        let reserved: Vec<usize> =
+            self.classes.iter().map(|c| reserved_slots(c.cfg.reserve_frac, total)).collect();
+        let reserved_sum: usize = reserved.iter().sum();
+        for (c, &mine) in self.classes.iter().zip(&reserved) {
+            c.bulkhead.set_cap(class_cap(total, reserved_sum, mine));
+        }
+
+        let now = self.now_micros();
+        let served_rate = {
+            let mut st = lock_or_recover(&self.state);
+            let dt_s = match st.last_micros {
+                Some(prev) => (now.saturating_sub(prev)) as f64 / 1e6,
+                None => 0.0,
+            };
+            st.last_micros = Some(now);
+            st.served_meter.observe(tel.served, dt_s)
+        };
+        let critical = tel.occupancy() > BACKOFF_OCCUPANCY;
+        for c in &self.classes {
+            let current = c.bucket.rate_hz();
+            let next = if critical {
+                // Back off toward the class's reserved share of what
+                // the pool measurably serves — never below one token
+                // per second, so a class always recovers.
+                let floor = (served_rate * c.cfg.reserve_frac).max(1.0);
+                (current * RATE_DECREASE).max(floor).min(c.cfg.rate_hz)
+            } else {
+                (current + c.cfg.rate_hz * RATE_RECOVER_FRAC).min(c.cfg.rate_hz)
+            };
+            c.bucket.set_rate_hz(next);
+        }
+    }
+}
+
+/// Slots reserved for a class under `frac` of `total` capacity.
+fn reserved_slots(frac: f64, total: usize) -> usize {
+    ((frac.clamp(0.0, 1.0) * total as f64).ceil() as usize).min(total)
+}
+
+/// A class's bulkhead cap: total capacity minus every *other* class's
+/// reservation (never below one slot, so no class deadlocks).
+fn class_cap(total: usize, reserved_sum: usize, mine: usize) -> usize {
+    total.saturating_sub(reserved_sum.saturating_sub(mine)).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::TelemetrySnapshot;
+
+    #[test]
+    fn bucket_burst_then_rate_bound() {
+        let b = TokenBucket::new(10.0, 4);
+        // Cold bucket holds the full burst.
+        for _ in 0..4 {
+            assert!(b.try_take(0));
+        }
+        assert!(!b.try_take(0), "burst exhausted");
+        // 500 ms at 10 Hz refills 5 tokens... capped at burst 4.
+        assert!(b.try_take(500_000));
+        for _ in 0..3 {
+            assert!(b.try_take(500_000));
+        }
+        assert!(!b.try_take(500_000), "same instant: interval already credited");
+    }
+
+    #[test]
+    fn bucket_refill_credits_each_interval_once() {
+        let b = TokenBucket::new(2.0, 8);
+        while b.try_take(0) {}
+        assert!(!b.try_take(0));
+        // 1 s at 2 Hz: exactly two tokens, regardless of how many
+        // takers observe the same clock reading.
+        assert!(b.try_take(1_000_000));
+        assert!(b.try_take(1_000_000));
+        assert!(!b.try_take(1_000_000));
+    }
+
+    #[test]
+    fn bucket_rate_retune_applies_to_future_intervals() {
+        let b = TokenBucket::new(1.0, 2);
+        while b.try_take(0) {}
+        b.set_rate_hz(100.0);
+        assert!((b.rate_hz() - 100.0).abs() < 1e-9);
+        // 100 ms at the new rate: 10 tokens, capped at burst 2.
+        assert!(b.try_take(100_000));
+        assert!(b.try_take(100_000));
+        assert!(!b.try_take(100_000));
+    }
+
+    #[test]
+    fn bulkhead_caps_held_slots() {
+        let bh = Bulkhead::new(2);
+        assert!(bh.try_acquire());
+        assert!(bh.try_acquire());
+        assert!(!bh.try_acquire(), "cap reached");
+        assert_eq!(bh.held(), 2);
+        bh.release();
+        assert!(bh.try_acquire(), "release frees a slot");
+        // Shrinking below occupancy blocks new admits only.
+        bh.set_cap(1);
+        assert!(!bh.try_acquire());
+        bh.release();
+        bh.release();
+        assert_eq!(bh.held(), 0);
+    }
+
+    #[test]
+    fn retry_budget_bounds_amplification() {
+        let rb = RetryBudget::new(0.5, 8);
+        assert!(!rb.try_spend(), "no budget before any fresh admit");
+        rb.earn(); // 0.5 tokens
+        assert!(!rb.try_spend());
+        rb.earn(); // 1.0 tokens
+        assert!(rb.try_spend());
+        assert!(!rb.try_spend());
+        // Lifetime spend can never exceed frac × earns (+ cap slack).
+        for _ in 0..100 {
+            rb.earn();
+        }
+        let mut spent = 0;
+        while rb.try_spend() {
+            spent += 1;
+        }
+        assert!(spent <= 8, "cap bounds the banked budget, got {spent}");
+    }
+
+    #[test]
+    fn zero_retry_frac_disables_retries() {
+        let rb = RetryBudget::new(0.0, 8);
+        for _ in 0..32 {
+            rb.earn();
+        }
+        assert!(!rb.try_spend());
+    }
+
+    fn two_class_cfg() -> TenancyConfig {
+        TenancyConfig {
+            classes: vec![
+                ClassConfig {
+                    tenant: "victim".into(),
+                    rate_hz: 100.0,
+                    burst: 8,
+                    reserve_frac: 0.25,
+                    retry_frac: 0.1,
+                },
+                ClassConfig {
+                    tenant: "aggressor".into(),
+                    rate_hz: 100.0,
+                    burst: 8,
+                    reserve_frac: 0.25,
+                    retry_frac: 0.0,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn bulkhead_caps_partition_capacity_by_reservation() {
+        let hub = TelemetryHub::new(8);
+        let ctl = TenancyController::new(two_class_cfg(), &hub, 100);
+        // Each class: 100 total − the other's reservation (25) = 75.
+        for c in ctl.classes() {
+            assert_eq!(c.bulkhead().cap(), 75, "{}", c.tenant());
+        }
+        // Governed tenants are visible in snapshots before traffic.
+        let snap = hub.snapshot();
+        assert_eq!(snap.per_tenant.len(), 2);
+        assert_eq!(snap.per_tenant["victim"].admitted, 0);
+    }
+
+    #[test]
+    fn actuate_resyncs_caps_and_backs_off_rates() {
+        let hub = TelemetryHub::new(10);
+        let ctl = TenancyController::new(two_class_cfg(), &hub, 100);
+        // Live capacity 4 workers × 10 = 40; reservations 10 each →
+        // each cap = 40 − 10 = 30.
+        let mut tel =
+            TelemetrySnapshot { live_workers: 4, queue_capacity: 10, ..Default::default() };
+        ctl.actuate(&tel);
+        for c in ctl.classes() {
+            assert_eq!(c.bulkhead().cap(), 30);
+        }
+        // Saturated queues: multiplicative backoff below configured.
+        tel.queue_depth = 40;
+        ctl.actuate(&tel);
+        let backed = ctl.class("victim").unwrap().bucket().rate_hz();
+        assert!(backed < 100.0, "critical occupancy must back the rate off, got {backed}");
+        // Recovery: additive climb back toward the configured rate.
+        tel.queue_depth = 0;
+        for _ in 0..20 {
+            ctl.actuate(&tel);
+        }
+        let recovered = ctl.class("victim").unwrap().bucket().rate_hz();
+        assert!((recovered - 100.0).abs() < 1e-9, "idle ticks must recover, got {recovered}");
+    }
+
+    #[test]
+    fn permit_releases_bulkhead_on_drop() {
+        let bh = Arc::new(Bulkhead::new(1));
+        assert!(bh.try_acquire());
+        let permit = TenantPermit::new(None, Some(Arc::clone(&bh)));
+        assert_eq!(bh.held(), 1);
+        drop(permit);
+        assert_eq!(bh.held(), 0);
+        // Untracked permits release nothing.
+        drop(TenantPermit::untracked());
+        assert_eq!(bh.held(), 0);
+    }
+
+    #[test]
+    fn unmanaged_tenant_has_no_class() {
+        let hub = TelemetryHub::new(8);
+        let ctl = TenancyController::new(two_class_cfg(), &hub, 16);
+        assert!(ctl.class("victim").is_some());
+        assert!(ctl.class("bystander").is_none());
+    }
+}

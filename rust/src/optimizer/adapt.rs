@@ -15,6 +15,34 @@
 //! near-equal configurations. When a [`TelemetrySnapshot`] is supplied,
 //! the tick also runs the AIMD [`PoolSizer`] and actuates pool width
 //! through [`Actuator::set_workers`].
+//!
+//! # The four actuation arms of the Fig. 6 loop
+//!
+//! Each telemetry tick drives four independent actuators off the same
+//! measured snapshot — the Fig. 6 "configuration actuation" stage
+//! fanned out across levels:
+//!
+//! 1. **Variant switch** ([`Actuator::actuate`]): the front-end
+//!    decision level's choice of compressed model variant, broadcast
+//!    generation-tagged to every worker.
+//! 2. **Pool width** ([`Actuator::set_workers`]): the AIMD
+//!    [`PoolSizer`] resizing local worker count from occupancy and
+//!    rejection signals.
+//! 3. **Shard admission** ([`Actuator::set_shards`]): cross-device
+//!    route reconciliation — degrade/re-admit peer links and tune
+//!    frontier-coalescing windows from measured link latency.
+//! 4. **Tenant isolation** (rides `set_shards`, see
+//!    [`crate::coordinator::tenancy`]): per-class token-bucket
+//!    admission rates back off multiplicatively when measured pool
+//!    occupancy crosses the backoff threshold and recover additively
+//!    when it clears (floored at each class's reserved share), and
+//!    bulkhead worker-capacity reservations resync to the live pool
+//!    width — so one tenant's flash crowd is absorbed as *its own*
+//!    rejections instead of everyone's queueing delay. Like the other
+//!    arms it consumes only [`TelemetrySnapshot`] data (occupancy,
+//!    per-tenant rate counters), keeping the paper's
+//!    back-end→front-end feedback contract: decisions read measured
+//!    state published through the hub, never side channels.
 
 use crate::device::{ResourceMonitor, ResourceSnapshot};
 use crate::graph::Graph;
@@ -88,6 +116,21 @@ impl Actuator for crate::coordinator::ServingPool {
 
     fn set_workers(&self, n: usize) -> usize {
         crate::coordinator::ServingPool::set_workers(self, n)
+    }
+
+    /// A bare pool has no peers, but the shard arm of the tick is where
+    /// per-tick telemetry actuation lives — so the pool uses it to run
+    /// its **tenant isolation** arm ([`ServingPool::maintain`]): resync
+    /// class bulkhead caps to the live width and AIMD the per-class
+    /// admission rates from measured occupancy. Returns 0 (no remote
+    /// peers). The shard router's implementation calls the same
+    /// `maintain` before reconciling routes, so both actuators drive
+    /// the arm identically.
+    ///
+    /// [`ServingPool::maintain`]: crate::coordinator::ServingPool::maintain
+    fn set_shards(&self, tel: &TelemetrySnapshot) -> usize {
+        self.maintain(tel);
+        0
     }
 }
 
@@ -416,8 +459,12 @@ impl AdaptLoop {
     /// whose *measured* latency drifted past budget degrade to
     /// local-only, recovered ones re-admit, and each link's
     /// frontier-coalescing window is retuned from the same snapshot.
-    /// This is the Fig. 6 Observe→Decide→Act cycle with all three
-    /// actuation arms live.
+    /// The tenant-isolation arm rides the `set_shards` call (both the
+    /// pool's and the router's implementations run
+    /// `ServingPool::maintain` there), so per-class admission rates and
+    /// bulkhead caps re-actuate on the same cadence. This is the Fig. 6
+    /// Observe→Decide→Act cycle with all four actuation arms live (see
+    /// the module docs).
     pub fn tick_with_telemetry(
         &mut self,
         snap: &ResourceSnapshot,
@@ -639,7 +686,7 @@ mod tests {
 
     #[test]
     fn tick_with_actuates_pool_of_mock_workers() {
-        use crate::coordinator::{Executor, PoolConfig, ServingPool};
+        use crate::coordinator::{Executor, PoolConfig, ServingPool, Submission};
         use anyhow::Result as ARes;
 
         /// Executor that accepts any variant id (the pool just needs a
@@ -676,9 +723,9 @@ mod tests {
         };
         // The broadcast was acknowledged: a request admitted now is
         // served under the actuated variant.
-        let rx = pool.submit(vec![0.0; 4]).unwrap();
+        let rx = pool.submit_with(Submission::new(vec![0.0; 4])).unwrap();
         let resp = rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
-        assert_eq!(resp.variant, expect);
+        assert_eq!(&*resp.variant, expect.as_str());
         assert_eq!(resp.generation, 1);
         let stats = pool.shutdown();
         assert_eq!(stats.switches(), 1);

@@ -433,6 +433,107 @@ impl WorkerTelemetry {
     }
 }
 
+/// One tenant's (workload class's) accounting lane: the observable
+/// surface of the tenancy control arm. Exactly one of
+/// `admitted`/`rejected`/`retry_spent` is bumped per submission at its
+/// final admission outcome, so per tenant
+/// `admitted + retry_spent + rejected == offered` holds at every
+/// instant — the conservation law the scenario harness asserts.
+/// Latency is the tenant's *end-to-end* view (one sample per answered
+/// request), the isolation proof signal ("the victim's p99 held").
+#[derive(Debug)]
+pub struct TenantTelemetry {
+    /// Fresh (non-retry) submissions admitted past the tenant's token
+    /// bucket and the pool/router admission.
+    admitted: Counter,
+    /// Submissions refused — tenancy budget, bulkhead reservation, or
+    /// plain queue-depth rejection after tenancy admitted them.
+    rejected: Counter,
+    /// Admitted *retry* submissions, each paid for from the tenant's
+    /// retry budget (earned as a fraction of fresh admits — ninelives
+    /// P3.05 style), so `retry_spent / admitted` is bounded by the
+    /// configured budget fraction.
+    retry_spent: Counter,
+    latency: Mutex<Reservoir>,
+}
+
+impl TenantTelemetry {
+    fn new(reservoir_capacity: usize) -> TenantTelemetry {
+        TenantTelemetry {
+            admitted: Counter::new(),
+            rejected: Counter::new(),
+            retry_spent: Counter::new(),
+            latency: Mutex::new(Reservoir::new(reservoir_capacity)),
+        }
+    }
+
+    /// One fresh submission admitted.
+    pub fn record_admitted(&self) {
+        self.admitted.inc();
+    }
+
+    /// One submission rejected (tenancy or queue admission).
+    pub fn record_rejected(&self) {
+        self.rejected.inc();
+    }
+
+    /// One retry submission admitted against the retry budget.
+    pub fn record_retry_spent(&self) {
+        self.retry_spent.inc();
+    }
+
+    /// One answered request's end-to-end latency for this tenant.
+    pub fn record_latency(&self, latency_s: f64) {
+        lock_or_recover(&self.latency).push(latency_s);
+    }
+
+    pub fn admitted(&self) -> usize {
+        self.admitted.get()
+    }
+
+    pub fn rejected(&self) -> usize {
+        self.rejected.get()
+    }
+
+    pub fn retry_spent(&self) -> usize {
+        self.retry_spent.get()
+    }
+
+    /// Every submission this tenant ever offered, any outcome.
+    pub fn offered(&self) -> usize {
+        self.admitted.get() + self.retry_spent.get() + self.rejected.get()
+    }
+
+    fn latency_reservoir(&self) -> Reservoir {
+        lock_or_recover(&self.latency).clone()
+    }
+}
+
+/// One tenant's counters + latency percentiles at snapshot time.
+#[derive(Debug, Clone, Default)]
+pub struct TenantView {
+    /// Fresh submissions admitted.
+    pub admitted: usize,
+    /// Submissions rejected (tenancy budget or queue admission).
+    pub rejected: usize,
+    /// Retry submissions admitted against the retry budget.
+    pub retry_spent: usize,
+    /// Answered requests in the latency window below.
+    pub count: usize,
+    pub p50_s: f64,
+    pub p99_s: f64,
+}
+
+/// Windowed per-tenant counter deltas (see
+/// [`TelemetrySnapshot::delta_since`]): the retry-budget and
+/// conservation checks read these, not lifetime totals.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TenantDelta {
+    pub admitted: usize,
+    pub rejected: usize,
+    pub retry_spent: usize,
+}
+
 /// Merged latency view for one lane across all workers.
 #[derive(Debug, Clone, Default)]
 pub struct LaneView {
@@ -543,6 +644,10 @@ pub struct TelemetrySnapshot {
     pub lanes: [LaneView; LANES],
     pub per_worker: Vec<WorkerView>,
     pub per_variant: BTreeMap<String, VariantView>,
+    /// Per-tenant accounting lanes (admission outcomes + end-to-end
+    /// latency percentiles), keyed by tenant id. Empty until a tagged
+    /// submission registers its tenant with the hub.
+    pub per_tenant: BTreeMap<String, TenantView>,
     /// Merged percentiles over every worker's recent window, both lanes.
     pub p50_s: f64,
     pub p95_s: f64,
@@ -574,6 +679,7 @@ impl Default for TelemetrySnapshot {
             lanes: [LaneView::default(), LaneView::default()],
             per_worker: Vec::new(),
             per_variant: BTreeMap::new(),
+            per_tenant: BTreeMap::new(),
             p50_s: 0.0,
             p95_s: 0.0,
             p99_s: 0.0,
@@ -617,6 +723,21 @@ impl TelemetrySnapshot {
                 .cache_inflight_coalesced
                 .saturating_sub(base.cache_inflight_coalesced),
             cache_evictions: self.cache_evictions.saturating_sub(base.cache_evictions),
+            per_tenant: self
+                .per_tenant
+                .iter()
+                .map(|(tenant, v)| {
+                    let b = base.per_tenant.get(tenant).cloned().unwrap_or_default();
+                    (
+                        tenant.clone(),
+                        TenantDelta {
+                            admitted: v.admitted.saturating_sub(b.admitted),
+                            rejected: v.rejected.saturating_sub(b.rejected),
+                            retry_spent: v.retry_spent.saturating_sub(b.retry_spent),
+                        },
+                    )
+                })
+                .collect(),
         }
     }
 }
@@ -626,7 +747,7 @@ impl TelemetrySnapshot {
 /// harness's per-window adaptation/serving accounting: "this scenario
 /// caused N steals, M cache hits, K switches", independent of whatever
 /// ran on the stack before it.
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct SnapshotDelta {
     pub served: usize,
     pub batches: usize,
@@ -643,6 +764,10 @@ pub struct SnapshotDelta {
     pub cache_hits: usize,
     pub cache_inflight_coalesced: usize,
     pub cache_evictions: usize,
+    /// Windowed per-tenant admission deltas (tenants present in the
+    /// *newer* snapshot; a tenant first seen inside the window deltas
+    /// against zero).
+    pub per_tenant: BTreeMap<String, TenantDelta>,
 }
 
 /// The hub itself: slot registry + snapshot assembly.
@@ -656,6 +781,11 @@ pub struct SnapshotDelta {
 #[derive(Debug)]
 pub struct TelemetryHub {
     slots: RwLock<Vec<Arc<WorkerTelemetry>>>,
+    /// Per-tenant accounting lanes, registered on first use by a
+    /// tagged submission ([`TelemetryHub::tenant`]). Tenants never
+    /// retire: like worker slots, their totals stay monotonic so the
+    /// conservation law survives reconfiguration.
+    tenants: RwLock<BTreeMap<String, Arc<TenantTelemetry>>>,
     queue_capacity: AtomicUsize,
     reservoir_capacity: usize,
     /// Response-cache hits (completed-entry answers, no inference).
@@ -679,6 +809,7 @@ impl TelemetryHub {
     pub fn with_reservoir_capacity(queue_capacity: usize, reservoir_capacity: usize) -> TelemetryHub {
         TelemetryHub {
             slots: RwLock::new(Vec::new()),
+            tenants: RwLock::new(BTreeMap::new()),
             queue_capacity: AtomicUsize::new(queue_capacity),
             reservoir_capacity,
             cache_hits: Counter::new(),
@@ -737,6 +868,27 @@ impl TelemetryHub {
     /// included — the stats adapters fold them into pool totals).
     pub fn slots(&self) -> Vec<Arc<WorkerTelemetry>> {
         read_or_recover(&self.slots).clone()
+    }
+
+    /// Get-or-create the accounting lane for `name`: the first tagged
+    /// submission registers its tenant; every later one shares the Arc.
+    /// Works with the tenancy controller disabled too — per-tenant
+    /// observability is independent of per-tenant *enforcement*.
+    pub fn tenant(&self, name: &str) -> Arc<TenantTelemetry> {
+        if let Some(t) = read_or_recover(&self.tenants).get(name) {
+            return Arc::clone(t);
+        }
+        let mut map = write_or_recover(&self.tenants);
+        let cap = self.reservoir_capacity;
+        Arc::clone(
+            map.entry(name.to_string())
+                .or_insert_with(|| Arc::new(TenantTelemetry::new(cap))),
+        )
+    }
+
+    /// Every tenant lane ever registered, keyed by tenant id.
+    pub fn tenants(&self) -> BTreeMap<String, Arc<TenantTelemetry>> {
+        read_or_recover(&self.tenants).clone()
     }
 
     pub fn queue_capacity(&self) -> usize {
@@ -844,6 +996,22 @@ impl TelemetryHub {
             snap.per_variant.insert(
                 variant,
                 VariantView { count, p50_s: vp[0], p95_s: vp[1], mean_s: mean },
+            );
+        }
+        for (tenant, t) in self.tenants() {
+            let r = t.latency_reservoir();
+            let count = r.len();
+            let tp = percentiles_of(r.samples().to_vec(), &[0.5, 0.99]);
+            snap.per_tenant.insert(
+                tenant,
+                TenantView {
+                    admitted: t.admitted(),
+                    rejected: t.rejected(),
+                    retry_spent: t.retry_spent(),
+                    count,
+                    p50_s: tp[0],
+                    p99_s: tp[1],
+                },
             );
         }
         let ap = percentiles_of(all_samples, &[0.5, 0.95, 0.99]);
@@ -1117,5 +1285,39 @@ mod tests {
         // A stale "current" against a newer base saturates to zero
         // instead of wrapping.
         assert_eq!(base.delta_since(&hub.snapshot()).served, 0);
+    }
+
+    /// Tenant lanes: registered on first use, conservation over the
+    /// three outcome counters, latency percentiles per tenant, and
+    /// windowed deltas (a tenant first seen inside the window deltas
+    /// against zero).
+    #[test]
+    fn tenant_lanes_flow_through_snapshots_and_deltas() {
+        let hub = TelemetryHub::new(8);
+        let t0 = hub.tenant("t0");
+        assert!(Arc::ptr_eq(&t0, &hub.tenant("t0")), "get-or-create shares the lane");
+        t0.record_admitted();
+        t0.record_admitted();
+        t0.record_rejected();
+        t0.record_retry_spent();
+        t0.record_latency(0.010);
+        t0.record_latency(0.030);
+        assert_eq!(t0.offered(), 4);
+
+        let base = hub.snapshot();
+        assert_eq!(base.per_tenant["t0"].admitted, 2);
+        assert_eq!(base.per_tenant["t0"].rejected, 1);
+        assert_eq!(base.per_tenant["t0"].retry_spent, 1);
+        assert_eq!(base.per_tenant["t0"].count, 2);
+        assert!((base.per_tenant["t0"].p99_s - 0.030).abs() < 1e-12);
+
+        let t1 = hub.tenant("t1"); // first seen inside the window
+        t1.record_admitted();
+        t0.record_rejected();
+        let delta = hub.snapshot().delta_since(&base);
+        assert_eq!(delta.per_tenant["t0"].admitted, 0);
+        assert_eq!(delta.per_tenant["t0"].rejected, 1);
+        assert_eq!(delta.per_tenant["t1"].admitted, 1);
+        assert_eq!(delta.per_tenant["t1"].rejected, 0);
     }
 }

@@ -53,7 +53,7 @@ pub mod reservoir;
 pub use counter::{Counter, Gauge};
 pub use ewma::{Ewma, RateMeter};
 pub use hub::{
-    Lane, LaneView, SnapshotDelta, TelemetryHub, TelemetrySnapshot, VariantView, WorkerTelemetry,
-    WorkerView, DEFAULT_RESERVOIR_CAPACITY, LANES,
+    Lane, LaneView, SnapshotDelta, TelemetryHub, TelemetrySnapshot, TenantDelta, TenantTelemetry,
+    TenantView, VariantView, WorkerTelemetry, WorkerView, DEFAULT_RESERVOIR_CAPACITY, LANES,
 };
 pub use reservoir::{merged_percentile, percentile_of, percentiles_of, Reservoir};

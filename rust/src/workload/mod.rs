@@ -60,7 +60,10 @@ pub mod trace;
 
 pub use arrivals::ArrivalSchedule;
 pub use fleet::{FleetEvent, FleetScript, SharedDelay, SimExec};
-pub use openloop::{run_open_loop, run_open_loop_from, LoadTarget, OpenLoopConfig, OpenLoopReport};
+pub use openloop::{
+    run_open_loop, run_open_loop_from, LoadTarget, OpenLoopConfig, OpenLoopReport, RetryPolicy,
+    TenantLoad,
+};
 pub use scenario::{
     run_scenario, AdaptationCounts, Controller, MaintainController, Scenario, ScenarioReport,
     ScenarioStack, StackConfig, StackCounters,

@@ -20,38 +20,54 @@
 //! in the sample; the submit-lag term additionally charges any delay
 //! of the submitter itself (an overshooting sleep, a slow routing
 //! walk) to the requests it pushed late. Rejections are counted, not
-//! retried — retry policy is a workload property, and uncontrolled
-//! retry storms are a *scenario* to model, not a driver default.
+//! retried *by default* — retry policy is a workload property, and
+//! uncontrolled retry storms are a *scenario* to model, not a driver
+//! default. A scenario that wants the storm opts in with
+//! [`OpenLoopConfig::retry`]: each rejected submission is immediately
+//! re-offered up to `attempts` times, marked [`Submission::retry`] so
+//! the stack pays it from the tenant's **retry budget** — which is
+//! exactly the mechanism that bounds the amplification.
 
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 use crate::sync::mpsc::Receiver;
 use crate::sync::Arc;
 
-use crate::coordinator::pool::ServingPool;
+use crate::coordinator::pool::{ServingPool, Submission};
 use crate::coordinator::server::{Rejected, Response};
 use crate::coordinator::shard::ShardRouter;
-use crate::telemetry::{percentiles_of, Lane};
+use crate::telemetry::percentiles_of;
 
 use super::trace::Trace;
 
-/// Anything the open-loop driver can aim at. Both the bare pool and
-/// the shard router qualify; scenario stacks submit through the
-/// router.
+/// Anything the open-loop driver can aim at, through the descriptor
+/// front door. Both the bare pool and the shard router qualify;
+/// scenario stacks submit through the router.
 pub trait LoadTarget: Sync {
-    fn submit_load(&self, input: Arc<[f32]>, lane: Lane) -> Result<Receiver<Response>, Rejected>;
+    fn submit_load(&self, sub: Submission) -> Result<Receiver<Response>, Rejected>;
 }
 
 impl LoadTarget for ServingPool {
-    fn submit_load(&self, input: Arc<[f32]>, lane: Lane) -> Result<Receiver<Response>, Rejected> {
-        self.submit_lane(input, lane)
+    fn submit_load(&self, sub: Submission) -> Result<Receiver<Response>, Rejected> {
+        self.submit_with(sub)
     }
 }
 
 impl LoadTarget for ShardRouter {
-    fn submit_load(&self, input: Arc<[f32]>, lane: Lane) -> Result<Receiver<Response>, Rejected> {
-        self.submit_lane(input, lane)
+    fn submit_load(&self, sub: Submission) -> Result<Receiver<Response>, Rejected> {
+        self.submit_with(sub)
     }
+}
+
+/// Scenario-level retry behavior on rejection (see the module doc).
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// Immediate re-submissions attempted per rejected request. Each is
+    /// marked [`Submission::retry`], so a tenancy-governed stack pays it
+    /// from the tenant's retry budget — unbudgeted stacks just see more
+    /// offered load (the storm, unclamped).
+    pub attempts: usize,
 }
 
 #[derive(Debug, Clone)]
@@ -60,12 +76,34 @@ pub struct OpenLoopConfig {
     /// before declaring it failed. Generous by default: a hit here
     /// means a hung lane, not a slow one.
     pub drain_timeout: Duration,
+    /// `None` (the default): rejections are counted, never retried.
+    pub retry: Option<RetryPolicy>,
 }
 
 impl Default for OpenLoopConfig {
     fn default() -> Self {
-        OpenLoopConfig { drain_timeout: Duration::from_secs(10) }
+        OpenLoopConfig { drain_timeout: Duration::from_secs(10), retry: None }
     }
+}
+
+/// Per-tenant slice of an open-loop replay (only tagged requests are
+/// accounted here; untagged traffic lands in the report totals only).
+#[derive(Debug, Clone, Default)]
+pub struct TenantLoad {
+    /// Scheduled (fresh) requests carrying this tag.
+    pub offered: usize,
+    pub completed: usize,
+    /// Fresh rejections (before any retries).
+    pub rejected: usize,
+    /// Retry re-submissions attempted for this tenant.
+    pub retries_submitted: usize,
+    /// Retries the stack admitted.
+    pub retries_admitted: usize,
+    /// Latency percentiles over this tenant's completed requests, ms —
+    /// measured from scheduled arrival like the report totals.
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
 }
 
 /// What one open-loop replay measured.
@@ -96,6 +134,15 @@ pub struct OpenLoopReport {
     /// large means the driver machine, not the stack, was the
     /// bottleneck).
     pub max_submit_lag_ms: f64,
+    /// Retry re-submissions attempted (always 0 unless
+    /// [`OpenLoopConfig::retry`] is set).
+    pub retries_submitted: usize,
+    /// Retries the stack admitted; completions from these land in
+    /// `completed` and the latency percentiles like any other request.
+    pub retries_admitted: usize,
+    /// Per-tenant breakdown, keyed by [`super::trace::TraceRequest::tenant`]
+    /// tag. Empty for untagged traces.
+    pub per_tenant: BTreeMap<String, TenantLoad>,
 }
 
 /// Replay `trace` against `target`, measuring from each request's
@@ -117,8 +164,13 @@ pub fn run_open_loop_from(
     cfg: &OpenLoopConfig,
     start: Instant,
 ) -> OpenLoopReport {
-    let mut inflight: Vec<(f64, Receiver<Response>)> = Vec::with_capacity(trace.requests.len());
+    type Tagged = Option<Arc<str>>;
+    let mut inflight: Vec<(f64, Tagged, Receiver<Response>)> =
+        Vec::with_capacity(trace.requests.len());
+    let mut per_tenant: BTreeMap<String, TenantLoad> = BTreeMap::new();
     let mut rejected = 0usize;
+    let mut retries_submitted = 0usize;
+    let mut retries_admitted = 0usize;
     let mut max_lag = 0.0f64;
     for req in &trace.requests {
         let scheduled = start + req.at;
@@ -133,23 +185,74 @@ pub fn run_open_loop_from(
         // to the request's own latency sample below.
         let lag_s = Instant::now().saturating_duration_since(scheduled).as_secs_f64();
         max_lag = max_lag.max(lag_s);
-        match target.submit_load(Arc::clone(&req.input), req.lane) {
-            Ok(rx) => inflight.push((lag_s, rx)),
-            Err(_) => rejected += 1,
+        let mut sub = Submission::new(Arc::clone(&req.input)).lane(req.lane);
+        if let Some(t) = &req.tenant {
+            sub = sub.tenant(t);
+            per_tenant.entry(t.to_string()).or_default().offered += 1;
+        }
+        match target.submit_load(sub) {
+            Ok(rx) => inflight.push((lag_s, req.tenant.clone(), rx)),
+            Err(_) => {
+                rejected += 1;
+                if let Some(t) = &req.tenant {
+                    per_tenant.entry(t.to_string()).or_default().rejected += 1;
+                }
+                // Scenario-scripted retry storm: re-offer immediately,
+                // marked `retry` so tenancy pays it from the retry
+                // budget. Stop at the first admission.
+                let attempts = cfg.retry.map(|r| r.attempts).unwrap_or(0);
+                for _ in 0..attempts {
+                    retries_submitted += 1;
+                    if let Some(t) = &req.tenant {
+                        per_tenant.entry(t.to_string()).or_default().retries_submitted += 1;
+                    }
+                    let mut again =
+                        Submission::new(Arc::clone(&req.input)).lane(req.lane).retry();
+                    if let Some(t) = &req.tenant {
+                        again = again.tenant(t);
+                    }
+                    if let Ok(rx) = target.submit_load(again) {
+                        retries_admitted += 1;
+                        if let Some(t) = &req.tenant {
+                            per_tenant.entry(t.to_string()).or_default().retries_admitted += 1;
+                        }
+                        inflight.push((lag_s, req.tenant.clone(), rx));
+                        break;
+                    }
+                }
+            }
         }
     }
 
     // Drain phase: the generator never blocked on responses while
     // submitting; now collect them all.
     let mut samples: Vec<f64> = Vec::with_capacity(inflight.len());
+    let mut tenant_samples: BTreeMap<String, Vec<f64>> = BTreeMap::new();
     let mut failed = 0usize;
-    for (lag_s, rx) in inflight {
+    for (lag_s, tag, rx) in inflight {
         match rx.recv_timeout(cfg.drain_timeout) {
-            Ok(resp) => samples.push(lag_s + resp.latency.as_secs_f64()),
+            Ok(resp) => {
+                let sample = lag_s + resp.latency.as_secs_f64();
+                samples.push(sample);
+                if let Some(t) = tag {
+                    let entry = per_tenant.entry(t.to_string()).or_default();
+                    entry.completed += 1;
+                    tenant_samples.entry(t.to_string()).or_default().push(sample);
+                }
+            }
             Err(_) => failed += 1,
         }
     }
     let wall_s = start.elapsed().as_secs_f64();
+
+    for (tenant, samples) in tenant_samples {
+        let pcts = percentiles_of(samples, &[0.50, 0.95, 0.99]);
+        if let Some(entry) = per_tenant.get_mut(&tenant) {
+            entry.p50_ms = pcts[0] * 1e3;
+            entry.p95_ms = pcts[1] * 1e3;
+            entry.p99_ms = pcts[2] * 1e3;
+        }
+    }
 
     let offered = trace.requests.len();
     let completed = samples.len();
@@ -168,14 +271,19 @@ pub fn run_open_loop_from(
         p99_ms: pcts[2] * 1e3,
         max_ms,
         max_submit_lag_ms: max_lag * 1e3,
+        retries_submitted,
+        retries_admitted,
+        per_tenant,
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sync::atomic::{AtomicUsize, Ordering};
     use crate::sync::mpsc::{channel, Sender};
     use crate::sync::{lock_or_recover, thread, Mutex};
+    use crate::telemetry::Lane;
 
     /// A serial 3 ms/request target whose `Response.latency` is stamped
     /// from admission — like the real stack, queueing is visible.
@@ -194,7 +302,7 @@ mod tests {
                         id: 0,
                         pred: 0,
                         confidence: 1.0,
-                        variant: "v".to_string(),
+                        variant: Arc::from("v"),
                         generation: 0,
                         worker: 0,
                         lane: Lane::Normal,
@@ -207,13 +315,41 @@ mod tests {
     }
 
     impl LoadTarget for SerialTarget {
-        fn submit_load(
-            &self,
-            _input: Arc<[f32]>,
-            _lane: Lane,
-        ) -> Result<Receiver<Response>, Rejected> {
+        fn submit_load(&self, _sub: Submission) -> Result<Receiver<Response>, Rejected> {
             let (tx, rx) = channel();
             lock_or_recover(&self.jobs).send((Instant::now(), tx)).unwrap();
+            Ok(rx)
+        }
+    }
+
+    /// Rejects every *fresh* submission and admits every retry-marked
+    /// one — the driver-level contract under test, independent of the
+    /// serving stack's budget math.
+    struct RetryOnlyTarget {
+        fresh_seen: AtomicUsize,
+        retries_seen: AtomicUsize,
+    }
+
+    impl LoadTarget for RetryOnlyTarget {
+        fn submit_load(&self, sub: Submission) -> Result<Receiver<Response>, Rejected> {
+            if !sub.retry {
+                // ordering: Relaxed — test counter, read after the driver returns.
+                self.fresh_seen.fetch_add(1, Ordering::Relaxed);
+                return Err(Rejected { worker: None, queue_depth: 0, capacity: 0 });
+            }
+            // ordering: Relaxed — test counter, read after the driver returns.
+            self.retries_seen.fetch_add(1, Ordering::Relaxed);
+            let (tx, rx) = channel();
+            let _ = tx.send(Response {
+                id: 0,
+                pred: 0,
+                confidence: 1.0,
+                variant: Arc::from("v"),
+                generation: 0,
+                worker: 0,
+                lane: sub.lane,
+                latency: Duration::from_micros(100),
+            });
             Ok(rx)
         }
     }
@@ -247,5 +383,41 @@ mod tests {
         assert_eq!(report.completed + report.rejected + report.failed, report.offered);
         assert!(report.goodput_rps > 0.0);
         assert!(report.p50_ms <= report.p95_ms && report.p95_ms <= report.p99_ms);
+    }
+
+    #[test]
+    fn scripted_retry_storm_is_opt_in_and_counted_per_tenant() {
+        let target =
+            RetryOnlyTarget { fresh_seen: AtomicUsize::new(0), retries_seen: AtomicUsize::new(0) };
+        let trace = Trace::uniform(10, Duration::from_micros(100), 4, 7).tagged("burst");
+
+        // Default config: rejections are final — the driver generates no
+        // retry traffic whatsoever.
+        let quiet = run_open_loop(&target, &trace, &OpenLoopConfig::default());
+        assert_eq!(quiet.rejected, 10);
+        assert_eq!(quiet.retries_submitted, 0);
+        // ordering: Relaxed — single-threaded test counter readback.
+        assert_eq!(target.retries_seen.load(Ordering::Relaxed), 0);
+        assert_eq!(quiet.per_tenant["burst"].rejected, 10);
+
+        // Opting in: each rejection re-offers up to `attempts` times but
+        // stops at the first admission, and the retry traffic is
+        // attributed to the tenant that generated it.
+        let cfg = OpenLoopConfig {
+            retry: Some(RetryPolicy { attempts: 3 }),
+            ..OpenLoopConfig::default()
+        };
+        let report = run_open_loop(&target, &trace, &cfg);
+        assert_eq!(report.rejected, 10);
+        assert_eq!(report.retries_submitted, 10, "must stop at the first admitted retry");
+        assert_eq!(report.retries_admitted, 10);
+        assert_eq!(report.completed, 10);
+        let burst = &report.per_tenant["burst"];
+        assert_eq!((burst.offered, burst.rejected), (10, 10));
+        assert_eq!(
+            (burst.retries_submitted, burst.retries_admitted, burst.completed),
+            (10, 10, 10)
+        );
+        assert!(burst.p50_ms > 0.0 && burst.p50_ms <= burst.p99_ms);
     }
 }

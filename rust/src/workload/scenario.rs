@@ -376,6 +376,7 @@ pub fn run_scenario(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::pool::Submission;
     use crate::workload::arrivals::ArrivalSchedule;
     use crate::workload::trace::RequestMix;
 
@@ -387,7 +388,7 @@ mod tests {
             ..StackConfig::default()
         });
         // Pre-scenario traffic the window must not count.
-        let rx = stack.router().submit(vec![1.0f32; 16]).unwrap();
+        let rx = stack.router().submit_with(Submission::new(vec![1.0f32; 16])).unwrap();
         rx.recv_timeout(Duration::from_secs(5)).unwrap();
 
         let trace = Trace::generate(

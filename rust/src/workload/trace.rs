@@ -37,6 +37,12 @@ pub struct RequestMix {
     /// Weighted payload sizes in elements, `(payload_elems, weight)`.
     /// Empty = every request carries a full `input_elems` payload.
     pub sizes: Vec<(usize, f64)>,
+    /// Weighted tenant tags, `(tenant_id, weight)` — the trace-level
+    /// face of the serving stack's tenant classes. Empty (the default)
+    /// = every request is untagged, and — deliberately — *no* rng draw
+    /// is consumed per request, so pre-tenancy traces stay bit-identical
+    /// under the same seed.
+    pub tenants: Vec<(String, f64)>,
 }
 
 /// One scheduled request.
@@ -47,6 +53,10 @@ pub struct TraceRequest {
     pub at: Duration,
     pub lane: Lane,
     pub input: Arc<[f32]>,
+    /// Tenant tag carried into `Submission::tenant` at replay; `None`
+    /// submits untagged. Tags are interned once per trace — every
+    /// request of a tenant shares one `Arc<str>`.
+    pub tenant: Option<Arc<str>>,
 }
 
 /// A materialized workload trace.
@@ -74,6 +84,9 @@ impl Trace {
         let arrivals = schedule.arrivals(duration, &mut rng);
         let hot: Arc<[f32]> = fill(input_elems, input_elems, &mut rng);
         let total_weight: f64 = mix.sizes.iter().map(|&(_, w)| w.max(0.0)).sum();
+        let tags: Vec<(Arc<str>, f64)> =
+            mix.tenants.iter().map(|(t, w)| (Arc::from(t.as_str()), w.max(0.0))).collect();
+        let tag_weight: f64 = tags.iter().map(|&(_, w)| w).sum();
         let mut requests = Vec::with_capacity(arrivals.len());
         for at in arrivals {
             let lane = if rng.gen_bool(mix.priority_share) { Lane::High } else { Lane::Normal };
@@ -83,7 +96,15 @@ impl Trace {
                 let payload = draw_size(&mix.sizes, total_weight, input_elems, &mut rng);
                 fill(payload, input_elems, &mut rng)
             };
-            requests.push(TraceRequest { at, lane, input });
+            // Draw LAST and only when tenants are configured: an empty
+            // tenant mix consumes no rng, keeping pre-tenancy traces
+            // bit-identical under the same seed.
+            let tenant = if tags.is_empty() || tag_weight <= 0.0 {
+                None
+            } else {
+                Some(draw_tenant(&tags, tag_weight, &mut rng))
+            };
+            requests.push(TraceRequest { at, lane, input, tenant });
         }
         Trace { seed, duration, requests }
     }
@@ -97,9 +118,35 @@ impl Trace {
                 at: spacing * i as u32,
                 lane: Lane::Normal,
                 input: fill(input_elems, input_elems, &mut rng),
+                tenant: None,
             })
             .collect();
         Trace { seed, duration: spacing * n as u32, requests }
+    }
+
+    /// Tag **every** request with one tenant id (interned once, shared
+    /// across the trace) — the building block for multi-tenant
+    /// scenarios: generate each tenant's traffic with its own schedule
+    /// and seed, tag, then [`Trace::merged`].
+    pub fn tagged(mut self, tenant: &str) -> Trace {
+        let tag: Arc<str> = Arc::from(tenant);
+        for r in &mut self.requests {
+            r.tenant = Some(Arc::clone(&tag));
+        }
+        self
+    }
+
+    /// Merge traces into one timeline: requests from every input trace
+    /// interleaved in arrival order (stable — ties keep the input trace
+    /// order), duration = the longest input's. The seed is the first
+    /// trace's (purely informational for a merged trace).
+    pub fn merged(traces: Vec<Trace>) -> Trace {
+        let seed = traces.first().map(|t| t.seed).unwrap_or(0);
+        let duration = traces.iter().map(|t| t.duration).max().unwrap_or_default();
+        let mut requests: Vec<TraceRequest> =
+            traces.into_iter().flat_map(|t| t.requests).collect();
+        requests.sort_by_key(|r| r.at);
+        Trace { seed, duration, requests }
     }
 
     /// Offered rate over the trace duration.
@@ -121,6 +168,17 @@ fn fill(payload: usize, input_elems: usize, rng: &mut Rng) -> Arc<[f32]> {
         *v = rng.gen_range(-1.0, 1.0) as f32;
     }
     buf.into()
+}
+
+fn draw_tenant(tags: &[(Arc<str>, f64)], total_weight: f64, rng: &mut Rng) -> Arc<str> {
+    let mut pick = rng.gen() * total_weight;
+    for (tag, w) in tags {
+        if pick < *w {
+            return Arc::clone(tag);
+        }
+        pick -= w;
+    }
+    Arc::clone(&tags.last().expect("caller checked non-empty").0)
 }
 
 fn draw_size(
@@ -152,6 +210,7 @@ mod tests {
             priority_share: 0.2,
             hot_share: 0.3,
             sizes: vec![(4, 0.5), (12, 0.3), (16, 0.2)],
+            ..RequestMix::default()
         }
     }
 
@@ -221,5 +280,54 @@ mod tests {
         assert_eq!(t.requests.len(), 5);
         assert_eq!(t.requests[3].at, Duration::from_millis(6));
         assert!(t.requests.iter().all(|r| r.input.len() == 8));
+    }
+
+    /// Adding the tenant dimension must not perturb pre-tenancy traces:
+    /// an empty tenant mix consumes no rng draws, so the same seed
+    /// replays the same arrivals/lanes/inputs bit-for-bit.
+    #[test]
+    fn empty_tenant_mix_keeps_traces_bit_identical() {
+        let sched = ArrivalSchedule::Poisson { rate_hz: 800.0 };
+        let a = Trace::generate(&sched, &mix(), Duration::from_secs(1), 16, 42);
+        let tagged_mix = RequestMix {
+            tenants: vec![("t0".to_string(), 1.0), ("t1".to_string(), 3.0)],
+            ..mix()
+        };
+        let b = Trace::generate(&sched, &tagged_mix, Duration::from_secs(1), 16, 42);
+        assert_eq!(a.requests.len(), b.requests.len());
+        for (x, y) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(x.at, y.at);
+            assert_eq!(x.lane, y.lane);
+            assert_eq!(&x.input[..], &y.input[..], "tenant draw must not shift input rng");
+            assert!(x.tenant.is_none());
+            assert!(y.tenant.is_some());
+        }
+        // Weighted tags land near their shares, interned per trace.
+        let n = b.requests.len() as f64;
+        let t1 = b.requests.iter().filter(|r| r.tenant.as_deref() == Some("t1")).count() as f64;
+        assert!((t1 / n - 0.75).abs() < 0.08, "t1 share {}", t1 / n);
+        let first_t1 = b.requests.iter().find(|r| r.tenant.as_deref() == Some("t1")).unwrap();
+        let shared = b
+            .requests
+            .iter()
+            .filter(|r| {
+                r.tenant
+                    .as_ref()
+                    .is_some_and(|t| Arc::ptr_eq(t, first_t1.tenant.as_ref().unwrap()))
+            })
+            .count() as f64;
+        assert_eq!(shared, t1, "every t1 request shares one interned tag");
+    }
+
+    #[test]
+    fn tagged_and_merged_build_multi_tenant_timelines() {
+        let victim = Trace::uniform(4, Duration::from_millis(4), 8, 1).tagged("victim");
+        let aggressor = Trace::uniform(8, Duration::from_millis(2), 8, 2).tagged("aggressor");
+        let merged = Trace::merged(vec![victim, aggressor]);
+        assert_eq!(merged.requests.len(), 12);
+        assert_eq!(merged.duration, Duration::from_millis(16));
+        assert!(merged.requests.windows(2).all(|w| w[0].at <= w[1].at), "sorted by arrival");
+        let v = merged.requests.iter().filter(|r| r.tenant.as_deref() == Some("victim")).count();
+        assert_eq!(v, 4);
     }
 }

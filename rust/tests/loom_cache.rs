@@ -42,7 +42,7 @@ fn resp(pred: usize, generation: u64) -> Response {
         id: 0,
         pred,
         confidence: 1.0,
-        variant: "v".to_string(),
+        variant: Arc::from("v"),
         generation,
         worker: 0,
         lane: Lane::Normal,

@@ -1,0 +1,133 @@
+//! Loom model: the tenancy arm's lock-free admission gates
+//! ([`crowdhmtware::coordinator::TokenBucket`] /
+//! [`crowdhmtware::coordinator::Bulkhead`] /
+//! [`crowdhmtware::coordinator::TenantPermit`]).
+//!
+//! Checked invariants (the **Tenant budgets** bullet in
+//! `coordinator/mod.rs`):
+//!
+//! - **Exactly-one token**: a bucket holding one token admits exactly
+//!   one of two racing takers — the level CAS hands each token to one
+//!   caller, never both, never neither.
+//! - **Refill credits once**: two takers racing the lazy refill on the
+//!   same clock reading credit the elapsed interval at most once (the
+//!   timestamp CAS arbitrates; the loser re-reads instead of
+//!   double-crediting), so a 1-token interval admits at most one.
+//! - **Bulkhead cap**: `held` never exceeds `cap` under concurrent
+//!   acquire/release, and every [`TenantPermit`] drop releases the
+//!   slot it holds exactly once (drop racing a fresh acquire).
+//!
+//! The `mutant_*` test re-seeds the classic load-check-then-`fetch_add`
+//! TOCTOU the bulkhead's check-then-CAS loop exists to prevent, and
+//! passes only because loom finds the over-cap schedule.
+//!
+//! Runs only under `RUSTFLAGS="--cfg loom"` (the `loom` CI job).
+#![cfg(loom)]
+
+use crowdhmtware::coordinator::{Bulkhead, TenantPermit, TokenBucket};
+use crowdhmtware::sync::atomic::{AtomicUsize, Ordering};
+use crowdhmtware::sync::{thread, Arc};
+
+/// Bounded exploration; see `loom_steal.rs` for the rationale.
+fn model<F: Fn() + Sync + Send + 'static>(f: F) {
+    let mut b = loom::model::Builder::new();
+    b.preemption_bound = Some(3);
+    b.check(f);
+}
+
+/// Two takers race a bucket holding exactly one token: exactly one is
+/// admitted on every schedule.
+#[test]
+fn one_token_admits_exactly_one_of_two_racing_takers() {
+    model(|| {
+        let bucket = Arc::new(TokenBucket::new(0.0, 8));
+        // Drain the cold burst, then grant exactly one token back.
+        while bucket.try_take(0) {}
+        bucket.grant(1);
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let b = Arc::clone(&bucket);
+                thread::spawn(move || b.try_take(0))
+            })
+            .collect();
+        let admitted = handles.into_iter().map(|h| h.join().unwrap()).filter(|&ok| ok).count();
+        assert_eq!(admitted, 1, "one token must admit exactly one taker");
+        assert_eq!(bucket.level_tokens(), 0);
+    });
+}
+
+/// Two takers race the lazy refill itself on the same clock reading: a
+/// 1-token elapsed interval is credited once, so at most one taker is
+/// admitted — a losing refiller re-reads rather than double-credits.
+#[test]
+fn racing_refillers_credit_the_interval_once() {
+    model(|| {
+        // 1 token/s, empty bucket, both takers observe t = 1 s: the
+        // interval is worth exactly one token.
+        let bucket = Arc::new(TokenBucket::new(1.0, 4));
+        while bucket.try_take(0) {}
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let b = Arc::clone(&bucket);
+                thread::spawn(move || b.try_take(1_000_000))
+            })
+            .collect();
+        let admitted = handles.into_iter().map(|h| h.join().unwrap()).filter(|&ok| ok).count();
+        assert!(admitted <= 1, "interval credited twice: {admitted} admitted");
+    });
+}
+
+/// A cap-1 bulkhead under a concurrent permit drop and a fresh
+/// acquire: `held` never exceeds the cap, the drop releases exactly
+/// once, and after both settle the slot count matches the survivors.
+#[test]
+fn bulkhead_cap_holds_under_release_acquire_race() {
+    model(|| {
+        let bh = Arc::new(Bulkhead::new(1));
+        assert!(bh.try_acquire());
+        let holder = TenantPermit::new(None, Some(Arc::clone(&bh)));
+        let b1 = Arc::clone(&bh);
+        let dropper = thread::spawn(move || drop(holder));
+        let b2 = Arc::clone(&bh);
+        let acquirer = thread::spawn(move || {
+            let got = b2.try_acquire();
+            assert!(b2.held() <= 1, "cap exceeded: {} held", b2.held());
+            got
+        });
+        dropper.join().unwrap();
+        let got = acquirer.join().unwrap();
+        // After the drop settled: either the acquirer won the freed
+        // slot (held 1) or lost the race to it (held 0).
+        assert_eq!(bh.held(), usize::from(got));
+        assert!(bh.held() <= 1);
+    });
+}
+
+/// Seeded mutant — the load-check-then-`fetch_add` TOCTOU
+/// `Bulkhead::try_acquire`'s CAS loop prevents: two admitters both
+/// pass the non-atomic check, both increment, and a cap-1 bulkhead
+/// holds 2. Loom finds the schedule; the test passes only because the
+/// model panics.
+#[test]
+#[should_panic]
+fn mutant_check_then_fetch_add_overshoots_the_cap() {
+    model(|| {
+        let held = Arc::new(AtomicUsize::new(0));
+        let cap = 1usize;
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let h = Arc::clone(&held);
+                thread::spawn(move || {
+                    // The mutant: check, then increment non-atomically.
+                    if h.load(Ordering::Relaxed) < cap {
+                        h.fetch_add(1, Ordering::Relaxed);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(held.load(Ordering::Relaxed) <= cap, "bulkhead cap exceeded");
+    });
+}

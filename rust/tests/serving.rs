@@ -16,7 +16,8 @@ use crowdhmtware::sync::{lock_or_recover, thread, Arc, Mutex};
 use anyhow::Result;
 use crowdhmtware::compress::{OperatorKind, VariantSpec};
 use crowdhmtware::coordinator::{
-    BatcherConfig, DispatchPolicy, Executor, Lane, PoolConfig, Rejected, ServingPool, StealConfig,
+    BatcherConfig, DispatchPolicy, Executor, Lane, PoolConfig, Rejected, ServingPool,
+    StealConfig, Submission,
 };
 use crowdhmtware::device::{device, ResourceMonitor};
 use crowdhmtware::engine::EngineConfig;
@@ -106,7 +107,8 @@ fn concurrent_load_across_workers() {
             let mut rxs = Vec::new();
             for i in 0..PER_THREAD {
                 let class = (t * PER_THREAD + i) % CLASSES;
-                let rx = p.submit(input_for(class)).expect("capacity is ample");
+                let rx =
+                    p.submit_with(Submission::new(input_for(class))).expect("capacity is ample");
                 rxs.push((class, rx));
             }
             for (want, rx) in rxs {
@@ -161,7 +163,7 @@ fn variant_switch_mid_stream() {
         thread::spawn(move || {
             let mut rxs = Vec::new();
             for i in 0..128 {
-                if let Ok(rx) = p.submit(input_for(i)) {
+                if let Ok(rx) = p.submit_with(Submission::new(input_for(i))) {
                     rxs.push(rx);
                 }
                 thread::sleep(Duration::from_micros(50));
@@ -179,11 +181,11 @@ fn variant_switch_mid_stream() {
     // Everything admitted after the ack must serve the new variant.
     let mut rxs = Vec::new();
     for i in 0..64 {
-        rxs.push(p.submit(input_for(i)).expect("admitted"));
+        rxs.push(p.submit_with(Submission::new(input_for(i))).expect("admitted"));
     }
     for rx in rxs {
         let resp = rx.recv_timeout(Duration::from_secs(10)).expect("post-switch response");
-        assert_eq!(resp.variant, "upgraded", "stale variant after acknowledged switch");
+        assert_eq!(&*resp.variant, "upgraded", "stale variant after acknowledged switch");
         assert_eq!(resp.generation, gen);
     }
 
@@ -193,8 +195,8 @@ fn variant_switch_mid_stream() {
     assert_eq!(bg_responses.len(), 128);
     for resp in &bg_responses {
         match resp.generation {
-            0 => assert_eq!(resp.variant, "base"),
-            1 => assert_eq!(resp.variant, "upgraded"),
+            0 => assert_eq!(&*resp.variant, "base"),
+            1 => assert_eq!(&*resp.variant, "upgraded"),
             g => panic!("unexpected generation {g}"),
         }
     }
@@ -219,7 +221,7 @@ fn backpressure_accounting() {
     let mut admitted = Vec::new();
     let mut rejected = 0usize;
     for i in 0..SUBMITTED {
-        match p.submit(input_for(i)) {
+        match p.submit_with(Submission::new(input_for(i))) {
             Ok(rx) => admitted.push(rx),
             Err(r @ Rejected { capacity, .. }) => {
                 assert_eq!(capacity, 4);
@@ -253,7 +255,7 @@ fn graceful_shutdown_drains_in_flight() {
     );
     let mut rxs = Vec::new();
     for i in 0..48 {
-        rxs.push((i % CLASSES, p.submit(input_for(i)).expect("admitted")));
+        rxs.push((i % CLASSES, p.submit_with(Submission::new(input_for(i))).expect("admitted")));
     }
     let stats = p.shutdown();
     assert_eq!(stats.served(), 48, "drain must serve every in-flight request");
@@ -276,8 +278,9 @@ fn priority_lane_overtakes_backlog() {
         Duration::from_millis(3),
         BatcherConfig { max_batch: 1, max_wait: Duration::from_micros(100) },
     );
-    let normals: Vec<_> = (0..8).map(|i| p.submit(input_for(i)).expect("admitted")).collect();
-    let prio = p.submit_priority(input_for(1)).expect("admitted");
+    let normals: Vec<_> =
+        (0..8).map(|i| p.submit_with(Submission::new(input_for(i))).expect("admitted")).collect();
+    let prio = p.submit_with(Submission::new(input_for(1)).lane(Lane::High)).expect("admitted");
 
     let prio_resp = prio.recv_timeout(Duration::from_secs(10)).expect("priority response");
     assert_eq!(prio_resp.lane, Lane::High);
@@ -322,7 +325,7 @@ fn pool_outperforms_single_worker() {
         let deadline = Instant::now() + window;
         let mut rxs = Vec::new();
         while Instant::now() < deadline {
-            match p.submit(input_for(0)) {
+            match p.submit_with(Submission::new(input_for(0))) {
                 Ok(rx) => rxs.push(rx),
                 // Queues full: the workers are saturated; back off briefly.
                 Err(_) => thread::sleep(Duration::from_micros(200)),
@@ -373,13 +376,13 @@ fn idle_workers_steal_stranded_backlog() {
     let t0 = Instant::now();
     // Wedge the only worker: it absorbs this request and disappears into
     // a 250 ms batch.
-    let wedge = p.submit(input_for(0)).expect("admitted");
+    let wedge = p.submit_with(Submission::new(input_for(0))).expect("admitted");
     thread::sleep(Duration::from_millis(30));
     // Pre-load the victim's queue while it is stuck, priority last.
     let stranded: Vec<_> = (0..STRANDED)
-        .map(|i| (i % CLASSES, p.submit(input_for(i)).expect("admitted")))
+        .map(|i| (i % CLASSES, p.submit_with(Submission::new(input_for(i))).expect("admitted")))
         .collect();
-    let prio = p.submit_priority(input_for(1)).expect("admitted");
+    let prio = p.submit_with(Submission::new(input_for(1)).lane(Lane::High)).expect("admitted");
     // Three idle fast workers join: the steal phase must move the
     // stranded normal lane onto them.
     p.set_workers(4);
@@ -435,7 +438,8 @@ fn steal_disabled_keeps_lanes_private() {
             ..PoolConfig::default()
         },
     );
-    let rxs: Vec<_> = (0..6).map(|i| p.submit(input_for(i)).expect("admitted")).collect();
+    let rxs: Vec<_> =
+        (0..6).map(|i| p.submit_with(Submission::new(input_for(i))).expect("admitted")).collect();
     thread::sleep(Duration::from_millis(30));
     p.set_workers(3);
     for rx in rxs {
@@ -544,7 +548,7 @@ fn calibrated_control_plane_converges_to_measured_choice() {
         // is then exactly the executor's per-request cost, keeping the
         // measured ratio deterministic.
         for i in 0..4 {
-            let rx = p.submit(input_for(i)).expect("admitted");
+            let rx = p.submit_with(Submission::new(input_for(i))).expect("admitted");
             rx.recv_timeout(Duration::from_secs(20)).expect("response");
         }
         let tel = p.telemetry_snapshot();
@@ -560,8 +564,8 @@ fn calibrated_control_plane_converges_to_measured_choice() {
     // its calibrated latency fits the budget, and the pool is serving it.
     assert_eq!(l.current().unwrap().candidate.spec.detailed_label(), other);
     assert!(l.current().unwrap().metrics.latency_s <= budget);
-    let rx = p.submit(input_for(0)).expect("admitted");
-    assert_eq!(rx.recv_timeout(Duration::from_secs(10)).expect("response").variant, other);
+    let rx = p.submit_with(Submission::new(input_for(0))).expect("admitted");
+    assert_eq!(&*rx.recv_timeout(Duration::from_secs(10)).expect("response").variant, other);
     let ratio = l.calibrator.ratio(&first);
     assert!(ratio > 2.0, "the mispredicted variant's measured ratio must be learned, got {ratio}");
     p.shutdown();
@@ -595,7 +599,9 @@ fn aimd_sizer_widens_then_narrows_live_pool() {
     let mut widths = vec![p.num_workers()];
     for _ in 0..5 {
         let burst = 8 * p.num_workers();
-        let rxs: Vec<_> = (0..burst).map(|i| p.submit(input_for(i)).expect("admitted")).collect();
+        let rxs: Vec<_> = (0..burst)
+            .map(|i| p.submit_with(Submission::new(input_for(i))).expect("admitted"))
+            .collect();
         let tel = p.telemetry_snapshot();
         if let Some(target) = sizer.decide(&tel, &snap, f64::INFINITY).target() {
             Actuator::set_workers(&p, target);
@@ -627,7 +633,7 @@ fn aimd_sizer_widens_then_narrows_live_pool() {
         let mut rxs = Vec::new();
         let mut rejected = 0usize;
         for i in 0..flood {
-            match p.submit(input_for(i)) {
+            match p.submit_with(Submission::new(input_for(i))) {
                 Ok(rx) => rxs.push(rx),
                 Err(_) => rejected += 1,
             }

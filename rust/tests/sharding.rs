@@ -13,7 +13,7 @@ use std::time::Duration;
 
 use anyhow::Result;
 use crowdhmtware::coordinator::{
-    BatcherConfig, Executor, PoolConfig, ServingPool, ShardRouter, ShardRouterConfig,
+    BatcherConfig, Executor, PoolConfig, ServingPool, ShardRouter, ShardRouterConfig, Submission,
     REMOTE_WORKER_BASE,
 };
 use crowdhmtware::device::{device, ResourceMonitor};
@@ -85,7 +85,9 @@ fn local_pool(workers: usize, delay: Duration, variant: &str) -> ServingPool {
 /// delta) for the burst.
 fn tick(router: &ShardRouter, burst: usize) -> (usize, usize, usize) {
     let before = router.shard_stats();
-    let rxs: Vec<_> = (0..burst).map(|i| router.submit(input_for(i)).expect("admitted")).collect();
+    let rxs: Vec<_> = (0..burst)
+        .map(|i| router.submit_with(Submission::new(input_for(i))).expect("admitted"))
+        .collect();
     for (i, rx) in rxs.into_iter().enumerate() {
         let r = rx.recv_timeout(Duration::from_secs(30)).expect("response");
         assert_eq!(r.pred, i % CLASSES, "wrong prediction (local/remote must agree)");
@@ -247,11 +249,13 @@ fn control_plane_degrades_drifting_link_via_set_shards() {
 
     // Traffic flows; the optimistic prior routes it to the peer, whose
     // measured round trips pile into the hub EWMA.
-    let rxs: Vec<_> = (0..6).map(|i| router.submit(input_for(i)).expect("admitted")).collect();
+    let rxs: Vec<_> = (0..6)
+        .map(|i| router.submit_with(Submission::new(input_for(i))).expect("admitted"))
+        .collect();
     let mut remote = 0;
     for rx in rxs {
         let r = rx.recv_timeout(Duration::from_secs(20)).expect("response");
-        assert_eq!(r.variant, chosen, "actuated variant must reach peers and workers");
+        assert_eq!(&*r.variant, chosen, "actuated variant must reach peers and workers");
         if r.worker >= REMOTE_WORKER_BASE {
             remote += 1;
         }
@@ -264,7 +268,9 @@ fn control_plane_degrades_drifting_link_via_set_shards() {
     assert_eq!(router.admitted_peers(), 0, "set_shards must degrade the drifting link");
 
     // Subsequent traffic is local-only (probing disabled).
-    let rxs: Vec<_> = (0..4).map(|i| router.submit(input_for(i)).expect("admitted")).collect();
+    let rxs: Vec<_> = (0..4)
+        .map(|i| router.submit_with(Submission::new(input_for(i))).expect("admitted"))
+        .collect();
     for rx in rxs {
         let r = rx.recv_timeout(Duration::from_secs(20)).expect("response");
         assert!(r.worker < REMOTE_WORKER_BASE, "degraded peer must not serve");
@@ -342,7 +348,7 @@ fn mid_chain_plan() -> OffloadPlan {
 fn serial_burst(router: &ShardRouter, n: usize) -> usize {
     let mut remote = 0usize;
     for i in 0..n {
-        let rx = router.submit(input_for(i)).expect("admitted");
+        let rx = router.submit_with(Submission::new(input_for(i))).expect("admitted");
         let r = rx.recv_timeout(Duration::from_secs(30)).expect("response");
         assert_eq!(r.pred, i % CLASSES, "split, remote, and local serving must agree");
         if r.worker >= REMOTE_WORKER_BASE {
